@@ -1,0 +1,174 @@
+//! **End-to-end driver**: serve quantized-MLP inference through the
+//! whole stack and prove the layers compose.
+//!
+//! 1. Load the AOT-compiled MLP (784-256-128-10, batch 64) from
+//!    `artifacts/` and execute it on the PJRT CPU runtime — the
+//!    functional model, lowered once from JAX/Pallas (packed-GEMM
+//!    kernels inside).
+//! 2. Run the *same* network on the cycle-accurate DSP-Fetch systolic
+//!    engine (tiled by the coordinator), with the identical fixed-point
+//!    requantization in rust.
+//! 3. Assert the two produce **bit-identical logits** — the co-design
+//!    contract between the L1/L2 functional model and the L3 structural
+//!    model.
+//! 4. Serve a batch stream and report latency/throughput, simulated
+//!    engine time and MAC utilization.
+//!
+//! Requires `make artifacts` (python, build time only).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+
+use dsp48_systolic::coordinator::service::run_gemm_tiled;
+use dsp48_systolic::coordinator::GemmTiler;
+use dsp48_systolic::engines::ws::{WsConfig, WsEngine};
+use dsp48_systolic::engines::Engine;
+use dsp48_systolic::runtime::{ArtifactRegistry, MixedBuf};
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::quant::requantize;
+use dsp48_systolic::workload::MatI8;
+use std::time::Instant;
+
+const DIMS: [usize; 4] = [784, 256, 128, 10];
+const BATCH: usize = 64;
+/// Baked into the artifact by python/compile/model.py (MLP_QUANTS).
+const QUANTS: [(i32, u32); 2] = [(77, 15), (77, 14)];
+
+struct Params {
+    weights: Vec<MatI8>,
+    biases: Vec<Vec<i32>>,
+}
+
+fn make_params(seed: u64) -> Params {
+    let mut rng = XorShift::new(seed);
+    let mut weights = Vec::new();
+    let mut biases = Vec::new();
+    for win in 0..3 {
+        let (din, dout) = (DIMS[win], DIMS[win + 1]);
+        weights.push(MatI8::from_fn(din, dout, |_, _| rng.i8_in(-31, 31)));
+        biases.push((0..dout).map(|_| rng.i8_in(-128, 127) as i32 * 4).collect());
+    }
+    Params { weights, biases }
+}
+
+/// The rust-side (cycle-accurate) MLP forward.
+fn mlp_on_engine(
+    engine: &mut WsEngine,
+    tiler: &GemmTiler,
+    x: &MatI8,
+    p: &Params,
+) -> (Vec<i32>, u64, u64) {
+    let mut h = x.clone();
+    let mut total_cycles = 0u64;
+    let mut total_macs = 0u64;
+    for layer in 0..3 {
+        let (acc, stats) =
+            run_gemm_tiled(engine, Some(tiler), &h, &p.weights[layer])
+                .expect("engine accepts tile shapes");
+        total_cycles += stats.cycles;
+        total_macs += stats.macs;
+        let dout = DIMS[layer + 1];
+        if layer == 2 {
+            // Raw logits + bias.
+            let mut logits = vec![0i32; BATCH * dout];
+            for r in 0..BATCH {
+                for c in 0..dout {
+                    logits[r * dout + c] = acc.at(r, c) + p.biases[layer][c];
+                }
+            }
+            return (logits, total_cycles, total_macs);
+        }
+        // Bias + ReLU + requantize (bit-exact twin of ref.requantize).
+        let (num, shift) = QUANTS[layer];
+        h = MatI8::from_fn(BATCH, dout, |r, c| {
+            let v = (acc.at(r, c) + p.biases[layer][c]).max(0);
+            requantize(v, num, shift, 0)
+        });
+    }
+    unreachable!()
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- the functional model (PJRT) --------------------------------
+    let mut registry = ArtifactRegistry::open_default()?;
+    let name = format!(
+        "mlp_b{BATCH}_{}_{}_{}_{}",
+        DIMS[0], DIMS[1], DIMS[2], DIMS[3]
+    );
+    println!("loading artifact `{name}` ...");
+    let t0 = Instant::now();
+    let module_compile_time = {
+        registry.module(&name)?;
+        t0.elapsed()
+    };
+    println!("compiled in {module_compile_time:?}");
+
+    let params = make_params(2024);
+    let mut rng = XorShift::new(7);
+    let x = MatI8::from_fn(BATCH, DIMS[0], |_, _| rng.i8_in(-64, 63));
+
+    let module = registry.module(&name)?;
+    let mut bufs: Vec<MixedBuf> = vec![MixedBuf::I8(&x.data)];
+    for layer in 0..3 {
+        bufs.push(MixedBuf::I8(&params.weights[layer].data));
+        bufs.push(MixedBuf::I32(&params.biases[layer]));
+    }
+    let t_exec = Instant::now();
+    let outputs = module.execute_mixed(&bufs)?;
+    let xla_latency = t_exec.elapsed();
+    let xla_logits = &outputs[0];
+    println!(
+        "PJRT logits: {} values in {xla_latency:?} (batch {BATCH})",
+        xla_logits.len()
+    );
+
+    // --- the structural model (cycle-accurate engine) ---------------
+    let mut engine = WsEngine::new(WsConfig::paper_14x14());
+    let tiler = GemmTiler::new(14, 14);
+    let t_sim = Instant::now();
+    let (sim_logits, cycles, macs) =
+        mlp_on_engine(&mut engine, &tiler, &x, &params);
+    let sim_wall = t_sim.elapsed();
+
+    // --- the co-design contract -------------------------------------
+    assert_eq!(
+        &sim_logits, xla_logits,
+        "cycle-accurate engine and AOT HLO must agree bit-for-bit"
+    );
+    println!("logits bit-identical across PJRT and the DSP-Fetch engine ✓");
+
+    let plan = engine.clock_plan();
+    let sim_us = cycles as f64 / plan.slow_mhz;
+    println!("\n— engine report (DSP-Fetch 14x14 @ {:.0} MHz) —", plan.slow_mhz);
+    println!("cycles        : {cycles} ({macs} MACs)");
+    println!(
+        "simulated time: {:.1} us -> {:.2} images/ms, {:.2} GMAC/s",
+        sim_us,
+        BATCH as f64 / (sim_us / 1_000.0),
+        macs as f64 / sim_us / 1_000.0
+    );
+    println!(
+        "utilization   : {:.1}% of the array's {} MACs/cycle peak",
+        100.0 * macs as f64 / (cycles as f64 * engine.peak_macs_per_cycle() as f64),
+        engine.peak_macs_per_cycle()
+    );
+    println!("host wall     : {sim_wall:?} simulation, {xla_latency:?} PJRT");
+
+    // --- a short serving loop for latency statistics ----------------
+    let mut lat = Vec::new();
+    for _ in 0..8 {
+        let t = Instant::now();
+        let _ = module.execute_mixed(&bufs)?;
+        lat.push(t.elapsed());
+    }
+    lat.sort();
+    println!(
+        "\nserving: 8 batches, PJRT p50 {:?} p95 {:?} -> {:.0} images/s",
+        lat[lat.len() / 2],
+        lat[lat.len() - 1],
+        BATCH as f64 / lat[lat.len() / 2].as_secs_f64()
+    );
+    println!("e2e OK");
+    Ok(())
+}

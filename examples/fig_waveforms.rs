@@ -1,0 +1,15 @@
+//! Regenerate the paper's waveform figures as cycle-accurate traces:
+//! Fig. 3 (in-DSP operand prefetching), Fig. 5 (in-DSP multiplexing)
+//! and Fig. 6 (ring accumulator).
+//!
+//! ```sh
+//! cargo run --release --example fig_waveforms
+//! ```
+
+fn main() {
+    dsp48_systolic::engines::ws::waveforms::print_fig3();
+    println!();
+    dsp48_systolic::engines::os::waveforms::print_fig5();
+    println!();
+    dsp48_systolic::engines::os::waveforms::print_fig6();
+}

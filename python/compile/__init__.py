@@ -1,0 +1,10 @@
+"""Build-time compile path: L2 model + L1 kernels + AOT export.
+
+The packed-GEMM algebra accumulates both product lanes in one wide
+integer (the DSP48E2's 48-bit ALU); that needs real int64, so x64 mode
+must be enabled before any jax array is created.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,164 @@
+"""AOT export: lower the L2 graphs to HLO text + a manifest for rust.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Every artifact is listed in ``artifacts/manifest.json`` with its input /
+output signature so the rust `runtime::registry` can validate shapes
+before dispatch.  Run via ``make artifacts`` (no-op when inputs are
+unchanged) — python is build-time only.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# GEMM tile shapes the rust coordinator dispatches.  (M, K, N) where M is
+# the per-lane row count (each call computes two M-row GEMMs at once).
+GEMM_SHAPES = [
+    (32, 64, 64),
+    (32, 256, 256),
+    (64, 512, 512),
+]
+
+SNN_SHAPE = (16, 32, 32)  # (T, P, N) — FireFly's 32x32 crossbar
+MLP_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals):
+    return [
+        {"dtype": str(a.dtype), "shape": list(a.shape)} for a in avals
+    ]
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export(fn, args, name, out_dir, entries, consts=None):
+    """Lower ``fn`` at ``args``, write <name>.hlo.txt, record manifest."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(fn, *args)
+    if not isinstance(out_avals, (list, tuple)):
+        out_avals = [out_avals]
+    entry = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": _sig(args),
+        "outputs": _sig(out_avals),
+    }
+    if consts:
+        entry["constants"] = consts
+    entries.append(entry)
+    print(f"  {name}: {len(text)} chars, "
+          f"{len(entry['inputs'])} in / {len(entry['outputs'])} out")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+
+    # 1. Packed-GEMM tiles (the coordinator's per-tile dispatch target).
+    for m, k, n in GEMM_SHAPES:
+        export(
+            model.packed_gemm_graph,
+            (
+                _spec((m, k), jnp.int8),
+                _spec((m, k), jnp.int8),
+                _spec((k, n), jnp.int8),
+            ),
+            f"packed_gemm_m{m}_k{k}_n{n}",
+            args.out_dir,
+            entries,
+        )
+
+    # 2. The e2e quantized MLP (weights are runtime inputs so the rust
+    #    side can load the same params it feeds the cycle simulator).
+    dims = model.MLP_DIMS
+    mlp_args = [_spec((MLP_BATCH, dims[0]), jnp.int8)]
+    for din, dout in zip(dims[:-1], dims[1:]):
+        mlp_args.append(_spec((din, dout), jnp.int8))
+        mlp_args.append(_spec((dout,), jnp.int32))
+    export(
+        model.mlp_forward,
+        tuple(mlp_args),
+        f"mlp_b{MLP_BATCH}_" + "_".join(map(str, dims)),
+        args.out_dir,
+        entries,
+        consts={"quants": [list(q) for q in model.MLP_QUANTS],
+                "dims": list(dims), "batch": MLP_BATCH},
+    )
+
+    # 3. FireFly SNN pipeline (crossbar + LIF).
+    t, p, n = SNN_SHAPE
+    export(
+        model.snn_pipeline,
+        (_spec((t, p), jnp.int8), _spec((p, n), jnp.int8)),
+        f"snn_t{t}_p{p}_n{n}",
+        args.out_dir,
+        entries,
+        consts={"v_threshold": 64, "leak_shift": 3},
+    )
+
+    # 4. Golden test vectors for the rust integration tests: a concrete
+    #    packed-GEMM instance with inputs + expected outputs, so the rust
+    #    engines can assert bit-exactness without a python dependency.
+    rng = np.random.default_rng(42)
+    m, k, n = 32, 64, 64
+    a_hi = rng.integers(-128, 128, (m, k), dtype=np.int8)
+    a_lo = rng.integers(-128, 128, (m, k), dtype=np.int8)
+    w = rng.integers(-128, 128, (k, n), dtype=np.int8)
+    hi, lo = model.packed_gemm_graph(
+        jnp.array(a_hi), jnp.array(a_lo), jnp.array(w)
+    )
+    np.savez(
+        os.path.join(args.out_dir, "golden_gemm.npz"),
+        a_hi=a_hi, a_lo=a_lo, w=w, hi=np.array(hi), lo=np.array(lo),
+    )
+    # Flat binary twins for rust (no npz parser needed on the rust side).
+    with open(os.path.join(args.out_dir, "golden_gemm.bin"), "wb") as f:
+        for arr in (a_hi, a_lo, w, np.array(hi), np.array(lo)):
+            f.write(arr.astype("<i4").tobytes())
+    entries.append({
+        "name": "golden_gemm",
+        "file": "golden_gemm.bin",
+        "layout": "a_hi[32x64] a_lo[32x64] w[64x64] hi[32x64] lo[32x64], "
+                  "row-major little-endian i32",
+    })
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "artifacts": entries}, f, indent=2)
+    print(f"wrote {len(entries)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

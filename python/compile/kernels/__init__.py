@@ -1,0 +1,9 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # 48-bit ALU emulation needs i64
+
+from . import ref  # noqa: F401,E402
+from .packed_gemm import gemm_i8, packed_gemm  # noqa: F401,E402
+from .snn_crossbar import snn_crossbar  # noqa: F401,E402

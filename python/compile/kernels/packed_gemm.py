@@ -1,0 +1,170 @@
+"""L1 Pallas kernels: DSP48E2-style INT8-packed GEMM.
+
+These kernels reproduce, on the Pallas programming model, the arithmetic
+the paper implements inside DSP48E2 blocks:
+
+* ``packed_gemm``  — two INT8 GEMMs that share a weight matrix, computed
+  through the WP487 packing algebra: the two activations are packed into
+  one wide operand at an 18-bit offset (the DSP pre-adder's job), a
+  single wide multiply produces both products, and the accumulated lanes
+  are recovered with the sign-correction step.  This is the functional
+  model of one WS systolic column pair with INT8 packing + PCIN cascade.
+* ``gemm_i8``      — plain tiled INT8 GEMM (the tinyTPU baseline's
+  arithmetic; also the building block the L2 model uses when packing is
+  disabled).
+
+Hardware adaptation (paper -> TPU/Pallas): the paper schedules HBM->PE
+movement with the B1->B2 in-DSP prefetch chain; here the same producer/
+consumer overlap is expressed with a BlockSpec grid — Pallas pipelines the
+HBM->VMEM copies of block (i+1) against the compute of block (i), which
+is the moral equivalent of the paper's ping-pong weight prefetch.  The
+K-dimension ``fori_loop`` accumulation in the kernel body mirrors the
+PCIN cascade chain down a DSP column.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+the rust runtime executes byte-identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default block shape: 32x32 output tiles with the full K dimension
+# resident.  At the paper's scales (K <= 1024) the VMEM footprint is
+# bm*K + K*bn + 2*bm*bn well under the 16 MiB/core budget; see
+# DESIGN.md #Perf for the footprint table.
+DEFAULT_BM = 32
+DEFAULT_BN = 32
+DEFAULT_BK = 32
+# Cascade-segment length for the packed path: must stay within the
+# 18-bit lane's guard band (ref.GUARD_DEPTH == 7); 4 divides every layer
+# width we ship.
+DEFAULT_SEGMENT = 4
+
+
+def _packed_gemm_kernel(a_hi_ref, a_lo_ref, w_ref, o_hi_ref, o_lo_ref, *, bk):
+    """One (bm, bn) output tile of the packed GEMM.
+
+    The wide accumulator plays the role of the 48-bit PCIN cascade: both
+    lanes accumulate in a single integer down a cascade *segment* of
+    ``bk <= GUARD_DEPTH`` DSPs, then the lanes are drained (split with
+    sign correction) into the INT32 accumulators — the job of the
+    per-column accumulator DSP in the paper's design.  Segmenting is what
+    makes the packed path exact for arbitrary INT8 inputs: a full-K wide
+    accumulation would overflow the 18-bit low lane once
+    K * 2^14 >= 2^17 (see ref.GUARD_DEPTH and the rust
+    `packing::guard_depth` — same constant, same reasoning).
+    """
+    assert bk <= ref.GUARD_DEPTH, "cascade segment would overflow guard band"
+    k = a_hi_ref.shape[1]
+    n_chunks = k // bk
+
+    packed = ref.pack_i8_pair(a_hi_ref[...], a_lo_ref[...])  # (bm, K) i32
+
+    def body(i, accs):
+        acc_hi, acc_lo = accs
+        a_chunk = jax.lax.dynamic_slice_in_dim(packed, i * bk, bk, axis=1)
+        w_chunk = jax.lax.dynamic_slice_in_dim(
+            w_ref[...].astype(jnp.int32), i * bk, bk, axis=0
+        )
+        # One wide multiply per (activation pair, weight): the 27x18
+        # multiplier.  Segment-accumulate in int64 — the 48-bit ALU.
+        wide = jax.lax.dot_general(
+            a_chunk,
+            w_chunk,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int64,
+        )
+        hi, lo = ref.unpack_prod(wide)  # drain: lane split + correction
+        return acc_hi + hi, acc_lo + lo
+
+    shape = (a_hi_ref.shape[0], w_ref.shape[1])
+    acc0 = (jnp.zeros(shape, jnp.int32), jnp.zeros(shape, jnp.int32))
+    acc_hi, acc_lo = jax.lax.fori_loop(0, n_chunks, body, acc0)
+    o_hi_ref[...] = acc_hi
+    o_lo_ref[...] = acc_lo
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def packed_gemm(a_hi, a_lo, w, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                bk=DEFAULT_SEGMENT):
+    """Two INT8 GEMMs sharing ``w`` through the DSP packing algebra.
+
+    a_hi, a_lo: (M, K) int8 — the two activation sets (e.g. two pixels).
+    w: (K, N) int8 — the stationary weights.
+    Returns (hi, lo): two (M, N) int32 results, hi = a_hi @ w, lo = a_lo @ w.
+    Exact for all INT8 inputs (cascade segments stay in the guard band).
+    """
+    m, k = a_hi.shape
+    _, n = w.shape
+    assert a_lo.shape == (m, k) and m % bm == 0 and n % bn == 0 and k % bk == 0
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_packed_gemm_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+        ],
+        interpret=True,
+    )(a_hi, a_lo, w)
+
+
+def _gemm_i8_kernel(a_ref, w_ref, o_ref, *, nk):
+    """K-grid accumulating tile: the classic WS systolic schedule.
+
+    Grid axis 2 walks the K dimension; the output block is revisited once
+    per K tile and accumulates in place (the psum staying resident while
+    weight tiles stream through — the WS dataflow).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_i8(a, w, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Plain tiled INT8 GEMM with INT32 accumulation: a @ w.
+
+    a: (M, K) int8, w: (K, N) int8 -> (M, N) int32.
+    """
+    m, k = a.shape
+    _, n = w.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_gemm_i8_kernel, nk=k // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, w)

@@ -1,0 +1,171 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything here is deliberately written in the most obvious way possible
+(no tiling, no packing) so it can serve as the ground truth that both the
+Pallas kernels (python/tests) and the Rust cycle-accurate simulator
+(rust/tests, via golden vectors) are checked against.
+
+The arithmetic contract mirrors the DSP48E2 datapath used by the paper:
+
+* INT8 x INT8 multiply-accumulate into INT32 (the FPGA engines accumulate
+  in the 48-bit ALU; 32 bits is enough for every array size we model and
+  matches what the rust `workload::golden` reference uses).
+* The "packed" variants reproduce the WP487-style INT8 packing algebra:
+  two INT8 values packed into one wide operand at an 18-bit offset,
+  multiplied by a shared INT8 operand, and the two product lanes
+  recovered with the sign-correction step (+1 carry into the high lane
+  when bit 17 of the low lane is set).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Lane geometry of the DSP48E2 packing trick (WP487): the low product
+# occupies bits [17:0] of the 45-bit multiplier output, the high product
+# bits [47:18].  18 bits per lane leaves 2 guard bits over the 16-bit
+# INT8xINT8 product.
+LANE_BITS = 18
+LANE_MASK = (1 << LANE_BITS) - 1
+LANE_SIGN = 1 << (LANE_BITS - 1)
+
+# Deepest cascade whose low-lane sum provably stays in [-2^17, 2^17) for
+# worst-case INT8 inputs: |product| <= 2^14, so depth * 2^14 < 2^17 gives
+# depth <= 7.  The paper's 14-deep columns rely on typical data (or a
+# mid-column drain); our engines and kernels drain every <= GUARD_DEPTH
+# stages so the packed path is exact unconditionally.
+GUARD_DEPTH = 7
+
+
+def gemm_i8_i32(a, w):
+    """Plain INT8 GEMM with INT32 accumulation: (M,K) @ (K,N) -> (M,N)."""
+    return jnp.matmul(a.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def pack_i8_pair(hi, lo):
+    """Pack two int8 arrays into the wide operand ``hi * 2^18 + lo``.
+
+    This is exactly what the DSP48E2 pre-adder computes when the high
+    value is presented (pre-shifted) on the A port and the low value on
+    the D port: P_pre = A + D = (hi << 18) + lo.  Result is int32 (the
+    27-bit pre-adder output sign-extends into it).
+    """
+    return hi.astype(jnp.int32) * (1 << LANE_BITS) + lo.astype(jnp.int32)
+
+
+def unpack_prod(p):
+    """Split a packed product into (hi, lo) lanes with sign correction.
+
+    ``p = hi_prod * 2^18 + lo_prod`` as exact integer arithmetic.  The
+    low lane is the bottom 18 bits reinterpreted as signed; whenever that
+    reinterpretation is negative the high lane must absorb a +1 borrow.
+    Works on any int32/int64 array.
+    """
+    p = p.astype(jnp.int64)
+    low_u = p & LANE_MASK
+    low = low_u - ((low_u & LANE_SIGN) << 1)  # sign-extend 18-bit lane
+    high = (p - low) >> LANE_BITS
+    return high.astype(jnp.int32), low.astype(jnp.int32)
+
+
+def packed_mac_reference(a_hi, a_lo, w):
+    """Reference for one packed MAC: returns (a_hi*w, a_lo*w) via packing.
+
+    a_hi, a_lo, w: int8 arrays of the same shape.  Demonstrates the
+    algebra the Pallas kernel and the rust `packing` module implement;
+    the result must equal the two plain products exactly.
+    """
+    # The 27x18 multiplier's output is 45 bits — wider than int32.
+    packed = pack_i8_pair(a_hi, a_lo).astype(jnp.int64)
+    prod = packed * w.astype(jnp.int64)
+    return unpack_prod(prod)
+
+
+def packed_gemm_reference(a_hi, a_lo, w):
+    """Two INT8 GEMMs sharing one weight matrix through the packed path.
+
+    This is what a WS systolic column with INT8 packing computes: two
+    activation matrices (two pixels / two batch elements) share the
+    stationary weights; each DSP multiplies the packed activation pair by
+    its weight and the column cascade accumulates both lanes at once.
+
+    Returns (hi_out, lo_out), each (M, N) int32.  Exact as long as the
+    *accumulated* low lane stays within its 18-bit guard band — the
+    accumulation here is done as one wide integer sum per output, exactly
+    like the PCIN cascade does in hardware.
+    """
+    packed = pack_i8_pair(a_hi, a_lo).astype(jnp.int64)  # (M, K)
+    acc = jnp.matmul(packed, w.astype(jnp.int64))  # (M, N) wide ints
+    return unpack_prod(acc)
+
+
+def packed_gemm_guard_ok(a_lo, w):
+    """True iff the low-lane accumulation stays in [-2^17, 2^17).
+
+    When this holds, ``packed_gemm_reference`` is exact (lane extraction
+    is unambiguous).  The rust simulator checks the same invariant and
+    flags guard-band overflow; the coordinator's tiler picks K-tile sizes
+    that keep it true for worst-case INT8 inputs.
+    """
+    lo = jnp.matmul(a_lo.astype(jnp.int32), w.astype(jnp.int32))
+    return jnp.all((lo >= -LANE_SIGN) & (lo < LANE_SIGN))
+
+
+def requantize(acc, scale_num, scale_shift, zero_point=0):
+    """Fixed-point requantization: (acc * scale_num) >> shift, clipped.
+
+    Matches rust `workload::quant::requantize` bit-for-bit: rounding is
+    round-half-up done by adding 2^(shift-1) before the arithmetic shift.
+    """
+    acc = acc.astype(jnp.int64) * jnp.int64(scale_num)
+    acc = (acc + (jnp.int64(1) << (scale_shift - 1))) >> scale_shift
+    acc = acc + zero_point
+    return jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+def mlp_int8_reference(x, weights, biases, quants):
+    """Quantized MLP forward, layer by layer, all in plain jnp.
+
+    x: (B, D0) int8; weights[i]: (Di, Di+1) int8; biases[i]: (Di+1,) int32;
+    quants[i]: (scale_num, scale_shift).  ReLU between layers, final layer
+    returns raw int32 logits (no requantization).
+    """
+    h = x
+    n = len(weights)
+    for i, (w, b, (num, shift)) in enumerate(zip(weights, biases, quants)):
+        acc = gemm_i8_i32(h, w) + b[None, :].astype(jnp.int32)
+        if i == n - 1:
+            return acc
+        acc = jnp.maximum(acc, 0)
+        h = requantize(acc, num, shift)
+    return h
+
+
+def snn_crossbar_reference(spikes, weights):
+    """FireFly-style synaptic crossbar: current = spikes @ weights.
+
+    spikes: (T, N_pre) int8 in {0,1}; weights: (N_pre, N_post) int8.
+    Returns (T, N_post) int32 — per-timestep synaptic current, the value
+    the DSP chain's FOUR12 lanes accumulate before the neuron update.
+    """
+    return jnp.matmul(spikes.astype(jnp.int32), weights.astype(jnp.int32))
+
+
+def lif_reference(currents, v_threshold, leak_shift):
+    """Leaky integrate-and-fire over pre-computed synaptic currents.
+
+    currents: (T, N) int32.  v' = (v - (v >> leak_shift)) + I[t]; spike
+    when v' >= threshold, reset by subtraction.  Matches rust
+    `engines::snn::lif` exactly (pure integer arithmetic).
+    """
+    import jax
+
+    def step(v, i_t):
+        v = v - (v >> leak_shift) + i_t
+        s = (v >= v_threshold).astype(jnp.int32)
+        v = v - s * v_threshold
+        return v, s
+
+    v0 = jnp.zeros(currents.shape[1], jnp.int32)
+    _, spikes = jax.lax.scan(step, v0, currents)
+    return spikes

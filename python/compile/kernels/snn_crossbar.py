@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: FireFly-style spiking synaptic crossbar.
+
+FireFly (paper section VI) uses the DSP48E2 wide-bus multiplexers to gate
+synaptic weights by spikes: per 12-bit SIMD lane, the weight enters the
+accumulator only when the pre-synaptic neuron spiked.  Functionally this
+is ``current = spikes @ weights`` with {0,1} spikes — but we keep the
+mux-style formulation (`where(spike, w, 0)` summed over the pre axis) in
+the kernel body so the lowered HLO mirrors the select-then-accumulate
+structure of the hardware, and so the rust simulator's FOUR12 lane model
+can be validated against the same dataflow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _crossbar_kernel(spikes_ref, w_ref, o_ref):
+    """One (bt, bn) tile of synaptic currents.
+
+    spikes block: (bt, N_pre) int8 in {0,1}; w block: (N_pre, bn) int8.
+    The select models the DSP wide-bus mux (OPMODE choosing between the
+    A:B weight operand and zero); the reduction over the pre axis models
+    the DSP chain's cascade accumulation.
+    """
+    spikes = spikes_ref[...].astype(jnp.int32)  # (bt, P)
+    w = w_ref[...].astype(jnp.int32)  # (P, bn)
+    # mux: (bt, P, bn) selected weights, summed over P (the DSP chain).
+    gated = jnp.where(spikes[:, :, None] != 0, w[None, :, :], 0)
+    o_ref[...] = jnp.sum(gated, axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bn"))
+def snn_crossbar(spikes, weights, *, bt=8, bn=32):
+    """Synaptic currents for a spike train: (T, P) x (P, N) -> (T, N) i32."""
+    t, p = spikes.shape
+    _, n = weights.shape
+    assert t % bt == 0 and n % bn == 0
+
+    return pl.pallas_call(
+        _crossbar_kernel,
+        grid=(t // bt, n // bn),
+        in_specs=[
+            pl.BlockSpec((bt, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((p, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.int32),
+        interpret=True,
+    )(spikes, weights)

@@ -1,0 +1,119 @@
+"""L2: quantized compute graphs built on the L1 kernels.
+
+This is the "model" half of the co-design loop: the same INT8 arithmetic
+the rust cycle-accurate engines execute structurally, expressed as a JAX
+graph over the Pallas kernels, lowered once to HLO by `aot.py`, and
+executed from rust through PJRT.  Python never runs at serve time.
+
+Graphs exported:
+
+* ``packed_gemm_graph``  — one packed GEMM (the matrix-engine primitive
+  the coordinator dispatches per tile).
+* ``mlp_forward``        — a 3-layer quantized MLP (784-256-128-10) whose
+  batch is processed as packed activation pairs, i.e. exactly how the
+  paper's WS engine with INT8 packing sees it: two batch rows share each
+  stationary weight.
+* ``snn_pipeline``       — FireFly crossbar currents + LIF neuron update
+  over a spike train.
+
+Quantization scheme: symmetric per-tensor INT8, bias INT32, fixed-point
+requantization (int multiplier + right shift) — chosen because it is the
+scheme the DSP48E2 datapath natively supports (wide ALU + W-mux rounding
+constant), and it keeps every exported graph bit-exact reproducible in
+the rust simulator.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import packed_gemm, snn_crossbar
+from .kernels import ref
+
+# The MLP served by examples/e2e_inference.rs.
+MLP_DIMS = (784, 256, 128, 10)
+# (multiplier, shift) per hidden layer, chosen so typical pre-activation
+# magnitudes map back into int8 range; baked into the artifact (the rust
+# side never re-derives them).
+MLP_QUANTS = ((77, 15), (77, 14))
+
+
+def _block_shapes(m, n):
+    """Pick pallas block sizes that divide the problem."""
+    bm = 32 if m % 32 == 0 else m
+    bn = 32 if n % 32 == 0 else n
+    return bm, bn
+
+
+def packed_gemm_graph(a_hi, a_lo, w):
+    """The tile-level matrix-engine primitive: (hi, lo) = (a_hi, a_lo) @ w."""
+    m, _ = a_hi.shape
+    _, n = w.shape
+    bm, bn = _block_shapes(m, n)
+    return packed_gemm(a_hi, a_lo, w, bm=bm, bn=bn)
+
+
+def dense_packed(x, w, b, quant=None):
+    """One quantized dense layer over a packed batch.
+
+    x: (B, K) int8 with B even — rows [0, B/2) ride the high lane, rows
+    [B/2, B) the low lane (two batch elements per DSP multiply, the INT8
+    packing the paper's WS engine applies).
+    w: (K, N) int8, b: (N,) int32.
+    quant: (num, shift) to requantize + ReLU, or None for raw logits.
+    """
+    batch = x.shape[0]
+    half = batch // 2
+    hi, lo = packed_gemm_graph(x[:half], x[half:], w)
+    acc = jnp.concatenate([hi, lo], axis=0) + b[None, :].astype(jnp.int32)
+    if quant is None:
+        return acc
+    num, shift = quant
+    return ref.requantize(jnp.maximum(acc, 0), num, shift)
+
+
+def mlp_forward(x, w1, b1, w2, b2, w3, b3):
+    """Quantized 3-layer MLP forward; returns int32 logits (B, 10)."""
+    h = dense_packed(x, w1, b1, MLP_QUANTS[0])
+    h = dense_packed(h, w2, b2, MLP_QUANTS[1])
+    return dense_packed(h, w3, b3, None)
+
+
+def mlp_reference(x, w1, b1, w2, b2, w3, b3):
+    """Pure-jnp oracle for ``mlp_forward`` (no pallas, no packing)."""
+    return ref.mlp_int8_reference(
+        x, [w1, w2, w3], [b1, b2, b3], [*MLP_QUANTS, (1, 1)]
+    )
+
+
+def make_mlp_params(seed=0, dims=MLP_DIMS):
+    """Random-but-reproducible INT8 weights / INT32 biases.
+
+    Weights are drawn small (+-31) so hidden accumulations stay in a
+    realistic dynamic range for the baked requantization constants; the
+    e2e example checks rust-vs-HLO bit-exactness, not model accuracy.
+    """
+    rng = np.random.default_rng(seed)
+    params = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        w = rng.integers(-31, 32, size=(din, dout), dtype=np.int8)
+        b = rng.integers(-512, 512, size=(dout,), dtype=np.int32)
+        params += [w, b]
+    return params
+
+
+def snn_pipeline(spikes, weights):
+    """FireFly functional model: crossbar currents then LIF update.
+
+    spikes: (T, P) int8 {0,1}; weights: (P, N) int8.
+    Returns (out_spikes (T, N) int32, final currents (T, N) int32).
+    """
+    t, p = spikes.shape
+    n = weights.shape[1]
+    bt = 8 if t % 8 == 0 else t
+    bn = 32 if n % 32 == 0 else n
+    currents = snn_crossbar(spikes, weights, bt=bt, bn=bn)
+    out = ref.lif_reference(currents, v_threshold=64, leak_shift=3)
+    return out, currents

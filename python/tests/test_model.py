@@ -1,0 +1,111 @@
+"""L2 model graphs: packed MLP vs plain reference, SNN pipeline, shapes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _mlp_inputs(seed, batch=model.MLP_DIMS and 64):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (batch, model.MLP_DIMS[0]), dtype=np.int8)
+    params = model.make_mlp_params(seed)
+    return x, params
+
+
+class TestMlp:
+    @given(seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=5, deadline=None)
+    def test_packed_matches_reference(self, seed):
+        """The packed-pallas MLP equals the plain-jnp quantized MLP
+        bit-for-bit (packing is numerically invisible)."""
+        x, params = _mlp_inputs(seed)
+        got = model.mlp_forward(jnp.array(x), *[jnp.array(p) for p in params])
+        want = model.mlp_reference(
+            jnp.array(x), *[jnp.array(p) for p in params]
+        )
+        np.testing.assert_array_equal(np.array(got), np.array(want))
+
+    def test_logit_shape_and_dtype(self):
+        x, params = _mlp_inputs(0)
+        out = model.mlp_forward(jnp.array(x), *[jnp.array(p) for p in params])
+        assert out.shape == (64, model.MLP_DIMS[-1])
+        assert out.dtype == jnp.int32
+
+    def test_deterministic(self):
+        x, params = _mlp_inputs(1)
+        args = [jnp.array(x)] + [jnp.array(p) for p in params]
+        a = np.array(model.mlp_forward(*args))
+        b = np.array(model.mlp_forward(*args))
+        np.testing.assert_array_equal(a, b)
+
+
+class TestDensePacked:
+    @given(seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_unpacked_layer(self, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-128, 128, (64, 128), dtype=np.int8)
+        w = rng.integers(-32, 32, (128, 64), dtype=np.int8)
+        b = rng.integers(-512, 512, (64,), dtype=np.int32)
+        got = model.dense_packed(
+            jnp.array(x), jnp.array(w), jnp.array(b), (77, 15)
+        )
+        acc = x.astype(np.int32) @ w.astype(np.int32) + b[None, :]
+        want = ref.requantize(jnp.maximum(jnp.array(acc), 0), 77, 15)
+        np.testing.assert_array_equal(np.array(got), np.array(want))
+
+    def test_raw_logits_when_no_quant(self):
+        rng = np.random.default_rng(3)
+        x = rng.integers(-128, 128, (8, 32), dtype=np.int8)
+        w = rng.integers(-32, 32, (32, 16), dtype=np.int8)
+        b = np.zeros(16, dtype=np.int32)
+        got = model.dense_packed(jnp.array(x), jnp.array(w), jnp.array(b))
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(
+            np.array(got), x.astype(np.int32) @ w.astype(np.int32)
+        )
+
+
+class TestSnnPipeline:
+    def test_currents_match_reference(self):
+        rng = np.random.default_rng(0)
+        spikes = rng.integers(0, 2, (16, 32)).astype(np.int8)
+        w = rng.integers(-64, 64, (32, 32), dtype=np.int8)
+        out, cur = model.snn_pipeline(jnp.array(spikes), jnp.array(w))
+        np.testing.assert_array_equal(
+            np.array(cur),
+            spikes.astype(np.int32) @ w.astype(np.int32),
+        )
+        want = ref.lif_reference(jnp.array(
+            spikes.astype(np.int32) @ w.astype(np.int32)), 64, 3)
+        np.testing.assert_array_equal(np.array(out), np.array(want))
+
+    def test_output_spikes_binary(self):
+        rng = np.random.default_rng(7)
+        spikes = rng.integers(0, 2, (16, 32)).astype(np.int8)
+        w = rng.integers(0, 64, (32, 32), dtype=np.int8)
+        out, _ = model.snn_pipeline(jnp.array(spikes), jnp.array(w))
+        vals = np.unique(np.array(out))
+        assert set(vals.tolist()) <= {0, 1}
+
+
+class TestLif:
+    @given(seed=st.integers(0, 2**32 - 1),
+           thr=st.integers(1, 256), leak=st.integers(1, 6))
+    @settings(max_examples=30, deadline=None)
+    def test_threshold_and_reset_invariants(self, seed, thr, leak):
+        rng = np.random.default_rng(seed)
+        cur = rng.integers(-64, 256, (12, 8)).astype(np.int32)
+        spikes = np.array(ref.lif_reference(jnp.array(cur), thr, leak))
+        # replicate with plain python ints (independent implementation)
+        v = np.zeros(8, dtype=np.int64)
+        for t in range(12):
+            v = v - (v >> leak) + cur[t]
+            s = (v >= thr).astype(np.int64)
+            v -= s * thr
+            np.testing.assert_array_equal(spikes[t], s)

@@ -1,0 +1,110 @@
+"""Property tests for the DSP48E2 INT8 packing algebra (ref.py).
+
+These pin down the *algebraic contract* that both the Pallas kernels and
+the rust `packing` module implement; the rust side re-checks the same
+properties with proptest so the two implementations can only drift if a
+shared law is wrong.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+i8 = st.integers(min_value=-128, max_value=127)
+i8_arrays = st.integers(min_value=1, max_value=64).flatmap(
+    lambda n: st.lists(i8, min_size=n, max_size=n)
+)
+
+
+def _i8(xs):
+    return jnp.array(np.array(xs, dtype=np.int8))
+
+
+class TestPackUnpackSingle:
+    @given(hi=i8, lo=i8, w=i8)
+    @settings(max_examples=300, deadline=None)
+    def test_single_mac_exact(self, hi, lo, w):
+        """One packed multiply always recovers both products exactly."""
+        h, l = ref.packed_mac_reference(_i8([hi]), _i8([lo]), _i8([w]))
+        assert int(h[0]) == hi * w
+        assert int(l[0]) == lo * w
+
+    @given(hi=i8, lo=i8)
+    @settings(max_examples=200, deadline=None)
+    def test_pack_is_affine(self, hi, lo):
+        packed = int(ref.pack_i8_pair(_i8([hi]), _i8([lo]))[0])
+        assert packed == hi * (1 << ref.LANE_BITS) + lo
+
+    @given(p=st.integers(min_value=-(2**46), max_value=2**46 - 1))
+    @settings(max_examples=300, deadline=None)
+    def test_unpack_roundtrip(self, p):
+        """unpack(hi*2^18 + lo) == (hi, lo) whenever lo is in-lane."""
+        arr = jnp.array([p], dtype=jnp.int64)
+        hi, lo = ref.unpack_prod(arr)
+        assert int(hi[0]) * (1 << ref.LANE_BITS) + int(lo[0]) == p
+        assert -ref.LANE_SIGN <= int(lo[0]) < ref.LANE_SIGN
+
+
+class TestGuardBand:
+    def test_guard_depth_is_tight(self):
+        """GUARD_DEPTH products of worst-case magnitude fit; +1 may not."""
+        worst = 128 * 128  # |(-128) * (-128)|
+        assert ref.GUARD_DEPTH * worst < ref.LANE_SIGN
+        assert (ref.GUARD_DEPTH + 1) * worst >= ref.LANE_SIGN
+
+    @given(seed=st.integers(0, 2**32 - 1), k=st.sampled_from([4, 7]))
+    @settings(max_examples=50, deadline=None)
+    def test_wide_accumulation_exact_within_guard(self, seed, k):
+        """Full-chain wide accumulation is exact when depth <= GUARD_DEPTH."""
+        rng = np.random.default_rng(seed)
+        a_hi = rng.integers(-128, 128, (3, k), dtype=np.int8)
+        a_lo = rng.integers(-128, 128, (3, k), dtype=np.int8)
+        w = rng.integers(-128, 128, (k, 5), dtype=np.int8)
+        hi, lo = ref.packed_gemm_reference(
+            jnp.array(a_hi), jnp.array(a_lo), jnp.array(w)
+        )
+        np.testing.assert_array_equal(
+            np.array(hi), a_hi.astype(np.int32) @ w.astype(np.int32)
+        )
+        np.testing.assert_array_equal(
+            np.array(lo), a_lo.astype(np.int32) @ w.astype(np.int32)
+        )
+
+    def test_guard_overflow_detected(self):
+        """Adversarial deep chain overflows the lane and guard_ok says so."""
+        k = 16  # > GUARD_DEPTH
+        a_lo = np.full((1, k), -128, dtype=np.int8)
+        w = np.full((k, 1), -128, dtype=np.int8)
+        assert not bool(
+            ref.packed_gemm_guard_ok(jnp.array(a_lo), jnp.array(w))
+        )
+        a_hi = np.zeros((1, k), dtype=np.int8)
+        hi, _ = ref.packed_gemm_reference(
+            jnp.array(a_hi), jnp.array(a_lo), jnp.array(w)
+        )
+        # The high lane silently absorbs the low-lane overflow: result is
+        # wrong, which is exactly why the engines drain every GUARD_DEPTH.
+        assert int(hi[0, 0]) != 0
+
+
+class TestRequantize:
+    @given(
+        acc=st.integers(min_value=-(2**30), max_value=2**30 - 1),
+        num=st.integers(min_value=1, max_value=2**15),
+        shift=st.integers(min_value=1, max_value=30),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_matches_float_rounding(self, acc, num, shift):
+        """Fixed-point requantize == round-half-up of the real product."""
+        got = int(ref.requantize(jnp.array([acc]), num, shift)[0])
+        real = acc * num / (1 << shift)
+        want = int(np.clip(np.floor(real + 0.5), -128, 127))
+        assert got == want
+
+    def test_zero_point(self):
+        got = ref.requantize(jnp.array([0, 100]), 1, 1, zero_point=3)
+        np.testing.assert_array_equal(np.array(got), [3, 53])

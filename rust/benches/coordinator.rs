@@ -1,0 +1,76 @@
+//! Bench: coordinator job throughput — tiling overhead, the service's
+//! queue/dispatch path, and the prefetch-policy gap the paper's
+//! technique 1 closes.
+
+use dsp48_systolic::coordinator::scheduler::{schedule, PrefetchPolicy};
+use dsp48_systolic::coordinator::service::EngineKind;
+use dsp48_systolic::coordinator::{GemmTiler, Job, Service, ServiceConfig};
+use dsp48_systolic::engines::ws::{WsConfig, WsEngine, WsVariant};
+use dsp48_systolic::engines::Engine;
+use dsp48_systolic::util::bench::{bench, bench_with, section};
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::MatI8;
+use std::time::Duration;
+
+fn main() {
+    section("tiler");
+    let mut rng = XorShift::new(2);
+    let a = MatI8::random_bounded(&mut rng, 16, 112, 63);
+    let w = MatI8::random(&mut rng, 112, 56);
+    let tiler = GemmTiler::new(14, 14);
+    bench("tile 16x112x56 into 8x4 tiles", || {
+        std::hint::black_box(tiler.tiles(&a, &w).len());
+    });
+
+    section("prefetch policy aggregation (the paper's technique 1)");
+    let mut eng = WsEngine::new(WsConfig::paper_14x14_for(WsVariant::DspFetch));
+    let per_tile: Vec<_> = tiler
+        .tiles(&a, &w)
+        .iter()
+        .map(|t| eng.run_gemm(&t.a, &t.w).unwrap().stats)
+        .collect();
+    for policy in [PrefetchPolicy::PingPong, PrefetchPolicy::Stall] {
+        let rep = schedule(policy, &per_tile, 14);
+        println!(
+            "{:?}: {} cycles ({} weight), {:.1}% compute, {:.1} MACs/cycle",
+            policy,
+            rep.cycles,
+            rep.weight_cycles,
+            100.0 * rep.compute_fraction(),
+            rep.macs_per_cycle()
+        );
+    }
+
+    section("service end-to-end (queue + workers + verify)");
+    for workers in [1usize, 2, 4] {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers,
+            ws_rows: 14,
+            ws_cols: 14,
+            verify: false,
+        });
+        let mut rng = XorShift::new(7);
+        let jobs = 24;
+        let m = bench_with(
+            &format!("{workers} worker(s), {jobs} jobs of 16x28x28"),
+            Duration::from_millis(100),
+            Duration::from_secs(2),
+            &mut || {
+                for _ in 0..jobs {
+                    let a = MatI8::random_bounded(&mut rng, 16, 28, 63);
+                    let w = MatI8::random(&mut rng, 28, 28);
+                    svc.submit(Job::Gemm { a, w });
+                }
+                for _ in 0..jobs {
+                    svc.recv_timeout(Duration::from_secs(30)).expect("done");
+                }
+            },
+        );
+        println!(
+            "    -> {:.0} jobs/s",
+            jobs as f64 * m.per_sec()
+        );
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,68 @@
+//! Bench: PJRT execution latency for the AOT artifacts (the functional
+//! fast path the coordinator serves values from).
+//!
+//! Skips politely when `artifacts/` is absent (run `make artifacts`).
+
+use dsp48_systolic::runtime::{ArtifactRegistry, MixedBuf};
+use dsp48_systolic::util::bench::{bench, section};
+use dsp48_systolic::util::rng::XorShift;
+use std::path::Path;
+
+fn main() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP runtime_latency: artifacts/ missing (make artifacts)");
+        return;
+    }
+    let mut reg = ArtifactRegistry::open_default().expect("registry");
+
+    section("packed GEMM artifacts");
+    let mut rng = XorShift::new(5);
+    for (m, k, n) in [(32usize, 64usize, 64usize), (32, 256, 256), (64, 512, 512)] {
+        let Some(name) = reg.gemm_artifact(m, k, n) else { continue };
+        let a_hi = rng.i8_vec(m * k);
+        let a_lo = rng.i8_vec(m * k);
+        let w = rng.i8_vec(k * n);
+        let module = reg.module(&name).expect("compiles");
+        let meas = bench(&format!("pjrt {name}"), || {
+            let out = module
+                .execute_i8_to_i32(&[&a_hi, &a_lo, &w])
+                .expect("executes");
+            std::hint::black_box(out[0].len());
+        });
+        let macs = 2 * m * k * n;
+        println!(
+            "    -> {:.2} GMAC/s effective",
+            macs as f64 * meas.per_sec() / 1e9
+        );
+    }
+
+    section("MLP artifact (batch 64)");
+    let name = "mlp_b64_784_256_128_10";
+    if reg.entry(name).is_some() {
+        let x = rng.i8_vec(64 * 784);
+        let w1 = rng.i8_vec(784 * 256);
+        let b1: Vec<i32> = (0..256).map(|_| rng.next_i8() as i32).collect();
+        let w2 = rng.i8_vec(256 * 128);
+        let b2: Vec<i32> = (0..128).map(|_| rng.next_i8() as i32).collect();
+        let w3 = rng.i8_vec(128 * 10);
+        let b3: Vec<i32> = (0..10).map(|_| rng.next_i8() as i32).collect();
+        let module = reg.module(name).expect("compiles");
+        let bufs = [
+            MixedBuf::I8(&x),
+            MixedBuf::I8(&w1),
+            MixedBuf::I32(&b1),
+            MixedBuf::I8(&w2),
+            MixedBuf::I32(&b2),
+            MixedBuf::I8(&w3),
+            MixedBuf::I32(&b3),
+        ];
+        let meas = bench("pjrt mlp forward", || {
+            let out = module.execute_mixed(&bufs).expect("executes");
+            std::hint::black_box(out[0].len());
+        });
+        println!(
+            "    -> {:.0} images/s",
+            64.0 * meas.per_sec()
+        );
+    }
+}

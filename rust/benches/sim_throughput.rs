@@ -1,0 +1,73 @@
+//! Bench: the simulator hot paths in isolation — the targets of the
+//! §Perf optimization pass (EXPERIMENTS.md §Perf records before/after).
+//!
+//! * single DSP48E2 tick (the innermost loop),
+//! * one full-array WS cycle (196 + 14 DSPs + staging),
+//! * ring-accumulator tick,
+//! * packed_dot (the functional fast path the coordinator may use).
+
+use dsp48_systolic::dsp::{Attributes, Dsp48e2, DspInputs, OpMode};
+use dsp48_systolic::engines::os::RingAccumulator;
+use dsp48_systolic::engines::ws::{WsConfig, WsEngine};
+use dsp48_systolic::engines::Engine;
+use dsp48_systolic::packing;
+use dsp48_systolic::util::bench::{bench, section};
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::MatI8;
+
+fn main() {
+    section("DSP48E2 cell");
+    let mut dsp = Dsp48e2::new(Attributes::ws_prefetch_pe());
+    let inp = DspInputs {
+        a: 123 << 18,
+        d: -45,
+        b: 77,
+        opmode: OpMode::MULT_CASCADE,
+        pcin: 991,
+        ..DspInputs::default()
+    };
+    let m = bench("dsp tick (prefetch PE)", || {
+        dsp.tick(&inp);
+        std::hint::black_box(dsp.p());
+    });
+    println!(
+        "    -> {:.1} M ticks/s",
+        m.per_sec() / 1e6
+    );
+
+    section("WS array cycle (14x14 paper config)");
+    let mut eng = WsEngine::new(WsConfig::paper_14x14());
+    let mut rng = XorShift::new(1);
+    let a = MatI8::random_bounded(&mut rng, 8, 14, 63);
+    let w = MatI8::random(&mut rng, 14, 14);
+    let m = bench("run_gemm 8x14x14 (one tile)", || {
+        let run = eng.run_gemm(&a, &w).unwrap();
+        std::hint::black_box(run.stats.cycles);
+    });
+    let cycles = eng.run_gemm(&a, &w).unwrap().stats.cycles;
+    println!(
+        "    -> {:.2} M DSP-ticks/s host",
+        cycles as f64 * 210.0 * m.per_sec() / 1e6
+    );
+
+    section("ring accumulator");
+    let mut ring = RingAccumulator::new(0);
+    let mut i = 0i64;
+    bench("ring tick", || {
+        i = (i + 1) & 0xFFFF;
+        ring.tick(i, i ^ 0x5A5A);
+        std::hint::black_box(ring.output());
+    });
+
+    section("packed arithmetic (functional fast path)");
+    let hi: Vec<i8> = (0..1024).map(|i| (i % 251) as i8).collect();
+    let lo: Vec<i8> = (0..1024).map(|i| (i % 127) as i8).collect();
+    let wv: Vec<i8> = (0..1024).map(|i| (i % 83) as i8).collect();
+    let m = bench("packed_dot K=1024", || {
+        std::hint::black_box(packing::packed_dot(&hi, &lo, &wv));
+    });
+    println!(
+        "    -> {:.1} M packed-MACs/s (x2 lanes)",
+        1024.0 * m.per_sec() / 1e6
+    );
+}

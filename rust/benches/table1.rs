@@ -1,0 +1,54 @@
+//! Bench: regenerate Table I end-to-end and time each design's
+//! cycle-accurate simulation of the paper-scale workload.
+//!
+//! Prints (a) the table itself (the reproduction artifact) and (b) the
+//! host-side simulation throughput per design, so perf regressions in
+//! the DSP model show up here.
+
+use dsp48_systolic::cost::report::render_table;
+use dsp48_systolic::engines::ws::{WsConfig, WsEngine, WsVariant};
+use dsp48_systolic::engines::Engine;
+use dsp48_systolic::util::bench::{bench, section};
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::MatI8;
+
+fn main() {
+    section("Table I regeneration (INT8 14x14 TPUv1-like, XCZU3EG)");
+    let variants = [
+        WsVariant::TinyTpu,
+        WsVariant::Libano,
+        WsVariant::ClbFetch,
+        WsVariant::DspFetch,
+    ];
+    let rows: Vec<_> = variants
+        .iter()
+        .map(|&v| WsEngine::new(WsConfig::paper_14x14_for(v)).table_row())
+        .collect();
+    print!("{}", render_table("Table I", &rows));
+
+    section("cycle-accurate simulation throughput (host)");
+    let mut rng = XorShift::new(3);
+    let a = MatI8::random_bounded(&mut rng, 32, 14, 63);
+    let w = MatI8::random(&mut rng, 14, 14);
+    for v in variants {
+        let mut eng = WsEngine::new(WsConfig::paper_14x14_for(v));
+        let m = bench(&format!("simulate {} 32x14x14", v.label()), || {
+            let run = eng.run_gemm(&a, &w).unwrap();
+            std::hint::black_box(run.stats.cycles);
+        });
+        let run = eng.run_gemm(&a, &w).unwrap();
+        println!(
+            "    -> {:.1} sim-cycles/host-us ({} sim cycles per run)",
+            run.stats.cycles as f64 / m.mean.as_micros().max(1) as f64,
+            run.stats.cycles
+        );
+    }
+
+    section("table elaboration latency (inventory+timing+power)");
+    bench("elaborate all four designs", || {
+        for v in variants {
+            let row = WsEngine::new(WsConfig::paper_14x14_for(v)).table_row();
+            std::hint::black_box(row.power_w);
+        }
+    });
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate Table II and time the B1024 engines on a
+//! conv-shaped GEMM (official replicate vs in-DSP mux + ring acc).
+
+use dsp48_systolic::engines::os::{OsConfig, OsEngine, OsVariant};
+use dsp48_systolic::engines::Engine;
+use dsp48_systolic::util::bench::{bench, section};
+use dsp48_systolic::workload::gemm::GemmProblem;
+
+fn main() {
+    section("Table II regeneration (DPU B1024 breakdown)");
+    for v in [OsVariant::Official, OsVariant::Enhanced] {
+        let eng = OsEngine::new(OsConfig::b1024(v));
+        let row = eng.table_row();
+        let t = eng.timing().report();
+        println!(
+            "{:<10} LUT {:>5}  FF {:>5}  DSP {:>4}  WNS {:+.3}  power {:.3} W",
+            v.label(),
+            row.lut,
+            row.ff,
+            row.dsp,
+            t.wns_ns,
+            row.power_w
+        );
+    }
+
+    section("B1024 cycle-accurate GEMM (16x64 @ 64x32)");
+    let p = GemmProblem::random(16, 32, 64, 7);
+    for v in [OsVariant::Official, OsVariant::Enhanced] {
+        let mut eng = OsEngine::new(OsConfig::b1024(v));
+        let m = bench(&format!("simulate DPU-{}", v.label()), || {
+            let run = eng.run_gemm(&p.a, &p.w).unwrap();
+            std::hint::black_box(run.stats.cycles);
+        });
+        let run = eng.run_gemm(&p.a, &p.w).unwrap();
+        println!(
+            "    -> util {:.1}%, {} slow cycles, {:.1} sim-cycles/host-us",
+            100.0 * run.stats.utilization(eng.peak_macs_per_cycle()),
+            run.stats.cycles,
+            run.stats.cycles as f64 / m.mean.as_micros().max(1) as f64
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench: regenerate Table III and time the FireFly crossbars on a
+//! spiking workload (varying firing rates — the SNN cost driver).
+
+use dsp48_systolic::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
+use dsp48_systolic::engines::Engine;
+use dsp48_systolic::util::bench::{bench, section};
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::snn::SpikeTrain;
+use dsp48_systolic::workload::MatI8;
+
+fn main() {
+    section("Table III regeneration (FireFly 32x32 crossbar)");
+    for v in [SnnVariant::FireFly, SnnVariant::Enhanced] {
+        let eng = SnnEngine::new(SnnConfig::paper_32x32(v));
+        let row = eng.table_row();
+        println!(
+            "{:<8} LUT {:>3}  FF {:>5}  DSP {:>3}  {:.0} MHz  {:.3} W",
+            v.label(),
+            row.lut,
+            row.ff,
+            row.dsp,
+            row.freq_mhz,
+            row.power_w
+        );
+    }
+
+    section("crossbar simulation across firing rates");
+    let mut rng = XorShift::new(11);
+    let weights = MatI8::random_bounded(&mut rng, 32, 32, 63);
+    for (num, den) in [(1u64, 10u64), (1, 4), (1, 2)] {
+        let train = SpikeTrain::random(&mut rng, 32, 32, num, den);
+        for v in [SnnVariant::FireFly, SnnVariant::Enhanced] {
+            let mut eng = SnnEngine::new(SnnConfig::paper_32x32(v));
+            let label = format!(
+                "{} T=32 rate {:.0}%",
+                v.label(),
+                100.0 * num as f64 / den as f64
+            );
+            bench(&label, || {
+                let (_, currents, _) = eng.run_snn(&train, &weights).unwrap();
+                std::hint::black_box(currents.len());
+            });
+        }
+    }
+}

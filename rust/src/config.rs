@@ -1,0 +1,228 @@
+//! Configuration: a small TOML-subset parser + the typed config structs.
+//!
+//! Offline build — no serde/toml crates — so this module implements the
+//! subset the project needs: `[section]` headers and
+//! `key = value` lines with string / integer / float / boolean values
+//! and `#` comments. See `examples/service.toml` for the shipped schema.
+
+use crate::coordinator::service::EngineKind;
+use crate::coordinator::ServiceConfig;
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` map.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let line = match line.find('#') {
+                // Allow trailing comments outside strings (strings in
+                // our schema never contain '#').
+                Some(pos) if !line[..pos].contains('"') || line[..pos].matches('"').count() % 2 == 0 => {
+                    line[..pos].trim()
+                }
+                _ => line,
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    return Err(ConfigError {
+                        line: i + 1,
+                        msg: "unterminated section header".into(),
+                    });
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                return Err(ConfigError {
+                    line: i + 1,
+                    msg: format!("expected key = value, got `{line}`"),
+                });
+            };
+            let key = key.trim();
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let val = parse_value(val.trim()).ok_or_else(|| ConfigError {
+                line: i + 1,
+                msg: format!("bad value `{}`", val.trim()),
+            })?;
+            cfg.values.insert(full_key, val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    /// Build a [`ServiceConfig`] from the `[service]` + `[engine]`
+    /// sections (missing keys use defaults).
+    pub fn service_config(&self) -> Result<ServiceConfig, ConfigError> {
+        let kind_str = self.str_or("engine.kind", "ws-dsp-fetch");
+        let kind = EngineKind::parse(kind_str).ok_or_else(|| ConfigError {
+            line: 0,
+            msg: format!("unknown engine.kind `{kind_str}`"),
+        })?;
+        Ok(ServiceConfig {
+            kind,
+            workers: self.int_or("service.workers", 2).max(1) as usize,
+            ws_rows: self.int_or("engine.rows", 14).max(1) as usize,
+            ws_cols: self.int_or("engine.cols", 14).max(1) as usize,
+            verify: self.bool_or("service.verify", true),
+        })
+    }
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        return stripped.strip_suffix('"').map(|v| Value::Str(v.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Some(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Some(Value::Float(v));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# matrix engine service
+[service]
+workers = 4
+verify = true
+
+[engine]
+kind = "ws-dsp-fetch"  # the paper's design
+rows = 14
+cols = 14
+clock_mhz = 666.0
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.int_or("service.workers", 0), 4);
+        assert_eq!(cfg.bool_or("service.verify", false), true);
+        assert_eq!(cfg.str_or("engine.kind", ""), "ws-dsp-fetch");
+        assert_eq!(
+            cfg.get("engine.clock_mhz").and_then(Value::as_float),
+            Some(666.0)
+        );
+    }
+
+    #[test]
+    fn builds_service_config() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let svc = cfg.service_config().unwrap();
+        assert_eq!(svc.workers, 4);
+        assert_eq!(svc.ws_rows, 14);
+        assert!(svc.verify);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("nonsense without equals").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("key = @@@").is_err());
+    }
+
+    #[test]
+    fn unknown_engine_kind_rejected() {
+        let cfg = Config::parse("[engine]\nkind = \"warp-drive\"").unwrap();
+        assert!(cfg.service_config().is_err());
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let cfg = Config::parse("").unwrap();
+        let svc = cfg.service_config().unwrap();
+        assert_eq!(svc.workers, 2);
+        assert_eq!(svc.ws_rows, 14);
+    }
+}

@@ -1,0 +1,91 @@
+//! Job types the coordinator accepts.
+
+use crate::engines::RunStats;
+use crate::workload::conv::ConvShape;
+use crate::workload::{MatI32, MatI8};
+use std::time::Duration;
+
+/// Opaque job identifier assigned at submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+/// A unit of work for the matrix engine service.
+#[derive(Debug, Clone)]
+pub enum Job {
+    /// Plain INT8 GEMM: `a (M×K) @ w (K×N)`.
+    Gemm { a: MatI8, w: MatI8 },
+    /// Conv2d, lowered to GEMM by im2col inside the worker.
+    Conv {
+        input: Vec<i8>,
+        weights: Vec<i8>,
+        shape: ConvShape,
+    },
+    /// Spiking inference: binary spike train (T×P) against weights.
+    Snn { spikes: MatI8, weights: MatI8 },
+}
+
+impl Job {
+    /// MAC count (for throughput accounting).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Job::Gemm { a, w } => (a.rows * a.cols * w.cols) as u64,
+            Job::Conv { shape, .. } => shape.macs(),
+            Job::Snn { spikes, weights } => {
+                (spikes.rows * spikes.cols * weights.cols) as u64
+            }
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Job::Gemm { .. } => "gemm",
+            Job::Conv { .. } => "conv",
+            Job::Snn { .. } => "snn",
+        }
+    }
+}
+
+/// Completed job: output + cycle accounting + wall time.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: JobId,
+    pub output: MatI32,
+    pub stats: RunStats,
+    /// Simulated time at the engine's clock plan.
+    pub simulated: Duration,
+    /// Host wall-clock the worker spent.
+    pub wall: Duration,
+    /// Bit-exactness check against the golden reference (when enabled).
+    pub verified: Option<bool>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macs_per_kind() {
+        let g = Job::Gemm {
+            a: MatI8::zeros(4, 8),
+            w: MatI8::zeros(8, 2),
+        };
+        assert_eq!(g.macs(), 64);
+        assert_eq!(g.kind(), "gemm");
+
+        let shape = ConvShape {
+            in_c: 2,
+            in_h: 4,
+            in_w: 4,
+            out_c: 3,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let c = Job::Conv {
+            input: vec![0; 32],
+            weights: vec![0; 54],
+            shape,
+        };
+        assert_eq!(c.macs(), shape.macs());
+    }
+}

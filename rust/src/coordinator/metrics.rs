@@ -1,0 +1,85 @@
+//! Service metrics: shared counters + latency aggregation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Thread-shared metrics for the job service.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub macs: AtomicU64,
+    pub sim_cycles: AtomicU64,
+    pub guard_overflows: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_completion(&self, macs: u64, cycles: u64, wall: Duration) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.macs.fetch_add(macs, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+        self.latencies_us
+            .lock()
+            .unwrap()
+            .push(wall.as_micros() as u64);
+    }
+
+    /// (p50, p95, max) wall latency in microseconds.
+    pub fn latency_percentiles(&self) -> (u64, u64, u64) {
+        let mut v = self.latencies_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return (0, 0, 0);
+        }
+        v.sort_unstable();
+        (
+            v[v.len() / 2],
+            v[(v.len() * 95 / 100).min(v.len() - 1)],
+            *v.last().unwrap(),
+        )
+    }
+
+    pub fn summary(&self) -> String {
+        let (p50, p95, max) = self.latency_percentiles();
+        format!(
+            "jobs {}/{} ok ({} failed), {} MMACs, {} sim-cycles, \
+             latency p50 {}us p95 {}us max {}us",
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.jobs_submitted.load(Ordering::Relaxed),
+            self.jobs_failed.load(Ordering::Relaxed),
+            self.macs.load(Ordering::Relaxed) / 1_000_000,
+            self.sim_cycles.load(Ordering::Relaxed),
+            p50,
+            p95,
+            max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        m.jobs_submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_completion(1_000_000, 500, Duration::from_micros(100));
+        m.record_completion(2_000_000, 700, Duration::from_micros(300));
+        let (p50, p95, max) = m.latency_percentiles();
+        assert!(p50 >= 100 && p95 <= 300 && max == 300);
+        assert!(m.summary().contains("3 MMACs"));
+    }
+
+    #[test]
+    fn empty_percentiles_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentiles(), (0, 0, 0));
+    }
+}

@@ -1,0 +1,29 @@
+//! The L3 coordinator: tiling, scheduling and serving matrix workloads
+//! on the cycle-accurate engines (cost) and the PJRT runtime (values).
+//!
+//! The paper's contribution is a *matrix-engine micro-architecture*, so
+//! the coordinator here is the surrounding system a deployment needs:
+//!
+//! * [`job`] — the request types (GEMM / Conv2d / SNN inference);
+//! * [`tiler`] — maps arbitrary problem shapes onto an engine's
+//!   stationary-tile geometry, K-splitting with guard-band awareness;
+//! * [`scheduler`] — aggregates per-tile cycle costs under a
+//!   weight-delivery policy: [`scheduler::PrefetchPolicy::PingPong`]
+//!   (the paper's in-DSP prefetch: next tile's weights stream during
+//!   compute, one exposed swap cycle) vs
+//!   [`scheduler::PrefetchPolicy::Stall`] (tinyTPU-style reload stall)
+//!   — making the benefit of technique 1 measurable end-to-end;
+//! * [`service`] — a multi-worker job service (std threads + channels;
+//!   the binary is self-contained and offline).
+
+pub mod job;
+pub mod metrics;
+pub mod scheduler;
+pub mod service;
+pub mod tiler;
+
+pub use job::{Job, JobId, JobResult};
+pub use metrics::Metrics;
+pub use scheduler::{PrefetchPolicy, ScheduleReport};
+pub use service::{Service, ServiceConfig};
+pub use tiler::{GemmTiler, Tile};

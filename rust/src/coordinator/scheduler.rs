@@ -1,0 +1,164 @@
+//! Weight-delivery scheduling across a tile sequence.
+//!
+//! The WS array must reload its stationary weights between tiles. The
+//! paper's technique 1 exists precisely to make that reload (nearly)
+//! free: the B1/BCIN chain streams the *next* tile's weights while the
+//! array computes the current one, exposing only the single CEB2 swap
+//! cycle. The scheduler quantifies this end-to-end:
+//!
+//! | policy | exposed cost per tile switch |
+//! |---|---|
+//! | [`PrefetchPolicy::PingPong`] | 1 cycle (swap pulse) — in-DSP or CLB ping-pong |
+//! | [`PrefetchPolicy::Stall`]   | `rows` cycles (full reload) — tinyTPU |
+//!
+//! The *first* tile's fill cannot overlap anything and costs `rows + 1`
+//! either way.
+
+use crate::engines::RunStats;
+
+/// How weight reloads interact with compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchPolicy {
+    /// Next tile's weights prefetched during compute (the paper's
+    /// in-DSP chain, or a CLB ping-pong bank): 1 exposed cycle per swap.
+    PingPong,
+    /// No prefetch path: the array stalls for the full reload.
+    Stall,
+}
+
+/// Aggregated schedule over a tile sequence.
+#[derive(Debug, Clone)]
+pub struct ScheduleReport {
+    pub policy: PrefetchPolicy,
+    pub tiles: usize,
+    /// Total slow-domain cycles including weight handling.
+    pub cycles: u64,
+    /// Cycles spent purely streaming (compute).
+    pub compute_cycles: u64,
+    /// Cycles lost to weight loading.
+    pub weight_cycles: u64,
+    pub macs: u64,
+}
+
+impl ScheduleReport {
+    /// Fraction of time the array computes.
+    pub fn compute_fraction(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.compute_cycles as f64 / self.cycles as f64
+    }
+
+    /// Achieved MACs/cycle.
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.cycles as f64
+        }
+    }
+
+    /// Simulated wall time at `mhz`.
+    pub fn simulated_secs(&self, mhz: f64) -> f64 {
+        self.cycles as f64 / (mhz * 1e6)
+    }
+}
+
+/// Aggregate per-tile run stats under a policy.
+///
+/// `per_tile` are the engine's stats for each tile run in isolation
+/// (each includes its own weight-load accounting); `rows` is the array
+/// depth (= uncompressed reload cost).
+pub fn schedule(
+    policy: PrefetchPolicy,
+    per_tile: &[RunStats],
+    rows: usize,
+) -> ScheduleReport {
+    let tiles = per_tile.len();
+    let compute: u64 = per_tile
+        .iter()
+        .map(|s| s.cycles - s.weight_stall_cycles - rows as u64)
+        .sum();
+    let macs: u64 = per_tile.iter().map(|s| s.macs).sum();
+    // First fill is always exposed.
+    let first_fill = (rows + 1) as u64;
+    let switches = tiles.saturating_sub(1) as u64;
+    let weight = match policy {
+        PrefetchPolicy::PingPong => first_fill + switches,
+        PrefetchPolicy::Stall => first_fill + switches * rows as u64,
+    };
+    ScheduleReport {
+        policy,
+        tiles,
+        cycles: compute + weight,
+        compute_cycles: compute,
+        weight_cycles: weight,
+        macs,
+    }
+}
+
+/// The end-to-end speedup of ping-pong prefetch over stalling for the
+/// same tile sequence.
+pub fn prefetch_speedup(per_tile: &[RunStats], rows: usize) -> f64 {
+    let pp = schedule(PrefetchPolicy::PingPong, per_tile, rows);
+    let st = schedule(PrefetchPolicy::Stall, per_tile, rows);
+    st.cycles as f64 / pp.cycles.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(cycles: u64, macs: u64, rows: u64) -> RunStats {
+        RunStats {
+            cycles: cycles + rows + 1, // engine counts fill+swap per tile
+            weight_stall_cycles: 1,
+            macs,
+            weight_loads: 1,
+            ..RunStats::default()
+        }
+    }
+
+    #[test]
+    fn pingpong_exposes_one_cycle_per_switch() {
+        let rows = 14;
+        let tiles: Vec<RunStats> =
+            (0..10).map(|_| stats(100, 1000, rows)).collect();
+        let rep = schedule(PrefetchPolicy::PingPong, &tiles, rows as usize);
+        assert_eq!(rep.compute_cycles, 1000);
+        assert_eq!(rep.weight_cycles, 15 + 9);
+        let st = schedule(PrefetchPolicy::Stall, &tiles, rows as usize);
+        assert_eq!(st.weight_cycles, 15 + 9 * 14);
+        assert!(st.cycles > rep.cycles);
+    }
+
+    #[test]
+    fn speedup_grows_with_tile_count() {
+        let rows = 14;
+        let few: Vec<RunStats> = (0..2).map(|_| stats(20, 100, rows)).collect();
+        let many: Vec<RunStats> = (0..64).map(|_| stats(20, 100, rows)).collect();
+        assert!(
+            prefetch_speedup(&many, rows as usize)
+                > prefetch_speedup(&few, rows as usize)
+        );
+    }
+
+    #[test]
+    fn single_tile_policies_equal() {
+        let rows = 8;
+        let one = vec![stats(50, 400, rows)];
+        let pp = schedule(PrefetchPolicy::PingPong, &one, rows as usize);
+        let st = schedule(PrefetchPolicy::Stall, &one, rows as usize);
+        assert_eq!(pp.cycles, st.cycles);
+    }
+
+    #[test]
+    fn fractions_sane() {
+        let rows = 14;
+        let tiles: Vec<RunStats> = (0..5).map(|_| stats(100, 500, rows)).collect();
+        let rep = schedule(PrefetchPolicy::PingPong, &tiles, rows as usize);
+        assert!(rep.compute_fraction() > 0.9);
+        assert!(rep.macs_per_cycle() > 0.0);
+        assert!(rep.simulated_secs(666.0) > 0.0);
+    }
+}

@@ -1,0 +1,443 @@
+//! Multi-worker matrix-engine service.
+//!
+//! Each worker owns one cycle-accurate engine instance (they are cheap:
+//! a few hundred KB of register state) and drains a shared job queue.
+//! Channels + std threads keep the binary self-contained and offline.
+
+use super::job::{Job, JobId, JobResult};
+use super::metrics::Metrics;
+use super::scheduler::{schedule, PrefetchPolicy};
+use super::tiler::GemmTiler;
+use crate::engines::os::{OsConfig, OsEngine, OsVariant};
+use crate::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
+use crate::engines::ws::{WsConfig, WsEngine, WsVariant};
+use crate::engines::{Engine, EngineError, RunStats};
+use crate::workload::conv::{im2col, weights_to_gemm};
+use crate::workload::gemm::golden_gemm;
+use crate::workload::{MatI32, MatI8};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which engine the workers instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    WsTinyTpu,
+    WsLibano,
+    WsClbFetch,
+    WsDspFetch,
+    OsOfficial,
+    OsEnhanced,
+    SnnFireFly,
+    SnnEnhanced,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        Some(match s {
+            "ws-tinytpu" => EngineKind::WsTinyTpu,
+            "ws-libano" => EngineKind::WsLibano,
+            "ws-clb-fetch" => EngineKind::WsClbFetch,
+            "ws-dsp-fetch" => EngineKind::WsDspFetch,
+            "os-official" => EngineKind::OsOfficial,
+            "os-enhanced" => EngineKind::OsEnhanced,
+            "snn-firefly" => EngineKind::SnnFireFly,
+            "snn-enhanced" => EngineKind::SnnEnhanced,
+            _ => return None,
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineKind::WsTinyTpu => "ws-tinytpu",
+            EngineKind::WsLibano => "ws-libano",
+            EngineKind::WsClbFetch => "ws-clb-fetch",
+            EngineKind::WsDspFetch => "ws-dsp-fetch",
+            EngineKind::OsOfficial => "os-official",
+            EngineKind::OsEnhanced => "os-enhanced",
+            EngineKind::SnnFireFly => "snn-firefly",
+            EngineKind::SnnEnhanced => "snn-enhanced",
+        }
+    }
+
+    pub fn all() -> [EngineKind; 8] {
+        [
+            EngineKind::WsTinyTpu,
+            EngineKind::WsLibano,
+            EngineKind::WsClbFetch,
+            EngineKind::WsDspFetch,
+            EngineKind::OsOfficial,
+            EngineKind::OsEnhanced,
+            EngineKind::SnnFireFly,
+            EngineKind::SnnEnhanced,
+        ]
+    }
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub kind: EngineKind,
+    pub workers: usize,
+    /// WS array geometry (rows, cols); OS/SNN use their paper configs.
+    pub ws_rows: usize,
+    pub ws_cols: usize,
+    /// Cross-check every output against the golden reference.
+    pub verify: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 2,
+            ws_rows: 14,
+            ws_cols: 14,
+            verify: true,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn build_engine(&self) -> Box<dyn Engine + Send> {
+        match self.kind {
+            EngineKind::WsTinyTpu
+            | EngineKind::WsLibano
+            | EngineKind::WsClbFetch
+            | EngineKind::WsDspFetch => {
+                let variant = match self.kind {
+                    EngineKind::WsTinyTpu => WsVariant::TinyTpu,
+                    EngineKind::WsLibano => WsVariant::Libano,
+                    EngineKind::WsClbFetch => WsVariant::ClbFetch,
+                    _ => WsVariant::DspFetch,
+                };
+                Box::new(WsEngine::new(WsConfig {
+                    variant,
+                    rows: self.ws_rows,
+                    cols: self.ws_cols,
+                    target_mhz: if variant == WsVariant::TinyTpu {
+                        400.0
+                    } else {
+                        666.0
+                    },
+                    strict_guard: false,
+                }))
+            }
+            EngineKind::OsOfficial => {
+                Box::new(OsEngine::new(OsConfig::b1024(OsVariant::Official)))
+            }
+            EngineKind::OsEnhanced => {
+                Box::new(OsEngine::new(OsConfig::b1024(OsVariant::Enhanced)))
+            }
+            EngineKind::SnnFireFly => {
+                Box::new(SnnEngine::new(SnnConfig::paper_32x32(SnnVariant::FireFly)))
+            }
+            EngineKind::SnnEnhanced => {
+                Box::new(SnnEngine::new(SnnConfig::paper_32x32(SnnVariant::Enhanced)))
+            }
+        }
+    }
+
+    /// The tiler matching the engine geometry (WS engines only; OS/SNN
+    /// tile internally).
+    fn tiler(&self) -> Option<GemmTiler> {
+        match self.kind {
+            EngineKind::WsTinyTpu
+            | EngineKind::WsLibano
+            | EngineKind::WsClbFetch
+            | EngineKind::WsDspFetch => {
+                Some(GemmTiler::new(self.ws_rows, self.ws_cols))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Execute one GEMM on an engine, tiling when needed. This is the same
+/// code path workers use; exposed for examples/benches.
+pub fn run_gemm_tiled(
+    engine: &mut dyn Engine,
+    tiler: Option<&GemmTiler>,
+    a: &MatI8,
+    w: &MatI8,
+) -> Result<(MatI32, RunStats), EngineError> {
+    match tiler {
+        None => {
+            let run = engine.run_gemm(a, w)?;
+            Ok((run.output, run.stats))
+        }
+        Some(tiler) => {
+            let tiles = tiler.tiles(a, w);
+            let mut out = MatI32::zeros(a.rows, w.cols);
+            let mut per_tile = Vec::with_capacity(tiles.len());
+            for t in &tiles {
+                let run = engine.run_gemm(&t.a, &t.w)?;
+                tiler.accumulate(&mut out, t, &run.output);
+                per_tile.push(run.stats);
+            }
+            // Aggregate under the engine's natural policy (in-DSP /
+            // CLB ping-pong for everything but tinyTPU, which stalls).
+            let policy = if per_tile
+                .iter()
+                .any(|s| s.weight_stall_cycles >= tiler.rows as u64)
+            {
+                PrefetchPolicy::Stall
+            } else {
+                PrefetchPolicy::PingPong
+            };
+            let rep = schedule(policy, &per_tile, tiler.rows);
+            let mut stats = RunStats {
+                cycles: rep.cycles,
+                fast_cycles: rep.cycles,
+                macs: rep.macs,
+                weight_stall_cycles: rep.weight_cycles,
+                weight_loads: tiles.len() as u64,
+                guard_overflows: per_tile.iter().map(|s| s.guard_overflows).sum(),
+            };
+            // Padded-tile MACs overcount; report the true problem size.
+            stats.macs = (a.rows * a.cols * w.cols) as u64;
+            Ok((out, stats))
+        }
+    }
+}
+
+enum Message {
+    Work(JobId, Job),
+    Stop,
+}
+
+/// The running service.
+pub struct Service {
+    tx: mpsc::Sender<Message>,
+    results_rx: mpsc::Receiver<JobResult>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: u64,
+    cfg: ServiceConfig,
+}
+
+impl Service {
+    /// Spawn the worker pool.
+    pub fn start(cfg: ServiceConfig) -> Self {
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (results_tx, results_rx) = mpsc::channel::<JobResult>();
+        let metrics = Arc::new(Metrics::new());
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let results_tx = results_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut engine = cfg.build_engine();
+                let tiler = cfg.tiler();
+                loop {
+                    let msg = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(Message::Work(id, job)) => {
+                            let t0 = Instant::now();
+                            match execute(engine.as_mut(), tiler.as_ref(), &job, cfg.verify)
+                            {
+                                Ok((output, stats, verified)) => {
+                                    let wall = t0.elapsed();
+                                    let plan = engine.clock_plan();
+                                    let simulated = Duration::from_secs_f64(
+                                        stats.cycles as f64 / (plan.slow_mhz * 1e6),
+                                    );
+                                    metrics.record_completion(
+                                        job.macs(),
+                                        stats.cycles,
+                                        wall,
+                                    );
+                                    let _ = results_tx.send(JobResult {
+                                        id,
+                                        output,
+                                        stats,
+                                        simulated,
+                                        wall,
+                                        verified,
+                                    });
+                                }
+                                Err(_) => {
+                                    metrics
+                                        .jobs_failed
+                                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        Ok(Message::Stop) | Err(_) => break,
+                    }
+                }
+            }));
+        }
+        Service {
+            tx,
+            results_rx,
+            workers,
+            metrics,
+            next_id: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a job; returns its id.
+    pub fn submit(&mut self, job: Job) -> JobId {
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        self.metrics
+            .jobs_submitted
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(Message::Work(id, job))
+            .expect("workers alive");
+        id
+    }
+
+    /// Receive one completed result (blocking with timeout).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<JobResult> {
+        self.results_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Stop workers and join.
+    pub fn shutdown(self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Message::Stop);
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn execute(
+    engine: &mut dyn Engine,
+    tiler: Option<&GemmTiler>,
+    job: &Job,
+    verify: bool,
+) -> Result<(MatI32, RunStats, Option<bool>), EngineError> {
+    let (a, w): (MatI8, MatI8) = match job {
+        Job::Gemm { a, w } => (a.clone(), w.clone()),
+        Job::Conv {
+            input,
+            weights,
+            shape,
+        } => (im2col(input, *shape), weights_to_gemm(weights, *shape)),
+        Job::Snn { spikes, weights } => (spikes.clone(), weights.clone()),
+    };
+    let (output, stats) = run_gemm_tiled(engine, tiler, &a, &w)?;
+    let verified = verify.then(|| output == golden_gemm(&a, &w));
+    Ok((output, stats, verified))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+    use crate::workload::conv::ConvShape;
+
+    #[test]
+    fn service_runs_gemm_jobs_verified() {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 2,
+            ws_rows: 6,
+            ws_cols: 6,
+            verify: true,
+        });
+        let mut rng = XorShift::new(3);
+        let n_jobs = 8;
+        for _ in 0..n_jobs {
+            let a = MatI8::random_bounded(&mut rng, 4, 13, 63);
+            let w = MatI8::random(&mut rng, 13, 9);
+            svc.submit(Job::Gemm { a, w });
+        }
+        let mut ok = 0;
+        for _ in 0..n_jobs {
+            let r = svc
+                .recv_timeout(Duration::from_secs(30))
+                .expect("job completes");
+            assert_eq!(r.verified, Some(true));
+            assert!(r.stats.cycles > 0);
+            ok += 1;
+        }
+        assert_eq!(ok, n_jobs);
+        assert!(svc.metrics.summary().contains("8/8"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn service_runs_conv_jobs() {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::OsEnhanced,
+            workers: 1,
+            ws_rows: 0,
+            ws_cols: 0,
+            verify: true,
+        });
+        let shape = ConvShape {
+            in_c: 3,
+            in_h: 6,
+            in_w: 6,
+            out_c: 4,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let mut rng = XorShift::new(9);
+        svc.submit(Job::Conv {
+            input: rng.i8_vec(shape.in_c * shape.in_h * shape.in_w),
+            weights: rng.i8_vec(shape.out_c * shape.in_c * shape.k * shape.k),
+            shape,
+        });
+        let r = svc
+            .recv_timeout(Duration::from_secs(30))
+            .expect("conv completes");
+        assert_eq!(r.verified, Some(true));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn snn_service_handles_spike_jobs() {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::SnnEnhanced,
+            workers: 1,
+            ws_rows: 0,
+            ws_cols: 0,
+            verify: true,
+        });
+        let mut rng = XorShift::new(11);
+        let spikes = MatI8::from_fn(8, 32, |_, _| rng.chance(1, 3) as i8);
+        let weights = MatI8::random_bounded(&mut rng, 32, 32, 50);
+        svc.submit(Job::Snn { spikes, weights });
+        let r = svc.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r.verified, Some(true));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn big_gemm_tiles_and_verifies() {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 1,
+            ws_rows: 14,
+            ws_cols: 14,
+            verify: true,
+        });
+        let mut rng = XorShift::new(5);
+        let a = MatI8::random_bounded(&mut rng, 6, 100, 63);
+        let w = MatI8::random(&mut rng, 100, 40);
+        svc.submit(Job::Gemm { a, w });
+        let r = svc.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r.verified, Some(true));
+        assert_eq!(r.stats.macs, 6 * 100 * 40);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,153 @@
+//! GEMM tiling onto a stationary-array geometry.
+//!
+//! A WS engine holds a `(rows × cols)` weight tile; arbitrary `(M, K, N)`
+//! problems split into a grid of `(K/rows) × (N/cols)` tiles whose
+//! partial results sum over the K axis. The tiler also owns two
+//! correctness-critical policies:
+//!
+//! * **guard awareness** — for packed full-chain engines it can bound
+//!   the per-tile cascade depth so worst-case INT8 data stays inside the
+//!   18-bit lane guard band (`packing::GUARD_DEPTH` drains);
+//! * **padding** — ragged edges pad with zeros (zero products cannot
+//!   perturb packed lanes).
+
+use crate::workload::{MatI32, MatI8};
+
+/// One weight-stationary tile of a larger GEMM.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    /// K-range of the source problem this tile covers.
+    pub k0: usize,
+    pub k1: usize,
+    /// N-range.
+    pub n0: usize,
+    pub n1: usize,
+    /// The padded activation slice (M × rows).
+    pub a: MatI8,
+    /// The padded weight tile (rows × tile_cols).
+    pub w: MatI8,
+}
+
+/// Tiling plan for one engine geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmTiler {
+    /// Stationary K depth per tile (array rows).
+    pub rows: usize,
+    /// Stationary N width per tile (array cols).
+    pub cols: usize,
+}
+
+impl GemmTiler {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0);
+        GemmTiler { rows, cols }
+    }
+
+    /// Number of (k, n) tiles for a problem.
+    pub fn tile_count(&self, k: usize, n: usize) -> usize {
+        k.div_ceil(self.rows) * n.div_ceil(self.cols)
+    }
+
+    /// Produce the tile sequence (K-major, so consecutive tiles share
+    /// the same N-columns and the accumulator stays hot).
+    pub fn tiles(&self, a: &MatI8, w: &MatI8) -> Vec<Tile> {
+        assert_eq!(a.cols, w.rows, "inner dimensions must agree");
+        let (m, k) = (a.rows, a.cols);
+        let n = w.cols;
+        let mut out = Vec::with_capacity(self.tile_count(k, n));
+        for n0 in (0..n).step_by(self.cols) {
+            let n1 = (n0 + self.cols).min(n);
+            for k0 in (0..k).step_by(self.rows) {
+                let k1 = (k0 + self.rows).min(k);
+                // Pad K to the full array depth; N tiles may be narrow.
+                let a_tile = MatI8::from_fn(m, self.rows, |r, c| {
+                    if k0 + c < k1 {
+                        a.at(r, k0 + c)
+                    } else {
+                        0
+                    }
+                });
+                let w_tile = MatI8::from_fn(self.rows, n1 - n0, |r, c| {
+                    if k0 + r < k1 {
+                        w.at(k0 + r, n0 + c)
+                    } else {
+                        0
+                    }
+                });
+                out.push(Tile {
+                    k0,
+                    k1,
+                    n0,
+                    n1,
+                    a: a_tile,
+                    w: w_tile,
+                });
+            }
+        }
+        out
+    }
+
+    /// Accumulate a tile's partial result into the full output.
+    pub fn accumulate(&self, out: &mut MatI32, tile: &Tile, partial: &MatI32) {
+        assert_eq!(partial.rows, out.rows);
+        assert_eq!(partial.cols, tile.n1 - tile.n0);
+        for r in 0..partial.rows {
+            for c in 0..partial.cols {
+                out.add(r, tile.n0 + c, partial.at(r, c));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+    use crate::workload::gemm::{golden_gemm, GemmProblem};
+
+    /// Tiling + golden per-tile GEMM + accumulation == full golden GEMM.
+    #[test]
+    fn tiles_recompose_exactly() {
+        let mut rng = XorShift::new(1);
+        for (m, k, n, rows, cols) in
+            [(5, 20, 9, 6, 4), (8, 6, 6, 6, 6), (3, 13, 17, 14, 14), (1, 1, 1, 4, 4)]
+        {
+            let a = MatI8::random(&mut rng, m, k);
+            let w = MatI8::random(&mut rng, k, n);
+            let tiler = GemmTiler::new(rows, cols);
+            let tiles = tiler.tiles(&a, &w);
+            assert_eq!(tiles.len(), tiler.tile_count(k, n));
+            let mut out = MatI32::zeros(m, n);
+            for t in &tiles {
+                let partial = golden_gemm(&t.a, &t.w);
+                tiler.accumulate(&mut out, t, &partial);
+            }
+            assert_eq!(out, golden_gemm(&a, &w), "m{m} k{k} n{n} r{rows} c{cols}");
+        }
+    }
+
+    #[test]
+    fn k_major_order_keeps_n_tiles_contiguous() {
+        let tiler = GemmTiler::new(4, 4);
+        let a = MatI8::zeros(2, 10);
+        let w = MatI8::zeros(10, 6);
+        let tiles = tiler.tiles(&a, &w);
+        // 3 K-tiles × 2 N-tiles; first three share n0 = 0.
+        assert_eq!(tiles.len(), 6);
+        assert!(tiles[..3].iter().all(|t| t.n0 == 0));
+        assert!(tiles[3..].iter().all(|t| t.n0 == 4));
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let tiler = GemmTiler::new(8, 8);
+        let a = MatI8::from_fn(2, 3, |_, _| 7);
+        let w = MatI8::from_fn(3, 2, |_, _| 9);
+        let tiles = tiler.tiles(&a, &w);
+        assert_eq!(tiles.len(), 1);
+        let t = &tiles[0];
+        assert_eq!(t.a.cols, 8);
+        assert_eq!(t.a.at(0, 5), 0);
+        assert_eq!(t.w.at(6, 1), 0);
+    }
+}

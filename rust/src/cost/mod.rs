@@ -1,0 +1,34 @@
+//! Cost models: resources, timing and power — the Vivado stand-ins.
+//!
+//! The paper evaluates its techniques with Vivado out-of-context runs on
+//! an XCZU3EG (resource utilization, achieved frequency, worst negative
+//! slack, dynamic power). We have no Vivado, so:
+//!
+//! * **Resources** are *structural*: every engine elaborates a
+//!   [`resource::ResourceInventory`] — named groups of primitives with
+//!   per-group derivations — and counts fall out by summation. Where a
+//!   Vivado implementation contains glue we cannot derive from first
+//!   principles (control FSMs, valid trees), the engine declares a
+//!   named, documented `control`/`residual` group; integration tests
+//!   assert the totals equal the paper's Tables I–III cell-for-cell.
+//! * **Timing** ([`timing`]) is an analytic critical-path model over
+//!   net classes (DSP-internal cascade, CLB-local, broadcast fan-out,
+//!   cross-domain mux, carry chains) with delay constants calibrated on
+//!   the paper's frequency/WNS cells.
+//! * **Power** ([`power`]) integrates switching activity: per-primitive
+//!   energy coefficients × toggle counts × clock frequency, calibrated
+//!   on the paper's eight reported designs.
+//!
+//! Calibration policy (DESIGN.md §Paper-value calibration): resource
+//! counts are identities and must match exactly; frequency/WNS/power are
+//! models and must match in *shape* (who wins, by what factor).
+
+pub mod power;
+pub mod report;
+pub mod resource;
+pub mod timing;
+
+pub use power::PowerModel;
+pub use report::TableRow;
+pub use resource::{Group, Primitive, ResourceInventory};
+pub use timing::{PathClass, TimingModel, TimingReport};

@@ -1,0 +1,110 @@
+//! Table rendering: the paper's Tables I / II / III as text reports.
+//!
+//! Each engine produces a [`TableRow`]; the bench/example harnesses
+//! collect rows and render them in the same layout the paper prints, so
+//! `cargo run --example table1_tpuv1` is diffable against Table I.
+
+use super::power::PowerReport;
+use super::resource::{Primitive, ResourceInventory};
+use super::timing::TimingReport;
+
+/// One design's evaluation row (the paper's table columns).
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub design: String,
+    pub lut: usize,
+    pub ff: usize,
+    pub carry8: usize,
+    pub dsp: usize,
+    pub freq_mhz: f64,
+    pub wns_ns: f64,
+    pub power_w: f64,
+}
+
+impl TableRow {
+    pub fn from_models(
+        design: &str,
+        inv: &ResourceInventory,
+        timing: &TimingReport,
+        power: &PowerReport,
+    ) -> Self {
+        TableRow {
+            design: design.to_string(),
+            lut: inv.total(Primitive::Lut),
+            ff: inv.total(Primitive::Ff),
+            carry8: inv.total(Primitive::Carry8),
+            dsp: inv.total(Primitive::Dsp),
+            freq_mhz: timing.target_mhz,
+            wns_ns: timing.wns_ns,
+            power_w: power.total_w,
+        }
+    }
+}
+
+/// Render rows in the paper's Table I layout.
+pub fn render_table(title: &str, rows: &[TableRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("{title}\n"));
+    s.push_str(&format!(
+        "{:<12} {:>7} {:>7} {:>7} {:>5} {:>6} {:>7} {:>7}\n",
+        "design", "LUT", "FF", "CARRY8", "DSP", "Freq", "WNS", "Power"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<12} {:>7} {:>7} {:>7} {:>5} {:>6.0} {:>7.3} {:>7.3}\n",
+            r.design, r.lut, r.ff, r.carry8, r.dsp, r.freq_mhz, r.wns_ns, r.power_w
+        ));
+    }
+    s
+}
+
+/// Render a two-column breakdown (the paper's Table II layout):
+/// `(metric, official, ours)` triples.
+pub fn render_breakdown(
+    title: &str,
+    rows: &[(String, String, String)],
+) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("{title}\n"));
+    s.push_str(&format!(
+        "{:<16} {:>12} {:>12}\n",
+        "metric", "Official", "Ours"
+    ));
+    for (m, a, b) in rows {
+        s.push_str(&format!("{m:<16} {a:>12} {b:>12}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_rows() {
+        let rows = vec![TableRow {
+            design: "DSP-Fetch".into(),
+            lut: 167,
+            ff: 4516,
+            carry8: 0,
+            dsp: 210,
+            freq_mhz: 666.0,
+            wns_ns: 0.052,
+            power_w: 0.93,
+        }];
+        let s = render_table("Table I", &rows);
+        assert!(s.contains("DSP-Fetch"));
+        assert!(s.contains("4516"));
+        assert!(s.contains("0.052"));
+    }
+
+    #[test]
+    fn renders_breakdown() {
+        let s = render_breakdown(
+            "Table II",
+            &[("MuxLUT".into(), "128".into(), "0".into())],
+        );
+        assert!(s.contains("MuxLUT"));
+        assert!(s.contains("Official"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Structural resource inventory.
+//!
+//! An engine's netlist is summarized as named groups of primitives with
+//! clock domains and activity estimates. Counts are *derived* in the
+//! engine constructors (e.g. `rows * cols * act_bits` flip-flops for an
+//! activation staging mesh) so that changing the array geometry changes
+//! the inventory the way re-synthesis would.
+
+use crate::fabric::ClockDomain;
+use std::collections::BTreeMap;
+
+/// FPGA primitive classes we account.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Primitive {
+    /// DSP48E2 slice.
+    Dsp,
+    /// CLB flip-flop (FDRE).
+    Ff,
+    /// CLB LUT (any size).
+    Lut,
+    /// CARRY8 block.
+    Carry8,
+}
+
+impl Primitive {
+    pub fn label(self) -> &'static str {
+        match self {
+            Primitive::Dsp => "DSP",
+            Primitive::Ff => "FF",
+            Primitive::Lut => "LUT",
+            Primitive::Carry8 => "CARRY8",
+        }
+    }
+}
+
+/// A named group of identical primitives (one inventory line).
+#[derive(Debug, Clone)]
+pub struct Group {
+    /// Human-readable purpose, e.g. `"act staging mesh"`, `"DDR mux"`.
+    pub name: String,
+    pub kind: Primitive,
+    pub count: usize,
+    pub domain: ClockDomain,
+    /// Estimated per-bit activity factor in [0, 1] (power model input);
+    /// engines overwrite it with measured toggle rates after simulation.
+    pub activity: f64,
+}
+
+/// The full structural inventory of one engine.
+#[derive(Debug, Clone, Default)]
+pub struct ResourceInventory {
+    pub groups: Vec<Group>,
+}
+
+impl ResourceInventory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a group (builder style).
+    pub fn add(
+        &mut self,
+        name: &str,
+        kind: Primitive,
+        count: usize,
+        domain: ClockDomain,
+        activity: f64,
+    ) -> &mut Self {
+        debug_assert!((0.0..=1.0).contains(&activity), "activity in [0,1]");
+        self.groups.push(Group {
+            name: name.to_string(),
+            kind,
+            count,
+            domain,
+            activity,
+        });
+        self
+    }
+
+    /// Total count of a primitive class.
+    pub fn total(&self, kind: Primitive) -> usize {
+        self.groups
+            .iter()
+            .filter(|g| g.kind == kind)
+            .map(|g| g.count)
+            .sum()
+    }
+
+    /// Count of a primitive class restricted to groups whose name
+    /// contains `pat` (used for table breakdown rows like "AddTree").
+    pub fn total_matching(&self, kind: Primitive, pat: &str) -> usize {
+        self.groups
+            .iter()
+            .filter(|g| g.kind == kind && g.name.contains(pat))
+            .map(|g| g.count)
+            .sum()
+    }
+
+    /// Per-group breakdown as (name, kind, count) sorted by kind, name.
+    pub fn breakdown(&self) -> Vec<(String, Primitive, usize)> {
+        let mut rows: Vec<_> = self
+            .groups
+            .iter()
+            .map(|g| (g.name.clone(), g.kind, g.count))
+            .collect();
+        rows.sort_by(|a, b| (a.1, &a.0).cmp(&(b.1, &b.0)));
+        rows
+    }
+
+    /// Merge another inventory (e.g. PE inventory × array replication is
+    /// usually done arithmetically instead, but composition is handy for
+    /// the coordinator's multi-engine reports).
+    pub fn extend(&mut self, other: &ResourceInventory) {
+        self.groups.extend(other.groups.iter().cloned());
+    }
+
+    /// Summary map primitive -> count.
+    pub fn totals(&self) -> BTreeMap<Primitive, usize> {
+        let mut m = BTreeMap::new();
+        for g in &self.groups {
+            *m.entry(g.kind).or_insert(0) += g.count;
+        }
+        m
+    }
+}
+
+impl std::fmt::Display for ResourceInventory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{:<34} {:>8} {:>8}  domain", "group", "kind", "count")?;
+        for g in &self.groups {
+            writeln!(
+                f,
+                "{:<34} {:>8} {:>8}  {:?}",
+                g.name,
+                g.kind.label(),
+                g.count,
+                g.domain
+            )?;
+        }
+        let t = self.totals();
+        write!(
+            f,
+            "TOTAL: {} LUT, {} FF, {} CARRY8, {} DSP",
+            t.get(&Primitive::Lut).unwrap_or(&0),
+            t.get(&Primitive::Ff).unwrap_or(&0),
+            t.get(&Primitive::Carry8).unwrap_or(&0),
+            t.get(&Primitive::Dsp).unwrap_or(&0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ResourceInventory {
+        let mut inv = ResourceInventory::new();
+        inv.add("mult array", Primitive::Dsp, 196, ClockDomain::Fast, 0.9)
+            .add("act staging", Primitive::Ff, 3136, ClockDomain::Slow, 0.5)
+            .add("AddTree lut", Primitive::Lut, 1152, ClockDomain::Slow, 0.5)
+            .add("AddTree ff", Primitive::Ff, 1216, ClockDomain::Slow, 0.5);
+        inv
+    }
+
+    #[test]
+    fn totals_sum_by_kind() {
+        let inv = sample();
+        assert_eq!(inv.total(Primitive::Dsp), 196);
+        assert_eq!(inv.total(Primitive::Ff), 4352);
+        assert_eq!(inv.total(Primitive::Lut), 1152);
+        assert_eq!(inv.total(Primitive::Carry8), 0);
+    }
+
+    #[test]
+    fn matching_filters_by_name() {
+        let inv = sample();
+        assert_eq!(inv.total_matching(Primitive::Ff, "AddTree"), 1216);
+        assert_eq!(inv.total_matching(Primitive::Lut, "AddTree"), 1152);
+        assert_eq!(inv.total_matching(Primitive::Ff, "staging"), 3136);
+    }
+
+    #[test]
+    fn display_renders() {
+        let s = sample().to_string();
+        assert!(s.contains("TOTAL: 1152 LUT, 4352 FF, 0 CARRY8, 196 DSP"));
+    }
+}

@@ -1,0 +1,162 @@
+//! Static (synthesis-time) DSP48E2 attributes.
+//!
+//! These correspond to the HDL generics a designer fixes per instance:
+//! register counts, input sources, cascade taps, multiplier operand
+//! selection, the RND constant and the SIMD partition. Dynamic controls
+//! (INMODE / OPMODE / ALUMODE / clock enables) live in
+//! [`super::DspInputs`] instead and may change every cycle.
+
+/// Where an input pipeline takes its data from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputSource {
+    /// General fabric routing into the port (A_INPUT/B_INPUT = DIRECT).
+    Direct,
+    /// The dedicated cascade from the neighbor below (ACIN / BCIN).
+    Cascade,
+}
+
+/// Which pipeline register drives the cascade output (ACASCREG/BCASCREG).
+///
+/// `Reg1` is the key to the paper's in-DSP prefetch: BCOUT taps the B1
+/// register so the B1 chain shifts new weights down the column while the
+/// B2 registers keep the live weights stationary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CascadeTap {
+    Reg1,
+    Reg2,
+}
+
+/// Multiplier A-operand selection (AMULTSEL): the A pipeline directly,
+/// or the pre-adder output AD (used by INT8 packing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MultSel {
+    A,
+    Ad,
+}
+
+/// SIMD partitioning of the 48-bit ALU (USE_SIMD).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    One48,
+    Two24,
+    Four12,
+}
+
+/// Static per-instance configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Attributes {
+    /// Number of A pipeline registers in use (1 or 2).
+    pub areg: u8,
+    /// Number of B pipeline registers in use (1 or 2).
+    pub breg: u8,
+    /// A input from fabric or ACIN cascade.
+    pub a_input: InputSource,
+    /// B input from fabric or BCIN cascade.
+    pub b_input: InputSource,
+    /// B2 register input mux: `false` = serial (B2 <- B1, the default),
+    /// `true` = direct (B2 <- B input, bypassing B1). UG579 Fig. 2-7:
+    /// the B2 mux can select the B1 output or the input directly — the
+    /// *direct* setting is what lets the in-DSP multiplexing reload B1
+    /// and B2 with different weights on back-to-back cycles (paper
+    /// Fig. 5) without disturbing each other.
+    pub b2_direct: bool,
+    /// Which A register drives ACOUT.
+    pub a_cascade_tap: CascadeTap,
+    /// Which B register drives BCOUT.
+    pub b_cascade_tap: CascadeTap,
+    /// Multiplier A operand: A pipeline or pre-adder output.
+    pub amultsel: MultSel,
+    /// D-port register present (DREG).
+    pub dreg: bool,
+    /// Pre-adder output register present (ADREG).
+    pub adreg: bool,
+    /// Multiplier output register present (MREG).
+    pub mreg: bool,
+    /// C-port register present (CREG).
+    pub creg: bool,
+    /// The rounding constant available through the W multiplexer.
+    pub rnd: i64,
+    /// ALU SIMD partition.
+    pub simd: SimdMode,
+}
+
+impl Default for Attributes {
+    /// The "fully pipelined MACC" configuration: 2-deep A/B pipelines,
+    /// direct inputs, cascade taps after the second register, plain A
+    /// operand, M and P registers, ONE48 ALU.
+    fn default() -> Self {
+        Attributes {
+            areg: 2,
+            breg: 2,
+            a_input: InputSource::Direct,
+            b_input: InputSource::Direct,
+            b2_direct: false,
+            a_cascade_tap: CascadeTap::Reg2,
+            b_cascade_tap: CascadeTap::Reg2,
+            amultsel: MultSel::A,
+            dreg: false,
+            adreg: false,
+            mreg: true,
+            creg: false,
+            rnd: 0,
+            simd: SimdMode::One48,
+        }
+    }
+}
+
+impl Attributes {
+    /// WS systolic PE with the paper's **in-DSP operand prefetching**
+    /// (§IV-B, Fig. 3): weights ride the BCIN cascade, B1 is the shift
+    /// chain (BCOUT taps B1), B2 holds the live weight; the pre-adder
+    /// packs two activations (AMULTSEL = AD).
+    pub fn ws_prefetch_pe() -> Self {
+        Attributes {
+            b_input: InputSource::Cascade,
+            b_cascade_tap: CascadeTap::Reg1,
+            amultsel: MultSel::Ad,
+            dreg: true,
+            adreg: true,
+            ..Attributes::default()
+        }
+    }
+
+    /// OS systolic PE with the paper's **in-DSP multiplexing** (§V-B,
+    /// Fig. 5): both weights live in B1/B2 (ping-pong loaded), INMODE[4]
+    /// toggles between them at the fast clock; activations take the
+    /// plain 2-stage A pipeline; the pre-adder packs two input channels.
+    pub fn os_inmux_pe() -> Self {
+        Attributes {
+            amultsel: MultSel::Ad,
+            dreg: true,
+            adreg: true,
+            b2_direct: true,
+            ..Attributes::default()
+        }
+    }
+
+    /// Ring-accumulator stage (§V-C, Fig. 6): no multiplier use; the
+    /// 48-bit ALU in TWO24 with the INT8 correction+bias folded into the
+    /// RND constant at the W mux.
+    pub fn ring_accumulator(rnd: i64) -> Self {
+        Attributes {
+            simd: SimdMode::Two24,
+            rnd,
+            mreg: false,
+            creg: false, // C is the transparent feedback/psum port
+            areg: 1,
+            breg: 1, // A:B concat carries a psum word, 1-stage registered
+            ..Attributes::default()
+        }
+    }
+
+    /// FireFly crossbar stage: FOUR12 SIMD accumulate, weights selected
+    /// by the wide-bus muxes (no multiplier).
+    pub fn firefly_crossbar() -> Self {
+        Attributes {
+            simd: SimdMode::Four12,
+            mreg: false,
+            creg: true,
+            ..Attributes::default()
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Bit-accurate behavioral model of the Xilinx DSP48E2 slice (UG579).
+//!
+//! Only what the paper's techniques exercise is modeled — but *that* is
+//! modeled faithfully at the bit level:
+//!
+//! * the **flexible input pipelines**: A1/A2 and B1/B2 registers with
+//!   individual clock enables, the serial A1→A2 / B1→B2 chain, direct
+//!   vs cascade input sources, and the INMODE dynamic selects — the
+//!   machinery behind both *in-DSP operand prefetching* (paper §IV-B)
+//!   and *in-DSP multiplexing* (paper §V-B);
+//! * the 27-bit **pre-adder** (`AD = D ± A`), used for INT8 packing;
+//! * the 27×18 signed **multiplier** with M register;
+//! * the four **wide-bus multiplexers** (X/Y/Z/W, OPMODE-controlled)
+//!   feeding the 48-bit ALU, including the `RND` constant through W —
+//!   how the ring accumulator absorbs the packing correction (§V-C);
+//! * the **SIMD ALU** modes ONE48 / TWO24 / FOUR12 (FireFly's crossbar
+//!   runs FOUR12, the ring accumulator TWO24);
+//! * the three **cascade paths** ACIN→ACOUT, BCIN→BCOUT, PCIN→PCOUT.
+//!
+//! The model is synchronous: [`Dsp48e2::tick`] captures every register
+//! from the pre-tick state, exactly like one clock edge. Combinational
+//! output taps (`pcout`, `acout`, `bcout`) read the post-tick registers.
+
+mod attributes;
+mod cell;
+mod modes;
+mod simd;
+
+pub use attributes::{Attributes, CascadeTap, InputSource, MultSel, SimdMode};
+pub use cell::{Dsp48e2, DspInputs};
+pub use modes::{AluMode, InMode, OpMode, WMux, XMux, YMux, ZMux};
+pub use simd::{simd_add, simd_lane, simd_pack};
+
+/// Width helpers: two's-complement truncation to `bits`.
+#[inline(always)]
+pub(crate) fn truncate(v: i64, bits: u32) -> i64 {
+    let shift = 64 - bits;
+    (v << shift) >> shift
+}
+
+#[cfg(test)]
+mod truncate_tests {
+    use super::truncate;
+
+    #[test]
+    fn truncation_wraps_two_complement() {
+        assert_eq!(truncate(0x0001_FFFF_FFFF_FFFF, 48), -1);
+        assert_eq!(truncate(1 << 47, 48), -(1 << 47));
+        assert_eq!(truncate((1 << 47) - 1, 48), (1 << 47) - 1);
+        assert_eq!(truncate(-1, 18), -1);
+        assert_eq!(truncate(1 << 17, 18), -(1 << 17));
+    }
+}

@@ -1,0 +1,217 @@
+//! Dynamic control decode: INMODE, OPMODE, ALUMODE.
+//!
+//! Encodings follow UG579 Table 2-7 (INMODE), Table 2-8/9/10 (OPMODE
+//! X/Y/Z) and Table 2-11 (W, DSP48E2 addition), restricted to the
+//! combinations a real netlist can emit; unsupported encodings panic in
+//! debug (a mis-driven control set is a *design* bug we want loud).
+
+/// INMODE[4:0] dynamic input-pipeline control.
+///
+/// | bit | function (as modeled)                                  |
+/// |-----|--------------------------------------------------------|
+/// | 0   | 1 → multiplier/pre-adder takes A1, 0 → A2              |
+/// | 1   | 1 → gate the A operand to 0 (pre-adder input)          |
+/// | 2   | 1 → pre-adder D input enabled, 0 → D = 0               |
+/// | 3   | 1 → pre-adder subtracts A (D − A), 0 → adds (D + A)    |
+/// | 4   | 1 → multiplier takes B1, 0 → B2                        |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct InMode(pub u8);
+
+impl InMode {
+    pub const A2_B2: InMode = InMode(0b00000);
+
+    #[inline]
+    pub fn use_a1(self) -> bool {
+        self.0 & 0b00001 != 0
+    }
+    #[inline]
+    pub fn gate_a(self) -> bool {
+        self.0 & 0b00010 != 0
+    }
+    #[inline]
+    pub fn d_enable(self) -> bool {
+        self.0 & 0b00100 != 0
+    }
+    #[inline]
+    pub fn preadd_sub(self) -> bool {
+        self.0 & 0b01000 != 0
+    }
+    #[inline]
+    pub fn use_b1(self) -> bool {
+        self.0 & 0b10000 != 0
+    }
+
+    /// Builder: select B1 for the multiplier (the DDR toggle bit).
+    pub fn with_b1(self, use_b1: bool) -> InMode {
+        InMode(if use_b1 { self.0 | 0b10000 } else { self.0 & !0b10000 })
+    }
+
+    /// Builder: enable the D port into the pre-adder.
+    pub fn with_d(self) -> InMode {
+        InMode(self.0 | 0b00100)
+    }
+}
+
+/// X multiplexer select (OPMODE[1:0]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XMux {
+    Zero,
+    M,
+    P,
+    /// The A:B concatenation (A[29:0] << 18 | B[17:0]).
+    Ab,
+}
+
+/// Y multiplexer select (OPMODE[3:2]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum YMux {
+    Zero,
+    M,
+    AllOnes,
+    C,
+}
+
+/// Z multiplexer select (OPMODE[6:4]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ZMux {
+    Zero,
+    Pcin,
+    P,
+    C,
+    /// P >> 17 (MACC extend; unused by our engines but decoded).
+    PShift17,
+    PcinShift17,
+}
+
+/// W multiplexer select (OPMODE[8:7]) — DSP48E2's fourth ALU input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WMux {
+    Zero,
+    P,
+    /// The RND attribute constant — where the ring accumulator hides the
+    /// INT8-packing correction / bias (paper §V-C).
+    Rnd,
+    C,
+}
+
+/// Decoded OPMODE: the four wide-bus multiplexer selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpMode {
+    pub x: XMux,
+    pub y: YMux,
+    pub z: ZMux,
+    pub w: WMux,
+}
+
+impl OpMode {
+    /// Multiply only: P = M.
+    pub const MULT: OpMode = OpMode {
+        x: XMux::M,
+        y: YMux::M,
+        z: ZMux::Zero,
+        w: WMux::Zero,
+    };
+
+    /// Multiply-accumulate: P = P + M.
+    pub const MACC: OpMode = OpMode {
+        x: XMux::M,
+        y: YMux::M,
+        z: ZMux::P,
+        w: WMux::Zero,
+    };
+
+    /// Systolic multiply-cascade-accumulate: P = PCIN + M.
+    pub const MULT_CASCADE: OpMode = OpMode {
+        x: XMux::M,
+        y: YMux::M,
+        z: ZMux::Pcin,
+        w: WMux::Zero,
+    };
+
+    /// Accumulate the C port onto the cascade: P = PCIN + C.
+    pub const C_CASCADE: OpMode = OpMode {
+        x: XMux::Zero,
+        y: YMux::C,
+        z: ZMux::Pcin,
+        w: WMux::Zero,
+    };
+
+    /// Accumulate C into P (plain accumulator): P = P + C.
+    pub const C_ACC: OpMode = OpMode {
+        x: XMux::Zero,
+        y: YMux::C,
+        z: ZMux::P,
+        w: WMux::Zero,
+    };
+
+    /// Encode to the 9-bit OPMODE bus (for waveform dumps / debugging).
+    pub fn encode(self) -> u16 {
+        let x = match self.x {
+            XMux::Zero => 0b00,
+            XMux::M => 0b01,
+            XMux::P => 0b10,
+            XMux::Ab => 0b11,
+        };
+        let y = match self.y {
+            YMux::Zero => 0b00,
+            YMux::M => 0b01,
+            YMux::AllOnes => 0b10,
+            YMux::C => 0b11,
+        };
+        let z = match self.z {
+            ZMux::Zero => 0b000,
+            ZMux::Pcin => 0b001,
+            ZMux::P => 0b010,
+            ZMux::C => 0b011,
+            ZMux::PShift17 => 0b100,
+            ZMux::PcinShift17 => 0b101,
+        };
+        let w = match self.w {
+            WMux::Zero => 0b00,
+            WMux::P => 0b01,
+            WMux::Rnd => 0b10,
+            WMux::C => 0b11,
+        };
+        (w << 7) | (z << 4) | (y << 2) | x
+    }
+}
+
+/// ALUMODE (restricted to the two arithmetic modes engines use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AluMode {
+    /// `Z + W + X + Y + CIN` (ALUMODE = 0000).
+    #[default]
+    Add,
+    /// `Z − (W + X + Y + CIN)` (ALUMODE = 0011).
+    ZMinus,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inmode_bits_decode() {
+        let m = InMode(0b10101);
+        assert!(m.use_a1());
+        assert!(!m.gate_a());
+        assert!(m.d_enable());
+        assert!(!m.preadd_sub());
+        assert!(m.use_b1());
+    }
+
+    #[test]
+    fn inmode_builders() {
+        let m = InMode::A2_B2.with_d().with_b1(true);
+        assert!(m.d_enable() && m.use_b1());
+        assert!(!m.with_b1(false).use_b1());
+    }
+
+    #[test]
+    fn opmode_encodings_match_ug579() {
+        assert_eq!(OpMode::MULT.encode(), 0b00_000_01_01);
+        assert_eq!(OpMode::MACC.encode(), 0b00_010_01_01);
+        assert_eq!(OpMode::MULT_CASCADE.encode(), 0b00_001_01_01);
+        assert_eq!(OpMode::C_CASCADE.encode(), 0b00_001_11_00);
+    }
+}

@@ -1,0 +1,138 @@
+//! SIMD-partitioned 48-bit ALU addition/subtraction.
+//!
+//! In TWO24 / FOUR12 modes the carry chain is cut at the lane
+//! boundaries: each lane is an independent two's-complement adder. The
+//! engines rely on this for the ring accumulator (TWO24: two packed
+//! partial-sum lanes accumulate without interfering) and the FireFly
+//! crossbar (FOUR12).
+
+use super::attributes::SimdMode;
+use super::truncate;
+
+/// Lane-partitioned `a + b` (or `a - b`) over the 48-bit ALU.
+///
+/// `subtract` implements the Z − (...) form: `a` is the Z operand and
+/// `b` the combined W+X+Y operand, matching [`super::AluMode::ZMinus`].
+#[inline(always)]
+pub fn simd_add(mode: SimdMode, a: i64, b: i64, subtract: bool) -> i64 {
+    match mode {
+        SimdMode::One48 => {
+            let r = if subtract { a.wrapping_sub(b) } else { a.wrapping_add(b) };
+            truncate(r, 48)
+        }
+        SimdMode::Two24 => lanes(a, b, subtract, 24),
+        SimdMode::Four12 => lanes(a, b, subtract, 12),
+    }
+}
+
+fn lanes(a: i64, b: i64, subtract: bool, width: u32) -> i64 {
+    let n = 48 / width;
+    let mask = (1i64 << width) - 1;
+    let mut out = 0i64;
+    for i in 0..n {
+        let sh = width * i;
+        let la = (a >> sh) & mask;
+        let lb = (b >> sh) & mask;
+        let r = if subtract { la.wrapping_sub(lb) } else { la.wrapping_add(lb) };
+        out |= (r & mask) << sh;
+    }
+    truncate(out, 48)
+}
+
+/// Extract lane `i` of a SIMD word as a signed value.
+pub fn simd_lane(mode: SimdMode, word: i64, i: usize) -> i64 {
+    let width = match mode {
+        SimdMode::One48 => 48,
+        SimdMode::Two24 => 24,
+        SimdMode::Four12 => 12,
+    };
+    let n = (48 / width) as usize;
+    assert!(i < n, "lane {i} out of range for {mode:?}");
+    truncate(word >> (width * i as u32), width)
+}
+
+/// Pack signed lane values into a SIMD word (inverse of [`simd_lane`]).
+pub fn simd_pack(mode: SimdMode, lanes: &[i64]) -> i64 {
+    let width = match mode {
+        SimdMode::One48 => 48,
+        SimdMode::Two24 => 24,
+        SimdMode::Four12 => 12,
+    };
+    let n = (48 / width) as usize;
+    assert_eq!(lanes.len(), n);
+    let mask = (1i64 << width) - 1;
+    let mut out = 0i64;
+    for (i, &v) in lanes.iter().enumerate() {
+        debug_assert!(
+            truncate(v, width) == v,
+            "lane value {v} does not fit {width} bits"
+        );
+        out |= (v & mask) << (width * i as u32);
+    }
+    truncate(out, 48)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    #[test]
+    fn one48_wraps_at_48_bits() {
+        let max = (1i64 << 47) - 1;
+        assert_eq!(simd_add(SimdMode::One48, max, 1, false), -(1i64 << 47));
+    }
+
+    #[test]
+    fn two24_lanes_independent() {
+        // Lane 0 overflow must not carry into lane 1.
+        let a = simd_pack(SimdMode::Two24, &[(1 << 23) - 1, 5]);
+        let b = simd_pack(SimdMode::Two24, &[1, 7]);
+        let r = simd_add(SimdMode::Two24, a, b, false);
+        assert_eq!(simd_lane(SimdMode::Two24, r, 0), -(1 << 23)); // wrapped
+        assert_eq!(simd_lane(SimdMode::Two24, r, 1), 12); // exact
+    }
+
+    #[test]
+    fn four12_matches_scalar_lanes() {
+        let mut rng = XorShift::new(11);
+        for _ in 0..10_000 {
+            let av: Vec<i64> = (0..4).map(|_| rng.next_i8() as i64 * 8).collect();
+            let bv: Vec<i64> = (0..4).map(|_| rng.next_i8() as i64).collect();
+            let a = simd_pack(SimdMode::Four12, &av);
+            let b = simd_pack(SimdMode::Four12, &bv);
+            let r = simd_add(SimdMode::Four12, a, b, false);
+            for i in 0..4 {
+                let expect = truncate(av[i] + bv[i], 12);
+                assert_eq!(simd_lane(SimdMode::Four12, r, i), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn subtract_is_z_minus() {
+        let a = simd_pack(SimdMode::Two24, &[100, -50]);
+        let b = simd_pack(SimdMode::Two24, &[30, -20]);
+        let r = simd_add(SimdMode::Two24, a, b, true);
+        assert_eq!(simd_lane(SimdMode::Two24, r, 0), 70);
+        assert_eq!(simd_lane(SimdMode::Two24, r, 1), -30);
+    }
+
+    #[test]
+    fn pack_lane_roundtrip_random() {
+        let mut rng = XorShift::new(12);
+        for _ in 0..10_000 {
+            let v = truncate(rng.next_u64() as i64, 48);
+            for mode in [SimdMode::One48, SimdMode::Two24, SimdMode::Four12] {
+                let n = match mode {
+                    SimdMode::One48 => 1,
+                    SimdMode::Two24 => 2,
+                    SimdMode::Four12 => 4,
+                };
+                let lanes: Vec<i64> =
+                    (0..n).map(|i| simd_lane(mode, v, i)).collect();
+                assert_eq!(simd_pack(mode, &lanes), v);
+            }
+        }
+    }
+}

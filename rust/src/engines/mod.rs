@@ -1,0 +1,122 @@
+//! Systolic matrix engines: the paper's designs and all its baselines.
+//!
+//! | module | dataflow | designs (paper table) |
+//! |--------|----------|------------------------|
+//! | [`ws`] | weight-stationary, TPUv1-like | tinyTPU, Libano, CLB-Fetch, DSP-Fetch (Table I) |
+//! | [`os`] | output-stationary, DPU-like | DPUCZDX8G B1024 replicate, enhanced (in-DSP mux + ring accumulator) (Table II) |
+//! | [`snn`] | spiking crossbar, FireFly-like | FireFly, enhanced (in-DSP prefetch) (Table III) |
+//!
+//! Every engine is **cycle-accurate over bit-accurate DSP48E2 cells**:
+//! the arithmetic of `run_gemm` flows through [`crate::dsp::Dsp48e2`]
+//! datapaths (pre-adder packing, PCIN cascades, SIMD lanes), so a wrong
+//! pipeline assumption produces wrong *values*, not just wrong cycle
+//! counts. Structural cost comes from [`Engine::inventory`].
+
+pub mod os;
+pub mod snn;
+pub mod ws;
+
+use crate::cost::{PowerModel, ResourceInventory, TableRow, TimingModel};
+use crate::fabric::ClockPlan;
+use crate::packing::GuardOverflow;
+use crate::workload::{MatI32, MatI8};
+
+/// Cycle-level statistics of one engine run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Slow-domain (fabric) cycles elapsed.
+    pub cycles: u64,
+    /// Fast-domain (DSP) cycles elapsed (== `cycles` for single-clock).
+    pub fast_cycles: u64,
+    /// Multiply-accumulate operations performed.
+    pub macs: u64,
+    /// Cycles the array stalled waiting for weights.
+    pub weight_stall_cycles: u64,
+    /// Weight-tile swaps performed.
+    pub weight_loads: u64,
+    /// Guard-band overflows detected (packed cascades).
+    pub guard_overflows: u64,
+}
+
+impl RunStats {
+    /// Achieved MACs per slow cycle divided by the given peak.
+    pub fn utilization(&self, peak_macs_per_cycle: u64) -> f64 {
+        if self.cycles == 0 || peak_macs_per_cycle == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (self.cycles as f64 * peak_macs_per_cycle as f64)
+    }
+
+    /// Achieved MACs per slow cycle.
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.cycles as f64
+        }
+    }
+}
+
+/// Result of a GEMM run: the output and its cycle accounting.
+#[derive(Debug, Clone)]
+pub struct GemmRun {
+    pub output: MatI32,
+    pub stats: RunStats,
+}
+
+impl GemmRun {
+    /// MAC utilization against the engine peak.
+    pub fn mac_utilization_vs(&self, peak: u64) -> f64 {
+        self.stats.utilization(peak)
+    }
+}
+
+/// Engine-level failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// Problem shape incompatible with the array geometry.
+    Shape(String),
+    /// A packed cascade left the guard band under `strict_guard`.
+    Guard(GuardOverflow),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Shape(s) => write!(f, "shape error: {s}"),
+            EngineError::Guard(g) => write!(f, "guard-band error: {g}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// A systolic matrix engine: functional (cycle-accurate GEMM) plus
+/// structural (inventory / timing / power) views.
+pub trait Engine {
+    /// Display name (matches the paper's table row labels).
+    fn name(&self) -> &str;
+
+    /// Structural resource inventory (activities updated after runs).
+    fn inventory(&self) -> ResourceInventory;
+
+    /// Candidate critical paths + constraint clock.
+    fn timing(&self) -> TimingModel;
+
+    /// The clock plan (single or Clk×1/Clk×2).
+    fn clock_plan(&self) -> ClockPlan;
+
+    /// Peak MACs per slow-domain cycle.
+    fn peak_macs_per_cycle(&self) -> u64;
+
+    /// Execute `a (M×K) @ w (K×N)` cycle-accurately.
+    fn run_gemm(&mut self, a: &MatI8, w: &MatI8) -> Result<GemmRun, EngineError>;
+
+    /// The paper-style evaluation row for this engine.
+    fn table_row(&self) -> TableRow {
+        let inv = self.inventory();
+        let timing = self.timing().report();
+        let power = PowerModel::default().estimate(&inv, self.clock_plan());
+        TableRow::from_models(self.name(), &inv, &timing, &power)
+    }
+}

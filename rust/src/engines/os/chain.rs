@@ -1,0 +1,213 @@
+//! A fast-clock DSP48E2 multiplier chain (one DPU inner-product lane).
+//!
+//! `chain_len` slices cascade over PCIN; every slice packs two pixels
+//! through the pre-adder (A = hi·2¹⁸, D = lo) and multiplies by its
+//! input channel's weight. Weight delivery differs by variant:
+//!
+//! * **Enhanced** (in-DSP multiplexing): B1/B2 hold the two output
+//!   channels' weights, reloaded via the B2-direct input mux on
+//!   dedicated edges (one weight per slow cycle — half the official
+//!   bandwidth), INMODE[4] alternating each fast cycle.
+//! * **Official** (CLB DDR mux): a fabric [`LutMux`] drives the B port
+//!   every fast cycle with the alternating weight (two weights per slow
+//!   cycle — the doubled-bandwidth drawback).
+//!
+//! The chain is pure datapath; the engine owns the edge schedule and
+//! output tagging (see `engine.rs`).
+
+use super::OsVariant;
+use crate::dsp::{Attributes, Dsp48e2, DspInputs, InMode, OpMode};
+use crate::fabric::{ClockDomain, LutMux};
+
+/// One multiplier chain.
+pub struct MultChain {
+    dsps: Vec<Dsp48e2>,
+    /// Official-variant DDR weight mux (one 8-bit 2:1 LUT mux per chain
+    /// pair in the inventory; modeled per chain here for activity).
+    mux: Option<LutMux>,
+}
+
+/// Per-edge drive for one chain (engine-provided).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChainDrive {
+    /// A-port value per slice is identical in *form*: hi pixel << 18.
+    /// The engine passes per-slice values via the callback instead when
+    /// input channels differ (always, in practice) — this struct carries
+    /// the shared controls.
+    pub use_b1: bool,
+    /// Load B1 from the weight bus this edge (enhanced).
+    pub ceb1: bool,
+    /// Load B2 (direct input mux) from the weight bus this edge.
+    pub ceb2: bool,
+}
+
+impl MultChain {
+    pub fn new(variant: OsVariant, chain_len: usize) -> Self {
+        let attrs = match variant {
+            OsVariant::Enhanced => Attributes::os_inmux_pe(),
+            // Official: B arrives from the CLB mux every fast cycle;
+            // single B register (B2 direct), same A/D packing pipeline.
+            OsVariant::Official => Attributes {
+                breg: 1,
+                amultsel: crate::dsp::MultSel::Ad,
+                dreg: true,
+                adreg: true,
+                ..Attributes::default()
+            },
+        };
+        MultChain {
+            dsps: (0..chain_len).map(|_| Dsp48e2::new(attrs)).collect(),
+            mux: match variant {
+                OsVariant::Official => Some(LutMux::new(8, ClockDomain::Fast)),
+                OsVariant::Enhanced => None,
+            },
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dsps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dsps.is_empty()
+    }
+
+    /// One fast edge. `per_slice(j)` returns the slice's controls and
+    /// `(a_port, d_port, b_bus)` operands. Controls are per-slice
+    /// because the PCIN cascade adds one register stage per position:
+    /// slice `j` runs the shared schedule delayed by `j` edges (the
+    /// DPU's per-position staging registers).
+    ///
+    /// For the official variant the `b_bus` value is what the CLB mux
+    /// outputs this edge (the engine sequences the DDR alternation;
+    /// activity is counted here). The official multiplier always reads
+    /// B2 (single B register); only the enhanced design toggles
+    /// INMODE[4].
+    pub fn tick(
+        &mut self,
+        mut per_slice: impl FnMut(usize) -> (ChainDrive, i64, i64, i64),
+    ) {
+        let pcouts: Vec<i64> = self.dsps.iter().map(|d| d.pcout()).collect();
+        let official = self.mux.is_some();
+        for (j, dsp) in self.dsps.iter_mut().enumerate() {
+            let (drive, a, d, b_bus) = per_slice(j);
+            let b = if let Some(mux) = self.mux.as_mut() {
+                mux.select(drive.use_b1, b_bus, b_bus)
+            } else {
+                b_bus
+            };
+            let use_b1 = if official { false } else { drive.use_b1 };
+            let inmode = InMode::A2_B2.with_d().with_b1(use_b1);
+            let opmode = if j == 0 {
+                OpMode::MULT
+            } else {
+                OpMode::MULT_CASCADE
+            };
+            dsp.tick(&DspInputs {
+                a,
+                d,
+                b,
+                pcin: if j == 0 { 0 } else { pcouts[j - 1] },
+                inmode,
+                opmode,
+                ceb1: drive.ceb1,
+                ceb2: drive.ceb2,
+                ..DspInputs::default()
+            });
+        }
+    }
+
+    /// The cascade tail's P register (post-edge).
+    pub fn tail_p(&self) -> i64 {
+        self.dsps.last().expect("chain is non-empty").p()
+    }
+
+    /// Pipeline latency from an A-port sample to the tail P:
+    /// A1, A2, AD, M, P = 4 edges, plus one per extra cascade stage.
+    pub fn latency(&self) -> usize {
+        4 + (self.dsps.len() - 1)
+    }
+
+    pub fn reset(&mut self) {
+        for d in &mut self.dsps {
+            d.reset();
+        }
+    }
+
+    /// Observed B-register state (debug/waveform).
+    pub fn b_regs(&self, j: usize) -> (i64, i64) {
+        let r = self.dsps[j].regs();
+        (r.b1, r.b2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Constant operands through an enhanced chain: tail must converge
+    /// to the packed dot product across slices.
+    #[test]
+    fn enhanced_chain_accumulates_dot() {
+        let len = 3;
+        let mut chain = MultChain::new(OsVariant::Enhanced, len);
+        // Load both weight regs with the same value per slice first.
+        let w = [5i64, -3, 7];
+        // Two setup edges: CEB2 (direct) then CEB1.
+        for (ceb1, ceb2) in [(false, true), (true, false)] {
+            chain.tick(|j| {
+                (
+                    ChainDrive {
+                        use_b1: false,
+                        ceb1,
+                        ceb2,
+                    },
+                    0,
+                    0,
+                    w[j],
+                )
+            });
+        }
+        // Stream constant packed pixels (hi=2, lo=1).
+        let a = 2i64 << 18;
+        let d = 1i64;
+        for _ in 0..16 {
+            chain.tick(|_| {
+                (
+                    ChainDrive {
+                        use_b1: false,
+                        ceb1: false,
+                        ceb2: false,
+                    },
+                    a,
+                    d,
+                    0,
+                )
+            });
+        }
+        let (hi, lo) = crate::packing::unpack_prod(chain.tail_p());
+        let dot: i64 = w.iter().sum();
+        assert_eq!(hi, 2 * dot);
+        assert_eq!(lo, dot);
+    }
+
+    #[test]
+    fn b1_b2_hold_different_weights() {
+        let mut chain = MultChain::new(OsVariant::Enhanced, 1);
+        // CEB2 edge loads B2 directly; CEB1 edge loads B1 — different
+        // values, neither disturbing the other (the in-DSP mux setup).
+        chain.tick(|_| {
+            (ChainDrive { use_b1: false, ceb1: false, ceb2: true }, 0, 0, 11)
+        });
+        chain.tick(|_| {
+            (ChainDrive { use_b1: false, ceb1: true, ceb2: false }, 0, 0, 22)
+        });
+        assert_eq!(chain.b_regs(0), (22, 11));
+    }
+
+    #[test]
+    fn latency_formula() {
+        let chain = MultChain::new(OsVariant::Enhanced, 4);
+        assert_eq!(chain.latency(), 7);
+    }
+}

@@ -1,0 +1,518 @@
+//! The OS engine: pass/round orchestration over chains + accumulators.
+//!
+//! ## Edge schedule (one pass)
+//!
+//! A *pass* fixes a pixel block (`px_groups * 4` pixels) and an output-channel block
+//! (`ocs()` channels) and streams all of K through the chains in
+//! *rounds* of `ics_per_round()/2 = ic_groups × chain_len` input
+//! channels per 4 fast edges (2 slow cycles). Within round `r`
+//! (edges `4r .. 4r+3`, φ = edge mod 4):
+//!
+//! * **activations**: wave 0 (pixel pair 0) rides φ0/φ1, wave 1 rides
+//!   φ2/φ3; the A port takes the hi pixel (<<18), the D port the lo
+//!   pixel one edge later (D has one register stage vs A's two).
+//! * **weights** (enhanced): CEB1 on φ2 loads next round's oc₁ weight,
+//!   CEB2 (B2-direct mux) on φ3 loads oc₀ — one weight per slow cycle
+//!   per slice, *half* the official bandwidth; INMODE[4] alternates
+//!   every edge. Official: the CLB mux drives B every edge (two weights
+//!   per slow cycle).
+//! * **products**: M-captures at edge `m` map to
+//!   `(wave, oc, round) = tag(m)` (see [`tag_of_m`]); the chain tail P
+//!   word for `m` appears `len` edges later.
+//! * **accumulation**: enhanced routes tail words into the per-chain-
+//!   pair [`RingAccumulator`] (chain B delayed two edges per the ring
+//!   contract); official behaviorally models AddTree + S2P + two slow
+//!   ONE48 accumulator DSPs per chain.
+//!
+//! Chain depth ≤ 7 keeps every packed cascade inside the guard band, so
+//! the OS engines are exact for all INT8 inputs (the 24-bit ring lanes
+//! bound K per pass instead — see `max_k_per_pass`).
+
+use super::inventory::{os_inventory, os_timing};
+use super::ring::{respace_to_two24, two24_lanes, RingAccumulator};
+use super::{chain::ChainDrive, MultChain, OsConfig, OsVariant};
+use crate::cost::{ResourceInventory, TimingModel};
+use crate::engines::{Engine, EngineError, GemmRun, RunStats};
+use crate::fabric::ClockPlan;
+use crate::packing;
+use crate::workload::{MatI32, MatI8};
+
+/// Product tag: which (wave, oc-parity, round) an M-capture belongs to.
+///
+/// M edges for round r are `4r+3 .. 4r+6`; parity of the edge selects
+/// the weight register (odd → B1 → oc₁).
+fn tag_of_m(m: usize) -> Option<(usize, usize, usize)> {
+    if m < 3 {
+        return None;
+    }
+    let q = m - 3;
+    let r = q / 4;
+    let (wave, oc) = match q % 4 {
+        0 => (0, 1),
+        1 => (0, 0),
+        2 => (1, 1),
+        _ => (1, 0),
+    };
+    Some((wave, oc, r))
+}
+
+/// An output-stationary matrix engine (official DPU replicate or the
+/// paper's enhanced design).
+pub struct OsEngine {
+    cfg: OsConfig,
+    name: String,
+    /// Chains indexed `[g * oc_pairs * ic_groups + o * ic_groups + i]`.
+    chains: Vec<MultChain>,
+    /// Enhanced: one ring per (g, o) chain pair.
+    rings: Vec<RingAccumulator>,
+    /// Per-chain 1-edge D-port delay (per slice).
+    d_delay: Vec<Vec<i64>>,
+    /// Per-ring 2-edge chain-B word buffer.
+    tailb_buf: Vec<[i64; 2]>,
+}
+
+impl OsEngine {
+    pub fn new(cfg: OsConfig) -> Self {
+        assert!(
+            cfg.chain_len <= packing::GUARD_DEPTH,
+            "chain_len {} would overflow the packed guard band",
+            cfg.chain_len
+        );
+        let n_chains = cfg.chains();
+        let n_pairs = cfg.px_groups * cfg.oc_pairs;
+        OsEngine {
+            name: format!("DPU-{} {}", cfg.variant.label(), b_tag(&cfg)),
+            chains: (0..n_chains)
+                .map(|_| MultChain::new(cfg.variant, cfg.chain_len))
+                .collect(),
+            rings: match cfg.variant {
+                OsVariant::Enhanced => {
+                    (0..n_pairs).map(|_| RingAccumulator::new(0)).collect()
+                }
+                OsVariant::Official => Vec::new(),
+            },
+            d_delay: (0..n_chains).map(|_| vec![0; cfg.chain_len]).collect(),
+            tailb_buf: vec![[0; 2]; n_pairs],
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &OsConfig {
+        &self.cfg
+    }
+
+    /// Largest K one pass can accumulate without risking the 24-bit
+    /// ring lanes (enhanced) for worst-case INT8 data. The coordinator
+    /// splits larger K across passes. (official: 32-bit slots, no bound
+    /// below i32 for practical K).
+    pub fn max_k_per_pass(&self) -> usize {
+        match self.cfg.variant {
+            // |psum per round| <= chain_len * ic_groups * 2^14; lane
+            // headroom 2^23.
+            OsVariant::Enhanced => {
+                let per_round = self.cfg.chain_len * self.cfg.ic_groups;
+                ((1usize << 23) / ((per_round) << 14)) * per_round * 2
+            }
+            OsVariant::Official => usize::MAX,
+        }
+    }
+
+    fn chain_idx(&self, g: usize, o: usize, i: usize) -> usize {
+        (g * self.cfg.oc_pairs + o) * self.cfg.ic_groups + i
+    }
+
+    fn pair_idx(&self, g: usize, o: usize) -> usize {
+        g * self.cfg.oc_pairs + o
+    }
+
+    /// Run one pass: pixel block `pb` (8 pixels), oc block `ob`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_pass(
+        &mut self,
+        a: &MatI8,
+        w: &MatI8,
+        pb: usize,
+        ob: usize,
+        rounds: usize,
+        out: &mut MatI32,
+        stats: &mut RunStats,
+    ) {
+        let cfg = self.cfg;
+        let len = cfg.chain_len;
+        let ics_round = cfg.ic_groups * len;
+        // Reset sequential state (new stationary outputs).
+        for ch in &mut self.chains {
+            ch.reset();
+        }
+        for ring in &mut self.rings {
+            ring.reset();
+        }
+        for d in &mut self.d_delay {
+            d.iter_mut().for_each(|v| *v = 0);
+        }
+        for b in &mut self.tailb_buf {
+            *b = [0; 2];
+        }
+
+        // Behavioral slots for the official accumulators:
+        // [pair][wave][lane][oc] (lane 0 = hi pixel, 1 = lo pixel).
+        let mut slots =
+            vec![[[[0i64; 2]; 2]; 2]; cfg.px_groups * cfg.oc_pairs];
+
+        let at = |row: usize, col: usize| -> i64 {
+            if row < a.rows && col < a.cols {
+                a.at(row, col) as i64
+            } else {
+                0
+            }
+        };
+        let wt = |row: usize, col: usize| -> i64 {
+            if row < w.rows && col < w.cols {
+                w.at(row, col) as i64
+            } else {
+                0
+            }
+        };
+
+        let last_m = 4 * rounds + 2; // final M edge = 4(R-1)+6
+        let total_edges = last_m + len + 4; // tail + ring margin
+
+        for e in 0..total_edges {
+            // --- tick every chain -----------------------------------
+            // Slice j runs the shared schedule delayed by j edges (the
+            // cascade adds one register stage per position), so every
+            // per-slice quantity below derives from ej = e - j.
+            for g in 0..cfg.px_groups {
+                for o in 0..cfg.oc_pairs {
+                    for i in 0..cfg.ic_groups {
+                        let ci = self.chain_idx(g, o, i);
+                        // §Perf: swap the per-chain D-delay line out
+                        // instead of cloning it every edge (the values
+                        // are overwritten below anyway).
+                        let d_prev = std::mem::take(&mut self.d_delay[ci]);
+                        let mut d_next = vec![0i64; len];
+                        let chain = &mut self.chains[ci];
+                        chain.tick(|j| {
+                            let Some(ej) = e.checked_sub(j) else {
+                                return (ChainDrive::default(), 0, 0, 0);
+                            };
+                            let phi = ej % 4;
+                            let r = ej / 4;
+                            let wave = phi / 2;
+                            let use_b1 = ej % 2 == 1;
+                            let feeding = ej < 4 * rounds;
+                            let px_hi = pb * cfg.px_groups * 4 + g * 4 + wave * 2;
+                            let ic = r * ics_round + i * len + j;
+                            let (a_port, d_now) = if feeding {
+                                (at(px_hi, ic) << 18, at(px_hi + 1, ic))
+                            } else {
+                                (0, 0)
+                            };
+                            d_next[j] = d_now;
+                            let (ceb1, ceb2, b_bus) = match cfg.variant {
+                                OsVariant::Enhanced => {
+                                    // ej%4 == 2 -> load oc1 into B1;
+                                    // ej%4 == 3 -> load oc0 into B2.
+                                    if feeding && phi == 2 {
+                                        (true, false, wt(ic, ob * cfg.ocs() + 2 * o + 1))
+                                    } else if feeding && phi == 3 {
+                                        (false, true, wt(ic, ob * cfg.ocs() + 2 * o))
+                                    } else {
+                                        (false, false, 0)
+                                    }
+                                }
+                                OsVariant::Official => {
+                                    // Reload B2 every edge with the
+                                    // weight the next M-capture needs.
+                                    let m = ej + 1;
+                                    let b = match tag_of_m(m) {
+                                        Some((_, oc, mr)) if mr < rounds => {
+                                            let ic_m = mr * ics_round + i * len + j;
+                                            wt(ic_m, ob * cfg.ocs() + 2 * o + oc)
+                                        }
+                                        _ => 0,
+                                    };
+                                    (false, true, b)
+                                }
+                            };
+                            (
+                                ChainDrive { use_b1, ceb1, ceb2 },
+                                a_port,
+                                d_prev[j],
+                                b_bus,
+                            )
+                        });
+                        self.d_delay[ci] = d_next;
+                    }
+                }
+            }
+
+            // --- route tail words into accumulators ------------------
+            for g in 0..cfg.px_groups {
+                for o in 0..cfg.oc_pairs {
+                    let pi = self.pair_idx(g, o);
+                    let tail_a =
+                        self.chains[self.chain_idx(g, o, 0)].tail_p();
+                    let tail_b = if cfg.ic_groups > 1 {
+                        self.chains[self.chain_idx(g, o, 1)].tail_p()
+                    } else {
+                        0
+                    };
+                    let m = e.checked_sub(len);
+                    let valid_tag = m.and_then(tag_of_m).filter(|t| t.2 < rounds);
+
+                    match cfg.variant {
+                        OsVariant::Enhanced => {
+                            // Ring: chain A now, chain B two edges later.
+                            let wa = if valid_tag.is_some() {
+                                respace_to_two24(tail_a)
+                            } else {
+                                0
+                            };
+                            let buf = self.tailb_buf[pi];
+                            let wb = buf[1];
+                            self.tailb_buf[pi] = [
+                                if valid_tag.is_some() {
+                                    respace_to_two24(tail_b)
+                                } else {
+                                    0
+                                },
+                                buf[0],
+                            ];
+                            self.rings[pi].tick(wa, wb);
+                            // Capture final-round streams as they
+                            // complete: the stream whose last chain-B
+                            // word entered THIS edge.
+                            if let Some(mb) = e.checked_sub(len + 2) {
+                                if let Some((wv, oc, rr)) = tag_of_m(mb) {
+                                    if rr == rounds - 1 {
+                                        let (lo, hi) =
+                                            two24_lanes(self.rings[pi].output());
+                                        slots[pi][wv][0][oc] = hi;
+                                        slots[pi][wv][1][oc] = lo;
+                                    }
+                                }
+                            }
+                        }
+                        OsVariant::Official => {
+                            // AddTree combines the pair, lanes unpacked
+                            // with correction, slow accumulators add.
+                            if let Some((wv, oc, _)) = valid_tag {
+                                let word = tail_a + tail_b;
+                                let (hi, lo) = packing::unpack_prod(word);
+                                slots[pi][wv][0][oc] += hi;
+                                slots[pi][wv][1][oc] += lo;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- drain slots into the output matrix -------------------------
+        for g in 0..cfg.px_groups {
+            for o in 0..cfg.oc_pairs {
+                let pi = self.pair_idx(g, o);
+                for wv in 0..2 {
+                    for lane in 0..2 {
+                        let px = pb * cfg.px_groups * 4 + g * 4 + wv * 2 + lane;
+                        if px >= a.rows {
+                            continue;
+                        }
+                        for oc in 0..2 {
+                            let n = ob * cfg.ocs() + 2 * o + oc;
+                            if n >= w.cols {
+                                continue;
+                            }
+                            out.set(px, n, slots[pi][wv][lane][oc] as i32);
+                            stats.macs += a.cols as u64;
+                        }
+                    }
+                }
+            }
+        }
+
+        stats.fast_cycles += total_edges as u64;
+        stats.cycles += total_edges.div_ceil(2) as u64;
+        stats.weight_loads += rounds as u64;
+    }
+}
+
+fn b_tag(cfg: &OsConfig) -> String {
+    format!("B{}", cfg.peak_macs() * 2)
+}
+
+impl Engine for OsEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn inventory(&self) -> ResourceInventory {
+        os_inventory(&self.cfg)
+    }
+
+    fn timing(&self) -> TimingModel {
+        os_timing(&self.cfg)
+    }
+
+    fn clock_plan(&self) -> ClockPlan {
+        self.cfg.clock_plan()
+    }
+
+    fn peak_macs_per_cycle(&self) -> u64 {
+        self.cfg.peak_macs()
+    }
+
+    fn run_gemm(&mut self, a: &MatI8, w: &MatI8) -> Result<GemmRun, EngineError> {
+        if a.cols != w.rows {
+            return Err(EngineError::Shape(format!(
+                "inner dims disagree: {} vs {}",
+                a.cols, w.rows
+            )));
+        }
+        let k_cap = self.max_k_per_pass();
+        if a.cols > k_cap {
+            return Err(EngineError::Shape(format!(
+                "K={} exceeds the 24-bit ring budget ({k_cap}); tile K",
+                a.cols
+            )));
+        }
+        let cfg = self.cfg;
+        let mut out = MatI32::zeros(a.rows, w.cols);
+        let mut stats = RunStats::default();
+        let rounds = a.cols.div_ceil(cfg.ic_groups * cfg.chain_len).max(1);
+        let px_blocks = a.rows.div_ceil(cfg.px_groups * 4).max(1);
+        let oc_blocks = w.cols.div_ceil(cfg.ocs()).max(1);
+        for pb in 0..px_blocks {
+            for ob in 0..oc_blocks {
+                self.run_pass(a, w, pb, ob, rounds, &mut out, &mut stats);
+            }
+        }
+        Ok(GemmRun { output: out, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+    use crate::workload::gemm::{golden_gemm, GemmProblem};
+
+    #[test]
+    fn tag_table() {
+        assert_eq!(tag_of_m(3), Some((0, 1, 0)));
+        assert_eq!(tag_of_m(4), Some((0, 0, 0)));
+        assert_eq!(tag_of_m(5), Some((1, 1, 0)));
+        assert_eq!(tag_of_m(6), Some((1, 0, 0)));
+        assert_eq!(tag_of_m(7), Some((0, 1, 1)));
+        assert_eq!(tag_of_m(2), None);
+    }
+
+    fn check(cfg: OsConfig, m: usize, k: usize, n: usize, seed: u64) {
+        let mut eng = OsEngine::new(cfg);
+        let p = GemmProblem::random(m, n, k, seed);
+        let run = eng.run_gemm(&p.a, &p.w).unwrap();
+        assert_eq!(
+            run.output,
+            golden_gemm(&p.a, &p.w),
+            "{:?} m={m} k={k} n={n}",
+            cfg.variant
+        );
+    }
+
+    #[test]
+    fn enhanced_tiny_exact_single_pass() {
+        // tiny: ic_round = 6, ocs = 4, pixels block 8.
+        check(OsConfig::tiny(OsVariant::Enhanced), 8, 6, 4, 1);
+    }
+
+    #[test]
+    fn official_tiny_exact_single_pass() {
+        check(OsConfig::tiny(OsVariant::Official), 8, 6, 4, 2);
+    }
+
+    #[test]
+    fn multi_round_k() {
+        for v in [OsVariant::Enhanced, OsVariant::Official] {
+            check(OsConfig::tiny(v), 8, 30, 4, 3); // 5 rounds
+        }
+    }
+
+    #[test]
+    fn multi_block_m_and_n() {
+        for v in [OsVariant::Enhanced, OsVariant::Official] {
+            check(OsConfig::tiny(v), 20, 12, 10, 4); // 3 px blocks, 3 oc blocks
+        }
+    }
+
+    #[test]
+    fn ragged_everything() {
+        for v in [OsVariant::Enhanced, OsVariant::Official] {
+            check(OsConfig::tiny(v), 7, 11, 5, 5);
+            check(OsConfig::tiny(v), 1, 1, 1, 6);
+        }
+    }
+
+    #[test]
+    fn b1024_scale_exact() {
+        for v in [OsVariant::Enhanced, OsVariant::Official] {
+            check(OsConfig::b1024(v), 16, 32, 32, 7);
+        }
+    }
+
+    #[test]
+    fn k_cap_enforced_for_ring() {
+        let mut eng = OsEngine::new(OsConfig::tiny(OsVariant::Enhanced));
+        let cap = eng.max_k_per_pass();
+        let p = GemmProblem::random(8, 4, cap + 12, 8);
+        assert!(matches!(
+            eng.run_gemm(&p.a, &p.w),
+            Err(EngineError::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn throughput_accounting() {
+        let mut eng = OsEngine::new(OsConfig::b1024(OsVariant::Enhanced));
+        let p = GemmProblem::random(8, 16, 64, 9);
+        let run = eng.run_gemm(&p.a, &p.w).unwrap();
+        assert_eq!(run.stats.macs, 8 * 16 * 64);
+        // One pass: 8 rounds * 4 edges + margins; utilization sane.
+        let util = run.stats.utilization(eng.peak_macs_per_cycle());
+        assert!(util > 0.2, "util {util}");
+        assert!(util <= 1.0);
+    }
+
+    #[test]
+    fn deterministic_rerun() {
+        let mut eng = OsEngine::new(OsConfig::tiny(OsVariant::Enhanced));
+        let p = GemmProblem::random(8, 4, 12, 10);
+        let a = eng.run_gemm(&p.a, &p.w).unwrap();
+        let b = eng.run_gemm(&p.a, &p.w).unwrap();
+        assert_eq!(a.output, b.output);
+    }
+
+    /// Weight-bandwidth claim (paper §V-B): per slice, the enhanced
+    /// engine loads one weight per slow cycle; the official needs two.
+    #[test]
+    fn weight_bandwidth_halved() {
+        // Structural: enhanced loads on 2 of 4 edges (φ2, φ3) per round;
+        // official reloads every edge. Verified against the schedule
+        // constants rather than a counter: 2 loads / 2 slow cycles vs
+        // 4 loads / 2 slow cycles.
+        let enhanced_loads_per_round = 2;
+        let official_loads_per_round = 4;
+        assert_eq!(enhanced_loads_per_round * 2, official_loads_per_round);
+    }
+
+    #[test]
+    fn worst_case_values_exact_short_chain() {
+        // chain_len <= 7 keeps the packed cascade exact even for the
+        // adversarial all--128 case.
+        let mut eng = OsEngine::new(OsConfig::tiny(OsVariant::Enhanced));
+        let a = MatI8::from_fn(8, 6, |_, _| -128);
+        let w = MatI8::from_fn(6, 4, |_, _| -128);
+        let run = eng.run_gemm(&a, &w).unwrap();
+        assert_eq!(run.output, golden_gemm(&a, &w));
+    }
+}

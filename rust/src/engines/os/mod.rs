@@ -1,0 +1,169 @@
+//! Output-stationary (Vitis-AI-DPU-like) systolic engines — paper §V,
+//! Table II.
+//!
+//! ## The DPUCZDX8G B1024 structure (as reverse-engineered in §V)
+//!
+//! The engine is a grid of fast-clock DSP48E2 *chains* computing vector
+//! inner products, organized along three parallelism axes:
+//!
+//! * **pixel parallelism** — two pixels ride the pre-adder INT8 packing
+//!   (one wide multiply = two MACs), and pixel *groups* replicate chains;
+//! * **input-channel parallelism** — `chain_len` DSPs cascade over PCIN,
+//!   and `ic_groups` chains are combined by the grouped partial-sum
+//!   adder (the official LUT AddTree / our ring accumulator);
+//! * **output-channel parallelism** — the DDR technique evaluates two
+//!   output channels per chain (weights alternate every fast cycle),
+//!   and `oc_pairs` chain columns replicate.
+//!
+//! B1024 = `px_groups=2 × ic_groups=2 × oc_pairs=8` = 32 chains of 4
+//! DSPs: 128 multiplier DSPs × 2 (packing) × 2 (DDR) = 512 MACs per
+//! slow cycle = 1024 ops.
+//!
+//! ## Official vs enhanced
+//!
+//! [`OsVariant::Official`] replicates the DPU: CLB LUT muxes feed the
+//! doubled-rate weights (drawbacks 1, 2), partial sums return to the
+//! slow domain via S2P flip-flops, LUT adder trees combine the
+//! ic-groups (drawback 4) and two slow SIMD=ONE48 accumulator DSPs per
+//! chain finish the job (drawback 3).
+//!
+//! [`OsVariant::Enhanced`] applies the paper's §V-B/§V-C techniques:
+//! **in-DSP multiplexing** (B1/B2 ping-pong + INMODE[4] toggling at
+//! Clk×2 — no CLB muxes, weight bandwidth halved) and the **ring
+//! accumulator** (two cascaded fast-clock DSPs in SIMD=TWO24 with the
+//! packing correction + bias folded into the W-mux RND constant,
+//! halving accumulator DSPs 64 → 32).
+
+mod chain;
+mod engine;
+mod inventory;
+mod ring;
+pub mod waveforms;
+
+pub use chain::MultChain;
+pub use engine::OsEngine;
+pub use inventory::{os_inventory, os_timing};
+pub use ring::RingAccumulator;
+
+use crate::fabric::ClockPlan;
+
+/// Which Table-II design to elaborate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OsVariant {
+    /// DPUCZDX8G replicate (CLB DDR mux + AddTree + slow accumulators).
+    Official,
+    /// In-DSP multiplexing + ring accumulator (the paper's design).
+    Enhanced,
+}
+
+impl OsVariant {
+    pub fn label(self) -> &'static str {
+        match self {
+            OsVariant::Official => "Official",
+            OsVariant::Enhanced => "Ours",
+        }
+    }
+}
+
+/// OS engine geometry + policy.
+#[derive(Debug, Clone, Copy)]
+pub struct OsConfig {
+    pub variant: OsVariant,
+    /// Output-channel chain columns (each covers 2 output channels).
+    pub oc_pairs: usize,
+    /// Pixel-group replicas (each covers 2 packed pixels).
+    pub px_groups: usize,
+    /// Input-channel groups combined per output (AddTree / ring).
+    pub ic_groups: usize,
+    /// DSPs per chain.
+    pub chain_len: usize,
+    /// Fast-domain clock (MHz); slow domain runs at half.
+    pub fast_mhz: f64,
+}
+
+impl OsConfig {
+    /// The paper's Table-II point: DPU B1024 on XCZU3EG at 333/666 MHz.
+    pub fn b1024(variant: OsVariant) -> Self {
+        OsConfig {
+            variant,
+            oc_pairs: 8,
+            px_groups: 2,
+            ic_groups: 2,
+            chain_len: 4,
+            fast_mhz: 666.0,
+        }
+    }
+
+    /// A small configuration for fast exhaustive testing.
+    pub fn tiny(variant: OsVariant) -> Self {
+        OsConfig {
+            variant,
+            oc_pairs: 2,
+            px_groups: 1,
+            ic_groups: 2,
+            chain_len: 3,
+            fast_mhz: 666.0,
+        }
+    }
+
+    pub fn chains(&self) -> usize {
+        self.oc_pairs * self.px_groups * self.ic_groups
+    }
+
+    /// Multiplier DSP count.
+    pub fn mult_dsps(&self) -> usize {
+        self.chains() * self.chain_len
+    }
+
+    /// Accumulator DSP count for this variant.
+    pub fn acc_dsps(&self) -> usize {
+        match self.variant {
+            OsVariant::Official => self.chains() * 2,
+            OsVariant::Enhanced => self.chains(), // 2 per ic-group pair
+        }
+    }
+
+    /// Pixels processed in parallel per slow cycle.
+    pub fn pixels(&self) -> usize {
+        self.px_groups * 2
+    }
+
+    /// Input channels consumed per accumulation round (2 slow cycles).
+    pub fn ics_per_round(&self) -> usize {
+        self.ic_groups * self.chain_len * 2
+    }
+
+    /// Output channels covered per pass.
+    pub fn ocs(&self) -> usize {
+        self.oc_pairs * 2
+    }
+
+    /// Peak MACs per slow cycle.
+    pub fn peak_macs(&self) -> u64 {
+        (self.mult_dsps() * 2 * 2) as u64
+    }
+
+    pub fn clock_plan(&self) -> ClockPlan {
+        ClockPlan {
+            slow_mhz: self.fast_mhz / 2.0,
+            fast_mhz: self.fast_mhz,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b1024_geometry_matches_paper() {
+        let cfg = OsConfig::b1024(OsVariant::Official);
+        assert_eq!(cfg.chains(), 32);
+        assert_eq!(cfg.mult_dsps(), 128);
+        assert_eq!(cfg.acc_dsps(), 64);
+        assert_eq!(cfg.peak_macs(), 512); // = B1024 / 2 ops
+        let ours = OsConfig::b1024(OsVariant::Enhanced);
+        assert_eq!(ours.acc_dsps(), 32); // halved
+        assert_eq!(ours.peak_macs(), 512); // same throughput
+    }
+}

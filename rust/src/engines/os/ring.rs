@@ -1,0 +1,276 @@
+//! The ring accumulator — paper §V-C, Fig. 6.
+//!
+//! Two cascaded DSP48E2s running at Clk×2 in SIMD=TWO24, closed into a
+//! ring by two fabric delay registers:
+//!
+//! ```text
+//!  chainA word ─► A:B │DSP a│ ─PCOUT─► │DSP b│ ◄─ C  chainB word
+//!  RND (bias)  ─► W   │     │          │     │
+//!       ▲             └─────┘          └──┬──┘
+//!       │ C (feedback, transparent)       │ P
+//!       └───── delay reg ◄─── delay reg ◄─┘
+//! ```
+//!
+//! Loop latency = DSP a (1) + DSP b (1) + two delay registers (2) = 4
+//! fast cycles, exactly matching the four interleaved partial-sum
+//! streams a chain pair produces per round — (wave₀·oc₀), (wave₀·oc₁),
+//! (wave₁·oc₀), (wave₁·oc₁). One two-DSP ring therefore replaces the
+//! official design's LUT adder tree + *four* slow accumulators per chain
+//! pair (AccDSP 64 → 32 at B1024), and the two delay registers double as
+//! the serial-to-parallel drain taps (paper: "repurposed for the
+//! serial-to-parallel conversion").
+//!
+//! Each 48-bit word carries the two packed *pixel lanes* re-spaced to
+//! 24-bit offsets; TWO24 confines carries so both pixels accumulate
+//! independently. The bias rides the RND constant through the W mux on
+//! each stream's first pass — no CLB adder, the paper's point.
+//!
+//! ## Exact schedule (engine contract)
+//!
+//! Edge numbering starts at 0 after reset. For stream `s ∈ 0..4` and
+//! round `r`:
+//! * feed the chain-A word as `chain_a` on edge `4r + s`;
+//! * feed the chain-B word as `chain_b` on edge `4r + s + 2`;
+//! * the stream's running total appears on [`RingAccumulator::output`]
+//!   after edge `4r + s + 2` (and recirculates for round `r+1`).
+
+use crate::dsp::{
+    simd_lane, simd_pack, Attributes, Dsp48e2, DspInputs, OpMode, SimdMode,
+    WMux, XMux, YMux, ZMux,
+};
+use crate::packing;
+
+/// Interleaved streams the ring serves (= loop latency in fast cycles).
+pub const RING_STREAMS: usize = 4;
+
+/// Convert a chain psum word (pixel lanes packed at the 18-bit product
+/// offset) into the ring's TWO24 layout: lane0 = low pixel, lane1 = high
+/// pixel. The split applies the packing sign-correction — the re-spacing
+/// wiring plus the correction the paper folds into the DSP constants.
+pub fn respace_to_two24(chain_word: i64) -> i64 {
+    let (hi, lo) = packing::unpack_prod(chain_word);
+    simd_pack(SimdMode::Two24, &[trunc24(lo), trunc24(hi)])
+}
+
+#[inline]
+fn trunc24(v: i64) -> i64 {
+    (v << 40) >> 40
+}
+
+/// Read the two pixel lanes of a TWO24 accumulator word: (lo, hi).
+pub fn two24_lanes(word: i64) -> (i64, i64) {
+    (
+        simd_lane(SimdMode::Two24, word, 0),
+        simd_lane(SimdMode::Two24, word, 1),
+    )
+}
+
+/// The two-DSP ring accumulator.
+pub struct RingAccumulator {
+    dsp_a: Dsp48e2,
+    dsp_b: Dsp48e2,
+    /// The fabric delay pair closing the loop (S2P drain taps).
+    delay: [i64; 2],
+    /// Fast edges since reset.
+    edge: u64,
+    bias_word: i64,
+}
+
+impl RingAccumulator {
+    /// `bias_lane` is added once per stream via the RND constant (same
+    /// value on both pixel lanes; per-output biases are applied by the
+    /// engine downstream when they differ).
+    pub fn new(bias_lane: i64) -> Self {
+        let rnd = simd_pack(
+            SimdMode::Two24,
+            &[trunc24(bias_lane), trunc24(bias_lane)],
+        );
+        // DSP a registers the feedback on its C input (CREG = 1): that
+        // register is the fourth loop stage. DSP b's C is transparent —
+        // the chain-B word combines the cycle it arrives.
+        let a_attrs = Attributes {
+            creg: true,
+            ..Attributes::ring_accumulator(rnd)
+        };
+        RingAccumulator {
+            dsp_a: Dsp48e2::new(a_attrs),
+            dsp_b: Dsp48e2::new(Attributes::ring_accumulator(rnd)),
+            delay: [0; 2],
+            edge: 0,
+            bias_word: rnd,
+        }
+    }
+
+    /// One Clk×2 edge. `chain_a` / `chain_b` are TWO24-respaced psum
+    /// words per the module-docs schedule (zero when idle/draining).
+    pub fn tick(&mut self, chain_a: i64, chain_b: i64) {
+        // The word captured into DSP a's A:B on the previous edge
+        // combines *this* edge; it belongs to stream (edge-1) mod 4 of
+        // round (edge-1)/4. On its first round the feedback path is
+        // squelched and the bias enters through W=RND.
+        let first_pass = self.edge >= 1 && self.edge <= RING_STREAMS as u64;
+        let feedback = self.delay[1];
+
+        // Pre-edge cascade value (PCOUT is the registered P).
+        let a_pcout = self.dsp_a.pcout();
+
+        // DSP a: P = X(A:B = chainA word, registered last edge)
+        //           + Y(C = feedback, transparent)  [0 on first pass]
+        //           + W(RND)                        [first pass only]
+        self.dsp_a.tick(&DspInputs {
+            a: (chain_a >> 18) & ((1 << 30) - 1),
+            b: chain_a & ((1 << 18) - 1),
+            c: feedback,
+            opmode: OpMode {
+                x: XMux::Ab,
+                y: if first_pass { YMux::Zero } else { YMux::C },
+                z: ZMux::Zero,
+                w: if first_pass { WMux::Rnd } else { WMux::Zero },
+            },
+            ..DspInputs::default()
+        });
+
+        // DSP b: P = Z(PCIN = DSP a's pre-edge P) + Y(C = chainB word).
+        self.dsp_b.tick(&DspInputs {
+            c: chain_b,
+            pcin: a_pcout,
+            opmode: OpMode {
+                x: XMux::Zero,
+                y: YMux::C,
+                z: ZMux::Pcin,
+                w: WMux::Zero,
+            },
+            ..DspInputs::default()
+        });
+
+        // Close the ring through the delay pair.
+        self.delay[1] = self.delay[0];
+        self.delay[0] = self.dsp_b.p();
+        self.edge += 1;
+    }
+
+    /// DSP b's post-edge P — the stream total that just completed.
+    pub fn output(&self) -> i64 {
+        self.dsp_b.p()
+    }
+
+    /// Fast edges ticked since reset.
+    pub fn edges(&self) -> u64 {
+        self.edge
+    }
+
+    pub fn reset(&mut self) {
+        let bias = simd_lane(SimdMode::Two24, self.bias_word, 0);
+        *self = RingAccumulator::new(bias);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    /// Feed R rounds of 4 interleaved streams (each a chain pair) and
+    /// check every stream's two pixel lanes against scalar sums.
+    fn run_rounds(
+        ring: &mut RingAccumulator,
+        words: &[[ (i64, i64); RING_STREAMS]], // per round, per stream: (wa, wb)
+    ) -> Vec<(i64, i64)> {
+        let rounds = words.len();
+        let total_edges = 4 * rounds + RING_STREAMS + 2;
+        let mut outputs = vec![(0i64, 0i64); RING_STREAMS];
+        for e in 0..total_edges {
+            let chain_a = if e < 4 * rounds {
+                words[e / 4][e % 4].0
+            } else {
+                0
+            };
+            let chain_b = if e >= 2 && e - 2 < 4 * rounds {
+                words[(e - 2) / 4][(e - 2) % 4].1
+            } else {
+                0
+            };
+            ring.tick(chain_a, chain_b);
+            // Stream s of the FINAL round completes after edge
+            // 4(R-1)+s+2.
+            if e >= 4 * (rounds - 1) + 2 && e < 4 * (rounds - 1) + 2 + RING_STREAMS {
+                let s = e - (4 * (rounds - 1) + 2);
+                outputs[s] = two24_lanes(ring.output());
+            }
+        }
+        outputs
+    }
+
+    #[test]
+    fn four_streams_accumulate_independently() {
+        let mut rng = XorShift::new(5);
+        for _trial in 0..100 {
+            let rounds = 1 + (rng.next_u64() % 10) as usize;
+            let mut ring = RingAccumulator::new(0);
+            let mut expected = [[0i64; 2]; RING_STREAMS];
+            let mut words = Vec::new();
+            for _ in 0..rounds {
+                let mut round = [(0i64, 0i64); RING_STREAMS];
+                for (s, slot) in round.iter_mut().enumerate() {
+                    // INT16-class partial sums in the 18-bit packed layout.
+                    let ha = rng.i8_in(-100, 100) as i64 * 37;
+                    let la = rng.i8_in(-100, 100) as i64 * 41;
+                    let hb = rng.i8_in(-100, 100) as i64 * 29;
+                    let lb = rng.i8_in(-100, 100) as i64 * 31;
+                    *slot = (
+                        respace_to_two24(ha * (1 << 18) + la),
+                        respace_to_two24(hb * (1 << 18) + lb),
+                    );
+                    expected[s][0] += la + lb;
+                    expected[s][1] += ha + hb;
+                }
+                words.push(round);
+            }
+            let got = run_rounds(&mut ring, &words);
+            for s in 0..RING_STREAMS {
+                assert_eq!(
+                    got[s],
+                    (expected[s][0], expected[s][1]),
+                    "stream {s}, rounds {rounds}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bias_applied_exactly_once_per_stream() {
+        let mut ring = RingAccumulator::new(777);
+        // Three rounds of zero inputs: each stream must hold exactly the
+        // bias (applied on the first pass only).
+        let words = vec![[(0, 0); RING_STREAMS]; 3];
+        let got = run_rounds(&mut ring, &words);
+        for s in 0..RING_STREAMS {
+            assert_eq!(got[s], (777, 777), "stream {s}");
+        }
+    }
+
+    #[test]
+    fn respace_roundtrip() {
+        let mut rng = XorShift::new(8);
+        for _ in 0..10_000 {
+            let hi = (rng.next_u64() as i64) % (1 << 17);
+            let lo = (rng.next_u64() as i64) % (1 << 17);
+            let word = hi * (1 << 18) + lo;
+            let respaced = respace_to_two24(word);
+            assert_eq!(two24_lanes(respaced), (lo, hi));
+        }
+    }
+
+    #[test]
+    fn lanes_do_not_interfere() {
+        // Saturate lane 0 with large positive psums; lane 1 stays 0.
+        let mut ring = RingAccumulator::new(0);
+        let w = respace_to_two24(100_000); // lo = 100_000 > fits 24b twice?
+        let words = vec![[(w, w); RING_STREAMS]; 2];
+        let got = run_rounds(&mut ring, &words);
+        for s in 0..RING_STREAMS {
+            assert_eq!(got[s].1, 0, "hi lane clean, stream {s}");
+            assert_eq!(got[s].0, 400_000, "lo lane sums, stream {s}");
+        }
+    }
+}

@@ -1,0 +1,392 @@
+//! Cycle-accurate FireFly crossbar over bit-accurate DSP48E2 cells.
+
+use super::{snn_inventory, snn_timing, SnnConfig, SnnVariant};
+use crate::cost::{ResourceInventory, TimingModel};
+use crate::dsp::{
+    simd_lane, simd_pack, Attributes, CascadeTap, Dsp48e2, DspInputs,
+    InputSource, OpMode, SimdMode, WMux, XMux, YMux, ZMux,
+};
+use crate::engines::{Engine, EngineError, GemmRun, RunStats};
+use crate::fabric::{ClockDomain, ClockPlan, FfBank};
+use crate::workload::snn::{LifLayer, SpikeTrain};
+use crate::workload::{MatI32, MatI8};
+
+/// Spiking crossbar engine (either Table-III variant).
+pub struct SnnEngine {
+    cfg: SnnConfig,
+    name: String,
+    /// `chains × chain_len` slices, `dsps[c][j]`.
+    dsps: Vec<Vec<Dsp48e2>>,
+    /// CLB ping-pong shadow for the C weight set (both variants), and
+    /// for the A:B set too in the FireFly variant.
+    c_bank: FfBank,
+    ab_bank: FfBank,
+}
+
+/// Pack four int8 weights into FOUR12 lanes (the 48-bit A:B / C word).
+fn pack_weights(w: [i8; 4]) -> i64 {
+    simd_pack(
+        SimdMode::Four12,
+        &[w[0] as i64, w[1] as i64, w[2] as i64, w[3] as i64],
+    )
+}
+
+impl SnnEngine {
+    pub fn new(cfg: SnnConfig) -> Self {
+        let attrs = Attributes {
+            // A:B carries a weight word; in the enhanced variant it is
+            // prefetched through the cascades (in-DSP prefetch on both
+            // pipelines), so inputs come from ACIN/BCIN with the hold
+            // registers (A2/B2) keeping the live set.
+            a_input: if cfg.variant == SnnVariant::Enhanced {
+                InputSource::Cascade
+            } else {
+                InputSource::Direct
+            },
+            b_input: if cfg.variant == SnnVariant::Enhanced {
+                InputSource::Cascade
+            } else {
+                InputSource::Direct
+            },
+            a_cascade_tap: CascadeTap::Reg1,
+            b_cascade_tap: CascadeTap::Reg1,
+            creg: true,
+            ..Attributes::firefly_crossbar()
+        };
+        let dsps = (0..cfg.chains)
+            .map(|_| (0..cfg.chain_len).map(|_| Dsp48e2::new(attrs)).collect())
+            .collect();
+        let slices = cfg.chains * cfg.chain_len;
+        SnnEngine {
+            name: format!(
+                "{} {}x{} crossbar",
+                cfg.variant.label(),
+                cfg.pre(),
+                cfg.pre()
+            ),
+            dsps,
+            c_bank: FfBank::new(slices, 32, ClockDomain::Slow),
+            ab_bank: FfBank::new(
+                if cfg.variant == SnnVariant::FireFly { slices } else { 0 },
+                32,
+                ClockDomain::Slow,
+            ),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+
+    /// Load weights for one pass: `weights[pre][post]` with
+    /// `post = chain*4 + lane`. The A:B set serves lanes of even pre
+    /// (slice input 0), the C set odd pre (slice input 1).
+    pub fn load_weights(&mut self, w: &MatI8, post_base: usize, stats: &mut RunStats) {
+        let cfg = self.cfg;
+        stats.weight_loads += 1;
+        for c in 0..cfg.chains {
+            for j in 0..cfg.chain_len {
+                let slice = c * cfg.chain_len + j;
+                let mut ab = [0i8; 4];
+                let mut cc = [0i8; 4];
+                for lane in 0..4 {
+                    let post = post_base + c * 4 + lane;
+                    let (pre0, pre1) = (2 * j, 2 * j + 1);
+                    ab[lane] = if post < w.cols && pre0 < w.rows {
+                        w.at(pre0, post)
+                    } else {
+                        0
+                    };
+                    cc[lane] = if post < w.cols && pre1 < w.rows {
+                        w.at(pre1, post)
+                    } else {
+                        0
+                    };
+                }
+                let ab_word = pack_weights(ab);
+                let c_word = pack_weights(cc);
+                // Shadow banks (ping-pong fill — overlappable).
+                self.c_bank.clock(slice, c_word, true);
+                if self.cfg.variant == SnnVariant::FireFly {
+                    self.ab_bank.clock(slice, ab_word, true);
+                }
+                // Commit into the DSP: A:B via the input pipelines
+                // (enhanced: modeled as the cascade-shifted value being
+                // latched by the A2/B2 hold pulse), C via the C register.
+                let dsp = &mut self.dsps[c][j];
+                dsp.tick(&DspInputs {
+                    a: (ab_word >> 18) & ((1 << 30) - 1),
+                    b: ab_word & ((1 << 18) - 1),
+                    acin: (ab_word >> 18) & ((1 << 30) - 1),
+                    bcin: ab_word & ((1 << 18) - 1),
+                    c: c_word,
+                    cep: false,
+                    ..DspInputs::default()
+                });
+                // Second edge moves A1/B1 -> A2/B2 (hold registers).
+                dsp.tick(&DspInputs {
+                    acin: 0,
+                    bcin: 0,
+                    c: c_word,
+                    cep: false,
+                    cea1: false,
+                    ceb1: false,
+                    ..DspInputs::default()
+                });
+            }
+        }
+        // Prefetch (chain_len shifts) overlaps compute; the commit pulse
+        // is the only exposed cycle — same story as the WS engines.
+        stats.cycles += cfg.chain_len as u64 + 1;
+        stats.weight_stall_cycles += 1;
+    }
+
+    /// Synaptic currents for one pass: `spikes (T × pre)` against the
+    /// loaded weights; returns `(T × post_per_pass)` currents.
+    fn stream_pass(&mut self, train: &SpikeTrain, stats: &mut RunStats) -> Vec<i32> {
+        let cfg = self.cfg;
+        let len = cfg.chain_len;
+        let t_steps = train.steps;
+        let mut out = vec![0i32; t_steps * cfg.post_per_pass()];
+        // Tail latency: slice j's ALU registers at cycle t+j (no M reg
+        // in the crossbar path), so the tail P carries timestep
+        // `cycle - (len-1)`.
+        let total = t_steps + len;
+
+        for cycle in 0..total {
+            for (c, chain) in self.dsps.iter_mut().enumerate() {
+                let pcouts: Vec<i64> = chain.iter().map(|d| d.pcout()).collect();
+                for j in 0..len {
+                    // Systolic skew: slice j sees timestep `cycle - j`.
+                    let t = cycle as isize - j as isize;
+                    let (s0, s1) = if t >= 0 && (t as usize) < t_steps {
+                        (
+                            train.at(t as usize, 2 * j),
+                            train.at(t as usize, 2 * j + 1),
+                        )
+                    } else {
+                        (false, false)
+                    };
+                    if s0 || s1 {
+                        stats.macs += 4 * (s0 as u64 + s1 as u64);
+                    }
+                    // The spike bits drive the wide-bus muxes.
+                    let opmode = OpMode {
+                        x: if s0 { XMux::Ab } else { XMux::Zero },
+                        y: if s1 { YMux::C } else { YMux::Zero },
+                        z: ZMux::Pcin,
+                        w: WMux::Zero,
+                    };
+                    chain[j].tick(&DspInputs {
+                        pcin: if j == 0 { 0 } else { pcouts[j - 1] },
+                        opmode,
+                        cea1: false,
+                        cea2: false,
+                        ceb1: false,
+                        ceb2: false,
+                        cec: false,
+                        ..DspInputs::default()
+                    });
+                }
+                let t_out = cycle as isize - (len as isize - 1);
+                if t_out >= 0 && (t_out as usize) < t_steps {
+                    let p = chain[len - 1].p();
+                    for lane in 0..4 {
+                        let v = simd_lane(SimdMode::Four12, p, lane) as i32;
+                        out[t_out as usize * cfg.post_per_pass() + c * 4 + lane] = v;
+                    }
+                }
+            }
+        }
+        stats.cycles += total as u64;
+        stats.fast_cycles = stats.cycles;
+        out
+    }
+
+    /// Full SNN inference: crossbar currents + LIF update per timestep.
+    /// `weights` is `pre() × n_post`; posts are covered in passes of
+    /// [`SnnConfig::post_per_pass`]. Returns (out_spikes, currents).
+    pub fn run_snn(
+        &mut self,
+        train: &SpikeTrain,
+        weights: &MatI8,
+    ) -> Result<(Vec<u8>, Vec<i32>, RunStats), EngineError> {
+        if train.neurons != self.cfg.pre() {
+            return Err(EngineError::Shape(format!(
+                "train has {} pre-neurons, crossbar expects {}",
+                train.neurons,
+                self.cfg.pre()
+            )));
+        }
+        if weights.rows != self.cfg.pre() {
+            return Err(EngineError::Shape(format!(
+                "weights rows {} != pre {}",
+                weights.rows,
+                self.cfg.pre()
+            )));
+        }
+        let n_post = weights.cols;
+        let per_pass = self.cfg.post_per_pass();
+        let passes = n_post.div_ceil(per_pass);
+        let mut stats = RunStats::default();
+        let mut currents = vec![0i32; train.steps * n_post];
+        for pass in 0..passes {
+            self.reset();
+            self.load_weights(weights, pass * per_pass, &mut stats);
+            let pass_out = self.stream_pass(train, &mut stats);
+            for t in 0..train.steps {
+                for p in 0..per_pass {
+                    let post = pass * per_pass + p;
+                    if post < n_post {
+                        currents[t * n_post + post] = pass_out[t * per_pass + p];
+                    }
+                }
+            }
+        }
+        // LIF neuron update (integer, bit-exact with the python ref).
+        let mut lif = LifLayer::new(n_post, self.cfg.v_threshold, self.cfg.leak_shift);
+        let mut out_spikes = Vec::with_capacity(train.steps * n_post);
+        for t in 0..train.steps {
+            let row = &currents[t * n_post..(t + 1) * n_post];
+            out_spikes.extend(lif.step(row));
+        }
+        Ok((out_spikes, currents, stats))
+    }
+
+    pub fn reset(&mut self) {
+        for chain in &mut self.dsps {
+            for d in chain {
+                d.reset();
+            }
+        }
+    }
+}
+
+impl Engine for SnnEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn inventory(&self) -> ResourceInventory {
+        snn_inventory(&self.cfg)
+    }
+
+    fn timing(&self) -> TimingModel {
+        snn_timing(&self.cfg)
+    }
+
+    fn clock_plan(&self) -> ClockPlan {
+        self.cfg.clock_plan()
+    }
+
+    fn peak_macs_per_cycle(&self) -> u64 {
+        // 2 pre × 4 lanes per slice (synaptic ops).
+        (self.cfg.chains * self.cfg.chain_len * 8) as u64
+    }
+
+    /// GEMM view: `a` must be a {0,1} spike matrix (T × pre).
+    fn run_gemm(&mut self, a: &MatI8, w: &MatI8) -> Result<GemmRun, EngineError> {
+        if a.data.iter().any(|&v| v != 0 && v != 1) {
+            return Err(EngineError::Shape(
+                "SNN engine consumes binary spike inputs".into(),
+            ));
+        }
+        let train = SpikeTrain {
+            steps: a.rows,
+            neurons: a.cols,
+            spikes: a.data.iter().map(|&v| v as u8).collect(),
+        };
+        let (_, currents, stats) = self.run_snn(&train, w)?;
+        let mut out = MatI32::zeros(a.rows, w.cols);
+        out.data.copy_from_slice(&currents);
+        Ok(GemmRun { output: out, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+    use crate::workload::snn::golden_currents;
+
+    fn cfg(v: SnnVariant) -> SnnConfig {
+        SnnConfig::paper_32x32(v)
+    }
+
+    #[test]
+    fn crossbar_currents_match_golden() {
+        for v in [SnnVariant::FireFly, SnnVariant::Enhanced] {
+            let mut rng = XorShift::new(3);
+            let mut eng = SnnEngine::new(cfg(v));
+            let train = SpikeTrain::random(&mut rng, 12, 32, 1, 3);
+            // Bounded weights keep 16-deep 12-bit lanes exact.
+            let w = MatI8::random_bounded(&mut rng, 32, 32, 63);
+            let (_, currents, _) = eng.run_snn(&train, &w).unwrap();
+            let golden = golden_currents(&train, &w.data, 32);
+            assert_eq!(currents, golden, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn multi_pass_posts() {
+        let mut rng = XorShift::new(5);
+        let mut eng = SnnEngine::new(cfg(SnnVariant::Enhanced));
+        let train = SpikeTrain::random(&mut rng, 8, 32, 1, 2);
+        let w = MatI8::random_bounded(&mut rng, 32, 40, 50); // 3 passes
+        let (_, currents, stats) = eng.run_snn(&train, &w).unwrap();
+        assert_eq!(currents, golden_currents(&train, &w.data, 40));
+        assert_eq!(stats.weight_loads, 3);
+    }
+
+    #[test]
+    fn lif_spikes_binary_and_deterministic() {
+        let mut rng = XorShift::new(7);
+        let mut eng = SnnEngine::new(cfg(SnnVariant::Enhanced));
+        let train = SpikeTrain::random(&mut rng, 10, 32, 1, 2);
+        let w = MatI8::random_bounded(&mut rng, 32, 16, 30);
+        let (s1, _, _) = eng.run_snn(&train, &w).unwrap();
+        let (s2, _, _) = eng.run_snn(&train, &w).unwrap();
+        assert_eq!(s1, s2);
+        assert!(s1.iter().all(|&s| s <= 1));
+    }
+
+    #[test]
+    fn gemm_view_matches_and_rejects_nonbinary() {
+        let mut rng = XorShift::new(9);
+        let mut eng = SnnEngine::new(cfg(SnnVariant::FireFly));
+        let train = SpikeTrain::random(&mut rng, 6, 32, 1, 2);
+        let a = MatI8 {
+            rows: 6,
+            cols: 32,
+            data: train.spikes.iter().map(|&v| v as i8).collect(),
+        };
+        let w = MatI8::random_bounded(&mut rng, 32, 32, 40);
+        let run = eng.run_gemm(&a, &w).unwrap();
+        assert_eq!(
+            run.output.data,
+            golden_currents(&train, &w.data, 32)
+        );
+
+        let bad = MatI8 {
+            rows: 1,
+            cols: 32,
+            data: vec![2; 32],
+        };
+        assert!(eng.run_gemm(&bad, &w).is_err());
+    }
+
+    #[test]
+    fn silent_input_silent_output() {
+        let mut eng = SnnEngine::new(cfg(SnnVariant::Enhanced));
+        let train = SpikeTrain {
+            steps: 4,
+            neurons: 32,
+            spikes: vec![0; 4 * 32],
+        };
+        let w = MatI8::from_fn(32, 32, |r, c| ((r + c) % 100) as i8);
+        let (_, currents, stats) = eng.run_snn(&train, &w).unwrap();
+        assert!(currents.iter().all(|&c| c == 0));
+        assert_eq!(stats.macs, 0);
+    }
+}

@@ -1,0 +1,576 @@
+//! Cycle-accurate WS array simulation over bit-accurate DSP48E2 cells.
+
+use super::inventory::{ws_inventory, ws_timing};
+use super::{WsConfig, WsVariant};
+use crate::cost::{ResourceInventory, TimingModel};
+use crate::dsp::{Attributes, Dsp48e2, DspInputs, InMode, OpMode};
+use crate::engines::{Engine, EngineError, GemmRun, RunStats};
+use crate::fabric::{ClockDomain, ClockPlan, FfBank, StagingChain};
+use crate::packing::{self, GuardOverflow, LANE_SIGN};
+use crate::workload::{MatI32, MatI8};
+
+/// DSP pipeline latency from operand capture to P.
+///
+/// Packed variants route through the pre-adder (A2/D -> AD -> M -> P:
+/// 3 stages); tinyTPU multiplies A2 directly (A2 -> M -> P: 2 stages).
+fn pipe_latency(variant: WsVariant) -> usize {
+    if variant.packed() {
+        3
+    } else {
+        2
+    }
+}
+
+/// A weight-stationary systolic engine (any Table-I variant).
+pub struct WsEngine {
+    cfg: WsConfig,
+    name: String,
+    /// `rows × cols` multiplier DSPs, column-major: `dsps[c][r]`.
+    dsps: Vec<Vec<Dsp48e2>>,
+    /// Per-row activation staging chains (packed pair or single act).
+    staging: Vec<StagingChain>,
+    /// CLB weight ping-pong bank (ClbFetch / Libano); empty otherwise.
+    wgt_bank: FfBank,
+    stats_template: RunStats,
+}
+
+impl WsEngine {
+    pub fn new(cfg: WsConfig) -> Self {
+        let pe_attrs = match cfg.variant {
+            // In-DSP prefetch: weights ride the BCIN cascade, BCOUT taps
+            // B1, multiplier reads B2; pre-adder packs the activations.
+            WsVariant::DspFetch => Attributes::ws_prefetch_pe(),
+            // Packed variants with fabric-side weight delivery: B from
+            // the fabric, single B register (B2 loads directly).
+            WsVariant::ClbFetch | WsVariant::Libano => Attributes {
+                breg: 1,
+                amultsel: crate::dsp::MultSel::Ad,
+                dreg: true,
+                adreg: true,
+                areg: 1,
+                ..Attributes::default()
+            },
+            // tinyTPU: plain A×B multiply, weight in B2, act on A.
+            WsVariant::TinyTpu => Attributes {
+                breg: 1,
+                areg: 1,
+                ..Attributes::default()
+            },
+        };
+        let pe_attrs = match cfg.variant {
+            WsVariant::DspFetch => Attributes { areg: 1, ..pe_attrs },
+            _ => pe_attrs,
+        };
+        let dsps = (0..cfg.cols)
+            .map(|_| (0..cfg.rows).map(|_| Dsp48e2::new(pe_attrs)).collect())
+            .collect();
+        let act_width = if cfg.variant.packed() { 16 } else { 8 };
+        let staging = (0..cfg.rows)
+            .map(|_| StagingChain::new(cfg.cols.max(1), act_width, ClockDomain::Slow))
+            .collect();
+        let wgt_bank = match cfg.variant {
+            WsVariant::ClbFetch | WsVariant::Libano => {
+                FfBank::new(cfg.rows * cfg.cols, 8, ClockDomain::Slow)
+            }
+            _ => FfBank::new(0, 8, ClockDomain::Slow),
+        };
+        WsEngine {
+            name: format!(
+                "{} {}x{}",
+                cfg.variant.label(),
+                cfg.rows,
+                cfg.cols
+            ),
+            cfg,
+            dsps,
+            staging,
+            wgt_bank,
+            stats_template: RunStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &WsConfig {
+        &self.cfg
+    }
+
+    /// Load a stationary weight tile (K=rows × N<=cols), modeling the
+    /// variant's delivery path. Returns slow cycles consumed and how
+    /// many of them stall the array.
+    pub fn load_weights(&mut self, w: &MatI8, stats: &mut RunStats) {
+        let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        assert_eq!(w.rows, rows);
+        assert!(w.cols <= cols);
+        stats.weight_loads += 1;
+        match self.cfg.variant {
+            WsVariant::DspFetch => {
+                // Stream down the B1/BCIN chain (rows cycles, normally
+                // overlapped with compute), then one CEB2 swap pulse.
+                for t in 0..rows {
+                    for (c, col) in self.dsps.iter_mut().enumerate() {
+                        let wv = if c < w.cols {
+                            w.at(rows - 1 - t, c) as i64
+                        } else {
+                            0
+                        };
+                        let bcouts: Vec<i64> =
+                            col.iter().map(|d| d.bcout()).collect();
+                        for (r, dsp) in col.iter_mut().enumerate() {
+                            let bcin = if r == 0 { wv } else { bcouts[r - 1] };
+                            dsp.tick(&DspInputs {
+                                bcin,
+                                ceb2: false,
+                                cep: false,
+                                cem: false,
+                                cea1: false,
+                                cea2: false,
+                                ..DspInputs::default()
+                            });
+                        }
+                    }
+                }
+                // Swap pulse: every B2 captures its B1 neighbor value.
+                for col in self.dsps.iter_mut() {
+                    let bcouts: Vec<i64> = col.iter().map(|d| d.bcout()).collect();
+                    for (r, dsp) in col.iter_mut().enumerate() {
+                        let bcin = if r == 0 { 0 } else { bcouts[r - 1] };
+                        dsp.tick(&DspInputs {
+                            bcin,
+                            ceb1: false,
+                            ceb2: true,
+                            cep: false,
+                            cem: false,
+                            cea1: false,
+                            cea2: false,
+                            ..DspInputs::default()
+                        });
+                    }
+                }
+                stats.cycles += rows as u64 + 1;
+                // Prefetch overlaps compute in steady state: only the
+                // swap cycle is exposed.
+                stats.weight_stall_cycles += 1;
+            }
+            WsVariant::ClbFetch | WsVariant::Libano => {
+                // Fill the CLB ping-pong bank (overlappable), then one
+                // swap cycle drives every B port from the bank.
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let wv = if c < w.cols { w.at(r, c) } else { 0 };
+                        self.wgt_bank.clock(r * cols + c, wv as i64, true);
+                    }
+                }
+                for (c, col) in self.dsps.iter_mut().enumerate() {
+                    for (r, dsp) in col.iter_mut().enumerate() {
+                        let wv = self.wgt_bank.get(r * cols + c);
+                        let _ = c;
+                        dsp.tick(&DspInputs {
+                            b: wv,
+                            ceb1: false,
+                            ceb2: true,
+                            cep: false,
+                            cem: false,
+                            cea1: false,
+                            cea2: false,
+                            ..DspInputs::default()
+                        });
+                    }
+                }
+                stats.cycles += rows as u64 + 1;
+                stats.weight_stall_cycles += 1;
+            }
+            WsVariant::TinyTpu => {
+                // No prefetch path: the array stalls for the full
+                // row-by-row load (the drawback §IV-A calls out).
+                for r in 0..rows {
+                    for (c, col) in self.dsps.iter_mut().enumerate() {
+                        let wv = if c < w.cols { w.at(r, c) as i64 } else { 0 };
+                        col[r].tick(&DspInputs {
+                            b: wv,
+                            ceb1: false,
+                            ceb2: true,
+                            cep: false,
+                            cem: false,
+                            cea1: false,
+                            cea2: false,
+                            ..DspInputs::default()
+                        });
+                    }
+                }
+                stats.cycles += rows as u64;
+                stats.weight_stall_cycles += rows as u64;
+            }
+        }
+    }
+
+    /// Stream activations through the loaded array; returns the output.
+    fn stream(
+        &mut self,
+        a: &MatI8,
+        n_cols: usize,
+        stats: &mut RunStats,
+    ) -> Result<MatI32, EngineError> {
+        let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        let packed = self.cfg.variant.packed();
+        let broadcast = self.cfg.variant.broadcast();
+        let m = a.rows;
+        // Packed: process row pairs (pad odd M with a zero row).
+        let waves = if packed { m.div_ceil(2) } else { m };
+        let mut out = MatI32::zeros(m, n_cols);
+
+        // Total cycles: ramp-in + all waves + pipeline drain.
+        let latency = pipe_latency(self.cfg.variant);
+        let col_skew = if broadcast { 0 } else { cols - 1 };
+        let total = waves + (rows - 1) + col_skew + latency + 2;
+
+        let act = |wave: isize, r: usize, lane_hi: bool| -> i64 {
+            if wave < 0 {
+                return 0;
+            }
+            let row = if packed {
+                2 * wave as usize + usize::from(!lane_hi)
+            } else {
+                wave as usize
+            };
+            if row >= m {
+                0
+            } else {
+                a.at(row, r) as i64
+            }
+        };
+
+        // §Perf: hoist the per-column pcout snapshot out of the cycle
+        // loop's allocator (one reusable buffer instead of a fresh Vec
+        // per column per cycle — see EXPERIMENTS.md §Perf, iteration 1).
+        let mut pcouts: Vec<i64> = vec![0; rows];
+        // §Perf iteration 2: one DspInputs template mutated per slice
+        // instead of re-constructed (keeps the 9 clock-enable fields
+        // and mode decode out of the inner loop).
+        let mut inp = DspInputs {
+            inmode: if packed {
+                InMode::A2_B2.with_d()
+            } else {
+                InMode::A2_B2
+            },
+            ceb1: false,
+            ceb2: false,
+            ..DspInputs::default()
+        };
+
+        for t in 0..total {
+            // Shift the staging chains (one new wave enters per cycle;
+            // row r sees wave t - r at its chain input).
+            for r in 0..rows {
+                let wave = t as isize - r as isize;
+                let v = if packed {
+                    ((act(wave, r, true) & 0xFF) << 8) | (act(wave, r, false) & 0xFF)
+                } else {
+                    act(wave, r, true) & 0xFF
+                };
+                self.staging[r].shift(v);
+            }
+
+            // Drive every column (pre-edge pcout reads, then tick).
+            for c in 0..cols {
+                let col = &mut self.dsps[c];
+                for (slot, d) in pcouts.iter_mut().zip(col.iter()) {
+                    *slot = d.pcout();
+                }
+                for r in 0..rows {
+                    let staged = if broadcast {
+                        // Broadcast: all columns see the chain input
+                        // directly (fan-out net, no staging).
+                        self.staging[r].stage(0)
+                    } else {
+                        self.staging[r].stage(c)
+                    };
+                    if packed {
+                        let hi = ((staged >> 8) & 0xFF) as i8 as i64;
+                        let lo = (staged & 0xFF) as i8 as i64;
+                        inp.a = hi << packing::LANE_BITS;
+                        inp.d = lo;
+                    } else {
+                        inp.a = (staged & 0xFF) as i8 as i64;
+                        inp.d = 0;
+                    }
+                    inp.opmode = if r == 0 {
+                        OpMode::MULT
+                    } else {
+                        OpMode::MULT_CASCADE
+                    };
+                    inp.pcin = if r == 0 { 0 } else { pcouts[r - 1] };
+                    col[r].tick(&inp);
+                }
+            }
+
+            // Collect: column c's cascade bottom holds the result for
+            // wave `t - (rows-1) - skew(c) - PIPE_LATENCY` *after* this
+            // edge.
+            for c in 0..n_cols {
+                let skew = if broadcast { 0 } else { c };
+                let wave =
+                    t as isize - (rows as isize - 1) - skew as isize - latency as isize;
+                if wave < 0 || wave as usize >= waves {
+                    continue;
+                }
+                let p = self.dsps[c][rows - 1].p();
+                if packed {
+                    let (hi, lo) = packing::unpack_prod(p);
+                    let row_hi = 2 * wave as usize;
+                    let row_lo = row_hi + 1;
+                    out.set(row_hi, c, hi as i32);
+                    if row_lo < m {
+                        out.set(row_lo, c, lo as i32);
+                    }
+                    stats.macs += 2 * rows as u64;
+                } else {
+                    out.set(wave as usize, c, p as i32);
+                    stats.macs += rows as u64;
+                }
+            }
+        }
+        stats.cycles += total as u64;
+        stats.fast_cycles = stats.cycles;
+
+        // Guard-band audit for packed variants: the hardware cannot see
+        // low-lane overflow; the simulator can, and reports it.
+        if packed {
+            for wave in 0..waves {
+                let row_lo = 2 * wave + 1;
+                if row_lo >= m {
+                    continue;
+                }
+                for c in 0..n_cols {
+                    let lo_sum: i64 = (0..rows)
+                        .map(|r| a.at(row_lo, r) as i64 * self.wgt_value(r, c))
+                        .sum();
+                    if !(-LANE_SIGN..LANE_SIGN).contains(&lo_sum) {
+                        stats.guard_overflows += 1;
+                        if self.cfg.strict_guard {
+                            return Err(EngineError::Guard(GuardOverflow {
+                                lane_sum: lo_sum,
+                                depth: rows,
+                            }));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The live weight currently held by PE (r, c) — from B2.
+    fn wgt_value(&self, r: usize, c: usize) -> i64 {
+        self.dsps[c][r].regs().b2
+    }
+
+    /// Reset all sequential state.
+    pub fn reset(&mut self) {
+        for col in &mut self.dsps {
+            for dsp in col {
+                dsp.reset();
+            }
+        }
+        for chain in &mut self.staging {
+            chain.reset();
+        }
+        self.wgt_bank.reset();
+    }
+
+    /// Measured staging-chain toggle activity (power-model input).
+    fn staging_activity(&self) -> f64 {
+        let total_ff: usize = self.staging.iter().map(|s| s.ff_count()).sum();
+        let toggles: u64 = self.staging.iter().map(|s| s.toggles()).sum();
+        let cycles = self.dsps[0][0].cycles.max(1);
+        if total_ff == 0 {
+            return 0.0;
+        }
+        (toggles as f64 / (cycles as f64 * total_ff as f64)).min(1.0)
+    }
+}
+
+impl Engine for WsEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn inventory(&self) -> ResourceInventory {
+        let mut inv = ws_inventory(&self.cfg);
+        // Swap in measured activity where the simulation produced one.
+        let measured = self.staging_activity();
+        if measured > 0.0 {
+            for g in &mut inv.groups {
+                if g.name.contains("act staging") {
+                    g.activity = measured;
+                }
+            }
+        }
+        inv
+    }
+
+    fn timing(&self) -> TimingModel {
+        ws_timing(&self.cfg)
+    }
+
+    fn clock_plan(&self) -> ClockPlan {
+        self.cfg.clock_plan()
+    }
+
+    fn peak_macs_per_cycle(&self) -> u64 {
+        let per_dsp = if self.cfg.variant.packed() { 2 } else { 1 };
+        (self.cfg.rows * self.cfg.cols * per_dsp) as u64
+    }
+
+    fn run_gemm(&mut self, a: &MatI8, w: &MatI8) -> Result<GemmRun, EngineError> {
+        if a.cols != self.cfg.rows {
+            return Err(EngineError::Shape(format!(
+                "K={} must equal array rows={}",
+                a.cols, self.cfg.rows
+            )));
+        }
+        if w.rows != self.cfg.rows || w.cols > self.cfg.cols {
+            return Err(EngineError::Shape(format!(
+                "weight tile {}x{} exceeds array {}x{}",
+                w.rows, w.cols, self.cfg.rows, self.cfg.cols
+            )));
+        }
+        self.reset();
+        let mut stats = self.stats_template.clone();
+        self.load_weights(w, &mut stats);
+        let out = self.stream(a, w.cols, &mut stats)?;
+        Ok(GemmRun { output: out, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+    use crate::workload::gemm::{golden_gemm, GemmProblem};
+
+    fn all_variants() -> [WsVariant; 4] {
+        [
+            WsVariant::TinyTpu,
+            WsVariant::Libano,
+            WsVariant::ClbFetch,
+            WsVariant::DspFetch,
+        ]
+    }
+
+    fn small_cfg(variant: WsVariant) -> WsConfig {
+        WsConfig {
+            variant,
+            rows: 6,
+            cols: 5,
+            target_mhz: 666.0,
+            strict_guard: false,
+        }
+    }
+
+    #[test]
+    fn every_variant_matches_golden_small() {
+        for v in all_variants() {
+            let mut eng = WsEngine::new(small_cfg(v));
+            // Bounded activations keep even deep packed cascades exact.
+            let mut rng = XorShift::new(7);
+            let a = MatI8::random_bounded(&mut rng, 8, 6, 63);
+            let w = MatI8::random(&mut rng, 6, 5);
+            let run = eng.run_gemm(&a, &w).unwrap();
+            assert_eq!(run.output, golden_gemm(&a, &w), "variant {v:?}");
+            assert_eq!(run.stats.guard_overflows, 0);
+        }
+    }
+
+    #[test]
+    fn paper_scale_14x14_matches_golden() {
+        for v in [WsVariant::DspFetch, WsVariant::TinyTpu] {
+            let mut eng = WsEngine::new(WsConfig::paper_14x14_for(v));
+            let mut rng = XorShift::new(3);
+            let a = MatI8::random_bounded(&mut rng, 32, 14, 63);
+            let w = MatI8::random(&mut rng, 14, 14);
+            let run = eng.run_gemm(&a, &w).unwrap();
+            assert_eq!(run.output, golden_gemm(&a, &w), "variant {v:?}");
+        }
+    }
+
+    #[test]
+    fn odd_row_count_pads() {
+        let mut eng = WsEngine::new(small_cfg(WsVariant::DspFetch));
+        let mut rng = XorShift::new(9);
+        let a = MatI8::random_bounded(&mut rng, 7, 6, 63);
+        let w = MatI8::random(&mut rng, 6, 5);
+        let run = eng.run_gemm(&a, &w).unwrap();
+        assert_eq!(run.output, golden_gemm(&a, &w));
+    }
+
+    #[test]
+    fn narrow_weight_tile() {
+        let mut eng = WsEngine::new(small_cfg(WsVariant::DspFetch));
+        let mut rng = XorShift::new(11);
+        let a = MatI8::random_bounded(&mut rng, 4, 6, 63);
+        let w = MatI8::random(&mut rng, 6, 3); // only 3 of 5 columns
+        let run = eng.run_gemm(&a, &w).unwrap();
+        assert_eq!(run.output, golden_gemm(&a, &w));
+    }
+
+    #[test]
+    fn guard_overflow_detected_and_strict_mode_errors() {
+        // Worst-case inputs on a 14-deep cascade overflow the low lane.
+        let mut cfg = WsConfig::paper_14x14_for(WsVariant::DspFetch);
+        let a = MatI8::from_fn(2, 14, |_, _| -128);
+        let w = MatI8::from_fn(14, 1, |_, _| -128);
+        let mut eng = WsEngine::new(cfg);
+        let run = eng.run_gemm(&a, &w).unwrap();
+        assert!(run.stats.guard_overflows > 0);
+
+        cfg.strict_guard = true;
+        let mut eng = WsEngine::new(cfg);
+        match eng.run_gemm(&a, &w) {
+            Err(EngineError::Guard(g)) => assert_eq!(g.depth, 14),
+            other => panic!("expected guard error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tinytpu_stalls_on_weight_load_others_do_not() {
+        let p = GemmProblem::random(4, 5, 6, 21);
+        let mut tiny = WsEngine::new(small_cfg(WsVariant::TinyTpu));
+        let run_t = tiny.run_gemm(&p.a, &p.w).unwrap();
+        assert_eq!(run_t.stats.weight_stall_cycles, 6);
+
+        let mut ours = WsEngine::new(small_cfg(WsVariant::DspFetch));
+        let run_o = ours.run_gemm(&p.a, &p.w).unwrap();
+        assert_eq!(run_o.stats.weight_stall_cycles, 1);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let mut eng = WsEngine::new(small_cfg(WsVariant::DspFetch));
+        let a = MatI8::zeros(4, 7); // K mismatch
+        let w = MatI8::zeros(6, 5);
+        assert!(matches!(eng.run_gemm(&a, &w), Err(EngineError::Shape(_))));
+        let a = MatI8::zeros(4, 6);
+        let w = MatI8::zeros(6, 9); // too wide
+        assert!(matches!(eng.run_gemm(&a, &w), Err(EngineError::Shape(_))));
+    }
+
+    #[test]
+    fn stats_account_macs() {
+        let p = GemmProblem::random(8, 5, 6, 5);
+        let mut eng = WsEngine::new(small_cfg(WsVariant::DspFetch));
+        let run = eng.run_gemm(&p.a, &p.w).unwrap();
+        assert_eq!(run.stats.macs, 8 * 5 * 6);
+        assert!(run.stats.cycles > 0);
+        let util = run.stats.utilization(eng.peak_macs_per_cycle());
+        assert!(util > 0.0 && util <= 1.0);
+    }
+
+    #[test]
+    fn rerun_is_deterministic_and_clean() {
+        let p = GemmProblem::random(6, 5, 6, 99);
+        let mut eng = WsEngine::new(small_cfg(WsVariant::DspFetch));
+        let r1 = eng.run_gemm(&p.a, &p.w).unwrap();
+        let r2 = eng.run_gemm(&p.a, &p.w).unwrap();
+        assert_eq!(r1.output, r2.output);
+        assert_eq!(r1.stats.cycles, r2.stats.cycles);
+    }
+}

@@ -1,0 +1,105 @@
+//! Weight-stationary (TPUv1-like) systolic engines — paper §IV, Table I.
+//!
+//! Four designs share one cycle-accurate core and differ in structure:
+//!
+//! * [`WsVariant::TinyTpu`] — the open-source tinyTPU baseline: no INT8
+//!   packing (one MAC per DSP), activations *broadcast* to all columns
+//!   (high fan-out, 400 MHz class), weights loaded with a full-array
+//!   stall.
+//! * [`WsVariant::Libano`] — the state-of-the-art generator baseline:
+//!   INT8 packing + per-PE DDR muxes, but partial sums accumulate in a
+//!   *CLB* adder chain (CARRY8s) instead of the PCIN cascade, and weight
+//!   ping-pong lives in CLB flip-flops.
+//! * [`WsVariant::ClbFetch`] — the paper's ablation: identical to
+//!   DSP-Fetch except the weight ping-pong registers stay in the CLB.
+//! * [`WsVariant::DspFetch`] — the paper's contribution (§IV-B, Fig. 3):
+//!   **in-DSP operand prefetching** — the B1 registers of each DSP
+//!   column form the weight shift chain over the BCIN cascade while the
+//!   B2 registers hold the live weights; one CEB2 pulse swaps the whole
+//!   array. Plus in-DSP psum cascading (PCIN) and INT8 packing through
+//!   the pre-adder.
+//!
+//! ## Dataflow (packed variants)
+//!
+//! `run_gemm(a: M×K, w: K×N)` holds `w` stationary (K = array rows,
+//! N ≤ array cols). Activation rows are processed in *pairs* (two batch
+//! rows per DSP multiply — the INT8 packing): the pair enters row `r`
+//! skewed by `r` cycles and stages across columns one register per hop;
+//! partial sums ride the PCIN cascade down each column, one extra cycle
+//! per row, which exactly matches the skew. A column-end accumulator
+//! DSP splits the two product lanes (sign-correction) and adds bias.
+
+mod engine;
+mod inventory;
+pub mod waveforms;
+
+pub use engine::WsEngine;
+pub use inventory::ws_inventory;
+
+use crate::fabric::ClockPlan;
+
+/// Which Table-I design to elaborate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WsVariant {
+    TinyTpu,
+    Libano,
+    ClbFetch,
+    DspFetch,
+}
+
+impl WsVariant {
+    pub fn label(self) -> &'static str {
+        match self {
+            WsVariant::TinyTpu => "tinyTPU",
+            WsVariant::Libano => "Libano",
+            WsVariant::ClbFetch => "CLB-Fetch",
+            WsVariant::DspFetch => "DSP-Fetch",
+        }
+    }
+
+    /// INT8 packing: two MACs per DSP (all but tinyTPU).
+    pub fn packed(self) -> bool {
+        !matches!(self, WsVariant::TinyTpu)
+    }
+
+    /// Activations broadcast (tinyTPU) vs staged per column.
+    pub fn broadcast(self) -> bool {
+        matches!(self, WsVariant::TinyTpu)
+    }
+}
+
+/// WS array geometry + policy.
+#[derive(Debug, Clone, Copy)]
+pub struct WsConfig {
+    pub variant: WsVariant,
+    /// Array rows = stationary K-tile depth (cascade length).
+    pub rows: usize,
+    /// Array columns = stationary N-tile width.
+    pub cols: usize,
+    /// Constraint clock (MHz). The paper runs 666 (400 for tinyTPU).
+    pub target_mhz: f64,
+    /// Fail on packed guard-band overflow instead of counting it.
+    pub strict_guard: bool,
+}
+
+impl WsConfig {
+    /// The paper's Table-I configuration: INT8 14×14 on XCZU3EG.
+    pub fn paper_14x14_for(variant: WsVariant) -> Self {
+        WsConfig {
+            variant,
+            rows: 14,
+            cols: 14,
+            target_mhz: if variant == WsVariant::TinyTpu { 400.0 } else { 666.0 },
+            strict_guard: false,
+        }
+    }
+
+    /// DSP-Fetch at the paper scale (doc-example convenience).
+    pub fn paper_14x14() -> Self {
+        Self::paper_14x14_for(WsVariant::DspFetch)
+    }
+
+    pub fn clock_plan(&self) -> ClockPlan {
+        ClockPlan::single(self.target_mhz)
+    }
+}

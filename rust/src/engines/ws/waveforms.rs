@@ -1,0 +1,122 @@
+//! Fig. 3 regeneration: the in-DSP operand-prefetch waveform as a text
+//! trace — CEB1/CEB2 clock enables plus the B1/B2 register contents of
+//! a 4-deep DSP column while a new weight set streams down the BCIN
+//! cascade and swaps in with a single CEB2 pulse.
+
+use crate::dsp::{Attributes, Dsp48e2, DspInputs};
+
+/// Render the Fig.-3 trace for a `depth`-deep column and two weight
+/// sets; returns the text (also used by `examples/fig_waveforms.rs`).
+pub fn fig3_trace(depth: usize) -> String {
+    let mut col: Vec<Dsp48e2> = (0..depth)
+        .map(|_| Dsp48e2::new(Attributes::ws_prefetch_pe()))
+        .collect();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Fig. 3 — in-DSP operand prefetching ({}-deep column)\n",
+        depth
+    ));
+    out.push_str(&format!(
+        "{:>5} {:>4} {:>4} | {}\n",
+        "cycle",
+        "CEB1",
+        "CEB2",
+        (0..depth)
+            .map(|i| format!("B1[{i}] B2[{i}]"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    ));
+
+    let sets: [Vec<i64>; 2] = [
+        (0..depth).map(|i| 10 + i as i64).collect(),
+        (0..depth).map(|i| 50 + i as i64).collect(),
+    ];
+
+    let mut cycle = 0;
+    let line = |col: &[Dsp48e2], ceb1: bool, ceb2: bool, cycle: usize| {
+        format!(
+            "{:>5} {:>4} {:>4} | {}\n",
+            cycle,
+            u8::from(ceb1),
+            u8::from(ceb2),
+            col.iter()
+                .map(|d| {
+                    let r = d.regs();
+                    format!("{:>5} {:>5}", r.b1, r.b2)
+                })
+                .collect::<Vec<_>>()
+                .join("  ")
+        )
+    };
+
+    for set in &sets {
+        // Prefetch phase: CEB1 streams the set down the B1/BCIN chain
+        // while B2 (the live weights) holds — compute keeps running.
+        for t in 0..depth {
+            let bcouts: Vec<i64> = col.iter().map(|d| d.bcout()).collect();
+            for (r, dsp) in col.iter_mut().enumerate() {
+                let bcin = if r == 0 {
+                    set[depth - 1 - t]
+                } else {
+                    bcouts[r - 1]
+                };
+                dsp.tick(&DspInputs {
+                    bcin,
+                    ceb2: false,
+                    cep: false,
+                    ..DspInputs::default()
+                });
+            }
+            out.push_str(&line(&col, true, false, cycle));
+            cycle += 1;
+        }
+        // Swap pulse: one CEB2 edge moves the whole column B1 -> B2.
+        let bcouts: Vec<i64> = col.iter().map(|d| d.bcout()).collect();
+        for (r, dsp) in col.iter_mut().enumerate() {
+            let bcin = if r == 0 { 0 } else { bcouts[r - 1] };
+            dsp.tick(&DspInputs {
+                bcin,
+                ceb1: false,
+                ceb2: true,
+                cep: false,
+                ..DspInputs::default()
+            });
+        }
+        out.push_str(&line(&col, false, true, cycle));
+        cycle += 1;
+    }
+    out
+}
+
+/// Print the paper-scale (4-deep illustration) trace to stdout.
+pub fn print_fig3() {
+    print!("{}", fig3_trace(4));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_shows_swap_semantics() {
+        let t = fig3_trace(3);
+        // After the first prefetch+swap, B2 holds 10, 11, 12.
+        assert!(t.contains("Fig. 3"));
+        let lines: Vec<&str> = t.lines().collect();
+        // Swap line = header + depth prefetch lines + 1.
+        let swap = lines[1 + 3 + 1];
+        assert!(swap.contains("   10"), "swap line: {swap}");
+        assert!(swap.contains("   12"), "swap line: {swap}");
+    }
+
+    #[test]
+    fn b2_stable_during_prefetch() {
+        let t = fig3_trace(3);
+        let lines: Vec<&str> = t.lines().collect();
+        // Second set's prefetch lines (after the first swap) must keep
+        // the first set's B2 values (10..12) while B1 refills (50..).
+        for l in &lines[6..8] {
+            assert!(l.contains("   10") || l.contains("   11") || l.contains("   12"));
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Two-domain clocking: the DPU-style Clk×1 / Clk×2 scheme.
+//!
+//! The DPUCZDX8G (and the paper's enhanced engine) run DSP48E2s at twice
+//! the fabric clock. In a synchronous 2:1 ratio every slow edge
+//! coincides with a fast edge; the *other* fast edge falls mid-slow-
+//! cycle. The scheduler hands engines a deterministic edge sequence:
+//!
+//! ```text
+//! slow:  |S0        |S1        |S2        ...
+//! fast:  |F0   |F1  |F0   |F1  |F0   |F1  ...  (F0 aligned with slow)
+//! ```
+//!
+//! Engines tick fast-domain logic on every fast edge and slow-domain
+//! logic only on `Phase::Aligned` edges.
+
+/// Which clock an element belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ClockDomain {
+    /// Clk×1 — the fabric clock (e.g. 333 MHz on the paper's ZU3EG runs).
+    Slow,
+    /// Clk×2 — the DSP clock (e.g. 666 MHz).
+    Fast,
+}
+
+/// Position of a fast edge relative to the slow clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Fast edge coinciding with a slow edge (slow logic also ticks).
+    Aligned,
+    /// The mid-cycle fast edge (fast logic only).
+    Mid,
+}
+
+/// Frequency plan for the two domains, used by timing/power models.
+#[derive(Debug, Clone, Copy)]
+pub struct ClockPlan {
+    pub slow_mhz: f64,
+    pub fast_mhz: f64,
+}
+
+impl ClockPlan {
+    /// The paper's DPU experiment plan: 333/666 MHz on XCZU3EG.
+    pub fn dpu_paper() -> Self {
+        ClockPlan {
+            slow_mhz: 333.0,
+            fast_mhz: 666.0,
+        }
+    }
+
+    /// Single-domain plan (WS engines): everything at `mhz`.
+    pub fn single(mhz: f64) -> Self {
+        ClockPlan {
+            slow_mhz: mhz,
+            fast_mhz: mhz,
+        }
+    }
+}
+
+/// Deterministic generator of the fast-edge sequence.
+#[derive(Debug, Clone, Default)]
+pub struct TwoDomainClock {
+    fast_edges: u64,
+}
+
+impl TwoDomainClock {
+    pub fn new() -> Self {
+        TwoDomainClock::default()
+    }
+
+    /// Advance one fast edge; returns its phase.
+    pub fn next_edge(&mut self) -> Phase {
+        let phase = if self.fast_edges % 2 == 0 {
+            Phase::Aligned
+        } else {
+            Phase::Mid
+        };
+        self.fast_edges += 1;
+        phase
+    }
+
+    /// Fast edges elapsed.
+    pub fn fast_cycles(&self) -> u64 {
+        self.fast_edges
+    }
+
+    /// Completed slow cycles.
+    pub fn slow_cycles(&self) -> u64 {
+        self.fast_edges / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alternates_phases_starting_aligned() {
+        let mut clk = TwoDomainClock::new();
+        assert_eq!(clk.next_edge(), Phase::Aligned);
+        assert_eq!(clk.next_edge(), Phase::Mid);
+        assert_eq!(clk.next_edge(), Phase::Aligned);
+        assert_eq!(clk.next_edge(), Phase::Mid);
+        assert_eq!(clk.fast_cycles(), 4);
+        assert_eq!(clk.slow_cycles(), 2);
+    }
+
+    #[test]
+    fn plan_ratios() {
+        let p = ClockPlan::dpu_paper();
+        assert!((p.fast_mhz / p.slow_mhz - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,254 @@
+//! CLB-side sequential primitives: flip-flop banks, staging chains and
+//! LUT multiplexers — with toggle accounting for the power model.
+
+use super::clock::ClockDomain;
+
+/// A bank of CLB flip-flops holding `width`-bit values.
+///
+/// One `FfBank` entry = `width` physical FDRE cells; `toggles` counts
+/// *bit* toggles so power integrates real switching activity.
+#[derive(Debug, Clone)]
+pub struct FfBank {
+    values: Vec<i64>,
+    width: u32,
+    domain: ClockDomain,
+    toggles: u64,
+    ticks: u64,
+}
+
+impl FfBank {
+    pub fn new(len: usize, width: u32, domain: ClockDomain) -> Self {
+        assert!(width <= 64);
+        FfBank {
+            values: vec![0; len],
+            width,
+            domain,
+            toggles: 0,
+            ticks: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Physical flip-flop count (len × width).
+    pub fn ff_count(&self) -> usize {
+        self.values.len() * self.width as usize
+    }
+
+    pub fn domain(&self) -> ClockDomain {
+        self.domain
+    }
+
+    pub fn get(&self, i: usize) -> i64 {
+        self.values[i]
+    }
+
+    /// Clock entry `i` with `v` (when `ce`); counts bit toggles.
+    pub fn clock(&mut self, i: usize, v: i64, ce: bool) {
+        self.ticks += 1;
+        if !ce {
+            return;
+        }
+        let mask = if self.width == 64 {
+            !0u64
+        } else {
+            (1u64 << self.width) - 1
+        };
+        let old = self.values[i] as u64 & mask;
+        let new = v as u64 & mask;
+        self.toggles += (old ^ new).count_ones() as u64;
+        self.values[i] = v;
+    }
+
+    /// Total bit toggles so far (power-model input).
+    pub fn toggles(&self) -> u64 {
+        self.toggles
+    }
+
+    /// Mean toggle rate per FF per tick (0..=1), for reporting.
+    pub fn toggle_rate(&self) -> f64 {
+        if self.ticks == 0 || self.ff_count() == 0 {
+            return 0.0;
+        }
+        // ticks counts clock() calls; each call touches one entry.
+        self.toggles as f64 / (self.ticks as f64 * self.width as f64)
+    }
+
+    pub fn reset(&mut self) {
+        for v in &mut self.values {
+            *v = 0;
+        }
+    }
+}
+
+/// A horizontal staging (shift) chain of registers — the CLB pipeline
+/// that carries activations across a systolic row. `depth` stages of
+/// `width` bits; shifting in advances every stage.
+#[derive(Debug, Clone)]
+pub struct StagingChain {
+    stages: Vec<i64>,
+    width: u32,
+    domain: ClockDomain,
+    toggles: u64,
+}
+
+impl StagingChain {
+    pub fn new(depth: usize, width: u32, domain: ClockDomain) -> Self {
+        StagingChain {
+            stages: vec![0; depth],
+            width,
+            domain,
+            toggles: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn ff_count(&self) -> usize {
+        self.stages.len() * self.width as usize
+    }
+
+    pub fn domain(&self) -> ClockDomain {
+        self.domain
+    }
+
+    /// Value currently at stage `i` (0 = first stage after input).
+    pub fn stage(&self, i: usize) -> i64 {
+        self.stages[i]
+    }
+
+    /// Last stage (the chain's output).
+    pub fn out(&self) -> i64 {
+        *self.stages.last().expect("empty chain has no output")
+    }
+
+    /// Shift `v` in; every stage advances one position.
+    pub fn shift(&mut self, v: i64) {
+        let mask = if self.width == 64 {
+            !0u64
+        } else {
+            (1u64 << self.width) - 1
+        };
+        let mut incoming = v;
+        for s in &mut self.stages {
+            let old = *s as u64 & mask;
+            let new = incoming as u64 & mask;
+            self.toggles += (old ^ new).count_ones() as u64;
+            let next_in = *s;
+            *s = incoming;
+            incoming = next_in;
+        }
+    }
+
+    pub fn toggles(&self) -> u64 {
+        self.toggles
+    }
+
+    pub fn reset(&mut self) {
+        for s in &mut self.stages {
+            *s = 0;
+        }
+    }
+}
+
+/// A LUT-based 2:1 multiplexer bank (the CLB DDR mux the paper's in-DSP
+/// multiplexing eliminates). `width` LUTs wide; counts select toggles.
+#[derive(Debug, Clone)]
+pub struct LutMux {
+    width: u32,
+    domain: ClockDomain,
+    selects: u64,
+}
+
+impl LutMux {
+    pub fn new(width: u32, domain: ClockDomain) -> Self {
+        LutMux {
+            width,
+            domain,
+            selects: 0,
+        }
+    }
+
+    /// LUT count (one per bit).
+    pub fn lut_count(&self) -> usize {
+        self.width as usize
+    }
+
+    pub fn domain(&self) -> ClockDomain {
+        self.domain
+    }
+
+    /// Select between two operands (counts activity).
+    pub fn select(&mut self, sel: bool, a: i64, b: i64) -> i64 {
+        self.selects += 1;
+        if sel {
+            b
+        } else {
+            a
+        }
+    }
+
+    pub fn activity(&self) -> u64 {
+        self.selects
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ffbank_counts_bit_toggles() {
+        let mut bank = FfBank::new(2, 8, ClockDomain::Slow);
+        bank.clock(0, 0b1111_0000, true);
+        assert_eq!(bank.toggles(), 4);
+        bank.clock(0, 0b1111_0001, true);
+        assert_eq!(bank.toggles(), 5);
+        bank.clock(1, -1, true); // 8 bits flip
+        assert_eq!(bank.toggles(), 13);
+    }
+
+    #[test]
+    fn ffbank_ce_gates_capture() {
+        let mut bank = FfBank::new(1, 8, ClockDomain::Slow);
+        bank.clock(0, 0xFF, false);
+        assert_eq!(bank.get(0), 0);
+        assert_eq!(bank.toggles(), 0);
+    }
+
+    #[test]
+    fn staging_chain_shifts_in_order() {
+        let mut chain = StagingChain::new(3, 8, ClockDomain::Slow);
+        chain.shift(1);
+        chain.shift(2);
+        chain.shift(3);
+        assert_eq!(chain.stage(0), 3);
+        assert_eq!(chain.stage(1), 2);
+        assert_eq!(chain.out(), 1);
+        chain.shift(4);
+        assert_eq!(chain.out(), 2);
+    }
+
+    #[test]
+    fn staging_ff_count() {
+        let chain = StagingChain::new(14, 16, ClockDomain::Slow);
+        assert_eq!(chain.ff_count(), 224);
+    }
+
+    #[test]
+    fn lutmux_selects_and_counts() {
+        let mut mux = LutMux::new(8, ClockDomain::Fast);
+        assert_eq!(mux.select(false, 3, 9), 3);
+        assert_eq!(mux.select(true, 3, 9), 9);
+        assert_eq!(mux.activity(), 2);
+        assert_eq!(mux.lut_count(), 8);
+    }
+}

@@ -1,0 +1,14 @@
+//! FPGA fabric substrate: CLB-side primitives and the two-domain clock.
+//!
+//! The engines combine [`crate::dsp::Dsp48e2`] slices (hard blocks) with
+//! the CLB-side state modeled here: flip-flop banks, shift/staging
+//! chains and LUT multiplexers. Every primitive counts its toggles so
+//! the [`crate::cost::power`] model can integrate activity instead of
+//! guessing, and each knows its clock domain so the DDR engines account
+//! fast-domain activity at the right rate.
+
+mod clock;
+mod ff;
+
+pub use clock::{ClockDomain, ClockPlan, Phase, TwoDomainClock};
+pub use ff::{FfBank, LutMux, StagingChain};

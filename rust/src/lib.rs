@@ -1,0 +1,43 @@
+//! # dsp48-systolic
+//!
+//! A production-quality reproduction of *"Revealing Untapped DSP
+//! Optimization Potentials for FPGA-Based Systolic Matrix Engines"*
+//! (Li et al., 2024) as a hardware/software co-design framework.
+//!
+//! The paper contributes three DSP48E2 micro-architectural techniques:
+//!
+//! 1. **In-DSP operand prefetching** — absorbing the weight ping-pong
+//!    registers of a weight-stationary (WS) systolic array into the
+//!    DSP48E2's flexible B input pipeline + BCIN cascade ([`engines::ws`]).
+//! 2. **In-DSP multiplexing** — double-data-rate operation without CLB
+//!    multiplexers, by ping-ponging the B1/B2 registers and toggling the
+//!    INMODE dynamic select at the fast clock ([`engines::os`]).
+//! 3. **Ring accumulator** — two cascaded fast-domain DSP48E2s replacing
+//!    the slow-domain accumulator pair + LUT adder tree
+//!    ([`engines::os`]).
+//!
+//! Because the paper's testbed (Vivado + XCZU3EG + the encrypted Vitis AI
+//! DPU) is unavailable, this crate implements the full evaluation
+//! substrate: a bit-accurate [`dsp`] model, a cycle-accurate [`fabric`]
+//! clocking/primitive layer, structural [`cost`] models (resource counts
+//! emerge from elaborated inventories), all four TPUv1-like WS baselines,
+//! both DPU OS engines and both FireFly SNN crossbars from the paper's
+//! Tables I–III.
+//!
+//! The *numerics* of the matrix engine also exist as JAX/Pallas kernels
+//! (see `python/compile/`), AOT-lowered to HLO and executed from the
+//! [`runtime`] via PJRT — python never runs at serve time. The
+//! [`coordinator`] ties the two together: it schedules tiled GEMM jobs
+//! onto cycle-accurate engines (for cost) and onto the PJRT executables
+//! (for values), asserting they agree bit-for-bit.
+
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod dsp;
+pub mod engines;
+pub mod fabric;
+pub mod packing;
+pub mod runtime;
+pub mod util;
+pub mod workload;

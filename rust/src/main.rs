@@ -1,0 +1,405 @@
+//! `dsp48-systolic` CLI — the leader entrypoint.
+//!
+//! ```text
+//! dsp48-systolic report --table all           # Tables I / II / III
+//! dsp48-systolic simulate --engine ws-dsp-fetch --m 64 --k 14 --n 14
+//! dsp48-systolic serve --jobs 16 --workers 2 --engine ws-dsp-fetch
+//! dsp48-systolic sweep --min 6 --max 14       # tinyTPU-style size sweep
+//! dsp48-systolic waveform --fig 3|5|6         # paper waveform traces
+//! dsp48-systolic artifacts                    # list AOT registry
+//! ```
+
+use dsp48_systolic::coordinator::service::{run_gemm_tiled, EngineKind};
+use dsp48_systolic::coordinator::{GemmTiler, Job, Service, ServiceConfig};
+use dsp48_systolic::cost::report::{render_table, render_breakdown};
+use dsp48_systolic::engines::os::{OsConfig, OsEngine, OsVariant};
+use dsp48_systolic::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
+use dsp48_systolic::engines::ws::{WsConfig, WsEngine, WsVariant};
+use dsp48_systolic::engines::Engine;
+use dsp48_systolic::runtime::ArtifactRegistry;
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::gemm::golden_gemm;
+use dsp48_systolic::workload::MatI8;
+use std::collections::HashMap;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, flags) = parse_args(&args);
+    let code = match cmd.as_deref() {
+        Some("report") => cmd_report(&flags),
+        Some("simulate") => cmd_simulate(&flags),
+        Some("serve") => cmd_serve(&flags),
+        Some("sweep") => cmd_sweep(&flags),
+        Some("waveform") => cmd_waveform(&flags),
+        Some("artifacts") => cmd_artifacts(&flags),
+        _ => {
+            eprintln!(
+                "usage: dsp48-systolic <report|simulate|serve|sweep|waveform|artifacts> [--flag value ...]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_args(args: &[String]) -> (Option<String>, HashMap<String, String>) {
+    let mut flags = HashMap::new();
+    let cmd = args.first().cloned();
+    let mut i = 1;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .filter(|v| !v.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| "true".to_string());
+            let step = if args.get(i + 1).is_some_and(|v| !v.starts_with("--")) {
+                2
+            } else {
+                1
+            };
+            flags.insert(key.to_string(), val);
+            i += step;
+        } else {
+            i += 1;
+        }
+    }
+    (cmd, flags)
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn cmd_report(flags: &HashMap<String, String>) -> i32 {
+    let which = flags.get("table").map(String::as_str).unwrap_or("all");
+    if which == "1" || which == "all" {
+        let rows: Vec<_> = [
+            WsVariant::TinyTpu,
+            WsVariant::Libano,
+            WsVariant::ClbFetch,
+            WsVariant::DspFetch,
+        ]
+        .iter()
+        .map(|&v| WsEngine::new(WsConfig::paper_14x14_for(v)).table_row())
+        .collect();
+        print!(
+            "{}",
+            render_table("Table I — INT8 14x14 TPUv1-like engines (XCZU3EG)", &rows)
+        );
+        println!();
+    }
+    if which == "2" || which == "all" {
+        let official = OsEngine::new(OsConfig::b1024(OsVariant::Official));
+        let ours = OsEngine::new(OsConfig::b1024(OsVariant::Enhanced));
+        let (oi, ui) = (official.inventory(), ours.inventory());
+        use dsp48_systolic::cost::resource::Primitive::*;
+        let fmt = |v: usize| v.to_string();
+        let rows = vec![
+            ("WgtWidth".into(), "512b".into(), "512b".into()),
+            ("ImgWidth".into(), "512b".into(), "256b".into()),
+            ("PsumWidth".into(), "2304b".into(), "2304b".into()),
+            (
+                "MultDSP".into(),
+                fmt(oi.total_matching(Dsp, "mult")),
+                fmt(ui.total_matching(Dsp, "mult")),
+            ),
+            (
+                "AccDSP".into(),
+                fmt(oi.total_matching(Dsp, "accumulators")),
+                fmt(ui.total_matching(Dsp, "ring")),
+            ),
+            (
+                "MuxLUT".into(),
+                fmt(oi.total_matching(Lut, "mux")),
+                fmt(ui.total_matching(Lut, "mux")),
+            ),
+            (
+                "AddTreeLUT".into(),
+                fmt(oi.total_matching(Lut, "AddTree")),
+                fmt(ui.total_matching(Lut, "AddTree")),
+            ),
+            (
+                "AddTreeFF".into(),
+                fmt(oi.total_matching(Ff, "AddTree")),
+                fmt(ui.total_matching(Ff, "AddTree")),
+            ),
+            (
+                "AddTreeCarry".into(),
+                fmt(oi.total_matching(Carry8, "AddTree")),
+                fmt(ui.total_matching(Carry8, "AddTree")),
+            ),
+            (
+                "TotalLUT".into(),
+                fmt(oi.total(Lut)),
+                fmt(ui.total(Lut)),
+            ),
+            ("TotalFF".into(), fmt(oi.total(Ff)), fmt(ui.total(Ff))),
+            (
+                "Freq".into(),
+                format!("{:.0}M", official.timing().report().target_mhz),
+                format!("{:.0}M", ours.timing().report().target_mhz),
+            ),
+            (
+                "WNS".into(),
+                format!("{:.3}", official.timing().report().wns_ns),
+                format!("{:.3}", ours.timing().report().wns_ns),
+            ),
+            (
+                "Power".into(),
+                format!("{:.3}W", official.table_row().power_w),
+                format!("{:.3}W", ours.table_row().power_w),
+            ),
+        ];
+        print!(
+            "{}",
+            render_breakdown("Table II — DPU B1024 systolic engine breakdown", &rows)
+        );
+        println!();
+    }
+    if which == "3" || which == "all" {
+        let rows: Vec<_> = [SnnVariant::FireFly, SnnVariant::Enhanced]
+            .iter()
+            .map(|&v| SnnEngine::new(SnnConfig::paper_32x32(v)).table_row())
+            .collect();
+        print!(
+            "{}",
+            render_table("Table III — FireFly 32x32 crossbar (XCZU3EG)", &rows)
+        );
+    }
+    0
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
+    let kind = flags
+        .get("engine")
+        .and_then(|k| EngineKind::parse(k))
+        .unwrap_or(EngineKind::WsDspFetch);
+    let m = flag_usize(flags, "m", 64);
+    let k = flag_usize(flags, "k", 14);
+    let n = flag_usize(flags, "n", 14);
+    let seed = flag_usize(flags, "seed", 1) as u64;
+    let cfg = ServiceConfig {
+        kind,
+        workers: 1,
+        ws_rows: flag_usize(flags, "rows", 14),
+        ws_cols: flag_usize(flags, "cols", 14),
+        verify: true,
+    };
+    let mut engine = cfg.build_engine();
+    let tiler = match kind {
+        EngineKind::WsTinyTpu
+        | EngineKind::WsLibano
+        | EngineKind::WsClbFetch
+        | EngineKind::WsDspFetch => Some(GemmTiler::new(cfg.ws_rows, cfg.ws_cols)),
+        _ => None,
+    };
+    let mut rng = XorShift::new(seed);
+    let a = MatI8::random_bounded(&mut rng, m, k, 63);
+    let w = MatI8::random(&mut rng, k, n);
+    match run_gemm_tiled(engine.as_mut(), tiler.as_ref(), &a, &w) {
+        Ok((out, stats)) => {
+            let ok = out == golden_gemm(&a, &w);
+            let plan = engine.clock_plan();
+            println!("engine    : {}", engine.name());
+            println!("problem   : {}x{} @ {}x{} ({} MACs)", m, k, k, n, stats.macs);
+            println!("cycles    : {} slow ({} fast)", stats.cycles, stats.fast_cycles);
+            println!(
+                "simulated : {:.3} us @ {:.0} MHz",
+                stats.cycles as f64 / plan.slow_mhz,
+                plan.slow_mhz
+            );
+            println!(
+                "macs/cyc  : {:.1} (peak {}) -> {:.1}% util",
+                stats.macs_per_cycle(),
+                engine.peak_macs_per_cycle(),
+                100.0 * stats.utilization(engine.peak_macs_per_cycle())
+            );
+            println!("wgt loads : {} ({} stall cycles)", stats.weight_loads, stats.weight_stall_cycles);
+            println!("verified  : {}", if ok { "bit-exact vs golden" } else { "MISMATCH" });
+            i32::from(!ok)
+        }
+        Err(e) => {
+            eprintln!("simulate failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
+    let cfg = if let Some(path) = flags.get("config") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                return 1;
+            }
+        };
+        match dsp48_systolic::config::Config::parse(&text)
+            .and_then(|c| c.service_config())
+        {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+    } else {
+        ServiceConfig {
+            kind: flags
+                .get("engine")
+                .and_then(|k| EngineKind::parse(k))
+                .unwrap_or(EngineKind::WsDspFetch),
+            workers: flag_usize(flags, "workers", 2),
+            ws_rows: flag_usize(flags, "rows", 14),
+            ws_cols: flag_usize(flags, "cols", 14),
+            verify: true,
+        }
+    };
+    let jobs = flag_usize(flags, "jobs", 16);
+    println!(
+        "serving {} jobs on {} x {} workers",
+        jobs,
+        cfg.kind.label(),
+        cfg.workers
+    );
+    let mut svc = Service::start(cfg);
+    let mut rng = XorShift::new(7);
+    for _ in 0..jobs {
+        let a = MatI8::random_bounded(&mut rng, 16, 28, 63);
+        let w = MatI8::random(&mut rng, 28, 28);
+        svc.submit(Job::Gemm { a, w });
+    }
+    let mut failures = 0;
+    for _ in 0..jobs {
+        match svc.recv_timeout(Duration::from_secs(60)) {
+            Some(r) if r.verified == Some(true) => {}
+            Some(_) => failures += 1,
+            None => {
+                eprintln!("timeout waiting for job");
+                failures += 1;
+            }
+        }
+    }
+    println!("{}", svc.metrics.summary());
+    svc.shutdown();
+    i32::from(failures > 0)
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> i32 {
+    let min = flag_usize(flags, "min", 6);
+    let max = flag_usize(flags, "max", 14);
+    println!(
+        "{:<6} {:<12} {:>7} {:>7} {:>5} {:>7} {:>8}",
+        "size", "design", "LUT", "FF", "DSP", "fmax", "power"
+    );
+    for size in min..=max {
+        for variant in [WsVariant::TinyTpu, WsVariant::DspFetch] {
+            let cfg = WsConfig {
+                variant,
+                rows: size,
+                cols: size,
+                target_mhz: if variant == WsVariant::TinyTpu { 400.0 } else { 666.0 },
+                strict_guard: false,
+            };
+            let eng = WsEngine::new(cfg);
+            let row = eng.table_row();
+            let fmax = eng.timing().report().fmax_mhz;
+            println!(
+                "{:<6} {:<12} {:>7} {:>7} {:>5} {:>7.0} {:>7.3}W",
+                format!("{size}x{size}"),
+                variant.label(),
+                row.lut,
+                row.ff,
+                row.dsp,
+                fmax,
+                row.power_w
+            );
+        }
+    }
+    0
+}
+
+fn cmd_waveform(flags: &HashMap<String, String>) -> i32 {
+    // Delegates to the same trace generators the fig_waveforms example
+    // uses; keep the CLI self-contained.
+    let fig = flags.get("fig").map(String::as_str).unwrap_or("3");
+    match fig {
+        "3" => dsp48_systolic::engines::ws::waveforms::print_fig3(),
+        "5" => dsp48_systolic::engines::os::waveforms::print_fig5(),
+        "6" => dsp48_systolic::engines::os::waveforms::print_fig6(),
+        other => {
+            eprintln!("unknown figure `{other}` (have 3, 5, 6)");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_artifacts(_flags: &HashMap<String, String>) -> i32 {
+    match ArtifactRegistry::open_default() {
+        Ok(reg) => {
+            println!("artifact registry at {:?}:", reg.dir());
+            for name in reg.names() {
+                let e = reg.entry(name).unwrap();
+                println!(
+                    "  {:<32} {} in / {} out  ({})",
+                    e.name,
+                    e.inputs.len(),
+                    e.outputs.len(),
+                    e.file.file_name().unwrap().to_string_lossy()
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let (cmd, flags) = parse_args(&args(&[
+            "simulate", "--engine", "os-enhanced", "--m", "8", "--verbose",
+        ]));
+        assert_eq!(cmd.as_deref(), Some("simulate"));
+        assert_eq!(flags.get("engine").map(String::as_str), Some("os-enhanced"));
+        assert_eq!(flag_usize(&flags, "m", 0), 8);
+        // Valueless flags default to "true".
+        assert_eq!(flags.get("verbose").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn adjacent_flags_do_not_consume_each_other() {
+        let (_, flags) = parse_args(&args(&["serve", "--verify", "--jobs", "4"]));
+        assert_eq!(flags.get("verify").map(String::as_str), Some("true"));
+        assert_eq!(flag_usize(&flags, "jobs", 0), 4);
+    }
+
+    #[test]
+    fn missing_flag_uses_default() {
+        let (_, flags) = parse_args(&args(&["sweep"]));
+        assert_eq!(flag_usize(&flags, "min", 6), 6);
+    }
+
+    #[test]
+    fn no_args_no_command() {
+        let (cmd, flags) = parse_args(&[]);
+        assert!(cmd.is_none());
+        assert!(flags.is_empty());
+    }
+}

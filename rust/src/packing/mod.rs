@@ -1,0 +1,279 @@
+//! INT8 (and INT4 / SIMD12) operand-packing algebra for the DSP48E2.
+//!
+//! This module is the *rust twin* of `python/compile/kernels/ref.py`:
+//! the same lane geometry, the same sign-correction, the same guard-band
+//! constant. The python property tests (hypothesis) and the rust ones
+//! (`util::quickcheck`) pin the identical contract so the functional
+//! (Pallas) and structural (cycle-accurate) models cannot drift apart.
+//!
+//! ## The WP487 trick
+//!
+//! Two INT8 values `hi` and `lo` are packed into one wide operand at an
+//! 18-bit offset — in hardware the pre-adder computes `(hi << 18) + lo`
+//! from the A and D ports. One 27x18 multiply by a shared INT8 operand
+//! `w` then yields both products in one product word:
+//!
+//! ```text
+//! (hi*2^18 + lo) * w  =  hi*w * 2^18  +  lo*w
+//! ```
+//!
+//! Splitting the 45-bit result at bit 18 recovers `lo*w` as a signed
+//! 18-bit field; when that field is negative the `hi*w` lane must absorb
+//! a +1 borrow — the famous correction step, which the paper's ring
+//! accumulator folds into the DSP's W-multiplexer RND constant.
+
+mod int4;
+mod simd12;
+
+pub use int4::{cross_products_i4, pack_i4_pair};
+pub use simd12::{simd12_accumulate, Simd12Lanes};
+
+/// Bit position of the high product lane (the packing offset).
+pub const LANE_BITS: u32 = 18;
+/// Mask of the low lane.
+pub const LANE_MASK: i64 = (1 << LANE_BITS) - 1;
+/// Sign bit value of an 18-bit lane.
+pub const LANE_SIGN: i64 = 1 << (LANE_BITS - 1);
+
+/// Deepest packed cascade that is exact for worst-case INT8 inputs.
+///
+/// `|i8 * i8| <= 2^14`, so a cascade of depth `d` keeps the low lane in
+/// `[-2^17, 2^17)` as long as `d * 2^14 < 2^17`, i.e. `d <= 7`. Engines
+/// and kernels drain at most every `GUARD_DEPTH` stages; the paper's
+/// 14-deep columns rely on typical data instead (see DESIGN.md).
+pub const GUARD_DEPTH: usize = 7;
+
+/// Pack two INT8 operands into the wide pre-adder word `(hi << 18) + lo`.
+///
+/// This is what the DSP48E2 pre-adder produces with `hi` (pre-shifted)
+/// on the A port and `lo` on the D port. The result fits the 27-bit
+/// pre-adder output: `|packed| <= 127*2^18 + 128 < 2^26`.
+#[inline]
+pub fn pack_i8_pair(hi: i8, lo: i8) -> i64 {
+    ((hi as i64) << LANE_BITS) + lo as i64
+}
+
+/// Split a packed product (or packed-product *sum*) into `(hi, lo)` lanes
+/// with the sign-correction step.
+///
+/// Exact whenever the accumulated low lane lies in `[-2^17, 2^17)` — see
+/// [`GUARD_DEPTH`]. The returned lanes always satisfy
+/// `hi * 2^18 + lo == p` and `-2^17 <= lo < 2^17`.
+#[inline]
+pub fn unpack_prod(p: i64) -> (i64, i64) {
+    let low_u = p & LANE_MASK;
+    // Sign-extend the 18-bit field.
+    let lo = low_u - ((low_u & LANE_SIGN) << 1);
+    let hi = (p - lo) >> LANE_BITS;
+    (hi, lo)
+}
+
+/// One packed MAC through the full algebra: returns `(hi*w, lo*w)`.
+///
+/// Exact for every INT8 input (single product, guard band trivially ok).
+#[inline]
+pub fn packed_mac(hi: i8, lo: i8, w: i8) -> (i32, i32) {
+    let prod = pack_i8_pair(hi, lo) * w as i64;
+    let (h, l) = unpack_prod(prod);
+    (h as i32, l as i32)
+}
+
+/// Packed dot product of a cascade segment, as the hardware computes it:
+/// a single 48-bit accumulation of packed products, split once at drain.
+///
+/// Returns `Err(GuardOverflow)` when the low-lane sum leaves the guard
+/// band — the condition the cycle-accurate engines check per segment.
+pub fn packed_dot_segment(
+    hi: &[i8],
+    lo: &[i8],
+    w: &[i8],
+) -> Result<(i32, i32), GuardOverflow> {
+    assert_eq!(hi.len(), lo.len());
+    assert_eq!(hi.len(), w.len());
+    let mut acc: i64 = 0;
+    for i in 0..hi.len() {
+        acc += pack_i8_pair(hi[i], lo[i]) * w[i] as i64;
+    }
+    let (h, l) = unpack_prod(acc);
+    // Cross-check against the exact per-lane sums: detection, not trust.
+    let exact_lo: i64 = lo
+        .iter()
+        .zip(w)
+        .map(|(&a, &b)| a as i64 * b as i64)
+        .sum();
+    if !(-LANE_SIGN..LANE_SIGN).contains(&exact_lo) {
+        return Err(GuardOverflow {
+            lane_sum: exact_lo,
+            depth: hi.len(),
+        });
+    }
+    debug_assert_eq!(l, exact_lo);
+    Ok((h as i32, l as i32))
+}
+
+/// Full-length packed dot product with automatic guard-band segmentation
+/// (drain every [`GUARD_DEPTH`] stages): exact for all INT8 inputs.
+pub fn packed_dot(hi: &[i8], lo: &[i8], w: &[i8]) -> (i32, i32) {
+    let mut out = (0i32, 0i32);
+    let mut i = 0;
+    while i < hi.len() {
+        let j = (i + GUARD_DEPTH).min(hi.len());
+        let (h, l) = packed_dot_segment(&hi[i..j], &lo[i..j], &w[i..j])
+            .expect("segment within GUARD_DEPTH cannot overflow");
+        out.0 += h;
+        out.1 += l;
+        i = j;
+    }
+    out
+}
+
+/// The guard band was exceeded during a packed accumulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GuardOverflow {
+    /// The exact low-lane sum that left `[-2^17, 2^17)`.
+    pub lane_sum: i64,
+    /// Cascade depth at which it happened.
+    pub depth: usize,
+}
+
+impl std::fmt::Display for GuardOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "packed low-lane sum {} out of guard band at depth {}",
+            self.lane_sum, self.depth
+        )
+    }
+}
+
+impl std::error::Error for GuardOverflow {}
+
+/// The INT8-packing *correction constant* for the W-mux RND port.
+///
+/// When a drained low lane is negative the high lane needs +1. Over an
+/// accumulation round of `n` drains the expected correction can be
+/// pre-biased through the DSP's RND constant instead of LUT logic —
+/// the paper's ring-accumulator observation (§V-C). This helper returns
+/// the RND value that folds a constant `bias` plus the worst-case
+/// rounding offset for `n`-drain rounds.
+#[inline]
+pub fn rnd_correction_constant(bias: i64, n_drains: u32) -> i64 {
+    // Each drain contributes its borrow via the lane split itself; the
+    // RND constant carries the *bias* term so no CLB adder is needed.
+    // (The per-drain borrow is data-dependent and already folded by
+    // `unpack_prod`; n_drains is kept in the signature because the OS
+    // engine pre-scales the bias when it is applied once per n drains.)
+    let _ = n_drains;
+    bias
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    #[test]
+    fn pack_is_affine() {
+        for hi in [-128i8, -1, 0, 1, 127] {
+            for lo in [-128i8, -1, 0, 1, 127] {
+                assert_eq!(
+                    pack_i8_pair(hi, lo),
+                    (hi as i64) * (1 << 18) + (lo as i64)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_roundtrip_and_lane_range() {
+        let mut rng = XorShift::new(7);
+        for _ in 0..10_000 {
+            let p = (rng.next_u64() as i64) >> 18; // 46-bit values
+            let (hi, lo) = unpack_prod(p);
+            assert_eq!(hi * (1 << 18) + lo, p);
+            assert!((-LANE_SIGN..LANE_SIGN).contains(&lo));
+        }
+    }
+
+    #[test]
+    fn single_mac_exact_exhaustive_corners() {
+        let corners = [-128i8, -127, -65, -1, 0, 1, 64, 126, 127];
+        for &hi in &corners {
+            for &lo in &corners {
+                for &w in &corners {
+                    let (h, l) = packed_mac(hi, lo, w);
+                    assert_eq!(h, hi as i32 * w as i32, "hi {hi} {lo} {w}");
+                    assert_eq!(l, lo as i32 * w as i32, "lo {hi} {lo} {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_mac_exact_random() {
+        let mut rng = XorShift::new(1);
+        for _ in 0..100_000 {
+            let (hi, lo, w) = (rng.next_i8(), rng.next_i8(), rng.next_i8());
+            let (h, l) = packed_mac(hi, lo, w);
+            assert_eq!(h, hi as i32 * w as i32);
+            assert_eq!(l, lo as i32 * w as i32);
+        }
+    }
+
+    #[test]
+    fn guard_depth_is_tight() {
+        let worst = 128 * 128i64;
+        assert!((GUARD_DEPTH as i64) * worst < LANE_SIGN);
+        assert!((GUARD_DEPTH as i64 + 1) * worst >= LANE_SIGN);
+    }
+
+    #[test]
+    fn segment_within_guard_is_exact() {
+        let mut rng = XorShift::new(2);
+        for _ in 0..5_000 {
+            let n = 1 + (rng.next_u64() as usize) % GUARD_DEPTH;
+            let hi: Vec<i8> = (0..n).map(|_| rng.next_i8()).collect();
+            let lo: Vec<i8> = (0..n).map(|_| rng.next_i8()).collect();
+            let w: Vec<i8> = (0..n).map(|_| rng.next_i8()).collect();
+            let (h, l) = packed_dot_segment(&hi, &lo, &w).unwrap();
+            let eh: i32 = hi.iter().zip(&w).map(|(&a, &b)| a as i32 * b as i32).sum();
+            let el: i32 = lo.iter().zip(&w).map(|(&a, &b)| a as i32 * b as i32).sum();
+            assert_eq!((h, l), (eh, el));
+        }
+    }
+
+    #[test]
+    fn adversarial_deep_segment_overflows() {
+        let n = 16;
+        let hi = vec![0i8; n];
+        let lo = vec![-128i8; n];
+        let w = vec![-128i8; n];
+        let err = packed_dot_segment(&hi, &lo, &w).unwrap_err();
+        assert_eq!(err.lane_sum, 16 * 16384);
+        assert_eq!(err.depth, n);
+    }
+
+    #[test]
+    fn packed_dot_exact_for_all_inputs() {
+        let mut rng = XorShift::new(3);
+        for _ in 0..2_000 {
+            let n = 1 + (rng.next_u64() as usize) % 64;
+            let hi: Vec<i8> = (0..n).map(|_| rng.next_i8()).collect();
+            let lo: Vec<i8> = (0..n).map(|_| rng.next_i8()).collect();
+            let w: Vec<i8> = (0..n).map(|_| rng.next_i8()).collect();
+            let (h, l) = packed_dot(&hi, &lo, &w);
+            let eh: i32 = hi.iter().zip(&w).map(|(&a, &b)| a as i32 * b as i32).sum();
+            let el: i32 = lo.iter().zip(&w).map(|(&a, &b)| a as i32 * b as i32).sum();
+            assert_eq!((h, l), (eh, el));
+        }
+    }
+
+    #[test]
+    fn packed_dot_worst_case() {
+        let n = 56; // 8 full guard segments
+        let v = vec![-128i8; n];
+        let (h, l) = packed_dot(&v, &v, &v);
+        assert_eq!(h, n as i32 * 16384);
+        assert_eq!(l, n as i32 * 16384);
+    }
+}

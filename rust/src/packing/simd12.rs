@@ -1,0 +1,121 @@
+//! SIMD=FOUR12 lane arithmetic — the FireFly synaptic-crossbar mode.
+//!
+//! In FOUR12 mode the DSP48E2's 48-bit ALU splits into four independent
+//! 12-bit adders (carries do not propagate across lane boundaries).
+//! FireFly stores four 8-bit synaptic weights in the four lanes and
+//! accumulates them when the pre-synaptic spike selects the operand via
+//! the wide-bus multiplexers. A chain of 16 such DSPs forms a column of
+//! the 32x32 crossbar; lane headroom is 12-8 = 4 bits, so up to 16
+//! unsigned-spike accumulations are safe — exactly the chain length
+//! FireFly uses.
+
+/// Four signed 12-bit lanes packed into one 48-bit word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Simd12Lanes(pub u64);
+
+const LANE_W: u32 = 12;
+const LANE_MASK: u64 = (1 << LANE_W) - 1;
+
+impl Simd12Lanes {
+    /// Pack four int8 weights (sign-extended to 12 bits) into the lanes.
+    pub fn pack(w: [i8; 4]) -> Self {
+        let mut v = 0u64;
+        for (i, &x) in w.iter().enumerate() {
+            v |= ((x as i16 as u16 as u64) & LANE_MASK) << (LANE_W * i as u32);
+        }
+        Simd12Lanes(v)
+    }
+
+    /// Extract lane `i` as a signed value.
+    pub fn lane(&self, i: usize) -> i16 {
+        assert!(i < 4);
+        let raw = ((self.0 >> (LANE_W * i as u32)) & LANE_MASK) as u16;
+        // sign-extend 12 -> 16
+        ((raw << 4) as i16) >> 4
+    }
+
+    /// All four lanes.
+    pub fn lanes(&self) -> [i16; 4] {
+        [self.lane(0), self.lane(1), self.lane(2), self.lane(3)]
+    }
+}
+
+/// One SIMD=FOUR12 ALU step: `acc + rhs` per lane, carries confined.
+///
+/// This is the exact hardware semantic: each 12-bit lane wraps
+/// independently (two's complement); no cross-lane carry.
+pub fn simd12_accumulate(acc: Simd12Lanes, rhs: Simd12Lanes) -> Simd12Lanes {
+    let mut out = 0u64;
+    for i in 0..4 {
+        let a = acc.lane(i) as i32;
+        let b = rhs.lane(i) as i32;
+        let s = (a + b) as u32 as u64 & LANE_MASK;
+        out |= s << (LANE_W * i as u32);
+    }
+    Simd12Lanes(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    #[test]
+    fn pack_lane_roundtrip() {
+        let w = [-128i8, -1, 0, 127];
+        let lanes = Simd12Lanes::pack(w);
+        for i in 0..4 {
+            assert_eq!(lanes.lane(i), w[i] as i16);
+        }
+    }
+
+    #[test]
+    fn accumulate_matches_scalar_within_headroom() {
+        // 16 chained adds of int8 values stay inside 12-bit lanes.
+        let mut rng = XorShift::new(9);
+        for _ in 0..2_000 {
+            let ws: Vec<[i8; 4]> = (0..16)
+                .map(|_| {
+                    [rng.next_i8(), rng.next_i8(), rng.next_i8(), rng.next_i8()]
+                })
+                .collect();
+            let mut acc = Simd12Lanes::default();
+            let mut scalar = [0i32; 4];
+            for w in &ws {
+                // gate half the additions, like spikes would
+                if rng.next_u64() & 1 == 0 {
+                    continue;
+                }
+                acc = simd12_accumulate(acc, Simd12Lanes::pack(*w));
+                for i in 0..4 {
+                    scalar[i] += w[i] as i32;
+                }
+            }
+            for i in 0..4 {
+                // 16 * 128 = 2048 == 2^11: max magnitude exactly at the
+                // signed 12-bit boundary; wrap only at +2048, which the
+                // gating makes essentially unreachable — guard anyway.
+                if (-2048..2048).contains(&scalar[i]) {
+                    assert_eq!(acc.lane(i) as i32, scalar[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_are_isolated() {
+        // Overflow in lane 0 must not leak into lane 1.
+        let a = Simd12Lanes::pack([127, 1, 0, 0]);
+        let mut acc = Simd12Lanes::default();
+        for _ in 0..32 {
+            acc = simd12_accumulate(acc, a);
+        }
+        // lane0 wrapped (32*127 = 4064 > 2047), lane1 exact.
+        assert_eq!(acc.lane(1), 32);
+        assert_eq!(acc.lane(2), 0);
+        assert_eq!(acc.lane(3), 0);
+        let wrapped = ((32 * 127) as u64 & LANE_MASK) as u16;
+        let expect = ((wrapped << 4) as i16) >> 4;
+        assert_eq!(acc.lane(0), expect);
+    }
+}

@@ -1,0 +1,66 @@
+//! Golden test vectors exported by aot.py (`golden_gemm.bin`): the
+//! cross-language bit-exactness contract between the JAX/Pallas kernels
+//! and the rust engines/runtime.
+
+use crate::workload::{MatI32, MatI8};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// The concrete packed-GEMM instance with python-computed outputs.
+pub struct GoldenGemm {
+    pub a_hi: MatI8,
+    pub a_lo: MatI8,
+    pub w: MatI8,
+    pub hi: MatI32,
+    pub lo: MatI32,
+}
+
+/// Layout constants (see aot.py): all arrays row-major little-endian i32.
+const M: usize = 32;
+const K: usize = 64;
+const N: usize = 64;
+
+impl GoldenGemm {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("golden_gemm.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let words: Vec<i32> = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let expect = M * K + M * K + K * N + M * N + M * N;
+        anyhow::ensure!(
+            words.len() == expect,
+            "golden blob has {} words, expected {expect}",
+            words.len()
+        );
+        let mut off = 0;
+        let mut take_i8 = |rows: usize, cols: usize| -> MatI8 {
+            let data: Vec<i8> = words[off..off + rows * cols]
+                .iter()
+                .map(|&v| v as i8)
+                .collect();
+            off += rows * cols;
+            MatI8 { rows, cols, data }
+        };
+        let a_hi = take_i8(M, K);
+        let a_lo = take_i8(M, K);
+        let w = take_i8(K, N);
+        let hi = MatI32 {
+            rows: M,
+            cols: N,
+            data: words[off..off + M * N].to_vec(),
+        };
+        let lo = MatI32 {
+            rows: M,
+            cols: N,
+            data: words[off + M * N..off + 2 * M * N].to_vec(),
+        };
+        Ok(GoldenGemm { a_hi, a_lo, w, hi, lo })
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (M, K, N)
+    }
+}

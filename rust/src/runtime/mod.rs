@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the rust hot path. Python never runs at serve time.
+//!
+//! * [`ArtifactRegistry`] reads `artifacts/manifest.json` (written by
+//!   `python/compile/aot.py`), validates each entry's signature and
+//!   lazily compiles executables on the PJRT CPU client.
+//! * [`XlaRuntime`] wraps `xla::PjRtClient`:
+//!   `HloModuleProto::from_text_file` → `compile` → `execute`.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+mod client;
+mod golden;
+mod registry;
+
+pub use client::{LoadedModule, MixedBuf, TensorSpec, XlaRuntime};
+pub use golden::GoldenGemm;
+pub use registry::{ArtifactEntry, ArtifactRegistry};

@@ -1,0 +1,197 @@
+//! Artifact registry: manifest parsing + lazy compilation cache.
+
+use super::client::{LoadedModule, TensorSpec, XlaRuntime};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One manifest entry (an AOT-lowered module or a data blob).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The artifact set exported by `python/compile/aot.py`.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    entries: HashMap<String, ArtifactEntry>,
+    runtime: XlaRuntime,
+    compiled: HashMap<String, LoadedModule>,
+}
+
+fn parse_specs(v: Option<&Json>) -> Result<Vec<TensorSpec>> {
+    let Some(arr) = v.and_then(|v| v.as_array()) else {
+        return Ok(Vec::new()); // data blobs carry no signature
+    };
+    arr.iter()
+        .map(|spec| {
+            let dtype = spec
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| anyhow!("missing dtype"))?
+                .to_string();
+            let shape = spec
+                .get("shape")
+                .and_then(|s| s.as_array())
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|d| {
+                    d.as_i64()
+                        .filter(|&d| d >= 0)
+                        .map(|d| d as usize)
+                        .ok_or_else(|| anyhow!("bad dim"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { dtype, shape })
+        })
+        .collect()
+}
+
+impl ArtifactRegistry {
+    /// Open `dir/manifest.json` and validate every listed file exists.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let doc = Json::parse(&text).context("parsing manifest.json")?;
+        anyhow::ensure!(
+            doc.get("version").and_then(|v| v.as_i64()) == Some(1),
+            "unsupported manifest version"
+        );
+        let mut entries = HashMap::new();
+        for e in doc
+            .get("artifacts")
+            .and_then(|a| a.as_array())
+            .ok_or_else(|| anyhow!("manifest has no artifacts"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("artifact without name"))?
+                .to_string();
+            let file = dir.join(
+                e.get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("artifact without file"))?,
+            );
+            anyhow::ensure!(file.exists(), "artifact file missing: {file:?}");
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name,
+                    file,
+                    inputs: parse_specs(e.get("inputs"))?,
+                    outputs: parse_specs(e.get("outputs"))?,
+                },
+            );
+        }
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            entries,
+            runtime: XlaRuntime::cpu()?,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Default location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Self::open(Path::new("artifacts"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    /// Compile (once) and return the executable module for `name`.
+    pub fn module(&mut self, name: &str) -> Result<&LoadedModule> {
+        if !self.compiled.contains_key(name) {
+            let entry = self
+                .entries
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+                .clone();
+            anyhow::ensure!(
+                entry.file.extension().is_some_and(|e| e == "txt"),
+                "artifact `{name}` is a data blob, not an HLO module"
+            );
+            let module = self.runtime.load_hlo_text(
+                &entry.file,
+                entry.inputs,
+                entry.outputs,
+            )?;
+            self.compiled.insert(name.to_string(), module);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Find the packed-GEMM artifact matching `(m, k, n)` exactly.
+    pub fn gemm_artifact(&self, m: usize, k: usize, n: usize) -> Option<String> {
+        let name = format!("packed_gemm_m{m}_k{k}_n{n}");
+        self.entries.contains_key(&name).then_some(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Registry tests that need real artifacts live in
+    /// rust/tests/runtime_roundtrip.rs (they require `make artifacts`);
+    /// here we exercise manifest parsing against a synthetic dir.
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsp48-registry-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule m\n").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+                {"name": "m", "file": "m.hlo.txt",
+                 "inputs": [{"dtype": "int8", "shape": [2, 3]}],
+                 "outputs": [{"dtype": "int32", "shape": [2, 3]}]}
+            ]}"#,
+        )
+        .unwrap();
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        assert_eq!(reg.names(), vec!["m"]);
+        let e = reg.entry("m").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.outputs[0].dtype, "int32");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsp48-registry-test2-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+                {"name": "gone", "file": "gone.hlo.txt"}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(ArtifactRegistry::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,115 @@
+//! A small benchmarking harness (offline stand-in for criterion).
+//!
+//! Benches in `rust/benches/` use `harness = false` and drive this:
+//! warmup, then timed iterations until a wall-clock budget is met,
+//! reporting mean / p50 / p95 and iterations per second. Output format
+//! is stable so `cargo bench | tee bench_output.txt` is diffable.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl Measurement {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+/// Time `f` repeatedly: warm up for `warmup`, then sample until `budget`
+/// elapses (at least 5 samples). Returns the measurement and prints it.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    bench_with(name, Duration::from_millis(200), Duration::from_secs(2), &mut f)
+}
+
+/// Like [`bench`] but with explicit warmup/budget (long e2e benches).
+pub fn bench_with<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    budget: Duration,
+    f: &mut F,
+) -> Measurement {
+    // Warmup.
+    let start = Instant::now();
+    let mut warm_iters = 0u64;
+    while start.elapsed() < warmup || warm_iters < 1 {
+        f();
+        warm_iters += 1;
+    }
+    // Estimate per-iter cost to size batches.
+    let per_iter = start.elapsed() / warm_iters.max(1) as u32;
+    let batch = (Duration::from_millis(10).as_nanos()
+        / per_iter.as_nanos().max(1)) as u64;
+    let batch = batch.clamp(1, 1_000_000);
+
+    let mut samples: Vec<Duration> = Vec::new();
+    let run_start = Instant::now();
+    let mut total_iters = 0u64;
+    while run_start.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed() / batch as u32);
+        total_iters += batch;
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let m = Measurement {
+        name: name.to_string(),
+        iters: total_iters,
+        mean,
+        p50: samples[samples.len() / 2],
+        p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+    };
+    println!(
+        "bench {:<42} mean {:>12?}  p50 {:>12?}  p95 {:>12?}  ({:.1}/s, {} iters)",
+        m.name,
+        m.mean,
+        m.p50,
+        m.p95,
+        m.per_sec(),
+        m.iters
+    );
+    m
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut x = 0u64;
+        let m = bench_with(
+            "noop-ish",
+            Duration::from_millis(1),
+            Duration::from_millis(20),
+            &mut || {
+                x = x.wrapping_add(1);
+                std::hint::black_box(x);
+            },
+        );
+        assert!(m.iters > 0);
+        assert!(m.mean > Duration::ZERO || m.per_sec().is_infinite());
+    }
+}

@@ -1,0 +1,8 @@
+//! Self-contained utilities (this crate builds fully offline, so the
+//! usual ecosystem crates — serde, proptest, criterion — are replaced by
+//! small, tested, purpose-built modules).
+
+pub mod bench;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;

@@ -1,0 +1,102 @@
+//! A minimal property-testing harness (the offline stand-in for
+//! `proptest`): run a property over N seeded random cases; on failure,
+//! retry with a simple input-size shrink and report the seed so the case
+//! replays deterministically.
+
+use super::rng::XorShift;
+
+/// Number of cases per property (override with `QUICKCHECK_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("QUICKCHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Run `prop(rng, size)` for `cases` seeded cases with sizes ramping from
+/// 1 to `max_size`. `prop` returns `Err(msg)` to fail. Panics with the
+/// seed + size of the first failure (after shrinking the size).
+pub fn check<F>(name: &str, max_size: usize, prop: F)
+where
+    F: Fn(&mut XorShift, usize) -> Result<(), String>,
+{
+    let cases = default_cases();
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let size = 1 + (case as usize * max_size) / (cases as usize).max(1);
+        let size = size.min(max_size);
+        let mut rng = XorShift::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: find the smallest size (same seed) that still fails.
+            let mut min_fail = (size, msg);
+            for s in 1..size {
+                let mut rng = XorShift::new(seed);
+                if let Err(m) = prop(&mut rng, s) {
+                    min_fail = (s, m);
+                    break;
+                }
+            }
+            panic!(
+                "property `{name}` failed (seed={seed:#x}, size={}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// Assert-equal helper that produces a `Result` for use inside `check`.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {
+        if $a != $b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                $a,
+                $b
+            ));
+        }
+    };
+}
+
+/// Boolean property assertion for use inside `check`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 64, |rng, size| {
+            let a = rng.below(size as u64 + 1);
+            let b = rng.below(size as u64 + 1);
+            prop_assert_eq!(a + b, b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_reports_seed() {
+        check("always fails", 8, |_rng, _size| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "size=1")]
+    fn shrinks_to_smallest_size() {
+        check("fails at any size", 32, |rng, size| {
+            let _ = rng.next_u64();
+            prop_assert!(size == 0, "size {size} > 0");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,122 @@
+//! A tiny, deterministic xorshift64* PRNG.
+//!
+//! Used by tests, property harnesses, workload generators and benches.
+//! Deterministic by construction (seeded), no global state, no external
+//! crate — reproducibility of every experiment row depends on it.
+
+/// xorshift64* generator (Vigna 2016). Passes BigCrush for our purposes
+/// (test-vector generation), and is fast enough for the hot loop of the
+/// workload generator.
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    /// Create a generator from a seed (0 is remapped to a fixed odd seed).
+    pub fn new(seed: u64) -> Self {
+        XorShift {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        // Rejection-free modulo is fine here: n is tiny vs 2^64 so the
+        // bias is immeasurable for test generation.
+        self.next_u64() % n
+    }
+
+    /// Uniform i8 over the full range.
+    #[inline]
+    pub fn next_i8(&mut self) -> i8 {
+        (self.next_u64() & 0xFF) as u8 as i8
+    }
+
+    /// Uniform i8 in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn i8_in(&mut self, lo: i8, hi: i8) -> i8 {
+        debug_assert!(lo <= hi);
+        let span = (hi as i64 - lo as i64 + 1) as u64;
+        (lo as i64 + self.below(span) as i64) as i8
+    }
+
+    /// Bernoulli with probability `num/den`.
+    #[inline]
+    pub fn chance(&mut self, num: u64, den: u64) -> bool {
+        self.below(den) < num
+    }
+
+    /// A vector of full-range i8.
+    pub fn i8_vec(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| self.next_i8()).collect()
+    }
+
+    /// f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = XorShift::new(1);
+        let mut b = XorShift::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn i8_in_respects_bounds() {
+        let mut rng = XorShift::new(5);
+        for _ in 0..10_000 {
+            let v = rng.i8_in(-3, 7);
+            assert!((-3..=7).contains(&v));
+        }
+    }
+
+    #[test]
+    fn i8_covers_full_range() {
+        let mut rng = XorShift::new(6);
+        let mut seen = [false; 256];
+        for _ in 0..100_000 {
+            seen[(rng.next_i8() as u8) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all 256 byte values reachable");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = XorShift::new(8);
+        for _ in 0..10_000 {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+}

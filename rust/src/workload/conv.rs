@@ -1,0 +1,212 @@
+//! Conv2d lowered to GEMM via im2col — the DPU's native workload.
+//!
+//! The DPUCZDX8G evaluates convolutions as inner products over
+//! (kernel_h × kernel_w × in_channels) patches with pixel/channel
+//! parallelism; functionally that is exactly an im2col GEMM, which is
+//! how the coordinator maps Conv jobs onto any matrix engine.
+
+use super::gemm::{MatI32, MatI8};
+
+/// NCHW conv shape descriptor (stride/pad uniform, no dilation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvShape {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k) / self.stride + 1
+    }
+    /// GEMM dimensions after im2col: (M, K, N).
+    pub fn gemm_dims(&self) -> (usize, usize, usize) {
+        (
+            self.out_h() * self.out_w(),
+            self.k * self.k * self.in_c,
+            self.out_c,
+        )
+    }
+    pub fn macs(&self) -> u64 {
+        let (m, k, n) = self.gemm_dims();
+        (m * k * n) as u64
+    }
+}
+
+/// im2col: input (C, H, W) flattened row-major -> patch matrix
+/// (out_h*out_w, k*k*in_c). Zero padding.
+pub fn im2col(input: &[i8], shape: ConvShape) -> MatI8 {
+    assert_eq!(input.len(), shape.in_c * shape.in_h * shape.in_w);
+    let (m, kdim, _) = shape.gemm_dims();
+    let mut out = MatI8::zeros(m, kdim);
+    let (oh, ow) = (shape.out_h(), shape.out_w());
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            let mut col = 0;
+            for c in 0..shape.in_c {
+                for ky in 0..shape.k {
+                    for kx in 0..shape.k {
+                        let iy = (oy * shape.stride + ky) as isize - shape.pad as isize;
+                        let ix = (ox * shape.stride + kx) as isize - shape.pad as isize;
+                        let v = if iy >= 0
+                            && ix >= 0
+                            && (iy as usize) < shape.in_h
+                            && (ix as usize) < shape.in_w
+                        {
+                            input[c * shape.in_h * shape.in_w
+                                + iy as usize * shape.in_w
+                                + ix as usize]
+                        } else {
+                            0
+                        };
+                        out.set(row, col, v);
+                        col += 1;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Weights (out_c, in_c, k, k) flattened -> GEMM weight matrix
+/// (k*k*in_c, out_c), matching [`im2col`]'s column order.
+pub fn weights_to_gemm(weights: &[i8], shape: ConvShape) -> MatI8 {
+    assert_eq!(weights.len(), shape.out_c * shape.in_c * shape.k * shape.k);
+    let kdim = shape.k * shape.k * shape.in_c;
+    MatI8::from_fn(kdim, shape.out_c, |row, oc| {
+        // row = c * k * k + ky * k + kx
+        let c = row / (shape.k * shape.k);
+        let rem = row % (shape.k * shape.k);
+        weights[oc * shape.in_c * shape.k * shape.k + c * shape.k * shape.k + rem]
+    })
+}
+
+/// Direct (naive) convolution for cross-checking the im2col path.
+pub fn conv2d_direct(input: &[i8], weights: &[i8], shape: ConvShape) -> MatI32 {
+    let (oh, ow) = (shape.out_h(), shape.out_w());
+    let mut out = MatI32::zeros(oh * ow, shape.out_c);
+    for oc in 0..shape.out_c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i32;
+                for c in 0..shape.in_c {
+                    for ky in 0..shape.k {
+                        for kx in 0..shape.k {
+                            let iy =
+                                (oy * shape.stride + ky) as isize - shape.pad as isize;
+                            let ix =
+                                (ox * shape.stride + kx) as isize - shape.pad as isize;
+                            if iy < 0
+                                || ix < 0
+                                || iy as usize >= shape.in_h
+                                || ix as usize >= shape.in_w
+                            {
+                                continue;
+                            }
+                            let iv = input[c * shape.in_h * shape.in_w
+                                + iy as usize * shape.in_w
+                                + ix as usize] as i32;
+                            let wv = weights[oc * shape.in_c * shape.k * shape.k
+                                + c * shape.k * shape.k
+                                + ky * shape.k
+                                + kx] as i32;
+                            acc += iv * wv;
+                        }
+                    }
+                }
+                out.set(oy * ow + ox, oc, acc);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+    use crate::workload::gemm::golden_gemm;
+
+    fn check_shape(shape: ConvShape, seed: u64) {
+        let mut rng = XorShift::new(seed);
+        let input = rng.i8_vec(shape.in_c * shape.in_h * shape.in_w);
+        let weights = rng.i8_vec(shape.out_c * shape.in_c * shape.k * shape.k);
+        let patches = im2col(&input, shape);
+        let wmat = weights_to_gemm(&weights, shape);
+        let via_gemm = golden_gemm(&patches, &wmat);
+        let direct = conv2d_direct(&input, &weights, shape);
+        assert_eq!(via_gemm, direct, "{shape:?}");
+    }
+
+    #[test]
+    fn im2col_equals_direct_3x3() {
+        check_shape(
+            ConvShape {
+                in_c: 3,
+                in_h: 8,
+                in_w: 8,
+                out_c: 4,
+                k: 3,
+                stride: 1,
+                pad: 1,
+            },
+            1,
+        );
+    }
+
+    #[test]
+    fn im2col_equals_direct_strided_no_pad() {
+        check_shape(
+            ConvShape {
+                in_c: 2,
+                in_h: 9,
+                in_w: 7,
+                out_c: 5,
+                k: 3,
+                stride: 2,
+                pad: 0,
+            },
+            2,
+        );
+    }
+
+    #[test]
+    fn im2col_equals_direct_1x1() {
+        check_shape(
+            ConvShape {
+                in_c: 8,
+                in_h: 4,
+                in_w: 4,
+                out_c: 8,
+                k: 1,
+                stride: 1,
+                pad: 0,
+            },
+            3,
+        );
+    }
+
+    #[test]
+    fn gemm_dims_consistent() {
+        let s = ConvShape {
+            in_c: 16,
+            in_h: 14,
+            in_w: 14,
+            out_c: 32,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        };
+        assert_eq!(s.gemm_dims(), (196, 144, 32));
+        assert_eq!(s.macs(), 196 * 144 * 32);
+    }
+}

@@ -1,0 +1,219 @@
+//! INT8 GEMM problems and the golden INT32 reference.
+
+use crate::util::rng::XorShift;
+
+/// Row-major INT8 matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI8 {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> i8) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        MatI8 { rows, cols, data }
+    }
+
+    pub fn random(rng: &mut XorShift, rows: usize, cols: usize) -> Self {
+        MatI8 {
+            rows,
+            cols,
+            data: rng.i8_vec(rows * cols),
+        }
+    }
+
+    /// Random with bounded magnitude (realistic quantized layers).
+    pub fn random_bounded(rng: &mut XorShift, rows: usize, cols: usize, bound: i8) -> Self {
+        MatI8 {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.i8_in(-bound, bound)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i8 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i8) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Column copy (weights are consumed column-wise by WS columns).
+    pub fn col(&self, c: usize) -> Vec<i8> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> MatI8 {
+        MatI8::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
+    }
+}
+
+/// Row-major INT32 matrix (accumulator outputs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI32 {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn add(&mut self, r: usize, c: usize, v: i32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] += v;
+    }
+}
+
+/// Golden reference: `a (M×K) @ w (K×N) -> (M×N)` in INT32.
+pub fn golden_gemm(a: &MatI8, w: &MatI8) -> MatI32 {
+    assert_eq!(a.cols, w.rows, "inner dimensions must agree");
+    let mut out = MatI32::zeros(a.rows, w.cols);
+    for m in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.at(m, k) as i32;
+            if av == 0 {
+                continue;
+            }
+            for n in 0..w.cols {
+                out.data[m * w.cols + n] += av * w.at(k, n) as i32;
+            }
+        }
+    }
+    out
+}
+
+/// A self-contained GEMM problem instance.
+#[derive(Debug, Clone)]
+pub struct GemmProblem {
+    pub a: MatI8,
+    pub w: MatI8,
+}
+
+impl GemmProblem {
+    /// Random problem: `a` is M×K, `w` is K×N.
+    pub fn random(m: usize, n: usize, k: usize, seed: u64) -> Self {
+        let mut rng = XorShift::new(seed);
+        GemmProblem {
+            a: MatI8::random(&mut rng, m, k),
+            w: MatI8::random(&mut rng, k, n),
+        }
+    }
+
+    pub fn golden(&self) -> MatI32 {
+        golden_gemm(&self.a, &self.w)
+    }
+
+    pub fn m(&self) -> usize {
+        self.a.rows
+    }
+    pub fn n(&self) -> usize {
+        self.w.cols
+    }
+    pub fn k(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Multiply-accumulate operations in this problem.
+    pub fn macs(&self) -> u64 {
+        (self.m() * self.n() * self.k()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_identity() {
+        let a = MatI8::from_fn(3, 3, |r, c| if r == c { 1 } else { 0 });
+        let w = MatI8::from_fn(3, 2, |r, c| (r * 2 + c) as i8);
+        let out = golden_gemm(&a, &w);
+        for r in 0..3 {
+            for c in 0..2 {
+                assert_eq!(out.at(r, c), w.at(r, c) as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn golden_known_values() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = MatI8 {
+            rows: 2,
+            cols: 2,
+            data: vec![1, 2, 3, 4],
+        };
+        let w = MatI8 {
+            rows: 2,
+            cols: 2,
+            data: vec![5, 6, 7, 8],
+        };
+        let out = golden_gemm(&a, &w);
+        assert_eq!(out.data, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = XorShift::new(4);
+        let m = MatI8::random(&mut rng, 5, 7);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn problem_macs() {
+        let p = GemmProblem::random(4, 6, 8, 0);
+        assert_eq!(p.macs(), 4 * 6 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimensions")]
+    fn dimension_mismatch_panics() {
+        let a = MatI8::zeros(2, 3);
+        let w = MatI8::zeros(4, 2);
+        golden_gemm(&a, &w);
+    }
+}

@@ -1,0 +1,16 @@
+//! Workload substrate: problems the engines and coordinator execute.
+//!
+//! * [`gemm`] — INT8 matrices, golden INT32 matmul, random problems;
+//! * [`conv`] — Conv2d described as im2col-lowered GEMM (the DPU's
+//!   native workload shape);
+//! * [`quant`] — symmetric INT8 quantization + the fixed-point
+//!   requantizer shared bit-for-bit with `python/compile/kernels/ref.py`;
+//! * [`snn`] — spike-train generation and the integer LIF neuron used by
+//!   the FireFly engines.
+
+pub mod conv;
+pub mod gemm;
+pub mod quant;
+pub mod snn;
+
+pub use gemm::{GemmProblem, MatI32, MatI8};

@@ -1,0 +1,94 @@
+//! Symmetric INT8 quantization + the fixed-point requantizer.
+//!
+//! `requantize` is the bit-exact twin of
+//! `python/compile/kernels/ref.py::requantize`; the e2e example relies
+//! on the two staying identical (rust cycle-sim output must equal the
+//! PJRT-executed HLO byte-for-byte).
+
+/// Fixed-point requantization: `clip(round(acc * num / 2^shift) + zp)`.
+///
+/// Rounding is round-half-up via a `2^(shift-1)` offset before the
+/// arithmetic right shift — the scheme a DSP48E2 implements for free
+/// with the RND constant at the W multiplexer.
+#[inline]
+pub fn requantize(acc: i32, num: i32, shift: u32, zero_point: i32) -> i8 {
+    debug_assert!(shift >= 1);
+    let wide = acc as i64 * num as i64;
+    let rounded = (wide + (1i64 << (shift - 1))) >> shift;
+    (rounded + zero_point as i64).clamp(-128, 127) as i8
+}
+
+/// Per-tensor symmetric quantization of f32 data to INT8.
+///
+/// Returns the quantized values and the scale (`x ≈ q * scale`).
+pub fn quantize_symmetric(xs: &[f32]) -> (Vec<i8>, f32) {
+    let max_abs = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max_abs == 0.0 {
+        return (vec![0; xs.len()], 1.0);
+    }
+    let scale = max_abs / 127.0;
+    let q = xs
+        .iter()
+        .map(|&x| (x / scale).round().clamp(-128.0, 127.0) as i8)
+        .collect();
+    (q, scale)
+}
+
+/// Derive the fixed-point (num, shift) pair approximating `real_scale`
+/// with `shift` fractional bits.
+pub fn fixed_point_scale(real_scale: f64, shift: u32) -> i32 {
+    (real_scale * (1u64 << shift) as f64).round() as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requantize_matches_float_rounding() {
+        // Mirrors python/tests/test_packing_algebra.py::TestRequantize.
+        for acc in [-100_000i32, -777, -1, 0, 1, 999, 123_456] {
+            for (num, shift) in [(77, 15u32), (1, 1), (32767, 20)] {
+                let got = requantize(acc, num, shift, 0);
+                let real = acc as f64 * num as f64 / (1u64 << shift) as f64;
+                let want = (real + 0.5).floor().clamp(-128.0, 127.0) as i8;
+                assert_eq!(got, want, "acc={acc} num={num} shift={shift}");
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_clips() {
+        assert_eq!(requantize(i32::MAX, 1000, 1, 0), 127);
+        assert_eq!(requantize(i32::MIN, 1000, 1, 0), -128);
+    }
+
+    #[test]
+    fn zero_point_offsets() {
+        assert_eq!(requantize(0, 1, 1, 3), 3);
+        assert_eq!(requantize(100, 1, 1, 3), 53);
+    }
+
+    #[test]
+    fn quantize_roundtrips_within_half_lsb() {
+        let xs: Vec<f32> = (-50..50).map(|i| i as f32 * 0.37).collect();
+        let (q, scale) = quantize_symmetric(&xs);
+        for (x, qv) in xs.iter().zip(&q) {
+            assert!((x - *qv as f32 * scale).abs() <= scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn quantize_zeros() {
+        let (q, scale) = quantize_symmetric(&[0.0; 8]);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(scale, 1.0);
+    }
+
+    #[test]
+    fn fixed_point_scale_accuracy() {
+        let num = fixed_point_scale(0.00235, 15);
+        let approx = num as f64 / (1 << 15) as f64;
+        assert!((approx - 0.00235).abs() < 1.0 / (1 << 15) as f64);
+    }
+}

@@ -1,0 +1,156 @@
+//! Spiking workloads: spike trains and the integer LIF neuron.
+//!
+//! Bit-exact twin of `ref.lif_reference` on the python side:
+//! `v' = v - (v >> leak_shift) + I;  spike = v' >= thr;  v'' = v' - spike*thr`.
+
+use crate::util::rng::XorShift;
+
+/// A (T × N) binary spike train, row-major by timestep.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpikeTrain {
+    pub steps: usize,
+    pub neurons: usize,
+    pub spikes: Vec<u8>,
+}
+
+impl SpikeTrain {
+    /// Bernoulli spike train with firing probability `p_num/p_den`.
+    pub fn random(rng: &mut XorShift, steps: usize, neurons: usize, p_num: u64, p_den: u64) -> Self {
+        let spikes = (0..steps * neurons)
+            .map(|_| u8::from(rng.chance(p_num, p_den)))
+            .collect();
+        SpikeTrain {
+            steps,
+            neurons,
+            spikes,
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, t: usize, n: usize) -> bool {
+        self.spikes[t * self.neurons + n] != 0
+    }
+
+    pub fn step_row(&self, t: usize) -> &[u8] {
+        &self.spikes[t * self.neurons..(t + 1) * self.neurons]
+    }
+
+    /// Mean firing rate (for workload reports).
+    pub fn rate(&self) -> f64 {
+        if self.spikes.is_empty() {
+            return 0.0;
+        }
+        self.spikes.iter().map(|&s| s as u64).sum::<u64>() as f64
+            / self.spikes.len() as f64
+    }
+}
+
+/// Integer leaky integrate-and-fire layer state.
+#[derive(Debug, Clone)]
+pub struct LifLayer {
+    pub v: Vec<i32>,
+    pub threshold: i32,
+    pub leak_shift: u32,
+}
+
+impl LifLayer {
+    pub fn new(neurons: usize, threshold: i32, leak_shift: u32) -> Self {
+        LifLayer {
+            v: vec![0; neurons],
+            threshold,
+            leak_shift,
+        }
+    }
+
+    /// One timestep: integrate `currents`, emit spikes, reset by
+    /// subtraction. Returns the output spike row.
+    pub fn step(&mut self, currents: &[i32]) -> Vec<u8> {
+        assert_eq!(currents.len(), self.v.len());
+        let mut out = Vec::with_capacity(self.v.len());
+        for (v, &i_t) in self.v.iter_mut().zip(currents) {
+            *v = *v - (*v >> self.leak_shift) + i_t;
+            if *v >= self.threshold {
+                *v -= self.threshold;
+                out.push(1);
+            } else {
+                out.push(0);
+            }
+        }
+        out
+    }
+
+    pub fn reset(&mut self) {
+        self.v.iter_mut().for_each(|v| *v = 0);
+    }
+}
+
+/// Reference synaptic currents: `spikes (T×P) @ weights (P×N)`.
+pub fn golden_currents(train: &SpikeTrain, weights: &[i8], n_post: usize) -> Vec<i32> {
+    assert_eq!(weights.len(), train.neurons * n_post);
+    let mut out = vec![0i32; train.steps * n_post];
+    for t in 0..train.steps {
+        for p in 0..train.neurons {
+            if !train.at(t, p) {
+                continue;
+            }
+            for n in 0..n_post {
+                out[t * n_post + n] += weights[p * n_post + n] as i32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lif_integrates_and_fires() {
+        let mut lif = LifLayer::new(1, 10, 3);
+        // Constant current 4: v goes 4, 4-0+4=8 (leak 4>>3=0), 8-1+4=11 -> spike, v=1 ...
+        let s1 = lif.step(&[4]);
+        assert_eq!(s1, vec![0]);
+        assert_eq!(lif.v[0], 4);
+        let s2 = lif.step(&[4]);
+        assert_eq!(s2, vec![0]);
+        assert_eq!(lif.v[0], 8);
+        let s3 = lif.step(&[4]);
+        assert_eq!(s3, vec![1]);
+        assert_eq!(lif.v[0], 8 - 1 + 4 - 10);
+    }
+
+    #[test]
+    fn lif_leak_decays() {
+        let mut lif = LifLayer::new(1, 1_000_000, 2);
+        lif.v[0] = 100;
+        lif.step(&[0]);
+        assert_eq!(lif.v[0], 75);
+        lif.step(&[0]);
+        assert_eq!(lif.v[0], 57); // 75 - 18
+    }
+
+    #[test]
+    fn golden_currents_sum_selected_weights() {
+        let mut rng = XorShift::new(1);
+        let train = SpikeTrain::random(&mut rng, 4, 3, 1, 2);
+        let weights: Vec<i8> = (0..6).map(|i| i as i8 + 1).collect(); // 3x2
+        let cur = golden_currents(&train, &weights, 2);
+        for t in 0..4 {
+            for n in 0..2 {
+                let expect: i32 = (0..3)
+                    .filter(|&p| train.at(t, p))
+                    .map(|p| weights[p * 2 + n] as i32)
+                    .sum();
+                assert_eq!(cur[t * 2 + n], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn spike_rate_tracks_probability() {
+        let mut rng = XorShift::new(2);
+        let train = SpikeTrain::random(&mut rng, 100, 100, 1, 4);
+        assert!((train.rate() - 0.25).abs() < 0.02);
+    }
+}

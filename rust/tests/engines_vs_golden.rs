@@ -1,0 +1,152 @@
+//! Cross-engine integration: every engine × many problem shapes must be
+//! bit-exact against the golden INT32 reference, including through the
+//! coordinator's tiler, plus property-style sweeps via the in-crate
+//! quickcheck harness.
+
+use dsp48_systolic::coordinator::service::{run_gemm_tiled, EngineKind};
+use dsp48_systolic::coordinator::GemmTiler;
+use dsp48_systolic::coordinator::ServiceConfig;
+use dsp48_systolic::engines::os::{OsConfig, OsEngine, OsVariant};
+use dsp48_systolic::engines::ws::{WsConfig, WsEngine, WsVariant};
+use dsp48_systolic::engines::Engine;
+use dsp48_systolic::util::quickcheck::check;
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::gemm::golden_gemm;
+use dsp48_systolic::workload::MatI8;
+
+#[test]
+fn all_ws_variants_random_shapes() {
+    check("ws variants vs golden", 20, |rng, size| {
+        let m = 1 + (rng.next_u64() % 8) as usize;
+        let variant = match rng.next_u64() % 4 {
+            0 => WsVariant::TinyTpu,
+            1 => WsVariant::Libano,
+            2 => WsVariant::ClbFetch,
+            _ => WsVariant::DspFetch,
+        };
+        let rows = 2 + size % 8;
+        let cols = 2 + (size / 2) % 8;
+        let mut eng = WsEngine::new(WsConfig {
+            variant,
+            rows,
+            cols,
+            target_mhz: 666.0,
+            strict_guard: false,
+        });
+        let a = MatI8::random_bounded(rng, m, rows, 63);
+        let w = MatI8::random(rng, rows, cols);
+        let run = eng.run_gemm(&a, &w).map_err(|e| e.to_string())?;
+        if run.output != golden_gemm(&a, &w) {
+            return Err(format!("{variant:?} {rows}x{cols} m={m} mismatch"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn os_variants_random_shapes() {
+    check("os variants vs golden", 16, |rng, size| {
+        let variant = if rng.next_u64() % 2 == 0 {
+            OsVariant::Official
+        } else {
+            OsVariant::Enhanced
+        };
+        let cfg = OsConfig {
+            variant,
+            oc_pairs: 1 + size % 3,
+            px_groups: 1 + size % 2,
+            ic_groups: 2,
+            chain_len: 2 + size % 4,
+            fast_mhz: 666.0,
+        };
+        let mut eng = OsEngine::new(cfg);
+        let m = 1 + (rng.next_u64() % 12) as usize;
+        let k = 1 + (rng.next_u64() % 24) as usize;
+        let n = 1 + (rng.next_u64() % 10) as usize;
+        let a = MatI8::random(rng, m, k);
+        let w = MatI8::random(rng, k, n);
+        let run = eng.run_gemm(&a, &w).map_err(|e| e.to_string())?;
+        if run.output != golden_gemm(&a, &w) {
+            return Err(format!("{variant:?} {cfg:?} m={m} k={k} n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tiled_large_gemm_every_engine_kind() {
+    let mut rng = XorShift::new(5);
+    let a = MatI8::random_bounded(&mut rng, 6, 60, 63);
+    let w = MatI8::random(&mut rng, 60, 30);
+    let golden = golden_gemm(&a, &w);
+    for kind in [
+        EngineKind::WsTinyTpu,
+        EngineKind::WsDspFetch,
+        EngineKind::OsOfficial,
+        EngineKind::OsEnhanced,
+    ] {
+        let cfg = ServiceConfig {
+            kind,
+            workers: 1,
+            ws_rows: 10,
+            ws_cols: 10,
+            verify: false,
+        };
+        let mut engine = cfg.build_engine();
+        let tiler = matches!(
+            kind,
+            EngineKind::WsTinyTpu | EngineKind::WsDspFetch
+        )
+        .then(|| GemmTiler::new(10, 10));
+        let (out, stats) =
+            run_gemm_tiled(engine.as_mut(), tiler.as_ref(), &a, &w).unwrap();
+        assert_eq!(out, golden, "{}", kind.label());
+        assert_eq!(stats.macs, 6 * 60 * 30, "{}", kind.label());
+    }
+}
+
+/// Failure injection: guard-band violations are detected, reported, and
+/// (in strict mode) fail loudly rather than silently corrupting.
+#[test]
+fn guard_band_failure_injection() {
+    let mut cfg = WsConfig::paper_14x14_for(WsVariant::DspFetch);
+    cfg.strict_guard = true;
+    let mut eng = WsEngine::new(cfg);
+    let a = MatI8::from_fn(2, 14, |_, _| -128);
+    let w = MatI8::from_fn(14, 14, |_, _| -128);
+    assert!(eng.run_gemm(&a, &w).is_err());
+
+    // The same problem through the OS engine (chain depth 4 <= guard)
+    // is exact — segmented cascades fix what full-depth columns cannot.
+    let mut os = OsEngine::new(OsConfig::b1024(OsVariant::Enhanced));
+    let run = os.run_gemm(&a, &w).unwrap();
+    assert_eq!(run.output, golden_gemm(&a, &w));
+}
+
+/// Cycle-count sanity across engines: same work, sane relative speeds.
+#[test]
+fn cycle_accounting_cross_engine() {
+    let mut rng = XorShift::new(9);
+    let a = MatI8::random_bounded(&mut rng, 16, 14, 63);
+    let w = MatI8::random(&mut rng, 14, 14);
+
+    let mut tiny = WsEngine::new(WsConfig::paper_14x14_for(WsVariant::TinyTpu));
+    let mut ours = WsEngine::new(WsConfig::paper_14x14_for(WsVariant::DspFetch));
+    let rt = tiny.run_gemm(&a, &w).unwrap().stats;
+    let ro = ours.run_gemm(&a, &w).unwrap().stats;
+    assert_eq!(rt.macs, ro.macs);
+    // On a single small tile tinyTPU's broadcast avoids the column
+    // skew, but the achievable clock (400 vs 666 MHz) and the packed
+    // density decide real time: ours must win on simulated wall time.
+    let t_tiny = rt.cycles as f64 / tiny.clock_plan().slow_mhz;
+    let t_ours = ro.cycles as f64 / ours.clock_plan().slow_mhz;
+    assert!(
+        t_ours < t_tiny,
+        "ours {t_ours:.3}us vs tiny {t_tiny:.3}us"
+    );
+    // And on a larger stream the packed waves dominate: half the waves.
+    let a_big = MatI8::random_bounded(&mut rng, 256, 14, 63);
+    let rt = tiny.run_gemm(&a_big, &w).unwrap().stats;
+    let ro = ours.run_gemm(&a_big, &w).unwrap().stats;
+    assert!(ro.cycles < rt.cycles, "ours {} vs tiny {}", ro.cycles, rt.cycles);
+}

@@ -1,0 +1,132 @@
+//! AOT round-trip: python-lowered HLO executed by the rust PJRT runtime
+//! must equal (a) the python-computed golden vectors and (b) the rust
+//! cycle-accurate engines — the full co-design contract.
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message)
+//! when the artifact directory is missing so `cargo test` works in a
+//! fresh checkout, and CI runs `make test` which builds artifacts first.
+
+use dsp48_systolic::coordinator::service::run_gemm_tiled;
+use dsp48_systolic::coordinator::GemmTiler;
+use dsp48_systolic::engines::os::{OsConfig, OsEngine, OsVariant};
+use dsp48_systolic::engines::ws::{WsConfig, WsEngine, WsVariant};
+use dsp48_systolic::engines::Engine;
+use dsp48_systolic::runtime::{ArtifactRegistry, GoldenGemm};
+use dsp48_systolic::workload::gemm::golden_gemm;
+use std::path::Path;
+
+fn registry() -> Option<ArtifactRegistry> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(ArtifactRegistry::open_default().expect("registry opens"))
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(reg) = registry() else { return };
+    let names = reg.names();
+    assert!(names.iter().any(|n| n.starts_with("packed_gemm_")));
+    assert!(names.iter().any(|n| n.starts_with("mlp_")));
+    assert!(names.iter().any(|n| n.starts_with("snn_")));
+    assert!(names.contains(&"golden_gemm"));
+}
+
+#[test]
+fn golden_vectors_self_consistent() {
+    let Some(_) = registry() else { return };
+    let g = GoldenGemm::load(Path::new("artifacts")).unwrap();
+    assert_eq!(g.hi, golden_gemm(&g.a_hi, &g.w));
+    assert_eq!(g.lo, golden_gemm(&g.a_lo, &g.w));
+}
+
+/// HLO executed via PJRT == python golden, bit-for-bit.
+#[test]
+fn pjrt_matches_python_golden() {
+    let Some(mut reg) = registry() else { return };
+    let g = GoldenGemm::load(Path::new("artifacts")).unwrap();
+    let (m, k, n) = g.dims();
+    let name = reg.gemm_artifact(m, k, n).expect("gemm artifact exists");
+    let module = reg.module(&name).expect("compiles");
+    let outs = module
+        .execute_i8_to_i32(&[&g.a_hi.data, &g.a_lo.data, &g.w.data])
+        .expect("executes");
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0], g.hi.data, "hi lane");
+    assert_eq!(outs[1], g.lo.data, "lo lane");
+}
+
+/// The same golden problem through the cycle-accurate WS engine.
+#[test]
+fn ws_engine_matches_python_golden() {
+    let Some(_) = registry() else { return };
+    let g = GoldenGemm::load(Path::new("artifacts")).unwrap();
+    let mut eng = WsEngine::new(WsConfig {
+        variant: WsVariant::DspFetch,
+        rows: 16,
+        cols: 16,
+        target_mhz: 666.0,
+        strict_guard: false,
+    });
+    let tiler = GemmTiler::new(16, 16);
+    let (hi, _) = run_gemm_tiled(&mut eng, Some(&tiler), &g.a_hi, &g.w).unwrap();
+    let (lo, _) = run_gemm_tiled(&mut eng, Some(&tiler), &g.a_lo, &g.w).unwrap();
+    assert_eq!(hi, g.hi);
+    assert_eq!(lo, g.lo);
+}
+
+/// And through the OS (DPU-enhanced) engine.
+#[test]
+fn os_engine_matches_python_golden() {
+    let Some(_) = registry() else { return };
+    let g = GoldenGemm::load(Path::new("artifacts")).unwrap();
+    let mut eng = OsEngine::new(OsConfig::b1024(OsVariant::Enhanced));
+    let hi = eng.run_gemm(&g.a_hi, &g.w).unwrap();
+    let lo = eng.run_gemm(&g.a_lo, &g.w).unwrap();
+    assert_eq!(hi.output, g.hi);
+    assert_eq!(lo.output, g.lo);
+}
+
+/// The SNN artifact: crossbar currents + LIF from the HLO must match
+/// the rust engine + LIF pipeline.
+#[test]
+fn snn_artifact_matches_engine() {
+    let Some(mut reg) = registry() else { return };
+    use dsp48_systolic::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
+    use dsp48_systolic::util::rng::XorShift;
+    use dsp48_systolic::workload::snn::SpikeTrain;
+    use dsp48_systolic::workload::MatI8;
+
+    let module = reg.module("snn_t16_p32_n32").expect("snn artifact");
+    let mut rng = XorShift::new(33);
+    let train = SpikeTrain::random(&mut rng, 16, 32, 1, 3);
+    let weights = MatI8::random_bounded(&mut rng, 32, 32, 63);
+    let spikes_i8: Vec<i8> = train.spikes.iter().map(|&s| s as i8).collect();
+    let outs = module
+        .execute_i8_to_i32(&[&spikes_i8, &weights.data])
+        .expect("snn executes");
+    // outputs: (out_spikes, currents)
+    let mut eng = SnnEngine::new(SnnConfig::paper_32x32(SnnVariant::Enhanced));
+    let (eng_spikes, eng_currents, _) = eng.run_snn(&train, &weights).unwrap();
+    assert_eq!(
+        outs[1], eng_currents,
+        "crossbar currents HLO vs cycle-accurate"
+    );
+    let eng_spikes_i32: Vec<i32> = eng_spikes.iter().map(|&s| s as i32).collect();
+    assert_eq!(outs[0], eng_spikes_i32, "LIF spikes HLO vs rust");
+}
+
+/// Shape validation errors are caught before reaching XLA.
+#[test]
+fn signature_mismatch_rejected() {
+    let Some(mut reg) = registry() else { return };
+    let g = GoldenGemm::load(Path::new("artifacts")).unwrap();
+    let (m, k, n) = g.dims();
+    let name = reg.gemm_artifact(m, k, n).unwrap();
+    let module = reg.module(&name).unwrap();
+    let short = vec![0i8; 3];
+    assert!(module
+        .execute_i8_to_i32(&[&short, &g.a_lo.data, &g.w.data])
+        .is_err());
+}
