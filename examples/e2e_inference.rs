@@ -89,7 +89,7 @@ fn mlp_on_engine(
     unreachable!()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), dsp48_systolic::runtime::RuntimeError> {
     // --- the functional model (PJRT) --------------------------------
     let mut registry = ArtifactRegistry::open_default()?;
     let name = format!(

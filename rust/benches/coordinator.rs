@@ -49,6 +49,7 @@ fn main() {
             ws_rows: 14,
             ws_cols: 14,
             verify: false,
+            shard_width: 1,
         });
         let mut rng = XorShift::new(7);
         let jobs = 24;

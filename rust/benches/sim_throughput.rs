@@ -1,11 +1,18 @@
 //! Bench: the simulator hot paths in isolation — the targets of the
-//! §Perf optimization pass (EXPERIMENTS.md §Perf records before/after).
+//! §Perf optimization pass (EXPERIMENTS.md §Perf records before/after) —
+//! plus the sharded-coordinator throughput on one large GEMM.
 //!
 //! * single DSP48E2 tick (the innermost loop),
 //! * one full-array WS cycle (196 + 14 DSPs + staging),
 //! * ring-accumulator tick,
-//! * packed_dot (the functional fast path the coordinator may use).
+//! * packed_dot (the functional fast path the coordinator may use),
+//! * a single large GEMM sharded across 1 vs 4 workers.
+//!
+//! Emits `BENCH_sim_throughput.json` so CI accumulates the perf
+//! trajectory. Set `SIM_BENCH_SMOKE=1` for a fast CI-sized run.
 
+use dsp48_systolic::coordinator::service::EngineKind;
+use dsp48_systolic::coordinator::{Job, Service, ServiceConfig};
 use dsp48_systolic::dsp::{Attributes, Dsp48e2, DspInputs, OpMode};
 use dsp48_systolic::engines::os::RingAccumulator;
 use dsp48_systolic::engines::ws::{WsConfig, WsEngine};
@@ -14,6 +21,37 @@ use dsp48_systolic::packing;
 use dsp48_systolic::util::bench::{bench, section};
 use dsp48_systolic::util::rng::XorShift;
 use dsp48_systolic::workload::MatI8;
+use std::time::{Duration, Instant};
+
+/// One sharded run: a single `size³` GEMM fanned out over `workers`.
+/// Returns host-side simulated MACs per second.
+fn sharded_gemm_rate(workers: usize, size: usize) -> f64 {
+    let mut svc = Service::start(ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers,
+        ws_rows: 14,
+        ws_cols: 14,
+        verify: false,
+        shard_width: 1,
+    });
+    let mut rng = XorShift::new(11);
+    let a = MatI8::random_bounded(&mut rng, size, size, 63);
+    let w = MatI8::random(&mut rng, size, size);
+    let t0 = Instant::now();
+    svc.submit(Job::Gemm { a, w });
+    let r = svc
+        .recv_timeout(Duration::from_secs(1800))
+        .expect("sharded GEMM completes");
+    let wall = t0.elapsed();
+    svc.shutdown();
+    let rate = r.stats.macs as f64 / wall.as_secs_f64();
+    println!(
+        "bench sharded {size}x{size}x{size} @ {workers} worker(s): \
+         {wall:?} wall -> {:.2} M MACs/s",
+        rate / 1e6
+    );
+    rate
+}
 
 fn main() {
     section("DSP48E2 cell");
@@ -70,4 +108,27 @@ fn main() {
         "    -> {:.1} M packed-MACs/s (x2 lanes)",
         1024.0 * m.per_sec() / 1e6
     );
+    let packed_dot_rate = 1024.0 * m.per_sec();
+
+    section("sharded coordinator (single large GEMM across workers)");
+    let smoke = std::env::var("SIM_BENCH_SMOKE").is_ok();
+    let size = if smoke { 128 } else { 512 };
+    let rate_1w = sharded_gemm_rate(1, size);
+    let rate_4w = sharded_gemm_rate(4, size);
+    let speedup = rate_4w / rate_1w;
+    println!("    -> 4-worker speedup over 1 worker: {speedup:.2}x");
+
+    // Perf-trajectory artifact for CI (stable keys, one flat object).
+    let json = format!(
+        "{{\n  \"bench\": \"sim_throughput\",\n  \"smoke\": {smoke},\n  \
+         \"packed_dot_macs_per_s\": {packed_dot_rate:.1},\n  \
+         \"sharded_gemm_size\": {size},\n  \
+         \"sharded_gemm_macs_per_s_1w\": {rate_1w:.1},\n  \
+         \"sharded_gemm_macs_per_s_4w\": {rate_4w:.1},\n  \
+         \"sharded_speedup_4w_over_1w\": {speedup:.3}\n}}\n"
+    );
+    match std::fs::write("BENCH_sim_throughput.json", &json) {
+        Ok(()) => println!("wrote BENCH_sim_throughput.json"),
+        Err(e) => eprintln!("could not write BENCH_sim_throughput.json: {e}"),
+    }
 }

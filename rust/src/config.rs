@@ -145,6 +145,7 @@ impl Config {
             ws_rows: self.int_or("engine.rows", 14).max(1) as usize,
             ws_cols: self.int_or("engine.cols", 14).max(1) as usize,
             verify: self.bool_or("service.verify", true),
+            shard_width: self.int_or("service.shard_width", 1).max(1) as usize,
         })
     }
 }
@@ -224,5 +225,6 @@ clock_mhz = 666.0
         let svc = cfg.service_config().unwrap();
         assert_eq!(svc.workers, 2);
         assert_eq!(svc.ws_rows, 14);
+        assert_eq!(svc.shard_width, 1);
     }
 }

@@ -1,9 +1,15 @@
-//! Job types the coordinator accepts.
+//! Job types the coordinator accepts, and job-level result assembly
+//! for tile-sharded execution.
 
+use super::scheduler::aggregate_tile_stats;
+use super::tiler::Tile;
 use crate::engines::RunStats;
 use crate::workload::conv::ConvShape;
+use crate::workload::gemm::golden_gemm;
 use crate::workload::{MatI32, MatI8};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Opaque job identifier assigned at submission.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -53,10 +59,160 @@ pub struct JobResult {
     pub stats: RunStats,
     /// Simulated time at the engine's clock plan.
     pub simulated: Duration,
-    /// Host wall-clock the worker spent.
+    /// Host wall-clock from submission to assembly.
     pub wall: Duration,
     /// Bit-exactness check against the golden reference (when enabled).
     pub verified: Option<bool>,
+}
+
+/// What [`JobTracker::complete_tiles`] reports back to a worker.
+#[derive(Debug)]
+pub enum Completion {
+    /// Other tiles of this job are still in flight.
+    Pending,
+    /// This worker finished the last tile: the assembled result.
+    Done(Box<JobResult>),
+    /// Last tile finished but some tile failed; no result to deliver.
+    Failed,
+}
+
+/// Shared per-job state for tile-sharded execution.
+///
+/// The coordinator fans one job out as tile-level work units; every
+/// worker that finishes a unit folds its partial output and stats in
+/// here, and whichever worker completes the *last* tile assembles the
+/// [`JobResult`] — accumulation is commutative (integer adds, and the
+/// schedule aggregation only sums), so the result is bit-identical to
+/// a sequential run regardless of completion order.
+#[derive(Debug)]
+pub struct JobTracker {
+    id: JobId,
+    /// The lowered GEMM operands (conv is im2col'd at submission).
+    a: MatI8,
+    w: MatI8,
+    /// True problem MACs (padded tiles overcount).
+    macs: u64,
+    verify: bool,
+    /// `Some(rows)` = tile-sharded: assemble stats under the prefetch
+    /// scheduler for an array of this depth. `None` = whole-job unit.
+    sched_rows: Option<usize>,
+    submitted: Instant,
+    out: Mutex<MatI32>,
+    per_tile: Mutex<Vec<RunStats>>,
+    remaining: AtomicUsize,
+    failed: AtomicBool,
+}
+
+impl JobTracker {
+    /// Track a job split into `tiles` work tiles (1 for whole-job
+    /// units).
+    pub fn new(
+        id: JobId,
+        a: MatI8,
+        w: MatI8,
+        macs: u64,
+        tiles: usize,
+        sched_rows: Option<usize>,
+        verify: bool,
+    ) -> Self {
+        let out = MatI32::zeros(a.rows, w.cols);
+        JobTracker {
+            id,
+            a,
+            w,
+            macs,
+            verify,
+            sched_rows,
+            submitted: Instant::now(),
+            out: Mutex::new(out),
+            per_tile: Mutex::new(Vec::with_capacity(tiles)),
+            remaining: AtomicUsize::new(tiles),
+            failed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// The lowered activation operand workers execute against.
+    pub fn a(&self) -> &MatI8 {
+        &self.a
+    }
+
+    /// The lowered weight operand.
+    pub fn w(&self) -> &MatI8 {
+        &self.w
+    }
+
+    /// True problem MACs (throughput accounting).
+    pub fn macs(&self) -> u64 {
+        self.macs
+    }
+
+    /// Fold one tile's partial product into the job output.
+    pub fn accumulate(&self, tile: &Tile, partial: &MatI32) {
+        let mut out = self.out.lock().unwrap();
+        tile.accumulate_into(&mut out, partial);
+    }
+
+    /// Store a whole-job output (non-tiled engines).
+    pub fn set_output(&self, output: MatI32) {
+        *self.out.lock().unwrap() = output;
+    }
+
+    /// Record that a tile of this job errored.
+    pub fn mark_failed(&self) {
+        self.failed.store(true, Ordering::Relaxed);
+    }
+
+    /// Record `stats` for `done` finished tiles; when these were the
+    /// last outstanding tiles, assemble the job-level result.
+    /// `slow_mhz` converts aggregate cycles to simulated time.
+    pub fn complete_tiles(
+        &self,
+        done: usize,
+        stats: Vec<RunStats>,
+        slow_mhz: f64,
+    ) -> Completion {
+        self.per_tile.lock().unwrap().extend(stats);
+        let prev = self.remaining.fetch_sub(done, Ordering::AcqRel);
+        debug_assert!(prev >= done, "completed more tiles than tracked");
+        if prev != done {
+            return Completion::Pending;
+        }
+        if self.failed.load(Ordering::Relaxed) {
+            return Completion::Failed;
+        }
+        Completion::Done(Box::new(self.assemble(slow_mhz)))
+    }
+
+    /// Merge per-tile stats and build the [`JobResult`].
+    fn assemble(&self, slow_mhz: f64) -> JobResult {
+        let per_tile = std::mem::take(&mut *self.per_tile.lock().unwrap());
+        let output =
+            std::mem::replace(&mut *self.out.lock().unwrap(), MatI32::zeros(0, 0));
+        let stats = match self.sched_rows {
+            // Same aggregation as the sequential `run_gemm_tiled` path,
+            // so sharded stats stay bit-identical (true MACs replace
+            // the padded-tile overcount).
+            Some(rows) => aggregate_tile_stats(&per_tile, rows, self.macs),
+            None => per_tile.into_iter().next().unwrap_or_default(),
+        };
+        let verified = self
+            .verify
+            .then(|| output == golden_gemm(&self.a, &self.w));
+        let simulated =
+            Duration::from_secs_f64(stats.cycles as f64 / (slow_mhz * 1e6));
+        JobResult {
+            id: self.id,
+            output,
+            stats,
+            simulated,
+            wall: self.submitted.elapsed(),
+            verified,
+        }
+    }
 }
 
 #[cfg(test)]

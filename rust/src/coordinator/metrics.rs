@@ -13,6 +13,10 @@ pub struct Metrics {
     pub macs: AtomicU64,
     pub sim_cycles: AtomicU64,
     pub guard_overflows: AtomicU64,
+    /// Tile-level work items executed (≥ jobs when sharding).
+    pub tiles_executed: AtomicU64,
+    /// Work units taken from another worker's shard.
+    pub steals: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -49,12 +53,14 @@ impl Metrics {
         let (p50, p95, max) = self.latency_percentiles();
         format!(
             "jobs {}/{} ok ({} failed), {} MMACs, {} sim-cycles, \
-             latency p50 {}us p95 {}us max {}us",
+             {} tiles ({} stolen), latency p50 {}us p95 {}us max {}us",
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
             self.macs.load(Ordering::Relaxed) / 1_000_000,
             self.sim_cycles.load(Ordering::Relaxed),
+            self.tiles_executed.load(Ordering::Relaxed),
+            self.steals.load(Ordering::Relaxed),
             p50,
             p95,
             max

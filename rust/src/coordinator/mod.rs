@@ -13,17 +13,22 @@
 //!   compute, one exposed swap cycle) vs
 //!   [`scheduler::PrefetchPolicy::Stall`] (tinyTPU-style reload stall)
 //!   — making the benefit of technique 1 measurable end-to-end;
-//! * [`service`] — a multi-worker job service (std threads + channels;
-//!   the binary is self-contained and offline).
+//! * [`pool`] — the sharded, work-stealing deque pool workers drain;
+//! * [`service`] — a multi-worker job service over tile-level work
+//!   units: one large GEMM fans out across every worker, partial
+//!   results assemble job-level in [`job::JobTracker`] (std threads +
+//!   channels; the binary is self-contained and offline).
 
 pub mod job;
 pub mod metrics;
+pub mod pool;
 pub mod scheduler;
 pub mod service;
 pub mod tiler;
 
-pub use job::{Job, JobId, JobResult};
+pub use job::{Job, JobId, JobResult, JobTracker};
 pub use metrics::Metrics;
+pub use pool::WorkPool;
 pub use scheduler::{PrefetchPolicy, ScheduleReport};
 pub use service::{Service, ServiceConfig};
 pub use tiler::{GemmTiler, Tile};

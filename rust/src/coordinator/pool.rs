@@ -1,0 +1,211 @@
+//! A sharded, work-stealing task pool (std-only, no external deps).
+//!
+//! Each worker owns a deque shard; submissions land round-robin across
+//! the shards. A worker pops from the *front* of its own shard (FIFO —
+//! oldest tile first, keeping job latency predictable) and, when its
+//! shard is dry, steals from the *back* of a victim's shard (the
+//! classic split that minimizes contention with the owner). The pool
+//! blocks idle workers on a condvar, so a drained pool costs no CPU.
+//!
+//! This replaces the one-job-per-worker `mpsc` drain: because the units
+//! are *tiles*, a single large GEMM fans out across every worker, and a
+//! mix of job sizes no longer convoys behind the largest one.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// A popped item plus whether it was stolen from another shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provenance {
+    Own,
+    Stolen,
+}
+
+struct Gate {
+    /// Items queued across all shards (incremented before the shard
+    /// push, decremented after a successful pop, so it never reads
+    /// negative).
+    queued: usize,
+    stopped: bool,
+}
+
+/// The sharded pool. Steal accounting is the caller's: [`WorkPool::pop`]
+/// reports each item's [`Provenance`] (the service folds it into its
+/// metrics), so the pool itself carries no counter to drift.
+pub struct WorkPool<T> {
+    shards: Vec<Mutex<VecDeque<T>>>,
+    gate: Mutex<Gate>,
+    cv: Condvar,
+    rr: AtomicUsize,
+}
+
+impl<T> WorkPool<T> {
+    pub fn new(shards: usize) -> Self {
+        let shards = shards.max(1);
+        WorkPool {
+            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            gate: Mutex::new(Gate {
+                queued: 0,
+                stopped: false,
+            }),
+            cv: Condvar::new(),
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Enqueue one item (round-robin shard placement).
+    pub fn push(&self, item: T) {
+        {
+            let mut g = self.gate.lock().unwrap();
+            g.queued += 1;
+        }
+        let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.shards[s].lock().unwrap().push_back(item);
+        self.cv.notify_one();
+    }
+
+    /// Enqueue one item directly onto `shard` (affinity placement).
+    pub fn push_to(&self, shard: usize, item: T) {
+        {
+            let mut g = self.gate.lock().unwrap();
+            g.queued += 1;
+        }
+        self.shards[shard % self.shards.len()]
+            .lock()
+            .unwrap()
+            .push_back(item);
+        self.cv.notify_one();
+    }
+
+    /// Dequeue for `worker`: own shard first, then steal. Blocks until
+    /// an item arrives; returns `None` only once the pool is stopped
+    /// *and* fully drained.
+    pub fn pop(&self, worker: usize) -> Option<(T, Provenance)> {
+        loop {
+            if let Some(hit) = self.try_pop(worker) {
+                return Some(hit);
+            }
+            let mut g = self.gate.lock().unwrap();
+            loop {
+                if g.queued > 0 {
+                    break; // retry the shard scan
+                }
+                if g.stopped {
+                    return None;
+                }
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+    }
+
+    fn try_pop(&self, worker: usize) -> Option<(T, Provenance)> {
+        let n = self.shards.len();
+        for i in 0..n {
+            let idx = (worker + i) % n;
+            let item = {
+                let mut q = self.shards[idx].lock().unwrap();
+                if i == 0 {
+                    q.pop_front()
+                } else {
+                    q.pop_back()
+                }
+            };
+            if let Some(item) = item {
+                let mut g = self.gate.lock().unwrap();
+                g.queued -= 1;
+                drop(g);
+                return Some(if i == 0 {
+                    (item, Provenance::Own)
+                } else {
+                    (item, Provenance::Stolen)
+                });
+            }
+        }
+        None
+    }
+
+    /// Stop the pool: blocked workers drain what is queued, then see
+    /// `None`.
+    pub fn stop(&self) {
+        self.gate.lock().unwrap().stopped = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_on_own_shard() {
+        let pool: WorkPool<u32> = WorkPool::new(1);
+        pool.push(1);
+        pool.push(2);
+        pool.push(3);
+        assert_eq!(pool.pop(0), Some((1, Provenance::Own)));
+        assert_eq!(pool.pop(0), Some((2, Provenance::Own)));
+        pool.stop();
+        assert_eq!(pool.pop(0), Some((3, Provenance::Own)));
+        assert_eq!(pool.pop(0), None);
+    }
+
+    #[test]
+    fn idle_worker_steals_from_victim_back() {
+        let pool: WorkPool<u32> = WorkPool::new(2);
+        // All four land on shard 0.
+        for v in [10, 11, 12, 13] {
+            pool.push_to(0, v);
+        }
+        // Worker 1's shard is empty: it steals from shard 0's back.
+        assert_eq!(pool.pop(1), Some((13, Provenance::Stolen)));
+        // Worker 0 keeps FIFO order on its own shard.
+        assert_eq!(pool.pop(0), Some((10, Provenance::Own)));
+    }
+
+    #[test]
+    fn stop_wakes_blocked_workers() {
+        let pool: Arc<WorkPool<u32>> = Arc::new(WorkPool::new(2));
+        let p = Arc::clone(&pool);
+        let h = std::thread::spawn(move || p.pop(0));
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        pool.stop();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn concurrent_workers_drain_everything_once() {
+        let pool: Arc<WorkPool<u64>> = Arc::new(WorkPool::new(4));
+        let n = 10_000u64;
+        for v in 0..n {
+            pool.push(v);
+        }
+        pool.stop();
+        let mut handles = Vec::new();
+        for wid in 0..4 {
+            let p = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                let mut sum = 0u64;
+                let mut count = 0u64;
+                while let Some((v, _)) = p.pop(wid) {
+                    sum += v;
+                    count += 1;
+                }
+                (sum, count)
+            }));
+        }
+        let (mut sum, mut count) = (0u64, 0u64);
+        for h in handles {
+            let (s, c) = h.join().unwrap();
+            sum += s;
+            count += c;
+        }
+        assert_eq!(count, n);
+        assert_eq!(sum, n * (n - 1) / 2);
+    }
+}

@@ -97,6 +97,39 @@ pub fn schedule(
     }
 }
 
+/// Aggregate per-tile engine stats into one job-level [`RunStats`]
+/// under the engine's *natural* policy: a full-reload stall in any
+/// tile marks a tinyTPU-style staller, everything else prefetches
+/// (in-DSP or CLB ping-pong). `true_macs` replaces the padded
+/// per-tile MAC overcount with the real problem size.
+///
+/// Both the sequential path (`run_gemm_tiled`) and the sharded
+/// assembly (`JobTracker`) call this — keeping the two bit-identical
+/// by construction.
+pub fn aggregate_tile_stats(
+    per_tile: &[RunStats],
+    rows: usize,
+    true_macs: u64,
+) -> RunStats {
+    let policy = if per_tile
+        .iter()
+        .any(|s| s.weight_stall_cycles >= rows as u64)
+    {
+        PrefetchPolicy::Stall
+    } else {
+        PrefetchPolicy::PingPong
+    };
+    let rep = schedule(policy, per_tile, rows);
+    RunStats {
+        cycles: rep.cycles,
+        fast_cycles: rep.cycles,
+        macs: true_macs,
+        weight_stall_cycles: rep.weight_cycles,
+        weight_loads: per_tile.len() as u64,
+        guard_overflows: per_tile.iter().map(|s| s.guard_overflows).sum(),
+    }
+}
+
 /// The end-to-end speedup of ping-pong prefetch over stalling for the
 /// same tile sequence.
 pub fn prefetch_speedup(per_tile: &[RunStats], rows: usize) -> f64 {

@@ -1,23 +1,28 @@
-//! Multi-worker matrix-engine service.
+//! Multi-worker matrix-engine service with tile-level sharding.
 //!
 //! Each worker owns one cycle-accurate engine instance (they are cheap:
-//! a few hundred KB of register state) and drains a shared job queue.
-//! Channels + std threads keep the binary self-contained and offline.
+//! a few hundred KB of register state) and drains a sharded
+//! work-stealing pool of *tile-level* work units ([`super::pool`]).
+//! A single large GEMM therefore parallelizes across every worker —
+//! its tiles fan out, partial results assemble job-level in
+//! [`super::job::JobTracker`] — and mixed job sizes no longer convoy
+//! behind the largest job. Std threads + channels keep the binary
+//! self-contained and offline.
 
-use super::job::{Job, JobId, JobResult};
+use super::job::{Completion, Job, JobId, JobResult, JobTracker};
 use super::metrics::Metrics;
-use super::scheduler::{schedule, PrefetchPolicy};
-use super::tiler::GemmTiler;
+use super::pool::{Provenance, WorkPool};
+use super::scheduler::aggregate_tile_stats;
+use super::tiler::{GemmTiler, Tile};
 use crate::engines::os::{OsConfig, OsEngine, OsVariant};
 use crate::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
 use crate::engines::ws::{WsConfig, WsEngine, WsVariant};
 use crate::engines::{Engine, EngineError, RunStats};
 use crate::workload::conv::{im2col, weights_to_gemm};
-use crate::workload::gemm::golden_gemm;
 use crate::workload::{MatI32, MatI8};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 /// Which engine the workers instantiate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,6 +89,9 @@ pub struct ServiceConfig {
     pub ws_cols: usize,
     /// Cross-check every output against the golden reference.
     pub verify: bool,
+    /// Tiles per work unit (shard width): 1 = finest sharding (best
+    /// load balance), larger amortizes queue traffic for tiny tiles.
+    pub shard_width: usize,
 }
 
 impl Default for ServiceConfig {
@@ -94,6 +102,7 @@ impl Default for ServiceConfig {
             ws_rows: 14,
             ws_cols: 14,
             verify: true,
+            shard_width: 1,
         }
     }
 }
@@ -140,7 +149,7 @@ impl ServiceConfig {
 
     /// The tiler matching the engine geometry (WS engines only; OS/SNN
     /// tile internally).
-    fn tiler(&self) -> Option<GemmTiler> {
+    pub fn tiler(&self) -> Option<GemmTiler> {
         match self.kind {
             EngineKind::WsTinyTpu
             | EngineKind::WsLibano
@@ -175,112 +184,93 @@ pub fn run_gemm_tiled(
                 tiler.accumulate(&mut out, t, &run.output);
                 per_tile.push(run.stats);
             }
-            // Aggregate under the engine's natural policy (in-DSP /
-            // CLB ping-pong for everything but tinyTPU, which stalls).
-            let policy = if per_tile
-                .iter()
-                .any(|s| s.weight_stall_cycles >= tiler.rows as u64)
-            {
-                PrefetchPolicy::Stall
-            } else {
-                PrefetchPolicy::PingPong
-            };
-            let rep = schedule(policy, &per_tile, tiler.rows);
-            let mut stats = RunStats {
-                cycles: rep.cycles,
-                fast_cycles: rep.cycles,
-                macs: rep.macs,
-                weight_stall_cycles: rep.weight_cycles,
-                weight_loads: tiles.len() as u64,
-                guard_overflows: per_tile.iter().map(|s| s.guard_overflows).sum(),
-            };
             // Padded-tile MACs overcount; report the true problem size.
-            stats.macs = (a.rows * a.cols * w.cols) as u64;
+            let true_macs = (a.rows * a.cols * w.cols) as u64;
+            let stats = aggregate_tile_stats(&per_tile, tiler.rows, true_macs);
             Ok((out, stats))
         }
     }
 }
 
-enum Message {
-    Work(JobId, Job),
-    Stop,
+/// One unit of work: a batch of tiles of one job, or the whole job for
+/// engines that tile internally.
+struct WorkUnit {
+    job: Arc<JobTracker>,
+    tiles: Option<Vec<Tile>>,
+}
+
+/// Lower a [`Job`] to its GEMM operands (conv via im2col).
+fn lower(job: Job) -> (MatI8, MatI8) {
+    match job {
+        Job::Gemm { a, w } => (a, w),
+        Job::Conv {
+            input,
+            weights,
+            shape,
+        } => (im2col(&input, shape), weights_to_gemm(&weights, shape)),
+        Job::Snn { spikes, weights } => (spikes, weights),
+    }
 }
 
 /// The running service.
 pub struct Service {
-    tx: mpsc::Sender<Message>,
+    pool: Arc<WorkPool<WorkUnit>>,
     results_rx: mpsc::Receiver<JobResult>,
     workers: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     next_id: u64,
     cfg: ServiceConfig,
+    tiler: Option<GemmTiler>,
 }
 
 impl Service {
-    /// Spawn the worker pool.
+    /// Spawn the worker pool (one deque shard per worker).
     pub fn start(cfg: ServiceConfig) -> Self {
-        let (tx, rx) = mpsc::channel::<Message>();
-        let rx = Arc::new(Mutex::new(rx));
+        let workers_n = cfg.workers.max(1);
+        let pool = Arc::new(WorkPool::<WorkUnit>::new(workers_n));
         let (results_tx, results_rx) = mpsc::channel::<JobResult>();
         let metrics = Arc::new(Metrics::new());
         let mut workers = Vec::new();
-        for _ in 0..cfg.workers.max(1) {
-            let rx = Arc::clone(&rx);
+        for wid in 0..workers_n {
+            let pool = Arc::clone(&pool);
             let results_tx = results_tx.clone();
             let metrics = Arc::clone(&metrics);
             let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
                 let mut engine = cfg.build_engine();
-                let tiler = cfg.tiler();
-                loop {
-                    let msg = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match msg {
-                        Ok(Message::Work(id, job)) => {
-                            let t0 = Instant::now();
-                            match execute(engine.as_mut(), tiler.as_ref(), &job, cfg.verify)
-                            {
-                                Ok((output, stats, verified)) => {
-                                    let wall = t0.elapsed();
-                                    let plan = engine.clock_plan();
-                                    let simulated = Duration::from_secs_f64(
-                                        stats.cycles as f64 / (plan.slow_mhz * 1e6),
-                                    );
-                                    metrics.record_completion(
-                                        job.macs(),
-                                        stats.cycles,
-                                        wall,
-                                    );
-                                    let _ = results_tx.send(JobResult {
-                                        id,
-                                        output,
-                                        stats,
-                                        simulated,
-                                        wall,
-                                        verified,
-                                    });
-                                }
-                                Err(_) => {
-                                    metrics
-                                        .jobs_failed
-                                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                                }
-                            }
+                let slow_mhz = engine.clock_plan().slow_mhz;
+                while let Some((unit, prov)) = pool.pop(wid) {
+                    if prov == Provenance::Stolen {
+                        metrics.steals.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let (done, stats) =
+                        run_unit(engine.as_mut(), &unit, &metrics);
+                    match unit.job.complete_tiles(done, stats, slow_mhz) {
+                        Completion::Pending => {}
+                        Completion::Done(result) => {
+                            metrics.record_completion(
+                                unit.job.macs(),
+                                result.stats.cycles,
+                                result.wall,
+                            );
+                            let _ = results_tx.send(*result);
                         }
-                        Ok(Message::Stop) | Err(_) => break,
+                        Completion::Failed => {
+                            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                 }
             }));
         }
+        let tiler = cfg.tiler();
         Service {
-            tx,
+            pool,
             results_rx,
             workers,
             metrics,
             next_id: 0,
             cfg,
+            tiler,
         }
     }
 
@@ -288,16 +278,72 @@ impl Service {
         &self.cfg
     }
 
-    /// Enqueue a job; returns its id.
+    /// Enqueue a job, sharding it into tile-level work units; returns
+    /// its id.
     pub fn submit(&mut self, job: Job) -> JobId {
         let id = JobId(self.next_id);
         self.next_id += 1;
         self.metrics
             .jobs_submitted
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tx
-            .send(Message::Work(id, job))
-            .expect("workers alive");
+            .fetch_add(1, Ordering::Relaxed);
+        let macs = job.macs();
+        let (a, w) = lower(job);
+        match &self.tiler {
+            Some(tiler) => {
+                let tiles = tiler.tiles(&a, &w);
+                // Degenerate problems (zero-area GEMM) still owe one
+                // (empty) unit so the job assembles and reports.
+                let total = tiles.len().max(1);
+                let tracker = Arc::new(JobTracker::new(
+                    id,
+                    a,
+                    w,
+                    macs,
+                    total,
+                    Some(tiler.rows),
+                    self.cfg.verify,
+                ));
+                if tiles.is_empty() {
+                    self.pool.push(WorkUnit {
+                        job: tracker,
+                        tiles: Some(Vec::new()),
+                    });
+                    return id;
+                }
+                let width = self.cfg.shard_width.max(1);
+                let mut batch = Vec::with_capacity(width);
+                for tile in tiles {
+                    batch.push(tile);
+                    if batch.len() == width {
+                        self.pool.push(WorkUnit {
+                            job: Arc::clone(&tracker),
+                            tiles: Some(std::mem::take(&mut batch)),
+                        });
+                    }
+                }
+                if !batch.is_empty() {
+                    self.pool.push(WorkUnit {
+                        job: tracker,
+                        tiles: Some(batch),
+                    });
+                }
+            }
+            None => {
+                let tracker = Arc::new(JobTracker::new(
+                    id,
+                    a,
+                    w,
+                    macs,
+                    1,
+                    None,
+                    self.cfg.verify,
+                ));
+                self.pool.push(WorkUnit {
+                    job: tracker,
+                    tiles: None,
+                });
+            }
+        }
         id
     }
 
@@ -306,35 +352,54 @@ impl Service {
         self.results_rx.recv_timeout(timeout).ok()
     }
 
-    /// Stop workers and join.
+    /// Stop workers (queued work drains first) and join.
     pub fn shutdown(self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Message::Stop);
-        }
+        self.pool.stop();
         for w in self.workers {
             let _ = w.join();
         }
     }
 }
 
-fn execute(
+/// Execute one work unit on a worker's engine. Returns how many tiles
+/// the unit accounted for and their stats (short on failure).
+fn run_unit(
     engine: &mut dyn Engine,
-    tiler: Option<&GemmTiler>,
-    job: &Job,
-    verify: bool,
-) -> Result<(MatI32, RunStats, Option<bool>), EngineError> {
-    let (a, w): (MatI8, MatI8) = match job {
-        Job::Gemm { a, w } => (a.clone(), w.clone()),
-        Job::Conv {
-            input,
-            weights,
-            shape,
-        } => (im2col(input, *shape), weights_to_gemm(weights, *shape)),
-        Job::Snn { spikes, weights } => (spikes.clone(), weights.clone()),
-    };
-    let (output, stats) = run_gemm_tiled(engine, tiler, &a, &w)?;
-    let verified = verify.then(|| output == golden_gemm(&a, &w));
-    Ok((output, stats, verified))
+    unit: &WorkUnit,
+    metrics: &Metrics,
+) -> (usize, Vec<RunStats>) {
+    match &unit.tiles {
+        Some(tiles) => {
+            let mut stats = Vec::with_capacity(tiles.len());
+            for tile in tiles {
+                match engine.run_gemm(&tile.a, &tile.w) {
+                    Ok(run) => {
+                        unit.job.accumulate(tile, &run.output);
+                        stats.push(run.stats);
+                        metrics.tiles_executed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        unit.job.mark_failed();
+                        break;
+                    }
+                }
+            }
+            // Empty units (degenerate problems) still account one slot
+            // so the tracker assembles.
+            (tiles.len().max(1), stats)
+        }
+        None => match engine.run_gemm(unit.job.a(), unit.job.w()) {
+            Ok(run) => {
+                unit.job.set_output(run.output);
+                metrics.tiles_executed.fetch_add(1, Ordering::Relaxed);
+                (1, vec![run.stats])
+            }
+            Err(_) => {
+                unit.job.mark_failed();
+                (1, Vec::new())
+            }
+        },
+    }
 }
 
 #[cfg(test)]
@@ -342,6 +407,17 @@ mod tests {
     use super::*;
     use crate::util::rng::XorShift;
     use crate::workload::conv::ConvShape;
+    use crate::workload::gemm::golden_gemm;
+
+    #[test]
+    fn engine_kind_parse_label_round_trips() {
+        for kind in EngineKind::all() {
+            assert_eq!(EngineKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(EngineKind::parse("warp-drive"), None);
+        assert_eq!(EngineKind::parse(""), None);
+        assert_eq!(EngineKind::parse("WS-DSP-FETCH"), None); // case-exact
+    }
 
     #[test]
     fn service_runs_gemm_jobs_verified() {
@@ -351,6 +427,7 @@ mod tests {
             ws_rows: 6,
             ws_cols: 6,
             verify: true,
+            shard_width: 1,
         });
         let mut rng = XorShift::new(3);
         let n_jobs = 8;
@@ -381,6 +458,7 @@ mod tests {
             ws_rows: 0,
             ws_cols: 0,
             verify: true,
+            shard_width: 1,
         });
         let shape = ConvShape {
             in_c: 3,
@@ -412,6 +490,7 @@ mod tests {
             ws_rows: 0,
             ws_cols: 0,
             verify: true,
+            shard_width: 1,
         });
         let mut rng = XorShift::new(11);
         let spikes = MatI8::from_fn(8, 32, |_, _| rng.chance(1, 3) as i8);
@@ -430,6 +509,7 @@ mod tests {
             ws_rows: 14,
             ws_cols: 14,
             verify: true,
+            shard_width: 1,
         });
         let mut rng = XorShift::new(5);
         let a = MatI8::random_bounded(&mut rng, 6, 100, 63);
@@ -438,6 +518,104 @@ mod tests {
         let r = svc.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(r.verified, Some(true));
         assert_eq!(r.stats.macs, 6 * 100 * 40);
+        svc.shutdown();
+    }
+
+    /// A single job sharded across 4 workers is bit-identical — output
+    /// *and* aggregate cycle stats — to the same job on 1 worker.
+    #[test]
+    fn sharded_single_job_matches_sequential() {
+        let mut rng = XorShift::new(13);
+        let a = MatI8::random_bounded(&mut rng, 8, 60, 63);
+        let w = MatI8::random(&mut rng, 60, 30);
+        let run = |workers: usize| {
+            let mut svc = Service::start(ServiceConfig {
+                kind: EngineKind::WsDspFetch,
+                workers,
+                ws_rows: 6,
+                ws_cols: 6,
+                verify: false,
+                shard_width: 1,
+            });
+            svc.submit(Job::Gemm {
+                a: a.clone(),
+                w: w.clone(),
+            });
+            let r = svc
+                .recv_timeout(Duration::from_secs(60))
+                .expect("job completes");
+            svc.shutdown();
+            r
+        };
+        let seq = run(1);
+        let par = run(4);
+        assert_eq!(par.output, seq.output);
+        assert_eq!(par.output, golden_gemm(&a, &w));
+        assert_eq!(par.stats.cycles, seq.stats.cycles);
+        assert_eq!(par.stats.weight_loads, seq.stats.weight_loads);
+        assert_eq!(par.stats.macs, 8 * 60 * 30);
+    }
+
+    /// The sharded path agrees with the sequential `run_gemm_tiled`
+    /// helper, stats included.
+    #[test]
+    fn sharded_stats_match_run_gemm_tiled() {
+        let mut rng = XorShift::new(21);
+        let a = MatI8::random_bounded(&mut rng, 5, 40, 63);
+        let w = MatI8::random(&mut rng, 40, 20);
+        let cfg = ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 3,
+            ws_rows: 6,
+            ws_cols: 6,
+            verify: true,
+            shard_width: 2,
+        };
+        let mut engine = cfg.build_engine();
+        let tiler = cfg.tiler().unwrap();
+        let (seq_out, seq_stats) =
+            run_gemm_tiled(engine.as_mut(), Some(&tiler), &a, &w).unwrap();
+
+        let mut svc = Service::start(cfg);
+        svc.submit(Job::Gemm {
+            a: a.clone(),
+            w: w.clone(),
+        });
+        let r = svc.recv_timeout(Duration::from_secs(60)).unwrap();
+        svc.shutdown();
+        assert_eq!(r.verified, Some(true));
+        assert_eq!(r.output, seq_out);
+        assert_eq!(r.stats.cycles, seq_stats.cycles);
+        assert_eq!(r.stats.weight_stall_cycles, seq_stats.weight_stall_cycles);
+        assert_eq!(r.stats.macs, seq_stats.macs);
+    }
+
+    /// Mixed job sizes on a sharded pool: everything completes and
+    /// verifies (no convoying deadlocks, no lost tiles).
+    #[test]
+    fn mixed_job_sizes_all_complete() {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 4,
+            ws_rows: 6,
+            ws_cols: 6,
+            verify: true,
+            shard_width: 3,
+        });
+        let mut rng = XorShift::new(31);
+        let mut jobs = 0;
+        for (m, k, n) in [(2, 6, 6), (8, 50, 24), (1, 1, 1), (4, 30, 7), (16, 12, 12)] {
+            let a = MatI8::random_bounded(&mut rng, m, k, 63);
+            let w = MatI8::random(&mut rng, k, n);
+            svc.submit(Job::Gemm { a, w });
+            jobs += 1;
+        }
+        for _ in 0..jobs {
+            let r = svc
+                .recv_timeout(Duration::from_secs(60))
+                .expect("all jobs complete");
+            assert_eq!(r.verified, Some(true));
+        }
         svc.shutdown();
     }
 }

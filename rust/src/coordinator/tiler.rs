@@ -28,6 +28,21 @@ pub struct Tile {
     pub w: MatI8,
 }
 
+impl Tile {
+    /// Fold this tile's partial product into the job-level output.
+    /// K-tiles sum (integer adds commute, so sharded completion order
+    /// cannot change the result); N-tiles write disjoint columns.
+    pub fn accumulate_into(&self, out: &mut MatI32, partial: &MatI32) {
+        assert_eq!(partial.rows, out.rows);
+        assert_eq!(partial.cols, self.n1 - self.n0);
+        for r in 0..partial.rows {
+            for c in 0..partial.cols {
+                out.add(r, self.n0 + c, partial.at(r, c));
+            }
+        }
+    }
+}
+
 /// Tiling plan for one engine geometry.
 #[derive(Debug, Clone, Copy)]
 pub struct GemmTiler {
@@ -89,13 +104,7 @@ impl GemmTiler {
 
     /// Accumulate a tile's partial result into the full output.
     pub fn accumulate(&self, out: &mut MatI32, tile: &Tile, partial: &MatI32) {
-        assert_eq!(partial.rows, out.rows);
-        assert_eq!(partial.cols, tile.n1 - tile.n0);
-        for r in 0..partial.rows {
-            for c in 0..partial.cols {
-                out.add(r, tile.n0 + c, partial.at(r, c));
-            }
-        }
+        tile.accumulate_into(out, partial);
     }
 }
 

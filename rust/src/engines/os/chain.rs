@@ -25,6 +25,9 @@ pub struct MultChain {
     /// Official-variant DDR weight mux (one 8-bit 2:1 LUT mux per chain
     /// pair in the inventory; modeled per chain here for activity).
     mux: Option<LutMux>,
+    /// Pre-edge cascade snapshot, reused every tick (§Perf: no per-tick
+    /// allocation in the hot loop).
+    pcout_buf: Vec<i64>,
 }
 
 /// Per-edge drive for one chain (engine-provided).
@@ -61,6 +64,7 @@ impl MultChain {
                 OsVariant::Official => Some(LutMux::new(8, ClockDomain::Fast)),
                 OsVariant::Enhanced => None,
             },
+            pcout_buf: Vec::with_capacity(chain_len),
         }
     }
 
@@ -87,11 +91,17 @@ impl MultChain {
         &mut self,
         mut per_slice: impl FnMut(usize) -> (ChainDrive, i64, i64, i64),
     ) {
-        let pcouts: Vec<i64> = self.dsps.iter().map(|d| d.pcout()).collect();
-        let official = self.mux.is_some();
-        for (j, dsp) in self.dsps.iter_mut().enumerate() {
+        let MultChain {
+            dsps,
+            mux,
+            pcout_buf,
+        } = self;
+        pcout_buf.clear();
+        pcout_buf.extend(dsps.iter().map(|d| d.pcout()));
+        let official = mux.is_some();
+        for (j, dsp) in dsps.iter_mut().enumerate() {
             let (drive, a, d, b_bus) = per_slice(j);
-            let b = if let Some(mux) = self.mux.as_mut() {
+            let b = if let Some(mux) = mux.as_mut() {
                 mux.select(drive.use_b1, b_bus, b_bus)
             } else {
                 b_bus
@@ -107,7 +117,7 @@ impl MultChain {
                 a,
                 d,
                 b,
-                pcin: if j == 0 { 0 } else { pcouts[j - 1] },
+                pcin: if j == 0 { 0 } else { pcout_buf[j - 1] },
                 inmode,
                 opmode,
                 ceb1: drive.ceb1,

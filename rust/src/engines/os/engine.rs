@@ -33,6 +33,7 @@ use super::ring::{respace_to_two24, two24_lanes, RingAccumulator};
 use super::{chain::ChainDrive, MultChain, OsConfig, OsVariant};
 use crate::cost::{ResourceInventory, TimingModel};
 use crate::engines::{Engine, EngineError, GemmRun, RunStats};
+use crate::exec::{self, Clocking, FillPlan, Scratch, TileKernel, TilePlan};
 use crate::fabric::ClockPlan;
 use crate::packing;
 use crate::workload::{MatI32, MatI8};
@@ -69,6 +70,11 @@ pub struct OsEngine {
     d_delay: Vec<Vec<i64>>,
     /// Per-ring 2-edge chain-B word buffer.
     tailb_buf: Vec<[i64; 2]>,
+    /// Behavioral slots for the accumulators, reused across passes:
+    /// `[pair][wave][lane][oc]` (lane 0 = hi pixel, 1 = lo pixel).
+    slots: Vec<[[[i64; 2]; 2]; 2]>,
+    /// Reusable scratch arena for the edge loop's delay lines.
+    scratch: Scratch,
 }
 
 impl OsEngine {
@@ -93,6 +99,8 @@ impl OsEngine {
             },
             d_delay: (0..n_chains).map(|_| vec![0; cfg.chain_len]).collect(),
             tailb_buf: vec![[0; 2]; n_pairs],
+            slots: vec![[[[0; 2]; 2]; 2]; n_pairs],
+            scratch: Scratch::new(),
             cfg,
         }
     }
@@ -125,22 +133,8 @@ impl OsEngine {
         g * self.cfg.oc_pairs + o
     }
 
-    /// Run one pass: pixel block `pb` (8 pixels), oc block `ob`.
-    #[allow(clippy::too_many_arguments)]
-    fn run_pass(
-        &mut self,
-        a: &MatI8,
-        w: &MatI8,
-        pb: usize,
-        ob: usize,
-        rounds: usize,
-        out: &mut MatI32,
-        stats: &mut RunStats,
-    ) {
-        let cfg = self.cfg;
-        let len = cfg.chain_len;
-        let ics_round = cfg.ic_groups * len;
-        // Reset sequential state (new stationary outputs).
+    /// Reset sequential state for a new pass (new stationary outputs).
+    fn reset_pass(&mut self) {
         for ch in &mut self.chains {
             ch.reset();
         }
@@ -153,11 +147,28 @@ impl OsEngine {
         for b in &mut self.tailb_buf {
             *b = [0; 2];
         }
+        for s in &mut self.slots {
+            *s = [[[0; 2]; 2]; 2];
+        }
+    }
 
-        // Behavioral slots for the official accumulators:
-        // [pair][wave][lane][oc] (lane 0 = hi pixel, 1 = lo pixel).
-        let mut slots =
-            vec![[[[0i64; 2]; 2]; 2]; cfg.px_groups * cfg.oc_pairs];
+    /// One fast edge of a pass: tick every chain, then route the tail
+    /// words into the accumulators. The edge loop itself lives in
+    /// [`exec::run_tile`]; this is the OS datapath's cycle body.
+    #[allow(clippy::too_many_arguments)]
+    fn pass_edge(
+        &mut self,
+        e: usize,
+        a: &MatI8,
+        w: &MatI8,
+        pb: usize,
+        ob: usize,
+        rounds: usize,
+        scratch: &mut Scratch,
+    ) {
+        let cfg = self.cfg;
+        let len = cfg.chain_len;
+        let ics_round = cfg.ic_groups * len;
 
         let at = |row: usize, col: usize| -> i64 {
             if row < a.rows && col < a.cols {
@@ -174,10 +185,7 @@ impl OsEngine {
             }
         };
 
-        let last_m = 4 * rounds + 2; // final M edge = 4(R-1)+6
-        let total_edges = last_m + len + 4; // tail + ring margin
-
-        for e in 0..total_edges {
+        {
             // --- tick every chain -----------------------------------
             // Slice j runs the shared schedule delayed by j edges (the
             // cascade adds one register stage per position), so every
@@ -187,10 +195,10 @@ impl OsEngine {
                     for i in 0..cfg.ic_groups {
                         let ci = self.chain_idx(g, o, i);
                         // §Perf: swap the per-chain D-delay line out
-                        // instead of cloning it every edge (the values
-                        // are overwritten below anyway).
+                        // through the scratch arena instead of cloning
+                        // (or allocating) it every edge.
                         let d_prev = std::mem::take(&mut self.d_delay[ci]);
-                        let mut d_next = vec![0i64; len];
+                        let mut d_next = scratch.lease_i64(len);
                         let chain = &mut self.chains[ci];
                         chain.tick(|j| {
                             let Some(ej) = e.checked_sub(j) else {
@@ -243,6 +251,7 @@ impl OsEngine {
                             )
                         });
                         self.d_delay[ci] = d_next;
+                        scratch.release_i64(d_prev);
                     }
                 }
             }
@@ -288,8 +297,8 @@ impl OsEngine {
                                     if rr == rounds - 1 {
                                         let (lo, hi) =
                                             two24_lanes(self.rings[pi].output());
-                                        slots[pi][wv][0][oc] = hi;
-                                        slots[pi][wv][1][oc] = lo;
+                                        self.slots[pi][wv][0][oc] = hi;
+                                        self.slots[pi][wv][1][oc] = lo;
                                     }
                                 }
                             }
@@ -300,16 +309,28 @@ impl OsEngine {
                             if let Some((wv, oc, _)) = valid_tag {
                                 let word = tail_a + tail_b;
                                 let (hi, lo) = packing::unpack_prod(word);
-                                slots[pi][wv][0][oc] += hi;
-                                slots[pi][wv][1][oc] += lo;
+                                self.slots[pi][wv][0][oc] += hi;
+                                self.slots[pi][wv][1][oc] += lo;
                             }
                         }
                     }
                 }
             }
         }
+    }
 
-        // --- drain slots into the output matrix -------------------------
+    /// Drain the behavioral slots into the output matrix at pass end.
+    #[allow(clippy::too_many_arguments)]
+    fn drain_pass(
+        &self,
+        a: &MatI8,
+        w: &MatI8,
+        pb: usize,
+        ob: usize,
+        out: &mut MatI32,
+        stats: &mut RunStats,
+    ) {
+        let cfg = self.cfg;
         for g in 0..cfg.px_groups {
             for o in 0..cfg.oc_pairs {
                 let pi = self.pair_idx(g, o);
@@ -324,17 +345,58 @@ impl OsEngine {
                             if n >= w.cols {
                                 continue;
                             }
-                            out.set(px, n, slots[pi][wv][lane][oc] as i32);
+                            out.set(px, n, self.slots[pi][wv][lane][oc] as i32);
                             stats.macs += a.cols as u64;
                         }
                     }
                 }
             }
         }
+    }
+}
 
-        stats.fast_cycles += total_edges as u64;
-        stats.cycles += total_edges.div_ceil(2) as u64;
-        stats.weight_loads += rounds as u64;
+/// One OS pass (pixel block × oc block) adapted to the [`exec`] core.
+struct OsPassKernel<'a> {
+    eng: &'a mut OsEngine,
+    a: &'a MatI8,
+    w: &'a MatI8,
+    out: &'a mut MatI32,
+    pb: usize,
+    ob: usize,
+    rounds: usize,
+}
+
+impl TileKernel for OsPassKernel<'_> {
+    fn plan(&self) -> TilePlan {
+        // Payload: 4 fast edges per round. Tail: final M edge offset
+        // (+2), chain latency, and the ring margin (+4) — the same
+        // `last_m + len + 4` budget the edge schedule derives.
+        TilePlan {
+            // Weights stream *during* compute (in-DSP mux / CLB DDR
+            // mux): no exposed fill, one weight load per round.
+            fill: FillPlan {
+                cycles: 0,
+                exposed: 0,
+                loads: self.rounds as u64,
+            },
+            stream_steps: 4 * self.rounds,
+            drain_steps: self.eng.cfg.chain_len + 6,
+            clocking: Clocking::DoubleRate,
+        }
+    }
+
+    fn fill(&mut self, _scratch: &mut Scratch, _stats: &mut RunStats) {
+        self.eng.reset_pass();
+    }
+
+    fn step(&mut self, e: usize, scratch: &mut Scratch, _stats: &mut RunStats) {
+        self.eng
+            .pass_edge(e, self.a, self.w, self.pb, self.ob, self.rounds, scratch);
+    }
+
+    fn drain(&mut self, _scratch: &mut Scratch, stats: &mut RunStats) {
+        self.eng
+            .drain_pass(self.a, self.w, self.pb, self.ob, self.out, stats);
     }
 }
 
@@ -383,11 +445,22 @@ impl Engine for OsEngine {
         let rounds = a.cols.div_ceil(cfg.ic_groups * cfg.chain_len).max(1);
         let px_blocks = a.rows.div_ceil(cfg.px_groups * 4).max(1);
         let oc_blocks = w.cols.div_ceil(cfg.ocs()).max(1);
+        let mut scratch = std::mem::take(&mut self.scratch);
         for pb in 0..px_blocks {
             for ob in 0..oc_blocks {
-                self.run_pass(a, w, pb, ob, rounds, &mut out, &mut stats);
+                let mut kernel = OsPassKernel {
+                    eng: self,
+                    a,
+                    w,
+                    out: &mut out,
+                    pb,
+                    ob,
+                    rounds,
+                };
+                exec::run_tile(&mut kernel, &mut scratch, &mut stats);
             }
         }
+        self.scratch = scratch;
         Ok(GemmRun { output: out, stats })
     }
 }

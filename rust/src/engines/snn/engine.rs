@@ -7,6 +7,7 @@ use crate::dsp::{
     InputSource, OpMode, SimdMode, WMux, XMux, YMux, ZMux,
 };
 use crate::engines::{Engine, EngineError, GemmRun, RunStats};
+use crate::exec::{self, Clocking, FillPlan, Scratch, TileKernel, TilePlan};
 use crate::fabric::{ClockDomain, ClockPlan, FfBank};
 use crate::workload::snn::{LifLayer, SpikeTrain};
 use crate::workload::{MatI32, MatI8};
@@ -21,6 +22,11 @@ pub struct SnnEngine {
     /// for the A:B set too in the FireFly variant.
     c_bank: FfBank,
     ab_bank: FfBank,
+    /// Pre-edge cascade snapshot, reused every cycle (§Perf: no
+    /// per-cycle allocation in the hot loop).
+    pcout_buf: Vec<i64>,
+    /// Reusable scratch arena for per-pass output staging.
+    scratch: Scratch,
 }
 
 /// Pack four int8 weights into FOUR12 lanes (the 48-bit A:B / C word).
@@ -71,6 +77,8 @@ impl SnnEngine {
                 32,
                 ClockDomain::Slow,
             ),
+            pcout_buf: Vec::with_capacity(cfg.chain_len),
+            scratch: Scratch::new(),
             cfg,
         }
     }
@@ -79,12 +87,23 @@ impl SnnEngine {
         &self.cfg
     }
 
+    /// Fill cost of one pass: prefetch (chain_len shifts) overlaps
+    /// compute; the commit pulse is the only exposed cycle — same story
+    /// as the WS engines.
+    fn fill_plan(&self) -> FillPlan {
+        FillPlan {
+            cycles: self.cfg.chain_len as u64 + 1,
+            exposed: 1,
+            loads: 1,
+        }
+    }
+
     /// Load weights for one pass: `weights[pre][post]` with
     /// `post = chain*4 + lane`. The A:B set serves lanes of even pre
-    /// (slice input 0), the C set odd pre (slice input 1).
-    pub fn load_weights(&mut self, w: &MatI8, post_base: usize, stats: &mut RunStats) {
+    /// (slice input 0), the C set odd pre (slice input 1). Cycle
+    /// accounting comes from [`SnnEngine::fill_plan`].
+    fn fill_weights(&mut self, w: &MatI8, post_base: usize) {
         let cfg = self.cfg;
-        stats.weight_loads += 1;
         for c in 0..cfg.chains {
             for j in 0..cfg.chain_len {
                 let slice = c * cfg.chain_len + j;
@@ -136,72 +155,72 @@ impl SnnEngine {
                 });
             }
         }
-        // Prefetch (chain_len shifts) overlaps compute; the commit pulse
-        // is the only exposed cycle — same story as the WS engines.
-        stats.cycles += cfg.chain_len as u64 + 1;
-        stats.weight_stall_cycles += 1;
     }
 
-    /// Synaptic currents for one pass: `spikes (T × pre)` against the
-    /// loaded weights; returns `(T × post_per_pass)` currents.
-    fn stream_pass(&mut self, train: &SpikeTrain, stats: &mut RunStats) -> Vec<i32> {
+    /// One crossbar cycle: every chain ticks with its skewed spike
+    /// selects, and the tail lanes for the completed timestep land in
+    /// `out`. The cycle loop itself lives in [`exec::run_tile`]; this
+    /// is the SNN datapath's cycle body.
+    fn stream_cycle(
+        &mut self,
+        cycle: usize,
+        train: &SpikeTrain,
+        out: &mut [i32],
+        stats: &mut RunStats,
+    ) {
         let cfg = self.cfg;
         let len = cfg.chain_len;
         let t_steps = train.steps;
-        let mut out = vec![0i32; t_steps * cfg.post_per_pass()];
-        // Tail latency: slice j's ALU registers at cycle t+j (no M reg
-        // in the crossbar path), so the tail P carries timestep
-        // `cycle - (len-1)`.
-        let total = t_steps + len;
-
-        for cycle in 0..total {
-            for (c, chain) in self.dsps.iter_mut().enumerate() {
-                let pcouts: Vec<i64> = chain.iter().map(|d| d.pcout()).collect();
-                for j in 0..len {
-                    // Systolic skew: slice j sees timestep `cycle - j`.
-                    let t = cycle as isize - j as isize;
-                    let (s0, s1) = if t >= 0 && (t as usize) < t_steps {
-                        (
-                            train.at(t as usize, 2 * j),
-                            train.at(t as usize, 2 * j + 1),
-                        )
-                    } else {
-                        (false, false)
-                    };
-                    if s0 || s1 {
-                        stats.macs += 4 * (s0 as u64 + s1 as u64);
-                    }
-                    // The spike bits drive the wide-bus muxes.
-                    let opmode = OpMode {
-                        x: if s0 { XMux::Ab } else { XMux::Zero },
-                        y: if s1 { YMux::C } else { YMux::Zero },
-                        z: ZMux::Pcin,
-                        w: WMux::Zero,
-                    };
-                    chain[j].tick(&DspInputs {
-                        pcin: if j == 0 { 0 } else { pcouts[j - 1] },
-                        opmode,
-                        cea1: false,
-                        cea2: false,
-                        ceb1: false,
-                        ceb2: false,
-                        cec: false,
-                        ..DspInputs::default()
-                    });
+        let SnnEngine {
+            dsps, pcout_buf, ..
+        } = self;
+        for (c, chain) in dsps.iter_mut().enumerate() {
+            pcout_buf.clear();
+            pcout_buf.extend(chain.iter().map(|d| d.pcout()));
+            for j in 0..len {
+                // Systolic skew: slice j sees timestep `cycle - j`.
+                let t = cycle as isize - j as isize;
+                let (s0, s1) = if t >= 0 && (t as usize) < t_steps {
+                    (
+                        train.at(t as usize, 2 * j),
+                        train.at(t as usize, 2 * j + 1),
+                    )
+                } else {
+                    (false, false)
+                };
+                if s0 || s1 {
+                    stats.macs += 4 * (s0 as u64 + s1 as u64);
                 }
-                let t_out = cycle as isize - (len as isize - 1);
-                if t_out >= 0 && (t_out as usize) < t_steps {
-                    let p = chain[len - 1].p();
-                    for lane in 0..4 {
-                        let v = simd_lane(SimdMode::Four12, p, lane) as i32;
-                        out[t_out as usize * cfg.post_per_pass() + c * 4 + lane] = v;
-                    }
+                // The spike bits drive the wide-bus muxes.
+                let opmode = OpMode {
+                    x: if s0 { XMux::Ab } else { XMux::Zero },
+                    y: if s1 { YMux::C } else { YMux::Zero },
+                    z: ZMux::Pcin,
+                    w: WMux::Zero,
+                };
+                chain[j].tick(&DspInputs {
+                    pcin: if j == 0 { 0 } else { pcout_buf[j - 1] },
+                    opmode,
+                    cea1: false,
+                    cea2: false,
+                    ceb1: false,
+                    ceb2: false,
+                    cec: false,
+                    ..DspInputs::default()
+                });
+            }
+            // Tail latency: slice j's ALU registers at cycle t+j (no M
+            // reg in the crossbar path), so the tail P carries timestep
+            // `cycle - (len-1)`.
+            let t_out = cycle as isize - (len as isize - 1);
+            if t_out >= 0 && (t_out as usize) < t_steps {
+                let p = chain[len - 1].p();
+                for lane in 0..4 {
+                    let v = simd_lane(SimdMode::Four12, p, lane) as i32;
+                    out[t_out as usize * cfg.post_per_pass() + c * 4 + lane] = v;
                 }
             }
         }
-        stats.cycles += total as u64;
-        stats.fast_cycles = stats.cycles;
-        out
     }
 
     /// Full SNN inference: crossbar currents + LIF update per timestep.
@@ -231,10 +250,20 @@ impl SnnEngine {
         let passes = n_post.div_ceil(per_pass);
         let mut stats = RunStats::default();
         let mut currents = vec![0i32; train.steps * n_post];
+        let mut scratch = std::mem::take(&mut self.scratch);
         for pass in 0..passes {
             self.reset();
-            self.load_weights(weights, pass * per_pass, &mut stats);
-            let pass_out = self.stream_pass(train, &mut stats);
+            let pass_out = {
+                let mut kernel = SnnPassKernel {
+                    eng: self,
+                    train,
+                    weights,
+                    post_base: pass * per_pass,
+                    out: Vec::new(),
+                };
+                exec::run_tile(&mut kernel, &mut scratch, &mut stats);
+                kernel.out
+            };
             for t in 0..train.steps {
                 for p in 0..per_pass {
                     let post = pass * per_pass + p;
@@ -243,7 +272,9 @@ impl SnnEngine {
                     }
                 }
             }
+            scratch.release_i32(pass_out);
         }
+        self.scratch = scratch;
         // LIF neuron update (integer, bit-exact with the python ref).
         let mut lif = LifLayer::new(n_post, self.cfg.v_threshold, self.cfg.leak_shift);
         let mut out_spikes = Vec::with_capacity(train.steps * n_post);
@@ -260,6 +291,40 @@ impl SnnEngine {
                 d.reset();
             }
         }
+    }
+}
+
+/// One SNN pass (a block of post-neurons) adapted to the [`exec`] core.
+struct SnnPassKernel<'a> {
+    eng: &'a mut SnnEngine,
+    train: &'a SpikeTrain,
+    weights: &'a MatI8,
+    post_base: usize,
+    /// Per-pass current staging, leased from the scratch arena during
+    /// fill; the caller copies it out and returns it to the pool.
+    out: Vec<i32>,
+}
+
+impl TileKernel for SnnPassKernel<'_> {
+    fn plan(&self) -> TilePlan {
+        TilePlan {
+            fill: self.eng.fill_plan(),
+            stream_steps: self.train.steps,
+            // Tail latency: the last timestep's word exits `chain_len`
+            // cycles after it enters.
+            drain_steps: self.eng.cfg.chain_len,
+            clocking: Clocking::Single,
+        }
+    }
+
+    fn fill(&mut self, scratch: &mut Scratch, _stats: &mut RunStats) {
+        self.out = scratch.lease_i32(self.train.steps * self.eng.cfg.post_per_pass());
+        self.eng.fill_weights(self.weights, self.post_base);
+    }
+
+    fn step(&mut self, cycle: usize, _scratch: &mut Scratch, stats: &mut RunStats) {
+        self.eng
+            .stream_cycle(cycle, self.train, &mut self.out, stats);
     }
 }
 

@@ -5,6 +5,7 @@ use super::{WsConfig, WsVariant};
 use crate::cost::{ResourceInventory, TimingModel};
 use crate::dsp::{Attributes, Dsp48e2, DspInputs, InMode, OpMode};
 use crate::engines::{Engine, EngineError, GemmRun, RunStats};
+use crate::exec::{self, Clocking, FillPlan, Scratch, TileKernel, TilePlan};
 use crate::fabric::{ClockDomain, ClockPlan, FfBank, StagingChain};
 use crate::packing::{self, GuardOverflow, LANE_SIGN};
 use crate::workload::{MatI32, MatI8};
@@ -32,6 +33,8 @@ pub struct WsEngine {
     /// CLB weight ping-pong bank (ClbFetch / Libano); empty otherwise.
     wgt_bank: FfBank,
     stats_template: RunStats,
+    /// Reusable scratch arena for the streaming hot loop.
+    scratch: Scratch,
 }
 
 impl WsEngine {
@@ -86,6 +89,7 @@ impl WsEngine {
             staging,
             wgt_bank,
             stats_template: RunStats::default(),
+            scratch: Scratch::new(),
         }
     }
 
@@ -93,14 +97,35 @@ impl WsEngine {
         &self.cfg
     }
 
+    /// Fill cost of one stationary tile under this variant's delivery
+    /// path (the numbers `fill_weights` realizes in register activity).
+    fn fill_plan(&self) -> FillPlan {
+        let rows = self.cfg.rows as u64;
+        match self.cfg.variant {
+            // Prefetch paths overlap compute in steady state: only the
+            // swap pulse is exposed.
+            WsVariant::DspFetch | WsVariant::ClbFetch | WsVariant::Libano => FillPlan {
+                cycles: rows + 1,
+                exposed: 1,
+                loads: 1,
+            },
+            // No prefetch path: the array stalls for the full reload
+            // (the drawback §IV-A calls out).
+            WsVariant::TinyTpu => FillPlan {
+                cycles: rows,
+                exposed: rows,
+                loads: 1,
+            },
+        }
+    }
+
     /// Load a stationary weight tile (K=rows × N<=cols), modeling the
-    /// variant's delivery path. Returns slow cycles consumed and how
-    /// many of them stall the array.
-    pub fn load_weights(&mut self, w: &MatI8, stats: &mut RunStats) {
+    /// variant's delivery path. Cycle accounting comes from
+    /// [`WsEngine::fill_plan`].
+    fn fill_weights(&mut self, w: &MatI8) {
         let (rows, cols) = (self.cfg.rows, self.cfg.cols);
         assert_eq!(w.rows, rows);
         assert!(w.cols <= cols);
-        stats.weight_loads += 1;
         match self.cfg.variant {
             WsVariant::DspFetch => {
                 // Stream down the B1/BCIN chain (rows cycles, normally
@@ -145,10 +170,6 @@ impl WsEngine {
                         });
                     }
                 }
-                stats.cycles += rows as u64 + 1;
-                // Prefetch overlaps compute in steady state: only the
-                // swap cycle is exposed.
-                stats.weight_stall_cycles += 1;
             }
             WsVariant::ClbFetch | WsVariant::Libano => {
                 // Fill the CLB ping-pong bank (overlappable), then one
@@ -175,12 +196,9 @@ impl WsEngine {
                         });
                     }
                 }
-                stats.cycles += rows as u64 + 1;
-                stats.weight_stall_cycles += 1;
             }
             WsVariant::TinyTpu => {
-                // No prefetch path: the array stalls for the full
-                // row-by-row load (the drawback §IV-A calls out).
+                // Row-by-row load through the B port, array idle.
                 for r in 0..rows {
                     for (c, col) in self.dsps.iter_mut().enumerate() {
                         let wv = if c < w.cols { w.at(r, c) as i64 } else { 0 };
@@ -196,31 +214,30 @@ impl WsEngine {
                         });
                     }
                 }
-                stats.cycles += rows as u64;
-                stats.weight_stall_cycles += rows as u64;
             }
         }
     }
 
-    /// Stream activations through the loaded array; returns the output.
-    fn stream(
+    /// One streaming cycle: shift staging, drive every column, collect
+    /// finished waves. The fill → stream → drain loop itself lives in
+    /// [`exec::run_tile`]; this is the WS datapath's cycle body.
+    #[allow(clippy::too_many_arguments)]
+    fn stream_cycle(
         &mut self,
+        t: usize,
         a: &MatI8,
         n_cols: usize,
+        waves: usize,
+        latency: usize,
+        pcouts: &mut [i64],
+        inp: &mut DspInputs,
+        out: &mut MatI32,
         stats: &mut RunStats,
-    ) -> Result<MatI32, EngineError> {
+    ) {
         let (rows, cols) = (self.cfg.rows, self.cfg.cols);
         let packed = self.cfg.variant.packed();
         let broadcast = self.cfg.variant.broadcast();
         let m = a.rows;
-        // Packed: process row pairs (pad odd M with a zero row).
-        let waves = if packed { m.div_ceil(2) } else { m };
-        let mut out = MatI32::zeros(m, n_cols);
-
-        // Total cycles: ramp-in + all waves + pipeline drain.
-        let latency = pipe_latency(self.cfg.variant);
-        let col_skew = if broadcast { 0 } else { cols - 1 };
-        let total = waves + (rows - 1) + col_skew + latency + 2;
 
         let act = |wave: isize, r: usize, lane_hi: bool| -> i64 {
             if wave < 0 {
@@ -238,124 +255,113 @@ impl WsEngine {
             }
         };
 
-        // §Perf: hoist the per-column pcout snapshot out of the cycle
-        // loop's allocator (one reusable buffer instead of a fresh Vec
-        // per column per cycle — see EXPERIMENTS.md §Perf, iteration 1).
-        let mut pcouts: Vec<i64> = vec![0; rows];
-        // §Perf iteration 2: one DspInputs template mutated per slice
-        // instead of re-constructed (keeps the 9 clock-enable fields
-        // and mode decode out of the inner loop).
-        let mut inp = DspInputs {
-            inmode: if packed {
-                InMode::A2_B2.with_d()
+        // Shift the staging chains (one new wave enters per cycle;
+        // row r sees wave t - r at its chain input).
+        for r in 0..rows {
+            let wave = t as isize - r as isize;
+            let v = if packed {
+                ((act(wave, r, true) & 0xFF) << 8) | (act(wave, r, false) & 0xFF)
             } else {
-                InMode::A2_B2
-            },
-            ceb1: false,
-            ceb2: false,
-            ..DspInputs::default()
-        };
+                act(wave, r, true) & 0xFF
+            };
+            self.staging[r].shift(v);
+        }
 
-        for t in 0..total {
-            // Shift the staging chains (one new wave enters per cycle;
-            // row r sees wave t - r at its chain input).
+        // Drive every column (pre-edge pcout reads, then tick).
+        for c in 0..cols {
+            let col = &mut self.dsps[c];
+            for (slot, d) in pcouts.iter_mut().zip(col.iter()) {
+                *slot = d.pcout();
+            }
             for r in 0..rows {
-                let wave = t as isize - r as isize;
-                let v = if packed {
-                    ((act(wave, r, true) & 0xFF) << 8) | (act(wave, r, false) & 0xFF)
+                let staged = if broadcast {
+                    // Broadcast: all columns see the chain input
+                    // directly (fan-out net, no staging).
+                    self.staging[r].stage(0)
                 } else {
-                    act(wave, r, true) & 0xFF
+                    self.staging[r].stage(c)
                 };
-                self.staging[r].shift(v);
-            }
-
-            // Drive every column (pre-edge pcout reads, then tick).
-            for c in 0..cols {
-                let col = &mut self.dsps[c];
-                for (slot, d) in pcouts.iter_mut().zip(col.iter()) {
-                    *slot = d.pcout();
-                }
-                for r in 0..rows {
-                    let staged = if broadcast {
-                        // Broadcast: all columns see the chain input
-                        // directly (fan-out net, no staging).
-                        self.staging[r].stage(0)
-                    } else {
-                        self.staging[r].stage(c)
-                    };
-                    if packed {
-                        let hi = ((staged >> 8) & 0xFF) as i8 as i64;
-                        let lo = (staged & 0xFF) as i8 as i64;
-                        inp.a = hi << packing::LANE_BITS;
-                        inp.d = lo;
-                    } else {
-                        inp.a = (staged & 0xFF) as i8 as i64;
-                        inp.d = 0;
-                    }
-                    inp.opmode = if r == 0 {
-                        OpMode::MULT
-                    } else {
-                        OpMode::MULT_CASCADE
-                    };
-                    inp.pcin = if r == 0 { 0 } else { pcouts[r - 1] };
-                    col[r].tick(&inp);
-                }
-            }
-
-            // Collect: column c's cascade bottom holds the result for
-            // wave `t - (rows-1) - skew(c) - PIPE_LATENCY` *after* this
-            // edge.
-            for c in 0..n_cols {
-                let skew = if broadcast { 0 } else { c };
-                let wave =
-                    t as isize - (rows as isize - 1) - skew as isize - latency as isize;
-                if wave < 0 || wave as usize >= waves {
-                    continue;
-                }
-                let p = self.dsps[c][rows - 1].p();
                 if packed {
-                    let (hi, lo) = packing::unpack_prod(p);
-                    let row_hi = 2 * wave as usize;
-                    let row_lo = row_hi + 1;
-                    out.set(row_hi, c, hi as i32);
-                    if row_lo < m {
-                        out.set(row_lo, c, lo as i32);
-                    }
-                    stats.macs += 2 * rows as u64;
+                    let hi = ((staged >> 8) & 0xFF) as i8 as i64;
+                    let lo = (staged & 0xFF) as i8 as i64;
+                    inp.a = hi << packing::LANE_BITS;
+                    inp.d = lo;
                 } else {
-                    out.set(wave as usize, c, p as i32);
-                    stats.macs += rows as u64;
+                    inp.a = (staged & 0xFF) as i8 as i64;
+                    inp.d = 0;
                 }
+                inp.opmode = if r == 0 {
+                    OpMode::MULT
+                } else {
+                    OpMode::MULT_CASCADE
+                };
+                inp.pcin = if r == 0 { 0 } else { pcouts[r - 1] };
+                col[r].tick(inp);
             }
         }
-        stats.cycles += total as u64;
-        stats.fast_cycles = stats.cycles;
 
-        // Guard-band audit for packed variants: the hardware cannot see
-        // low-lane overflow; the simulator can, and reports it.
-        if packed {
-            for wave in 0..waves {
-                let row_lo = 2 * wave + 1;
-                if row_lo >= m {
-                    continue;
+        // Collect: column c's cascade bottom holds the result for
+        // wave `t - (rows-1) - skew(c) - PIPE_LATENCY` *after* this
+        // edge.
+        for c in 0..n_cols {
+            let skew = if broadcast { 0 } else { c };
+            let wave =
+                t as isize - (rows as isize - 1) - skew as isize - latency as isize;
+            if wave < 0 || wave as usize >= waves {
+                continue;
+            }
+            let p = self.dsps[c][rows - 1].p();
+            if packed {
+                let (hi, lo) = packing::unpack_prod(p);
+                let row_hi = 2 * wave as usize;
+                let row_lo = row_hi + 1;
+                out.set(row_hi, c, hi as i32);
+                if row_lo < m {
+                    out.set(row_lo, c, lo as i32);
                 }
-                for c in 0..n_cols {
-                    let lo_sum: i64 = (0..rows)
-                        .map(|r| a.at(row_lo, r) as i64 * self.wgt_value(r, c))
-                        .sum();
-                    if !(-LANE_SIGN..LANE_SIGN).contains(&lo_sum) {
-                        stats.guard_overflows += 1;
-                        if self.cfg.strict_guard {
-                            return Err(EngineError::Guard(GuardOverflow {
-                                lane_sum: lo_sum,
-                                depth: rows,
-                            }));
-                        }
+                stats.macs += 2 * rows as u64;
+            } else {
+                out.set(wave as usize, c, p as i32);
+                stats.macs += rows as u64;
+            }
+        }
+    }
+
+    /// Guard-band audit for packed variants: the hardware cannot see
+    /// low-lane overflow; the simulator can, and reports it.
+    fn guard_audit(
+        &self,
+        a: &MatI8,
+        n_cols: usize,
+        waves: usize,
+        stats: &mut RunStats,
+    ) -> Result<(), EngineError> {
+        if !self.cfg.variant.packed() {
+            return Ok(());
+        }
+        let rows = self.cfg.rows;
+        let m = a.rows;
+        for wave in 0..waves {
+            let row_lo = 2 * wave + 1;
+            if row_lo >= m {
+                continue;
+            }
+            for c in 0..n_cols {
+                let lo_sum: i64 = (0..rows)
+                    .map(|r| a.at(row_lo, r) as i64 * self.wgt_value(r, c))
+                    .sum();
+                if !(-LANE_SIGN..LANE_SIGN).contains(&lo_sum) {
+                    stats.guard_overflows += 1;
+                    if self.cfg.strict_guard {
+                        return Err(EngineError::Guard(GuardOverflow {
+                            lane_sum: lo_sum,
+                            depth: rows,
+                        }));
                     }
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 
     /// The live weight currently held by PE (r, c) — from B2.
@@ -385,6 +391,99 @@ impl WsEngine {
             return 0.0;
         }
         (toggles as f64 / (cycles as f64 * total_ff as f64)).min(1.0)
+    }
+}
+
+/// The WS array's per-tile adapter to the [`exec`] core.
+struct WsTileKernel<'a> {
+    eng: &'a mut WsEngine,
+    a: &'a MatI8,
+    w: &'a MatI8,
+    out: &'a mut MatI32,
+    waves: usize,
+    latency: usize,
+    /// Cascade snapshot (leased from the scratch arena during fill —
+    /// see EXPERIMENTS.md §Perf, iteration 1: one reusable buffer
+    /// instead of a fresh Vec per column per cycle).
+    pcouts: Vec<i64>,
+    /// §Perf iteration 2: one DspInputs template mutated per slice
+    /// instead of re-constructed (keeps the 9 clock-enable fields
+    /// and mode decode out of the inner loop).
+    inp: DspInputs,
+}
+
+impl<'a> WsTileKernel<'a> {
+    fn new(
+        eng: &'a mut WsEngine,
+        a: &'a MatI8,
+        w: &'a MatI8,
+        out: &'a mut MatI32,
+    ) -> Self {
+        let packed = eng.cfg.variant.packed();
+        // Packed: process row pairs (pad odd M with a zero row).
+        let waves = if packed { a.rows.div_ceil(2) } else { a.rows };
+        let latency = pipe_latency(eng.cfg.variant);
+        let inp = DspInputs {
+            inmode: if packed {
+                InMode::A2_B2.with_d()
+            } else {
+                InMode::A2_B2
+            },
+            ceb1: false,
+            ceb2: false,
+            ..DspInputs::default()
+        };
+        WsTileKernel {
+            eng,
+            a,
+            w,
+            out,
+            waves,
+            latency,
+            pcouts: Vec::new(),
+            inp,
+        }
+    }
+}
+
+impl TileKernel for WsTileKernel<'_> {
+    fn plan(&self) -> TilePlan {
+        let (rows, cols) = (self.eng.cfg.rows, self.eng.cfg.cols);
+        let col_skew = if self.eng.cfg.variant.broadcast() {
+            0
+        } else {
+            cols - 1
+        };
+        TilePlan {
+            fill: self.eng.fill_plan(),
+            stream_steps: self.waves,
+            // Ramp-in + column skew + pipeline drain.
+            drain_steps: (rows - 1) + col_skew + self.latency + 2,
+            clocking: Clocking::Single,
+        }
+    }
+
+    fn fill(&mut self, scratch: &mut Scratch, _stats: &mut RunStats) {
+        self.pcouts = scratch.lease_i64(self.eng.cfg.rows);
+        self.eng.fill_weights(self.w);
+    }
+
+    fn step(&mut self, t: usize, _scratch: &mut Scratch, stats: &mut RunStats) {
+        self.eng.stream_cycle(
+            t,
+            self.a,
+            self.w.cols,
+            self.waves,
+            self.latency,
+            &mut self.pcouts,
+            &mut self.inp,
+            self.out,
+            stats,
+        );
+    }
+
+    fn drain(&mut self, scratch: &mut Scratch, _stats: &mut RunStats) {
+        scratch.release_i64(std::mem::take(&mut self.pcouts));
     }
 }
 
@@ -435,8 +534,15 @@ impl Engine for WsEngine {
         }
         self.reset();
         let mut stats = self.stats_template.clone();
-        self.load_weights(w, &mut stats);
-        let out = self.stream(a, w.cols, &mut stats)?;
+        let mut out = MatI32::zeros(a.rows, w.cols);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let waves = {
+            let mut kernel = WsTileKernel::new(self, a, w, &mut out);
+            exec::run_tile(&mut kernel, &mut scratch, &mut stats);
+            kernel.waves
+        };
+        self.scratch = scratch;
+        self.guard_audit(a, w.cols, waves, &mut stats)?;
         Ok(GemmRun { output: out, stats })
     }
 }

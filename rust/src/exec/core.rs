@@ -1,0 +1,121 @@
+//! The shared tile-streaming skeleton.
+//!
+//! Every engine in this crate executes a stationary tile the same way:
+//!
+//! ```text
+//!   fill ──▶ stream (payload, prefetch-overlapped) ──▶ drain ──▶ stats
+//! ```
+//!
+//! [`run_tile`] owns that loop once. An engine adapts its datapath to
+//! the [`TileKernel`] trait — `fill` loads the stationary operands,
+//! `step` advances the datapath one cycle (injection and collection
+//! interleave there, exactly as the hardware does), `drain` extracts
+//! whatever the datapath still holds — and the core drives the phases
+//! and applies the [`TilePlan`] accounting. Cycle-count semantics are
+//! therefore identical across the WS, OS and SNN engines by
+//! construction, and a new dataflow only has to describe its per-cycle
+//! behavior, never the loop.
+
+use super::plan::TilePlan;
+use super::scratch::Scratch;
+use crate::engines::RunStats;
+
+/// One stationary tile's datapath, driven cycle-by-cycle by
+/// [`run_tile`].
+pub trait TileKernel {
+    /// The phase/cycle plan for this tile.
+    fn plan(&self) -> TilePlan;
+
+    /// Load the stationary operands (weight-fill phase). Cycle and
+    /// stall accounting comes from the plan, not from here.
+    fn fill(&mut self, scratch: &mut Scratch, stats: &mut RunStats);
+
+    /// Advance the datapath one streamed step (`t` counts from 0 over
+    /// payload and drain steps alike; under
+    /// [`super::plan::Clocking::DoubleRate`] a step is one fast edge).
+    fn step(&mut self, t: usize, scratch: &mut Scratch, stats: &mut RunStats);
+
+    /// Extract results still held in the datapath after the last step.
+    /// Kernels that collect inline during [`TileKernel::step`] keep the
+    /// default no-op.
+    fn drain(&mut self, _scratch: &mut Scratch, _stats: &mut RunStats) {}
+}
+
+/// Run one tile end-to-end: fill, stream every payload + drain step,
+/// extract, and account all phases onto `stats`.
+pub fn run_tile<K: TileKernel + ?Sized>(
+    kernel: &mut K,
+    scratch: &mut Scratch,
+    stats: &mut RunStats,
+) {
+    let plan = kernel.plan();
+    kernel.fill(scratch, stats);
+    plan.apply_fill(stats);
+    for t in 0..plan.total_steps() {
+        kernel.step(t, scratch, stats);
+    }
+    kernel.drain(scratch, stats);
+    plan.apply_stream(stats);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::plan::{Clocking, FillPlan};
+
+    /// A toy kernel: sums `t` over the payload window only.
+    struct Toy {
+        plan: TilePlan,
+        filled: bool,
+        seen: Vec<usize>,
+        drained: bool,
+    }
+
+    impl TileKernel for Toy {
+        fn plan(&self) -> TilePlan {
+            self.plan
+        }
+        fn fill(&mut self, _s: &mut Scratch, _stats: &mut RunStats) {
+            self.filled = true;
+        }
+        fn step(&mut self, t: usize, _s: &mut Scratch, stats: &mut RunStats) {
+            assert!(self.filled, "fill precedes streaming");
+            assert!(!self.drained, "drain follows streaming");
+            self.seen.push(t);
+            if t < self.plan.stream_steps {
+                stats.macs += 1;
+            }
+        }
+        fn drain(&mut self, _s: &mut Scratch, _stats: &mut RunStats) {
+            self.drained = true;
+        }
+    }
+
+    #[test]
+    fn phases_run_in_order_with_plan_accounting() {
+        let mut toy = Toy {
+            plan: TilePlan {
+                fill: FillPlan {
+                    cycles: 7,
+                    exposed: 1,
+                    loads: 1,
+                },
+                stream_steps: 5,
+                drain_steps: 3,
+                clocking: Clocking::Single,
+            },
+            filled: false,
+            seen: Vec::new(),
+            drained: false,
+        };
+        let mut scratch = Scratch::new();
+        let mut stats = RunStats::default();
+        run_tile(&mut toy, &mut scratch, &mut stats);
+        assert!(toy.drained);
+        assert_eq!(toy.seen, (0..8).collect::<Vec<_>>());
+        assert_eq!(stats.macs, 5);
+        assert_eq!(stats.cycles, 7 + 8);
+        assert_eq!(stats.weight_stall_cycles, 1);
+        assert_eq!(stats.weight_loads, 1);
+    }
+}

@@ -1,0 +1,26 @@
+//! The tile-streaming execution core.
+//!
+//! The paper's DSP48E2 techniques (pre-adder packing, BCIN prefetch
+//! chains, ring accumulators) compose across *different* systolic
+//! dataflows; this module is where that composition lives in code. The
+//! WS, OS and SNN engines all execute a stationary tile as
+//! fill → prefetch-overlapped stream → drain, differing only in what a
+//! single cycle does to their DSP datapath — so:
+//!
+//! * [`core`] owns the phase loop once ([`core::run_tile`] over a
+//!   [`core::TileKernel`]);
+//! * [`plan`] owns the cycle/stall/clock-domain accounting rules
+//!   ([`plan::TilePlan`]);
+//! * [`scratch`] owns buffer reuse for the hot loops
+//!   ([`scratch::Scratch`]).
+//!
+//! Engines keep their bit-accurate datapaths; the skeleton, the stats
+//! merge and the allocator discipline are shared.
+
+pub mod core;
+pub mod plan;
+pub mod scratch;
+
+pub use self::core::{run_tile, TileKernel};
+pub use self::plan::{Clocking, FillPlan, TilePlan};
+pub use self::scratch::Scratch;

@@ -1,0 +1,115 @@
+//! Execution plans: the cycle accounting every tile/pass shares.
+//!
+//! A [`TilePlan`] describes one stationary-tile execution as the three
+//! phases every engine in this crate follows — weight **fill**, payload
+//! **stream**, pipeline **drain** — plus how those cycles map onto the
+//! clock domains. The engines supply the numbers; [`super::core`]
+//! applies them, so the accounting rules (what counts as a stall, how
+//! fast-domain edges fold into slow cycles) live in exactly one place.
+
+use crate::engines::RunStats;
+
+/// How the streamed cycles map onto the two clock domains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clocking {
+    /// Single clock: fast == slow (WS arrays, SNN crossbars).
+    Single,
+    /// Fast edges at 2x the slow clock (the DPU's Clk×1/Clk×2 pair);
+    /// each streamed step is one *fast* edge.
+    DoubleRate,
+}
+
+/// Weight-fill cost for one tile/pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FillPlan {
+    /// Slow cycles the fill consumes in isolation.
+    pub cycles: u64,
+    /// How many of those cycles stall the array. A prefetch path
+    /// (in-DSP B1/BCIN chain or a CLB ping-pong bank) exposes only the
+    /// swap pulse; a stalling design exposes the whole reload.
+    pub exposed: u64,
+    /// Weight-tile loads performed (1 for stationary fills, `rounds`
+    /// for designs that stream weights during compute).
+    pub loads: u64,
+}
+
+/// One tile/pass execution plan: fill → stream → drain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilePlan {
+    pub fill: FillPlan,
+    /// Payload steps: waves / rounds×edges / timesteps entering the
+    /// array.
+    pub stream_steps: usize,
+    /// Pipeline ramp + drain tail appended after the payload.
+    pub drain_steps: usize,
+    pub clocking: Clocking,
+}
+
+impl TilePlan {
+    /// Total streamed steps the core drives (payload + drain).
+    pub fn total_steps(&self) -> usize {
+        self.stream_steps + self.drain_steps
+    }
+
+    /// Account the fill phase onto `stats`.
+    pub fn apply_fill(&self, stats: &mut RunStats) {
+        stats.cycles += self.fill.cycles;
+        stats.weight_stall_cycles += self.fill.exposed;
+        stats.weight_loads += self.fill.loads;
+    }
+
+    /// Account the stream + drain phases onto `stats`.
+    pub fn apply_stream(&self, stats: &mut RunStats) {
+        let total = self.total_steps() as u64;
+        match self.clocking {
+            Clocking::Single => {
+                stats.cycles += total;
+                stats.fast_cycles = stats.cycles;
+            }
+            Clocking::DoubleRate => {
+                stats.fast_cycles += total;
+                stats.cycles += total.div_ceil(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_clock_accounting() {
+        let plan = TilePlan {
+            fill: FillPlan {
+                cycles: 15,
+                exposed: 1,
+                loads: 1,
+            },
+            stream_steps: 100,
+            drain_steps: 20,
+            clocking: Clocking::Single,
+        };
+        let mut stats = RunStats::default();
+        plan.apply_fill(&mut stats);
+        plan.apply_stream(&mut stats);
+        assert_eq!(stats.cycles, 15 + 120);
+        assert_eq!(stats.fast_cycles, stats.cycles);
+        assert_eq!(stats.weight_stall_cycles, 1);
+        assert_eq!(stats.weight_loads, 1);
+    }
+
+    #[test]
+    fn double_rate_folds_edges_into_slow_cycles() {
+        let plan = TilePlan {
+            fill: FillPlan::default(),
+            stream_steps: 9,
+            drain_steps: 0,
+            clocking: Clocking::DoubleRate,
+        };
+        let mut stats = RunStats::default();
+        plan.apply_stream(&mut stats);
+        assert_eq!(stats.fast_cycles, 9);
+        assert_eq!(stats.cycles, 5); // div_ceil(9, 2)
+    }
+}

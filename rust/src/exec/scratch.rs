@@ -1,0 +1,94 @@
+//! Reusable scratch arenas for the streaming hot loops.
+//!
+//! Every engine's cycle loop needs small transient buffers (cascade
+//! snapshots, delay lines, per-pass output staging). Allocating them
+//! with a fresh `Vec` per cycle — or even per call — dominates the
+//! simulator profile at scale, so the [`Scratch`] arena leases buffers
+//! from per-type free lists instead: a lease is a pool pop (or a single
+//! allocation the first time), a release is a pool push, and the
+//! backing capacity survives across `run_gemm` calls because each
+//! engine owns its arena.
+
+/// Pooled scratch buffers, keyed by element type.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    i64_pool: Vec<Vec<i64>>,
+    i32_pool: Vec<Vec<i32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    /// Lease a zero-filled `i64` buffer of exactly `len` elements.
+    pub fn lease_i64(&mut self, len: usize) -> Vec<i64> {
+        match self.i64_pool.pop() {
+            Some(mut buf) => {
+                buf.clear();
+                buf.resize(len, 0);
+                buf
+            }
+            None => vec![0; len],
+        }
+    }
+
+    /// Return a leased `i64` buffer to the pool.
+    pub fn release_i64(&mut self, buf: Vec<i64>) {
+        self.i64_pool.push(buf);
+    }
+
+    /// Lease a zero-filled `i32` buffer of exactly `len` elements.
+    pub fn lease_i32(&mut self, len: usize) -> Vec<i32> {
+        match self.i32_pool.pop() {
+            Some(mut buf) => {
+                buf.clear();
+                buf.resize(len, 0);
+                buf
+            }
+            None => vec![0; len],
+        }
+    }
+
+    /// Return a leased `i32` buffer to the pool.
+    pub fn release_i32(&mut self, buf: Vec<i32>) {
+        self.i32_pool.push(buf);
+    }
+
+    /// Buffers currently parked in the pools (diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.i64_pool.len() + self.i32_pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_release_reuses_capacity() {
+        let mut s = Scratch::new();
+        let mut a = s.lease_i64(16);
+        a[3] = 99;
+        let ptr = a.as_ptr();
+        s.release_i64(a);
+        let b = s.lease_i64(8);
+        // Same backing allocation, zeroed to the new length.
+        assert_eq!(b.as_ptr(), ptr);
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|&v| v == 0));
+        s.release_i64(b);
+        assert_eq!(s.pooled(), 1);
+    }
+
+    #[test]
+    fn growing_lease_is_zeroed() {
+        let mut s = Scratch::new();
+        let mut a = s.lease_i32(4);
+        a.iter_mut().for_each(|v| *v = -1);
+        s.release_i32(a);
+        let b = s.lease_i32(32);
+        assert_eq!(b.len(), 32);
+        assert!(b.iter().all(|&v| v == 0));
+    }
+}

@@ -36,6 +36,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod dsp;
 pub mod engines;
+pub mod exec;
 pub mod fabric;
 pub mod packing;
 pub mod runtime;

@@ -1,27 +1,20 @@
 //! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Compiled only under `--features xla` (the crate must be vendored —
+//! see rust/README.md); the default offline build executes artifacts on
+//! the golden interpreter instead ([`super::interp`]).
 
-use anyhow::{Context, Result};
+use super::error::{Result, RuntimeError};
+use super::registry::{MixedBuf, TensorSpec};
 use std::path::Path;
 
-/// Shape + dtype of one tensor in an artifact signature.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct TensorSpec {
-    /// jax dtype string: "int8", "int32", "int64", "float32".
-    pub dtype: String,
-    pub shape: Vec<usize>,
+fn xe(context: &str, e: impl std::fmt::Display) -> RuntimeError {
+    RuntimeError(format!("{context}: {e}"))
 }
 
-impl TensorSpec {
-    pub fn elements(&self) -> usize {
-        self.shape.iter().product()
-    }
-}
-
-/// A compiled HLO module ready to execute, plus its signature.
-pub struct LoadedModule {
+/// A compiled HLO module ready to execute on PJRT.
+pub struct XlaModule {
     exe: xla::PjRtLoadedExecutable,
-    pub inputs: Vec<TensorSpec>,
-    pub outputs: Vec<TensorSpec>,
 }
 
 /// The PJRT CPU client + module loader.
@@ -32,7 +25,8 @@ pub struct XlaRuntime {
 impl XlaRuntime {
     pub fn cpu() -> Result<Self> {
         Ok(XlaRuntime {
-            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            client: xla::PjRtClient::cpu()
+                .map_err(|e| xe("creating PJRT CPU client", e))?,
         })
     }
 
@@ -40,122 +34,72 @@ impl XlaRuntime {
         self.client.platform_name()
     }
 
-    /// Load + compile an HLO-text module with a declared signature.
-    pub fn load_hlo_text(
-        &self,
-        path: &Path,
-        inputs: Vec<TensorSpec>,
-        outputs: Vec<TensorSpec>,
-    ) -> Result<LoadedModule> {
+    /// Load + compile an HLO-text module.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<XlaModule> {
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
+            path.to_str()
+                .ok_or_else(|| RuntimeError::msg("non-utf8 path"))?,
         )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        .map_err(|e| xe(&format!("parsing HLO text {path:?}"), e))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .with_context(|| format!("compiling {path:?}"))?;
-        Ok(LoadedModule {
-            exe,
-            inputs,
-            outputs,
-        })
+            .map_err(|e| xe(&format!("compiling {path:?}"), e))?;
+        Ok(XlaModule { exe })
     }
 }
 
 /// Build an S8 literal from raw bytes (the crate's `vec1` only covers
 /// the wider native types; S8 goes through the raw-copy path).
 fn literal_i8(data: &[i8], shape: &[usize]) -> Result<xla::Literal> {
-    let mut lit =
-        xla::Literal::create_from_shape(xla::PrimitiveType::S8, shape);
-    lit.copy_raw_from(data).context("copying i8 buffer")?;
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S8, shape);
+    lit.copy_raw_from(data)
+        .map_err(|e| xe("copying i8 buffer", e))?;
     Ok(lit)
 }
 
 fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
-    let mut lit =
-        xla::Literal::create_from_shape(xla::PrimitiveType::S32, shape);
-    lit.copy_raw_from(data).context("copying i32 buffer")?;
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S32, shape);
+    lit.copy_raw_from(data)
+        .map_err(|e| xe("copying i32 buffer", e))?;
     Ok(lit)
 }
 
-impl LoadedModule {
-    /// Execute with i8 input buffers; returns i32 output buffers.
-    ///
-    /// This covers most artifacts (INT8 in, INT32 logits/currents out);
-    /// mixed-dtype signatures (the MLP's int32 biases) route through
-    /// [`LoadedModule::execute_mixed`].
-    pub fn execute_i8_to_i32(&self, inputs: &[&[i8]]) -> Result<Vec<Vec<i32>>> {
-        let bufs: Vec<MixedBuf> = inputs.iter().map(|b| MixedBuf::I8(b)).collect();
-        self.execute_mixed(&bufs)
-    }
-
-    /// Execute with mixed i8/i32 inputs.
-    pub fn execute_mixed(
+impl XlaModule {
+    /// Execute pre-validated mixed i8/i32 inputs (shape/dtype checks
+    /// happen in [`super::registry::LoadedModule`]); `specs` supplies
+    /// the declared parameter shapes for literal construction.
+    pub fn execute(
         &self,
         bufs: &[MixedBuf<'_>],
+        specs: &[TensorSpec],
     ) -> Result<Vec<Vec<i32>>> {
-        anyhow::ensure!(
-            bufs.len() == self.inputs.len(),
-            "expected {} inputs, got {}",
-            self.inputs.len(),
-            bufs.len()
-        );
         let mut args = Vec::with_capacity(bufs.len());
-        for (buf, spec) in bufs.iter().zip(&self.inputs) {
+        for (buf, spec) in bufs.iter().zip(specs) {
             let lit = match buf {
-                MixedBuf::I8(v) => {
-                    anyhow::ensure!(
-                        v.len() == spec.elements() && spec.dtype == "int8",
-                        "input mismatch: {} i8 values vs {:?}",
-                        v.len(),
-                        spec
-                    );
-                    literal_i8(v, &spec.shape)?
-                }
-                MixedBuf::I32(v) => {
-                    anyhow::ensure!(
-                        v.len() == spec.elements() && spec.dtype == "int32",
-                        "input mismatch: {} i32 values vs {:?}",
-                        v.len(),
-                        spec
-                    );
-                    literal_i32(v, &spec.shape)?
-                }
+                MixedBuf::I8(v) => literal_i8(v, &spec.shape)?,
+                MixedBuf::I32(v) => literal_i32(v, &spec.shape)?,
             };
             args.push(lit);
         }
-        self.run(args)
-    }
-
-    fn run(&self, args: Vec<xla::Literal>) -> Result<Vec<Vec<i32>>> {
-        let result = self.exe.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| xe("executing module", e))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| xe("fetching result literal", e))?;
         // aot.py lowers with return_tuple=True: outputs arrive as one
         // tuple literal.
-        let elems = result.to_tuple()?;
-        anyhow::ensure!(
-            elems.len() == self.outputs.len(),
-            "expected {} outputs, got {}",
-            self.outputs.len(),
-            elems.len()
-        );
+        let elems = result
+            .to_tuple()
+            .map_err(|e| xe("untupling result", e))?;
         elems
             .into_iter()
-            .zip(&self.outputs)
-            .map(|(lit, spec)| {
-                let v = lit.to_vec::<i32>().with_context(|| {
-                    format!("reading output as i32 (spec {spec:?})")
-                })?;
-                Ok(v)
+            .map(|lit| {
+                lit.to_vec::<i32>()
+                    .map_err(|e| xe("reading output as i32", e))
             })
             .collect()
     }
-}
-
-/// A borrowed input buffer of either dtype the artifacts use.
-pub enum MixedBuf<'a> {
-    I8(&'a [i8]),
-    I32(&'a [i32]),
 }

@@ -1,0 +1,44 @@
+//! Runtime error type shared by both backends (the offline build has
+//! no `anyhow`; the gated PJRT client maps its errors into this).
+
+use std::fmt;
+
+/// A runtime failure: artifact loading, signature validation, or
+/// backend execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RuntimeError(pub String);
+
+impl RuntimeError {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        RuntimeError(msg.into())
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "runtime error: {}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// `ensure!`-style guard producing a [`RuntimeError`].
+macro_rules! rt_ensure {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err($crate::runtime::RuntimeError(format!($($fmt)*)));
+        }
+    };
+}
+
+/// `bail!`-style early return producing a [`RuntimeError`].
+macro_rules! rt_bail {
+    ($($fmt:tt)*) => {
+        return Err($crate::runtime::RuntimeError(format!($($fmt)*)))
+    };
+}
+
+pub(crate) use rt_bail;
+pub(crate) use rt_ensure;

@@ -2,8 +2,8 @@
 //! cross-language bit-exactness contract between the JAX/Pallas kernels
 //! and the rust engines/runtime.
 
+use super::error::{rt_ensure, Result, RuntimeError};
 use crate::workload::{MatI32, MatI8};
-use anyhow::{Context, Result};
 use std::path::Path;
 
 /// The concrete packed-GEMM instance with python-computed outputs.
@@ -23,14 +23,15 @@ const N: usize = 64;
 impl GoldenGemm {
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("golden_gemm.bin");
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let bytes = std::fs::read(&path).map_err(|e| {
+            RuntimeError(format!("reading {path:?} — run `make artifacts`: {e}"))
+        })?;
         let words: Vec<i32> = bytes
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         let expect = M * K + M * K + K * N + M * N + M * N;
-        anyhow::ensure!(
+        rt_ensure!(
             words.len() == expect,
             "golden blob has {} words, expected {expect}",
             words.len()

@@ -1,0 +1,355 @@
+//! The pure-Rust golden interpreter: the default, offline backend for
+//! AOT artifacts.
+//!
+//! The artifact set is a closed vocabulary (`packed_gemm_*`, `mlp_*`,
+//! `snn_*` — see `python/compile/aot.py`), and every member's numerics
+//! already has a bit-exact rust twin (`golden_gemm`, `requantize`,
+//! `LifLayer`). The interpreter recognizes an artifact by name, checks
+//! the declared signature, and evaluates those twins — so the default
+//! build executes every artifact without XLA, with outputs identical
+//! to the PJRT path (the `xla` feature) by the same contract the
+//! integration tests enforce.
+
+use super::error::{rt_bail, rt_ensure, Result, RuntimeError};
+use super::registry::{ArtifactEntry, MixedBuf};
+use crate::workload::gemm::golden_gemm;
+use crate::workload::quant::requantize;
+use crate::workload::snn::{golden_currents, LifLayer, SpikeTrain};
+use crate::workload::MatI8;
+
+/// A recognized artifact program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Interp {
+    /// `packed_gemm_m{M}_k{K}_n{N}`: (a_hi, a_lo, w) → (hi, lo).
+    PackedGemm { m: usize, k: usize, n: usize },
+    /// `snn_t{T}_p{P}_n{N}`: (spikes, weights) → (out_spikes, currents).
+    Snn {
+        t: usize,
+        p: usize,
+        n: usize,
+        v_threshold: i32,
+        leak_shift: u32,
+    },
+    /// `mlp_b{B}_{d0}_{d1}_..._{dL}`: (x, w0, b0, ..) → (logits,).
+    Mlp {
+        batch: usize,
+        dims: Vec<usize>,
+        quants: Vec<(i32, u32)>,
+    },
+}
+
+fn parse_tagged(part: &str, tag: char) -> Option<usize> {
+    part.strip_prefix(tag).and_then(|v| v.parse().ok())
+}
+
+impl Interp {
+    /// Recognize `entry` by name (+ constants recorded in the
+    /// manifest).
+    pub fn from_entry(entry: &ArtifactEntry) -> Result<Interp> {
+        let name = entry.name.as_str();
+        if let Some(rest) = name.strip_prefix("packed_gemm_") {
+            let parts: Vec<&str> = rest.split('_').collect();
+            if let [m, k, n] = parts[..] {
+                if let (Some(m), Some(k), Some(n)) = (
+                    parse_tagged(m, 'm'),
+                    parse_tagged(k, 'k'),
+                    parse_tagged(n, 'n'),
+                ) {
+                    return Ok(Interp::PackedGemm { m, k, n });
+                }
+            }
+            rt_bail!("malformed packed_gemm artifact name `{name}`");
+        }
+        if let Some(rest) = name.strip_prefix("snn_") {
+            let parts: Vec<&str> = rest.split('_').collect();
+            if let [t, p, n] = parts[..] {
+                if let (Some(t), Some(p), Some(n)) = (
+                    parse_tagged(t, 't'),
+                    parse_tagged(p, 'p'),
+                    parse_tagged(n, 'n'),
+                ) {
+                    let consts = entry.constants.as_ref();
+                    let v_threshold = consts
+                        .and_then(|c| c.get("v_threshold"))
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(64) as i32;
+                    let leak_shift = consts
+                        .and_then(|c| c.get("leak_shift"))
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(3) as u32;
+                    return Ok(Interp::Snn {
+                        t,
+                        p,
+                        n,
+                        v_threshold,
+                        leak_shift,
+                    });
+                }
+            }
+            rt_bail!("malformed snn artifact name `{name}`");
+        }
+        if let Some(rest) = name.strip_prefix("mlp_b") {
+            let parts: Vec<&str> = rest.split('_').collect();
+            let nums: Option<Vec<usize>> =
+                parts.iter().map(|p| p.parse().ok()).collect();
+            let Some(nums) = nums else {
+                rt_bail!("malformed mlp artifact name `{name}`");
+            };
+            rt_ensure!(nums.len() >= 3, "mlp artifact `{name}` needs >= 2 layers");
+            let batch = nums[0];
+            let dims = nums[1..].to_vec();
+            let quants = entry
+                .constants
+                .as_ref()
+                .and_then(|c| c.get("quants"))
+                .and_then(|q| q.as_array())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|pair| {
+                            let p = pair.as_array()?;
+                            Some((
+                                p.first()?.as_i64()? as i32,
+                                p.get(1)?.as_i64()? as u32,
+                            ))
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .unwrap_or_default();
+            rt_ensure!(
+                quants.len() == dims.len().saturating_sub(2),
+                "mlp artifact `{name}`: need {} quant pairs in manifest \
+                 constants, found {}",
+                dims.len().saturating_sub(2),
+                quants.len()
+            );
+            return Ok(Interp::Mlp {
+                batch,
+                dims,
+                quants,
+            });
+        }
+        rt_bail!(
+            "artifact `{name}` is not interpretable offline; \
+             build with `--features xla` for the PJRT backend"
+        )
+    }
+
+    /// Evaluate against pre-validated input buffers.
+    pub fn execute(&self, bufs: &[MixedBuf<'_>]) -> Result<Vec<Vec<i32>>> {
+        match self {
+            Interp::PackedGemm { m, k, n } => {
+                rt_ensure!(bufs.len() == 3, "packed_gemm takes 3 inputs");
+                let a_hi = mat_i8(&bufs[0], *m, *k)?;
+                let a_lo = mat_i8(&bufs[1], *m, *k)?;
+                let w = mat_i8(&bufs[2], *k, *n)?;
+                let hi = golden_gemm(&a_hi, &w);
+                let lo = golden_gemm(&a_lo, &w);
+                Ok(vec![hi.data, lo.data])
+            }
+            Interp::Snn {
+                t,
+                p,
+                n,
+                v_threshold,
+                leak_shift,
+            } => {
+                rt_ensure!(bufs.len() == 2, "snn takes 2 inputs");
+                let spikes = i8_buf(&bufs[0])?;
+                rt_ensure!(
+                    spikes.iter().all(|&s| s == 0 || s == 1),
+                    "snn artifact consumes binary spike inputs"
+                );
+                let weights = i8_buf(&bufs[1])?;
+                let train = SpikeTrain {
+                    steps: *t,
+                    neurons: *p,
+                    spikes: spikes.iter().map(|&v| v as u8).collect(),
+                };
+                let currents = golden_currents(&train, weights, *n);
+                let mut lif = LifLayer::new(*n, *v_threshold, *leak_shift);
+                let mut out_spikes = Vec::with_capacity(t * n);
+                for step in 0..*t {
+                    let row = &currents[step * n..(step + 1) * n];
+                    out_spikes
+                        .extend(lif.step(row).into_iter().map(|s| s as i32));
+                }
+                Ok(vec![out_spikes, currents])
+            }
+            Interp::Mlp {
+                batch,
+                dims,
+                quants,
+            } => {
+                let layers = dims.len() - 1;
+                rt_ensure!(
+                    bufs.len() == 1 + 2 * layers,
+                    "mlp takes {} inputs (x + per-layer w, bias)",
+                    1 + 2 * layers
+                );
+                let mut h = mat_i8(&bufs[0], *batch, dims[0])?;
+                for layer in 0..layers {
+                    let (din, dout) = (dims[layer], dims[layer + 1]);
+                    let w = mat_i8(&bufs[1 + 2 * layer], din, dout)?;
+                    let bias = i32_buf(&bufs[2 + 2 * layer])?;
+                    let acc = golden_gemm(&h, &w);
+                    if layer == layers - 1 {
+                        // Raw logits + bias.
+                        let logits: Vec<i32> = (0..*batch)
+                            .flat_map(|r| {
+                                (0..dout).map(move |c| (r, c))
+                            })
+                            .map(|(r, c)| acc.at(r, c) + bias[c])
+                            .collect();
+                        return Ok(vec![logits]);
+                    }
+                    // Bias + ReLU + requantize (bit-exact twin of
+                    // ref.requantize / the e2e example).
+                    let (num, shift) = quants[layer];
+                    h = MatI8::from_fn(*batch, dout, |r, c| {
+                        let v = (acc.at(r, c) + bias[c]).max(0);
+                        requantize(v, num, shift, 0)
+                    });
+                }
+                unreachable!("layers >= 1 by construction")
+            }
+        }
+    }
+}
+
+fn i8_buf<'a>(buf: &'a MixedBuf<'_>) -> Result<&'a [i8]> {
+    match buf {
+        MixedBuf::I8(v) => Ok(v),
+        MixedBuf::I32(_) => Err(RuntimeError::msg("expected an i8 buffer")),
+    }
+}
+
+fn i32_buf<'a>(buf: &'a MixedBuf<'_>) -> Result<&'a [i32]> {
+    match buf {
+        MixedBuf::I32(v) => Ok(v),
+        MixedBuf::I8(_) => Err(RuntimeError::msg("expected an i32 buffer")),
+    }
+}
+
+fn mat_i8(buf: &MixedBuf<'_>, rows: usize, cols: usize) -> Result<MatI8> {
+    let data = i8_buf(buf)?;
+    rt_ensure!(
+        data.len() == rows * cols,
+        "buffer holds {} values, artifact expects {rows}x{cols}",
+        data.len()
+    );
+    Ok(MatI8 {
+        rows,
+        cols,
+        data: data.to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use crate::util::rng::XorShift;
+
+    fn entry(name: &str, constants: Option<&str>) -> ArtifactEntry {
+        ArtifactEntry {
+            name: name.to_string(),
+            file: std::path::PathBuf::from(format!("{name}.hlo.txt")),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            constants: constants.map(|c| Json::parse(c).unwrap()),
+        }
+    }
+
+    #[test]
+    fn recognizes_the_artifact_vocabulary() {
+        assert_eq!(
+            Interp::from_entry(&entry("packed_gemm_m32_k64_n64", None)).unwrap(),
+            Interp::PackedGemm { m: 32, k: 64, n: 64 }
+        );
+        assert_eq!(
+            Interp::from_entry(&entry(
+                "snn_t16_p32_n32",
+                Some(r#"{"v_threshold": 64, "leak_shift": 3}"#)
+            ))
+            .unwrap(),
+            Interp::Snn {
+                t: 16,
+                p: 32,
+                n: 32,
+                v_threshold: 64,
+                leak_shift: 3
+            }
+        );
+        let mlp = Interp::from_entry(&entry(
+            "mlp_b64_784_256_128_10",
+            Some(r#"{"quants": [[77, 15], [77, 14]]}"#),
+        ))
+        .unwrap();
+        assert_eq!(
+            mlp,
+            Interp::Mlp {
+                batch: 64,
+                dims: vec![784, 256, 128, 10],
+                quants: vec![(77, 15), (77, 14)],
+            }
+        );
+        assert!(Interp::from_entry(&entry("mystery_kernel", None)).is_err());
+    }
+
+    #[test]
+    fn packed_gemm_matches_golden() {
+        let interp = Interp::PackedGemm { m: 4, k: 6, n: 5 };
+        let mut rng = XorShift::new(3);
+        let a_hi = MatI8::random(&mut rng, 4, 6);
+        let a_lo = MatI8::random(&mut rng, 4, 6);
+        let w = MatI8::random(&mut rng, 6, 5);
+        let outs = interp
+            .execute(&[
+                MixedBuf::I8(&a_hi.data),
+                MixedBuf::I8(&a_lo.data),
+                MixedBuf::I8(&w.data),
+            ])
+            .unwrap();
+        assert_eq!(outs[0], golden_gemm(&a_hi, &w).data);
+        assert_eq!(outs[1], golden_gemm(&a_lo, &w).data);
+    }
+
+    #[test]
+    fn snn_matches_engine_pipeline() {
+        use crate::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
+        let interp = Interp::Snn {
+            t: 8,
+            p: 32,
+            n: 32,
+            v_threshold: 64,
+            leak_shift: 3,
+        };
+        let mut rng = XorShift::new(7);
+        let train = SpikeTrain::random(&mut rng, 8, 32, 1, 3);
+        let weights = MatI8::random_bounded(&mut rng, 32, 32, 63);
+        let spikes_i8: Vec<i8> = train.spikes.iter().map(|&s| s as i8).collect();
+        let outs = interp
+            .execute(&[MixedBuf::I8(&spikes_i8), MixedBuf::I8(&weights.data)])
+            .unwrap();
+        let mut eng = SnnEngine::new(SnnConfig::paper_32x32(SnnVariant::Enhanced));
+        let (eng_spikes, eng_currents, _) = eng.run_snn(&train, &weights).unwrap();
+        assert_eq!(outs[1], eng_currents);
+        let eng_spikes_i32: Vec<i32> =
+            eng_spikes.iter().map(|&s| s as i32).collect();
+        assert_eq!(outs[0], eng_spikes_i32);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let interp = Interp::PackedGemm { m: 2, k: 2, n: 2 };
+        let short = [0i8; 3];
+        let ok = [0i8; 4];
+        assert!(interp
+            .execute(&[
+                MixedBuf::I8(&short),
+                MixedBuf::I8(&ok),
+                MixedBuf::I8(&ok)
+            ])
+            .is_err());
+    }
+}

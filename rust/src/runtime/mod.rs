@@ -1,20 +1,37 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
-//! the rust hot path. Python never runs at serve time.
+//! Artifact runtime: load AOT-compiled HLO artifacts (written by
+//! `python/compile/aot.py`) and execute them from the rust hot path.
+//! Python never runs at serve time.
 //!
-//! * [`ArtifactRegistry`] reads `artifacts/manifest.json` (written by
-//!   `python/compile/aot.py`), validates each entry's signature and
-//!   lazily compiles executables on the PJRT CPU client.
-//! * [`XlaRuntime`] wraps `xla::PjRtClient`:
-//!   `HloModuleProto::from_text_file` → `compile` → `execute`.
+//! Two backends sit behind one [`ArtifactRegistry`]/[`LoadedModule`]
+//! surface:
 //!
-//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! * **default (offline)** — the pure-Rust golden interpreter
+//!   ([`Interp`]): the artifact vocabulary is closed and every member's
+//!   numerics has a bit-exact rust twin, so the default build executes
+//!   artifacts with no XLA toolchain and no network.
+//! * **`--features xla`** — the PJRT CPU client
+//!   (`HloModuleProto::from_text_file` → `compile` → `execute`).
+//!   Off by default; requires vendoring the `xla` crate (see
+//!   rust/README.md). Interchange is HLO *text*: jax ≥ 0.5 emits protos
+//!   with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//!   text parser reassigns ids.
+//!
+//! [`ArtifactRegistry`] reads `artifacts/manifest.json`, validates each
+//! entry's signature and lazily compiles executables on whichever
+//! backend is built in.
 
+#[cfg(feature = "xla")]
 mod client;
+mod error;
 mod golden;
+mod interp;
 mod registry;
 
-pub use client::{LoadedModule, MixedBuf, TensorSpec, XlaRuntime};
+#[cfg(feature = "xla")]
+pub use client::{XlaModule, XlaRuntime};
+pub use error::{Result, RuntimeError};
 pub use golden::GoldenGemm;
-pub use registry::{ArtifactEntry, ArtifactRegistry};
+pub use interp::Interp;
+pub use registry::{
+    ArtifactEntry, ArtifactRegistry, LoadedModule, MixedBuf, TensorSpec,
+};

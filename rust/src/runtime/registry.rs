@@ -1,10 +1,36 @@
-//! Artifact registry: manifest parsing + lazy compilation cache.
+//! Artifact registry: manifest parsing + lazy backend compilation.
+//!
+//! The registry is backend-neutral: it parses the manifest written by
+//! `python/compile/aot.py`, validates signatures, and hands out
+//! [`LoadedModule`]s that execute on whichever backend the build
+//! provides — the pure-Rust golden interpreter by default, or the PJRT
+//! CPU client under `--features xla`.
 
-use super::client::{LoadedModule, TensorSpec, XlaRuntime};
+use super::error::{rt_bail, rt_ensure, Result, RuntimeError};
+use super::interp::Interp;
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// jax dtype string: "int8", "int32", "int64", "float32".
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A borrowed input buffer of either dtype the artifacts use.
+pub enum MixedBuf<'a> {
+    I8(&'a [i8]),
+    I32(&'a [i32]),
+}
 
 /// One manifest entry (an AOT-lowered module or a data blob).
 #[derive(Debug, Clone)]
@@ -13,14 +39,81 @@ pub struct ArtifactEntry {
     pub file: PathBuf,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+    /// Baked constants the manifest records (e.g. MLP quant pairs, LIF
+    /// parameters) — the offline interpreter reads these.
+    pub constants: Option<Json>,
+}
+
+enum Backend {
+    Interp(Interp),
+    #[cfg(feature = "xla")]
+    Xla(super::client::XlaModule),
+}
+
+/// A compiled artifact ready to execute, plus its signature.
+pub struct LoadedModule {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    backend: Backend,
+}
+
+impl LoadedModule {
+    /// Execute with i8 input buffers; returns i32 output buffers.
+    ///
+    /// This covers most artifacts (INT8 in, INT32 logits/currents out);
+    /// mixed-dtype signatures (the MLP's int32 biases) route through
+    /// [`LoadedModule::execute_mixed`].
+    pub fn execute_i8_to_i32(&self, inputs: &[&[i8]]) -> Result<Vec<Vec<i32>>> {
+        let bufs: Vec<MixedBuf> = inputs.iter().map(|b| MixedBuf::I8(b)).collect();
+        self.execute_mixed(&bufs)
+    }
+
+    /// Execute with mixed i8/i32 inputs.
+    pub fn execute_mixed(&self, bufs: &[MixedBuf<'_>]) -> Result<Vec<Vec<i32>>> {
+        rt_ensure!(
+            bufs.len() == self.inputs.len(),
+            "expected {} inputs, got {}",
+            self.inputs.len(),
+            bufs.len()
+        );
+        for (buf, spec) in bufs.iter().zip(&self.inputs) {
+            match buf {
+                MixedBuf::I8(v) => rt_ensure!(
+                    v.len() == spec.elements() && spec.dtype == "int8",
+                    "input mismatch: {} i8 values vs {:?}",
+                    v.len(),
+                    spec
+                ),
+                MixedBuf::I32(v) => rt_ensure!(
+                    v.len() == spec.elements() && spec.dtype == "int32",
+                    "input mismatch: {} i32 values vs {:?}",
+                    v.len(),
+                    spec
+                ),
+            }
+        }
+        let outs = match &self.backend {
+            Backend::Interp(interp) => interp.execute(bufs)?,
+            #[cfg(feature = "xla")]
+            Backend::Xla(module) => module.execute(bufs, &self.inputs)?,
+        };
+        rt_ensure!(
+            outs.len() == self.outputs.len(),
+            "expected {} outputs, got {}",
+            self.outputs.len(),
+            outs.len()
+        );
+        Ok(outs)
+    }
 }
 
 /// The artifact set exported by `python/compile/aot.py`.
 pub struct ArtifactRegistry {
     dir: PathBuf,
     entries: HashMap<String, ArtifactEntry>,
-    runtime: XlaRuntime,
     compiled: HashMap<String, LoadedModule>,
+    #[cfg(feature = "xla")]
+    runtime: super::client::XlaRuntime,
 }
 
 fn parse_specs(v: Option<&Json>) -> Result<Vec<TensorSpec>> {
@@ -32,18 +125,18 @@ fn parse_specs(v: Option<&Json>) -> Result<Vec<TensorSpec>> {
             let dtype = spec
                 .get("dtype")
                 .and_then(|d| d.as_str())
-                .ok_or_else(|| anyhow!("missing dtype"))?
+                .ok_or_else(|| RuntimeError::msg("missing dtype"))?
                 .to_string();
             let shape = spec
                 .get("shape")
                 .and_then(|s| s.as_array())
-                .ok_or_else(|| anyhow!("missing shape"))?
+                .ok_or_else(|| RuntimeError::msg("missing shape"))?
                 .iter()
                 .map(|d| {
                     d.as_i64()
                         .filter(|&d| d >= 0)
                         .map(|d| d as usize)
-                        .ok_or_else(|| anyhow!("bad dim"))
+                        .ok_or_else(|| RuntimeError::msg("bad dim"))
                 })
                 .collect::<Result<Vec<_>>>()?;
             Ok(TensorSpec { dtype, shape })
@@ -55,10 +148,14 @@ impl ArtifactRegistry {
     /// Open `dir/manifest.json` and validate every listed file exists.
     pub fn open(dir: &Path) -> Result<Self> {
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
-        let doc = Json::parse(&text).context("parsing manifest.json")?;
-        anyhow::ensure!(
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            RuntimeError(format!(
+                "reading {manifest_path:?} — run `make artifacts`: {e}"
+            ))
+        })?;
+        let doc = Json::parse(&text)
+            .map_err(|e| RuntimeError(format!("parsing manifest.json: {e}")))?;
+        rt_ensure!(
             doc.get("version").and_then(|v| v.as_i64()) == Some(1),
             "unsupported manifest version"
         );
@@ -66,19 +163,19 @@ impl ArtifactRegistry {
         for e in doc
             .get("artifacts")
             .and_then(|a| a.as_array())
-            .ok_or_else(|| anyhow!("manifest has no artifacts"))?
+            .ok_or_else(|| RuntimeError::msg("manifest has no artifacts"))?
         {
             let name = e
                 .get("name")
                 .and_then(|n| n.as_str())
-                .ok_or_else(|| anyhow!("artifact without name"))?
+                .ok_or_else(|| RuntimeError::msg("artifact without name"))?
                 .to_string();
             let file = dir.join(
                 e.get("file")
                     .and_then(|f| f.as_str())
-                    .ok_or_else(|| anyhow!("artifact without file"))?,
+                    .ok_or_else(|| RuntimeError::msg("artifact without file"))?,
             );
-            anyhow::ensure!(file.exists(), "artifact file missing: {file:?}");
+            rt_ensure!(file.exists(), "artifact file missing: {file:?}");
             entries.insert(
                 name.clone(),
                 ArtifactEntry {
@@ -86,14 +183,16 @@ impl ArtifactRegistry {
                     file,
                     inputs: parse_specs(e.get("inputs"))?,
                     outputs: parse_specs(e.get("outputs"))?,
+                    constants: e.get("constants").cloned(),
                 },
             );
         }
         Ok(ArtifactRegistry {
             dir: dir.to_path_buf(),
             entries,
-            runtime: XlaRuntime::cpu()?,
             compiled: HashMap::new(),
+            #[cfg(feature = "xla")]
+            runtime: super::client::XlaRuntime::cpu()?,
         })
     }
 
@@ -104,6 +203,15 @@ impl ArtifactRegistry {
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Which backend `module` compiles onto.
+    pub fn backend_name(&self) -> &'static str {
+        if cfg!(feature = "xla") {
+            "pjrt-cpu"
+        } else {
+            "golden-interp"
+        }
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -122,20 +230,32 @@ impl ArtifactRegistry {
             let entry = self
                 .entries
                 .get(name)
-                .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+                .ok_or_else(|| RuntimeError(format!("unknown artifact `{name}`")))?
                 .clone();
-            anyhow::ensure!(
-                entry.file.extension().is_some_and(|e| e == "txt"),
-                "artifact `{name}` is a data blob, not an HLO module"
+            if !entry.file.extension().is_some_and(|e| e == "txt") {
+                rt_bail!("artifact `{name}` is a data blob, not an HLO module");
+            }
+            let backend = self.compile(&entry)?;
+            self.compiled.insert(
+                name.to_string(),
+                LoadedModule {
+                    inputs: entry.inputs,
+                    outputs: entry.outputs,
+                    backend,
+                },
             );
-            let module = self.runtime.load_hlo_text(
-                &entry.file,
-                entry.inputs,
-                entry.outputs,
-            )?;
-            self.compiled.insert(name.to_string(), module);
         }
         Ok(&self.compiled[name])
+    }
+
+    #[cfg(feature = "xla")]
+    fn compile(&self, entry: &ArtifactEntry) -> Result<Backend> {
+        Ok(Backend::Xla(self.runtime.load_hlo_text(&entry.file)?))
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn compile(&self, entry: &ArtifactEntry) -> Result<Backend> {
+        Ok(Backend::Interp(Interp::from_entry(entry)?))
     }
 
     /// Find the packed-GEMM artifact matching `(m, k, n)` exactly.
@@ -192,6 +312,54 @@ mod tests {
         )
         .unwrap();
         assert!(ArtifactRegistry::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Offline default: a recognized artifact compiles onto the golden
+    /// interpreter and executes with validated signatures.
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn offline_backend_executes_packed_gemm() {
+        use crate::util::rng::XorShift;
+        use crate::workload::gemm::golden_gemm;
+        use crate::workload::MatI8;
+
+        let dir = std::env::temp_dir().join(format!(
+            "dsp48-registry-test3-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("g.hlo.txt"), "HloModule g\n").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+                {"name": "packed_gemm_m2_k3_n4", "file": "g.hlo.txt",
+                 "inputs": [{"dtype": "int8", "shape": [2, 3]},
+                            {"dtype": "int8", "shape": [2, 3]},
+                            {"dtype": "int8", "shape": [3, 4]}],
+                 "outputs": [{"dtype": "int32", "shape": [2, 4]},
+                             {"dtype": "int32", "shape": [2, 4]}]}
+            ]}"#,
+        )
+        .unwrap();
+        let mut reg = ArtifactRegistry::open(&dir).unwrap();
+        assert_eq!(reg.backend_name(), "golden-interp");
+        let mut rng = XorShift::new(5);
+        let a_hi = MatI8::random(&mut rng, 2, 3);
+        let a_lo = MatI8::random(&mut rng, 2, 3);
+        let w = MatI8::random(&mut rng, 3, 4);
+        let module = reg.module("packed_gemm_m2_k3_n4").unwrap();
+        let outs = module
+            .execute_i8_to_i32(&[&a_hi.data, &a_lo.data, &w.data])
+            .unwrap();
+        assert_eq!(outs[0], golden_gemm(&a_hi, &w).data);
+        assert_eq!(outs[1], golden_gemm(&a_lo, &w).data);
+        // Signature validation still guards the interpreter path.
+        let module = reg.module("packed_gemm_m2_k3_n4").unwrap();
+        let short = vec![0i8; 2];
+        assert!(module
+            .execute_i8_to_i32(&[&short, &a_lo.data, &w.data])
+            .is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

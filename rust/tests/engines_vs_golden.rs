@@ -91,6 +91,7 @@ fn tiled_large_gemm_every_engine_kind() {
             ws_rows: 10,
             ws_cols: 10,
             verify: false,
+            shard_width: 1,
         };
         let mut engine = cfg.build_engine();
         let tiler = matches!(

@@ -1,0 +1,158 @@
+//! Property tests (via `util::quickcheck`) for the scheduler
+//! invariants and the tile-sharded execution path.
+//!
+//! * `PrefetchPolicy::PingPong` never costs more total cycles than
+//!   `Stall` on the same tile sequence (the paper's technique 1 can
+//!   only help);
+//! * `compute_fraction` stays inside `[0, 1]` for every policy and
+//!   tile mix;
+//! * tile-sharded GEMM through the multi-worker service is bit-exact
+//!   vs `golden_gemm` for all 8 `EngineKind` variants.
+
+use dsp48_systolic::coordinator::scheduler::{
+    prefetch_speedup, schedule, PrefetchPolicy,
+};
+use dsp48_systolic::coordinator::service::EngineKind;
+use dsp48_systolic::coordinator::{Job, Service, ServiceConfig};
+use dsp48_systolic::engines::RunStats;
+use dsp48_systolic::util::quickcheck::check;
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::gemm::golden_gemm;
+use dsp48_systolic::workload::MatI8;
+use dsp48_systolic::{prop_assert, prop_assert_eq};
+use std::time::Duration;
+
+/// Random per-tile stats honoring the engine contract: each tile's
+/// cycles include its own fill (`rows + 1`) with one exposed swap
+/// cycle.
+fn random_tiles(rng: &mut XorShift, size: usize, rows: u64) -> Vec<RunStats> {
+    let tiles = 1 + rng.below(size as u64) as usize;
+    (0..tiles)
+        .map(|_| {
+            let compute = rng.below(500);
+            RunStats {
+                cycles: compute + rows + 1,
+                weight_stall_cycles: 1,
+                macs: compute * 4,
+                weight_loads: 1,
+                ..RunStats::default()
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn pingpong_never_exceeds_stall() {
+    check("pingpong <= stall", 64, |rng, size| {
+        let rows = 1 + rng.below(16);
+        let tiles = random_tiles(rng, size, rows);
+        let pp = schedule(PrefetchPolicy::PingPong, &tiles, rows as usize);
+        let st = schedule(PrefetchPolicy::Stall, &tiles, rows as usize);
+        prop_assert!(
+            pp.cycles <= st.cycles,
+            "pingpong {} > stall {} (rows {rows}, tiles {})",
+            pp.cycles,
+            st.cycles,
+            tiles.len()
+        );
+        // Both see the same compute; only weight handling differs.
+        prop_assert_eq!(pp.compute_cycles, st.compute_cycles);
+        prop_assert!(
+            pp.weight_cycles <= st.weight_cycles,
+            "weight cycles regressed"
+        );
+        // And the speedup metric agrees with the raw cycle counts.
+        let speedup = prefetch_speedup(&tiles, rows as usize);
+        prop_assert!(speedup >= 1.0, "speedup {speedup} < 1");
+        Ok(())
+    });
+}
+
+#[test]
+fn compute_fraction_stays_in_unit_interval() {
+    check("compute_fraction in [0,1]", 64, |rng, size| {
+        let rows = 1 + rng.below(16);
+        let tiles = random_tiles(rng, size, rows);
+        for policy in [PrefetchPolicy::PingPong, PrefetchPolicy::Stall] {
+            let rep = schedule(policy, &tiles, rows as usize);
+            let f = rep.compute_fraction();
+            prop_assert!(
+                (0.0..=1.0).contains(&f),
+                "{policy:?}: compute_fraction {f} outside [0,1]"
+            );
+            prop_assert!(
+                rep.macs_per_cycle() >= 0.0,
+                "negative throughput"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Random GEMM operands appropriate for an engine kind: SNN crossbars
+/// consume binary spikes against their fixed 32-pre geometry; packed
+/// WS cascades stay exact with bounded activations.
+fn problem_for(kind: EngineKind, rng: &mut XorShift, case: usize) -> (MatI8, MatI8) {
+    let m = 1 + (case * 3) % 9;
+    let n = 1 + (case * 5) % 11;
+    match kind {
+        EngineKind::SnnFireFly | EngineKind::SnnEnhanced => {
+            let spikes = MatI8::from_fn(m, 32, |_, _| rng.chance(1, 3) as i8);
+            let weights = MatI8::random_bounded(rng, 32, n, 63);
+            (spikes, weights)
+        }
+        _ => {
+            let k = 1 + (case * 7) % 23;
+            let a = MatI8::random_bounded(rng, m, k, 63);
+            let w = MatI8::random(rng, k, n);
+            (a, w)
+        }
+    }
+}
+
+/// Tile-sharded GEMM through the service == golden, for every engine.
+#[test]
+fn sharded_gemm_bit_exact_for_all_engine_kinds() {
+    for kind in EngineKind::all() {
+        let mut svc = Service::start(ServiceConfig {
+            kind,
+            workers: 3,
+            ws_rows: 6,
+            ws_cols: 5,
+            verify: true,
+            shard_width: 2,
+        });
+        let mut rng = XorShift::new(0xD5B + kind.label().len() as u64);
+        let cases = 4;
+        let mut expected = Vec::new();
+        for case in 0..cases {
+            let (a, w) = problem_for(kind, &mut rng, case);
+            expected.push(golden_gemm(&a, &w));
+            match kind {
+                EngineKind::SnnFireFly | EngineKind::SnnEnhanced => {
+                    svc.submit(Job::Snn {
+                        spikes: a,
+                        weights: w,
+                    });
+                }
+                _ => {
+                    svc.submit(Job::Gemm { a, w });
+                }
+            }
+        }
+        for _ in 0..cases {
+            let r = svc
+                .recv_timeout(Duration::from_secs(120))
+                .unwrap_or_else(|| panic!("{}: job timed out", kind.label()));
+            assert_eq!(
+                r.verified,
+                Some(true),
+                "{}: service-side verification failed",
+                kind.label()
+            );
+            let want = &expected[r.id.0 as usize];
+            assert_eq!(&r.output, want, "{}: output mismatch", kind.label());
+        }
+        svc.shutdown();
+    }
+}
