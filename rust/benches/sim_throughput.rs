@@ -12,7 +12,7 @@
 //! trajectory. Set `SIM_BENCH_SMOKE=1` for a fast CI-sized run.
 
 use dsp48_systolic::coordinator::service::EngineKind;
-use dsp48_systolic::coordinator::{Job, Service, ServiceConfig};
+use dsp48_systolic::coordinator::{Batch, Job, Service, ServiceConfig};
 use dsp48_systolic::dsp::{Attributes, Dsp48e2, DspInputs, OpMode};
 use dsp48_systolic::engines::os::RingAccumulator;
 use dsp48_systolic::engines::ws::{WsConfig, WsEngine};
@@ -51,6 +51,60 @@ fn sharded_gemm_rate(workers: usize, size: usize) -> f64 {
         rate / 1e6
     );
     rate
+}
+
+/// Run `count` jobs of one shape that all share a weight matrix,
+/// either as one batch (weight-tile reuse groups the fills) or as
+/// single submissions. Returns `(sim_cycles, macs, fills_issued,
+/// fills_avoided, fill_cycles_saved)` — all *simulated* quantities,
+/// deterministic across machines and worker counts, which is what
+/// makes them safe regression-gate inputs.
+fn shared_weight_serve(
+    batched: bool,
+    count: usize,
+    (m, k, n): (usize, usize, usize),
+) -> (u64, u64, u64, u64, u64) {
+    let mut svc = Service::start(ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers: 2,
+        ws_rows: 14,
+        ws_cols: 14,
+        verify: false,
+        shard_width: 1,
+    });
+    let mut rng = XorShift::new(19);
+    let w = MatI8::random(&mut rng, k, n);
+    let jobs: Vec<Job> = (0..count)
+        .map(|_| Job::Gemm {
+            a: MatI8::random_bounded(&mut rng, m, k, 63),
+            w: w.clone(),
+        })
+        .collect();
+    if batched {
+        svc.submit_batch(Batch::from(jobs));
+    } else {
+        for job in jobs {
+            svc.submit(job);
+        }
+    }
+    let results = svc.drain(Duration::from_secs(600));
+    assert_eq!(results.len(), count, "all shared-weight jobs complete");
+    let cycles: u64 = results.iter().map(|r| r.stats.cycles).sum();
+    let macs: u64 = results.iter().map(|r| r.stats.macs).sum();
+    let issued = svc
+        .metrics
+        .fills_issued
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let avoided = svc
+        .metrics
+        .fills_avoided
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let saved = svc
+        .metrics
+        .fill_cycles_saved
+        .load(std::sync::atomic::Ordering::Relaxed);
+    svc.shutdown();
+    (cycles, macs, issued, avoided, saved)
 }
 
 fn main() {
@@ -118,6 +172,26 @@ fn main() {
     let speedup = rate_4w / rate_1w;
     println!("    -> 4-worker speedup over 1 worker: {speedup:.2}x");
 
+    section("batched submission (weight-tile reuse / fill amortization)");
+    // Fixed shape in smoke and full runs: these are simulated-cycle
+    // metrics — deterministic, so CI gates on them (>10% macs/cycle
+    // regression fails the workflow; see tools/check_bench_regression.py).
+    let (count, shape) = (8, (16, 28, 28));
+    let (b_cycles, b_macs, fills_issued, fills_avoided, fill_saved) =
+        shared_weight_serve(true, count, shape);
+    let (s_cycles, s_macs, ..) = shared_weight_serve(false, count, shape);
+    let batched_mpc = b_macs as f64 / b_cycles as f64;
+    let single_mpc = s_macs as f64 / s_cycles as f64;
+    println!(
+        "bench batched {count} shared-weight 16x28x28 jobs: \
+         {b_cycles} sim-cycles batched vs {s_cycles} single \
+         -> {batched_mpc:.3} vs {single_mpc:.3} MACs/cycle"
+    );
+    println!(
+        "    -> fills: {fills_issued} issued, {fills_avoided} avoided \
+         ({fill_saved} fill cycles saved)"
+    );
+
     // Perf-trajectory artifact for CI (stable keys, one flat object).
     let json = format!(
         "{{\n  \"bench\": \"sim_throughput\",\n  \"smoke\": {smoke},\n  \
@@ -125,7 +199,12 @@ fn main() {
          \"sharded_gemm_size\": {size},\n  \
          \"sharded_gemm_macs_per_s_1w\": {rate_1w:.1},\n  \
          \"sharded_gemm_macs_per_s_4w\": {rate_4w:.1},\n  \
-         \"sharded_speedup_4w_over_1w\": {speedup:.3}\n}}\n"
+         \"sharded_speedup_4w_over_1w\": {speedup:.3},\n  \
+         \"batched_macs_per_cycle\": {batched_mpc:.4},\n  \
+         \"single_macs_per_cycle\": {single_mpc:.4},\n  \
+         \"fills_issued\": {fills_issued},\n  \
+         \"fills_avoided\": {fills_avoided},\n  \
+         \"fill_cycles_saved\": {fill_saved}\n}}\n"
     );
     match std::fs::write("BENCH_sim_throughput.json", &json) {
         Ok(()) => println!("wrote BENCH_sim_throughput.json"),

@@ -1,0 +1,276 @@
+//! The non-blocking front-end's shared completion table.
+//!
+//! [`super::Service::submit`] returns a [`JobHandle`] immediately;
+//! workers retire finished jobs into this table, and the submitter
+//! redeems handles through `poll` (non-blocking), `wait` (blocking
+//! with timeout) or `drain` (everything outstanding). This replaces
+//! the single `mpsc` results channel: completions are addressable by
+//! job, arrival order is preserved for `wait_any`, and the table
+//! tracks how many jobs are still in flight so `drain` knows when the
+//! pipeline is dry.
+
+use super::job::{JobId, JobResult};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Handle returned by `submit`/`submit_batch`; redeem it through
+/// `Service::poll` / `Service::wait`.
+///
+/// Lifecycle: `Pending` from submission until a worker assembles the
+/// job, then exactly one `poll`/`wait` observes `Done` (the result is
+/// *taken* — a second redemption reports `Pending` but the result is
+/// gone, so keep the `JobResult` you were handed). Jobs whose tiles
+/// errored resolve to `Failed` instead — likewise observed exactly
+/// once, so the table never accumulates state for retired jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JobHandle {
+    pub id: JobId,
+}
+
+/// What a handle redemption observed.
+#[derive(Debug)]
+pub enum JobState {
+    /// Still in flight (or already taken by an earlier redemption).
+    Pending,
+    /// Completed: the assembled result (taken from the table).
+    Done(Box<JobResult>),
+    /// A tile of this job errored; no result exists.
+    Failed,
+}
+
+impl JobState {
+    pub fn is_done(&self) -> bool {
+        matches!(self, JobState::Done(_))
+    }
+
+    pub fn into_result(self) -> Option<Box<JobResult>> {
+        match self {
+            JobState::Done(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    ready: HashMap<JobId, JobResult>,
+    /// Completion order, for `wait_any` fairness (ids already taken by
+    /// a targeted `poll`/`wait` are skipped lazily).
+    order: VecDeque<JobId>,
+    failed: HashSet<JobId>,
+    /// Submitted but not yet retired (completed or failed).
+    outstanding: usize,
+}
+
+/// Shared completion state between workers and the submitter.
+#[derive(Default)]
+pub struct CompletionTable {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl CompletionTable {
+    pub fn new() -> Self {
+        CompletionTable::default()
+    }
+
+    /// Account `n` newly submitted jobs.
+    pub(crate) fn register(&self, n: usize) {
+        self.inner.lock().unwrap().outstanding += n;
+    }
+
+    /// Worker side: retire a completed job.
+    pub(crate) fn complete(&self, result: JobResult) {
+        let mut g = self.inner.lock().unwrap();
+        g.order.push_back(result.id);
+        g.ready.insert(result.id, result);
+        g.outstanding = g.outstanding.saturating_sub(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Worker side: retire a failed job.
+    pub(crate) fn complete_failed(&self, id: JobId) {
+        let mut g = self.inner.lock().unwrap();
+        g.failed.insert(id);
+        g.outstanding = g.outstanding.saturating_sub(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking redemption of one handle.
+    pub fn poll(&self, handle: JobHandle) -> JobState {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(r) = g.ready.remove(&handle.id) {
+            return JobState::Done(Box::new(r));
+        }
+        if g.failed.remove(&handle.id) {
+            return JobState::Failed;
+        }
+        JobState::Pending
+    }
+
+    /// Blocking redemption of one handle (up to `timeout`).
+    pub fn wait(&self, handle: JobHandle, timeout: Duration) -> JobState {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.ready.remove(&handle.id) {
+                return JobState::Done(Box::new(r));
+            }
+            if g.failed.remove(&handle.id) {
+                return JobState::Failed;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return JobState::Pending;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Take the next completed job in arrival order (blocking up to
+    /// `timeout`); `None` on timeout. Failed jobs never surface here —
+    /// they resolve through `poll`/`wait` on their handle.
+    pub fn wait_any(&self, timeout: Duration) -> Option<JobResult> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            while let Some(id) = g.order.pop_front() {
+                if let Some(r) = g.ready.remove(&id) {
+                    return Some(r);
+                }
+                // Already taken by a targeted poll/wait: skip.
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Block until every submitted job has retired (or `timeout`), and
+    /// take all completed results in arrival order. Failed jobs retire
+    /// without producing a result; check [`CompletionTable::failed_count`].
+    pub fn drain(&self, timeout: Duration) -> Vec<JobResult> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        while g.outstanding > 0 {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+        let mut out = Vec::with_capacity(g.ready.len());
+        while let Some(id) = g.order.pop_front() {
+            if let Some(r) = g.ready.remove(&id) {
+                out.push(r);
+            }
+        }
+        out
+    }
+
+    /// Jobs submitted but not yet retired.
+    pub fn pending(&self) -> usize {
+        self.inner.lock().unwrap().outstanding
+    }
+
+    /// Jobs that retired as failed and were not yet observed through
+    /// a handle (observing one via `poll`/`wait` consumes it).
+    pub fn failed_count(&self) -> usize {
+        self.inner.lock().unwrap().failed.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::RunStats;
+    use crate::workload::MatI32;
+    use std::sync::Arc;
+
+    fn result(id: u64) -> JobResult {
+        JobResult {
+            id: JobId(id),
+            output: MatI32::zeros(1, 1),
+            stats: RunStats::default(),
+            simulated: Duration::ZERO,
+            wall: Duration::ZERO,
+            verified: None,
+        }
+    }
+
+    #[test]
+    fn poll_pending_then_done_takes_once() {
+        let t = CompletionTable::new();
+        t.register(1);
+        let h = JobHandle { id: JobId(0) };
+        assert!(matches!(t.poll(h), JobState::Pending));
+        t.complete(result(0));
+        assert_eq!(t.pending(), 0);
+        let state = t.poll(h);
+        assert!(state.is_done());
+        assert_eq!(state.into_result().unwrap().id, JobId(0));
+        // Taken: a second redemption does not see it again.
+        assert!(matches!(t.poll(h), JobState::Pending));
+    }
+
+    #[test]
+    fn wait_any_preserves_completion_order_and_skips_taken() {
+        let t = CompletionTable::new();
+        t.register(3);
+        t.complete(result(2));
+        t.complete(result(0));
+        t.complete(result(1));
+        // Target-poll the middle one out of band.
+        assert!(t.poll(JobHandle { id: JobId(0) }).is_done());
+        let a = t.wait_any(Duration::from_millis(10)).unwrap();
+        let b = t.wait_any(Duration::from_millis(10)).unwrap();
+        assert_eq!((a.id, b.id), (JobId(2), JobId(1)));
+        assert!(t.wait_any(Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn failed_jobs_resolve_and_retire() {
+        let t = CompletionTable::new();
+        t.register(2);
+        t.complete_failed(JobId(7));
+        assert_eq!(t.failed_count(), 1);
+        assert!(matches!(
+            t.wait(JobHandle { id: JobId(7) }, Duration::from_millis(5)),
+            JobState::Failed
+        ));
+        // Observing a failure consumes it — no unbounded growth, and a
+        // second redemption reports Pending like a taken Done.
+        assert_eq!(t.failed_count(), 0);
+        assert!(matches!(
+            t.poll(JobHandle { id: JobId(7) }),
+            JobState::Pending
+        ));
+        t.complete(result(8));
+        let drained = t.drain(Duration::from_millis(50));
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].id, JobId(8));
+        assert_eq!(t.pending(), 0);
+    }
+
+    #[test]
+    fn wait_blocks_until_cross_thread_completion() {
+        let t = Arc::new(CompletionTable::new());
+        t.register(1);
+        let t2 = Arc::clone(&t);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            t2.complete(result(4));
+        });
+        let state = t.wait(JobHandle { id: JobId(4) }, Duration::from_secs(5));
+        assert!(state.is_done());
+        h.join().unwrap();
+    }
+}

@@ -30,6 +30,49 @@ pub enum Job {
     Snn { spikes: MatI8, weights: MatI8 },
 }
 
+/// An ordered batch of jobs submitted in one `Service::submit_batch`
+/// call. The service groups the batch's tiles by stationary weight
+/// tile, so jobs that share weights (the dominant pattern when one
+/// model serves many users) pay one fill per tile position and stream
+/// the rest — see `RunStats::fills_avoided`.
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    pub(crate) jobs: Vec<Job>,
+}
+
+impl Batch {
+    pub fn new() -> Self {
+        Batch::default()
+    }
+
+    pub fn push(&mut self, job: Job) -> &mut Self {
+        self.jobs.push(job);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+impl From<Vec<Job>> for Batch {
+    fn from(jobs: Vec<Job>) -> Self {
+        Batch { jobs }
+    }
+}
+
+impl FromIterator<Job> for Batch {
+    fn from_iter<I: IntoIterator<Item = Job>>(iter: I) -> Self {
+        Batch {
+            jobs: iter.into_iter().collect(),
+        }
+    }
+}
+
 impl Job {
     /// MAC count (for throughput accounting).
     pub fn macs(&self) -> u64 {
@@ -154,6 +197,20 @@ impl JobTracker {
     pub fn accumulate(&self, tile: &Tile, partial: &MatI32) {
         let mut out = self.out.lock().unwrap();
         tile.accumulate_into(&mut out, partial);
+    }
+
+    /// Fold a partial product covering output columns
+    /// `n0..n0 + partial.cols` (the grouped-unit path, where the
+    /// weight tile is shared and only the column span is carried per
+    /// pass). Delegates to the one accumulate primitive on [`MatI32`].
+    pub fn accumulate_cols(&self, n0: usize, partial: &MatI32) {
+        self.out.lock().unwrap().accumulate_cols(n0, partial);
+    }
+
+    /// Whether some tile of this job already errored (lets a worker
+    /// skip the job's remaining passes in a grouped unit).
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::Relaxed)
     }
 
     /// Store a whole-job output (non-tiled engines).

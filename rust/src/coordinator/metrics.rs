@@ -17,6 +17,15 @@ pub struct Metrics {
     pub tiles_executed: AtomicU64,
     /// Work units taken from another worker's shard.
     pub steals: AtomicU64,
+    /// `submit_batch` calls (a single `submit` counts as a batch of 1).
+    pub batches_submitted: AtomicU64,
+    /// Stationary weight fills actually performed by WS workers.
+    pub fills_issued: AtomicU64,
+    /// Fills skipped because the weight tile was already resident
+    /// (batched weight-tile reuse).
+    pub fills_avoided: AtomicU64,
+    /// Slow cycles the avoided fills would have cost.
+    pub fill_cycles_saved: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -49,11 +58,34 @@ impl Metrics {
         )
     }
 
+    /// Fraction of stationary fills avoided through weight-tile reuse
+    /// (0 when nothing repeated).
+    pub fn fill_amortization(&self) -> f64 {
+        let issued = self.fills_issued.load(Ordering::Relaxed);
+        let avoided = self.fills_avoided.load(Ordering::Relaxed);
+        if issued + avoided == 0 {
+            0.0
+        } else {
+            avoided as f64 / (issued + avoided) as f64
+        }
+    }
+
+    /// Achieved MACs per simulated cycle across every completed job.
+    pub fn effective_macs_per_cycle(&self) -> f64 {
+        let cycles = self.sim_cycles.load(Ordering::Relaxed);
+        if cycles == 0 {
+            0.0
+        } else {
+            self.macs.load(Ordering::Relaxed) as f64 / cycles as f64
+        }
+    }
+
     pub fn summary(&self) -> String {
         let (p50, p95, max) = self.latency_percentiles();
         format!(
             "jobs {}/{} ok ({} failed), {} MMACs, {} sim-cycles, \
-             {} tiles ({} stolen), latency p50 {}us p95 {}us max {}us",
+             {} tiles ({} stolen), fills {} issued / {} avoided \
+             ({} cycles saved), latency p50 {}us p95 {}us max {}us",
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
@@ -61,6 +93,9 @@ impl Metrics {
             self.sim_cycles.load(Ordering::Relaxed),
             self.tiles_executed.load(Ordering::Relaxed),
             self.steals.load(Ordering::Relaxed),
+            self.fills_issued.load(Ordering::Relaxed),
+            self.fills_avoided.load(Ordering::Relaxed),
+            self.fill_cycles_saved.load(Ordering::Relaxed),
             p50,
             p95,
             max
@@ -87,5 +122,18 @@ mod tests {
     fn empty_percentiles_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_percentiles(), (0, 0, 0));
+    }
+
+    #[test]
+    fn fill_amortization_and_effective_rate() {
+        let m = Metrics::new();
+        assert_eq!(m.fill_amortization(), 0.0);
+        assert_eq!(m.effective_macs_per_cycle(), 0.0);
+        m.fills_issued.fetch_add(4, Ordering::Relaxed);
+        m.fills_avoided.fetch_add(12, Ordering::Relaxed);
+        m.record_completion(1000, 100, Duration::from_micros(1));
+        assert!((m.fill_amortization() - 0.75).abs() < 1e-12);
+        assert!((m.effective_macs_per_cycle() - 10.0).abs() < 1e-12);
+        assert!(m.summary().contains("4 issued / 12 avoided"));
     }
 }

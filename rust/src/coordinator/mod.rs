@@ -14,11 +14,18 @@
 //!   [`scheduler::PrefetchPolicy::Stall`] (tinyTPU-style reload stall)
 //!   — making the benefit of technique 1 measurable end-to-end;
 //! * [`pool`] — the sharded, work-stealing deque pool workers drain;
-//! * [`service`] — a multi-worker job service over tile-level work
-//!   units: one large GEMM fans out across every worker, partial
-//!   results assemble job-level in [`job::JobTracker`] (std threads +
-//!   channels; the binary is self-contained and offline).
+//! * [`completion`] — the shared completion table behind the
+//!   non-blocking submit/poll front-end ([`completion::JobHandle`]);
+//! * [`service`] — a multi-worker job service over grouped, tile-level
+//!   work units: [`service::Service::submit_batch`] groups a batch's
+//!   tiles by stationary weight tile (one fill, many streams — the
+//!   fill-amortization the paper's prefetch chain makes nearly free
+//!   within a job, extended *across* jobs), one large GEMM fans out
+//!   across every worker, and partial results assemble job-level in
+//!   [`job::JobTracker`] (std threads; the binary is self-contained
+//!   and offline).
 
+pub mod completion;
 pub mod job;
 pub mod metrics;
 pub mod pool;
@@ -26,9 +33,10 @@ pub mod scheduler;
 pub mod service;
 pub mod tiler;
 
-pub use job::{Job, JobId, JobResult, JobTracker};
+pub use completion::{CompletionTable, JobHandle, JobState};
+pub use job::{Batch, Job, JobId, JobResult, JobTracker};
 pub use metrics::Metrics;
 pub use pool::WorkPool;
 pub use scheduler::{PrefetchPolicy, ScheduleReport};
 pub use service::{Service, ServiceConfig};
-pub use tiler::{GemmTiler, Tile};
+pub use tiler::{GemmTiler, Tile, TileCoord};

@@ -38,6 +38,13 @@ pub struct ScheduleReport {
     /// Cycles lost to weight loading.
     pub weight_cycles: u64,
     pub macs: u64,
+    /// Stationary fills actually performed across the sequence.
+    pub fills_issued: u64,
+    /// Fills skipped because the weight tile was already resident
+    /// (batched weight-tile reuse across jobs).
+    pub fills_avoided: u64,
+    /// Slow cycles the avoided fills would have cost.
+    pub fill_cycles_saved: u64,
 }
 
 impl ScheduleReport {
@@ -58,6 +65,29 @@ impl ScheduleReport {
         }
     }
 
+    /// The MACs/cycle this sequence would achieve if every avoided
+    /// fill had been paid — the baseline the amortization is measured
+    /// against.
+    pub fn macs_per_cycle_unamortized(&self) -> f64 {
+        let cycles = self.cycles + self.fill_cycles_saved;
+        if cycles == 0 {
+            0.0
+        } else {
+            self.macs as f64 / cycles as f64
+        }
+    }
+
+    /// Fraction of stationary fills the schedule avoided (0 when no
+    /// weights repeat).
+    pub fn fill_amortization(&self) -> f64 {
+        let total = self.fills_issued + self.fills_avoided;
+        if total == 0 {
+            0.0
+        } else {
+            self.fills_avoided as f64 / total as f64
+        }
+    }
+
     /// Simulated wall time at `mhz`.
     pub fn simulated_secs(&self, mhz: f64) -> f64 {
         self.cycles as f64 / (mhz * 1e6)
@@ -75,17 +105,33 @@ pub fn schedule(
     rows: usize,
 ) -> ScheduleReport {
     let tiles = per_tile.len();
+    // A tile that reused a resident weight tile (`weight_loads == 0`)
+    // carries no fill in its cycle count: subtract nothing for it.
     let compute: u64 = per_tile
         .iter()
-        .map(|s| s.cycles - s.weight_stall_cycles - rows as u64)
+        .map(|s| {
+            let fill_rows = if s.weight_loads > 0 { rows as u64 } else { 0 };
+            s.cycles
+                .saturating_sub(s.weight_stall_cycles)
+                .saturating_sub(fill_rows)
+        })
         .sum();
     let macs: u64 = per_tile.iter().map(|s| s.macs).sum();
-    // First fill is always exposed.
+    let fills_issued =
+        per_tile.iter().filter(|s| s.weight_loads > 0).count() as u64;
+    let fills_avoided: u64 = per_tile.iter().map(|s| s.fills_avoided).sum();
+    let fill_cycles_saved: u64 =
+        per_tile.iter().map(|s| s.fill_cycles_saved).sum();
+    // First fill is always exposed; only *performed* fills switch.
     let first_fill = (rows + 1) as u64;
-    let switches = tiles.saturating_sub(1) as u64;
-    let weight = match policy {
-        PrefetchPolicy::PingPong => first_fill + switches,
-        PrefetchPolicy::Stall => first_fill + switches * rows as u64,
+    let switches = fills_issued.saturating_sub(1);
+    let weight = if fills_issued == 0 {
+        0
+    } else {
+        match policy {
+            PrefetchPolicy::PingPong => first_fill + switches,
+            PrefetchPolicy::Stall => first_fill + switches * rows as u64,
+        }
     };
     ScheduleReport {
         policy,
@@ -94,6 +140,9 @@ pub fn schedule(
         compute_cycles: compute,
         weight_cycles: weight,
         macs,
+        fills_issued,
+        fills_avoided,
+        fill_cycles_saved,
     }
 }
 
@@ -125,8 +174,10 @@ pub fn aggregate_tile_stats(
         fast_cycles: rep.cycles,
         macs: true_macs,
         weight_stall_cycles: rep.weight_cycles,
-        weight_loads: per_tile.len() as u64,
+        weight_loads: rep.fills_issued,
         guard_overflows: per_tile.iter().map(|s| s.guard_overflows).sum(),
+        fills_avoided: rep.fills_avoided,
+        fill_cycles_saved: rep.fill_cycles_saved,
     }
 }
 
@@ -183,6 +234,40 @@ mod tests {
         let pp = schedule(PrefetchPolicy::PingPong, &one, rows as usize);
         let st = schedule(PrefetchPolicy::Stall, &one, rows as usize);
         assert_eq!(pp.cycles, st.cycles);
+    }
+
+    /// Reused tiles (no fill in their cycles) contribute pure compute:
+    /// the schedule only charges weight cycles for fills actually
+    /// performed, and surfaces the amortization.
+    #[test]
+    fn reused_tiles_amortize_weight_cycles() {
+        let rows = 14u64;
+        let full = stats(100, 1000, rows); // fill + swap included
+        let reused = RunStats {
+            cycles: 100,
+            weight_stall_cycles: 0,
+            macs: 1000,
+            weight_loads: 0,
+            fills_avoided: 1,
+            fill_cycles_saved: rows + 1,
+            ..RunStats::default()
+        };
+        let seq = vec![full, reused.clone(), reused];
+        let rep = schedule(PrefetchPolicy::PingPong, &seq, rows as usize);
+        assert_eq!(rep.compute_cycles, 300);
+        // Only one fill issued: no switch cycles at all.
+        assert_eq!(rep.weight_cycles, 15);
+        assert_eq!(rep.fills_issued, 1);
+        assert_eq!(rep.fills_avoided, 2);
+        assert_eq!(rep.fill_cycles_saved, 30);
+        assert!((rep.fill_amortization() - 2.0 / 3.0).abs() < 1e-12);
+        assert!(rep.macs_per_cycle() > rep.macs_per_cycle_unamortized());
+
+        // Same sequence with all fills paid costs strictly more.
+        let all_full = vec![stats(100, 1000, rows); 3];
+        let base = schedule(PrefetchPolicy::PingPong, &all_full, rows as usize);
+        assert!(base.cycles > rep.cycles);
+        assert_eq!(base.fills_avoided, 0);
     }
 
     #[test]

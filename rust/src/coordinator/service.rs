@@ -1,27 +1,35 @@
-//! Multi-worker matrix-engine service with tile-level sharding.
+//! Multi-worker matrix-engine service: batched, non-blocking
+//! submission over tile-level sharding with weight-tile reuse.
 //!
 //! Each worker owns one cycle-accurate engine instance (they are cheap:
 //! a few hundred KB of register state) and drains a sharded
-//! work-stealing pool of *tile-level* work units ([`super::pool`]).
-//! A single large GEMM therefore parallelizes across every worker —
-//! its tiles fan out, partial results assemble job-level in
-//! [`super::job::JobTracker`] — and mixed job sizes no longer convoy
-//! behind the largest job. Std threads + channels keep the binary
-//! self-contained and offline.
+//! work-stealing pool of work units ([`super::pool`]). A unit carries
+//! one or more [`FillGroup`]s — tiles (possibly of *different* jobs)
+//! that share one stationary weight tile, so the worker issues one
+//! `fill` and streams every pass against it
+//! ([`Engine::run_gemm_reuse`]). A single large GEMM still fans out
+//! across every worker; partial results assemble job-level in
+//! [`super::job::JobTracker`]; and [`Service::submit`] is
+//! non-blocking — it returns a [`JobHandle`] redeemed against the
+//! shared [`CompletionTable`] (`poll`/`wait`/`drain`), so a caller can
+//! overlap generation, scheduling and retirement. Std threads keep the
+//! binary self-contained and offline.
 
-use super::job::{Completion, Job, JobId, JobResult, JobTracker};
+use super::completion::{CompletionTable, JobHandle, JobState};
+use super::job::{Batch, Completion, Job, JobId, JobResult, JobTracker};
 use super::metrics::Metrics;
 use super::pool::{Provenance, WorkPool};
 use super::scheduler::aggregate_tile_stats;
-use super::tiler::{GemmTiler, Tile};
+use super::tiler::{GemmTiler, TileCoord};
 use crate::engines::os::{OsConfig, OsEngine, OsVariant};
 use crate::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
 use crate::engines::ws::{WsConfig, WsEngine, WsVariant};
 use crate::engines::{Engine, EngineError, RunStats};
 use crate::workload::conv::{im2col, weights_to_gemm};
 use crate::workload::{MatI32, MatI8};
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Which engine the workers instantiate.
@@ -162,8 +170,9 @@ impl ServiceConfig {
     }
 }
 
-/// Execute one GEMM on an engine, tiling when needed. This is the same
-/// code path workers use; exposed for examples/benches.
+/// Execute one GEMM on an engine, tiling when needed (tiles stream
+/// lazily — nothing is materialized upfront). This is the same code
+/// path workers use; exposed for examples/benches.
 pub fn run_gemm_tiled(
     engine: &mut dyn Engine,
     tiler: Option<&GemmTiler>,
@@ -176,12 +185,12 @@ pub fn run_gemm_tiled(
             Ok((run.output, run.stats))
         }
         Some(tiler) => {
-            let tiles = tiler.tiles(a, w);
             let mut out = MatI32::zeros(a.rows, w.cols);
-            let mut per_tile = Vec::with_capacity(tiles.len());
-            for t in &tiles {
+            let mut per_tile =
+                Vec::with_capacity(tiler.tile_count(a.cols, w.cols));
+            for t in tiler.tile_iter(a, w) {
                 let run = engine.run_gemm(&t.a, &t.w)?;
-                tiler.accumulate(&mut out, t, &run.output);
+                tiler.accumulate(&mut out, &t, &run.output);
                 per_tile.push(run.stats);
             }
             // Padded-tile MACs overcount; report the true problem size.
@@ -192,11 +201,32 @@ pub fn run_gemm_tiled(
     }
 }
 
-/// One unit of work: a batch of tiles of one job, or the whole job for
-/// engines that tile internally.
-struct WorkUnit {
+/// One streaming pass of a [`FillGroup`]: which job it belongs to,
+/// which output columns it covers, and its activation tile. The weight
+/// tile lives once on the group, not per pass.
+struct Pass {
     job: Arc<JobTracker>,
-    tiles: Option<Vec<Tile>>,
+    n0: usize,
+    a: MatI8,
+}
+
+/// Tiles — possibly of different jobs — that share one stationary
+/// weight tile: the worker fills once and streams every pass
+/// ([`Engine::run_gemm_reuse`] for passes after the first).
+struct FillGroup {
+    w: MatI8,
+    passes: Vec<Pass>,
+}
+
+/// One unit of work.
+enum WorkUnit {
+    /// Fill-groups executed back to back on one engine (tiler path).
+    Groups(Vec<FillGroup>),
+    /// The whole job, for engines that tile internally.
+    Whole(Arc<JobTracker>),
+    /// Degenerate zero-tile job: accounts one empty slot so the job
+    /// assembles and reports.
+    Empty(Arc<JobTracker>),
 }
 
 /// Lower a [`Job`] to its GEMM operands (conv via im2col).
@@ -215,7 +245,7 @@ fn lower(job: Job) -> (MatI8, MatI8) {
 /// The running service.
 pub struct Service {
     pool: Arc<WorkPool<WorkUnit>>,
-    results_rx: mpsc::Receiver<JobResult>,
+    completion: Arc<CompletionTable>,
     workers: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     next_id: u64,
@@ -228,12 +258,12 @@ impl Service {
     pub fn start(cfg: ServiceConfig) -> Self {
         let workers_n = cfg.workers.max(1);
         let pool = Arc::new(WorkPool::<WorkUnit>::new(workers_n));
-        let (results_tx, results_rx) = mpsc::channel::<JobResult>();
+        let completion = Arc::new(CompletionTable::new());
         let metrics = Arc::new(Metrics::new());
         let mut workers = Vec::new();
         for wid in 0..workers_n {
             let pool = Arc::clone(&pool);
-            let results_tx = results_tx.clone();
+            let completion = Arc::clone(&completion);
             let metrics = Arc::clone(&metrics);
             let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
@@ -243,20 +273,28 @@ impl Service {
                     if prov == Provenance::Stolen {
                         metrics.steals.fetch_add(1, Ordering::Relaxed);
                     }
-                    let (done, stats) =
-                        run_unit(engine.as_mut(), &unit, &metrics);
-                    match unit.job.complete_tiles(done, stats, slow_mhz) {
-                        Completion::Pending => {}
-                        Completion::Done(result) => {
-                            metrics.record_completion(
-                                unit.job.macs(),
-                                result.stats.cycles,
-                                result.wall,
-                            );
-                            let _ = results_tx.send(*result);
-                        }
-                        Completion::Failed => {
-                            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    for outcome in run_unit(engine.as_mut(), &unit, &metrics) {
+                        let id = outcome.job.id();
+                        match outcome.job.complete_tiles(
+                            outcome.done,
+                            outcome.stats,
+                            slow_mhz,
+                        ) {
+                            Completion::Pending => {}
+                            Completion::Done(result) => {
+                                metrics.record_completion(
+                                    outcome.job.macs(),
+                                    result.stats.cycles,
+                                    result.wall,
+                                );
+                                completion.complete(*result);
+                            }
+                            Completion::Failed => {
+                                metrics
+                                    .jobs_failed
+                                    .fetch_add(1, Ordering::Relaxed);
+                                completion.complete_failed(id);
+                            }
                         }
                     }
                 }
@@ -265,7 +303,7 @@ impl Service {
         let tiler = cfg.tiler();
         Service {
             pool,
-            results_rx,
+            completion,
             workers,
             metrics,
             next_id: 0,
@@ -278,78 +316,185 @@ impl Service {
         &self.cfg
     }
 
-    /// Enqueue a job, sharding it into tile-level work units; returns
-    /// its id.
-    pub fn submit(&mut self, job: Job) -> JobId {
-        let id = JobId(self.next_id);
-        self.next_id += 1;
+    /// Enqueue one job (a batch of 1); non-blocking.
+    pub fn submit(&mut self, job: Job) -> JobHandle {
+        self.submit_batch(Batch::from(vec![job]))
+            .pop()
+            .expect("one handle per submitted job")
+    }
+
+    /// Enqueue a batch of jobs in one call; non-blocking. Tiles are
+    /// grouped by stationary weight tile across the whole batch, so
+    /// jobs sharing weights pay one fill per tile position and stream
+    /// the rest. Handles come back in job order; redeem them with
+    /// [`Service::poll`] / [`Service::wait`], or retire completions in
+    /// arrival order with [`Service::wait_any`] / [`Service::drain`].
+    pub fn submit_batch(&mut self, batch: Batch) -> Vec<JobHandle> {
+        let jobs = batch.jobs;
+        let mut handles = Vec::with_capacity(jobs.len());
+
+        // Lower every job and create its tracker. Nothing is
+        // registered or enqueued until the whole batch validates, so a
+        // shape panic here cannot leave the completion table counting
+        // jobs that will never run.
+        let mut trackers: Vec<Arc<JobTracker>> = Vec::with_capacity(jobs.len());
+        let tiler = self.tiler;
+        for job in jobs {
+            let id = JobId(self.next_id);
+            self.next_id += 1;
+            handles.push(JobHandle { id });
+            let macs = job.macs();
+            let (a, w) = lower(job);
+            let (total, sched_rows) = match &tiler {
+                Some(t) => {
+                    // Fail fast like the tiling path always has —
+                    // grouping uses a.cols as K, so a mismatch would
+                    // otherwise truncate or index out of bounds later.
+                    assert_eq!(a.cols, w.rows, "inner dimensions must agree");
+                    (t.tile_count(a.cols, w.cols).max(1), Some(t.rows))
+                }
+                None => (1, None),
+            };
+            trackers.push(Arc::new(JobTracker::new(
+                id,
+                a,
+                w,
+                macs,
+                total,
+                sched_rows,
+                self.cfg.verify,
+            )));
+        }
+
+        // The batch is valid: account it and register completions
+        // before the first unit becomes visible to workers.
+        self.metrics
+            .batches_submitted
+            .fetch_add(1, Ordering::Relaxed);
         self.metrics
             .jobs_submitted
-            .fetch_add(1, Ordering::Relaxed);
-        let macs = job.macs();
-        let (a, w) = lower(job);
-        match &self.tiler {
-            Some(tiler) => {
-                let tiles = tiler.tiles(&a, &w);
-                // Degenerate problems (zero-area GEMM) still owe one
-                // (empty) unit so the job assembles and reports.
-                let total = tiles.len().max(1);
-                let tracker = Arc::new(JobTracker::new(
-                    id,
-                    a,
-                    w,
-                    macs,
-                    total,
-                    Some(tiler.rows),
-                    self.cfg.verify,
-                ));
-                if tiles.is_empty() {
-                    self.pool.push(WorkUnit {
-                        job: tracker,
-                        tiles: Some(Vec::new()),
-                    });
-                    return id;
-                }
-                let width = self.cfg.shard_width.max(1);
-                let mut batch = Vec::with_capacity(width);
-                for tile in tiles {
-                    batch.push(tile);
-                    if batch.len() == width {
-                        self.pool.push(WorkUnit {
-                            job: Arc::clone(&tracker),
-                            tiles: Some(std::mem::take(&mut batch)),
-                        });
-                    }
-                }
-                if !batch.is_empty() {
-                    self.pool.push(WorkUnit {
-                        job: tracker,
-                        tiles: Some(batch),
-                    });
-                }
+            .fetch_add(trackers.len() as u64, Ordering::Relaxed);
+        self.completion.register(trackers.len());
+
+        let Some(tiler) = tiler else {
+            // Engines that tile internally take whole jobs.
+            for tracker in trackers {
+                self.pool.push(WorkUnit::Whole(tracker));
             }
-            None => {
-                let tracker = Arc::new(JobTracker::new(
-                    id,
-                    a,
-                    w,
-                    macs,
-                    1,
-                    None,
-                    self.cfg.verify,
-                ));
-                self.pool.push(WorkUnit {
-                    job: tracker,
-                    tiles: None,
+            return handles;
+        };
+
+        // Group tiles by (weight fingerprint, coord); the fingerprint
+        // only routes — group membership is confirmed by bit-exact
+        // weight-tile equality, so a collision can never mix weights.
+        // A batch of one has no cross-job reuse to find, so it skips
+        // the fingerprint + map entirely (the hot single-submit path).
+        let mut groups: Vec<FillGroup> = Vec::new();
+        let mut index: HashMap<(u64, TileCoord), Vec<usize>> = HashMap::new();
+        let solo = trackers.len() == 1;
+        for tracker in &trackers {
+            let (a, w) = (tracker.a(), tracker.w());
+            if tiler.tile_count(a.cols, w.cols) == 0 {
+                // Degenerate zero-area job: one empty slot assembles it.
+                self.pool.push(WorkUnit::Empty(Arc::clone(tracker)));
+                continue;
+            }
+            let wfp = if solo { 0 } else { fingerprint(w) };
+            for coord in tiler.coords(a.cols, w.cols) {
+                let w_tile = tiler.w_tile(w, coord);
+                let gi = if solo {
+                    // Every coord of a single job is a fresh group.
+                    groups.push(FillGroup {
+                        w: w_tile,
+                        passes: Vec::new(),
+                    });
+                    groups.len() - 1
+                } else {
+                    let candidates = index.entry((wfp, coord)).or_default();
+                    candidates
+                        .iter()
+                        .copied()
+                        .find(|&g| groups[g].w == w_tile)
+                        .unwrap_or_else(|| {
+                            groups.push(FillGroup {
+                                w: w_tile,
+                                passes: Vec::new(),
+                            });
+                            candidates.push(groups.len() - 1);
+                            groups.len() - 1
+                        })
+                };
+                groups[gi].passes.push(Pass {
+                    job: Arc::clone(tracker),
+                    n0: coord.n0,
+                    a: tiler.a_tile(a, coord),
                 });
             }
         }
-        id
+
+        // Pack groups into units of up to `shard_width` passes. Groups
+        // are never split — splitting would forfeit the reuse — so a
+        // group larger than the width gets a unit of its own.
+        let width = self.cfg.shard_width.max(1);
+        let mut unit: Vec<FillGroup> = Vec::new();
+        let mut in_unit = 0usize;
+        for group in groups {
+            let len = group.passes.len();
+            if in_unit > 0 && in_unit + len > width {
+                self.pool.push(WorkUnit::Groups(std::mem::take(&mut unit)));
+                in_unit = 0;
+            }
+            unit.push(group);
+            in_unit += len;
+            if in_unit >= width {
+                self.pool.push(WorkUnit::Groups(std::mem::take(&mut unit)));
+                in_unit = 0;
+            }
+        }
+        if !unit.is_empty() {
+            self.pool.push(WorkUnit::Groups(unit));
+        }
+        handles
     }
 
-    /// Receive one completed result (blocking with timeout).
+    /// Non-blocking check of one handle.
+    pub fn poll(&self, handle: JobHandle) -> JobState {
+        self.completion.poll(handle)
+    }
+
+    /// Block (up to `timeout`) for one specific job.
+    pub fn wait(&self, handle: JobHandle, timeout: Duration) -> JobState {
+        self.completion.wait(handle, timeout)
+    }
+
+    /// Take the next completion in arrival order (blocking with
+    /// timeout).
+    pub fn wait_any(&self, timeout: Duration) -> Option<JobResult> {
+        self.completion.wait_any(timeout)
+    }
+
+    /// Block until everything submitted has retired (or `timeout`) and
+    /// take all unclaimed results in completion order.
+    pub fn drain(&self, timeout: Duration) -> Vec<JobResult> {
+        self.completion.drain(timeout)
+    }
+
+    /// Jobs submitted but not yet retired.
+    pub fn pending(&self) -> usize {
+        self.completion.pending()
+    }
+
+    /// Jobs that retired as failed (engine errors) and were not yet
+    /// observed through a handle. `wait_any` never surfaces these, so
+    /// retirement loops must consult this to avoid waiting on them.
+    pub fn failed_count(&self) -> usize {
+        self.completion.failed_count()
+    }
+
+    /// Receive one completed result (blocking with timeout). Alias of
+    /// [`Service::wait_any`], kept for the pre-batch call sites.
     pub fn recv_timeout(&self, timeout: Duration) -> Option<JobResult> {
-        self.results_rx.recv_timeout(timeout).ok()
+        self.wait_any(timeout)
     }
 
     /// Stop workers (queued work drains first) and join.
@@ -361,44 +506,125 @@ impl Service {
     }
 }
 
-/// Execute one work unit on a worker's engine. Returns how many tiles
-/// the unit accounted for and their stats (short on failure).
+/// FNV-1a over the weight matrix (dims + bytes): the grouping key's
+/// routing half. Collisions are checked against, never trusted.
+fn fingerprint(w: &MatI8) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u64| {
+        for byte in b.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(w.rows as u64);
+    eat(w.cols as u64);
+    for &v in &w.data {
+        h ^= v as u8 as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Per-job outcome of one work unit: how many tile slots it accounted
+/// for and their stats (short on failure).
+struct UnitOutcome {
+    job: Arc<JobTracker>,
+    done: usize,
+    stats: Vec<RunStats>,
+}
+
+/// Execute one work unit on a worker's engine. Grouped units fill each
+/// stationary tile once and stream every pass against it; outcomes
+/// come back per job so multi-job units retire each job exactly once.
 fn run_unit(
     engine: &mut dyn Engine,
     unit: &WorkUnit,
     metrics: &Metrics,
-) -> (usize, Vec<RunStats>) {
-    match &unit.tiles {
-        Some(tiles) => {
-            let mut stats = Vec::with_capacity(tiles.len());
-            for tile in tiles {
-                match engine.run_gemm(&tile.a, &tile.w) {
-                    Ok(run) => {
-                        unit.job.accumulate(tile, &run.output);
-                        stats.push(run.stats);
-                        metrics.tiles_executed.fetch_add(1, Ordering::Relaxed);
+) -> Vec<UnitOutcome> {
+    match unit {
+        WorkUnit::Groups(groups) => {
+            let mut outcomes: Vec<UnitOutcome> = Vec::new();
+            let slot = |outcomes: &mut Vec<UnitOutcome>,
+                        job: &Arc<JobTracker>|
+             -> usize {
+                match outcomes.iter().position(|o| o.job.id() == job.id()) {
+                    Some(i) => i,
+                    None => {
+                        outcomes.push(UnitOutcome {
+                            job: Arc::clone(job),
+                            done: 0,
+                            stats: Vec::new(),
+                        });
+                        outcomes.len() - 1
                     }
-                    Err(_) => {
-                        unit.job.mark_failed();
-                        break;
+                }
+            };
+            for group in groups {
+                for (i, pass) in group.passes.iter().enumerate() {
+                    let si = slot(&mut outcomes, &pass.job);
+                    outcomes[si].done += 1;
+                    if pass.job.is_failed() {
+                        continue; // job already poisoned; skip the work
+                    }
+                    let run = if i == 0 {
+                        engine.run_gemm(&pass.a, &group.w)
+                    } else {
+                        engine.run_gemm_reuse(&pass.a, &group.w)
+                    };
+                    match run {
+                        Ok(run) => {
+                            pass.job.accumulate_cols(pass.n0, &run.output);
+                            metrics
+                                .tiles_executed
+                                .fetch_add(1, Ordering::Relaxed);
+                            metrics.fills_issued.fetch_add(
+                                run.stats.weight_loads,
+                                Ordering::Relaxed,
+                            );
+                            metrics.fills_avoided.fetch_add(
+                                run.stats.fills_avoided,
+                                Ordering::Relaxed,
+                            );
+                            metrics.fill_cycles_saved.fetch_add(
+                                run.stats.fill_cycles_saved,
+                                Ordering::Relaxed,
+                            );
+                            outcomes[si].stats.push(run.stats);
+                        }
+                        Err(_) => {
+                            pass.job.mark_failed();
+                        }
                     }
                 }
             }
-            // Empty units (degenerate problems) still account one slot
-            // so the tracker assembles.
-            (tiles.len().max(1), stats)
+            outcomes
         }
-        None => match engine.run_gemm(unit.job.a(), unit.job.w()) {
+        WorkUnit::Whole(job) => match engine.run_gemm(job.a(), job.w()) {
             Ok(run) => {
-                unit.job.set_output(run.output);
+                job.set_output(run.output);
                 metrics.tiles_executed.fetch_add(1, Ordering::Relaxed);
-                (1, vec![run.stats])
+                vec![UnitOutcome {
+                    job: Arc::clone(job),
+                    done: 1,
+                    stats: vec![run.stats],
+                }]
             }
             Err(_) => {
-                unit.job.mark_failed();
-                (1, Vec::new())
+                job.mark_failed();
+                vec![UnitOutcome {
+                    job: Arc::clone(job),
+                    done: 1,
+                    stats: Vec::new(),
+                }]
             }
         },
+        // Degenerate problems still account one slot so the tracker
+        // assembles.
+        WorkUnit::Empty(job) => vec![UnitOutcome {
+            job: Arc::clone(job),
+            done: 1,
+            stats: Vec::new(),
+        }],
     }
 }
 
@@ -588,6 +814,144 @@ mod tests {
         assert_eq!(r.stats.cycles, seq_stats.cycles);
         assert_eq!(r.stats.weight_stall_cycles, seq_stats.weight_stall_cycles);
         assert_eq!(r.stats.macs, seq_stats.macs);
+    }
+
+    /// A batch of jobs sharing one weight matrix: outputs bit-exact vs
+    /// golden, every fill after the first per tile position avoided,
+    /// and total cycles strictly below the same jobs submitted singly.
+    #[test]
+    fn shared_weight_batch_amortizes_fills() {
+        let mut rng = XorShift::new(41);
+        let (m, k, n) = (8, 12, 10);
+        let w = MatI8::random(&mut rng, k, n);
+        let acts: Vec<MatI8> = (0..4)
+            .map(|_| MatI8::random_bounded(&mut rng, m, k, 63))
+            .collect();
+        let cfg = ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 2,
+            ws_rows: 6,
+            ws_cols: 6,
+            verify: true,
+            shard_width: 1,
+        };
+        let tiles_per_job =
+            cfg.tiler().unwrap().tile_count(k, n) as u64;
+
+        // Batched: one submit_batch call.
+        let mut svc = Service::start(cfg.clone());
+        let batch: Batch = acts
+            .iter()
+            .map(|a| Job::Gemm {
+                a: a.clone(),
+                w: w.clone(),
+            })
+            .collect();
+        let handles = svc.submit_batch(batch);
+        assert_eq!(handles.len(), acts.len());
+        let results = svc.drain(Duration::from_secs(120));
+        assert_eq!(results.len(), acts.len());
+        let mut batched_cycles = 0u64;
+        for r in &results {
+            assert_eq!(r.verified, Some(true));
+            let a = &acts[r.id.0 as usize];
+            assert_eq!(r.output, golden_gemm(a, &w));
+            batched_cycles += r.stats.cycles;
+        }
+        let issued = svc.metrics.fills_issued.load(Ordering::Relaxed);
+        let avoided = svc.metrics.fills_avoided.load(Ordering::Relaxed);
+        assert_eq!(issued, tiles_per_job);
+        assert_eq!(avoided, tiles_per_job * (acts.len() as u64 - 1));
+        assert!(svc.metrics.fill_cycles_saved.load(Ordering::Relaxed) > 0);
+        svc.shutdown();
+
+        // The same jobs submitted one at a time: no reuse, more cycles.
+        let mut svc = Service::start(cfg);
+        for a in &acts {
+            svc.submit(Job::Gemm {
+                a: a.clone(),
+                w: w.clone(),
+            });
+        }
+        let single: Vec<JobResult> = svc.drain(Duration::from_secs(120));
+        let single_cycles: u64 =
+            single.iter().map(|r| r.stats.cycles).sum();
+        assert_eq!(
+            svc.metrics.fills_avoided.load(Ordering::Relaxed),
+            0
+        );
+        // Outputs are bit-identical either way.
+        for r in &single {
+            assert_eq!(r.output, golden_gemm(&acts[r.id.0 as usize], &w));
+        }
+        assert!(
+            batched_cycles < single_cycles,
+            "batched {batched_cycles} !< single {single_cycles}"
+        );
+        svc.shutdown();
+    }
+
+    /// JobHandle lifecycle: Pending before completion, Done exactly
+    /// once, wait() blocks until ready, drain() returns the rest.
+    #[test]
+    fn handles_poll_wait_drain() {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 1,
+            ws_rows: 6,
+            ws_cols: 6,
+            verify: true,
+            shard_width: 1,
+        });
+        let mut rng = XorShift::new(43);
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let a = MatI8::random_bounded(&mut rng, 4, 6, 63);
+            let w = MatI8::random(&mut rng, 6, 4);
+            handles.push(svc.submit(Job::Gemm { a, w }));
+        }
+        // Targeted wait on the last handle.
+        let state = svc.wait(handles[2], Duration::from_secs(60));
+        let r = state.into_result().expect("job 2 completes");
+        assert_eq!(r.id, handles[2].id);
+        assert_eq!(r.verified, Some(true));
+        // Taken: redeeming again reports Pending-but-gone.
+        assert!(matches!(svc.poll(handles[2]), JobState::Pending));
+        // Drain retires the remaining two.
+        let rest = svc.drain(Duration::from_secs(60));
+        assert_eq!(rest.len(), 2);
+        assert_eq!(svc.pending(), 0);
+        svc.shutdown();
+    }
+
+    /// Batching never changes results for engines that tile
+    /// internally (whole-job units, no grouping).
+    #[test]
+    fn whole_job_engines_accept_batches() {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::OsEnhanced,
+            workers: 2,
+            ws_rows: 0,
+            ws_cols: 0,
+            verify: true,
+            shard_width: 1,
+        });
+        let mut rng = XorShift::new(47);
+        let w = MatI8::random_bounded(&mut rng, 16, 8, 50);
+        let batch: Batch = (0..3)
+            .map(|_| Job::Gemm {
+                a: MatI8::random_bounded(&mut rng, 4, 16, 63),
+                w: w.clone(),
+            })
+            .collect();
+        let handles = svc.submit_batch(batch);
+        assert_eq!(handles.len(), 3);
+        let results = svc.drain(Duration::from_secs(120));
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            assert_eq!(r.verified, Some(true));
+        }
+        svc.shutdown();
     }
 
     /// Mixed job sizes on a sharded pool: everything completes and

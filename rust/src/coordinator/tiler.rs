@@ -13,6 +13,18 @@
 
 use crate::workload::{MatI32, MatI8};
 
+/// The (K, N) span one stationary tile covers — the cheap, data-free
+/// half of a [`Tile`]. Coordinates are what batched submission groups
+/// by (same weight matrix + same coord ⇒ same stationary tile), and
+/// what lazy tiling iterates before any operand copy exists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileCoord {
+    pub k0: usize,
+    pub k1: usize,
+    pub n0: usize,
+    pub n1: usize,
+}
+
 /// One weight-stationary tile of a larger GEMM.
 #[derive(Debug, Clone)]
 pub struct Tile {
@@ -33,13 +45,8 @@ impl Tile {
     /// K-tiles sum (integer adds commute, so sharded completion order
     /// cannot change the result); N-tiles write disjoint columns.
     pub fn accumulate_into(&self, out: &mut MatI32, partial: &MatI32) {
-        assert_eq!(partial.rows, out.rows);
         assert_eq!(partial.cols, self.n1 - self.n0);
-        for r in 0..partial.rows {
-            for c in 0..partial.cols {
-                out.add(r, self.n0 + c, partial.at(r, c));
-            }
-        }
+        out.accumulate_cols(self.n0, partial);
     }
 }
 
@@ -63,43 +70,76 @@ impl GemmTiler {
         k.div_ceil(self.rows) * n.div_ceil(self.cols)
     }
 
-    /// Produce the tile sequence (K-major, so consecutive tiles share
-    /// the same N-columns and the accumulator stays hot).
-    pub fn tiles(&self, a: &MatI8, w: &MatI8) -> Vec<Tile> {
-        assert_eq!(a.cols, w.rows, "inner dimensions must agree");
-        let (m, k) = (a.rows, a.cols);
-        let n = w.cols;
-        let mut out = Vec::with_capacity(self.tile_count(k, n));
-        for n0 in (0..n).step_by(self.cols) {
-            let n1 = (n0 + self.cols).min(n);
-            for k0 in (0..k).step_by(self.rows) {
-                let k1 = (k0 + self.rows).min(k);
-                // Pad K to the full array depth; N tiles may be narrow.
-                let a_tile = MatI8::from_fn(m, self.rows, |r, c| {
-                    if k0 + c < k1 {
-                        a.at(r, k0 + c)
-                    } else {
-                        0
-                    }
-                });
-                let w_tile = MatI8::from_fn(self.rows, n1 - n0, |r, c| {
-                    if k0 + r < k1 {
-                        w.at(k0 + r, n0 + c)
-                    } else {
-                        0
-                    }
-                });
-                out.push(Tile {
-                    k0,
-                    k1,
-                    n0,
-                    n1,
-                    a: a_tile,
-                    w: w_tile,
-                });
-            }
+    /// The tile-coordinate sequence for a `(K, N)` problem, K-major
+    /// (consecutive coords share the same N-columns so the accumulator
+    /// stays hot). Coordinates carry no operand data — materialize
+    /// them per tile with [`GemmTiler::a_tile`] / [`GemmTiler::w_tile`].
+    pub fn coords(
+        &self,
+        k: usize,
+        n: usize,
+    ) -> impl Iterator<Item = TileCoord> {
+        let (rows, cols) = (self.rows, self.cols);
+        (0..n).step_by(cols).flat_map(move |n0| {
+            let n1 = (n0 + cols).min(n);
+            (0..k).step_by(rows).map(move |k0| TileCoord {
+                k0,
+                k1: (k0 + rows).min(k),
+                n0,
+                n1,
+            })
+        })
+    }
+
+    /// Extract the padded activation slice for one coord (M × rows):
+    /// straight row-slice copies, no per-element closure and no
+    /// per-column `Vec` — this is the tiler's hot path.
+    pub fn a_tile(&self, a: &MatI8, c: TileCoord) -> MatI8 {
+        let mut t = MatI8::zeros(a.rows, self.rows);
+        let span = c.k1 - c.k0;
+        for r in 0..a.rows {
+            t.row_mut(r)[..span].copy_from_slice(&a.row(r)[c.k0..c.k1]);
         }
-        out
+        t
+    }
+
+    /// Extract the padded weight tile for one coord (rows × (n1-n0)).
+    /// K-padding rows stay zero (zero products cannot perturb packed
+    /// lanes).
+    pub fn w_tile(&self, w: &MatI8, c: TileCoord) -> MatI8 {
+        let mut t = MatI8::zeros(self.rows, c.n1 - c.n0);
+        for r in 0..(c.k1 - c.k0) {
+            t.row_mut(r)
+                .copy_from_slice(&w.row(c.k0 + r)[c.n0..c.n1]);
+        }
+        t
+    }
+
+    /// Lazy tile sequence: each [`Tile`]'s operand copies materialize
+    /// only when the iterator reaches it, so a consumer that streams
+    /// tiles (the service's submit path, `run_gemm_tiled`) never holds
+    /// every tile of a large problem in memory at once.
+    pub fn tile_iter<'m>(
+        &self,
+        a: &'m MatI8,
+        w: &'m MatI8,
+    ) -> impl Iterator<Item = Tile> + 'm {
+        assert_eq!(a.cols, w.rows, "inner dimensions must agree");
+        let tiler = *self;
+        tiler.coords(a.cols, w.cols).map(move |c| Tile {
+            k0: c.k0,
+            k1: c.k1,
+            n0: c.n0,
+            n1: c.n1,
+            a: tiler.a_tile(a, c),
+            w: tiler.w_tile(w, c),
+        })
+    }
+
+    /// Materialize every tile upfront (convenience for small problems
+    /// and tests; large batches should stream [`GemmTiler::tile_iter`]).
+    pub fn tiles(&self, a: &MatI8, w: &MatI8) -> Vec<Tile> {
+        self.tile_iter(a, w).collect()
     }
 
     /// Accumulate a tile's partial result into the full output.
@@ -145,6 +185,52 @@ mod tests {
         assert_eq!(tiles.len(), 6);
         assert!(tiles[..3].iter().all(|t| t.n0 == 0));
         assert!(tiles[3..].iter().all(|t| t.n0 == 4));
+    }
+
+    /// The slice-copy extraction agrees element-for-element with the
+    /// straightforward per-element reference, padding included.
+    #[test]
+    fn slice_extraction_matches_reference() {
+        let mut rng = XorShift::new(6);
+        for (m, k, n, rows, cols) in [(5, 20, 9, 6, 4), (3, 13, 17, 14, 14)] {
+            let a = MatI8::random(&mut rng, m, k);
+            let w = MatI8::random(&mut rng, k, n);
+            let tiler = GemmTiler::new(rows, cols);
+            for c in tiler.coords(k, n) {
+                let a_ref = MatI8::from_fn(m, rows, |r, i| {
+                    if c.k0 + i < c.k1 {
+                        a.at(r, c.k0 + i)
+                    } else {
+                        0
+                    }
+                });
+                let w_ref = MatI8::from_fn(rows, c.n1 - c.n0, |r, i| {
+                    if c.k0 + r < c.k1 {
+                        w.at(c.k0 + r, c.n0 + i)
+                    } else {
+                        0
+                    }
+                });
+                assert_eq!(tiler.a_tile(&a, c), a_ref);
+                assert_eq!(tiler.w_tile(&w, c), w_ref);
+            }
+        }
+    }
+
+    /// Lazy iteration covers the same coords as `tile_count` promises,
+    /// in the same K-major order as the materialized sequence.
+    #[test]
+    fn coords_and_tile_iter_agree_with_tiles() {
+        let tiler = GemmTiler::new(4, 4);
+        let a = MatI8::zeros(2, 10);
+        let w = MatI8::zeros(10, 6);
+        let coords: Vec<TileCoord> = tiler.coords(10, 6).collect();
+        assert_eq!(coords.len(), tiler.tile_count(10, 6));
+        let tiles = tiler.tiles(&a, &w);
+        assert_eq!(tiles.len(), coords.len());
+        for (t, c) in tiles.iter().zip(&coords) {
+            assert_eq!((t.k0, t.k1, t.n0, t.n1), (c.k0, c.k1, c.n0, c.n1));
+        }
     }
 
     #[test]

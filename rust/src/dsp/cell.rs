@@ -387,6 +387,18 @@ impl Dsp48e2 {
         let attrs = self.attrs;
         *self = Dsp48e2::new(attrs);
     }
+
+    /// Reset the datapath for a new run while keeping the loaded
+    /// weights resident: B1/B2 survive, every other register (and the
+    /// activity counters) clears — the state a fresh reset + weight
+    /// fill would produce, minus the fill cycles. This is what makes
+    /// stationary-tile reuse across batched jobs bit-exact.
+    pub fn reset_keep_weights(&mut self) {
+        let (b1, b2) = (self.b1, self.b2);
+        self.reset();
+        self.b1 = b1;
+        self.b2 = b2;
+    }
 }
 
 /// Snapshot of the internal registers (for waveform dumps).
@@ -766,5 +778,31 @@ mod tests {
         let before = dsp.regs();
         dsp.tick(&DspInputs::hold());
         assert_eq!(dsp.regs(), before);
+    }
+
+    #[test]
+    fn reset_keep_weights_preserves_only_b_regs() {
+        let mut dsp = Dsp48e2::new(Attributes::default());
+        let inp = DspInputs {
+            a: 3,
+            b: 4,
+            d: 2,
+            opmode: OpMode::MULT,
+            ..DspInputs::default()
+        };
+        for _ in 0..4 {
+            dsp.tick(&inp);
+        }
+        let loaded = dsp.regs();
+        assert_ne!(loaded.p, 0);
+        dsp.reset_keep_weights();
+        let after = dsp.regs();
+        assert_eq!(after.b1, loaded.b1);
+        assert_eq!(after.b2, loaded.b2);
+        assert_eq!(after.a1, 0);
+        assert_eq!(after.a2, 0);
+        assert_eq!(after.m, 0);
+        assert_eq!(after.p, 0);
+        assert_eq!(dsp.cycles, 0);
     }
 }

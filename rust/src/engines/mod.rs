@@ -36,6 +36,11 @@ pub struct RunStats {
     pub weight_loads: u64,
     /// Guard-band overflows detected (packed cascades).
     pub guard_overflows: u64,
+    /// Stationary fills skipped because the weight tile was already
+    /// resident (batched weight-tile reuse).
+    pub fills_avoided: u64,
+    /// Slow cycles those avoided fills would have cost.
+    pub fill_cycles_saved: u64,
 }
 
 impl RunStats {
@@ -111,6 +116,22 @@ pub trait Engine {
 
     /// Execute `a (M×K) @ w (K×N)` cycle-accurately.
     fn run_gemm(&mut self, a: &MatI8, w: &MatI8) -> Result<GemmRun, EngineError>;
+
+    /// Execute a GEMM whose stationary weight tile may still be
+    /// resident from the previous call on this engine (batched
+    /// weight-tile reuse: fill once, stream many). Engines with a
+    /// stationary-reuse path skip the weight fill when — and only
+    /// when — the resident tile is bit-identical to `w`, accounting
+    /// the saved cycles in [`RunStats::fills_avoided`] /
+    /// [`RunStats::fill_cycles_saved`]; everything else falls back to
+    /// a full [`Engine::run_gemm`].
+    fn run_gemm_reuse(
+        &mut self,
+        a: &MatI8,
+        w: &MatI8,
+    ) -> Result<GemmRun, EngineError> {
+        self.run_gemm(a, w)
+    }
 
     /// The paper-style evaluation row for this engine.
     fn table_row(&self) -> TableRow {

@@ -382,6 +382,9 @@ impl TileKernel for OsPassKernel<'_> {
             stream_steps: 4 * self.rounds,
             drain_steps: self.eng.cfg.chain_len + 6,
             clocking: Clocking::DoubleRate,
+            // OS streams weights during compute; there is no
+            // stationary fill to reuse.
+            reuse_fill: false,
         }
     }
 

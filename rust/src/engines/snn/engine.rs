@@ -314,6 +314,7 @@ impl TileKernel for SnnPassKernel<'_> {
             // cycles after it enters.
             drain_steps: self.eng.cfg.chain_len,
             clocking: Clocking::Single,
+            reuse_fill: false,
         }
     }
 

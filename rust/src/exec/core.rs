@@ -27,7 +27,10 @@ pub trait TileKernel {
     fn plan(&self) -> TilePlan;
 
     /// Load the stationary operands (weight-fill phase). Cycle and
-    /// stall accounting comes from the plan, not from here.
+    /// stall accounting comes from the plan, not from here. Under
+    /// [`TilePlan::reuse_fill`] this is still invoked (kernels lease
+    /// scratch here) but the kernel must skip the actual weight
+    /// movement — the operands are already resident.
     fn fill(&mut self, scratch: &mut Scratch, stats: &mut RunStats);
 
     /// Advance the datapath one streamed step (`t` counts from 0 over
@@ -103,6 +106,7 @@ mod tests {
                 stream_steps: 5,
                 drain_steps: 3,
                 clocking: Clocking::Single,
+                reuse_fill: false,
             },
             filled: false,
             seen: Vec::new(),

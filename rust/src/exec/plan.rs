@@ -43,6 +43,11 @@ pub struct TilePlan {
     /// Pipeline ramp + drain tail appended after the payload.
     pub drain_steps: usize,
     pub clocking: Clocking,
+    /// The stationary operands are already resident from the previous
+    /// tile on this engine (batched weight-tile reuse): the fill phase
+    /// is skipped entirely and its cycles are accounted as *saved*
+    /// instead of spent.
+    pub reuse_fill: bool,
 }
 
 impl TilePlan {
@@ -51,8 +56,15 @@ impl TilePlan {
         self.stream_steps + self.drain_steps
     }
 
-    /// Account the fill phase onto `stats`.
+    /// Account the fill phase onto `stats`. Under `reuse_fill` no
+    /// cycles, stalls or loads are charged — the avoided fill is
+    /// recorded in the amortization counters instead.
     pub fn apply_fill(&self, stats: &mut RunStats) {
+        if self.reuse_fill {
+            stats.fills_avoided += 1;
+            stats.fill_cycles_saved += self.fill.cycles;
+            return;
+        }
         stats.cycles += self.fill.cycles;
         stats.weight_stall_cycles += self.fill.exposed;
         stats.weight_loads += self.fill.loads;
@@ -89,6 +101,7 @@ mod tests {
             stream_steps: 100,
             drain_steps: 20,
             clocking: Clocking::Single,
+            reuse_fill: false,
         };
         let mut stats = RunStats::default();
         plan.apply_fill(&mut stats);
@@ -97,6 +110,8 @@ mod tests {
         assert_eq!(stats.fast_cycles, stats.cycles);
         assert_eq!(stats.weight_stall_cycles, 1);
         assert_eq!(stats.weight_loads, 1);
+        assert_eq!(stats.fills_avoided, 0);
+        assert_eq!(stats.fill_cycles_saved, 0);
     }
 
     #[test]
@@ -106,10 +121,34 @@ mod tests {
             stream_steps: 9,
             drain_steps: 0,
             clocking: Clocking::DoubleRate,
+            reuse_fill: false,
         };
         let mut stats = RunStats::default();
         plan.apply_stream(&mut stats);
         assert_eq!(stats.fast_cycles, 9);
         assert_eq!(stats.cycles, 5); // div_ceil(9, 2)
+    }
+
+    #[test]
+    fn reuse_fill_charges_nothing_and_records_savings() {
+        let plan = TilePlan {
+            fill: FillPlan {
+                cycles: 15,
+                exposed: 1,
+                loads: 1,
+            },
+            stream_steps: 100,
+            drain_steps: 20,
+            clocking: Clocking::Single,
+            reuse_fill: true,
+        };
+        let mut stats = RunStats::default();
+        plan.apply_fill(&mut stats);
+        plan.apply_stream(&mut stats);
+        assert_eq!(stats.cycles, 120); // stream only
+        assert_eq!(stats.weight_stall_cycles, 0);
+        assert_eq!(stats.weight_loads, 0);
+        assert_eq!(stats.fills_avoided, 1);
+        assert_eq!(stats.fill_cycles_saved, 15);
     }
 }

@@ -6,6 +6,7 @@
 //! dsp48-systolic simulate --m 512 --k 512 --n 512 --workers 4
 //! dsp48-systolic serve --jobs 16 --workers 2 --engine ws-dsp-fetch
 //! dsp48-systolic serve --jobs 1 --workers 4 --m 512 --k 512 --n 512
+//! dsp48-systolic serve --jobs 32 --batch 8   # shared-weight batches
 //! dsp48-systolic sweep --min 6 --max 14       # tinyTPU-style size sweep
 //! dsp48-systolic waveform --fig 3|5|6         # paper waveform traces
 //! dsp48-systolic artifacts                    # list AOT registry
@@ -14,7 +15,7 @@
 //! Unknown `--flags` are usage errors (exit 2), never silently ignored.
 
 use dsp48_systolic::coordinator::service::{run_gemm_tiled, EngineKind};
-use dsp48_systolic::coordinator::{Job, Service, ServiceConfig};
+use dsp48_systolic::coordinator::{Batch, Job, Service, ServiceConfig};
 use dsp48_systolic::cost::report::{render_table, render_breakdown};
 use dsp48_systolic::engines::os::{OsConfig, OsEngine, OsVariant};
 use dsp48_systolic::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
@@ -74,6 +75,7 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "engine",
             "workers",
             "jobs",
+            "batch",
             "rows",
             "cols",
             "m",
@@ -382,42 +384,104 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         }
     };
     let jobs = flag_usize(flags, "jobs", 16);
+    let batch = flag_usize(flags, "batch", 1).max(1);
     let (m, k, n) = (
         flag_usize(flags, "m", 16),
         flag_usize(flags, "k", 28),
         flag_usize(flags, "n", 28),
     );
     println!(
-        "serving {} {}x{}x{} jobs on {} x {} workers (shard width {})",
+        "serving {} {}x{}x{} jobs on {} x {} workers \
+         (shard width {}, batches of {} sharing weights)",
         jobs,
         m,
         k,
         n,
         cfg.kind.label(),
         cfg.workers,
-        cfg.shard_width
+        cfg.shard_width,
+        batch
     );
     let mut svc = Service::start(cfg);
     let mut rng = XorShift::new(7);
-    for _ in 0..jobs {
-        let a = MatI8::random_bounded(&mut rng, m, k, 63);
-        let w = MatI8::random(&mut rng, k, n);
-        svc.submit(Job::Gemm { a, w });
-    }
-    let mut failures = 0;
-    for _ in 0..jobs {
-        match svc.recv_timeout(Duration::from_secs(600)) {
+    // Non-blocking front-end: generation, scheduling and retirement
+    // overlap — submit stays ahead of the workers up to `max_inflight`
+    // jobs while completions retire as they arrive. Engine-failed jobs
+    // never surface through `wait_any`, so the loop consults
+    // `failed_count` instead of blocking on them.
+    let max_inflight = (4 * batch).max(16);
+    let deadline = std::time::Instant::now() + Duration::from_secs(600);
+    let mut submitted = 0usize;
+    let mut retired = 0usize;
+    let mut verify_failures = 0usize;
+    let mut failed_seen = 0usize;
+    while retired + failed_seen < jobs {
+        while submitted < jobs
+            && submitted - retired - failed_seen < max_inflight
+        {
+            // One weight matrix per batch (the one-model-many-users
+            // pattern); activations vary per job.
+            let size = batch.min(jobs - submitted);
+            let w = MatI8::random(&mut rng, k, n);
+            let mut b = Batch::new();
+            for _ in 0..size {
+                b.push(Job::Gemm {
+                    a: MatI8::random_bounded(&mut rng, m, k, 63),
+                    w: w.clone(),
+                });
+            }
+            svc.submit_batch(b);
+            submitted += size;
+        }
+        match svc.wait_any(Duration::from_millis(200)) {
             // `verified` is None when --verify false: completion alone
             // counts as success then.
-            Some(r) if r.verified != Some(false) => {}
-            Some(_) => failures += 1,
+            Some(r) => {
+                retired += 1;
+                if r.verified == Some(false) {
+                    verify_failures += 1;
+                }
+            }
             None => {
-                eprintln!("timeout waiting for job");
-                failures += 1;
+                failed_seen = svc.failed_count();
+                if retired + failed_seen >= jobs {
+                    break;
+                }
+                if std::time::Instant::now() >= deadline {
+                    eprintln!("timeout waiting for jobs");
+                    break;
+                }
             }
         }
     }
+    let engine_failures = svc.failed_count();
+    let unretired = jobs.saturating_sub(retired + engine_failures);
+    let failures = verify_failures + engine_failures + unretired;
     println!("{}", svc.metrics.summary());
+    let issued = svc
+        .metrics
+        .fills_issued
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let avoided = svc
+        .metrics
+        .fills_avoided
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let saved = svc
+        .metrics
+        .fill_cycles_saved
+        .load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "fills     : {} issued, {} avoided ({} fill cycles saved, \
+         {:.1}% amortized)",
+        issued,
+        avoided,
+        saved,
+        100.0 * svc.metrics.fill_amortization()
+    );
+    println!(
+        "effective : {:.2} MACs/cycle across all retired jobs",
+        svc.metrics.effective_macs_per_cycle()
+    );
     svc.shutdown();
     i32::from(failures > 0)
 }
@@ -554,6 +618,7 @@ mod tests {
             vec!["report", "--table", "2"],
             vec!["simulate", "--workers", "4", "--shard-width", "2"],
             vec!["serve", "--m", "512", "--k", "512", "--n", "512"],
+            vec!["serve", "--jobs", "32", "--batch", "8"],
             vec!["sweep", "--min", "6"],
             vec!["waveform", "--fig", "5"],
             vec!["artifacts"],

@@ -62,9 +62,24 @@ impl MatI8 {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// Column copy (weights are consumed column-wise by WS columns).
+    pub fn row_mut(&mut self, r: usize) -> &mut [i8] {
+        let cols = self.cols;
+        &mut self.data[r * cols..(r + 1) * cols]
+    }
+
+    /// Borrowing column walk — the allocation-free access for hot paths
+    /// that consume a matrix column-wise (WS weight fills, tiling).
+    pub fn col_iter(
+        &self,
+        c: usize,
+    ) -> impl DoubleEndedIterator<Item = i8> + ExactSizeIterator + '_ {
+        debug_assert!(c < self.cols);
+        (0..self.rows).map(move |r| self.data[r * self.cols + c])
+    }
+
+    /// Column copy (convenience; hot paths use [`MatI8::col_iter`]).
     pub fn col(&self, c: usize) -> Vec<i8> {
-        (0..self.rows).map(|r| self.at(r, c)).collect()
+        self.col_iter(c).collect()
     }
 
     pub fn transpose(&self) -> MatI8 {
@@ -105,6 +120,21 @@ impl MatI32 {
     pub fn add(&mut self, r: usize, c: usize, v: i32) {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c] += v;
+    }
+
+    /// Fold `partial` into the column span starting at `n0` (row counts
+    /// must match, span must fit). Integer adds commute, so callers may
+    /// fold partial products in any completion order — this is the one
+    /// accumulate primitive behind both the sequential tiling path and
+    /// the batched fill-group path.
+    pub fn accumulate_cols(&mut self, n0: usize, partial: &MatI32) {
+        assert_eq!(partial.rows, self.rows);
+        assert!(n0 + partial.cols <= self.cols);
+        for r in 0..partial.rows {
+            for c in 0..partial.cols {
+                self.add(r, n0 + c, partial.at(r, c));
+            }
+        }
     }
 }
 
@@ -194,6 +224,28 @@ mod tests {
         };
         let out = golden_gemm(&a, &w);
         assert_eq!(out.data, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn col_iter_matches_col_and_reverses() {
+        let mut rng = XorShift::new(8);
+        let m = MatI8::random(&mut rng, 6, 4);
+        for c in 0..m.cols {
+            assert_eq!(m.col_iter(c).collect::<Vec<_>>(), m.col(c));
+            let mut rev: Vec<i8> = m.col_iter(c).rev().collect();
+            rev.reverse();
+            assert_eq!(rev, m.col(c));
+            assert_eq!(m.col_iter(c).len(), m.rows);
+        }
+    }
+
+    #[test]
+    fn row_mut_writes_in_place() {
+        let mut m = MatI8::zeros(3, 4);
+        m.row_mut(1).copy_from_slice(&[1, 2, 3, 4]);
+        assert_eq!(m.at(1, 2), 3);
+        assert_eq!(m.at(0, 2), 0);
+        assert_eq!(m.at(2, 2), 0);
     }
 
     #[test]

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Throughput regression gate for the CI bench trajectory.
+
+Compares the bench artifact (BENCH_sim_throughput.json) against the
+committed baseline (rust/bench_baseline.json) and fails the workflow
+when a gated metric regresses by more than --max-regress (default 10%).
+
+Only *simulated* metrics (MACs/cycle, fill counters) are gated — they
+are deterministic functions of the cycle model, so the gate never
+flakes on runner speed. Wall-clock rates in the artifact are recorded
+for trend-watching but never gated.
+
+Baseline schema:
+
+    {
+      "gates": {                 # higher-is-better metrics
+        "batched_macs_per_cycle": 79.267,
+        ...
+      },
+      "exact": {                 # must match exactly (counters)
+        "fills_avoided": 28,
+        ...
+      }
+    }
+
+Usage:
+    python3 tools/check_bench_regression.py CURRENT.json BASELINE.json \
+        [--max-regress 0.10]
+"""
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="bench artifact JSON")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument(
+        "--max-regress",
+        type=float,
+        default=0.10,
+        help="allowed fractional drop for gated metrics (default 0.10)",
+    )
+    args = ap.parse_args()
+
+    with open(args.current, encoding="utf-8") as f:
+        current = json.load(f)
+    with open(args.baseline, encoding="utf-8") as f:
+        baseline = json.load(f)
+
+    failures = []
+
+    for key, base in baseline.get("gates", {}).items():
+        if key not in current:
+            failures.append(f"{key}: missing from bench artifact")
+            continue
+        got = float(current[key])
+        floor = float(base) * (1.0 - args.max_regress)
+        status = "ok" if got >= floor else "REGRESSION"
+        print(
+            f"{key}: {got:.4f} vs baseline {float(base):.4f} "
+            f"(floor {floor:.4f}) {status}"
+        )
+        if got < floor:
+            failures.append(
+                f"{key}: {got:.4f} < {floor:.4f} "
+                f"(baseline {float(base):.4f} - {args.max_regress:.0%})"
+            )
+
+    for key, base in baseline.get("exact", {}).items():
+        if key not in current:
+            failures.append(f"{key}: missing from bench artifact")
+            continue
+        got = current[key]
+        status = "ok" if got == base else "MISMATCH"
+        print(f"{key}: {got} vs baseline {base} (exact) {status}")
+        if got != base:
+            failures.append(f"{key}: {got} != {base} (exact counter)")
+
+    if failures:
+        print("\nthroughput regression gate FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        print(
+            "\nIf the change is an intentional trade-off, update "
+            "rust/bench_baseline.json in the same PR and say why.",
+            file=sys.stderr,
+        )
+        return 1
+    print("\nthroughput regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
