@@ -20,6 +20,7 @@ use dsp48_systolic::engines::Engine;
 use dsp48_systolic::packing;
 use dsp48_systolic::util::bench::{bench, section};
 use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::conv::ConvShape;
 use dsp48_systolic::workload::MatI8;
 use std::time::{Duration, Instant};
 
@@ -87,8 +88,63 @@ fn shared_weight_serve(
             svc.submit(job);
         }
     }
-    let results = svc.drain(Duration::from_secs(600));
+    let results = svc.drain(Duration::from_secs(600)).completed;
     assert_eq!(results.len(), count, "all shared-weight jobs complete");
+    let cycles: u64 = results.iter().map(|r| r.stats.cycles).sum();
+    let macs: u64 = results.iter().map(|r| r.stats.macs).sum();
+    let issued = svc
+        .metrics
+        .fills_issued
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let avoided = svc
+        .metrics
+        .fills_avoided
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let saved = svc
+        .metrics
+        .fill_cycles_saved
+        .load(std::sync::atomic::Ordering::Relaxed);
+    svc.shutdown();
+    (cycles, macs, issued, avoided, saved)
+}
+
+/// `count` conv jobs sharing one weight set, submitted as a batch on
+/// the lazy conv tiling path (per-tile im2col patch extraction — the
+/// full patch matrix is never materialized). Returns `(sim_cycles,
+/// macs, fills_issued, fills_avoided, fill_cycles_saved)` — simulated,
+/// deterministic quantities safe to gate on.
+fn conv_serve(count: usize) -> (u64, u64, u64, u64, u64) {
+    let mut svc = Service::start(ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers: 2,
+        ws_rows: 14,
+        ws_cols: 14,
+        verify: false,
+        shard_width: 1,
+    });
+    let shape = ConvShape {
+        in_c: 8,
+        in_h: 12,
+        in_w: 12,
+        out_c: 16,
+        k: 3,
+        stride: 1,
+        pad: 1,
+    };
+    let mut rng = XorShift::new(23);
+    let weights: Vec<i8> = (0..shape.weight_len())
+        .map(|_| rng.i8_in(-63, 63))
+        .collect();
+    let jobs: Vec<Job> = (0..count)
+        .map(|_| Job::Conv {
+            input: (0..shape.input_len()).map(|_| rng.i8_in(-63, 63)).collect(),
+            weights: weights.clone(),
+            shape,
+        })
+        .collect();
+    svc.submit_batch(Batch::from(jobs));
+    let results = svc.drain(Duration::from_secs(600)).completed;
+    assert_eq!(results.len(), count, "all conv jobs complete");
     let cycles: u64 = results.iter().map(|r| r.stats.cycles).sum();
     let macs: u64 = results.iter().map(|r| r.stats.macs).sum();
     let issued = svc
@@ -192,6 +248,24 @@ fn main() {
          ({fill_saved} fill cycles saved)"
     );
 
+    section("conv-native lazy tiling (per-tile im2col patch extraction)");
+    // Shared-weight conv batch on the lazy tiling path; simulated
+    // metrics only, so the regression gate covers conv end-to-end.
+    let conv_jobs = 6;
+    let (c_cycles, c_macs, c_issued, c_avoided, c_saved) =
+        conv_serve(conv_jobs);
+    let conv_mpc = c_macs as f64 / c_cycles as f64;
+    let conv_amort = c_avoided as f64 / (c_issued + c_avoided) as f64;
+    println!(
+        "bench conv {conv_jobs} shared-weight 8x12x12 k3 s1 p1 jobs: \
+         {c_cycles} sim-cycles -> {conv_mpc:.3} MACs/cycle"
+    );
+    println!(
+        "    -> fills: {c_issued} issued, {c_avoided} avoided \
+         ({c_saved} fill cycles saved, {:.1}% amortized)",
+        100.0 * conv_amort
+    );
+
     // Perf-trajectory artifact for CI (stable keys, one flat object).
     let json = format!(
         "{{\n  \"bench\": \"sim_throughput\",\n  \"smoke\": {smoke},\n  \
@@ -204,7 +278,12 @@ fn main() {
          \"single_macs_per_cycle\": {single_mpc:.4},\n  \
          \"fills_issued\": {fills_issued},\n  \
          \"fills_avoided\": {fills_avoided},\n  \
-         \"fill_cycles_saved\": {fill_saved}\n}}\n"
+         \"fill_cycles_saved\": {fill_saved},\n  \
+         \"conv_macs_per_cycle\": {conv_mpc:.4},\n  \
+         \"conv_fill_amortization\": {conv_amort:.4},\n  \
+         \"conv_fills_issued\": {c_issued},\n  \
+         \"conv_fills_avoided\": {c_avoided},\n  \
+         \"conv_fill_cycles_saved\": {c_saved}\n}}\n"
     );
     match std::fs::write("BENCH_sim_throughput.json", &json) {
         Ok(()) => println!("wrote BENCH_sim_throughput.json"),

@@ -52,6 +52,28 @@ impl JobState {
     }
 }
 
+/// Everything one [`CompletionTable::drain`] call retired: completed
+/// results in arrival order, plus the ids of jobs that failed and had
+/// not been observed through a targeted `poll`/`wait`. Draining
+/// *takes* both — a long-running retirement loop that only ever calls
+/// `drain` cannot leak failed ids (they used to accumulate in the
+/// table forever).
+#[derive(Debug, Default)]
+pub struct Drained {
+    pub completed: Vec<JobResult>,
+    pub failed: Vec<JobId>,
+}
+
+/// `Instant::now() + timeout` without the overflow panic: callers pass
+/// `Duration::MAX` to mean "wait forever", which `checked_add`
+/// saturates to a far-future deadline (~30 years) instead of
+/// panicking the way a bare `+` does.
+fn deadline_after(timeout: Duration) -> Instant {
+    let now = Instant::now();
+    now.checked_add(timeout)
+        .unwrap_or_else(|| now + Duration::from_secs(60 * 60 * 24 * 365 * 30))
+}
+
 #[derive(Default)]
 struct Inner {
     ready: HashMap<JobId, JobResult>,
@@ -111,9 +133,10 @@ impl CompletionTable {
         JobState::Pending
     }
 
-    /// Blocking redemption of one handle (up to `timeout`).
+    /// Blocking redemption of one handle (up to `timeout`;
+    /// `Duration::MAX` waits forever).
     pub fn wait(&self, handle: JobHandle, timeout: Duration) -> JobState {
-        let deadline = Instant::now() + timeout;
+        let deadline = deadline_after(timeout);
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(r) = g.ready.remove(&handle.id) {
@@ -121,6 +144,14 @@ impl CompletionTable {
             }
             if g.failed.remove(&handle.id) {
                 return JobState::Failed;
+            }
+            if g.outstanding == 0 {
+                // Nothing is in flight, and this id is in neither
+                // table: it was already redeemed (or drained), so no
+                // state change can ever resolve it. Report Pending —
+                // the documented already-taken answer — instead of
+                // sleeping out a "wait forever" timeout.
+                return JobState::Pending;
             }
             let left = deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
@@ -132,10 +163,12 @@ impl CompletionTable {
     }
 
     /// Take the next completed job in arrival order (blocking up to
-    /// `timeout`); `None` on timeout. Failed jobs never surface here —
-    /// they resolve through `poll`/`wait` on their handle.
+    /// `timeout`; `Duration::MAX` waits forever); `None` on timeout.
+    /// Failed jobs never surface here — they resolve through
+    /// `poll`/`wait` on their handle, or in bulk through
+    /// [`CompletionTable::drain`].
     pub fn wait_any(&self, timeout: Duration) -> Option<JobResult> {
-        let deadline = Instant::now() + timeout;
+        let deadline = deadline_after(timeout);
         let mut g = self.inner.lock().unwrap();
         loop {
             while let Some(id) = g.order.pop_front() {
@@ -143,6 +176,15 @@ impl CompletionTable {
                     return Some(r);
                 }
                 // Already taken by a targeted poll/wait: skip.
+            }
+            if g.outstanding == 0 {
+                // Nothing in flight and nothing queued: no completion
+                // can ever arrive (submission requires exclusive
+                // access to the service, so none can race in while we
+                // hold the lock-and-wait loop). Without this a
+                // "wait forever" call would deadlock the moment every
+                // outstanding job resolved as Failed.
+                return None;
             }
             let left = deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
@@ -153,11 +195,13 @@ impl CompletionTable {
         }
     }
 
-    /// Block until every submitted job has retired (or `timeout`), and
-    /// take all completed results in arrival order. Failed jobs retire
-    /// without producing a result; check [`CompletionTable::failed_count`].
-    pub fn drain(&self, timeout: Duration) -> Vec<JobResult> {
-        let deadline = Instant::now() + timeout;
+    /// Block until every submitted job has retired (or `timeout`;
+    /// `Duration::MAX` waits forever), then take *everything*
+    /// unclaimed: completed results in arrival order **and** the ids
+    /// of unobserved failed jobs — both cleared from the table, so a
+    /// retirement loop built on `drain` alone holds no leaked state.
+    pub fn drain(&self, timeout: Duration) -> Drained {
+        let deadline = deadline_after(timeout);
         let mut g = self.inner.lock().unwrap();
         while g.outstanding > 0 {
             let left = deadline.saturating_duration_since(Instant::now());
@@ -167,13 +211,15 @@ impl CompletionTable {
             let (guard, _) = self.cv.wait_timeout(g, left).unwrap();
             g = guard;
         }
-        let mut out = Vec::with_capacity(g.ready.len());
+        let mut completed = Vec::with_capacity(g.ready.len());
         while let Some(id) = g.order.pop_front() {
             if let Some(r) = g.ready.remove(&id) {
-                out.push(r);
+                completed.push(r);
             }
         }
-        out
+        let mut failed: Vec<JobId> = g.failed.drain().collect();
+        failed.sort_unstable();
+        Drained { completed, failed }
     }
 
     /// Jobs submitted but not yet retired.
@@ -255,9 +301,69 @@ mod tests {
         ));
         t.complete(result(8));
         let drained = t.drain(Duration::from_millis(50));
-        assert_eq!(drained.len(), 1);
-        assert_eq!(drained[0].id, JobId(8));
+        assert_eq!(drained.completed.len(), 1);
+        assert_eq!(drained.completed[0].id, JobId(8));
+        assert!(drained.failed.is_empty());
         assert_eq!(t.pending(), 0);
+    }
+
+    /// `drain` takes unobserved failed ids with it and clears the set,
+    /// so a retirement loop that never targets handles cannot leak.
+    #[test]
+    fn drain_takes_and_clears_failed_ids() {
+        let t = CompletionTable::new();
+        t.register(4);
+        t.complete_failed(JobId(3));
+        t.complete(result(1));
+        t.complete_failed(JobId(0));
+        t.complete(result(2));
+        assert_eq!(t.failed_count(), 2);
+        let drained = t.drain(Duration::from_millis(50));
+        assert_eq!(drained.completed.len(), 2);
+        assert_eq!(drained.failed, vec![JobId(0), JobId(3)]);
+        // Cleared: the table holds nothing for retired jobs.
+        assert_eq!(t.failed_count(), 0);
+        assert_eq!(t.pending(), 0);
+        let again = t.drain(Duration::from_millis(5));
+        assert!(again.completed.is_empty() && again.failed.is_empty());
+    }
+
+    /// `wait_any` must not block — let alone "forever" — once every
+    /// outstanding job has retired as failed: no completion can ever
+    /// arrive, so it reports empty immediately.
+    #[test]
+    fn wait_any_returns_none_when_all_outstanding_failed() {
+        let t = CompletionTable::new();
+        t.register(2);
+        t.complete_failed(JobId(0));
+        t.complete_failed(JobId(1));
+        let start = Instant::now();
+        assert!(t.wait_any(Duration::MAX).is_none());
+        assert!(start.elapsed() < Duration::from_secs(5));
+        assert_eq!(t.failed_count(), 2);
+    }
+
+    /// `Duration::MAX` means "wait forever" and must not panic the
+    /// deadline arithmetic in wait / wait_any / drain.
+    #[test]
+    fn duration_max_timeouts_do_not_panic() {
+        let t = CompletionTable::new();
+        t.register(2);
+        t.complete(result(0));
+        t.complete(result(1));
+        let state = t.wait(JobHandle { id: JobId(0) }, Duration::MAX);
+        assert!(state.is_done());
+        assert_eq!(t.wait_any(Duration::MAX).unwrap().id, JobId(1));
+        let drained = t.drain(Duration::MAX);
+        assert!(drained.completed.is_empty() && drained.failed.is_empty());
+        // A forever-wait on an already-redeemed handle reports the
+        // documented already-taken answer instead of hanging.
+        let start = Instant::now();
+        assert!(matches!(
+            t.wait(JobHandle { id: JobId(0) }, Duration::MAX),
+            JobState::Pending
+        ));
+        assert!(start.elapsed() < Duration::from_secs(5));
     }
 
     #[test]

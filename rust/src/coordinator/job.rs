@@ -2,9 +2,9 @@
 //! for tile-sharded execution.
 
 use super::scheduler::aggregate_tile_stats;
-use super::tiler::Tile;
+use super::tiler::{ActOperand, Tile};
 use crate::engines::RunStats;
-use crate::workload::conv::ConvShape;
+use crate::workload::conv::{conv2d_direct, ConvShape};
 use crate::workload::gemm::golden_gemm;
 use crate::workload::{MatI32, MatI8};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -74,7 +74,9 @@ impl FromIterator<Job> for Batch {
 }
 
 impl Job {
-    /// MAC count (for throughput accounting).
+    /// MAC count (for throughput accounting). Conv shapes must be
+    /// valid ([`ConvShape::validate`]) — the count derives the conv
+    /// output extent.
     pub fn macs(&self) -> u64 {
         match self {
             Job::Gemm { a, w } => (a.rows * a.cols * w.cols) as u64,
@@ -119,6 +121,19 @@ pub enum Completion {
     Failed,
 }
 
+/// The golden reference `verified` is checked against (when enabled).
+/// Conv jobs verify against the **direct** convolution, so the full
+/// im2col matrix is never materialized — not even to verify.
+#[derive(Debug)]
+pub enum Reference {
+    /// `golden_gemm` over the dense operands.
+    Gemm,
+    /// `conv2d_direct` over the raw NCHW input (held by the job's
+    /// [`ActOperand::Patches`]) and these raw (out_c, in_c, k, k)
+    /// weights.
+    ConvDirect { weights: Vec<i8> },
+}
+
 /// Shared per-job state for tile-sharded execution.
 ///
 /// The coordinator fans one job out as tile-level work units; every
@@ -130,14 +145,20 @@ pub enum Completion {
 #[derive(Debug)]
 pub struct JobTracker {
     id: JobId,
-    /// The lowered GEMM operands (conv is im2col'd at submission).
-    a: MatI8,
+    /// The activation operand: dense, or a lazy conv patch view that
+    /// workers materialize per tile.
+    a: ActOperand,
+    /// The lowered GEMM weight operand.
     w: MatI8,
     /// True problem MACs (padded tiles overcount).
     macs: u64,
-    verify: bool,
+    /// `Some` = cross-check the assembled output against this golden
+    /// reference; `None` = verification off (no reference data is
+    /// retained at all).
+    reference: Option<Reference>,
     /// `Some(rows)` = tile-sharded: assemble stats under the prefetch
-    /// scheduler for an array of this depth. `None` = whole-job unit.
+    /// scheduler for an array of this depth. `None` = whole-job (or
+    /// row-block) units, whose stats simply sum.
     sched_rows: Option<usize>,
     submitted: Instant,
     out: Mutex<MatI32>,
@@ -148,23 +169,23 @@ pub struct JobTracker {
 
 impl JobTracker {
     /// Track a job split into `tiles` work tiles (1 for whole-job
-    /// units).
+    /// units). `reference: Some(..)` enables output verification.
     pub fn new(
         id: JobId,
-        a: MatI8,
+        a: ActOperand,
         w: MatI8,
+        reference: Option<Reference>,
         macs: u64,
         tiles: usize,
         sched_rows: Option<usize>,
-        verify: bool,
     ) -> Self {
-        let out = MatI32::zeros(a.rows, w.cols);
+        let out = MatI32::zeros(a.rows(), w.cols);
         JobTracker {
             id,
             a,
             w,
             macs,
-            verify,
+            reference,
             sched_rows,
             submitted: Instant::now(),
             out: Mutex::new(out),
@@ -178,8 +199,8 @@ impl JobTracker {
         self.id
     }
 
-    /// The lowered activation operand workers execute against.
-    pub fn a(&self) -> &MatI8 {
+    /// The activation operand workers extract tiles from.
+    pub fn a_operand(&self) -> &ActOperand {
         &self.a
     }
 
@@ -205,6 +226,13 @@ impl JobTracker {
     /// pass). Delegates to the one accumulate primitive on [`MatI32`].
     pub fn accumulate_cols(&self, n0: usize, partial: &MatI32) {
         self.out.lock().unwrap().accumulate_cols(n0, partial);
+    }
+
+    /// Write a partial product covering output rows
+    /// `m0..m0 + partial.rows` (the conv row-block path on
+    /// internally-tiling engines; row spans are disjoint).
+    pub fn write_rows(&self, m0: usize, partial: &MatI32) {
+        self.out.lock().unwrap().write_rows(m0, partial);
     }
 
     /// Whether some tile of this job already errored (lets a worker
@@ -254,11 +282,31 @@ impl JobTracker {
             // so sharded stats stay bit-identical (true MACs replace
             // the padded-tile overcount).
             Some(rows) => aggregate_tile_stats(&per_tile, rows, self.macs),
-            None => per_tile.into_iter().next().unwrap_or_default(),
+            // Whole-job units carry one entry; conv row blocks carry
+            // one per block and simply sum (disjoint row spans, no
+            // shared weight fills to re-schedule).
+            None => {
+                let mut iter = per_tile.into_iter();
+                let first = iter.next().unwrap_or_default();
+                iter.fold(first, |acc, s| acc.merged_with(&s))
+            }
         };
-        let verified = self
-            .verify
-            .then(|| output == golden_gemm(&self.a, &self.w));
+        let verified = self.reference.as_ref().map(|reference| match reference {
+            Reference::Gemm => {
+                let a = self
+                    .a
+                    .dense()
+                    .expect("GEMM-verified jobs carry dense operands");
+                output == golden_gemm(a, &self.w)
+            }
+            Reference::ConvDirect { weights } => {
+                let p = self
+                    .a
+                    .patches()
+                    .expect("conv-verified jobs carry patch operands");
+                output == conv2d_direct(p.input(), weights, p.shape())
+            }
+        });
         let simulated =
             Duration::from_secs_f64(stats.cycles as f64 / (slow_mhz * 1e6));
         JobResult {

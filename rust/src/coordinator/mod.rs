@@ -7,6 +7,10 @@
 //! * [`job`] — the request types (GEMM / Conv2d / SNN inference);
 //! * [`tiler`] — maps arbitrary problem shapes onto an engine's
 //!   stationary-tile geometry, K-splitting with guard-band awareness;
+//!   activation operands ([`tiler::ActOperand`]) are extracted per
+//!   tile on the worker — conv jobs carry a lazy im2col view
+//!   ([`crate::workload::conv::PatchSource`]) so the full patch
+//!   matrix is never materialized;
 //! * [`scheduler`] — aggregates per-tile cycle costs under a
 //!   weight-delivery policy: [`scheduler::PrefetchPolicy::PingPong`]
 //!   (the paper's in-DSP prefetch: next tile's weights stream during
@@ -33,10 +37,10 @@ pub mod scheduler;
 pub mod service;
 pub mod tiler;
 
-pub use completion::{CompletionTable, JobHandle, JobState};
-pub use job::{Batch, Job, JobId, JobResult, JobTracker};
+pub use completion::{CompletionTable, Drained, JobHandle, JobState};
+pub use job::{Batch, Job, JobId, JobResult, JobTracker, Reference};
 pub use metrics::Metrics;
 pub use pool::WorkPool;
 pub use scheduler::{PrefetchPolicy, ScheduleReport};
 pub use service::{Service, ServiceConfig};
-pub use tiler::{GemmTiler, Tile, TileCoord};
+pub use tiler::{ActOperand, GemmTiler, Tile, TileCoord};

@@ -15,17 +15,17 @@
 //! overlap generation, scheduling and retirement. Std threads keep the
 //! binary self-contained and offline.
 
-use super::completion::{CompletionTable, JobHandle, JobState};
-use super::job::{Batch, Completion, Job, JobId, JobResult, JobTracker};
+use super::completion::{CompletionTable, Drained, JobHandle, JobState};
+use super::job::{Batch, Completion, Job, JobId, JobResult, JobTracker, Reference};
 use super::metrics::Metrics;
 use super::pool::{Provenance, WorkPool};
 use super::scheduler::aggregate_tile_stats;
-use super::tiler::{GemmTiler, TileCoord};
+use super::tiler::{ActOperand, GemmTiler, TileCoord};
 use crate::engines::os::{OsConfig, OsEngine, OsVariant};
 use crate::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
 use crate::engines::ws::{WsConfig, WsEngine, WsVariant};
 use crate::engines::{Engine, EngineError, RunStats};
-use crate::workload::conv::{im2col, weights_to_gemm};
+use crate::workload::conv::{weights_to_gemm, ConvShapeError, PatchSource};
 use crate::workload::{MatI32, MatI8};
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -201,13 +201,15 @@ pub fn run_gemm_tiled(
     }
 }
 
-/// One streaming pass of a [`FillGroup`]: which job it belongs to,
-/// which output columns it covers, and its activation tile. The weight
-/// tile lives once on the group, not per pass.
+/// One streaming pass of a [`FillGroup`]: which job it belongs to and
+/// which tile coordinate it covers. The pass carries **no operand
+/// data** — the worker extracts the activation tile lazily from the
+/// job's [`ActOperand`] when the pass runs, so neither a large GEMM's
+/// tiles nor a conv's im2col patches ever sit materialized in the
+/// queue. The weight tile lives once on the group, not per pass.
 struct Pass {
     job: Arc<JobTracker>,
-    n0: usize,
-    a: MatI8,
+    coord: TileCoord,
 }
 
 /// Tiles — possibly of different jobs — that share one stationary
@@ -218,28 +220,93 @@ struct FillGroup {
     passes: Vec<Pass>,
 }
 
+/// Output-pixel rows per conv row block on internally-tiling engines:
+/// bounds the materialized patch slice to `CONV_ROW_BLOCK × K`
+/// elements per in-flight unit (and fans large convs out across the
+/// pool).
+const CONV_ROW_BLOCK: usize = 64;
+
+/// The row-block spans `(m0, m1)` for a conv job of `m` output pixels
+/// — the single source both the tracker's unit count and the pushed
+/// `RowBlock` units derive from, so the two can never fall out of
+/// sync. `m >= 1` for every validated shape, so the list is never
+/// empty.
+fn conv_row_blocks(m: usize) -> Vec<(usize, usize)> {
+    (0..m)
+        .step_by(CONV_ROW_BLOCK)
+        .map(|m0| (m0, (m0 + CONV_ROW_BLOCK).min(m)))
+        .collect()
+}
+
 /// One unit of work.
 enum WorkUnit {
     /// Fill-groups executed back to back on one engine (tiler path).
     Groups(Vec<FillGroup>),
     /// The whole job, for engines that tile internally.
     Whole(Arc<JobTracker>),
+    /// One row block of a conv job on an internally-tiling engine:
+    /// the worker materializes patch rows `m0..m1` from the raw input
+    /// and writes the disjoint output row span.
+    RowBlock {
+        job: Arc<JobTracker>,
+        m0: usize,
+        m1: usize,
+    },
     /// Degenerate zero-tile job: accounts one empty slot so the job
     /// assembles and reports.
     Empty(Arc<JobTracker>),
 }
 
-/// Lower a [`Job`] to its GEMM operands (conv via im2col).
-fn lower(job: Job) -> (MatI8, MatI8) {
-    match job {
-        Job::Gemm { a, w } => (a, w),
+/// Lower a [`Job`] to service operands: `(activation, weights,
+/// golden reference when verifying, true MACs)`. Conv stays **lazy** —
+/// the operand is a [`PatchSource`] view over the raw NCHW input; the
+/// full im2col matrix is never built, here or anywhere downstream. A
+/// degenerate conv shape (zero stride, kernel larger than the padded
+/// input, mis-sized buffers) is a typed error the submit path resolves
+/// as a `Failed` handle instead of letting it panic a worker. With
+/// `verify` off the reference is `None`, so a conv job does not drag a
+/// dead copy of its raw weights through its lifetime.
+#[allow(clippy::type_complexity)]
+fn lower(
+    job: Job,
+    verify: bool,
+) -> Result<(ActOperand, MatI8, Option<Reference>, u64), ConvShapeError> {
+    if let Job::Conv { shape, .. } = &job {
+        // Validated up front so `Job::macs` (which derives the conv
+        // output extent) is safe below.
+        shape.validate()?;
+    }
+    let macs = job.macs();
+    Ok(match job {
+        Job::Gemm { a, w } => (
+            ActOperand::Dense(a),
+            w,
+            verify.then_some(Reference::Gemm),
+            macs,
+        ),
+        Job::Snn { spikes, weights } => (
+            ActOperand::Dense(spikes),
+            weights,
+            verify.then_some(Reference::Gemm),
+            macs,
+        ),
         Job::Conv {
             input,
             weights,
             shape,
-        } => (im2col(&input, shape), weights_to_gemm(&weights, shape)),
-        Job::Snn { spikes, weights } => (spikes, weights),
-    }
+        } => {
+            if weights.len() != shape.weight_len() {
+                return Err(ConvShapeError::WeightLen {
+                    expected: shape.weight_len(),
+                    got: weights.len(),
+                });
+            }
+            let w = weights_to_gemm(&weights, shape);
+            let src = PatchSource::new(input, shape)?;
+            let reference = verify.then(|| Reference::ConvDirect { weights });
+            (ActOperand::Patches(src), w, reference, macs)
+        }
+    })
 }
 
 /// The running service.
@@ -268,12 +335,15 @@ impl Service {
             let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
                 let mut engine = cfg.build_engine();
+                let tiler = cfg.tiler();
                 let slow_mhz = engine.clock_plan().slow_mhz;
                 while let Some((unit, prov)) = pool.pop(wid) {
                     if prov == Provenance::Stolen {
                         metrics.steals.fetch_add(1, Ordering::Relaxed);
                     }
-                    for outcome in run_unit(engine.as_mut(), &unit, &metrics) {
+                    for outcome in
+                        run_unit(engine.as_mut(), tiler.as_ref(), &unit, &metrics)
+                    {
                         let id = outcome.job.id();
                         match outcome.job.complete_tiles(
                             outcome.done,
@@ -331,55 +401,88 @@ impl Service {
     /// arrival order with [`Service::wait_any`] / [`Service::drain`].
     pub fn submit_batch(&mut self, batch: Batch) -> Vec<JobHandle> {
         let jobs = batch.jobs;
-        let mut handles = Vec::with_capacity(jobs.len());
+        let total_jobs = jobs.len();
+        let mut handles = Vec::with_capacity(total_jobs);
 
         // Lower every job and create its tracker. Nothing is
-        // registered or enqueued until the whole batch validates, so a
-        // shape panic here cannot leave the completion table counting
-        // jobs that will never run.
-        let mut trackers: Vec<Arc<JobTracker>> = Vec::with_capacity(jobs.len());
+        // registered or enqueued until the whole batch lowers, and a
+        // malformed job — degenerate conv shape, mis-sized buffer,
+        // inner-dimension mismatch — never panics the submitter or a
+        // worker: it is collected here and resolves below as a
+        // `Failed` handle.
+        let mut trackers: Vec<Arc<JobTracker>> = Vec::with_capacity(total_jobs);
+        let mut rejected: Vec<JobId> = Vec::new();
         let tiler = self.tiler;
         for job in jobs {
             let id = JobId(self.next_id);
             self.next_id += 1;
             handles.push(JobHandle { id });
-            let macs = job.macs();
-            let (a, w) = lower(job);
-            let (total, sched_rows) = match &tiler {
-                Some(t) => {
-                    // Fail fast like the tiling path always has —
-                    // grouping uses a.cols as K, so a mismatch would
-                    // otherwise truncate or index out of bounds later.
-                    assert_eq!(a.cols, w.rows, "inner dimensions must agree");
-                    (t.tile_count(a.cols, w.cols).max(1), Some(t.rows))
+            let (a, w, reference, macs) = match lower(job, self.cfg.verify) {
+                Ok(lowered) => lowered,
+                Err(_) => {
+                    rejected.push(id);
+                    continue;
                 }
-                None => (1, None),
+            };
+            if a.cols() != w.rows {
+                // Inner-dimension mismatch: grouping uses the
+                // operand's K, so letting this through would truncate
+                // or index out of bounds later. Reject it like any
+                // other malformed job — uniformly across engine kinds
+                // — instead of panicking the submitting thread.
+                rejected.push(id);
+                continue;
+            }
+            let (total, sched_rows) = match &tiler {
+                Some(t) => (t.tile_count(a.cols(), w.cols).max(1), Some(t.rows)),
+                None => {
+                    // Internally-tiling engines take conv jobs as row
+                    // blocks (lazy patch extraction per block) and
+                    // everything else whole.
+                    let units = match &a {
+                        ActOperand::Patches(p) => {
+                            conv_row_blocks(p.rows()).len()
+                        }
+                        ActOperand::Dense(_) => 1,
+                    };
+                    (units, None)
+                }
             };
             trackers.push(Arc::new(JobTracker::new(
-                id,
-                a,
-                w,
-                macs,
-                total,
-                sched_rows,
-                self.cfg.verify,
+                id, a, w, reference, macs, total, sched_rows,
             )));
         }
 
-        // The batch is valid: account it and register completions
-        // before the first unit becomes visible to workers.
+        // The batch is lowered: account it and register completions
+        // before the first unit (or rejection) becomes visible.
         self.metrics
             .batches_submitted
             .fetch_add(1, Ordering::Relaxed);
         self.metrics
             .jobs_submitted
-            .fetch_add(trackers.len() as u64, Ordering::Relaxed);
-        self.completion.register(trackers.len());
+            .fetch_add(total_jobs as u64, Ordering::Relaxed);
+        self.completion.register(total_jobs);
+        for id in &rejected {
+            self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            self.completion.complete_failed(*id);
+        }
 
         let Some(tiler) = tiler else {
-            // Engines that tile internally take whole jobs.
             for tracker in trackers {
-                self.pool.push(WorkUnit::Whole(tracker));
+                if let ActOperand::Patches(p) = tracker.a_operand() {
+                    // Validation guarantees at least one output pixel,
+                    // so this pushes at least one block — exactly as
+                    // many as the tracker was created expecting.
+                    for (m0, m1) in conv_row_blocks(p.rows()) {
+                        self.pool.push(WorkUnit::RowBlock {
+                            job: Arc::clone(&tracker),
+                            m0,
+                            m1,
+                        });
+                    }
+                } else {
+                    self.pool.push(WorkUnit::Whole(tracker));
+                }
             }
             return handles;
         };
@@ -393,14 +496,14 @@ impl Service {
         let mut index: HashMap<(u64, TileCoord), Vec<usize>> = HashMap::new();
         let solo = trackers.len() == 1;
         for tracker in &trackers {
-            let (a, w) = (tracker.a(), tracker.w());
-            if tiler.tile_count(a.cols, w.cols) == 0 {
+            let (k_dim, w) = (tracker.a_operand().cols(), tracker.w());
+            if tiler.tile_count(k_dim, w.cols) == 0 {
                 // Degenerate zero-area job: one empty slot assembles it.
                 self.pool.push(WorkUnit::Empty(Arc::clone(tracker)));
                 continue;
             }
             let wfp = if solo { 0 } else { fingerprint(w) };
-            for coord in tiler.coords(a.cols, w.cols) {
+            for coord in tiler.coords(k_dim, w.cols) {
                 let w_tile = tiler.w_tile(w, coord);
                 let gi = if solo {
                     // Every coord of a single job is a fresh group.
@@ -426,8 +529,7 @@ impl Service {
                 };
                 groups[gi].passes.push(Pass {
                     job: Arc::clone(tracker),
-                    n0: coord.n0,
-                    a: tiler.a_tile(a, coord),
+                    coord,
                 });
             }
         }
@@ -474,8 +576,10 @@ impl Service {
     }
 
     /// Block until everything submitted has retired (or `timeout`) and
-    /// take all unclaimed results in completion order.
-    pub fn drain(&self, timeout: Duration) -> Vec<JobResult> {
+    /// take all unclaimed results in completion order, plus the ids of
+    /// unobserved failed jobs (cleared from the table — a drain-only
+    /// retirement loop leaks nothing).
+    pub fn drain(&self, timeout: Duration) -> Drained {
         self.completion.drain(timeout)
     }
 
@@ -534,15 +638,21 @@ struct UnitOutcome {
 }
 
 /// Execute one work unit on a worker's engine. Grouped units fill each
-/// stationary tile once and stream every pass against it; outcomes
-/// come back per job so multi-job units retire each job exactly once.
+/// stationary tile once and stream every pass against it — each pass's
+/// activation tile (a dense slice, or im2col patches for conv) is
+/// extracted **here**, on the worker, so peak operand memory is one
+/// tile per worker; outcomes come back per job so multi-job units
+/// retire each job exactly once.
 fn run_unit(
     engine: &mut dyn Engine,
+    tiler: Option<&GemmTiler>,
     unit: &WorkUnit,
     metrics: &Metrics,
 ) -> Vec<UnitOutcome> {
     match unit {
         WorkUnit::Groups(groups) => {
+            let tiler =
+                tiler.expect("grouped units only exist on tiler engines");
             let mut outcomes: Vec<UnitOutcome> = Vec::new();
             let slot = |outcomes: &mut Vec<UnitOutcome>,
                         job: &Arc<JobTracker>|
@@ -566,14 +676,15 @@ fn run_unit(
                     if pass.job.is_failed() {
                         continue; // job already poisoned; skip the work
                     }
+                    let a = tiler.a_tile_of(pass.job.a_operand(), pass.coord);
                     let run = if i == 0 {
-                        engine.run_gemm(&pass.a, &group.w)
+                        engine.run_gemm(&a, &group.w)
                     } else {
-                        engine.run_gemm_reuse(&pass.a, &group.w)
+                        engine.run_gemm_reuse(&a, &group.w)
                     };
                     match run {
                         Ok(run) => {
-                            pass.job.accumulate_cols(pass.n0, &run.output);
+                            pass.job.accumulate_cols(pass.coord.n0, &run.output);
                             metrics
                                 .tiles_executed
                                 .fetch_add(1, Ordering::Relaxed);
@@ -599,25 +710,63 @@ fn run_unit(
             }
             outcomes
         }
-        WorkUnit::Whole(job) => match engine.run_gemm(job.a(), job.w()) {
-            Ok(run) => {
-                job.set_output(run.output);
-                metrics.tiles_executed.fetch_add(1, Ordering::Relaxed);
+        WorkUnit::Whole(job) => {
+            let a = job
+                .a_operand()
+                .dense()
+                .expect("whole-job units carry dense operands");
+            match engine.run_gemm(a, job.w()) {
+                Ok(run) => {
+                    job.set_output(run.output);
+                    metrics.tiles_executed.fetch_add(1, Ordering::Relaxed);
+                    vec![UnitOutcome {
+                        job: Arc::clone(job),
+                        done: 1,
+                        stats: vec![run.stats],
+                    }]
+                }
+                Err(_) => {
+                    job.mark_failed();
+                    vec![UnitOutcome {
+                        job: Arc::clone(job),
+                        done: 1,
+                        stats: Vec::new(),
+                    }]
+                }
+            }
+        }
+        WorkUnit::RowBlock { job, m0, m1 } => {
+            let outcome = |stats: Vec<RunStats>| {
                 vec![UnitOutcome {
                     job: Arc::clone(job),
                     done: 1,
-                    stats: vec![run.stats],
+                    stats,
                 }]
+            };
+            if job.is_failed() {
+                // Another block already errored; account the slot so
+                // the job still assembles (as Failed).
+                return outcome(Vec::new());
             }
-            Err(_) => {
-                job.mark_failed();
-                vec![UnitOutcome {
-                    job: Arc::clone(job),
-                    done: 1,
-                    stats: Vec::new(),
-                }]
+            let src = job
+                .a_operand()
+                .patches()
+                .expect("row-block units carry patch operands");
+            // Lazy extraction: only this block's patch rows exist, and
+            // only while the unit runs.
+            let a = src.extract_rows(*m0, *m1);
+            match engine.run_gemm(&a, job.w()) {
+                Ok(run) => {
+                    job.write_rows(*m0, &run.output);
+                    metrics.tiles_executed.fetch_add(1, Ordering::Relaxed);
+                    outcome(vec![run.stats])
+                }
+                Err(_) => {
+                    job.mark_failed();
+                    outcome(Vec::new())
+                }
             }
-        },
+        }
         // Degenerate problems still account one slot so the tracker
         // assembles.
         WorkUnit::Empty(job) => vec![UnitOutcome {
@@ -705,6 +854,180 @@ mod tests {
             .recv_timeout(Duration::from_secs(30))
             .expect("conv completes");
         assert_eq!(r.verified, Some(true));
+        svc.shutdown();
+    }
+
+    /// Conv on a WS (tiler) engine: the lazy per-tile patch extraction
+    /// matches both the direct convolution (service-side `verified`)
+    /// and the eager im2col GEMM, tiles grouped like any GEMM.
+    #[test]
+    fn conv_on_tiler_engine_matches_eager_im2col() {
+        use crate::workload::conv::{conv2d_direct, im2col, weights_to_gemm};
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 2,
+            ws_rows: 6,
+            ws_cols: 5,
+            verify: true,
+            shard_width: 1,
+        });
+        let shape = ConvShape {
+            in_c: 3,
+            in_h: 7,
+            in_w: 5,
+            out_c: 6,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        };
+        let mut rng = XorShift::new(17);
+        let input: Vec<i8> =
+            (0..shape.input_len()).map(|_| rng.i8_in(-63, 63)).collect();
+        let weights: Vec<i8> = (0..shape.weight_len())
+            .map(|_| rng.i8_in(-63, 63))
+            .collect();
+        let h = svc.submit(Job::Conv {
+            input: input.clone(),
+            weights: weights.clone(),
+            shape,
+        });
+        let r = svc
+            .wait(h, Duration::from_secs(60))
+            .into_result()
+            .expect("conv completes");
+        assert_eq!(r.verified, Some(true));
+        let eager = golden_gemm(
+            &im2col(&input, shape),
+            &weights_to_gemm(&weights, shape),
+        );
+        assert_eq!(r.output, eager);
+        assert_eq!(r.output, conv2d_direct(&input, &weights, shape));
+        assert_eq!(r.stats.macs, shape.macs());
+        svc.shutdown();
+    }
+
+    /// A GEMM whose inner dimensions disagree resolves as `Failed`
+    /// uniformly — on tiler engines too, where it used to panic the
+    /// submitting thread.
+    #[test]
+    fn mismatched_gemm_resolves_failed_on_tiler_engines() {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 1,
+            ws_rows: 6,
+            ws_cols: 6,
+            verify: true,
+            shard_width: 1,
+        });
+        let h = svc.submit(Job::Gemm {
+            a: MatI8::zeros(4, 8),
+            w: MatI8::zeros(7, 2),
+        });
+        assert!(matches!(
+            svc.wait(h, Duration::from_secs(30)),
+            JobState::Failed
+        ));
+        // The service still serves valid jobs afterwards.
+        let mut rng = XorShift::new(51);
+        let a = MatI8::random_bounded(&mut rng, 3, 8, 63);
+        let w = MatI8::random(&mut rng, 8, 4);
+        let h = svc.submit(Job::Gemm { a, w });
+        let r = svc
+            .wait(h, Duration::from_secs(60))
+            .into_result()
+            .expect("valid job completes after a rejected one");
+        assert_eq!(r.verified, Some(true));
+        svc.shutdown();
+    }
+
+    /// Degenerate conv shapes resolve as `Failed` at submit — no
+    /// worker panic, no leaked completion state — and the service
+    /// keeps serving afterwards.
+    #[test]
+    fn invalid_conv_shapes_resolve_failed_without_poisoning() {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 1,
+            ws_rows: 6,
+            ws_cols: 6,
+            verify: true,
+            shard_width: 1,
+        });
+        let good = ConvShape {
+            in_c: 2,
+            in_h: 5,
+            in_w: 5,
+            out_c: 3,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let mut rng = XorShift::new(29);
+        let mk_job = |rng: &mut XorShift, shape: ConvShape| Job::Conv {
+            input: (0..shape.input_len()).map(|_| rng.i8_in(-63, 63)).collect(),
+            weights: (0..shape.weight_len())
+                .map(|_| rng.i8_in(-63, 63))
+                .collect(),
+            shape,
+        };
+        let zero_stride = ConvShape { stride: 0, ..good };
+        let oversize_k = ConvShape { k: 9, ..good };
+        let mut batch = Batch::new();
+        batch.push(Job::Conv {
+            input: vec![0; good.input_len()],
+            weights: vec![0; good.weight_len()],
+            shape: zero_stride,
+        });
+        batch.push(mk_job(&mut rng, good));
+        batch.push(Job::Conv {
+            input: vec![0; oversize_k.input_len()],
+            weights: vec![0; oversize_k.weight_len()],
+            shape: oversize_k,
+        });
+        batch.push(Job::Conv {
+            input: vec![0; 3], // wrong input length
+            weights: vec![0; good.weight_len()],
+            shape: good,
+        });
+        let handles = svc.submit_batch(batch);
+        assert_eq!(handles.len(), 4);
+        assert!(matches!(
+            svc.wait(handles[0], Duration::from_secs(30)),
+            JobState::Failed
+        ));
+        let ok = svc
+            .wait(handles[1], Duration::from_secs(60))
+            .into_result()
+            .expect("valid job completes");
+        assert_eq!(ok.verified, Some(true));
+        assert!(matches!(
+            svc.wait(handles[2], Duration::from_secs(30)),
+            JobState::Failed
+        ));
+        assert!(matches!(
+            svc.wait(handles[3], Duration::from_secs(30)),
+            JobState::Failed
+        ));
+        // Observing the failures consumed them — nothing leaks.
+        assert_eq!(svc.failed_count(), 0);
+        assert_eq!(svc.pending(), 0);
+        // The pool is not poisoned: a follow-up job still runs.
+        let h = svc.submit(mk_job(&mut rng, good));
+        let r = svc
+            .wait(h, Duration::from_secs(60))
+            .into_result()
+            .expect("service still serves after rejected jobs");
+        assert_eq!(r.verified, Some(true));
+        // Unobserved failures retire through drain, which clears them.
+        svc.submit(Job::Conv {
+            input: vec![0; good.input_len()],
+            weights: vec![0; good.weight_len()],
+            shape: zero_stride,
+        });
+        let drained = svc.drain(Duration::from_secs(30));
+        assert!(drained.completed.is_empty());
+        assert_eq!(drained.failed.len(), 1);
+        assert_eq!(svc.failed_count(), 0);
         svc.shutdown();
     }
 
@@ -849,7 +1172,7 @@ mod tests {
             .collect();
         let handles = svc.submit_batch(batch);
         assert_eq!(handles.len(), acts.len());
-        let results = svc.drain(Duration::from_secs(120));
+        let results = svc.drain(Duration::from_secs(120)).completed;
         assert_eq!(results.len(), acts.len());
         let mut batched_cycles = 0u64;
         for r in &results {
@@ -873,7 +1196,8 @@ mod tests {
                 w: w.clone(),
             });
         }
-        let single: Vec<JobResult> = svc.drain(Duration::from_secs(120));
+        let single: Vec<JobResult> =
+            svc.drain(Duration::from_secs(120)).completed;
         let single_cycles: u64 =
             single.iter().map(|r| r.stats.cycles).sum();
         assert_eq!(
@@ -918,7 +1242,7 @@ mod tests {
         // Taken: redeeming again reports Pending-but-gone.
         assert!(matches!(svc.poll(handles[2]), JobState::Pending));
         // Drain retires the remaining two.
-        let rest = svc.drain(Duration::from_secs(60));
+        let rest = svc.drain(Duration::from_secs(60)).completed;
         assert_eq!(rest.len(), 2);
         assert_eq!(svc.pending(), 0);
         svc.shutdown();
@@ -946,7 +1270,7 @@ mod tests {
             .collect();
         let handles = svc.submit_batch(batch);
         assert_eq!(handles.len(), 3);
-        let results = svc.drain(Duration::from_secs(120));
+        let results = svc.drain(Duration::from_secs(120)).completed;
         assert_eq!(results.len(), 3);
         for r in &results {
             assert_eq!(r.verified, Some(true));

@@ -11,7 +11,54 @@
 //! * **padding** — ragged edges pad with zeros (zero products cannot
 //!   perturb packed lanes).
 
+use crate::workload::conv::PatchSource;
 use crate::workload::{MatI32, MatI8};
+
+/// The activation operand a job executes against: either a dense
+/// matrix (GEMM / SNN spike trains) or a lazy im2col view over a raw
+/// conv input ([`PatchSource`]) that materializes per tile. Workers
+/// extract the activation tile for one coordinate on demand
+/// ([`GemmTiler::a_tile_of`]), so neither form is ever copied whole
+/// into the work queue — and the conv patch matrix is never built.
+#[derive(Debug, Clone)]
+pub enum ActOperand {
+    Dense(MatI8),
+    Patches(PatchSource),
+}
+
+impl ActOperand {
+    /// Problem rows (M).
+    pub fn rows(&self) -> usize {
+        match self {
+            ActOperand::Dense(m) => m.rows,
+            ActOperand::Patches(p) => p.rows(),
+        }
+    }
+
+    /// Problem inner dimension (K).
+    pub fn cols(&self) -> usize {
+        match self {
+            ActOperand::Dense(m) => m.cols,
+            ActOperand::Patches(p) => p.cols(),
+        }
+    }
+
+    /// The dense matrix, when this operand is one.
+    pub fn dense(&self) -> Option<&MatI8> {
+        match self {
+            ActOperand::Dense(m) => Some(m),
+            ActOperand::Patches(_) => None,
+        }
+    }
+
+    /// The lazy conv view, when this operand is one.
+    pub fn patches(&self) -> Option<&PatchSource> {
+        match self {
+            ActOperand::Dense(_) => None,
+            ActOperand::Patches(p) => Some(p),
+        }
+    }
+}
 
 /// The (K, N) span one stationary tile covers — the cheap, data-free
 /// half of a [`Tile`]. Coordinates are what batched submission groups
@@ -103,6 +150,19 @@ impl GemmTiler {
         t
     }
 
+    /// Extract the padded activation tile for one coord from either
+    /// operand form — the worker-side lazy extraction. Dense operands
+    /// slice-copy ([`GemmTiler::a_tile`]); conv operands materialize
+    /// their im2col patch columns directly from the raw input
+    /// ([`PatchSource::extract_cols`]), zero-padding aware on both the
+    /// spatial border and the tile tail.
+    pub fn a_tile_of(&self, a: &ActOperand, c: TileCoord) -> MatI8 {
+        match a {
+            ActOperand::Dense(m) => self.a_tile(m, c),
+            ActOperand::Patches(p) => p.extract_cols(c.k0, c.k1, self.rows),
+        }
+    }
+
     /// Extract the padded weight tile for one coord (rows × (n1-n0)).
     /// K-padding rows stay zero (zero products cannot perturb packed
     /// lanes).
@@ -152,7 +212,7 @@ impl GemmTiler {
 mod tests {
     use super::*;
     use crate::util::rng::XorShift;
-    use crate::workload::gemm::{golden_gemm, GemmProblem};
+    use crate::workload::gemm::golden_gemm;
 
     /// Tiling + golden per-tile GEMM + accumulation == full golden GEMM.
     #[test]
@@ -230,6 +290,39 @@ mod tests {
         assert_eq!(tiles.len(), coords.len());
         for (t, c) in tiles.iter().zip(&coords) {
             assert_eq!((t.k0, t.k1, t.n0, t.n1), (c.k0, c.k1, c.n0, c.n1));
+        }
+    }
+
+    /// The lazy conv extraction through `a_tile_of` is bit-identical
+    /// to slicing the eagerly materialized im2col matrix.
+    #[test]
+    fn conv_patch_tiles_match_eager_im2col_tiles() {
+        use crate::workload::conv::{im2col, ConvShape, PatchSource};
+        let shape = ConvShape {
+            in_c: 3,
+            in_h: 6,
+            in_w: 5,
+            out_c: 4,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        };
+        let mut rng = XorShift::new(12);
+        let input = rng.i8_vec(shape.input_len());
+        let eager = im2col(&input, shape);
+        let src = PatchSource::new(input, shape).unwrap();
+        let lazy = ActOperand::Patches(src);
+        assert_eq!(lazy.rows(), eager.rows);
+        assert_eq!(lazy.cols(), eager.cols);
+        for (rows, cols) in [(4, 3), (14, 14), (7, 2)] {
+            let tiler = GemmTiler::new(rows, cols);
+            for c in tiler.coords(eager.cols, shape.out_c) {
+                assert_eq!(
+                    tiler.a_tile_of(&lazy, c),
+                    tiler.a_tile(&eager, c),
+                    "{c:?} r{rows} c{cols}"
+                );
+            }
         }
     }
 

@@ -44,6 +44,35 @@ pub struct RunStats {
 }
 
 impl RunStats {
+    /// Field-wise sum of two runs' counters — the aggregation for
+    /// back-to-back runs with no shared scheduling (e.g. conv row
+    /// blocks). Exhaustive destructuring makes adding a `RunStats`
+    /// field a compile error here instead of a silently-dropped
+    /// counter.
+    pub fn merged_with(self, other: &RunStats) -> RunStats {
+        let RunStats {
+            cycles,
+            fast_cycles,
+            macs,
+            weight_stall_cycles,
+            weight_loads,
+            guard_overflows,
+            fills_avoided,
+            fill_cycles_saved,
+        } = self;
+        RunStats {
+            cycles: cycles + other.cycles,
+            fast_cycles: fast_cycles + other.fast_cycles,
+            macs: macs + other.macs,
+            weight_stall_cycles: weight_stall_cycles
+                + other.weight_stall_cycles,
+            weight_loads: weight_loads + other.weight_loads,
+            guard_overflows: guard_overflows + other.guard_overflows,
+            fills_avoided: fills_avoided + other.fills_avoided,
+            fill_cycles_saved: fill_cycles_saved + other.fill_cycles_saved,
+        }
+    }
+
     /// Achieved MACs per slow cycle divided by the given peak.
     pub fn utilization(&self, peak_macs_per_cycle: u64) -> f64 {
         if self.cycles == 0 || peak_macs_per_cycle == 0 {

@@ -4,18 +4,29 @@
 //! dsp48-systolic report --table all           # Tables I / II / III
 //! dsp48-systolic simulate --engine ws-dsp-fetch --m 64 --k 14 --n 14
 //! dsp48-systolic simulate --m 512 --k 512 --n 512 --workers 4
+//! dsp48-systolic simulate --workload conv --in-c 8 --in-h 12 --in-w 12 \
+//!     --out-c 16 --kernel 3 --stride 1 --pad 1
 //! dsp48-systolic serve --jobs 16 --workers 2 --engine ws-dsp-fetch
 //! dsp48-systolic serve --jobs 1 --workers 4 --m 512 --k 512 --n 512
 //! dsp48-systolic serve --jobs 32 --batch 8   # shared-weight batches
+//! dsp48-systolic serve --workload conv --jobs 8 --batch 4  # conv traffic
 //! dsp48-systolic sweep --min 6 --max 14       # tinyTPU-style size sweep
 //! dsp48-systolic waveform --fig 3|5|6         # paper waveform traces
 //! dsp48-systolic artifacts                    # list AOT registry
 //! ```
 //!
-//! Unknown `--flags` are usage errors (exit 2), never silently ignored.
+//! Conv jobs run the **lazy tiling** path: workers extract im2col
+//! patches per tile from the raw NCHW input, and `--verify`
+//! cross-checks against the direct convolution. On SNN engines the
+//! generator emits binary spike inputs and the conv shape must keep
+//! `kernel² × in-c` equal to the 32-wide crossbar (the defaults do).
+//!
+//! Unknown `--flags` are usage errors (exit 2), never silently
+//! ignored — and so are workload-exclusive flags under the wrong
+//! workload (`--kernel` without `--workload conv`, `--m` with it).
 
 use dsp48_systolic::coordinator::service::{run_gemm_tiled, EngineKind};
-use dsp48_systolic::coordinator::{Batch, Job, Service, ServiceConfig};
+use dsp48_systolic::coordinator::{Batch, Job, JobState, Service, ServiceConfig};
 use dsp48_systolic::cost::report::{render_table, render_breakdown};
 use dsp48_systolic::engines::os::{OsConfig, OsEngine, OsVariant};
 use dsp48_systolic::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
@@ -23,6 +34,7 @@ use dsp48_systolic::engines::ws::{WsConfig, WsEngine, WsVariant};
 use dsp48_systolic::engines::Engine;
 use dsp48_systolic::runtime::ArtifactRegistry;
 use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::conv::ConvShape;
 use dsp48_systolic::workload::gemm::golden_gemm;
 use dsp48_systolic::workload::MatI8;
 use std::collections::HashMap;
@@ -61,9 +73,17 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
         "report" => &["table"],
         "simulate" => &[
             "engine",
+            "workload",
             "m",
             "k",
             "n",
+            "in-c",
+            "in-h",
+            "in-w",
+            "out-c",
+            "kernel",
+            "stride",
+            "pad",
             "seed",
             "rows",
             "cols",
@@ -73,6 +93,7 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
         "serve" => &[
             "config",
             "engine",
+            "workload",
             "workers",
             "jobs",
             "batch",
@@ -81,6 +102,13 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "m",
             "k",
             "n",
+            "in-c",
+            "in-h",
+            "in-w",
+            "out-c",
+            "kernel",
+            "stride",
+            "pad",
             "shard-width",
             "verify",
         ],
@@ -153,6 +181,112 @@ fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usi
         .get(key)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// SNN crossbars consume fixed-width binary patch rows.
+fn is_snn(kind: EngineKind) -> bool {
+    matches!(kind, EngineKind::SnnFireFly | EngineKind::SnnEnhanced)
+}
+
+/// Flags that only apply to one workload are usage errors under the
+/// other — same contract as unknown flags: never silently ignored.
+fn check_workload_flags(
+    flags: &HashMap<String, String>,
+    workload: &str,
+) -> Result<(), String> {
+    const CONV_ONLY: [&str; 7] =
+        ["in-c", "in-h", "in-w", "out-c", "kernel", "stride", "pad"];
+    const GEMM_ONLY: [&str; 3] = ["m", "k", "n"];
+    let (exclusive, needed): (&[&str], &str) = if workload == "conv" {
+        (&GEMM_ONLY, "gemm")
+    } else {
+        (&CONV_ONLY, "conv")
+    };
+    let offending: Vec<String> = exclusive
+        .iter()
+        .filter(|f| flags.contains_key(**f))
+        .map(|f| format!("--{f}"))
+        .collect();
+    if offending.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "flag(s) {} only apply to `--workload {needed}` \
+             (current workload: {workload})",
+            offending.join(", ")
+        ))
+    }
+}
+
+/// Resolve `--workload` for a serving command: `Ok(None)` = gemm,
+/// `Ok(Some(shape))` = validated conv shape, `Err(msg)` = usage error
+/// (unknown workload, cross-workload flags, invalid shape) — one
+/// dispatch shared by `simulate` and `serve` so the two cannot drift.
+fn resolve_workload(
+    flags: &HashMap<String, String>,
+    kind: EngineKind,
+) -> Result<Option<ConvShape>, String> {
+    let workload = flags.get("workload").map(String::as_str).unwrap_or("gemm");
+    check_workload_flags(flags, workload)?;
+    match workload {
+        "gemm" => Ok(None),
+        "conv" => {
+            let shape = conv_shape_from_flags(flags, kind);
+            shape
+                .validate()
+                .map_err(|e| format!("invalid conv shape: {e}"))?;
+            Ok(Some(shape))
+        }
+        other => Err(format!("unknown workload `{other}` (have gemm, conv)")),
+    }
+}
+
+/// Conv shape from `--in-c/--in-h/--in-w/--out-c/--kernel/--stride/--pad`.
+/// Defaults are engine-aware: SNN engines get a 1×1 kernel over 32
+/// channels so `k·k·in_c` matches the 32-pre crossbar geometry; every
+/// other engine gets a ResNet-ish 3×3 s1p1 block.
+fn conv_shape_from_flags(
+    flags: &HashMap<String, String>,
+    kind: EngineKind,
+) -> ConvShape {
+    let (d_in_c, d_k, d_pad) = if is_snn(kind) { (32, 1, 0) } else { (8, 3, 1) };
+    ConvShape {
+        in_c: flag_usize(flags, "in-c", d_in_c),
+        in_h: flag_usize(flags, "in-h", 12),
+        in_w: flag_usize(flags, "in-w", 12),
+        out_c: flag_usize(flags, "out-c", 16),
+        k: flag_usize(flags, "kernel", d_k),
+        stride: flag_usize(flags, "stride", 1),
+        pad: flag_usize(flags, "pad", d_pad),
+    }
+}
+
+/// One conv job: bounded-magnitude activations (binary spikes on SNN
+/// engines) against the given shared weight buffer.
+fn conv_job(
+    rng: &mut XorShift,
+    shape: ConvShape,
+    weights: &[i8],
+    snn: bool,
+) -> Job {
+    let input: Vec<i8> = if snn {
+        (0..shape.input_len())
+            .map(|_| rng.chance(1, 3) as i8)
+            .collect()
+    } else {
+        (0..shape.input_len()).map(|_| rng.i8_in(-63, 63)).collect()
+    };
+    Job::Conv {
+        input,
+        weights: weights.to_vec(),
+        shape,
+    }
+}
+
+/// Conv weights bounded to ±63 — keeps every engine's packed lanes
+/// exact (the SNN 12-bit lanes are the tightest).
+fn conv_weights(rng: &mut XorShift, shape: ConvShape) -> Vec<i8> {
+    (0..shape.weight_len()).map(|_| rng.i8_in(-63, 63)).collect()
 }
 
 fn cmd_report(flags: &HashMap<String, String>) -> i32 {
@@ -272,6 +406,14 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
         verify: true,
         shard_width: flag_usize(flags, "shard-width", 1),
     };
+    match resolve_workload(flags, kind) {
+        Ok(None) => {}
+        Ok(Some(shape)) => return cmd_simulate_conv(cfg, shape, seed),
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    }
     let mut rng = XorShift::new(seed);
     let a = MatI8::random_bounded(&mut rng, m, k, 63);
     let w = MatI8::random(&mut rng, k, n);
@@ -352,6 +494,71 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
     }
 }
 
+/// `simulate --workload conv`: one conv job through the service's
+/// lazy tiling path (per-tile im2col patch extraction on the workers),
+/// verified against the direct convolution. `shape` arrives validated
+/// from [`resolve_workload`].
+fn cmd_simulate_conv(cfg: ServiceConfig, shape: ConvShape, seed: u64) -> i32 {
+    let snn = is_snn(cfg.kind);
+    let mut rng = XorShift::new(seed);
+    let weights = conv_weights(&mut rng, shape);
+    let job = conv_job(&mut rng, shape, &weights, snn);
+    let (m, k, n) = shape.gemm_dims();
+    let mut svc = Service::start(cfg.clone());
+    let handle = svc.submit(job);
+    let state = svc.wait(handle, Duration::from_secs(600));
+    let code = match state {
+        JobState::Done(r) => {
+            let ok = r.verified == Some(true);
+            println!(
+                "engine    : {} x{} workers ({})",
+                cfg.kind.label(),
+                cfg.workers,
+                if cfg.tiler().is_some() {
+                    "lazy conv tiles, per-tile patch extraction"
+                } else {
+                    "conv row blocks, per-block patch extraction"
+                }
+            );
+            println!(
+                "conv      : {}x{}x{} -> {}x{}x{} (k{} s{} p{})",
+                shape.in_c,
+                shape.in_h,
+                shape.in_w,
+                shape.out_c,
+                shape.out_h(),
+                shape.out_w(),
+                shape.k,
+                shape.stride,
+                shape.pad
+            );
+            println!("im2col    : {m}x{k} @ {k}x{n} ({} MACs, never materialized)", r.stats.macs);
+            println!("cycles    : {} slow (aggregated)", r.stats.cycles);
+            println!("macs/cyc  : {:.1}", r.stats.macs_per_cycle());
+            println!("wall      : {:?} ({:?} simulated)", r.wall, r.simulated);
+            println!(
+                "verified  : {}",
+                if ok {
+                    "bit-exact vs conv2d_direct"
+                } else {
+                    "MISMATCH"
+                }
+            );
+            i32::from(!ok)
+        }
+        JobState::Failed => {
+            eprintln!("conv job failed (engine error — shape vs geometry?)");
+            1
+        }
+        JobState::Pending => {
+            eprintln!("simulate failed: conv job timed out");
+            1
+        }
+    };
+    svc.shutdown();
+    code
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let cfg = if let Some(path) = flags.get("config") {
         let text = match std::fs::read_to_string(path) {
@@ -390,18 +597,45 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         flag_usize(flags, "k", 28),
         flag_usize(flags, "n", 28),
     );
-    println!(
-        "serving {} {}x{}x{} jobs on {} x {} workers \
-         (shard width {}, batches of {} sharing weights)",
-        jobs,
-        m,
-        k,
-        n,
-        cfg.kind.label(),
-        cfg.workers,
-        cfg.shard_width,
-        batch
-    );
+    let conv_shape = match resolve_workload(flags, cfg.kind) {
+        Ok(cs) => cs,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    match conv_shape {
+        Some(s) => println!(
+            "serving {} conv {}x{}x{} k{} s{} p{} -> {} ch jobs on {} x {} \
+             workers (shard width {}, batches of {} sharing weights, \
+             lazy im2col tiling)",
+            jobs,
+            s.in_c,
+            s.in_h,
+            s.in_w,
+            s.k,
+            s.stride,
+            s.pad,
+            s.out_c,
+            cfg.kind.label(),
+            cfg.workers,
+            cfg.shard_width,
+            batch
+        ),
+        None => println!(
+            "serving {} {}x{}x{} jobs on {} x {} workers \
+             (shard width {}, batches of {} sharing weights)",
+            jobs,
+            m,
+            k,
+            n,
+            cfg.kind.label(),
+            cfg.workers,
+            cfg.shard_width,
+            batch
+        ),
+    }
+    let snn = is_snn(cfg.kind);
     let mut svc = Service::start(cfg);
     let mut rng = XorShift::new(7);
     // Non-blocking front-end: generation, scheduling and retirement
@@ -419,16 +653,26 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         while submitted < jobs
             && submitted - retired - failed_seen < max_inflight
         {
-            // One weight matrix per batch (the one-model-many-users
+            // One weight set per batch (the one-model-many-users
             // pattern); activations vary per job.
             let size = batch.min(jobs - submitted);
-            let w = MatI8::random(&mut rng, k, n);
             let mut b = Batch::new();
-            for _ in 0..size {
-                b.push(Job::Gemm {
-                    a: MatI8::random_bounded(&mut rng, m, k, 63),
-                    w: w.clone(),
-                });
+            match conv_shape {
+                Some(shape) => {
+                    let weights = conv_weights(&mut rng, shape);
+                    for _ in 0..size {
+                        b.push(conv_job(&mut rng, shape, &weights, snn));
+                    }
+                }
+                None => {
+                    let w = MatI8::random(&mut rng, k, n);
+                    for _ in 0..size {
+                        b.push(Job::Gemm {
+                            a: MatI8::random_bounded(&mut rng, m, k, 63),
+                            w: w.clone(),
+                        });
+                    }
+                }
             }
             svc.submit_batch(b);
             submitted += size;
@@ -443,16 +687,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 }
             }
             None => {
-                failed_seen = svc.failed_count();
-                if retired + failed_seen >= jobs {
-                    break;
-                }
                 if std::time::Instant::now() >= deadline {
                     eprintln!("timeout waiting for jobs");
                     break;
                 }
             }
         }
+        // Refresh the failure count every iteration — not just on the
+        // timeout arm — so a failed job shrinks the inflight window
+        // immediately instead of running it stale for up to 200 ms
+        // per completion.
+        failed_seen = svc.failed_count();
     }
     let engine_failures = svc.failed_count();
     let unretired = jobs.saturating_sub(retired + engine_failures);
@@ -617,8 +862,14 @@ mod tests {
         for argv in [
             vec!["report", "--table", "2"],
             vec!["simulate", "--workers", "4", "--shard-width", "2"],
+            vec![
+                "simulate", "--workload", "conv", "--in-c", "8", "--in-h",
+                "12", "--in-w", "12", "--out-c", "16", "--kernel", "3",
+                "--stride", "1", "--pad", "1",
+            ],
             vec!["serve", "--m", "512", "--k", "512", "--n", "512"],
             vec!["serve", "--jobs", "32", "--batch", "8"],
+            vec!["serve", "--workload", "conv", "--kernel", "3", "--pad", "1"],
             vec!["sweep", "--min", "6"],
             vec!["waveform", "--fig", "5"],
             vec!["artifacts"],
@@ -629,6 +880,74 @@ mod tests {
                 "{argv:?}"
             );
         }
+    }
+
+    #[test]
+    fn conv_flags_rejected_on_non_serving_commands() {
+        let (_, flags) = parse_args(&args(&["sweep", "--kernel", "3"]));
+        assert!(validate_flags("sweep", &flags).is_err());
+    }
+
+    /// Workload-exclusive flags are usage errors under the other
+    /// workload — never silently ignored (e.g. a forgotten
+    /// `--workload conv` must not run a default GEMM).
+    #[test]
+    fn workload_exclusive_flags_never_silently_ignored() {
+        let (_, flags) = parse_args(&args(&["serve", "--kernel", "5"]));
+        let err = check_workload_flags(&flags, "gemm").unwrap_err();
+        assert!(err.contains("--kernel"), "{err}");
+        assert!(err.contains("--workload conv"), "{err}");
+
+        let (_, flags) =
+            parse_args(&args(&["serve", "--workload", "conv", "--m", "64"]));
+        let err = check_workload_flags(&flags, "conv").unwrap_err();
+        assert!(err.contains("--m"), "{err}");
+
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "conv", "--kernel", "3", "--jobs", "4",
+        ]));
+        assert!(check_workload_flags(&flags, "conv").is_ok());
+        let (_, flags) = parse_args(&args(&["serve", "--m", "64", "--jobs", "4"]));
+        assert!(check_workload_flags(&flags, "gemm").is_ok());
+    }
+
+    #[test]
+    fn resolve_workload_dispatches_and_validates() {
+        let (_, flags) = parse_args(&args(&["serve"]));
+        assert!(matches!(
+            resolve_workload(&flags, EngineKind::WsDspFetch),
+            Ok(None)
+        ));
+        let (_, flags) = parse_args(&args(&["serve", "--workload", "conv"]));
+        assert!(matches!(
+            resolve_workload(&flags, EngineKind::WsDspFetch),
+            Ok(Some(_))
+        ));
+        let (_, flags) =
+            parse_args(&args(&["serve", "--workload", "conv", "--stride", "0"]));
+        let err = resolve_workload(&flags, EngineKind::WsDspFetch).unwrap_err();
+        assert!(err.contains("invalid conv shape"), "{err}");
+        let (_, flags) = parse_args(&args(&["serve", "--workload", "quantum"]));
+        assert!(resolve_workload(&flags, EngineKind::WsDspFetch).is_err());
+    }
+
+    #[test]
+    fn conv_shape_defaults_are_engine_aware() {
+        let (_, flags) = parse_args(&args(&["serve", "--workload", "conv"]));
+        // SNN defaults keep k*k*in_c equal to the 32-pre crossbar.
+        let snn = conv_shape_from_flags(&flags, EngineKind::SnnFireFly);
+        assert_eq!(snn.k * snn.k * snn.in_c, 32);
+        assert_eq!(snn.validate(), Ok(()));
+        // Dense-engine defaults are a valid 3x3 s1p1 block.
+        let ws = conv_shape_from_flags(&flags, EngineKind::WsDspFetch);
+        assert_eq!((ws.k, ws.stride, ws.pad), (3, 1, 1));
+        assert_eq!(ws.validate(), Ok(()));
+        // Explicit flags override the defaults.
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "conv", "--kernel", "5", "--in-c", "4",
+        ]));
+        let custom = conv_shape_from_flags(&flags, EngineKind::WsDspFetch);
+        assert_eq!((custom.k, custom.in_c), (5, 4));
     }
 
     #[test]

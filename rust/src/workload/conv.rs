@@ -4,6 +4,18 @@
 //! (kernel_h × kernel_w × in_channels) patches with pixel/channel
 //! parallelism; functionally that is exactly an im2col GEMM, which is
 //! how the coordinator maps Conv jobs onto any matrix engine.
+//!
+//! Two lowering forms live here:
+//!
+//! * [`im2col`] — the **eager** reference: materializes the whole
+//!   `(out_h·out_w) × (k·k·in_c)` patch matrix at once (an O(k²)
+//!   memory blow-up over the raw input). Tests and golden comparisons
+//!   use it; the service does not.
+//! * [`PatchSource`] — the **lazy** view the coordinator executes
+//!   against: it holds only the raw NCHW input and materializes the
+//!   patch tile for one K-column span (or one row block) on demand,
+//!   so peak operand memory stays per-tile no matter how large the
+//!   conv is. Property tests pin the two forms bit-identical.
 
 use super::gemm::{MatI32, MatI8};
 
@@ -19,13 +31,151 @@ pub struct ConvShape {
     pub pad: usize,
 }
 
+/// Why a [`ConvShape`] (or a conv job's operand buffers) cannot be
+/// lowered. Returned by [`ConvShape::validate`] / [`PatchSource::new`]
+/// so the service resolves a bad submission as `Failed` instead of
+/// panicking inside a worker thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvShapeError {
+    /// `stride == 0` never advances the kernel window.
+    ZeroStride,
+    /// A channel/spatial/kernel dimension is zero.
+    ZeroDim(&'static str),
+    /// The kernel exceeds the padded input extent, so the output
+    /// dimensions would underflow.
+    KernelExceedsInput {
+        k: usize,
+        padded_h: usize,
+        padded_w: usize,
+    },
+    /// Input buffer length disagrees with `in_c * in_h * in_w`.
+    InputLen { expected: usize, got: usize },
+    /// Weight buffer length disagrees with `out_c * in_c * k * k`.
+    WeightLen { expected: usize, got: usize },
+    /// A derived size (buffer length, patch-matrix extent, MAC count)
+    /// overflows `usize`.
+    TooLarge,
+}
+
+impl std::fmt::Display for ConvShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConvShapeError::ZeroStride => write!(f, "stride must be > 0"),
+            ConvShapeError::ZeroDim(name) => {
+                write!(f, "dimension `{name}` must be > 0")
+            }
+            ConvShapeError::KernelExceedsInput {
+                k,
+                padded_h,
+                padded_w,
+            } => write!(
+                f,
+                "kernel {k} exceeds padded input {padded_h}x{padded_w}"
+            ),
+            ConvShapeError::InputLen { expected, got } => {
+                write!(f, "input has {got} elements, shape needs {expected}")
+            }
+            ConvShapeError::WeightLen { expected, got } => {
+                write!(f, "weights have {got} elements, shape needs {expected}")
+            }
+            ConvShapeError::TooLarge => {
+                write!(f, "shape dimensions overflow the address space")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConvShapeError {}
+
 impl ConvShape {
+    /// Output height if the shape is well-formed (`None` when the
+    /// kernel underflows the padded extent or `stride == 0`).
+    pub fn checked_out_h(&self) -> Option<usize> {
+        if self.stride == 0 {
+            return None;
+        }
+        let padded = self.in_h.checked_add(self.pad.checked_mul(2)?)?;
+        padded.checked_sub(self.k).map(|d| d / self.stride + 1)
+    }
+
+    /// Output width, checked like [`ConvShape::checked_out_h`].
+    pub fn checked_out_w(&self) -> Option<usize> {
+        if self.stride == 0 {
+            return None;
+        }
+        let padded = self.in_w.checked_add(self.pad.checked_mul(2)?)?;
+        padded.checked_sub(self.k).map(|d| d / self.stride + 1)
+    }
+
     pub fn out_h(&self) -> usize {
-        (self.in_h + 2 * self.pad - self.k) / self.stride + 1
+        self.checked_out_h()
+            .expect("invalid ConvShape (ConvShape::validate rejects it)")
     }
+
     pub fn out_w(&self) -> usize {
-        (self.in_w + 2 * self.pad - self.k) / self.stride + 1
+        self.checked_out_w()
+            .expect("invalid ConvShape (ConvShape::validate rejects it)")
     }
+
+    /// Reject shapes the arithmetic above cannot serve: zero stride
+    /// (the window never advances), zero dimensions, and kernels larger
+    /// than the padded input (output dims would underflow). The service
+    /// calls this at submit so a bad shape resolves the job handle as
+    /// `Failed` instead of panicking in a worker.
+    pub fn validate(&self) -> Result<(), ConvShapeError> {
+        if self.stride == 0 {
+            return Err(ConvShapeError::ZeroStride);
+        }
+        for (name, v) in [
+            ("in_c", self.in_c),
+            ("in_h", self.in_h),
+            ("in_w", self.in_w),
+            ("out_c", self.out_c),
+            ("k", self.k),
+        ] {
+            if v == 0 {
+                return Err(ConvShapeError::ZeroDim(name));
+            }
+        }
+        if self.checked_out_h().is_none() || self.checked_out_w().is_none() {
+            let pad2 = self.pad.saturating_mul(2);
+            return Err(ConvShapeError::KernelExceedsInput {
+                k: self.k,
+                padded_h: self.in_h.saturating_add(pad2),
+                padded_w: self.in_w.saturating_add(pad2),
+            });
+        }
+        // Every derived size downstream (buffer lengths, the patch
+        // matrix extent, the MAC count) must fit in usize, or the
+        // plain multiplications in input_len/weight_len/macs would
+        // re-open the overflow-panic path this validation closes.
+        let sizes_fit = (|| {
+            let plane = self.in_h.checked_mul(self.in_w)?;
+            plane.checked_mul(self.in_c)?;
+            let kdim = self
+                .k
+                .checked_mul(self.k)?
+                .checked_mul(self.in_c)?;
+            kdim.checked_mul(self.out_c)?;
+            let m = self.checked_out_h()?.checked_mul(self.checked_out_w()?)?;
+            m.checked_mul(kdim)?.checked_mul(self.out_c)
+        })();
+        if sizes_fit.is_none() {
+            return Err(ConvShapeError::TooLarge);
+        }
+        Ok(())
+    }
+
+    /// Elements a conforming NCHW input buffer must hold.
+    pub fn input_len(&self) -> usize {
+        self.in_c * self.in_h * self.in_w
+    }
+
+    /// Elements a conforming (out_c, in_c, k, k) weight buffer must hold.
+    pub fn weight_len(&self) -> usize {
+        self.out_c * self.in_c * self.k * self.k
+    }
+
     /// GEMM dimensions after im2col: (M, K, N).
     pub fn gemm_dims(&self) -> (usize, usize, usize) {
         (
@@ -34,6 +184,7 @@ impl ConvShape {
             self.out_c,
         )
     }
+
     pub fn macs(&self) -> u64 {
         let (m, k, n) = self.gemm_dims();
         (m * k * n) as u64
@@ -41,9 +192,10 @@ impl ConvShape {
 }
 
 /// im2col: input (C, H, W) flattened row-major -> patch matrix
-/// (out_h*out_w, k*k*in_c). Zero padding.
+/// (out_h*out_w, k*k*in_c). Zero padding. This is the eager reference
+/// the lazy [`PatchSource`] is property-tested against.
 pub fn im2col(input: &[i8], shape: ConvShape) -> MatI8 {
-    assert_eq!(input.len(), shape.in_c * shape.in_h * shape.in_w);
+    assert_eq!(input.len(), shape.input_len());
     let (m, kdim, _) = shape.gemm_dims();
     let mut out = MatI8::zeros(m, kdim);
     let (oh, ow) = (shape.out_h(), shape.out_w());
@@ -77,10 +229,166 @@ pub fn im2col(input: &[i8], shape: ConvShape) -> MatI8 {
     out
 }
 
+/// A lazily-tiled im2col view over a raw NCHW input.
+///
+/// Holds only the input buffer (O(C·H·W)); the patch matrix —
+/// `(out_h·out_w) × (k·k·in_c)`, an O(k²) blow-up — is never built.
+/// Instead the coordinator asks for exactly the slice one work unit
+/// needs: [`PatchSource::extract_cols`] for a weight-stationary tile's
+/// K-span (the WS tiler path) or [`PatchSource::extract_rows`] for a
+/// row block (engines that tile internally). Column order matches
+/// [`im2col`] exactly: `col = c·k·k + ky·k + kx`.
+#[derive(Debug, Clone)]
+pub struct PatchSource {
+    input: Vec<i8>,
+    shape: ConvShape,
+    out_h: usize,
+    out_w: usize,
+}
+
+impl PatchSource {
+    /// Validate the shape and take ownership of the input buffer.
+    pub fn new(input: Vec<i8>, shape: ConvShape) -> Result<Self, ConvShapeError> {
+        shape.validate()?;
+        if input.len() != shape.input_len() {
+            return Err(ConvShapeError::InputLen {
+                expected: shape.input_len(),
+                got: input.len(),
+            });
+        }
+        Ok(PatchSource {
+            out_h: shape.out_h(),
+            out_w: shape.out_w(),
+            input,
+            shape,
+        })
+    }
+
+    pub fn shape(&self) -> ConvShape {
+        self.shape
+    }
+
+    /// The raw NCHW input buffer (for direct-conv verification).
+    pub fn input(&self) -> &[i8] {
+        &self.input
+    }
+
+    /// Patch-matrix rows: M = out_h · out_w.
+    pub fn rows(&self) -> usize {
+        self.out_h * self.out_w
+    }
+
+    /// Patch-matrix columns: K = k · k · in_c.
+    pub fn cols(&self) -> usize {
+        self.shape.k * self.shape.k * self.shape.in_c
+    }
+
+    /// Decompose a patch-matrix column into `(channel, ky, kx)` — the
+    /// inverse of the column-order invariant `col = c·k·k + ky·k + kx`
+    /// shared with [`im2col`] and [`weights_to_gemm`]. Every lazy
+    /// extraction goes through this one helper so the ordering cannot
+    /// silently diverge between paths.
+    fn col_decompose(&self, col: usize) -> (usize, usize, usize) {
+        let k = self.shape.k;
+        let rem = col % (k * k);
+        (col / (k * k), rem / k, rem % k)
+    }
+
+    /// One patch-matrix element, zero-padding aware (the per-element
+    /// reference [`PatchSource::extract_cols`] is tested against).
+    pub fn at(&self, row: usize, col: usize) -> i8 {
+        let s = &self.shape;
+        let (oy, ox) = (row / self.out_w, row % self.out_w);
+        let (c, ky, kx) = self.col_decompose(col);
+        let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+        let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+        if iy < 0 || ix < 0 || iy as usize >= s.in_h || ix as usize >= s.in_w {
+            0
+        } else {
+            self.input[c * s.in_h * s.in_w + iy as usize * s.in_w + ix as usize]
+        }
+    }
+
+    /// Materialize patch columns `k0..k1` for every output pixel into
+    /// an `(M × width)` tile, the tail columns zero — exactly the
+    /// padded activation tile a weight-stationary array consumes for
+    /// one [`TileCoord`](crate::coordinator::tiler::TileCoord). The
+    /// per-column kernel offset is decomposed once, then the inner
+    /// loops walk the input plane.
+    pub fn extract_cols(&self, k0: usize, k1: usize, width: usize) -> MatI8 {
+        assert!(k0 <= k1 && k1 <= self.cols(), "K span out of range");
+        assert!(k1 - k0 <= width, "tile width smaller than K span");
+        let s = &self.shape;
+        let mut t = MatI8::zeros(self.rows(), width);
+        for (i, col) in (k0..k1).enumerate() {
+            let (c, ky, kx) = self.col_decompose(col);
+            let plane = &self.input[c * s.in_h * s.in_w..(c + 1) * s.in_h * s.in_w];
+            let mut row = 0;
+            for oy in 0..self.out_h {
+                let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                let in_y = iy >= 0 && (iy as usize) < s.in_h;
+                for ox in 0..self.out_w {
+                    let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                    if in_y && ix >= 0 && (ix as usize) < s.in_w {
+                        t.set(row, i, plane[iy as usize * s.in_w + ix as usize]);
+                    }
+                    row += 1;
+                }
+            }
+        }
+        t
+    }
+
+    /// Materialize patch rows `m0..m1` with all K columns — the row
+    /// block an internally-tiling engine streams. Like
+    /// [`PatchSource::extract_cols`], the kernel offset is decomposed
+    /// once per column and the output pixel walks incrementally, so
+    /// the inner loop is division-free (this is the conv hot path on
+    /// OS/SNN engines).
+    pub fn extract_rows(&self, m0: usize, m1: usize) -> MatI8 {
+        assert!(m0 <= m1 && m1 <= self.rows(), "row span out of range");
+        let s = &self.shape;
+        let kdim = self.cols();
+        let mut t = MatI8::zeros(m1 - m0, kdim);
+        for col in 0..kdim {
+            let (c, ky, kx) = self.col_decompose(col);
+            let plane = &self.input[c * s.in_h * s.in_w..(c + 1) * s.in_h * s.in_w];
+            let (mut oy, mut ox) = (m0 / self.out_w, m0 % self.out_w);
+            for r in m0..m1 {
+                let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                if iy >= 0
+                    && ix >= 0
+                    && (iy as usize) < s.in_h
+                    && (ix as usize) < s.in_w
+                {
+                    t.set(
+                        r - m0,
+                        col,
+                        plane[iy as usize * s.in_w + ix as usize],
+                    );
+                }
+                ox += 1;
+                if ox == self.out_w {
+                    ox = 0;
+                    oy += 1;
+                }
+            }
+        }
+        t
+    }
+
+    /// The whole patch matrix (tests / eager comparisons only — the
+    /// service never calls this).
+    pub fn materialize(&self) -> MatI8 {
+        self.extract_rows(0, self.rows())
+    }
+}
+
 /// Weights (out_c, in_c, k, k) flattened -> GEMM weight matrix
 /// (k*k*in_c, out_c), matching [`im2col`]'s column order.
 pub fn weights_to_gemm(weights: &[i8], shape: ConvShape) -> MatI8 {
-    assert_eq!(weights.len(), shape.out_c * shape.in_c * shape.k * shape.k);
+    assert_eq!(weights.len(), shape.weight_len());
     let kdim = shape.k * shape.k * shape.in_c;
     MatI8::from_fn(kdim, shape.out_c, |row, oc| {
         // row = c * k * k + ky * k + kx
@@ -145,6 +453,11 @@ mod tests {
         let via_gemm = golden_gemm(&patches, &wmat);
         let direct = conv2d_direct(&input, &weights, shape);
         assert_eq!(via_gemm, direct, "{shape:?}");
+        // The lazy view agrees with the eager matrix element-for-element.
+        let src = PatchSource::new(input, shape).unwrap();
+        assert_eq!(src.rows(), patches.rows);
+        assert_eq!(src.cols(), patches.cols);
+        assert_eq!(src.materialize(), patches, "{shape:?}");
     }
 
     #[test]
@@ -196,6 +509,40 @@ mod tests {
     }
 
     #[test]
+    fn im2col_equals_direct_strided_padded_nonsquare() {
+        // stride > 1 combined with pad > 0 on a non-square input.
+        check_shape(
+            ConvShape {
+                in_c: 2,
+                in_h: 7,
+                in_w: 5,
+                out_c: 3,
+                k: 3,
+                stride: 2,
+                pad: 1,
+            },
+            4,
+        );
+    }
+
+    #[test]
+    fn im2col_equals_direct_kernel_taller_than_input() {
+        // k > in_h is valid as long as padding covers the deficit.
+        check_shape(
+            ConvShape {
+                in_c: 3,
+                in_h: 2,
+                in_w: 9,
+                out_c: 4,
+                k: 3,
+                stride: 1,
+                pad: 1,
+            },
+            5,
+        );
+    }
+
+    #[test]
     fn gemm_dims_consistent() {
         let s = ConvShape {
             in_c: 16,
@@ -208,5 +555,113 @@ mod tests {
         };
         assert_eq!(s.gemm_dims(), (196, 144, 32));
         assert_eq!(s.macs(), 196 * 144 * 32);
+        assert_eq!(s.input_len(), 16 * 14 * 14);
+        assert_eq!(s.weight_len(), 32 * 16 * 3 * 3);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_shapes() {
+        let good = ConvShape {
+            in_c: 2,
+            in_h: 4,
+            in_w: 4,
+            out_c: 2,
+            k: 3,
+            stride: 1,
+            pad: 0,
+        };
+        assert_eq!(good.validate(), Ok(()));
+
+        let zero_stride = ConvShape { stride: 0, ..good };
+        assert_eq!(zero_stride.validate(), Err(ConvShapeError::ZeroStride));
+        assert!(zero_stride.checked_out_h().is_none());
+
+        let zero_dim = ConvShape { in_c: 0, ..good };
+        assert_eq!(zero_dim.validate(), Err(ConvShapeError::ZeroDim("in_c")));
+
+        // k > in_h + 2*pad used to underflow-panic in out_h().
+        let oversize = ConvShape { k: 6, ..good };
+        assert!(matches!(
+            oversize.validate(),
+            Err(ConvShapeError::KernelExceedsInput { k: 6, .. })
+        ));
+        assert!(oversize.checked_out_h().is_none());
+
+        // ...but the same kernel with enough padding is fine.
+        let padded = ConvShape { k: 6, pad: 1, ..good };
+        assert_eq!(padded.validate(), Ok(()));
+        assert_eq!(padded.out_h(), 1);
+
+        // Dimensions whose derived sizes overflow usize are rejected
+        // instead of wrapping (release) or panicking (debug) later.
+        let huge = ConvShape {
+            in_c: 4,
+            in_h: usize::MAX / 2,
+            in_w: usize::MAX / 2,
+            ..good
+        };
+        assert_eq!(huge.validate(), Err(ConvShapeError::TooLarge));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid ConvShape")]
+    fn out_h_panics_deterministically_on_invalid_shape() {
+        let bad = ConvShape {
+            in_c: 1,
+            in_h: 2,
+            in_w: 2,
+            out_c: 1,
+            k: 5,
+            stride: 1,
+            pad: 0,
+        };
+        let _ = bad.out_h();
+    }
+
+    #[test]
+    fn patch_source_rejects_bad_buffers() {
+        let shape = ConvShape {
+            in_c: 2,
+            in_h: 3,
+            in_w: 3,
+            out_c: 1,
+            k: 1,
+            stride: 1,
+            pad: 0,
+        };
+        assert_eq!(
+            PatchSource::new(vec![0; 5], shape).unwrap_err(),
+            ConvShapeError::InputLen {
+                expected: 18,
+                got: 5
+            }
+        );
+        assert!(PatchSource::new(vec![0; 18], shape).is_ok());
+    }
+
+    #[test]
+    fn extract_cols_pads_the_tail_with_zeros() {
+        let shape = ConvShape {
+            in_c: 1,
+            in_h: 3,
+            in_w: 3,
+            out_c: 1,
+            k: 2,
+            stride: 1,
+            pad: 0,
+        };
+        let src =
+            PatchSource::new(vec![1, 2, 3, 4, 5, 6, 7, 8, 9], shape).unwrap();
+        // K = 4; take columns 1..3 into a width-6 tile.
+        let t = src.extract_cols(1, 3, 6);
+        assert_eq!((t.rows, t.cols), (4, 6));
+        let eager = im2col(src.input(), shape);
+        for r in 0..4 {
+            assert_eq!(t.at(r, 0), eager.at(r, 1));
+            assert_eq!(t.at(r, 1), eager.at(r, 2));
+            for pad_col in 2..6 {
+                assert_eq!(t.at(r, pad_col), 0);
+            }
+        }
     }
 }

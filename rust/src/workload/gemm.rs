@@ -122,6 +122,18 @@ impl MatI32 {
         self.data[r * self.cols + c] += v;
     }
 
+    /// Write `partial` over the row span starting at `m0` (column
+    /// counts must match, span must fit). Row spans are disjoint by
+    /// construction — the conv row-block path on internally-tiling
+    /// engines — so this is a plain overwrite, not an accumulate.
+    pub fn write_rows(&mut self, m0: usize, partial: &MatI32) {
+        assert_eq!(partial.cols, self.cols);
+        assert!(m0 + partial.rows <= self.rows);
+        let start = m0 * self.cols;
+        self.data[start..start + partial.data.len()]
+            .copy_from_slice(&partial.data);
+    }
+
     /// Fold `partial` into the column span starting at `n0` (row counts
     /// must match, span must fit). Integer adds commute, so callers may
     /// fold partial products in any completion order — this is the one
@@ -246,6 +258,27 @@ mod tests {
         assert_eq!(m.at(1, 2), 3);
         assert_eq!(m.at(0, 2), 0);
         assert_eq!(m.at(2, 2), 0);
+    }
+
+    #[test]
+    fn write_rows_overwrites_disjoint_spans() {
+        let mut out = MatI32::zeros(5, 3);
+        let top = MatI32 {
+            rows: 2,
+            cols: 3,
+            data: vec![1, 2, 3, 4, 5, 6],
+        };
+        let bottom = MatI32 {
+            rows: 2,
+            cols: 3,
+            data: vec![7, 8, 9, 10, 11, 12],
+        };
+        out.write_rows(0, &top);
+        out.write_rows(3, &bottom);
+        assert_eq!(out.at(1, 2), 6);
+        assert_eq!(out.at(2, 0), 0); // untouched middle row
+        assert_eq!(out.at(3, 0), 7);
+        assert_eq!(out.at(4, 2), 12);
     }
 
     #[test]

@@ -101,7 +101,7 @@ fn shared_weight_batch_bit_identical_across_all_engine_kinds() {
         // Batched run on a sharded multi-worker pool.
         let mut svc = service(kind, 3);
         let handles = svc.submit_batch(Batch::from(jobs));
-        let mut batch_results = svc.drain(Duration::from_secs(120));
+        let mut batch_results = svc.drain(Duration::from_secs(120)).completed;
         batch_results.sort_by_key(|r| r.id);
         let avoided = svc.metrics.fills_avoided.load(Ordering::Relaxed);
         svc.shutdown();
@@ -155,7 +155,7 @@ fn repeated_weights_amortize_fills_exactly() {
         let mut svc = service(EngineKind::WsDspFetch, 2);
         let tiles = GemmTiler::new(6, 5).tile_count(k, n) as u64;
         svc.submit_batch(Batch::from(jobs));
-        let mut results = svc.drain(Duration::from_secs(120));
+        let mut results = svc.drain(Duration::from_secs(120)).completed;
         results.sort_by_key(|r| r.id);
         prop_assert_eq!(results.len(), count);
         for (i, r) in results.iter().enumerate() {

@@ -1,0 +1,495 @@
+//! Property tests for the conv-native lazy tiling path:
+//!
+//! * [`PatchSource`] (the lazy per-tile im2col view the service
+//!   executes against) is **bit-identical** to the eager [`im2col`]
+//!   matrix — whole, per tile (zero-padding included), and through
+//!   the shape corners the old arithmetic mishandled (stride > 1
+//!   combined with pad > 0, kernels taller than the input, non-square
+//!   inputs);
+//! * conv jobs served end-to-end agree with `conv2d_direct` *and* the
+//!   eager im2col GEMM on **all 8 engine kinds** (WS lazy tiles, OS /
+//!   SNN lazy row blocks);
+//! * shared-weight conv batches amortize stationary fills exactly
+//!   like GEMM batches;
+//! * degenerate shapes resolve as `Failed` without panics, `drain`
+//!   clears failed ids, and `Duration::MAX` timeouts are safe.
+
+use dsp48_systolic::coordinator::service::EngineKind;
+use dsp48_systolic::coordinator::{
+    Batch, GemmTiler, Job, JobState, Service, ServiceConfig,
+};
+use dsp48_systolic::util::quickcheck::check;
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::conv::{
+    conv2d_direct, im2col, weights_to_gemm, ConvShape, ConvShapeError,
+    PatchSource,
+};
+use dsp48_systolic::workload::gemm::golden_gemm;
+use dsp48_systolic::workload::MatI32;
+use dsp48_systolic::{prop_assert, prop_assert_eq};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+/// A random *valid* conv shape biased toward the corners: strides up
+/// to 3, pads up to 2+, kernels up to 4 — and when the kernel exceeds
+/// the input extent (the case that used to underflow-panic), padding
+/// grows until the shape is legal, keeping those shapes in the set.
+fn random_valid_shape(rng: &mut XorShift, size: usize) -> ConvShape {
+    let span = size as u64 + 4;
+    let mut shape = ConvShape {
+        in_c: 1 + rng.below(3) as usize,
+        in_h: 1 + rng.below(span) as usize,
+        in_w: 1 + rng.below(span) as usize,
+        out_c: 1 + rng.below(5) as usize,
+        k: 1 + rng.below(4) as usize,
+        stride: 1 + rng.below(3) as usize,
+        pad: rng.below(3) as usize,
+    };
+    while shape.validate().is_err() {
+        shape.pad += 1;
+    }
+    shape
+}
+
+/// The lazy patch view equals the eager im2col matrix — whole and per
+/// weight-stationary tile, padding included.
+#[test]
+fn lazy_patches_equal_eager_im2col() {
+    check("PatchSource == im2col", 8, |rng, size| {
+        let shape = random_valid_shape(rng, size);
+        let input = rng.i8_vec(shape.input_len());
+        let eager = im2col(&input, shape);
+        let src = PatchSource::new(input, shape).unwrap();
+        prop_assert_eq!(src.rows(), eager.rows);
+        prop_assert_eq!(src.cols(), eager.cols);
+        prop_assert!(
+            src.materialize() == eager,
+            "materialized patches diverge for {shape:?}"
+        );
+        // Spot-check the per-element accessor against the eager matrix.
+        for _ in 0..8 {
+            let r = rng.below(eager.rows as u64) as usize;
+            let c = rng.below(eager.cols as u64) as usize;
+            prop_assert_eq!(src.at(r, c), eager.at(r, c));
+        }
+        // Per-tile extraction matches slicing the eager matrix.
+        let tiler = GemmTiler::new(
+            1 + rng.below(9) as usize,
+            1 + rng.below(6) as usize,
+        );
+        for c in tiler.coords(src.cols(), shape.out_c) {
+            prop_assert!(
+                src.extract_cols(c.k0, c.k1, tiler.rows)
+                    == tiler.a_tile(&eager, c),
+                "tile {c:?} diverges for {shape:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The shape corners the satellite bugs lived in, pinned explicitly:
+/// eager im2col GEMM == direct conv == lazy tiles recomposed.
+#[test]
+fn corner_shapes_match_direct_and_recompose() {
+    let shapes = [
+        // stride > 1 combined with pad > 0, non-square input.
+        ConvShape {
+            in_c: 2,
+            in_h: 7,
+            in_w: 5,
+            out_c: 3,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        },
+        // kernel taller than the input (k > in_h), saved by padding.
+        ConvShape {
+            in_c: 3,
+            in_h: 2,
+            in_w: 9,
+            out_c: 4,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        },
+        // kernel exceeding both extents, strided, heavy padding.
+        ConvShape {
+            in_c: 1,
+            in_h: 3,
+            in_w: 3,
+            out_c: 2,
+            k: 5,
+            stride: 2,
+            pad: 2,
+        },
+        // stride 3 with pad 2 on a tall-thin input.
+        ConvShape {
+            in_c: 4,
+            in_h: 10,
+            in_w: 6,
+            out_c: 5,
+            k: 2,
+            stride: 3,
+            pad: 2,
+        },
+    ];
+    for (i, shape) in shapes.into_iter().enumerate() {
+        assert_eq!(shape.validate(), Ok(()), "{shape:?}");
+        let mut rng = XorShift::new(100 + i as u64);
+        let input = rng.i8_vec(shape.input_len());
+        let weights = rng.i8_vec(shape.weight_len());
+        let direct = conv2d_direct(&input, &weights, shape);
+        let wmat = weights_to_gemm(&weights, shape);
+        let eager = golden_gemm(&im2col(&input, shape), &wmat);
+        assert_eq!(eager, direct, "{shape:?}");
+        // Lazy tiles + golden per-tile GEMM recompose to the same
+        // result the service assembles.
+        let src = PatchSource::new(input, shape).unwrap();
+        let tiler = GemmTiler::new(6, 5);
+        let (m, kdim, n) = shape.gemm_dims();
+        let mut out = MatI32::zeros(m, n);
+        for c in tiler.coords(kdim, n) {
+            let a = src.extract_cols(c.k0, c.k1, tiler.rows);
+            let w = tiler.w_tile(&wmat, c);
+            out.accumulate_cols(c.n0, &golden_gemm(&a, &w));
+        }
+        assert_eq!(out, direct, "{shape:?}");
+    }
+}
+
+/// A conv shape each engine kind can serve (SNN crossbars need
+/// k·k·in_c == 32 and binary inputs).
+fn shape_for(kind: EngineKind) -> ConvShape {
+    if matches!(kind, EngineKind::SnnFireFly | EngineKind::SnnEnhanced) {
+        ConvShape {
+            in_c: 32,
+            in_h: 5,
+            in_w: 4,
+            out_c: 6,
+            k: 1,
+            stride: 1,
+            pad: 0,
+        }
+    } else {
+        ConvShape {
+            in_c: 5,
+            in_h: 9,
+            in_w: 7,
+            out_c: 6,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        }
+    }
+}
+
+fn conv_job_for(kind: EngineKind, rng: &mut XorShift, weights: &[i8]) -> Job {
+    let shape = shape_for(kind);
+    let input: Vec<i8> =
+        if matches!(kind, EngineKind::SnnFireFly | EngineKind::SnnEnhanced) {
+            (0..shape.input_len())
+                .map(|_| rng.chance(1, 3) as i8)
+                .collect()
+        } else {
+            (0..shape.input_len()).map(|_| rng.i8_in(-63, 63)).collect()
+        };
+    Job::Conv {
+        input,
+        weights: weights.to_vec(),
+        shape,
+    }
+}
+
+/// Lazy conv tiling is bit-identical to the eager im2col path on every
+/// engine kind: the served output equals both `conv2d_direct` and the
+/// eagerly materialized im2col GEMM, and the service's own
+/// direct-conv verification concurs.
+#[test]
+fn lazy_conv_bit_identical_across_all_engine_kinds() {
+    for kind in EngineKind::all() {
+        let shape = shape_for(kind);
+        let mut rng = XorShift::new(0xC04 + kind.label().len() as u64);
+        let weights: Vec<i8> = (0..shape.weight_len())
+            .map(|_| rng.i8_in(-63, 63))
+            .collect();
+        let job = conv_job_for(kind, &mut rng, &weights);
+        let Job::Conv { input, .. } = &job else {
+            unreachable!()
+        };
+        let eager = golden_gemm(
+            &im2col(input, shape),
+            &weights_to_gemm(&weights, shape),
+        );
+        let direct = conv2d_direct(input, &weights, shape);
+        assert_eq!(eager, direct, "{}", kind.label());
+
+        let mut svc = Service::start(ServiceConfig {
+            kind,
+            workers: 2,
+            ws_rows: 6,
+            ws_cols: 5,
+            verify: true,
+            shard_width: 2,
+        });
+        let handle = svc.submit(job);
+        let r = svc
+            .wait(handle, Duration::from_secs(120))
+            .into_result()
+            .unwrap_or_else(|| panic!("{}: conv job completes", kind.label()));
+        assert_eq!(r.verified, Some(true), "{}", kind.label());
+        assert_eq!(r.output, eager, "{}", kind.label());
+        // SNN engines count spike-conditional MACs; every dense engine
+        // reports the true problem size.
+        if !matches!(kind, EngineKind::SnnFireFly | EngineKind::SnnEnhanced) {
+            assert_eq!(r.stats.macs, shape.macs(), "{}", kind.label());
+        }
+        svc.shutdown();
+    }
+}
+
+/// Large convs on internally-tiling engines split into row blocks
+/// (lazy per-block patch extraction) and still assemble bit-exactly.
+#[test]
+fn conv_row_blocks_assemble_on_whole_job_engines() {
+    for kind in [EngineKind::OsEnhanced, EngineKind::SnnEnhanced] {
+        let snn = kind == EngineKind::SnnEnhanced;
+        // M = 400 output pixels -> several 64-row blocks.
+        let shape = if snn {
+            ConvShape {
+                in_c: 32,
+                in_h: 20,
+                in_w: 20,
+                out_c: 5,
+                k: 1,
+                stride: 1,
+                pad: 0,
+            }
+        } else {
+            ConvShape {
+                in_c: 3,
+                in_h: 20,
+                in_w: 20,
+                out_c: 4,
+                k: 3,
+                stride: 1,
+                pad: 1,
+            }
+        };
+        assert!(shape.out_h() * shape.out_w() > 64, "{}", kind.label());
+        let mut rng = XorShift::new(0xB10C + snn as u64);
+        let input: Vec<i8> = if snn {
+            (0..shape.input_len())
+                .map(|_| rng.chance(1, 3) as i8)
+                .collect()
+        } else {
+            (0..shape.input_len()).map(|_| rng.i8_in(-63, 63)).collect()
+        };
+        let weights: Vec<i8> = (0..shape.weight_len())
+            .map(|_| rng.i8_in(-63, 63))
+            .collect();
+        let mut svc = Service::start(ServiceConfig {
+            kind,
+            workers: 3,
+            ws_rows: 0,
+            ws_cols: 0,
+            verify: true,
+            shard_width: 1,
+        });
+        let handle = svc.submit(Job::Conv {
+            input: input.clone(),
+            weights: weights.clone(),
+            shape,
+        });
+        let r = svc
+            .wait(handle, Duration::from_secs(120))
+            .into_result()
+            .unwrap_or_else(|| panic!("{}: blocked conv completes", kind.label()));
+        assert_eq!(r.verified, Some(true), "{}", kind.label());
+        assert_eq!(
+            r.output,
+            conv2d_direct(&input, &weights, shape),
+            "{}",
+            kind.label()
+        );
+        // Several blocks ran (tiles metric counts row blocks here).
+        assert!(
+            svc.metrics.tiles_executed.load(Ordering::Relaxed) > 1,
+            "{}",
+            kind.label()
+        );
+        svc.shutdown();
+    }
+}
+
+/// Shared-weight conv batches amortize stationary fills exactly like
+/// GEMM batches: one fill per weight-tile position, the rest avoided.
+#[test]
+fn conv_batches_amortize_weight_tiles_like_gemm() {
+    let shape = shape_for(EngineKind::WsDspFetch);
+    let (_, kdim, n) = shape.gemm_dims();
+    let count = 4;
+    let mut rng = XorShift::new(77);
+    let weights: Vec<i8> = (0..shape.weight_len())
+        .map(|_| rng.i8_in(-63, 63))
+        .collect();
+    let jobs: Vec<Job> = (0..count)
+        .map(|_| conv_job_for(EngineKind::WsDspFetch, &mut rng, &weights))
+        .collect();
+    let inputs: Vec<Vec<i8>> = jobs
+        .iter()
+        .map(|j| match j {
+            Job::Conv { input, .. } => input.clone(),
+            _ => unreachable!(),
+        })
+        .collect();
+    let mut svc = Service::start(ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers: 2,
+        ws_rows: 6,
+        ws_cols: 5,
+        verify: true,
+        shard_width: 1,
+    });
+    let tiles = GemmTiler::new(6, 5).tile_count(kdim, n) as u64;
+    svc.submit_batch(Batch::from(jobs));
+    let mut results = svc.drain(Duration::from_secs(120)).completed;
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), count);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.verified, Some(true), "job {i}");
+        assert_eq!(
+            r.output,
+            conv2d_direct(&inputs[i], &weights, shape),
+            "job {i}"
+        );
+    }
+    let issued = svc.metrics.fills_issued.load(Ordering::Relaxed);
+    let avoided = svc.metrics.fills_avoided.load(Ordering::Relaxed);
+    assert_eq!(issued, tiles);
+    assert_eq!(avoided, tiles * (count as u64 - 1));
+    assert!(svc.metrics.fill_cycles_saved.load(Ordering::Relaxed) > 0);
+    svc.shutdown();
+}
+
+/// Degenerate conv shapes fail typed at validation and resolve as
+/// `Failed` through the service — on a whole-job engine too — while
+/// `drain` clears unobserved failures instead of leaking them.
+#[test]
+fn invalid_conv_jobs_fail_cleanly_on_whole_job_engines() {
+    let bad_shapes = [
+        ConvShape {
+            in_c: 2,
+            in_h: 4,
+            in_w: 4,
+            out_c: 2,
+            k: 3,
+            stride: 0, // never advances
+            pad: 0,
+        },
+        ConvShape {
+            in_c: 2,
+            in_h: 4,
+            in_w: 4,
+            out_c: 2,
+            k: 7, // exceeds padded input
+            stride: 1,
+            pad: 1,
+        },
+        ConvShape {
+            in_c: 0, // zero dim
+            in_h: 4,
+            in_w: 4,
+            out_c: 2,
+            k: 1,
+            stride: 1,
+            pad: 0,
+        },
+    ];
+    assert_eq!(bad_shapes[0].validate(), Err(ConvShapeError::ZeroStride));
+    assert!(matches!(
+        bad_shapes[1].validate(),
+        Err(ConvShapeError::KernelExceedsInput { .. })
+    ));
+    assert_eq!(
+        bad_shapes[2].validate(),
+        Err(ConvShapeError::ZeroDim("in_c"))
+    );
+
+    let mut svc = Service::start(ServiceConfig {
+        kind: EngineKind::OsEnhanced,
+        workers: 1,
+        ws_rows: 0,
+        ws_cols: 0,
+        verify: true,
+        shard_width: 1,
+    });
+    let mut handles = Vec::new();
+    for shape in bad_shapes {
+        handles.push(svc.submit(Job::Conv {
+            input: Vec::new(),
+            weights: Vec::new(),
+            shape,
+        }));
+    }
+    for (i, h) in handles.iter().enumerate() {
+        assert!(
+            matches!(svc.wait(*h, Duration::from_secs(30)), JobState::Failed),
+            "bad shape {i} must resolve Failed"
+        );
+    }
+    assert_eq!(svc.failed_count(), 0);
+    // A valid job still runs afterwards — the worker was never touched.
+    let good = shape_for(EngineKind::OsEnhanced);
+    let mut rng = XorShift::new(31);
+    let weights: Vec<i8> = (0..good.weight_len())
+        .map(|_| rng.i8_in(-63, 63))
+        .collect();
+    let h = svc.submit(conv_job_for(EngineKind::OsEnhanced, &mut rng, &weights));
+    assert!(svc
+        .wait(h, Duration::from_secs(60))
+        .into_result()
+        .is_some());
+    // Unobserved failures retire through drain and are cleared.
+    let bad = svc.submit(Job::Conv {
+        input: Vec::new(),
+        weights: Vec::new(),
+        shape: bad_shapes[0],
+    });
+    let drained = svc.drain(Duration::from_secs(30));
+    assert_eq!(drained.failed, vec![bad.id]);
+    assert!(drained.completed.is_empty());
+    assert_eq!(svc.failed_count(), 0);
+    assert_eq!(svc.pending(), 0);
+    svc.shutdown();
+}
+
+/// `Duration::MAX` means "wait forever" on every blocking front-end
+/// call — it must not panic the deadline arithmetic.
+#[test]
+fn wait_apis_survive_duration_max() {
+    let mut svc = Service::start(ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers: 1,
+        ws_rows: 6,
+        ws_cols: 6,
+        verify: true,
+        shard_width: 1,
+    });
+    let shape = shape_for(EngineKind::WsDspFetch);
+    let mut rng = XorShift::new(91);
+    let weights: Vec<i8> = (0..shape.weight_len())
+        .map(|_| rng.i8_in(-63, 63))
+        .collect();
+    let h = svc.submit(conv_job_for(EngineKind::WsDspFetch, &mut rng, &weights));
+    let r = svc
+        .wait(h, Duration::MAX)
+        .into_result()
+        .expect("wait(MAX) returns the completed job");
+    assert_eq!(r.verified, Some(true));
+    svc.submit(conv_job_for(EngineKind::WsDspFetch, &mut rng, &weights));
+    assert!(svc.recv_timeout(Duration::MAX).is_some());
+    let drained = svc.drain(Duration::MAX);
+    assert!(drained.completed.is_empty() && drained.failed.is_empty());
+    svc.shutdown();
+}

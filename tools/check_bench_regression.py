@@ -8,7 +8,11 @@ when a gated metric regresses by more than --max-regress (default 10%).
 Only *simulated* metrics (MACs/cycle, fill counters) are gated — they
 are deterministic functions of the cycle model, so the gate never
 flakes on runner speed. Wall-clock rates in the artifact are recorded
-for trend-watching but never gated.
+for trend-watching but never gated. The gated key set spans the GEMM
+batching pipeline (batched/single MACs/cycle + fill counters) and the
+conv-native lazy tiling path (conv_fill_amortization gate plus exact
+conv_fills_* counters); conv_macs_per_cycle rides along in the
+artifact for trend-watching.
 
 Baseline schema:
 
