@@ -64,7 +64,7 @@ fn main() {
                     svc.submit(Job::Gemm { a, w });
                 }
                 for _ in 0..jobs {
-                    svc.recv_timeout(Duration::from_secs(30)).expect("done");
+                    svc.wait_any(Duration::from_secs(30)).expect("done");
                 }
             },
         );

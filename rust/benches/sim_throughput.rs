@@ -6,22 +6,27 @@
 //! * one full-array WS cycle (196 + 14 DSPs + staging),
 //! * ring-accumulator tick,
 //! * packed_dot (the functional fast path the coordinator may use),
-//! * a single large GEMM sharded across 1 vs 4 workers.
+//! * a single large GEMM sharded across 1 vs 4 workers,
+//! * the wire protocol end-to-end over a TCP loopback socket.
 //!
 //! Emits `BENCH_sim_throughput.json` so CI accumulates the perf
 //! trajectory. Set `SIM_BENCH_SMOKE=1` for a fast CI-sized run.
 
 use dsp48_systolic::coordinator::service::EngineKind;
-use dsp48_systolic::coordinator::{Batch, Job, Service, ServiceConfig};
+use dsp48_systolic::coordinator::{Batch, Job, JobState, Service, ServiceConfig};
 use dsp48_systolic::dsp::{Attributes, Dsp48e2, DspInputs, OpMode};
 use dsp48_systolic::engines::os::RingAccumulator;
 use dsp48_systolic::engines::ws::{WsConfig, WsEngine};
 use dsp48_systolic::engines::Engine;
 use dsp48_systolic::packing;
+use dsp48_systolic::proto::{Session, TcpServer, TcpSession};
 use dsp48_systolic::util::bench::{bench, section};
+use dsp48_systolic::util::json::Json;
 use dsp48_systolic::util::rng::XorShift;
 use dsp48_systolic::workload::conv::ConvShape;
 use dsp48_systolic::workload::MatI8;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// One sharded run: a single `size³` GEMM fanned out over `workers`.
@@ -41,7 +46,7 @@ fn sharded_gemm_rate(workers: usize, size: usize) -> f64 {
     let t0 = Instant::now();
     svc.submit(Job::Gemm { a, w });
     let r = svc
-        .recv_timeout(Duration::from_secs(1800))
+        .wait_any(Duration::from_secs(1800))
         .expect("sharded GEMM completes");
     let wall = t0.elapsed();
     svc.shutdown();
@@ -163,6 +168,91 @@ fn conv_serve(count: usize) -> (u64, u64, u64, u64, u64) {
     (cycles, macs, issued, avoided, saved)
 }
 
+/// The wire protocol end-to-end over a loopback socket: a batch of 4
+/// shared-weight GEMMs submitted in one `SubmitBatch` frame (weight-
+/// tile reuse must survive the socket round trip: 4 fills issued, 12
+/// avoided on the 14×14 tiler) plus one conv job, all verified, then
+/// a graceful wire `Shutdown`. Returns `(wall jobs/s, jobs verified,
+/// fills issued, fills avoided, fill cycles saved)` — everything but
+/// the wall rate is a deterministic simulated quantity, safe to gate.
+fn serve_loopback() -> (f64, u64, u64, u64, u64) {
+    let svc = Service::start(ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers: 2,
+        ws_rows: 14,
+        ws_cols: 14,
+        verify: true,
+        shard_width: 1,
+    });
+    let metrics = Arc::clone(&svc.metrics);
+    let server = TcpServer::bind("127.0.0.1:0", svc).expect("bind loopback");
+    let addr = server
+        .local_addr()
+        .expect("loopback server has an address")
+        .to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+    let mut client = TcpSession::connect(&addr).expect("connect loopback");
+
+    let mut rng = XorShift::new(29);
+    let t0 = Instant::now();
+    let (m, k, n) = (16, 28, 28);
+    let w = MatI8::random(&mut rng, k, n);
+    let jobs: Vec<Job> = (0..4)
+        .map(|_| Job::Gemm {
+            a: MatI8::random_bounded(&mut rng, m, k, 63),
+            w: w.clone(),
+        })
+        .collect();
+    let ids = client.submit_batch(jobs).expect("wire batch submit");
+    let mut ok = 0u64;
+    for id in ids {
+        if let JobState::Done(r) = client
+            .wait(id, Some(Duration::from_secs(600)))
+            .expect("wire wait")
+        {
+            if r.verified == Some(true) {
+                ok += 1;
+            }
+        }
+    }
+    let shape = ConvShape {
+        in_c: 8,
+        in_h: 12,
+        in_w: 12,
+        out_c: 16,
+        k: 3,
+        stride: 1,
+        pad: 1,
+    };
+    let input: Vec<i8> =
+        (0..shape.input_len()).map(|_| rng.i8_in(-63, 63)).collect();
+    let weights: Vec<i8> =
+        (0..shape.weight_len()).map(|_| rng.i8_in(-63, 63)).collect();
+    let id = client
+        .submit(Job::Conv {
+            input,
+            weights,
+            shape,
+        })
+        .expect("wire conv submit");
+    if let JobState::Done(r) = client
+        .wait(id, Some(Duration::from_secs(600)))
+        .expect("wire conv wait")
+    {
+        if r.verified == Some(true) {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    client.shutdown().expect("wire shutdown");
+    drop(client);
+    server_thread.join().expect("server thread joins cleanly");
+    let issued = metrics.fills_issued.load(Ordering::Relaxed);
+    let avoided = metrics.fills_avoided.load(Ordering::Relaxed);
+    let saved = metrics.fill_cycles_saved.load(Ordering::Relaxed);
+    (5.0 / wall.as_secs_f64(), ok, issued, avoided, saved)
+}
+
 fn main() {
     section("DSP48E2 cell");
     let mut dsp = Dsp48e2::new(Attributes::ws_prefetch_pe());
@@ -266,25 +356,45 @@ fn main() {
         100.0 * conv_amort
     );
 
-    // Perf-trajectory artifact for CI (stable keys, one flat object).
-    let json = format!(
-        "{{\n  \"bench\": \"sim_throughput\",\n  \"smoke\": {smoke},\n  \
-         \"packed_dot_macs_per_s\": {packed_dot_rate:.1},\n  \
-         \"sharded_gemm_size\": {size},\n  \
-         \"sharded_gemm_macs_per_s_1w\": {rate_1w:.1},\n  \
-         \"sharded_gemm_macs_per_s_4w\": {rate_4w:.1},\n  \
-         \"sharded_speedup_4w_over_1w\": {speedup:.3},\n  \
-         \"batched_macs_per_cycle\": {batched_mpc:.4},\n  \
-         \"single_macs_per_cycle\": {single_mpc:.4},\n  \
-         \"fills_issued\": {fills_issued},\n  \
-         \"fills_avoided\": {fills_avoided},\n  \
-         \"fill_cycles_saved\": {fill_saved},\n  \
-         \"conv_macs_per_cycle\": {conv_mpc:.4},\n  \
-         \"conv_fill_amortization\": {conv_amort:.4},\n  \
-         \"conv_fills_issued\": {c_issued},\n  \
-         \"conv_fills_avoided\": {c_avoided},\n  \
-         \"conv_fill_cycles_saved\": {c_saved}\n}}\n"
+    section("serve loopback (wire protocol end-to-end over TCP)");
+    let (lb_rate, lb_ok, lb_issued, lb_avoided, lb_saved) = serve_loopback();
+    println!(
+        "bench loopback 4 shared-weight GEMMs (one wire batch) + 1 conv: \
+         {lb_ok}/5 verified, {lb_rate:.1} jobs/s wall"
     );
+    println!(
+        "    -> fills: {lb_issued} issued, {lb_avoided} avoided \
+         ({lb_saved} fill cycles saved) — reuse survives the socket"
+    );
+
+    // Perf-trajectory artifact for CI (stable keys, one flat object),
+    // emitted through the shared util/json serializer — the same
+    // emitter behind Metrics::snapshot_json and the Stats response.
+    let artifact = Json::object([
+        ("bench", Json::from("sim_throughput")),
+        ("smoke", Json::from(smoke)),
+        ("packed_dot_macs_per_s", Json::float(packed_dot_rate)),
+        ("sharded_gemm_size", Json::from(size)),
+        ("sharded_gemm_macs_per_s_1w", Json::float(rate_1w)),
+        ("sharded_gemm_macs_per_s_4w", Json::float(rate_4w)),
+        ("sharded_speedup_4w_over_1w", Json::float(speedup)),
+        ("batched_macs_per_cycle", Json::float(batched_mpc)),
+        ("single_macs_per_cycle", Json::float(single_mpc)),
+        ("fills_issued", Json::uint(fills_issued)),
+        ("fills_avoided", Json::uint(fills_avoided)),
+        ("fill_cycles_saved", Json::uint(fill_saved)),
+        ("conv_macs_per_cycle", Json::float(conv_mpc)),
+        ("conv_fill_amortization", Json::float(conv_amort)),
+        ("conv_fills_issued", Json::uint(c_issued)),
+        ("conv_fills_avoided", Json::uint(c_avoided)),
+        ("conv_fill_cycles_saved", Json::uint(c_saved)),
+        ("loopback_jobs_per_s", Json::float(lb_rate)),
+        ("loopback_jobs_ok", Json::uint(lb_ok)),
+        ("loopback_fills_issued", Json::uint(lb_issued)),
+        ("loopback_fills_avoided", Json::uint(lb_avoided)),
+        ("loopback_fill_cycles_saved", Json::uint(lb_saved)),
+    ]);
+    let json = artifact.to_pretty() + "\n";
     match std::fs::write("BENCH_sim_throughput.json", &json) {
         Ok(()) => println!("wrote BENCH_sim_throughput.json"),
         Err(e) => eprintln!("could not write BENCH_sim_throughput.json: {e}"),

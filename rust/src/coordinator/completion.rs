@@ -81,8 +81,31 @@ struct Inner {
     /// a targeted `poll`/`wait` are skipped lazily).
     order: VecDeque<JobId>,
     failed: HashSet<JobId>,
-    /// Submitted but not yet retired (completed or failed).
-    outstanding: usize,
+    /// Ids submitted but not yet retired (completed or failed). Exact
+    /// tracking — not a counter — so [`CompletionTable::forget`] can
+    /// tell a genuinely in-flight handle from one that already retired
+    /// through someone else's drain.
+    in_flight: HashSet<JobId>,
+    /// In-flight handles abandoned by [`CompletionTable::forget`]:
+    /// their results are dropped at retirement instead of parked in
+    /// `ready`, so a disconnected client's unredeemed outputs can
+    /// never accumulate. Invariant: `orphaned ⊆ in_flight`, so every
+    /// entry is removed when its job retires — the set cannot leak.
+    orphaned: HashSet<JobId>,
+}
+
+impl Inner {
+    /// Take one parked result by id, pruning its `order` entry — the
+    /// queue's length stays bounded by *currently parked* results even
+    /// when every redemption is targeted (`poll`/`wait`) and
+    /// `wait_any`/`drain` never run to pop it.
+    fn take_ready(&mut self, id: JobId) -> Option<JobResult> {
+        let r = self.ready.remove(&id)?;
+        if let Some(pos) = self.order.iter().position(|x| *x == id) {
+            self.order.remove(pos);
+        }
+        Some(r)
+    }
 }
 
 /// Shared completion state between workers and the submitter.
@@ -97,17 +120,22 @@ impl CompletionTable {
         CompletionTable::default()
     }
 
-    /// Account `n` newly submitted jobs.
-    pub(crate) fn register(&self, n: usize) {
-        self.inner.lock().unwrap().outstanding += n;
+    /// Account newly submitted jobs by id.
+    pub(crate) fn register(&self, handles: &[JobHandle]) {
+        let mut g = self.inner.lock().unwrap();
+        g.in_flight.extend(handles.iter().map(|h| h.id));
     }
 
-    /// Worker side: retire a completed job.
+    /// Worker side: retire a completed job. Results for forgotten
+    /// (owner-disconnected) handles are dropped here instead of
+    /// parked.
     pub(crate) fn complete(&self, result: JobResult) {
         let mut g = self.inner.lock().unwrap();
-        g.order.push_back(result.id);
-        g.ready.insert(result.id, result);
-        g.outstanding = g.outstanding.saturating_sub(1);
+        g.in_flight.remove(&result.id);
+        if !g.orphaned.remove(&result.id) {
+            g.order.push_back(result.id);
+            g.ready.insert(result.id, result);
+        }
         drop(g);
         self.cv.notify_all();
     }
@@ -115,16 +143,41 @@ impl CompletionTable {
     /// Worker side: retire a failed job.
     pub(crate) fn complete_failed(&self, id: JobId) {
         let mut g = self.inner.lock().unwrap();
-        g.failed.insert(id);
-        g.outstanding = g.outstanding.saturating_sub(1);
+        g.in_flight.remove(&id);
+        if !g.orphaned.remove(&id) {
+            g.failed.insert(id);
+        }
         drop(g);
         self.cv.notify_all();
+    }
+
+    /// Abandon handles whose owner is gone (a wire client that
+    /// disconnected without redeeming them): parked results and failed
+    /// markers are dropped now, genuinely in-flight ones are marked
+    /// orphaned and dropped at retirement. Ids that already retired —
+    /// redeemed by their owner, or taken by someone else's drain — are
+    /// ignored, so `forget` can never make the table grow.
+    pub fn forget(&self, ids: &[JobId]) {
+        let mut g = self.inner.lock().unwrap();
+        for id in ids {
+            let was_parked =
+                g.take_ready(*id).is_some() || g.failed.remove(id);
+            if !was_parked && g.in_flight.contains(id) {
+                g.orphaned.insert(*id);
+            }
+        }
+    }
+
+    /// Completed results parked in the table and not yet redeemed
+    /// (leak telemetry: should trend to zero on a healthy server).
+    pub fn unclaimed(&self) -> usize {
+        self.inner.lock().unwrap().ready.len()
     }
 
     /// Non-blocking redemption of one handle.
     pub fn poll(&self, handle: JobHandle) -> JobState {
         let mut g = self.inner.lock().unwrap();
-        if let Some(r) = g.ready.remove(&handle.id) {
+        if let Some(r) = g.take_ready(handle.id) {
             return JobState::Done(Box::new(r));
         }
         if g.failed.remove(&handle.id) {
@@ -139,13 +192,13 @@ impl CompletionTable {
         let deadline = deadline_after(timeout);
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(r) = g.ready.remove(&handle.id) {
+            if let Some(r) = g.take_ready(handle.id) {
                 return JobState::Done(Box::new(r));
             }
             if g.failed.remove(&handle.id) {
                 return JobState::Failed;
             }
-            if g.outstanding == 0 {
+            if g.in_flight.is_empty() {
                 // Nothing is in flight, and this id is in neither
                 // table: it was already redeemed (or drained), so no
                 // state change can ever resolve it. Report Pending —
@@ -177,7 +230,7 @@ impl CompletionTable {
                 }
                 // Already taken by a targeted poll/wait: skip.
             }
-            if g.outstanding == 0 {
+            if g.in_flight.is_empty() {
                 // Nothing in flight and nothing queued: no completion
                 // can ever arrive (submission requires exclusive
                 // access to the service, so none can race in while we
@@ -203,7 +256,7 @@ impl CompletionTable {
     pub fn drain(&self, timeout: Duration) -> Drained {
         let deadline = deadline_after(timeout);
         let mut g = self.inner.lock().unwrap();
-        while g.outstanding > 0 {
+        while !g.in_flight.is_empty() {
             let left = deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
                 break;
@@ -224,7 +277,7 @@ impl CompletionTable {
 
     /// Jobs submitted but not yet retired.
     pub fn pending(&self) -> usize {
-        self.inner.lock().unwrap().outstanding
+        self.inner.lock().unwrap().in_flight.len()
     }
 
     /// Jobs that retired as failed and were not yet observed through
@@ -241,6 +294,13 @@ mod tests {
     use crate::workload::MatI32;
     use std::sync::Arc;
 
+    /// Register handles for `ids` (tests submit by bare id).
+    fn reg(t: &CompletionTable, ids: &[u64]) {
+        let handles: Vec<JobHandle> =
+            ids.iter().map(|&i| JobHandle { id: JobId(i) }).collect();
+        t.register(&handles);
+    }
+
     fn result(id: u64) -> JobResult {
         JobResult {
             id: JobId(id),
@@ -255,7 +315,7 @@ mod tests {
     #[test]
     fn poll_pending_then_done_takes_once() {
         let t = CompletionTable::new();
-        t.register(1);
+        reg(&t, &[0]);
         let h = JobHandle { id: JobId(0) };
         assert!(matches!(t.poll(h), JobState::Pending));
         t.complete(result(0));
@@ -270,7 +330,7 @@ mod tests {
     #[test]
     fn wait_any_preserves_completion_order_and_skips_taken() {
         let t = CompletionTable::new();
-        t.register(3);
+        reg(&t, &[0, 1, 2]);
         t.complete(result(2));
         t.complete(result(0));
         t.complete(result(1));
@@ -285,7 +345,7 @@ mod tests {
     #[test]
     fn failed_jobs_resolve_and_retire() {
         let t = CompletionTable::new();
-        t.register(2);
+        reg(&t, &[7, 8]);
         t.complete_failed(JobId(7));
         assert_eq!(t.failed_count(), 1);
         assert!(matches!(
@@ -312,7 +372,7 @@ mod tests {
     #[test]
     fn drain_takes_and_clears_failed_ids() {
         let t = CompletionTable::new();
-        t.register(4);
+        reg(&t, &[0, 1, 2, 3]);
         t.complete_failed(JobId(3));
         t.complete(result(1));
         t.complete_failed(JobId(0));
@@ -334,7 +394,7 @@ mod tests {
     #[test]
     fn wait_any_returns_none_when_all_outstanding_failed() {
         let t = CompletionTable::new();
-        t.register(2);
+        reg(&t, &[0, 1]);
         t.complete_failed(JobId(0));
         t.complete_failed(JobId(1));
         let start = Instant::now();
@@ -348,7 +408,7 @@ mod tests {
     #[test]
     fn duration_max_timeouts_do_not_panic() {
         let t = CompletionTable::new();
-        t.register(2);
+        reg(&t, &[0, 1]);
         t.complete(result(0));
         t.complete(result(1));
         let state = t.wait(JobHandle { id: JobId(0) }, Duration::MAX);
@@ -366,10 +426,73 @@ mod tests {
         assert!(start.elapsed() < Duration::from_secs(5));
     }
 
+    /// `forget` drops parked results immediately and in-flight ones at
+    /// retirement; live handles are untouched.
+    #[test]
+    fn forget_drops_parked_and_inflight_results() {
+        let t = CompletionTable::new();
+        reg(&t, &[0, 1, 2]);
+        t.complete(result(0)); // parked, never redeemed
+        t.forget(&[JobId(0), JobId(1)]); // 0 parked, 1 still in flight
+        assert_eq!(t.unclaimed(), 0);
+        t.complete(result(1)); // orphaned: dropped at retirement
+        assert_eq!(t.unclaimed(), 0);
+        assert_eq!(t.pending(), 1);
+        t.complete(result(2)); // live handle unaffected
+        assert_eq!(t.unclaimed(), 1);
+        let drained = t.drain(Duration::from_millis(50));
+        assert_eq!(drained.completed.len(), 1);
+        assert_eq!(drained.completed[0].id, JobId(2));
+        assert!(drained.failed.is_empty());
+        assert_eq!(t.pending(), 0);
+        assert_eq!(t.unclaimed(), 0);
+    }
+
+    /// Forgetting failed markers and already-redeemed ids is safe and
+    /// leaves no state behind (the orphan set self-clears at empty).
+    #[test]
+    fn forget_failed_and_redeemed_ids_is_safe() {
+        let t = CompletionTable::new();
+        reg(&t, &[0, 1]);
+        t.complete_failed(JobId(0));
+        t.forget(&[JobId(0)]);
+        assert_eq!(t.failed_count(), 0);
+        t.complete(result(1));
+        assert!(t.poll(JobHandle { id: JobId(1) }).is_done());
+        // Already redeemed + pipeline empty: ignored entirely.
+        t.forget(&[JobId(1)]);
+        assert_eq!(t.pending(), 0);
+        assert_eq!(t.unclaimed(), 0);
+        // The table still works afterwards.
+        reg(&t, &[7]);
+        t.complete(result(7));
+        assert_eq!(t.wait_any(Duration::from_millis(50)).unwrap().id, JobId(7));
+    }
+
+    /// Targeted redemption and forget prune `order`: its length tracks
+    /// *currently parked* results, not all-time completions — a server
+    /// whose clients only ever `wait(id)` must not grow the queue.
+    #[test]
+    fn order_queue_stays_bounded_under_targeted_redemption() {
+        let t = CompletionTable::new();
+        reg(&t, &[0, 1, 2]);
+        t.complete(result(0));
+        t.complete(result(1));
+        t.complete(result(2));
+        assert!(t.poll(JobHandle { id: JobId(1) }).is_done());
+        t.forget(&[JobId(0)]);
+        assert_eq!(t.inner.lock().unwrap().order.len(), 1);
+        assert_eq!(
+            t.wait_any(Duration::from_millis(10)).unwrap().id,
+            JobId(2)
+        );
+        assert_eq!(t.inner.lock().unwrap().order.len(), 0);
+    }
+
     #[test]
     fn wait_blocks_until_cross_thread_completion() {
         let t = Arc::new(CompletionTable::new());
-        t.register(1);
+        reg(&t, &[4]);
         let t2 = Arc::clone(&t);
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(30));

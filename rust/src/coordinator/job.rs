@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 pub struct JobId(pub u64);
 
 /// A unit of work for the matrix engine service.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Job {
     /// Plain INT8 GEMM: `a (M×K) @ w (K×N)`.
     Gemm { a: MatI8, w: MatI8 },
@@ -97,7 +97,7 @@ impl Job {
 }
 
 /// Completed job: output + cycle accounting + wall time.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JobResult {
     pub id: JobId,
     pub output: MatI32,

@@ -1,5 +1,6 @@
 //! Service metrics: shared counters + latency aggregation.
 
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -80,6 +81,38 @@ impl Metrics {
         }
     }
 
+    /// The metrics snapshot as one JSON object — the single emitter
+    /// behind the wire protocol's `Stats`/`Shutdown` responses,
+    /// `serve`'s end-of-run report, and the bench artifact writer.
+    /// Counter keys match the field names; derived rates ride along so
+    /// consumers never recompute them differently.
+    pub fn snapshot_json(&self) -> Json {
+        let (p50, p95, max) = self.latency_percentiles();
+        let load = |c: &AtomicU64| Json::uint(c.load(Ordering::Relaxed));
+        Json::object([
+            ("jobs_submitted", load(&self.jobs_submitted)),
+            ("jobs_completed", load(&self.jobs_completed)),
+            ("jobs_failed", load(&self.jobs_failed)),
+            ("batches_submitted", load(&self.batches_submitted)),
+            ("macs", load(&self.macs)),
+            ("sim_cycles", load(&self.sim_cycles)),
+            ("guard_overflows", load(&self.guard_overflows)),
+            ("tiles_executed", load(&self.tiles_executed)),
+            ("steals", load(&self.steals)),
+            ("fills_issued", load(&self.fills_issued)),
+            ("fills_avoided", load(&self.fills_avoided)),
+            ("fill_cycles_saved", load(&self.fill_cycles_saved)),
+            ("fill_amortization", Json::float(self.fill_amortization())),
+            (
+                "effective_macs_per_cycle",
+                Json::float(self.effective_macs_per_cycle()),
+            ),
+            ("latency_p50_us", Json::uint(p50)),
+            ("latency_p95_us", Json::uint(p95)),
+            ("latency_max_us", Json::uint(max)),
+        ])
+    }
+
     pub fn summary(&self) -> String {
         let (p50, p95, max) = self.latency_percentiles();
         format!(
@@ -122,6 +155,31 @@ mod tests {
     fn empty_percentiles_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_percentiles(), (0, 0, 0));
+    }
+
+    #[test]
+    fn snapshot_json_matches_counters() {
+        let m = Metrics::new();
+        m.jobs_submitted.fetch_add(2, Ordering::Relaxed);
+        m.fills_issued.fetch_add(4, Ordering::Relaxed);
+        m.fills_avoided.fetch_add(12, Ordering::Relaxed);
+        m.record_completion(1000, 100, Duration::from_micros(5));
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("jobs_submitted").unwrap().as_i64(), Some(2));
+        assert_eq!(snap.get("jobs_completed").unwrap().as_i64(), Some(1));
+        assert_eq!(snap.get("fills_avoided").unwrap().as_i64(), Some(12));
+        assert_eq!(snap.get("latency_max_us").unwrap().as_i64(), Some(5));
+        match snap.get("effective_macs_per_cycle").unwrap() {
+            crate::util::json::Json::Float(f) => {
+                assert!((f - 10.0).abs() < 1e-12)
+            }
+            other => panic!("expected float, got {other:?}"),
+        }
+        // The snapshot is the wire/report emitter: it must serialize
+        // and re-parse unchanged.
+        let parsed =
+            crate::util::json::Json::parse(&snap.to_string()).unwrap();
+        assert_eq!(parsed, snap);
     }
 
     #[test]

@@ -461,7 +461,7 @@ impl Service {
         self.metrics
             .jobs_submitted
             .fetch_add(total_jobs as u64, Ordering::Relaxed);
-        self.completion.register(total_jobs);
+        self.completion.register(&handles);
         for id in &rejected {
             self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
             self.completion.complete_failed(*id);
@@ -595,10 +595,13 @@ impl Service {
         self.completion.failed_count()
     }
 
-    /// Receive one completed result (blocking with timeout). Alias of
-    /// [`Service::wait_any`], kept for the pre-batch call sites.
-    pub fn recv_timeout(&self, timeout: Duration) -> Option<JobResult> {
-        self.wait_any(timeout)
+    /// The shared completion table, for front-ends that redeem handles
+    /// without holding the service — the wire protocol's
+    /// [`crate::proto::Frontend`] waits/polls/drains through this Arc
+    /// so a blocked `Wait` from one client never serializes another
+    /// client's `Submit`.
+    pub fn completion_table(&self) -> Arc<CompletionTable> {
+        Arc::clone(&self.completion)
     }
 
     /// Stop workers (queued work drains first) and join.
@@ -814,7 +817,7 @@ mod tests {
         let mut ok = 0;
         for _ in 0..n_jobs {
             let r = svc
-                .recv_timeout(Duration::from_secs(30))
+                .wait_any(Duration::from_secs(30))
                 .expect("job completes");
             assert_eq!(r.verified, Some(true));
             assert!(r.stats.cycles > 0);
@@ -851,7 +854,7 @@ mod tests {
             shape,
         });
         let r = svc
-            .recv_timeout(Duration::from_secs(30))
+            .wait_any(Duration::from_secs(30))
             .expect("conv completes");
         assert_eq!(r.verified, Some(true));
         svc.shutdown();
@@ -1045,7 +1048,7 @@ mod tests {
         let spikes = MatI8::from_fn(8, 32, |_, _| rng.chance(1, 3) as i8);
         let weights = MatI8::random_bounded(&mut rng, 32, 32, 50);
         svc.submit(Job::Snn { spikes, weights });
-        let r = svc.recv_timeout(Duration::from_secs(30)).unwrap();
+        let r = svc.wait_any(Duration::from_secs(30)).unwrap();
         assert_eq!(r.verified, Some(true));
         svc.shutdown();
     }
@@ -1064,7 +1067,7 @@ mod tests {
         let a = MatI8::random_bounded(&mut rng, 6, 100, 63);
         let w = MatI8::random(&mut rng, 100, 40);
         svc.submit(Job::Gemm { a, w });
-        let r = svc.recv_timeout(Duration::from_secs(60)).unwrap();
+        let r = svc.wait_any(Duration::from_secs(60)).unwrap();
         assert_eq!(r.verified, Some(true));
         assert_eq!(r.stats.macs, 6 * 100 * 40);
         svc.shutdown();
@@ -1091,7 +1094,7 @@ mod tests {
                 w: w.clone(),
             });
             let r = svc
-                .recv_timeout(Duration::from_secs(60))
+                .wait_any(Duration::from_secs(60))
                 .expect("job completes");
             svc.shutdown();
             r
@@ -1130,7 +1133,7 @@ mod tests {
             a: a.clone(),
             w: w.clone(),
         });
-        let r = svc.recv_timeout(Duration::from_secs(60)).unwrap();
+        let r = svc.wait_any(Duration::from_secs(60)).unwrap();
         svc.shutdown();
         assert_eq!(r.verified, Some(true));
         assert_eq!(r.output, seq_out);
@@ -1300,7 +1303,7 @@ mod tests {
         }
         for _ in 0..jobs {
             let r = svc
-                .recv_timeout(Duration::from_secs(60))
+                .wait_any(Duration::from_secs(60))
                 .expect("all jobs complete");
             assert_eq!(r.verified, Some(true));
         }

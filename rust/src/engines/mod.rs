@@ -22,7 +22,7 @@ use crate::packing::GuardOverflow;
 use crate::workload::{MatI32, MatI8};
 
 /// Cycle-level statistics of one engine run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RunStats {
     /// Slow-domain (fabric) cycles elapsed.
     pub cycles: u64,

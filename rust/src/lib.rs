@@ -39,6 +39,7 @@ pub mod engines;
 pub mod exec;
 pub mod fabric;
 pub mod packing;
+pub mod proto;
 pub mod runtime;
 pub mod util;
 pub mod workload;

@@ -7,13 +7,23 @@
 //! dsp48-systolic simulate --workload conv --in-c 8 --in-h 12 --in-w 12 \
 //!     --out-c 16 --kernel 3 --stride 1 --pad 1
 //! dsp48-systolic serve --jobs 16 --workers 2 --engine ws-dsp-fetch
-//! dsp48-systolic serve --jobs 1 --workers 4 --m 512 --k 512 --n 512
 //! dsp48-systolic serve --jobs 32 --batch 8   # shared-weight batches
 //! dsp48-systolic serve --workload conv --jobs 8 --batch 4  # conv traffic
+//! dsp48-systolic serve --listen 127.0.0.1:7878 --workers 4  # wire server
+//! dsp48-systolic client submit --addr 127.0.0.1:7878 --jobs 4 --batch 4
+//! dsp48-systolic client submit --addr HOST:PORT --workload conv
+//! dsp48-systolic client stats --addr HOST:PORT
+//! dsp48-systolic client shutdown --addr HOST:PORT   # drain + stop
 //! dsp48-systolic sweep --min 6 --max 14       # tinyTPU-style size sweep
 //! dsp48-systolic waveform --fig 3|5|6         # paper waveform traces
 //! dsp48-systolic artifacts                    # list AOT registry
 //! ```
+//!
+//! Everything that submits work goes through the transport-agnostic
+//! [`Session`] front-end: `simulate` and the `serve` generator loop
+//! drive an in-process [`LocalSession`], `serve --listen` puts the
+//! same dispatcher behind a TCP listener, and `client` is the socket
+//! peer — the generator loop is just one client among many.
 //!
 //! Conv jobs run the **lazy tiling** path: workers extract im2col
 //! patches per tile from the raw NCHW input, and `--verify`
@@ -23,25 +33,29 @@
 //!
 //! Unknown `--flags` are usage errors (exit 2), never silently
 //! ignored — and so are workload-exclusive flags under the wrong
-//! workload (`--kernel` without `--workload conv`, `--m` with it).
+//! workload (`--kernel` without `--workload conv`, `--m` with it) and
+//! generator flags under `serve --listen` (the clients own the
+//! workload there).
 
 use dsp48_systolic::coordinator::service::{run_gemm_tiled, EngineKind};
-use dsp48_systolic::coordinator::{Batch, Job, JobState, Service, ServiceConfig};
+use dsp48_systolic::coordinator::{Job, JobState, Service, ServiceConfig};
 use dsp48_systolic::cost::report::{render_table, render_breakdown};
 use dsp48_systolic::engines::os::{OsConfig, OsEngine, OsVariant};
 use dsp48_systolic::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
 use dsp48_systolic::engines::ws::{WsConfig, WsEngine, WsVariant};
 use dsp48_systolic::engines::Engine;
+use dsp48_systolic::proto::{LocalSession, Session, TcpServer, TcpSession};
 use dsp48_systolic::runtime::ArtifactRegistry;
 use dsp48_systolic::util::rng::XorShift;
 use dsp48_systolic::workload::conv::ConvShape;
 use dsp48_systolic::workload::gemm::golden_gemm;
 use dsp48_systolic::workload::MatI8;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 const USAGE: &str = "usage: dsp48-systolic \
-     <report|simulate|serve|sweep|waveform|artifacts> [--flag value ...]";
+     <report|simulate|serve|client|sweep|waveform|artifacts> [--flag value ...]";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -59,6 +73,7 @@ fn main() {
         "report" => cmd_report(&flags),
         "simulate" => cmd_simulate(&flags),
         "serve" => cmd_serve(&flags),
+        "client" => cmd_client(&args, &flags),
         "sweep" => cmd_sweep(&flags),
         "waveform" => cmd_waveform(&flags),
         "artifacts" => cmd_artifacts(&flags),
@@ -111,6 +126,27 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "pad",
             "shard-width",
             "verify",
+            "listen",
+            "port-file",
+        ],
+        "client" => &[
+            "addr",
+            "workload",
+            "jobs",
+            "batch",
+            "seed",
+            "timeout-s",
+            "spikes",
+            "m",
+            "k",
+            "n",
+            "in-c",
+            "in-h",
+            "in-w",
+            "out-c",
+            "kernel",
+            "stride",
+            "pad",
         ],
         "sweep" => &["min", "max"],
         "waveform" => &["fig"],
@@ -188,15 +224,29 @@ fn is_snn(kind: EngineKind) -> bool {
     matches!(kind, EngineKind::SnnFireFly | EngineKind::SnnEnhanced)
 }
 
+/// Conv-workload-exclusive flags (`--spikes` is the client's
+/// binary-input switch for SNN servers — conv-only like the rest).
+const CONV_ONLY: [&str; 8] = [
+    "in-c", "in-h", "in-w", "out-c", "kernel", "stride", "pad", "spikes",
+];
+/// GEMM-workload-exclusive flags.
+const GEMM_ONLY: [&str; 3] = ["m", "k", "n"];
+/// Generator-loop flags that are neither workload's shape flags; with
+/// [`CONV_ONLY`] and [`GEMM_ONLY`] these form the full set rejected
+/// under `serve --listen` (clients own the workload there) — one
+/// source, so the exclusive lists cannot drift.
+const GENERATOR_EXTRA: [&str; 3] = ["jobs", "batch", "workload"];
+/// Client flags that only `client submit` consumes; with the workload
+/// shape lists these are usage errors under `client stats|shutdown`.
+const SUBMIT_ONLY: [&str; 5] =
+    ["jobs", "batch", "seed", "timeout-s", "workload"];
+
 /// Flags that only apply to one workload are usage errors under the
 /// other — same contract as unknown flags: never silently ignored.
 fn check_workload_flags(
     flags: &HashMap<String, String>,
     workload: &str,
 ) -> Result<(), String> {
-    const CONV_ONLY: [&str; 7] =
-        ["in-c", "in-h", "in-w", "out-c", "kernel", "stride", "pad"];
-    const GEMM_ONLY: [&str; 3] = ["m", "k", "n"];
     let (exclusive, needed): (&[&str], &str) = if workload == "conv" {
         (&GEMM_ONLY, "gemm")
     } else {
@@ -287,6 +337,38 @@ fn conv_job(
 /// exact (the SNN 12-bit lanes are the tightest).
 fn conv_weights(rng: &mut XorShift, shape: ConvShape) -> Vec<i8> {
     (0..shape.weight_len()).map(|_| rng.i8_in(-63, 63)).collect()
+}
+
+/// One shared-weight batch of `size` jobs (the one-model-many-users
+/// pattern): weights are generated once per batch, activations vary
+/// per job. The single generator behind both the `serve` loop and
+/// `client submit`, so their seeded workloads cannot drift.
+fn generate_batch(
+    rng: &mut XorShift,
+    conv_shape: Option<ConvShape>,
+    (m, k, n): (usize, usize, usize),
+    size: usize,
+    spikes: bool,
+) -> Vec<Job> {
+    let mut batch = Vec::with_capacity(size);
+    match conv_shape {
+        Some(shape) => {
+            let weights = conv_weights(rng, shape);
+            for _ in 0..size {
+                batch.push(conv_job(rng, shape, &weights, spikes));
+            }
+        }
+        None => {
+            let w = MatI8::random(rng, k, n);
+            for _ in 0..size {
+                batch.push(Job::Gemm {
+                    a: MatI8::random_bounded(rng, m, k, 63),
+                    w: w.clone(),
+                });
+            }
+        }
+    }
+    batch
 }
 
 fn cmd_report(flags: &HashMap<String, String>) -> i32 {
@@ -420,14 +502,20 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
 
     if workers > 1 {
         // Shard the single GEMM across the worker pool (tile-level
-        // work units + work stealing) and report the assembly.
-        let mut svc = Service::start(cfg.clone());
-        svc.submit(Job::Gemm {
-            a: a.clone(),
-            w: w.clone(),
-        });
-        let Some(r) = svc.recv_timeout(Duration::from_secs(600)) else {
-            eprintln!("simulate failed: job timed out");
+        // work units + work stealing) and report the assembly. Runs
+        // through the same Session front-end a wire client uses.
+        let mut session = LocalSession::start(cfg.clone());
+        let id = session
+            .submit(Job::Gemm {
+                a: a.clone(),
+                w: w.clone(),
+            })
+            .expect("local submission cannot fail");
+        let state = session
+            .wait(id, Some(Duration::from_secs(600)))
+            .expect("local wait cannot fail");
+        let JobState::Done(r) = state else {
+            eprintln!("simulate failed: job timed out or failed");
             return 1;
         };
         let ok = r.verified == Some(true);
@@ -449,17 +537,21 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
         println!("cycles    : {} slow (aggregated)", r.stats.cycles);
         println!(
             "tiles     : {} executed, {} stolen",
-            svc.metrics
+            session
+                .metrics()
                 .tiles_executed
                 .load(std::sync::atomic::Ordering::Relaxed),
-            svc.metrics.steals.load(std::sync::atomic::Ordering::Relaxed)
+            session
+                .metrics()
+                .steals
+                .load(std::sync::atomic::Ordering::Relaxed)
         );
         println!("wall      : {:?} ({:?} simulated)", r.wall, r.simulated);
         println!(
             "verified  : {}",
             if ok { "bit-exact vs golden" } else { "MISMATCH" }
         );
-        svc.shutdown();
+        let _ = session.shutdown();
         return i32::from(!ok);
     }
 
@@ -504,9 +596,11 @@ fn cmd_simulate_conv(cfg: ServiceConfig, shape: ConvShape, seed: u64) -> i32 {
     let weights = conv_weights(&mut rng, shape);
     let job = conv_job(&mut rng, shape, &weights, snn);
     let (m, k, n) = shape.gemm_dims();
-    let mut svc = Service::start(cfg.clone());
-    let handle = svc.submit(job);
-    let state = svc.wait(handle, Duration::from_secs(600));
+    let mut session = LocalSession::start(cfg.clone());
+    let id = session.submit(job).expect("local submission cannot fail");
+    let state = session
+        .wait(id, Some(Duration::from_secs(600)))
+        .expect("local wait cannot fail");
     let code = match state {
         JobState::Done(r) => {
             let ok = r.verified == Some(true);
@@ -555,7 +649,7 @@ fn cmd_simulate_conv(cfg: ServiceConfig, shape: ConvShape, seed: u64) -> i32 {
             1
         }
     };
-    svc.shutdown();
+    let _ = session.shutdown();
     code
 }
 
@@ -590,6 +684,28 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             shard_width: flag_usize(flags, "shard-width", 1),
         }
     };
+    if let Some(addr) = flags.get("listen") {
+        // Pure wire server: the clients own the workload, so the
+        // generator flags are usage errors here — same contract as
+        // unknown flags, never silently ignored.
+        let offending: Vec<String> = GENERATOR_EXTRA
+            .iter()
+            .chain(GEMM_ONLY.iter())
+            .chain(CONV_ONLY.iter())
+            .filter(|f| flags.contains_key(**f))
+            .map(|f| format!("--{f}"))
+            .collect();
+        if !offending.is_empty() {
+            eprintln!(
+                "flag(s) {} only apply to the in-process generator loop, \
+                 not `serve --listen` (clients submit the workload)",
+                offending.join(", ")
+            );
+            eprintln!("{USAGE}");
+            return 2;
+        }
+        return cmd_serve_listen(cfg, addr, flags.get("port-file"));
+    }
     let jobs = flag_usize(flags, "jobs", 16);
     let batch = flag_usize(flags, "batch", 1).max(1);
     let (m, k, n) = (
@@ -636,83 +752,72 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         ),
     }
     let snn = is_snn(cfg.kind);
-    let mut svc = Service::start(cfg);
+    // The generator loop is just one client of the Session front-end —
+    // the same submit/wait protocol a TCP client speaks, minus the
+    // socket. Generation, scheduling and retirement overlap: submit
+    // stays ahead of the workers up to `max_inflight` jobs, and
+    // waiting on the *oldest* outstanding handle wakes per completion
+    // (a bulk Drain would block until the whole window emptied,
+    // stalling submission exactly when the pipeline is healthiest).
+    let mut session = LocalSession::start(cfg);
     let mut rng = XorShift::new(7);
-    // Non-blocking front-end: generation, scheduling and retirement
-    // overlap — submit stays ahead of the workers up to `max_inflight`
-    // jobs while completions retire as they arrive. Engine-failed jobs
-    // never surface through `wait_any`, so the loop consults
-    // `failed_count` instead of blocking on them.
     let max_inflight = (4 * batch).max(16);
     let deadline = std::time::Instant::now() + Duration::from_secs(600);
+    let mut pending: std::collections::VecDeque<u64> =
+        std::collections::VecDeque::new();
     let mut submitted = 0usize;
     let mut retired = 0usize;
     let mut verify_failures = 0usize;
-    let mut failed_seen = 0usize;
-    while retired + failed_seen < jobs {
-        while submitted < jobs
-            && submitted - retired - failed_seen < max_inflight
-        {
-            // One weight set per batch (the one-model-many-users
-            // pattern); activations vary per job.
+    let mut failed = 0usize;
+    while retired + failed < jobs {
+        while submitted < jobs && pending.len() < max_inflight {
             let size = batch.min(jobs - submitted);
-            let mut b = Batch::new();
-            match conv_shape {
-                Some(shape) => {
-                    let weights = conv_weights(&mut rng, shape);
-                    for _ in 0..size {
-                        b.push(conv_job(&mut rng, shape, &weights, snn));
-                    }
-                }
-                None => {
-                    let w = MatI8::random(&mut rng, k, n);
-                    for _ in 0..size {
-                        b.push(Job::Gemm {
-                            a: MatI8::random_bounded(&mut rng, m, k, 63),
-                            w: w.clone(),
-                        });
-                    }
-                }
-            }
-            svc.submit_batch(b);
-            submitted += size;
+            let b = generate_batch(&mut rng, conv_shape, (m, k, n), size, snn);
+            let ids = session
+                .submit_batch(b)
+                .expect("local submission cannot fail");
+            submitted += ids.len();
+            pending.extend(ids);
         }
-        match svc.wait_any(Duration::from_millis(200)) {
-            // `verified` is None when --verify false: completion alone
-            // counts as success then.
-            Some(r) => {
+        let Some(&oldest) = pending.front() else {
+            break; // nothing outstanding and nothing left to submit
+        };
+        match session
+            .wait(oldest, Some(Duration::from_millis(200)))
+            .expect("local wait cannot fail")
+        {
+            JobState::Done(r) => {
+                pending.pop_front();
                 retired += 1;
+                // `verified` is None when --verify false: completion
+                // alone counts as success then.
                 if r.verified == Some(false) {
                     verify_failures += 1;
                 }
             }
-            None => {
+            JobState::Failed => {
+                pending.pop_front();
+                failed += 1;
+            }
+            JobState::Pending => {
                 if std::time::Instant::now() >= deadline {
                     eprintln!("timeout waiting for jobs");
                     break;
                 }
             }
         }
-        // Refresh the failure count every iteration — not just on the
-        // timeout arm — so a failed job shrinks the inflight window
-        // immediately instead of running it stale for up to 200 ms
-        // per completion.
-        failed_seen = svc.failed_count();
     }
-    let engine_failures = svc.failed_count();
-    let unretired = jobs.saturating_sub(retired + engine_failures);
-    let failures = verify_failures + engine_failures + unretired;
-    println!("{}", svc.metrics.summary());
-    let issued = svc
-        .metrics
+    let unretired = jobs.saturating_sub(retired + failed);
+    let failures = verify_failures + failed + unretired;
+    let metrics = Arc::clone(session.metrics());
+    println!("{}", metrics.summary());
+    let issued = metrics
         .fills_issued
         .load(std::sync::atomic::Ordering::Relaxed);
-    let avoided = svc
-        .metrics
+    let avoided = metrics
         .fills_avoided
         .load(std::sync::atomic::Ordering::Relaxed);
-    let saved = svc
-        .metrics
+    let saved = metrics
         .fill_cycles_saved
         .load(std::sync::atomic::Ordering::Relaxed);
     println!(
@@ -721,13 +826,234 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         issued,
         avoided,
         saved,
-        100.0 * svc.metrics.fill_amortization()
+        100.0 * metrics.fill_amortization()
     );
     println!(
         "effective : {:.2} MACs/cycle across all retired jobs",
-        svc.metrics.effective_macs_per_cycle()
+        metrics.effective_macs_per_cycle()
     );
-    svc.shutdown();
+    // End-of-run report: the same snapshot the wire protocol's Stats
+    // and Shutdown responses carry (one emitter, three consumers).
+    match session.shutdown() {
+        Ok(report) => println!("report    : {report}"),
+        Err(e) => eprintln!("shutdown failed: {e}"),
+    }
+    i32::from(failures > 0)
+}
+
+/// `serve --listen ADDR`: expose the service over the wire protocol
+/// and block until a client's `Shutdown` request (which drains pending
+/// jobs first — no Ctrl-C needed for a clean exit). `--port-file PATH`
+/// writes the bound address (useful with port 0) for scripts.
+fn cmd_serve_listen(
+    cfg: ServiceConfig,
+    addr: &str,
+    port_file: Option<&String>,
+) -> i32 {
+    if let Some(path) = port_file {
+        // Drop any stale file from a previous run before binding, so
+        // a script polling for it cannot read last run's (dead or
+        // reassigned) address.
+        let _ = std::fs::remove_file(path);
+    }
+    let svc = Service::start(cfg.clone());
+    let server = match TcpServer::bind(addr, svc) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: cannot bind {addr}: {e}");
+            return 1;
+        }
+    };
+    let local = match server.local_addr() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("serve: cannot read bound address: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "listening on {local} ({} x{} workers, shard width {}, verify {})",
+        cfg.kind.label(),
+        cfg.workers,
+        cfg.shard_width,
+        if cfg.verify { "on" } else { "off" }
+    );
+    if let Some(path) = port_file {
+        if let Err(e) = std::fs::write(path, local.to_string()) {
+            eprintln!("serve: cannot write port file {path}: {e}");
+            return 1;
+        }
+    }
+    let final_report = server.run();
+    println!("shutdown complete; final metrics:");
+    println!("{}", final_report.to_pretty());
+    0
+}
+
+/// `client <submit|stats|shutdown> --addr HOST:PORT`: a wire-protocol
+/// peer of `serve --listen`. `submit` generates the same seeded
+/// workloads as the serve generator loop (shared weights per batch)
+/// and waits each handle; exit is non-zero unless every job verifies.
+fn cmd_client(args: &[String], flags: &HashMap<String, String>) -> i32 {
+    let action = args
+        .get(1)
+        .filter(|a| !a.starts_with("--"))
+        .map(String::as_str);
+    let Some(action) = action else {
+        eprintln!(
+            "usage: dsp48-systolic client <submit|stats|shutdown> \
+             --addr HOST:PORT [--flag value ...]"
+        );
+        return 2;
+    };
+    if !matches!(action, "submit" | "stats" | "shutdown") {
+        eprintln!(
+            "unknown client action `{action}` (have submit, stats, shutdown)"
+        );
+        return 2;
+    }
+    if action != "submit" {
+        // Workload/generation flags only mean something to `submit`:
+        // same contract as everywhere else in this CLI — a flag the
+        // action would ignore is a usage error, never silently
+        // accepted.
+        let offending: Vec<String> = SUBMIT_ONLY
+            .iter()
+            .chain(GEMM_ONLY.iter())
+            .chain(CONV_ONLY.iter())
+            .filter(|f| flags.contains_key(**f))
+            .map(|f| format!("--{f}"))
+            .collect();
+        if !offending.is_empty() {
+            eprintln!(
+                "flag(s) {} only apply to `client submit` \
+                 (current action: {action})",
+                offending.join(", ")
+            );
+            return 2;
+        }
+    }
+    let Some(addr) = flags.get("addr") else {
+        eprintln!("client: --addr HOST:PORT is required");
+        return 2;
+    };
+    let mut session = match TcpSession::connect(addr) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("client: cannot connect to {addr}: {e}");
+            return 1;
+        }
+    };
+    match action {
+        "submit" => client_submit(&mut session, flags),
+        "stats" => match session.stats() {
+            Ok(snapshot) => {
+                println!("{}", snapshot.to_pretty());
+                0
+            }
+            Err(e) => {
+                eprintln!("client: stats failed: {e}");
+                1
+            }
+        },
+        "shutdown" => match session.shutdown() {
+            Ok(report) => {
+                println!("server drained and shut down; final metrics:");
+                println!("{}", report.to_pretty());
+                0
+            }
+            Err(e) => {
+                eprintln!("client: shutdown failed: {e}");
+                1
+            }
+        },
+        _ => unreachable!("action validated above"),
+    }
+}
+
+fn client_submit(
+    session: &mut TcpSession,
+    flags: &HashMap<String, String>,
+) -> i32 {
+    let jobs = flag_usize(flags, "jobs", 1);
+    let batch = flag_usize(flags, "batch", 1).max(1);
+    let seed = flag_usize(flags, "seed", 7) as u64;
+    let timeout = Duration::from_secs(flag_usize(flags, "timeout-s", 600) as u64);
+    // `--spikes` is conv-exclusive (resolve_workload rejects it under
+    // gemm via CONV_ONLY); here only its value needs validating —
+    // anything but true/false is a usage error, never a silent false.
+    let spikes = match flags.get("spikes").map(String::as_str) {
+        None | Some("false") => false,
+        Some("true") => true,
+        Some(other) => {
+            eprintln!("client: --spikes takes true or false, got `{other}`");
+            return 2;
+        }
+    };
+    let (m, k, n) = (
+        flag_usize(flags, "m", 16),
+        flag_usize(flags, "k", 28),
+        flag_usize(flags, "n", 28),
+    );
+    // The client cannot see the server's engine kind; conv defaults
+    // assume a dense engine (pass explicit shape flags — and --spikes
+    // — when the server runs an SNN crossbar).
+    let conv_shape = match resolve_workload(flags, EngineKind::WsDspFetch) {
+        Ok(cs) => cs,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let mut rng = XorShift::new(seed);
+    let mut failures = 0usize;
+    let mut submitted = 0usize;
+    while submitted < jobs {
+        let size = batch.min(jobs - submitted);
+        let batch_jobs =
+            generate_batch(&mut rng, conv_shape, (m, k, n), size, spikes);
+        let ids = match session.submit_batch(batch_jobs) {
+            Ok(ids) => ids,
+            Err(e) => {
+                eprintln!("client: submit failed: {e}");
+                return 1;
+            }
+        };
+        for id in ids {
+            match session.wait(id, Some(timeout)) {
+                Ok(JobState::Done(r)) => {
+                    if r.verified == Some(false) {
+                        failures += 1;
+                    }
+                    println!(
+                        "job {id:>4}: {} cycles, {:.1} MACs/cycle, \
+                         verified {}",
+                        r.stats.cycles,
+                        r.stats.macs_per_cycle(),
+                        match r.verified {
+                            Some(true) => "yes",
+                            Some(false) => "MISMATCH",
+                            None => "off",
+                        }
+                    );
+                }
+                Ok(JobState::Failed) => {
+                    failures += 1;
+                    eprintln!("job {id}: FAILED (engine error or bad shape)");
+                }
+                Ok(JobState::Pending) => {
+                    failures += 1;
+                    eprintln!("job {id}: timed out after {timeout:?}");
+                }
+                Err(e) => {
+                    eprintln!("client: wait failed: {e}");
+                    return 1;
+                }
+            }
+        }
+        submitted += size;
+    }
+    println!("{jobs} job(s) submitted, {failures} failed");
     i32::from(failures > 0)
 }
 
@@ -870,6 +1196,13 @@ mod tests {
             vec!["serve", "--m", "512", "--k", "512", "--n", "512"],
             vec!["serve", "--jobs", "32", "--batch", "8"],
             vec!["serve", "--workload", "conv", "--kernel", "3", "--pad", "1"],
+            vec!["serve", "--listen", "127.0.0.1:0", "--port-file", "/tmp/a"],
+            vec!["client", "submit", "--addr", "127.0.0.1:1", "--jobs", "2"],
+            vec!["client", "stats", "--addr", "127.0.0.1:1"],
+            vec![
+                "client", "submit", "--addr", "127.0.0.1:1", "--workload",
+                "conv", "--kernel", "3",
+            ],
             vec!["sweep", "--min", "6"],
             vec!["waveform", "--fig", "5"],
             vec!["artifacts"],
@@ -902,6 +1235,13 @@ mod tests {
             parse_args(&args(&["serve", "--workload", "conv", "--m", "64"]));
         let err = check_workload_flags(&flags, "conv").unwrap_err();
         assert!(err.contains("--m"), "{err}");
+
+        // `--spikes` (the client's binary-input switch) is conv-only:
+        // forgetting `--workload conv` must not silently drop it.
+        let (_, flags) =
+            parse_args(&args(&["client", "submit", "--spikes", "true"]));
+        let err = check_workload_flags(&flags, "gemm").unwrap_err();
+        assert!(err.contains("--spikes"), "{err}");
 
         let (_, flags) = parse_args(&args(&[
             "serve", "--workload", "conv", "--kernel", "3", "--jobs", "4",
@@ -948,6 +1288,53 @@ mod tests {
         ]));
         let custom = conv_shape_from_flags(&flags, EngineKind::WsDspFetch);
         assert_eq!((custom.k, custom.in_c), (5, 4));
+    }
+
+    /// The client action is a positional token: parse_args must leave
+    /// it alone (not eat it as a flag value) so cmd_client can read it.
+    #[test]
+    fn client_action_stays_positional() {
+        let (cmd, flags) = parse_args(&args(&[
+            "client", "submit", "--addr", "127.0.0.1:9", "--jobs", "3",
+        ]));
+        assert_eq!(cmd.as_deref(), Some("client"));
+        assert_eq!(flags.get("addr").map(String::as_str), Some("127.0.0.1:9"));
+        assert_eq!(flag_usize(&flags, "jobs", 0), 3);
+        assert!(!flags.contains_key("submit"));
+    }
+
+    /// Submit-only flags under `client stats|shutdown` (and unknown
+    /// actions) are usage errors resolved before any connection is
+    /// attempted — never silently ignored.
+    #[test]
+    fn client_non_submit_actions_reject_submit_flags() {
+        let argv =
+            args(&["client", "stats", "--addr", "127.0.0.1:1", "--jobs", "3"]);
+        let (_, flags) = parse_args(&argv);
+        assert_eq!(cmd_client(&argv, &flags), 2);
+        let argv = args(&[
+            "client", "shutdown", "--addr", "127.0.0.1:1", "--workload",
+            "conv",
+        ]);
+        let (_, flags) = parse_args(&argv);
+        assert_eq!(cmd_client(&argv, &flags), 2);
+        let argv = args(&["client", "frobnicate", "--addr", "127.0.0.1:1"]);
+        let (_, flags) = parse_args(&argv);
+        assert_eq!(cmd_client(&argv, &flags), 2);
+    }
+
+    #[test]
+    fn listen_and_generator_flags_validate_separately() {
+        // `--listen` and `--port-file` are accepted serve flags...
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--listen", "127.0.0.1:0", "--port-file", "/tmp/x",
+        ]));
+        assert!(validate_flags("serve", &flags).is_ok());
+        // ...but are not client or simulate flags.
+        let (_, flags) = parse_args(&args(&["client", "submit", "--listen", "x"]));
+        assert!(validate_flags("client", &flags).is_err());
+        let (_, flags) = parse_args(&args(&["simulate", "--listen", "x"]));
+        assert!(validate_flags("simulate", &flags).is_err());
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Length-prefixed frame codec for the wire protocol.
+//!
+//! A frame is a 4-byte big-endian payload length followed by exactly
+//! that many payload bytes (UTF-8 JSON, see [`super::message`]).
+//! The codec is transport-agnostic: anything `Read`/`Write` works —
+//! `TcpStream`s in production, `Cursor`s in tests.
+//!
+//! Failure taxonomy (all typed, never a panic):
+//!
+//! * clean EOF before the first prefix byte → `Ok(None)` (the peer
+//!   closed between frames — a normal disconnect);
+//! * EOF mid-prefix or mid-payload → [`FrameError::Truncated`];
+//! * a declared length above [`MAX_FRAME_LEN`] →
+//!   [`FrameError::Oversize`]. The four prefix bytes are consumed and
+//!   **no payload bytes are skipped**: a server that answers with a
+//!   typed error keeps the connection usable exactly when the peer
+//!   stopped after the bogus prefix (the only way an in-protocol peer
+//!   can produce this — an actual 64 MiB payload would mean the peer
+//!   ignored the limit entirely, and the next read fails on its bytes).
+
+use std::io::{self, Read, Write};
+
+/// Ceiling on one frame's payload (64 MiB). A 512×512 INT32 result —
+/// far above anything the engines serve today — is under 3 MiB of
+/// JSON, so the cap only ever rejects garbage prefixes, not real
+/// traffic.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Why a frame could not be read (or written).
+#[derive(Debug)]
+pub enum FrameError {
+    /// The stream ended mid-prefix or mid-payload.
+    Truncated,
+    /// The prefix declared a payload larger than [`MAX_FRAME_LEN`].
+    Oversize { len: usize, max: usize },
+    /// Transport-level failure.
+    Io(io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated => {
+                write!(f, "frame truncated (stream ended mid-frame)")
+            }
+            FrameError::Oversize { len, max } => {
+                write!(f, "frame length {len} exceeds maximum {max}")
+            }
+            FrameError::Io(e) => write!(f, "frame i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
+}
+
+/// Write one frame (prefix + payload) and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "frame payload {} exceeds maximum {MAX_FRAME_LEN}",
+                payload.len()
+            ),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame's payload. `Ok(None)` = the peer closed cleanly
+/// before sending another frame.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0usize;
+    while got < prefix.len() {
+        match r.read(&mut prefix[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(FrameError::Truncated)
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let len = u32::from_be_bytes(prefix) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::Oversize {
+            len,
+            max: MAX_FRAME_LEN,
+        });
+    }
+    // Grow the buffer with the bytes actually received (`take` +
+    // `read_to_end` doubles adaptively) instead of trusting the
+    // declared length upfront: a 4-byte prefix alone must not be able
+    // to pin 64 MiB of zeroed memory per connection.
+    let mut payload = Vec::with_capacity(len.min(64 * 1024));
+    match r.by_ref().take(len as u64).read_to_end(&mut payload) {
+        Ok(n) if n == len => Ok(Some(payload)),
+        Ok(_) => Err(FrameError::Truncated),
+        Err(e) => Err(FrameError::Io(e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_round_trip_back_to_back() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"first").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, b"third frame").unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), b"first");
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), b"third frame");
+        // Clean EOF between frames is a normal disconnect, not an error.
+        assert!(read_frame(&mut c).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_prefix_is_typed() {
+        let mut c = Cursor::new(vec![0u8, 0, 0]); // 3 of 4 prefix bytes
+        assert!(matches!(read_frame(&mut c), Err(FrameError::Truncated)));
+    }
+
+    #[test]
+    fn truncated_payload_is_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        buf.truncate(7); // prefix + 3 of 5 payload bytes
+        let mut c = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut c), Err(FrameError::Truncated)));
+    }
+
+    #[test]
+    fn oversize_prefix_is_typed_and_consumes_only_the_prefix() {
+        let mut buf = u32::MAX.to_be_bytes().to_vec();
+        write_frame(&mut buf, b"next").unwrap();
+        let mut c = Cursor::new(buf);
+        assert!(matches!(
+            read_frame(&mut c),
+            Err(FrameError::Oversize { .. })
+        ));
+        // The reader is positioned right after the bogus prefix: the
+        // following well-formed frame still parses.
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), b"next");
+    }
+
+    #[test]
+    fn oversize_write_is_rejected() {
+        // Don't allocate 64 MiB in a unit test: a zero-length slice
+        // with a faked length is impossible, so check the boundary via
+        // the real API on a just-over payload only when cheap.
+        let payload = vec![0u8; MAX_FRAME_LEN + 1];
+        let mut sink = Vec::new();
+        assert!(write_frame(&mut sink, &payload).is_err());
+        assert!(sink.is_empty());
+    }
+}

@@ -1,0 +1,910 @@
+//! Typed wire messages and their JSON encoding.
+//!
+//! Every message is one JSON object with a version field (`"v"`), a
+//! tag (`"req"` / `"resp"`), and flat payload fields. The encoding is
+//! total — `to_json` can represent every value the coordinator
+//! produces — and decoding is typed: schema violations, unknown tags
+//! and version mismatches come back as [`ProtoError`], which servers
+//! answer with [`Response::Error`] instead of dropping the connection.
+//!
+//! Payload schemas (version 1):
+//!
+//! ```text
+//! matrix  {"rows": R, "cols": C, "data": [ints, row-major]}
+//! shape   {"in_c", "in_h", "in_w", "out_c", "k", "stride", "pad"}
+//! job     {"kind": "gemm",  "a": matrix, "w": matrix}
+//!       | {"kind": "conv",  "input": [i8], "weights": [i8], "shape": shape}
+//!       | {"kind": "snn",   "spikes": matrix, "weights": matrix}
+//! result  {"id", "output": matrix, "stats": {run-stat counters},
+//!          "simulated_us", "wall_us", "verified": bool|null}
+//! ```
+//!
+//! `timeout_ms` fields are `null` (or absent) for "wait forever",
+//! which the service clamps safely (`Duration::MAX` semantics).
+
+use crate::coordinator::{Job, JobResult};
+use crate::engines::RunStats;
+use crate::util::json::{Json, JsonError};
+use crate::workload::conv::ConvShape;
+use crate::workload::{MatI32, MatI8};
+use std::time::Duration;
+
+/// Wire protocol version; bumped on any incompatible schema change.
+/// Decoders reject other versions with a typed error, so a stale
+/// client gets a diagnosable `Error` response instead of garbage.
+pub const PROTO_VERSION: i64 = 1;
+
+/// A client-to-server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Submit one GEMM job; answered with [`Response::Handle`].
+    SubmitGemm { a: MatI8, w: MatI8 },
+    /// Submit one conv job (raw NCHW input; the server lowers it
+    /// lazily); answered with [`Response::Handle`].
+    SubmitConv {
+        input: Vec<i8>,
+        weights: Vec<i8>,
+        shape: ConvShape,
+    },
+    /// Submit a batch in one call (weight-tile reuse groups across the
+    /// whole batch, exactly like the in-process API); answered with
+    /// [`Response::Handles`] in job order.
+    SubmitBatch { jobs: Vec<Job> },
+    /// Non-blocking handle redemption; answered with
+    /// [`Response::Result`] or [`Response::State`].
+    Poll { id: u64 },
+    /// Blocking handle redemption; `timeout_ms: None` waits forever.
+    Wait { id: u64, timeout_ms: Option<u64> },
+    /// Retire everything outstanding (or until `timeout_ms`); answered
+    /// with [`Response::Drained`]. **Global**: takes every session's
+    /// unclaimed completions, not just this one's — an operator verb.
+    /// Multi-client deployments should redeem per handle (`Wait`);
+    /// per-session drain scoping is a roadmap follow-on.
+    Drain { timeout_ms: Option<u64> },
+    /// Metrics snapshot; answered with [`Response::Metrics`].
+    Stats,
+    /// Graceful shutdown: the server drains every pending job
+    /// (unbounded wait), answers with the final [`Response::Metrics`]
+    /// snapshot, and stops its listener.
+    Shutdown,
+}
+
+/// Pending/failed — the two handle states that carry no result (a
+/// completed redemption answers [`Response::Result`] instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollState {
+    Pending,
+    Failed,
+}
+
+/// Machine-readable error class on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Unreadable frame (oversize declared length).
+    BadFrame,
+    /// The payload was not valid JSON.
+    BadJson,
+    /// Valid JSON that violates the message schema (missing field,
+    /// unknown tag, wrong version).
+    BadRequest,
+    /// The service has already shut down.
+    Unavailable,
+    /// An error code this client build does not know (newer server).
+    Unknown,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadFrame => "bad-frame",
+            ErrorCode::BadJson => "bad-json",
+            ErrorCode::BadRequest => "bad-request",
+            ErrorCode::Unavailable => "unavailable",
+            ErrorCode::Unknown => "unknown",
+        }
+    }
+
+    pub fn parse(s: &str) -> ErrorCode {
+        match s {
+            "bad-frame" => ErrorCode::BadFrame,
+            "bad-json" => ErrorCode::BadJson,
+            "bad-request" => ErrorCode::BadRequest,
+            "unavailable" => ErrorCode::Unavailable,
+            _ => ErrorCode::Unknown,
+        }
+    }
+}
+
+/// A typed error response: the request (or frame) was not served, the
+/// connection stays open.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> WireError {
+        WireError {
+            code,
+            message: message.into(),
+        }
+    }
+
+    pub fn unavailable() -> WireError {
+        WireError::new(
+            ErrorCode::Unavailable,
+            "service has shut down; no further requests are served",
+        )
+    }
+
+    /// Classify a decode failure for the wire.
+    pub fn from_proto(e: &ProtoError) -> WireError {
+        let code = match e {
+            ProtoError::Json(_) | ProtoError::Utf8 => ErrorCode::BadJson,
+            _ => ErrorCode::BadRequest,
+        };
+        WireError::new(code, e.to_string())
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+/// A server-to-client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// One job accepted.
+    Handle { id: u64 },
+    /// A batch accepted, handles in job order.
+    Handles { ids: Vec<u64> },
+    /// Handle redeemed without a result (still pending, or failed).
+    State(PollState),
+    /// Handle redeemed: the completed job.
+    Result(Box<JobResult>),
+    /// Everything a `Drain` retired.
+    Drained {
+        completed: Vec<JobResult>,
+        failed: Vec<u64>,
+    },
+    /// A metrics snapshot (`Stats`, and the `Shutdown` ack).
+    Metrics(Json),
+    /// The request could not be served; the connection stays open.
+    Error(WireError),
+}
+
+impl Response {
+    /// Short tag for diagnostics ("expected Result, got `state`").
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Response::Handle { .. } => "handle",
+            Response::Handles { .. } => "handles",
+            Response::State(_) => "state",
+            Response::Result(_) => "result",
+            Response::Drained { .. } => "drained",
+            Response::Metrics(_) => "metrics",
+            Response::Error(_) => "error",
+        }
+    }
+}
+
+/// Why a payload failed to decode.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProtoError {
+    /// Payload bytes are not UTF-8.
+    Utf8,
+    /// Payload is not valid JSON.
+    Json(JsonError),
+    /// Wrong protocol version.
+    Version { got: i64 },
+    /// A required field is missing or has the wrong type/range.
+    Schema { what: &'static str },
+    /// Unknown `req`/`resp`/`kind` tag.
+    UnknownTag { kind: &'static str, tag: String },
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Utf8 => write!(f, "payload is not valid UTF-8"),
+            ProtoError::Json(e) => write!(f, "payload is not JSON: {e}"),
+            ProtoError::Version { got } => write!(
+                f,
+                "unsupported protocol version {got} (this build speaks \
+                 {PROTO_VERSION})"
+            ),
+            ProtoError::Schema { what } => {
+                write!(f, "missing or mistyped field `{what}`")
+            }
+            ProtoError::UnknownTag { kind, tag } => {
+                write!(f, "unknown {kind} tag `{tag}`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn envelope(
+    tag_key: &'static str,
+    tag: &'static str,
+    fields: Vec<(&'static str, Json)>,
+) -> Json {
+    let mut pairs = vec![
+        ("v", Json::Int(PROTO_VERSION)),
+        (tag_key, Json::from(tag)),
+    ];
+    pairs.extend(fields);
+    Json::object(pairs)
+}
+
+fn mat_i8_to_json(m: &MatI8) -> Json {
+    Json::object([
+        ("rows", Json::from(m.rows)),
+        ("cols", Json::from(m.cols)),
+        ("data", Json::array(m.data.iter().map(|&v| Json::Int(v as i64)))),
+    ])
+}
+
+fn mat_i32_to_json(m: &MatI32) -> Json {
+    Json::object([
+        ("rows", Json::from(m.rows)),
+        ("cols", Json::from(m.cols)),
+        ("data", Json::array(m.data.iter().map(|&v| Json::Int(v as i64)))),
+    ])
+}
+
+fn i8_slice_to_json(s: &[i8]) -> Json {
+    Json::array(s.iter().map(|&v| Json::Int(v as i64)))
+}
+
+fn shape_to_json(s: ConvShape) -> Json {
+    Json::object([
+        ("in_c", Json::from(s.in_c)),
+        ("in_h", Json::from(s.in_h)),
+        ("in_w", Json::from(s.in_w)),
+        ("out_c", Json::from(s.out_c)),
+        ("k", Json::from(s.k)),
+        ("stride", Json::from(s.stride)),
+        ("pad", Json::from(s.pad)),
+    ])
+}
+
+fn job_to_json(job: &Job) -> Json {
+    match job {
+        Job::Gemm { a, w } => Json::object([
+            ("kind", Json::from("gemm")),
+            ("a", mat_i8_to_json(a)),
+            ("w", mat_i8_to_json(w)),
+        ]),
+        Job::Conv {
+            input,
+            weights,
+            shape,
+        } => Json::object([
+            ("kind", Json::from("conv")),
+            ("input", i8_slice_to_json(input)),
+            ("weights", i8_slice_to_json(weights)),
+            ("shape", shape_to_json(*shape)),
+        ]),
+        Job::Snn { spikes, weights } => Json::object([
+            ("kind", Json::from("snn")),
+            ("spikes", mat_i8_to_json(spikes)),
+            ("weights", mat_i8_to_json(weights)),
+        ]),
+    }
+}
+
+fn stats_to_json(s: &RunStats) -> Json {
+    // Exhaustive destructuring: adding a RunStats field breaks this
+    // build instead of silently dropping the counter off the wire.
+    let RunStats {
+        cycles,
+        fast_cycles,
+        macs,
+        weight_stall_cycles,
+        weight_loads,
+        guard_overflows,
+        fills_avoided,
+        fill_cycles_saved,
+    } = *s;
+    Json::object([
+        ("cycles", Json::uint(cycles)),
+        ("fast_cycles", Json::uint(fast_cycles)),
+        ("macs", Json::uint(macs)),
+        ("weight_stall_cycles", Json::uint(weight_stall_cycles)),
+        ("weight_loads", Json::uint(weight_loads)),
+        ("guard_overflows", Json::uint(guard_overflows)),
+        ("fills_avoided", Json::uint(fills_avoided)),
+        ("fill_cycles_saved", Json::uint(fill_cycles_saved)),
+    ])
+}
+
+fn result_to_json(r: &JobResult) -> Json {
+    Json::object([
+        ("id", Json::uint(r.id.0)),
+        ("output", mat_i32_to_json(&r.output)),
+        ("stats", stats_to_json(&r.stats)),
+        ("simulated_us", Json::uint(r.simulated.as_micros() as u64)),
+        ("wall_us", Json::uint(r.wall.as_micros() as u64)),
+        (
+            "verified",
+            match r.verified {
+                None => Json::Null,
+                Some(b) => Json::Bool(b),
+            },
+        ),
+    ])
+}
+
+fn opt_u64_to_json(v: Option<u64>) -> Json {
+    match v {
+        None => Json::Null,
+        Some(ms) => Json::uint(ms),
+    }
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::SubmitGemm { a, w } => envelope(
+                "req",
+                "submit-gemm",
+                vec![("a", mat_i8_to_json(a)), ("w", mat_i8_to_json(w))],
+            ),
+            Request::SubmitConv {
+                input,
+                weights,
+                shape,
+            } => envelope(
+                "req",
+                "submit-conv",
+                vec![
+                    ("input", i8_slice_to_json(input)),
+                    ("weights", i8_slice_to_json(weights)),
+                    ("shape", shape_to_json(*shape)),
+                ],
+            ),
+            Request::SubmitBatch { jobs } => envelope(
+                "req",
+                "submit-batch",
+                vec![("jobs", Json::array(jobs.iter().map(job_to_json)))],
+            ),
+            Request::Poll { id } => {
+                envelope("req", "poll", vec![("id", Json::uint(*id))])
+            }
+            Request::Wait { id, timeout_ms } => envelope(
+                "req",
+                "wait",
+                vec![
+                    ("id", Json::uint(*id)),
+                    ("timeout_ms", opt_u64_to_json(*timeout_ms)),
+                ],
+            ),
+            Request::Drain { timeout_ms } => envelope(
+                "req",
+                "drain",
+                vec![("timeout_ms", opt_u64_to_json(*timeout_ms))],
+            ),
+            Request::Stats => envelope("req", "stats", vec![]),
+            Request::Shutdown => envelope("req", "shutdown", vec![]),
+        }
+    }
+
+    /// Serialize to frame-payload bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
+    }
+
+    /// Decode frame-payload bytes.
+    pub fn decode(bytes: &[u8]) -> Result<Request, ProtoError> {
+        Request::from_json(&parse_payload(bytes)?)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Request, ProtoError> {
+        let tag = check_envelope(v, "req")?;
+        Ok(match tag {
+            "submit-gemm" => Request::SubmitGemm {
+                a: mat_i8_field(v, "a")?,
+                w: mat_i8_field(v, "w")?,
+            },
+            "submit-conv" => Request::SubmitConv {
+                input: i8_vec_field(v, "input")?,
+                weights: i8_vec_field(v, "weights")?,
+                shape: shape_field(v, "shape")?,
+            },
+            "submit-batch" => {
+                let jobs = v
+                    .get("jobs")
+                    .and_then(Json::as_array)
+                    .ok_or(ProtoError::Schema { what: "jobs" })?;
+                Request::SubmitBatch {
+                    jobs: jobs
+                        .iter()
+                        .map(job_from_json)
+                        .collect::<Result<_, _>>()?,
+                }
+            }
+            "poll" => Request::Poll {
+                id: u64_field(v, "id")?,
+            },
+            "wait" => Request::Wait {
+                id: u64_field(v, "id")?,
+                timeout_ms: opt_u64_field(v, "timeout_ms")?,
+            },
+            "drain" => Request::Drain {
+                timeout_ms: opt_u64_field(v, "timeout_ms")?,
+            },
+            "stats" => Request::Stats,
+            "shutdown" => Request::Shutdown,
+            other => {
+                return Err(ProtoError::UnknownTag {
+                    kind: "request",
+                    tag: other.to_string(),
+                })
+            }
+        })
+    }
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Handle { id } => {
+                envelope("resp", "handle", vec![("id", Json::uint(*id))])
+            }
+            Response::Handles { ids } => envelope(
+                "resp",
+                "handles",
+                vec![(
+                    "ids",
+                    Json::array(ids.iter().map(|&id| Json::uint(id))),
+                )],
+            ),
+            Response::State(state) => envelope(
+                "resp",
+                "state",
+                vec![(
+                    "state",
+                    Json::from(match state {
+                        PollState::Pending => "pending",
+                        PollState::Failed => "failed",
+                    }),
+                )],
+            ),
+            Response::Result(r) => {
+                envelope("resp", "result", vec![("result", result_to_json(r))])
+            }
+            Response::Drained { completed, failed } => envelope(
+                "resp",
+                "drained",
+                vec![
+                    (
+                        "completed",
+                        Json::array(completed.iter().map(result_to_json)),
+                    ),
+                    (
+                        "failed",
+                        Json::array(failed.iter().map(|&id| Json::uint(id))),
+                    ),
+                ],
+            ),
+            Response::Metrics(snapshot) => envelope(
+                "resp",
+                "metrics",
+                vec![("metrics", snapshot.clone())],
+            ),
+            Response::Error(e) => envelope(
+                "resp",
+                "error",
+                vec![
+                    ("code", Json::from(e.code.as_str())),
+                    ("message", Json::from(e.message.as_str())),
+                ],
+            ),
+        }
+    }
+
+    /// Serialize to frame-payload bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
+    }
+
+    /// Decode frame-payload bytes.
+    pub fn decode(bytes: &[u8]) -> Result<Response, ProtoError> {
+        Response::from_json(&parse_payload(bytes)?)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Response, ProtoError> {
+        let tag = check_envelope(v, "resp")?;
+        Ok(match tag {
+            "handle" => Response::Handle {
+                id: u64_field(v, "id")?,
+            },
+            "handles" => Response::Handles {
+                ids: u64_vec_field(v, "ids")?,
+            },
+            "state" => {
+                let state = v
+                    .get("state")
+                    .and_then(Json::as_str)
+                    .ok_or(ProtoError::Schema { what: "state" })?;
+                Response::State(match state {
+                    "pending" => PollState::Pending,
+                    "failed" => PollState::Failed,
+                    other => {
+                        return Err(ProtoError::UnknownTag {
+                            kind: "state",
+                            tag: other.to_string(),
+                        })
+                    }
+                })
+            }
+            "result" => Response::Result(Box::new(result_field(v, "result")?)),
+            "drained" => {
+                let completed = v
+                    .get("completed")
+                    .and_then(Json::as_array)
+                    .ok_or(ProtoError::Schema { what: "completed" })?;
+                Response::Drained {
+                    completed: completed
+                        .iter()
+                        .map(result_from_json)
+                        .collect::<Result<_, _>>()?,
+                    failed: u64_vec_field(v, "failed")?,
+                }
+            }
+            "metrics" => Response::Metrics(
+                v.get("metrics")
+                    .ok_or(ProtoError::Schema { what: "metrics" })?
+                    .clone(),
+            ),
+            "error" => {
+                let code = v
+                    .get("code")
+                    .and_then(Json::as_str)
+                    .ok_or(ProtoError::Schema { what: "code" })?;
+                let message = v
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .ok_or(ProtoError::Schema { what: "message" })?;
+                Response::Error(WireError::new(
+                    ErrorCode::parse(code),
+                    message,
+                ))
+            }
+            other => {
+                return Err(ProtoError::UnknownTag {
+                    kind: "response",
+                    tag: other.to_string(),
+                })
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decoding helpers
+// ---------------------------------------------------------------------
+
+fn parse_payload(bytes: &[u8]) -> Result<Json, ProtoError> {
+    let text = std::str::from_utf8(bytes).map_err(|_| ProtoError::Utf8)?;
+    Json::parse(text).map_err(ProtoError::Json)
+}
+
+/// Verify version + extract the message tag.
+fn check_envelope<'a>(
+    v: &'a Json,
+    tag_key: &'static str,
+) -> Result<&'a str, ProtoError> {
+    let version = v
+        .get("v")
+        .and_then(Json::as_i64)
+        .ok_or(ProtoError::Schema { what: "v" })?;
+    if version != PROTO_VERSION {
+        return Err(ProtoError::Version { got: version });
+    }
+    v.get(tag_key)
+        .and_then(Json::as_str)
+        .ok_or(ProtoError::Schema { what: tag_key })
+}
+
+fn u64_field(v: &Json, what: &'static str) -> Result<u64, ProtoError> {
+    v.get(what)
+        .and_then(Json::as_i64)
+        .and_then(|i| u64::try_from(i).ok())
+        .ok_or(ProtoError::Schema { what })
+}
+
+fn opt_u64_field(
+    v: &Json,
+    what: &'static str,
+) -> Result<Option<u64>, ProtoError> {
+    match v.get(what) {
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => j
+            .as_i64()
+            .and_then(|i| u64::try_from(i).ok())
+            .map(Some)
+            .ok_or(ProtoError::Schema { what }),
+    }
+}
+
+fn usize_field(v: &Json, what: &'static str) -> Result<usize, ProtoError> {
+    v.get(what)
+        .and_then(Json::as_i64)
+        .and_then(|i| usize::try_from(i).ok())
+        .ok_or(ProtoError::Schema { what })
+}
+
+fn u64_vec_field(
+    v: &Json,
+    what: &'static str,
+) -> Result<Vec<u64>, ProtoError> {
+    v.get(what)
+        .and_then(Json::as_array)
+        .ok_or(ProtoError::Schema { what })?
+        .iter()
+        .map(|j| {
+            j.as_i64()
+                .and_then(|i| u64::try_from(i).ok())
+                .ok_or(ProtoError::Schema { what })
+        })
+        .collect()
+}
+
+fn i8_vec_from(v: &Json, what: &'static str) -> Result<Vec<i8>, ProtoError> {
+    v.as_array()
+        .ok_or(ProtoError::Schema { what })?
+        .iter()
+        .map(|j| {
+            j.as_i64()
+                .and_then(|i| i8::try_from(i).ok())
+                .ok_or(ProtoError::Schema { what })
+        })
+        .collect()
+}
+
+fn i8_vec_field(v: &Json, what: &'static str) -> Result<Vec<i8>, ProtoError> {
+    i8_vec_from(v.get(what).ok_or(ProtoError::Schema { what })?, what)
+}
+
+fn mat_i8_from(v: &Json, what: &'static str) -> Result<MatI8, ProtoError> {
+    let rows = usize_field(v, "rows")?;
+    let cols = usize_field(v, "cols")?;
+    let data = i8_vec_field(v, "data")?;
+    if data.len() != rows.checked_mul(cols).ok_or(ProtoError::Schema { what })? {
+        return Err(ProtoError::Schema { what });
+    }
+    Ok(MatI8 { rows, cols, data })
+}
+
+fn mat_i8_field(v: &Json, what: &'static str) -> Result<MatI8, ProtoError> {
+    mat_i8_from(v.get(what).ok_or(ProtoError::Schema { what })?, what)
+}
+
+fn mat_i32_from(v: &Json, what: &'static str) -> Result<MatI32, ProtoError> {
+    let rows = usize_field(v, "rows")?;
+    let cols = usize_field(v, "cols")?;
+    let data: Vec<i32> = v
+        .get("data")
+        .and_then(Json::as_array)
+        .ok_or(ProtoError::Schema { what })?
+        .iter()
+        .map(|j| {
+            j.as_i64()
+                .and_then(|i| i32::try_from(i).ok())
+                .ok_or(ProtoError::Schema { what })
+        })
+        .collect::<Result<_, _>>()?;
+    if data.len() != rows.checked_mul(cols).ok_or(ProtoError::Schema { what })? {
+        return Err(ProtoError::Schema { what });
+    }
+    Ok(MatI32 { rows, cols, data })
+}
+
+fn shape_from_json(v: &Json) -> Result<ConvShape, ProtoError> {
+    Ok(ConvShape {
+        in_c: usize_field(v, "in_c")?,
+        in_h: usize_field(v, "in_h")?,
+        in_w: usize_field(v, "in_w")?,
+        out_c: usize_field(v, "out_c")?,
+        k: usize_field(v, "k")?,
+        stride: usize_field(v, "stride")?,
+        pad: usize_field(v, "pad")?,
+    })
+}
+
+fn shape_field(v: &Json, what: &'static str) -> Result<ConvShape, ProtoError> {
+    shape_from_json(v.get(what).ok_or(ProtoError::Schema { what })?)
+}
+
+fn job_from_json(v: &Json) -> Result<Job, ProtoError> {
+    let kind = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or(ProtoError::Schema { what: "kind" })?;
+    Ok(match kind {
+        "gemm" => Job::Gemm {
+            a: mat_i8_field(v, "a")?,
+            w: mat_i8_field(v, "w")?,
+        },
+        "conv" => Job::Conv {
+            input: i8_vec_field(v, "input")?,
+            weights: i8_vec_field(v, "weights")?,
+            shape: shape_field(v, "shape")?,
+        },
+        "snn" => Job::Snn {
+            spikes: mat_i8_field(v, "spikes")?,
+            weights: mat_i8_field(v, "weights")?,
+        },
+        other => {
+            return Err(ProtoError::UnknownTag {
+                kind: "job",
+                tag: other.to_string(),
+            })
+        }
+    })
+}
+
+fn stats_from_json(v: &Json) -> Result<RunStats, ProtoError> {
+    Ok(RunStats {
+        cycles: u64_field(v, "cycles")?,
+        fast_cycles: u64_field(v, "fast_cycles")?,
+        macs: u64_field(v, "macs")?,
+        weight_stall_cycles: u64_field(v, "weight_stall_cycles")?,
+        weight_loads: u64_field(v, "weight_loads")?,
+        guard_overflows: u64_field(v, "guard_overflows")?,
+        fills_avoided: u64_field(v, "fills_avoided")?,
+        fill_cycles_saved: u64_field(v, "fill_cycles_saved")?,
+    })
+}
+
+fn result_from_json(v: &Json) -> Result<JobResult, ProtoError> {
+    use crate::coordinator::JobId;
+    let verified = match v.get("verified") {
+        None | Some(Json::Null) => None,
+        Some(Json::Bool(b)) => Some(*b),
+        Some(_) => return Err(ProtoError::Schema { what: "verified" }),
+    };
+    Ok(JobResult {
+        id: JobId(u64_field(v, "id")?),
+        output: mat_i32_from(
+            v.get("output").ok_or(ProtoError::Schema { what: "output" })?,
+            "output",
+        )?,
+        stats: stats_from_json(
+            v.get("stats").ok_or(ProtoError::Schema { what: "stats" })?,
+        )?,
+        simulated: Duration::from_micros(u64_field(v, "simulated_us")?),
+        wall: Duration::from_micros(u64_field(v, "wall_us")?),
+        verified,
+    })
+}
+
+fn result_field(
+    v: &Json,
+    what: &'static str,
+) -> Result<JobResult, ProtoError> {
+    result_from_json(v.get(what).ok_or(ProtoError::Schema { what })?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::JobId;
+
+    #[test]
+    fn version_mismatch_is_typed() {
+        let doc = Json::parse(r#"{"v": 99, "req": "stats"}"#).unwrap();
+        assert_eq!(
+            Request::from_json(&doc),
+            Err(ProtoError::Version { got: 99 })
+        );
+    }
+
+    #[test]
+    fn unknown_request_tag_is_typed() {
+        let doc = Json::parse(r#"{"v": 1, "req": "transmogrify"}"#).unwrap();
+        assert_eq!(
+            Request::from_json(&doc),
+            Err(ProtoError::UnknownTag {
+                kind: "request",
+                tag: "transmogrify".to_string()
+            })
+        );
+    }
+
+    #[test]
+    fn missing_fields_are_schema_errors() {
+        let doc = Json::parse(r#"{"v": 1, "req": "poll"}"#).unwrap();
+        assert_eq!(
+            Request::from_json(&doc),
+            Err(ProtoError::Schema { what: "id" })
+        );
+        let doc =
+            Json::parse(r#"{"v": 1, "req": "submit-gemm", "a": 3}"#).unwrap();
+        assert!(Request::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn mismatched_matrix_length_is_a_schema_error() {
+        let doc = Json::parse(
+            r#"{"v":1,"req":"submit-gemm",
+                "a":{"rows":2,"cols":2,"data":[1,2,3]},
+                "w":{"rows":2,"cols":2,"data":[1,2,3,4]}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            Request::from_json(&doc),
+            Err(ProtoError::Schema { what: "a" })
+        );
+    }
+
+    #[test]
+    fn non_utf8_and_non_json_payloads_are_typed() {
+        assert_eq!(Request::decode(&[0xFF, 0xFE]), Err(ProtoError::Utf8));
+        assert!(matches!(
+            Request::decode(b"{not json"),
+            Err(ProtoError::Json(_))
+        ));
+    }
+
+    #[test]
+    fn timeout_null_and_absent_both_mean_forever() {
+        let doc =
+            Json::parse(r#"{"v":1,"req":"wait","id":3,"timeout_ms":null}"#)
+                .unwrap();
+        assert_eq!(
+            Request::from_json(&doc).unwrap(),
+            Request::Wait {
+                id: 3,
+                timeout_ms: None
+            }
+        );
+        let doc = Json::parse(r#"{"v":1,"req":"drain"}"#).unwrap();
+        assert_eq!(
+            Request::from_json(&doc).unwrap(),
+            Request::Drain { timeout_ms: None }
+        );
+    }
+
+    #[test]
+    fn verified_tristate_round_trips() {
+        for verified in [None, Some(true), Some(false)] {
+            let r = JobResult {
+                id: JobId(7),
+                output: MatI32 {
+                    rows: 1,
+                    cols: 2,
+                    data: vec![i32::MIN, i32::MAX],
+                },
+                stats: RunStats::default(),
+                simulated: Duration::from_micros(12),
+                wall: Duration::from_micros(9),
+                verified,
+            };
+            let resp = Response::Result(Box::new(r));
+            assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn unknown_error_code_degrades_to_unknown() {
+        let doc = Json::parse(
+            r#"{"v":1,"resp":"error","code":"quantum-flux","message":"m"}"#,
+        )
+        .unwrap();
+        match Response::from_json(&doc).unwrap() {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::Unknown),
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! The versioned wire protocol and transport-agnostic front-end.
+//!
+//! The coordinator's [`crate::coordinator::Service`] is an in-process
+//! API; this module puts the serving seam in front of it that a
+//! deployment needs (the host-facing request interface the DPU runtime
+//! and scalable-GEMM serving stacks separate from their array
+//! schedulers):
+//!
+//! * [`message`] — typed [`Request`] / [`Response`] messages with a
+//!   versioned JSON encoding (built on [`crate::util::json`]; no new
+//!   dependencies);
+//! * [`frame`] — the length-prefixed frame codec (4-byte big-endian
+//!   length + JSON payload) with a typed failure taxonomy;
+//! * [`session`] — the [`Session`] trait (submit/poll/wait/drain/
+//!   stats/shutdown over `request`), the shared [`Frontend`]
+//!   dispatcher, and the in-process [`LocalSession`];
+//! * [`tcp`] — [`TcpSession`] / [`TcpServer`]: blocking socket threads
+//!   feeding the same `Frontend`, so local and remote callers observe
+//!   bit-identical behavior.
+//!
+//! Error philosophy: malformed frames and malformed payloads resolve
+//! as typed [`Response::Error`]s on a still-open connection; bad job
+//! shapes resolve as `Failed` handles exactly like the in-process API.
+//! Nothing a client sends can panic the server or tear down another
+//! client's session.
+//!
+//! Scoping caveat: handles are session-tracked only for cleanup — a
+//! disconnecting client's unredeemed results are forgotten (dropped,
+//! not leaked) — but `Drain` and `Shutdown` retire **globally**
+//! across sessions. They are operator verbs; ordinary clients should
+//! redeem their own handles with `Poll`/`Wait`. Per-session drain
+//! scoping and fairness are roadmap follow-ons.
+
+pub mod frame;
+pub mod message;
+pub mod session;
+pub mod tcp;
+
+pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME_LEN};
+pub use message::{
+    ErrorCode, PollState, ProtoError, Request, Response, WireError,
+    PROTO_VERSION,
+};
+pub use session::{Frontend, LocalSession, Session, SessionError};
+pub use tcp::{TcpServer, TcpSession};

@@ -1,0 +1,552 @@
+//! The transport-agnostic front-end: a [`Session`] trait over the
+//! request/response protocol, the shared [`Frontend`] dispatcher that
+//! lowers requests onto a [`Service`], and the in-process
+//! [`LocalSession`] implementation.
+//!
+//! Every transport speaks the same typed messages through the same
+//! dispatcher, so `simulate`, the `serve` generator loop, and a TCP
+//! client ([`super::tcp::TcpSession`]) are all "just clients": the
+//! only difference is whether [`Request`]s cross a socket first.
+
+use crate::coordinator::completion::{CompletionTable, JobHandle};
+use crate::coordinator::{
+    Batch, Job, JobId, JobResult, JobState, Metrics, Service, ServiceConfig,
+};
+use crate::proto::frame::FrameError;
+use crate::proto::message::{
+    PollState, ProtoError, Request, Response, WireError,
+};
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Why a session interaction failed. [`LocalSession`] never produces
+/// transport errors; remote sessions surface frame/IO/decoding
+/// failures and server-side [`WireError`]s uniformly.
+#[derive(Debug)]
+pub enum SessionError {
+    /// The peer closed the connection.
+    Closed,
+    /// Transport-level failure.
+    Io(std::io::Error),
+    /// The response frame could not be read.
+    Frame(FrameError),
+    /// The response payload could not be decoded.
+    Proto(ProtoError),
+    /// The server answered with a typed error.
+    Remote(WireError),
+    /// The server answered with a well-formed response of the wrong
+    /// kind for the request (protocol bug or version skew).
+    Unexpected(&'static str),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Closed => write!(f, "connection closed by peer"),
+            SessionError::Io(e) => write!(f, "i/o error: {e}"),
+            SessionError::Frame(e) => write!(f, "frame error: {e}"),
+            SessionError::Proto(e) => write!(f, "protocol error: {e}"),
+            SessionError::Remote(e) => write!(f, "server error: {e}"),
+            SessionError::Unexpected(tag) => {
+                write!(f, "unexpected response kind `{tag}`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+impl From<std::io::Error> for SessionError {
+    fn from(e: std::io::Error) -> SessionError {
+        SessionError::Io(e)
+    }
+}
+
+impl From<FrameError> for SessionError {
+    fn from(e: FrameError) -> SessionError {
+        SessionError::Frame(e)
+    }
+}
+
+impl From<ProtoError> for SessionError {
+    fn from(e: ProtoError) -> SessionError {
+        SessionError::Proto(e)
+    }
+}
+
+fn timeout_ms(timeout: Option<Duration>) -> Option<u64> {
+    timeout.map(|d| u64::try_from(d.as_millis()).unwrap_or(u64::MAX))
+}
+
+/// One client's view of a matrix-engine service, local or remote.
+///
+/// `request` is the only required method; the typed convenience
+/// methods are defined on top of it, so every implementation shares
+/// identical submit/wait/drain semantics.
+pub trait Session {
+    /// Issue one request and return the server's response. Transport
+    /// failures are `Err`; server-side failures come back as
+    /// `Ok(Response::Error(..))` (callers using the convenience
+    /// methods get those lifted into [`SessionError::Remote`]).
+    fn request(&mut self, req: Request) -> Result<Response, SessionError>;
+
+    /// Submit one job; returns its handle id.
+    fn submit(&mut self, job: Job) -> Result<u64, SessionError> {
+        let req = match job {
+            Job::Gemm { a, w } => Request::SubmitGemm { a, w },
+            Job::Conv {
+                input,
+                weights,
+                shape,
+            } => Request::SubmitConv {
+                input,
+                weights,
+                shape,
+            },
+            other => Request::SubmitBatch { jobs: vec![other] },
+        };
+        match self.request(req)? {
+            Response::Handle { id } => Ok(id),
+            Response::Handles { ids } if ids.len() == 1 => Ok(ids[0]),
+            Response::Error(e) => Err(SessionError::Remote(e)),
+            other => Err(SessionError::Unexpected(other.tag())),
+        }
+    }
+
+    /// Submit a batch in one request; handle ids come back in job
+    /// order (weight-tile reuse groups across the whole batch).
+    fn submit_batch(
+        &mut self,
+        jobs: Vec<Job>,
+    ) -> Result<Vec<u64>, SessionError> {
+        match self.request(Request::SubmitBatch { jobs })? {
+            Response::Handles { ids } => Ok(ids),
+            Response::Error(e) => Err(SessionError::Remote(e)),
+            other => Err(SessionError::Unexpected(other.tag())),
+        }
+    }
+
+    /// Non-blocking redemption of one handle.
+    fn poll(&mut self, id: u64) -> Result<JobState, SessionError> {
+        state_of(self.request(Request::Poll { id })?)
+    }
+
+    /// Blocking redemption of one handle; `None` waits forever.
+    fn wait(
+        &mut self,
+        id: u64,
+        timeout: Option<Duration>,
+    ) -> Result<JobState, SessionError> {
+        state_of(self.request(Request::Wait {
+            id,
+            timeout_ms: timeout_ms(timeout),
+        })?)
+    }
+
+    /// Retire everything outstanding (until done or `timeout`):
+    /// completed results in arrival order plus failed handle ids.
+    fn drain(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> Result<(Vec<JobResult>, Vec<u64>), SessionError> {
+        match self.request(Request::Drain {
+            timeout_ms: timeout_ms(timeout),
+        })? {
+            Response::Drained { completed, failed } => Ok((completed, failed)),
+            Response::Error(e) => Err(SessionError::Remote(e)),
+            other => Err(SessionError::Unexpected(other.tag())),
+        }
+    }
+
+    /// The service's metrics snapshot.
+    fn stats(&mut self) -> Result<Json, SessionError> {
+        match self.request(Request::Stats)? {
+            Response::Metrics(snapshot) => Ok(snapshot),
+            Response::Error(e) => Err(SessionError::Remote(e)),
+            other => Err(SessionError::Unexpected(other.tag())),
+        }
+    }
+
+    /// Gracefully shut the service down: drains every pending job
+    /// first and returns the final metrics snapshot.
+    fn shutdown(&mut self) -> Result<Json, SessionError> {
+        match self.request(Request::Shutdown)? {
+            Response::Metrics(snapshot) => Ok(snapshot),
+            Response::Error(e) => Err(SessionError::Remote(e)),
+            other => Err(SessionError::Unexpected(other.tag())),
+        }
+    }
+}
+
+fn state_of(resp: Response) -> Result<JobState, SessionError> {
+    match resp {
+        Response::Result(r) => Ok(JobState::Done(r)),
+        Response::State(PollState::Pending) => Ok(JobState::Pending),
+        Response::State(PollState::Failed) => Ok(JobState::Failed),
+        Response::Error(e) => Err(SessionError::Remote(e)),
+        other => Err(SessionError::Unexpected(other.tag())),
+    }
+}
+
+/// The one request dispatcher every transport shares: lowers typed
+/// [`Request`]s onto a [`Service`]. Submissions briefly lock the
+/// service; redemptions go straight to the shared
+/// [`CompletionTable`], so one client blocked in `Wait` never stalls
+/// another client's `Submit`.
+pub struct Frontend {
+    svc: Mutex<Option<Service>>,
+    completion: Arc<CompletionTable>,
+    metrics: Arc<Metrics>,
+}
+
+impl Frontend {
+    pub fn new(svc: Service) -> Frontend {
+        let completion = svc.completion_table();
+        let metrics = Arc::clone(&svc.metrics);
+        Frontend {
+            svc: Mutex::new(Some(svc)),
+            completion,
+            metrics,
+        }
+    }
+
+    /// The service's shared metrics (valid before and after shutdown).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Abandon handles a disconnected session never redeemed: their
+    /// results are dropped (now, or at retirement) instead of parked
+    /// in the completion table forever. See
+    /// [`CompletionTable::forget`].
+    pub fn forget<I: IntoIterator<Item = u64>>(&self, ids: I) {
+        let ids: Vec<JobId> = ids.into_iter().map(JobId).collect();
+        if !ids.is_empty() {
+            self.completion.forget(&ids);
+        }
+    }
+
+    /// Put results a transport could not deliver back into the
+    /// completion table: a `Drained` payload that exceeded the frame
+    /// limit re-parks whole (the owner redeems it again in smaller
+    /// pieces), while a single undeliverable `Result` is passed in
+    /// `failed` so its handle resolves terminally as Failed instead of
+    /// looping the client through identical oversize retries.
+    pub fn repark(&self, completed: Vec<JobResult>, failed: Vec<u64>) {
+        for r in completed {
+            self.completion.complete(r);
+        }
+        for id in failed {
+            self.completion.complete_failed(JobId(id));
+        }
+    }
+
+    fn to_timeout(timeout_ms: Option<u64>) -> Duration {
+        match timeout_ms {
+            // PR 3 semantics: Duration::MAX = wait forever (the
+            // completion table clamps the deadline, no overflow panic).
+            None => Duration::MAX,
+            Some(ms) => Duration::from_millis(ms),
+        }
+    }
+
+    /// Handle one request. The bool asks the transport to close this
+    /// session after replying (set only by `Shutdown`).
+    pub fn handle(&self, req: Request) -> (Response, bool) {
+        match req {
+            Request::SubmitGemm { a, w } => {
+                self.submit_jobs(vec![Job::Gemm { a, w }], false)
+            }
+            Request::SubmitConv {
+                input,
+                weights,
+                shape,
+            } => self.submit_jobs(
+                vec![Job::Conv {
+                    input,
+                    weights,
+                    shape,
+                }],
+                false,
+            ),
+            Request::SubmitBatch { jobs } => self.submit_jobs(jobs, true),
+            Request::Poll { id } => (
+                response_of(self.completion.poll(JobHandle { id: JobId(id) })),
+                false,
+            ),
+            Request::Wait { id, timeout_ms } => (
+                response_of(self.completion.wait(
+                    JobHandle { id: JobId(id) },
+                    Self::to_timeout(timeout_ms),
+                )),
+                false,
+            ),
+            Request::Drain { timeout_ms } => {
+                let drained =
+                    self.completion.drain(Self::to_timeout(timeout_ms));
+                (
+                    Response::Drained {
+                        completed: drained.completed,
+                        failed: drained
+                            .failed
+                            .iter()
+                            .map(|id| id.0)
+                            .collect(),
+                    },
+                    false,
+                )
+            }
+            Request::Stats => {
+                (Response::Metrics(self.metrics.snapshot_json()), false)
+            }
+            Request::Shutdown => self.shutdown(),
+        }
+    }
+
+    fn submit_jobs(&self, jobs: Vec<Job>, many: bool) -> (Response, bool) {
+        let mut guard = self.svc.lock().unwrap();
+        let Some(svc) = guard.as_mut() else {
+            return (Response::Error(WireError::unavailable()), false);
+        };
+        let handles = svc.submit_batch(Batch::from(jobs));
+        let resp = if many {
+            Response::Handles {
+                ids: handles.iter().map(|h| h.id.0).collect(),
+            }
+        } else {
+            Response::Handle {
+                id: handles
+                    .first()
+                    .expect("one handle per submitted job")
+                    .id
+                    .0,
+            }
+        };
+        (resp, false)
+    }
+
+    /// Take the service (first `Shutdown` wins), drain every pending
+    /// job — unbounded, the graceful-exit contract — stop the worker
+    /// pool, and ack with the final metrics snapshot. Unclaimed
+    /// results are discarded with the drain; late requests get a
+    /// typed `unavailable` error.
+    fn shutdown(&self) -> (Response, bool) {
+        let svc = self.svc.lock().unwrap().take();
+        match svc {
+            None => (Response::Error(WireError::unavailable()), true),
+            Some(svc) => {
+                let _ = svc.drain(Duration::MAX);
+                let snapshot = self.metrics.snapshot_json();
+                svc.shutdown();
+                (Response::Metrics(snapshot), true)
+            }
+        }
+    }
+}
+
+fn response_of(state: JobState) -> Response {
+    match state {
+        JobState::Done(r) => Response::Result(r),
+        JobState::Pending => Response::State(PollState::Pending),
+        JobState::Failed => Response::State(PollState::Failed),
+    }
+}
+
+/// In-process session: wraps a [`Service`] behind the same protocol a
+/// socket client speaks, with zero serialization. `simulate` and the
+/// `serve` generator loop run on this.
+pub struct LocalSession {
+    frontend: Frontend,
+}
+
+impl LocalSession {
+    /// Start a service and wrap it.
+    pub fn start(cfg: ServiceConfig) -> LocalSession {
+        LocalSession::from_service(Service::start(cfg))
+    }
+
+    /// Wrap an already-running service.
+    pub fn from_service(svc: Service) -> LocalSession {
+        LocalSession {
+            frontend: Frontend::new(svc),
+        }
+    }
+
+    /// The service's shared metrics.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        self.frontend.metrics()
+    }
+}
+
+impl Session for LocalSession {
+    fn request(&mut self, req: Request) -> Result<Response, SessionError> {
+        let (resp, _close) = self.frontend.handle(req);
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::EngineKind;
+    use crate::proto::message::ErrorCode;
+    use crate::util::rng::XorShift;
+    use crate::workload::conv::ConvShape;
+    use crate::workload::gemm::golden_gemm;
+    use crate::workload::MatI8;
+
+    fn small_cfg() -> ServiceConfig {
+        ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 2,
+            ws_rows: 6,
+            ws_cols: 6,
+            verify: true,
+            shard_width: 1,
+        }
+    }
+
+    #[test]
+    fn local_session_serves_gemm_via_the_protocol() {
+        let mut s = LocalSession::start(small_cfg());
+        let mut rng = XorShift::new(3);
+        let a = MatI8::random_bounded(&mut rng, 4, 13, 63);
+        let w = MatI8::random(&mut rng, 13, 9);
+        let id = s
+            .submit(Job::Gemm {
+                a: a.clone(),
+                w: w.clone(),
+            })
+            .unwrap();
+        let state = s.wait(id, Some(Duration::from_secs(60))).unwrap();
+        let r = state.into_result().expect("job completes");
+        assert_eq!(r.verified, Some(true));
+        assert_eq!(r.output, golden_gemm(&a, &w));
+        // Redeeming again: taken, reports Pending.
+        assert!(matches!(s.poll(id).unwrap(), JobState::Pending));
+        let final_metrics = s.shutdown().unwrap();
+        assert_eq!(
+            final_metrics.get("jobs_completed").unwrap().as_i64(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn batch_submission_returns_handles_in_job_order() {
+        let mut s = LocalSession::start(small_cfg());
+        let mut rng = XorShift::new(11);
+        let w = MatI8::random(&mut rng, 8, 5);
+        let jobs: Vec<Job> = (0..3)
+            .map(|_| Job::Gemm {
+                a: MatI8::random_bounded(&mut rng, 2, 8, 63),
+                w: w.clone(),
+            })
+            .collect();
+        let ids = s.submit_batch(jobs).unwrap();
+        assert_eq!(ids, vec![0, 1, 2]);
+        let (completed, failed) =
+            s.drain(Some(Duration::from_secs(60))).unwrap();
+        assert_eq!(completed.len(), 3);
+        assert!(failed.is_empty());
+        s.shutdown().unwrap();
+    }
+
+    /// Bad shapes resolve as typed `Failed` states through the
+    /// protocol — no panic, and the session keeps serving.
+    #[test]
+    fn bad_shapes_resolve_failed_and_session_survives() {
+        let mut s = LocalSession::start(small_cfg());
+        let bad = ConvShape {
+            in_c: 2,
+            in_h: 5,
+            in_w: 5,
+            out_c: 3,
+            k: 3,
+            stride: 0, // zero stride: rejected at submit
+            pad: 1,
+        };
+        let id = s
+            .submit(Job::Conv {
+                input: vec![0; 50],
+                weights: vec![0; 54],
+                shape: bad,
+            })
+            .unwrap();
+        assert!(matches!(
+            s.wait(id, Some(Duration::from_secs(30))).unwrap(),
+            JobState::Failed
+        ));
+        // Mismatched GEMM dims likewise.
+        let id = s
+            .submit(Job::Gemm {
+                a: MatI8::zeros(4, 8),
+                w: MatI8::zeros(7, 2),
+            })
+            .unwrap();
+        assert!(matches!(
+            s.wait(id, Some(Duration::from_secs(30))).unwrap(),
+            JobState::Failed
+        ));
+        // Still serving.
+        let mut rng = XorShift::new(5);
+        let a = MatI8::random_bounded(&mut rng, 3, 6, 63);
+        let w = MatI8::random(&mut rng, 6, 4);
+        let id = s.submit(Job::Gemm { a, w }).unwrap();
+        let r = s
+            .wait(id, Some(Duration::from_secs(60)))
+            .unwrap()
+            .into_result()
+            .expect("valid job completes after rejected ones");
+        assert_eq!(r.verified, Some(true));
+        s.shutdown().unwrap();
+    }
+
+    /// After shutdown every further request gets a typed
+    /// `unavailable` error — never a panic.
+    #[test]
+    fn requests_after_shutdown_get_typed_errors() {
+        let mut s = LocalSession::start(small_cfg());
+        s.shutdown().unwrap();
+        let err = s
+            .submit(Job::Gemm {
+                a: MatI8::zeros(2, 2),
+                w: MatI8::zeros(2, 2),
+            })
+            .unwrap_err();
+        match err {
+            SessionError::Remote(e) => {
+                assert_eq!(e.code, ErrorCode::Unavailable)
+            }
+            other => panic!("expected remote error, got {other}"),
+        }
+        // Stats still answer (metrics outlive the service).
+        assert!(s.stats().is_ok());
+    }
+
+    /// Shutdown drains pending jobs before acking: the final snapshot
+    /// accounts every submitted job.
+    #[test]
+    fn shutdown_drains_pending_jobs_first() {
+        let mut s = LocalSession::start(ServiceConfig {
+            workers: 1,
+            ..small_cfg()
+        });
+        let mut rng = XorShift::new(17);
+        for _ in 0..4 {
+            let a = MatI8::random_bounded(&mut rng, 6, 40, 63);
+            let w = MatI8::random(&mut rng, 40, 18);
+            s.submit(Job::Gemm { a, w }).unwrap();
+        }
+        // No waits: shutdown itself must finish the pipeline.
+        let final_metrics = s.shutdown().unwrap();
+        assert_eq!(
+            final_metrics.get("jobs_completed").unwrap().as_i64(),
+            Some(4)
+        );
+        assert_eq!(
+            final_metrics.get("jobs_failed").unwrap().as_i64(),
+            Some(0)
+        );
+    }
+}

@@ -1,8 +1,15 @@
-//! A small JSON parser (objects, arrays, strings, numbers, bools, null)
-//! — enough to read `artifacts/manifest.json`. Offline build: no serde.
+//! A small JSON parser **and serializer** (objects, arrays, strings,
+//! numbers, bools, null) — enough to read `artifacts/manifest.json`
+//! and to carry the wire protocol ([`crate::proto`]). Offline build:
+//! no serde.
 //!
 //! Strings support the escapes the python `json` module emits; numbers
-//! parse as f64 with an i64 fast path (shapes and versions are integers).
+//! parse as f64 with an i64 fast path (shapes and versions are
+//! integers). Serialization is canonical: object keys are sorted
+//! (`BTreeMap`), floats print their shortest round-trip form (`{:?}`),
+//! and non-finite floats serialize as `null`, so every emitted
+//! document re-parses — `Json::parse(v.to_string()) == v` for
+//! everything the constructors below can build.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -20,11 +27,15 @@ pub enum Json {
 }
 
 impl Json {
-    /// Parse a JSON document (must consume the full input).
+    /// Parse a JSON document (must consume the full input). Nesting is
+    /// bounded ([`MAX_DEPTH`]): this parser reads untrusted network
+    /// payloads (the wire protocol), so a deeply nested document must
+    /// come back as a typed error, never a stack overflow.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -68,6 +79,180 @@ impl Json {
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_object().and_then(|m| m.get(key))
     }
+
+    /// An integer value from a `u64` counter: `Int` when it fits in
+    /// `i64` (always, for realistic counters), `Float` otherwise so
+    /// nothing silently truncates.
+    pub fn uint(v: u64) -> Json {
+        match i64::try_from(v) {
+            Ok(i) => Json::Int(i),
+            Err(_) => Json::Float(v as f64),
+        }
+    }
+
+    /// A float value; non-finite inputs become `Null` (JSON has no
+    /// NaN/inf) instead of emitting an unparseable document.
+    pub fn float(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Float(v)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Build an object from `(key, value)` pairs.
+    pub fn object<K: Into<String>>(
+        pairs: impl IntoIterator<Item = (K, Json)>,
+    ) -> Json {
+        Json::Object(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Build an array from values.
+    pub fn array(items: impl IntoIterator<Item = Json>) -> Json {
+        Json::Array(items.into_iter().collect())
+    }
+
+    /// Serialize with 2-space indentation (objects expand one key per
+    /// line; arrays stay compact — matrix payloads would otherwise
+    /// explode line counts). Re-parses to the same value.
+    pub fn to_pretty(&self) -> String {
+        let mut out = String::new();
+        write_value(self, &mut out, Some(0));
+        out
+    }
+}
+
+/// Compact serialization; `format!("{v}")` / `v.to_string()` emit a
+/// parseable document.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        write_value(self, &mut out, None);
+        f.write_str(&out)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+
+impl From<i64> for Json {
+    fn from(v: i64) -> Json {
+        Json::Int(v)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::uint(v)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::uint(v as u64)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::float(v)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+
+/// Serialize one value. `indent: None` = compact; `Some(level)` =
+/// pretty (objects expanded at 2 spaces per level, arrays compact).
+fn write_value(v: &Json, out: &mut String, indent: Option<usize>) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Int(i) => out.push_str(&i.to_string()),
+        Json::Float(f) => {
+            if f.is_finite() {
+                // `{:?}` is the shortest representation that parses
+                // back to the identical f64 (and always carries a '.'
+                // or exponent, so it re-parses as Float, not Int).
+                out.push_str(&format!("{f:?}"));
+            } else {
+                out.push_str("null");
+            }
+        }
+        Json::Str(s) => write_escaped(s, out),
+        Json::Array(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                // Arrays serialize compactly even in pretty mode.
+                write_value(item, out, None);
+            }
+            out.push(']');
+        }
+        Json::Object(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                match indent {
+                    Some(level) => {
+                        out.push('\n');
+                        out.push_str(&"  ".repeat(level + 1));
+                    }
+                    None => {
+                        if i > 0 {
+                            out.push(' ');
+                        }
+                    }
+                }
+                write_escaped(k, out);
+                out.push_str(": ");
+                write_value(val, out, indent.map(|l| l + 1));
+            }
+            if let Some(level) = indent {
+                out.push('\n');
+                out.push_str(&"  ".repeat(level));
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse failure with byte offset.
@@ -85,9 +270,15 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Maximum container nesting [`Json::parse`] accepts. Recursion depth
+/// is bounded by this, so a hostile document cannot overflow the
+/// stack; every legitimate message in this codebase nests < 10 deep.
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -139,12 +330,23 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Guard one level of container recursion.
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Object(map));
         }
         loop {
@@ -160,6 +362,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Object(map));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -168,11 +371,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Array(items));
         }
         loop {
@@ -183,6 +388,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Array(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -349,5 +555,71 @@ mod tests {
         let a = v.as_array().unwrap();
         assert_eq!(a[0].as_array().unwrap().len(), 2);
         assert_eq!(a[1].as_array().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn serializer_round_trips() {
+        let v = Json::object([
+            ("n", Json::Int(-7)),
+            ("f", Json::Float(2.5)),
+            ("s", Json::from("a\"b\\c\nd\u{1}")),
+            ("arr", Json::array([Json::Int(1), Json::Null, Json::Bool(true)])),
+            ("obj", Json::object([("k", Json::from("v"))])),
+        ]);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(Json::parse(&v.to_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn floats_serialize_reparseable() {
+        // Whole-valued floats must keep their '.' so they re-parse as
+        // Float (the round-trip invariant), and shortest-repr floats
+        // come back bit-identical.
+        for f in [1.0, -0.5, 79.267, 1.0e21, f64::MIN_POSITIVE] {
+            let v = Json::Float(f);
+            assert_eq!(Json::parse(&v.to_string()).unwrap(), v, "{f}");
+        }
+        // Non-finite floats degrade to null rather than emitting an
+        // unparseable document.
+        assert_eq!(Json::float(f64::NAN), Json::Null);
+        assert_eq!(Json::Float(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn uint_helper_handles_u64_range() {
+        assert_eq!(Json::uint(42), Json::Int(42));
+        assert_eq!(Json::uint(u64::MAX), Json::Float(u64::MAX as f64));
+        assert_eq!(Json::from(7usize), Json::Int(7));
+    }
+
+    /// Untrusted wire payloads must not be able to overflow the stack:
+    /// pathological nesting is a typed error, realistic nesting parses.
+    #[test]
+    fn nesting_is_bounded_not_a_stack_overflow() {
+        let hostile = "[".repeat(1_000_000);
+        let err = Json::parse(&hostile).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        let hostile = format!(
+            "{}1{}",
+            "[".repeat(MAX_DEPTH + 1),
+            "]".repeat(MAX_DEPTH + 1)
+        );
+        assert!(Json::parse(&hostile).is_err());
+        // At the limit (and for wide-but-shallow documents) parsing
+        // still works — depth is released when a container closes.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let wide = format!(
+            "[{}]",
+            (0..500).map(|_| "[0]").collect::<Vec<_>>().join(",")
+        );
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn control_chars_escape_as_unicode() {
+        let v = Json::Str("\u{2}".into());
+        assert_eq!(v.to_string(), "\"\\u0002\"");
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
     }
 }

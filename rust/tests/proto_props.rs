@@ -1,0 +1,540 @@
+//! Wire-protocol properties and end-to-end socket coverage:
+//!
+//! * round-trip property tests over every `Request` / `Response`
+//!   variant (random payloads, encode → frame → decode identity);
+//! * malformed-frame cases against a **live** TCP server — truncated
+//!   length prefix, oversize frame, invalid JSON, unknown request
+//!   tag — asserting typed `Error` responses and a still-usable
+//!   connection (and server) afterwards;
+//! * local ≡ socket: the same seeded GEMM and conv jobs produce
+//!   bit-identical `JobResult`s through `LocalSession` and
+//!   `TcpSession`;
+//! * graceful wire shutdown: `Shutdown` drains pending jobs before
+//!   the listener exits, no signal involved.
+
+use dsp48_systolic::coordinator::service::EngineKind;
+use dsp48_systolic::coordinator::{Job, JobId, JobResult, JobState, Service, ServiceConfig};
+use dsp48_systolic::engines::RunStats;
+use dsp48_systolic::proto::{
+    read_frame, write_frame, ErrorCode, FrameError, LocalSession, PollState,
+    Request, Response, Session, TcpServer, TcpSession, WireError,
+};
+use dsp48_systolic::util::json::Json;
+use dsp48_systolic::util::quickcheck::check;
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::conv::ConvShape;
+use dsp48_systolic::workload::{MatI32, MatI8};
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Round-trip properties
+// ---------------------------------------------------------------------
+
+fn random_mat_i8(rng: &mut XorShift, size: usize) -> MatI8 {
+    let rows = 1 + rng.below(size as u64) as usize;
+    let cols = 1 + rng.below(size as u64) as usize;
+    MatI8::from_fn(rows, cols, |_, _| rng.next_i8())
+}
+
+fn random_mat_i32(rng: &mut XorShift, size: usize) -> MatI32 {
+    let rows = 1 + rng.below(size as u64) as usize;
+    let cols = 1 + rng.below(size as u64) as usize;
+    let mut m = MatI32::zeros(rows, cols);
+    for v in m.data.iter_mut() {
+        *v = rng.next_u64() as i32;
+    }
+    m
+}
+
+fn random_shape(rng: &mut XorShift) -> ConvShape {
+    ConvShape {
+        in_c: 1 + rng.below(8) as usize,
+        in_h: 1 + rng.below(12) as usize,
+        in_w: 1 + rng.below(12) as usize,
+        out_c: 1 + rng.below(8) as usize,
+        k: 1 + rng.below(5) as usize,
+        stride: rng.below(3) as usize, // 0 allowed: encoding is total
+        pad: rng.below(3) as usize,
+    }
+}
+
+fn random_job(rng: &mut XorShift, size: usize) -> Job {
+    match rng.below(3) {
+        0 => Job::Gemm {
+            a: random_mat_i8(rng, size),
+            w: random_mat_i8(rng, size),
+        },
+        1 => {
+            let shape = random_shape(rng);
+            Job::Conv {
+                // Deliberately independent of the shape: the codec
+                // must carry buffers verbatim, not re-derive them.
+                input: rng.i8_vec(1 + rng.below(64) as usize),
+                weights: rng.i8_vec(1 + rng.below(64) as usize),
+                shape,
+            }
+        }
+        _ => Job::Snn {
+            spikes: random_mat_i8(rng, size),
+            weights: random_mat_i8(rng, size),
+        },
+    }
+}
+
+fn random_opt_ms(rng: &mut XorShift) -> Option<u64> {
+    if rng.chance(1, 3) {
+        None
+    } else {
+        Some(rng.below(1 << 40))
+    }
+}
+
+fn random_result(rng: &mut XorShift, size: usize) -> JobResult {
+    JobResult {
+        id: JobId(rng.below(1 << 40)),
+        output: random_mat_i32(rng, size),
+        stats: RunStats {
+            cycles: rng.below(1 << 40),
+            fast_cycles: rng.below(1 << 40),
+            macs: rng.below(1 << 40),
+            weight_stall_cycles: rng.below(1 << 20),
+            weight_loads: rng.below(1 << 20),
+            guard_overflows: rng.below(16),
+            fills_avoided: rng.below(1 << 20),
+            fill_cycles_saved: rng.below(1 << 20),
+        },
+        // Whole microseconds: the wire carries µs resolution.
+        simulated: Duration::from_micros(rng.below(1 << 40)),
+        wall: Duration::from_micros(rng.below(1 << 40)),
+        verified: match rng.below(3) {
+            0 => None,
+            1 => Some(false),
+            _ => Some(true),
+        },
+    }
+}
+
+/// Encode → frame → unframe → decode must be the identity, for every
+/// variant, through the actual frame codec.
+fn assert_request_round_trips(req: &Request) -> Result<(), String> {
+    let mut framed = Vec::new();
+    write_frame(&mut framed, &req.encode())
+        .map_err(|e| format!("framing failed: {e}"))?;
+    let mut cursor = std::io::Cursor::new(framed);
+    let payload = read_frame(&mut cursor)
+        .map_err(|e| format!("unframing failed: {e}"))?
+        .ok_or("unexpected EOF".to_string())?;
+    let decoded =
+        Request::decode(&payload).map_err(|e| format!("decode failed: {e}"))?;
+    if &decoded != req {
+        return Err(format!("round trip changed request: {req:?}"));
+    }
+    Ok(())
+}
+
+fn assert_response_round_trips(resp: &Response) -> Result<(), String> {
+    let decoded = Response::decode(&resp.encode())
+        .map_err(|e| format!("decode failed: {e}"))?;
+    if &decoded != resp {
+        return Err(format!("round trip changed response: {resp:?}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn every_request_variant_round_trips() {
+    check("request round trip", 8, |rng, size| {
+        let requests = [
+            Request::SubmitGemm {
+                a: random_mat_i8(rng, size),
+                w: random_mat_i8(rng, size),
+            },
+            Request::SubmitConv {
+                input: rng.i8_vec(1 + rng.below(64) as usize),
+                weights: rng.i8_vec(1 + rng.below(64) as usize),
+                shape: random_shape(rng),
+            },
+            Request::SubmitBatch {
+                jobs: (0..rng.below(4)).map(|_| random_job(rng, size)).collect(),
+            },
+            Request::Poll {
+                id: rng.below(1 << 40),
+            },
+            Request::Wait {
+                id: rng.below(1 << 40),
+                timeout_ms: random_opt_ms(rng),
+            },
+            Request::Drain {
+                timeout_ms: random_opt_ms(rng),
+            },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for req in &requests {
+            assert_request_round_trips(req)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_response_variant_round_trips() {
+    check("response round trip", 8, |rng, size| {
+        let responses = [
+            Response::Handle {
+                id: rng.below(1 << 40),
+            },
+            Response::Handles {
+                ids: (0..rng.below(6)).map(|_| rng.below(1 << 40)).collect(),
+            },
+            Response::State(if rng.chance(1, 2) {
+                PollState::Pending
+            } else {
+                PollState::Failed
+            }),
+            Response::Result(Box::new(random_result(rng, size))),
+            Response::Drained {
+                completed: (0..rng.below(3))
+                    .map(|_| random_result(rng, size))
+                    .collect(),
+                failed: (0..rng.below(4)).map(|_| rng.below(1 << 40)).collect(),
+            },
+            Response::Metrics(Json::object([
+                ("jobs_completed", Json::Int(rng.below(1000) as i64)),
+                ("effective_macs_per_cycle", Json::Float(0.5)),
+            ])),
+            Response::Error(WireError::new(
+                match rng.below(4) {
+                    0 => ErrorCode::BadFrame,
+                    1 => ErrorCode::BadJson,
+                    2 => ErrorCode::BadRequest,
+                    _ => ErrorCode::Unavailable,
+                },
+                "some diagnostic \"with quotes\" and\nnewlines",
+            )),
+        ];
+        for resp in &responses {
+            assert_response_round_trips(resp)?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Malformed frames against a live server
+// ---------------------------------------------------------------------
+
+fn small_cfg(workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers,
+        ws_rows: 6,
+        ws_cols: 6,
+        verify: true,
+        shard_width: 1,
+    }
+}
+
+fn start_server(
+    workers: usize,
+) -> (SocketAddr, std::thread::JoinHandle<Json>) {
+    let svc = Service::start(small_cfg(workers));
+    let server = TcpServer::bind("127.0.0.1:0", svc).expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+/// Raw request/response over one stream (no TcpSession: these tests
+/// interleave malformed bytes on the same connection).
+fn roundtrip(stream: &mut TcpStream, req: &Request) -> Response {
+    write_frame(stream, &req.encode()).expect("send");
+    let payload = read_frame(stream)
+        .expect("read response")
+        .expect("server replied");
+    Response::decode(&payload).expect("typed response")
+}
+
+fn expect_error(stream: &mut TcpStream) -> WireError {
+    let payload = read_frame(stream)
+        .expect("read response")
+        .expect("server replied");
+    match Response::decode(&payload).expect("typed response") {
+        Response::Error(e) => e,
+        other => panic!("expected Error response, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_frames_yield_typed_errors_on_a_live_connection() {
+    let (addr, server) = start_server(1);
+    let mut stream = TcpStream::connect(addr).expect("connect");
+
+    // 1. Invalid JSON payload → bad-json, connection stays open.
+    write_frame(&mut stream, b"{definitely not json").unwrap();
+    assert_eq!(expect_error(&mut stream).code, ErrorCode::BadJson);
+
+    // 2. Valid JSON, unknown request tag → bad-request.
+    write_frame(&mut stream, br#"{"v":1,"req":"transmogrify"}"#).unwrap();
+    let e = expect_error(&mut stream);
+    assert_eq!(e.code, ErrorCode::BadRequest);
+    assert!(e.message.contains("transmogrify"), "{e}");
+
+    // 3. Wrong protocol version → bad-request naming the version.
+    write_frame(&mut stream, br#"{"v":99,"req":"stats"}"#).unwrap();
+    let e = expect_error(&mut stream);
+    assert_eq!(e.code, ErrorCode::BadRequest);
+    assert!(e.message.contains("99"), "{e}");
+
+    // 4. Schema violation (missing field) → bad-request.
+    write_frame(&mut stream, br#"{"v":1,"req":"poll"}"#).unwrap();
+    assert_eq!(expect_error(&mut stream).code, ErrorCode::BadRequest);
+
+    // 5. Oversize frame prefix (no payload follows) → bad-frame, and
+    // the framing stays in sync.
+    stream.write_all(&u32::MAX.to_be_bytes()).unwrap();
+    stream.flush().unwrap();
+    assert_eq!(expect_error(&mut stream).code, ErrorCode::BadFrame);
+
+    // 6. The same connection still does real work afterwards.
+    let mut rng = XorShift::new(41);
+    let a = MatI8::random_bounded(&mut rng, 3, 8, 63);
+    let w = MatI8::random(&mut rng, 8, 4);
+    let id = match roundtrip(
+        &mut stream,
+        &Request::SubmitGemm {
+            a: a.clone(),
+            w: w.clone(),
+        },
+    ) {
+        Response::Handle { id } => id,
+        other => panic!("expected Handle, got {other:?}"),
+    };
+    match roundtrip(
+        &mut stream,
+        &Request::Wait {
+            id,
+            timeout_ms: Some(60_000),
+        },
+    ) {
+        Response::Result(r) => assert_eq!(r.verified, Some(true)),
+        other => panic!("expected Result, got {other:?}"),
+    }
+
+    // 7. A truncated frame kills only this connection (the stream
+    // cannot resynchronize) — the server keeps serving new ones.
+    let mut dirty = TcpStream::connect(addr).expect("connect dirty");
+    dirty.write_all(&8u32.to_be_bytes()).unwrap();
+    dirty.write_all(b"abc").unwrap(); // 3 of 8 payload bytes
+    drop(dirty);
+
+    let mut fresh = TcpStream::connect(addr).expect("connect fresh");
+    match roundtrip(&mut fresh, &Request::Stats) {
+        Response::Metrics(snapshot) => {
+            assert_eq!(
+                snapshot.get("jobs_completed").unwrap().as_i64(),
+                Some(1)
+            );
+        }
+        other => panic!("expected Metrics, got {other:?}"),
+    }
+
+    // Clean wire shutdown ends the run.
+    match roundtrip(&mut fresh, &Request::Shutdown) {
+        Response::Metrics(_) => {}
+        other => panic!("expected Metrics ack, got {other:?}"),
+    }
+    drop(fresh);
+    drop(stream);
+    server.join().expect("listener exits after Shutdown");
+}
+
+#[test]
+fn frame_truncation_cases_are_typed() {
+    use std::io::Cursor;
+    // Truncated length prefix.
+    let mut c = Cursor::new(vec![0u8, 0, 1]);
+    assert!(matches!(read_frame(&mut c), Err(FrameError::Truncated)));
+    // Truncated payload.
+    let mut framed = Vec::new();
+    write_frame(&mut framed, b"payload").unwrap();
+    framed.truncate(6);
+    let mut c = Cursor::new(framed);
+    assert!(matches!(read_frame(&mut c), Err(FrameError::Truncated)));
+    // Oversize declared length.
+    let mut c = Cursor::new(u32::MAX.to_be_bytes().to_vec());
+    assert!(matches!(
+        read_frame(&mut c),
+        Err(FrameError::Oversize { .. })
+    ));
+    // Clean EOF between frames: a normal disconnect.
+    let mut c = Cursor::new(Vec::new());
+    assert!(matches!(read_frame(&mut c), Ok(None)));
+}
+
+// ---------------------------------------------------------------------
+// Local ≡ socket
+// ---------------------------------------------------------------------
+
+fn seeded_jobs() -> (Job, Job) {
+    let mut rng = XorShift::new(1234);
+    let a = MatI8::random_bounded(&mut rng, 5, 17, 63);
+    let w = MatI8::random(&mut rng, 17, 9);
+    let shape = ConvShape {
+        in_c: 3,
+        in_h: 7,
+        in_w: 5,
+        out_c: 6,
+        k: 3,
+        stride: 2,
+        pad: 1,
+    };
+    let input: Vec<i8> =
+        (0..shape.input_len()).map(|_| rng.i8_in(-63, 63)).collect();
+    let weights: Vec<i8> =
+        (0..shape.weight_len()).map(|_| rng.i8_in(-63, 63)).collect();
+    (
+        Job::Gemm { a, w },
+        Job::Conv {
+            input,
+            weights,
+            shape,
+        },
+    )
+}
+
+fn run_both<S: Session>(session: &mut S) -> (JobResult, JobResult) {
+    let (gemm, conv) = seeded_jobs();
+    let gemm_id = session.submit(gemm).expect("submit gemm");
+    let conv_id = session.submit(conv).expect("submit conv");
+    let gemm_r = session
+        .wait(gemm_id, Some(Duration::from_secs(120)))
+        .expect("wait gemm")
+        .into_result()
+        .expect("gemm completes");
+    let conv_r = session
+        .wait(conv_id, Some(Duration::from_secs(120)))
+        .expect("wait conv")
+        .into_result()
+        .expect("conv completes");
+    (*gemm_r, *conv_r)
+}
+
+/// The acceptance criterion: a GEMM and a conv job over a real TCP
+/// socket return verified results bit-identical to the same jobs run
+/// through `LocalSession` — outputs, stats, ids, verification.
+#[test]
+fn socket_results_bit_identical_to_local_session() {
+    let cfg = small_cfg(2);
+
+    let mut local = LocalSession::start(cfg.clone());
+    let (local_gemm, local_conv) = run_both(&mut local);
+    local.shutdown().expect("local shutdown");
+    assert_eq!(local_gemm.verified, Some(true));
+    assert_eq!(local_conv.verified, Some(true));
+
+    let svc = Service::start(cfg);
+    let server = TcpServer::bind("127.0.0.1:0", svc).expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+    let mut tcp = TcpSession::connect(&addr).expect("connect");
+    let (tcp_gemm, tcp_conv) = run_both(&mut tcp);
+    tcp.shutdown().expect("wire shutdown");
+    server_thread.join().expect("server joins");
+
+    assert_eq!(tcp_gemm.verified, Some(true));
+    assert_eq!(tcp_conv.verified, Some(true));
+    assert_eq!(tcp_gemm.id, local_gemm.id);
+    assert_eq!(tcp_gemm.output, local_gemm.output);
+    assert_eq!(tcp_gemm.stats, local_gemm.stats);
+    assert_eq!(tcp_conv.id, local_conv.id);
+    assert_eq!(tcp_conv.output, local_conv.output);
+    assert_eq!(tcp_conv.stats, local_conv.stats);
+}
+
+/// Graceful wire shutdown: `Shutdown` arrives while jobs are still in
+/// flight; the ack's final snapshot proves they all drained first, and
+/// the listener exits without any signal.
+#[test]
+fn wire_shutdown_drains_pending_jobs_before_exiting() {
+    let (addr, server) = start_server(1);
+    let mut client = TcpSession::connect(&addr.to_string()).expect("connect");
+    let mut rng = XorShift::new(77);
+    let n_jobs = 5u64;
+    for _ in 0..n_jobs {
+        let a = MatI8::random_bounded(&mut rng, 6, 40, 63);
+        let w = MatI8::random(&mut rng, 40, 18);
+        client.submit(Job::Gemm { a, w }).expect("submit");
+    }
+    // No waits: shutdown itself must finish the pipeline.
+    let final_metrics = client.shutdown().expect("wire shutdown");
+    assert_eq!(
+        final_metrics.get("jobs_submitted").unwrap().as_i64(),
+        Some(n_jobs as i64)
+    );
+    assert_eq!(
+        final_metrics.get("jobs_completed").unwrap().as_i64(),
+        Some(n_jobs as i64)
+    );
+    assert_eq!(final_metrics.get("jobs_failed").unwrap().as_i64(), Some(0));
+    let joined = server.join().expect("listener exits without a signal");
+    assert_eq!(
+        joined.get("jobs_completed").unwrap().as_i64(),
+        Some(n_jobs as i64)
+    );
+    // Post-shutdown connections are refused (connect may succeed and
+    // then close, or fail outright — either way no service remains).
+    if let Ok(mut late) = TcpSession::connect(&addr.to_string()) {
+        assert!(late.stats().is_err());
+    }
+}
+
+/// A bad shape submitted over the wire resolves as a typed Failed
+/// state — never a disconnect — and the connection keeps serving.
+#[test]
+fn bad_shapes_over_the_wire_resolve_failed_without_disconnect() {
+    let (addr, server) = start_server(1);
+    let mut client = TcpSession::connect(&addr.to_string()).expect("connect");
+    let id = client
+        .submit(Job::Gemm {
+            a: MatI8::zeros(4, 8),
+            w: MatI8::zeros(7, 2), // inner-dim mismatch
+        })
+        .expect("submit is accepted");
+    assert!(matches!(
+        client.wait(id, Some(Duration::from_secs(30))).unwrap(),
+        JobState::Failed
+    ));
+    let bad_conv = Job::Conv {
+        input: vec![0; 3], // wrong buffer length
+        weights: vec![0; 54],
+        shape: ConvShape {
+            in_c: 2,
+            in_h: 5,
+            in_w: 5,
+            out_c: 3,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        },
+    };
+    let id = client.submit(bad_conv).expect("submit is accepted");
+    assert!(matches!(
+        client.wait(id, Some(Duration::from_secs(30))).unwrap(),
+        JobState::Failed
+    ));
+    // Same connection, valid job: still served and verified.
+    let mut rng = XorShift::new(51);
+    let a = MatI8::random_bounded(&mut rng, 3, 8, 63);
+    let w = MatI8::random(&mut rng, 8, 4);
+    let id = client.submit(Job::Gemm { a, w }).expect("submit");
+    let r = client
+        .wait(id, Some(Duration::from_secs(60)))
+        .unwrap()
+        .into_result()
+        .expect("valid job completes after rejected ones");
+    assert_eq!(r.verified, Some(true));
+    client.shutdown().expect("wire shutdown");
+    server.join().expect("server joins");
+}

@@ -142,7 +142,7 @@ fn sharded_gemm_bit_exact_for_all_engine_kinds() {
         }
         for _ in 0..cases {
             let r = svc
-                .recv_timeout(Duration::from_secs(120))
+                .wait_any(Duration::from_secs(120))
                 .unwrap_or_else(|| panic!("{}: job timed out", kind.label()));
             assert_eq!(
                 r.verified,

@@ -5,14 +5,18 @@ Compares the bench artifact (BENCH_sim_throughput.json) against the
 committed baseline (rust/bench_baseline.json) and fails the workflow
 when a gated metric regresses by more than --max-regress (default 10%).
 
-Only *simulated* metrics (MACs/cycle, fill counters) are gated — they
-are deterministic functions of the cycle model, so the gate never
-flakes on runner speed. Wall-clock rates in the artifact are recorded
-for trend-watching but never gated. The gated key set spans the GEMM
-batching pipeline (batched/single MACs/cycle + fill counters) and the
-conv-native lazy tiling path (conv_fill_amortization gate plus exact
-conv_fills_* counters); conv_macs_per_cycle rides along in the
-artifact for trend-watching.
+Only *simulated* metrics (MACs/cycle, fill counters, verified-job
+counts) are gated — they are deterministic functions of the cycle
+model, so the gate never flakes on runner speed. Wall-clock rates in
+the artifact are recorded for trend-watching but never gated. The
+gated key set spans the GEMM batching pipeline (batched/single
+MACs/cycle + fill counters), the conv-native lazy tiling path
+(conv_fill_amortization gate plus exact conv_fills_* counters), and
+the serve-loopback wire-protocol run (exact loopback_jobs_ok +
+loopback_fills_* counters: batched weight-tile reuse must survive the
+socket round trip); conv_macs_per_cycle and loopback_jobs_per_s (the
+wall-clock serve-loopback rate) ride along in the artifact for
+trend-watching only.
 
 Baseline schema:
 
