@@ -14,7 +14,7 @@
 
 use dsp48_systolic::coordinator::service::EngineKind;
 use dsp48_systolic::coordinator::{Batch, Job, JobState, Service, ServiceConfig};
-use dsp48_systolic::dsp::{Attributes, Dsp48e2, DspInputs, OpMode};
+use dsp48_systolic::dsp::{Attributes, Dsp48e2, DspColumn, DspInputs, InMode, OpMode};
 use dsp48_systolic::engines::os::RingAccumulator;
 use dsp48_systolic::engines::ws::{WsConfig, WsEngine};
 use dsp48_systolic::engines::Engine;
@@ -273,6 +273,62 @@ fn main() {
         m.per_sec() / 1e6
     );
 
+    section("SoA column vs scalar cells (the hot-loop rewrite)");
+    // The default GEMM case's cascade column: a 14-deep DSP-Fetch
+    // chain streaming packed activations. The scalar side is the
+    // golden-reference drive — one materialized DspInputs + tick per
+    // cell per edge (what every engine inner loop did before the
+    // column rewrite); the column side is one tick_ws_stream pass
+    // over the register banks. Simulated semantics are bit-identical
+    // (tests/column_props.rs); only wall-clock differs.
+    let col_rows = 14usize;
+    let col_attrs = Attributes {
+        areg: 1,
+        ..Attributes::ws_prefetch_pe()
+    };
+    let mut scalar_col: Vec<Dsp48e2> =
+        (0..col_rows).map(|_| Dsp48e2::new(col_attrs)).collect();
+    let mut soa_col = DspColumn::new(col_attrs, col_rows);
+    let a_feed: Vec<i64> = (0..col_rows)
+        .map(|r| ((r as i64 * 31 % 100) - 50) << 18)
+        .collect();
+    let d_feed: Vec<i64> =
+        (0..col_rows).map(|r| (r as i64 * 17 % 100) - 50).collect();
+    let mut pcouts = vec![0i64; col_rows];
+    let m_scalar = bench("scalar cascade x14 (DspInputs per cell)", || {
+        for (slot, cell) in pcouts.iter_mut().zip(scalar_col.iter()) {
+            *slot = cell.pcout();
+        }
+        for r in 0..col_rows {
+            scalar_col[r].tick(&DspInputs {
+                a: a_feed[r],
+                d: d_feed[r],
+                inmode: InMode::A2_B2.with_d(),
+                opmode: if r == 0 {
+                    OpMode::MULT
+                } else {
+                    OpMode::MULT_CASCADE
+                },
+                pcin: if r == 0 { 0 } else { pcouts[r - 1] },
+                ceb1: false,
+                ceb2: false,
+                ..DspInputs::default()
+            });
+        }
+        std::hint::black_box(scalar_col[col_rows - 1].p());
+    });
+    let m_col = bench("SoA column x14 (tick_ws_stream)", || {
+        soa_col.tick_ws_stream(&a_feed, &d_feed);
+        std::hint::black_box(soa_col.p(col_rows - 1));
+    });
+    let cells_ticked_per_s = col_rows as f64 * m_col.per_sec();
+    let column_speedup = m_col.per_sec() / m_scalar.per_sec();
+    println!(
+        "    -> {:.1} M cells/s SoA, {column_speedup:.2}x over the \
+         scalar golden model",
+        cells_ticked_per_s / 1e6
+    );
+
     section("WS array cycle (14x14 paper config)");
     let mut eng = WsEngine::new(WsConfig::paper_14x14());
     let mut rng = XorShift::new(1);
@@ -374,6 +430,10 @@ fn main() {
         ("bench", Json::from("sim_throughput")),
         ("smoke", Json::from(smoke)),
         ("packed_dot_macs_per_s", Json::float(packed_dot_rate)),
+        // Wall-clock trajectory of the SoA hot-loop rewrite (trend
+        // only, never gated — host-speed dependent).
+        ("cells_ticked_per_s", Json::float(cells_ticked_per_s)),
+        ("column_vs_scalar_speedup", Json::float(column_speedup)),
         ("sharded_gemm_size", Json::from(size)),
         ("sharded_gemm_macs_per_s_1w", Json::float(rate_1w)),
         ("sharded_gemm_macs_per_s_4w", Json::float(rate_4w)),

@@ -1,5 +1,6 @@
 //! Service metrics: shared counters + latency aggregation.
 
+use crate::exec::ScratchStats;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -27,6 +28,14 @@ pub struct Metrics {
     pub fills_avoided: AtomicU64,
     /// Slow cycles the avoided fills would have cost.
     pub fill_cycles_saved: AtomicU64,
+    /// Scratch-arena lease calls across all workers' engines.
+    pub scratch_leases: AtomicU64,
+    /// Scratch leases served by a pooled buffer (no allocation).
+    pub scratch_reuse_hits: AtomicU64,
+    /// Peak bytes simultaneously out on lease on any one worker's
+    /// arena (max across workers, not a sum — it bounds per-engine
+    /// footprint).
+    pub scratch_high_water_bytes: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -71,6 +80,43 @@ impl Metrics {
         }
     }
 
+    /// Fold one worker's scratch-arena snapshot into the shared
+    /// counters. `prev` is the last snapshot recorded for that worker —
+    /// the arena counters are monotonic, so the difference is an exact
+    /// delta; the high-water mark takes a max across workers. The
+    /// monotonicity contract is enforced here (a non-monotonic source
+    /// would otherwise wrap the shared counters): loud in debug,
+    /// saturating in release.
+    pub fn record_scratch(&self, prev: &ScratchStats, now: &ScratchStats) {
+        debug_assert!(
+            now.leases() >= prev.leases()
+                && now.reuse_hits() >= prev.reuse_hits(),
+            "scratch snapshots must be monotonic per worker"
+        );
+        self.scratch_leases.fetch_add(
+            now.leases().saturating_sub(prev.leases()),
+            Ordering::Relaxed,
+        );
+        self.scratch_reuse_hits.fetch_add(
+            now.reuse_hits().saturating_sub(prev.reuse_hits()),
+            Ordering::Relaxed,
+        );
+        self.scratch_high_water_bytes
+            .fetch_max(now.high_water_bytes, Ordering::Relaxed);
+    }
+
+    /// Fraction of scratch leases served from a pool across all
+    /// workers (0 when nothing leased yet).
+    pub fn scratch_reuse_ratio(&self) -> f64 {
+        let leases = self.scratch_leases.load(Ordering::Relaxed);
+        if leases == 0 {
+            0.0
+        } else {
+            self.scratch_reuse_hits.load(Ordering::Relaxed) as f64
+                / leases as f64
+        }
+    }
+
     /// Achieved MACs per simulated cycle across every completed job.
     pub fn effective_macs_per_cycle(&self) -> f64 {
         let cycles = self.sim_cycles.load(Ordering::Relaxed);
@@ -103,6 +149,16 @@ impl Metrics {
             ("fills_avoided", load(&self.fills_avoided)),
             ("fill_cycles_saved", load(&self.fill_cycles_saved)),
             ("fill_amortization", Json::float(self.fill_amortization())),
+            ("scratch_leases", load(&self.scratch_leases)),
+            ("scratch_reuse_hits", load(&self.scratch_reuse_hits)),
+            (
+                "scratch_high_water_bytes",
+                load(&self.scratch_high_water_bytes),
+            ),
+            (
+                "scratch_reuse_ratio",
+                Json::float(self.scratch_reuse_ratio()),
+            ),
             (
                 "effective_macs_per_cycle",
                 Json::float(self.effective_macs_per_cycle()),
@@ -180,6 +236,48 @@ mod tests {
         let parsed =
             crate::util::json::Json::parse(&snap.to_string()).unwrap();
         assert_eq!(parsed, snap);
+    }
+
+    #[test]
+    fn scratch_deltas_accumulate_and_high_water_maxes() {
+        use crate::exec::PoolStats;
+        let m = Metrics::new();
+        let pool = |leases, reuse_hits, high_water_bytes| PoolStats {
+            leases,
+            reuse_hits,
+            leased_bytes: 0,
+            high_water_bytes,
+        };
+        // Worker 1 reports twice; only the delta lands the second time.
+        let w1_a = ScratchStats {
+            i64_pool: pool(4, 1, 256),
+            high_water_bytes: 256,
+            ..Default::default()
+        };
+        m.record_scratch(&ScratchStats::default(), &w1_a);
+        let w1_b = ScratchStats {
+            i64_pool: pool(10, 6, 256),
+            high_water_bytes: 256,
+            ..Default::default()
+        };
+        m.record_scratch(&w1_a, &w1_b);
+        // Worker 2's smaller arena peak must not lower the max.
+        let w2 = ScratchStats {
+            i32_pool: pool(2, 2, 64),
+            high_water_bytes: 64,
+            ..Default::default()
+        };
+        m.record_scratch(&ScratchStats::default(), &w2);
+        assert_eq!(m.scratch_leases.load(Ordering::Relaxed), 12);
+        assert_eq!(m.scratch_reuse_hits.load(Ordering::Relaxed), 8);
+        assert_eq!(m.scratch_high_water_bytes.load(Ordering::Relaxed), 256);
+        assert!((m.scratch_reuse_ratio() - 8.0 / 12.0).abs() < 1e-12);
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("scratch_leases").unwrap().as_i64(), Some(12));
+        assert_eq!(
+            snap.get("scratch_high_water_bytes").unwrap().as_i64(),
+            Some(256)
+        );
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::engines::os::{OsConfig, OsEngine, OsVariant};
 use crate::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
 use crate::engines::ws::{WsConfig, WsEngine, WsVariant};
 use crate::engines::{Engine, EngineError, RunStats};
+use crate::exec::ScratchStats;
 use crate::workload::conv::{weights_to_gemm, ConvShapeError, PatchSource};
 use crate::workload::{MatI32, MatI8};
 use std::collections::HashMap;
@@ -337,6 +338,10 @@ impl Service {
                 let mut engine = cfg.build_engine();
                 let tiler = cfg.tiler();
                 let slow_mhz = engine.clock_plan().slow_mhz;
+                // Last scratch-arena snapshot folded into the shared
+                // metrics (the counters are monotonic, so each unit
+                // contributes an exact delta).
+                let mut scratch_seen = ScratchStats::default();
                 while let Some((unit, prov)) = pool.pop(wid) {
                     if prov == Provenance::Stolen {
                         metrics.steals.fetch_add(1, Ordering::Relaxed);
@@ -367,6 +372,9 @@ impl Service {
                             }
                         }
                     }
+                    let snap = engine.scratch_stats();
+                    metrics.record_scratch(&scratch_seen, &snap);
+                    scratch_seen = snap;
                 }
             }));
         }
@@ -1214,6 +1222,45 @@ mod tests {
         assert!(
             batched_cycles < single_cycles,
             "batched {batched_cycles} !< single {single_cycles}"
+        );
+        svc.shutdown();
+    }
+
+    /// Workers fold their engines' scratch-arena telemetry into the
+    /// shared metrics: leases accumulate, repeat runs hit the pool,
+    /// and the snapshot JSON carries the arena keys.
+    #[test]
+    fn scratch_telemetry_reaches_metrics() {
+        let mut svc = Service::start(ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 1,
+            ws_rows: 6,
+            ws_cols: 6,
+            verify: false,
+            shard_width: 1,
+        });
+        let mut rng = XorShift::new(61);
+        for _ in 0..4 {
+            let a = MatI8::random_bounded(&mut rng, 4, 6, 63);
+            let w = MatI8::random(&mut rng, 6, 4);
+            svc.submit(Job::Gemm { a, w });
+        }
+        let results = svc.drain(Duration::from_secs(60)).completed;
+        assert_eq!(results.len(), 4);
+        let leases = svc.metrics.scratch_leases.load(Ordering::Relaxed);
+        let hits = svc.metrics.scratch_reuse_hits.load(Ordering::Relaxed);
+        assert!(leases > 0, "column banks + feed buffers lease per run");
+        // Runs after the first reuse the pooled feed buffers.
+        assert!(hits > 0, "repeat runs must hit the pool");
+        assert!(
+            svc.metrics.scratch_high_water_bytes.load(Ordering::Relaxed) > 0
+        );
+        let ratio = svc.metrics.scratch_reuse_ratio();
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        let snap = svc.metrics.snapshot_json();
+        assert_eq!(
+            snap.get("scratch_leases").unwrap().as_i64(),
+            Some(leases as i64)
         );
         svc.shutdown();
     }

@@ -1,0 +1,905 @@
+//! Struct-of-arrays DSP column: one cascade chain ticked in one pass.
+//!
+//! The engines' hot loops all drive a *column* of DSP48E2 slices whose
+//! per-edge control is column-uniform — the paper's techniques (BCIN
+//! prefetch with CEB2 gating, INMODE[4] multiplexing, SIMD-partitioned
+//! accumulation) are column-wide controls by construction. The scalar
+//! [`Dsp48e2`] cell models one slice faithfully but makes the simulator
+//! pay for that fidelity per cell per cycle: a ~20-field [`DspInputs`]
+//! materialized and a `tick` call for every slice.
+//!
+//! [`DspColumn`] stores the same register state as struct-of-arrays —
+//! `a1/a2/b1/b2/d/ad/c/m/p` as contiguous `i64` banks leased from the
+//! [`Scratch`] arena — and advances every row of the cascade in a
+//! single pass. Cascade taps (`acin`/`bcin`/`pcin`) read the
+//! neighboring bank elements directly: rows are updated top-down, so
+//! row `r` reads row `r-1`'s registers while they still hold their
+//! pre-edge values, reproducing the scalar "snapshot the cascade, then
+//! tick every cell" discipline without the snapshot buffer.
+//!
+//! Three mode-specialized fast paths cover the engines' steady-state
+//! dataflows:
+//!
+//! * [`DspColumn::tick_ws_stream`] — the WS payload cycle (CEB1/CEB2
+//!   held low, the prefetch chain untouched, products cascading over
+//!   PCIN);
+//! * [`DspColumn::tick_os_chain`] — the DPU multiplier chain, with the
+//!   per-slice INMODE[4]/CEB1/CEB2 skew carried as bitmasks (the OS
+//!   schedule delays the shared control word one edge per cascade
+//!   position);
+//! * [`DspColumn::tick_snn_crossbar`] — the FireFly FOUR12 crossbar
+//!   (spike bits select the X/Y wide-bus muxes, everything else held).
+//!
+//! Everything else — weight fills, swap pulses, the ring accumulator —
+//! goes through the generic [`DspColumn::tick`] /
+//! [`DspColumn::tick_row`], which implement the full register-transfer
+//! semantics of [`Dsp48e2::tick`] over the banks.
+//!
+//! **The scalar cell stays the golden reference model.** Every path in
+//! this module must be bit-identical to ticking a `Vec<Dsp48e2>` with
+//! the per-row `DspInputs` the same controls and feeds would produce;
+//! `tests/column_props.rs` proves that across all engine attribute
+//! profiles, SIMD modes, cascade depths and clock-enable patterns. A
+//! new dataflow should start on the generic tick and only earn a fast
+//! path once the property suite covers it.
+
+use super::attributes::{Attributes, CascadeTap, InputSource, MultSel, SimdMode};
+use super::cell::DspRegs;
+use super::modes::{AluMode, InMode, OpMode, WMux, XMux, YMux, ZMux};
+use super::simd::simd_add;
+use super::truncate;
+use crate::exec::Scratch;
+
+// Doc-link imports (see module docs).
+#[allow(unused_imports)]
+use super::cell::{Dsp48e2, DspInputs};
+
+/// The shared per-edge control word of a cascade column: dynamic mode
+/// selects plus the nine clock enables, applied to every row.
+///
+/// This is [`DspInputs`] minus the data: the column model's claim is
+/// that the engines only ever drive these fields column-uniformly (the
+/// OS chain's per-slice skew of `INMODE[4]`/`CEB1`/`CEB2` is the one
+/// exception, carried as bitmasks by [`DspColumn::tick_os_chain`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ColumnCtrl {
+    pub inmode: InMode,
+    pub opmode: OpMode,
+    pub alumode: AluMode,
+    pub cea1: bool,
+    pub cea2: bool,
+    pub ceb1: bool,
+    pub ceb2: bool,
+    pub ced: bool,
+    pub cead: bool,
+    pub cec: bool,
+    pub cem: bool,
+    pub cep: bool,
+}
+
+impl Default for ColumnCtrl {
+    /// Mirrors [`DspInputs::default`]: every clock enable asserted,
+    /// `A2×B2` multiply, ALU add.
+    fn default() -> Self {
+        ColumnCtrl {
+            inmode: InMode::A2_B2,
+            opmode: OpMode::MULT,
+            alumode: AluMode::Add,
+            cea1: true,
+            cea2: true,
+            ceb1: true,
+            ceb2: true,
+            ced: true,
+            cead: true,
+            cec: true,
+            cem: true,
+            cep: true,
+        }
+    }
+}
+
+impl ColumnCtrl {
+    /// All clock enables off (hold state) — mirrors [`DspInputs::hold`].
+    pub fn hold() -> Self {
+        ColumnCtrl {
+            cea1: false,
+            cea2: false,
+            ceb1: false,
+            ceb2: false,
+            ced: false,
+            cead: false,
+            cec: false,
+            cem: false,
+            cep: false,
+            ..ColumnCtrl::default()
+        }
+    }
+}
+
+/// Per-edge data feeds for a whole column. Port slices are indexed by
+/// row; an empty slice means that port idles at 0 on every row. The
+/// `*0` fields enter the cascade at row 0 (rows above read their
+/// neighbor's bank element instead).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ColumnFeeds<'a> {
+    /// Per-row A port (30-bit, `A_INPUT = DIRECT` configs).
+    pub a: &'a [i64],
+    /// Per-row B port (18-bit, `B_INPUT = DIRECT` configs).
+    pub b: &'a [i64],
+    /// Per-row C port (48-bit).
+    pub c: &'a [i64],
+    /// Per-row D port (27-bit, pre-adder).
+    pub d: &'a [i64],
+    /// A-cascade input entering row 0.
+    pub acin0: i64,
+    /// B-cascade input entering row 0 (the weight stream of the in-DSP
+    /// prefetch fill).
+    pub bcin0: i64,
+    /// P-cascade input entering row 0 (0 for a chain that starts the
+    /// accumulation, i.e. `OPMODE::MULT` ≡ `MULT_CASCADE` with
+    /// `PCIN = 0`).
+    pub pcin0: i64,
+}
+
+/// Data feeds for a single row, for the row-at-a-time paths (the
+/// tinyTPU stalling weight load, the SNN per-slice weight commit).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RowFeeds {
+    pub a: i64,
+    pub b: i64,
+    pub c: i64,
+    pub d: i64,
+    pub acin: i64,
+    pub bcin: i64,
+    pub pcin: i64,
+}
+
+#[inline(always)]
+fn feed(bank: &[i64], r: usize) -> i64 {
+    bank.get(r).copied().unwrap_or(0)
+}
+
+/// A column of DSP48E2 slices in struct-of-arrays layout: one
+/// contiguous bank per pipeline register, one shared [`Attributes`].
+#[derive(Debug, Clone)]
+pub struct DspColumn {
+    attrs: Attributes,
+    rows: usize,
+    a1: Vec<i64>,
+    a2: Vec<i64>,
+    b1: Vec<i64>,
+    b2: Vec<i64>,
+    d: Vec<i64>,
+    ad: Vec<i64>,
+    c: Vec<i64>,
+    m: Vec<i64>,
+    p: Vec<i64>,
+    /// Edges observed by row 0. Full-column ticks advance this once per
+    /// edge; [`DspColumn::tick_row`] advances it only for row 0, so a
+    /// column driven row-at-a-time (the tinyTPU stalling fill) keeps
+    /// the same count a scalar reference cell at row 0 would hold —
+    /// the denominator the WS activity model divides by.
+    cycles: u64,
+    /// Multiplier activations summed over all rows (power-model toggle
+    /// proxy; the scalar cell counts the same condition per cell).
+    mult_toggles: u64,
+}
+
+impl DspColumn {
+    /// A column whose banks are leased from `scratch` — the engines
+    /// construct their columns through their own arena so bank capacity
+    /// is accounted (and reusable) like every other hot-loop buffer.
+    pub fn new_in(attrs: Attributes, rows: usize, scratch: &mut Scratch) -> Self {
+        DspColumn {
+            attrs,
+            rows,
+            a1: scratch.lease_i64(rows),
+            a2: scratch.lease_i64(rows),
+            b1: scratch.lease_i64(rows),
+            b2: scratch.lease_i64(rows),
+            d: scratch.lease_i64(rows),
+            ad: scratch.lease_i64(rows),
+            c: scratch.lease_i64(rows),
+            m: scratch.lease_i64(rows),
+            p: scratch.lease_i64(rows),
+            cycles: 0,
+            mult_toggles: 0,
+        }
+    }
+
+    /// A free-standing column (fresh allocations, no arena).
+    pub fn new(attrs: Attributes, rows: usize) -> Self {
+        Self::new_in(attrs, rows, &mut Scratch::new())
+    }
+
+    /// Return the nine register banks to the arena.
+    pub fn release(self, scratch: &mut Scratch) {
+        let DspColumn {
+            a1,
+            a2,
+            b1,
+            b2,
+            d,
+            ad,
+            c,
+            m,
+            p,
+            ..
+        } = self;
+        for bank in [a1, a2, b1, b2, d, ad, c, m, p] {
+            scratch.release_i64(bank);
+        }
+    }
+
+    pub fn attrs(&self) -> &Attributes {
+        &self.attrs
+    }
+
+    /// Cascade depth (slices in the column).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Edges observed by row 0 (see the field docs).
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Multiplier activations summed across the column.
+    pub fn mult_toggles(&self) -> u64 {
+        self.mult_toggles
+    }
+
+    /// Row `r`'s P output register.
+    #[inline]
+    pub fn p(&self, r: usize) -> i64 {
+        self.p[r]
+    }
+
+    /// Row `r`'s register snapshot (waveform/debug view — the same
+    /// shape the scalar cell reports).
+    pub fn regs(&self, r: usize) -> DspRegs {
+        DspRegs {
+            a1: self.a1[r],
+            a2: self.a2[r],
+            b1: self.b1[r],
+            b2: self.b2[r],
+            d: self.d[r],
+            ad: self.ad[r],
+            c: self.c[r],
+            m: self.m[r],
+            p: self.p[r],
+        }
+    }
+
+    /// Row `r`'s A-cascade output (pre- or post-edge depending on when
+    /// it is read — the banks hold register values, like the cell).
+    #[inline]
+    fn acout_of(&self, r: usize) -> i64 {
+        match self.attrs.a_cascade_tap {
+            CascadeTap::Reg1 => self.a1[r],
+            CascadeTap::Reg2 => self.a2[r],
+        }
+    }
+
+    /// Row `r`'s B-cascade output.
+    #[inline]
+    fn bcout_of(&self, r: usize) -> i64 {
+        match self.attrs.b_cascade_tap {
+            CascadeTap::Reg1 => self.b1[r],
+            CascadeTap::Reg2 => self.b2[r],
+        }
+    }
+
+    /// The A:B concatenation of row `r` (X-mux input).
+    #[inline]
+    fn ab_concat(&self, r: usize) -> i64 {
+        let a = self.a2[r] & ((1 << 30) - 1);
+        let b = self.b2[r] & ((1 << 18) - 1);
+        truncate((a << 18) | b, 48)
+    }
+
+    /// Clear all state (synchronous reset), keeping the banks.
+    pub fn reset(&mut self) {
+        for bank in [
+            &mut self.a1,
+            &mut self.a2,
+            &mut self.b1,
+            &mut self.b2,
+            &mut self.d,
+            &mut self.ad,
+            &mut self.c,
+            &mut self.m,
+            &mut self.p,
+        ] {
+            bank.iter_mut().for_each(|v| *v = 0);
+        }
+        self.cycles = 0;
+        self.mult_toggles = 0;
+    }
+
+    /// Reset for a new run while keeping the loaded weights resident:
+    /// the B1/B2 banks survive, every other bank and the counters
+    /// clear — the column analogue of [`Dsp48e2::reset_keep_weights`],
+    /// which is what makes stationary-tile reuse bit-exact.
+    pub fn reset_keep_weights(&mut self) {
+        for bank in [
+            &mut self.a1,
+            &mut self.a2,
+            &mut self.d,
+            &mut self.ad,
+            &mut self.c,
+            &mut self.m,
+            &mut self.p,
+        ] {
+            bank.iter_mut().for_each(|v| *v = 0);
+        }
+        self.cycles = 0;
+        self.mult_toggles = 0;
+    }
+
+    // ---- the generic clock edge ----------------------------------------
+
+    /// One clock edge for the whole column under a shared control word.
+    /// Rows advance top-down so each row reads its lower neighbor's
+    /// cascade taps pre-edge, exactly like the scalar
+    /// snapshot-then-tick loops.
+    pub fn tick(&mut self, ctrl: &ColumnCtrl, feeds: &ColumnFeeds) {
+        for r in (0..self.rows).rev() {
+            let (acin, bcin, pcin) = if r == 0 {
+                (feeds.acin0, feeds.bcin0, feeds.pcin0)
+            } else {
+                (self.acout_of(r - 1), self.bcout_of(r - 1), self.p[r - 1])
+            };
+            self.advance_row(
+                r,
+                ctrl,
+                feed(feeds.a, r),
+                feed(feeds.b, r),
+                feed(feeds.c, r),
+                feed(feeds.d, r),
+                acin,
+                bcin,
+                pcin,
+            );
+        }
+        self.cycles += 1;
+    }
+
+    /// One clock edge for a single row, the others untouched — for
+    /// schedules that load one slice at a time (the tinyTPU stalling
+    /// weight fill, the SNN per-slice weight commit). The cycle counter
+    /// advances only when row 0 ticks (see the `cycles` field docs).
+    pub fn tick_row(&mut self, r: usize, ctrl: &ColumnCtrl, f: &RowFeeds) {
+        self.advance_row(r, ctrl, f.a, f.b, f.c, f.d, f.acin, f.bcin, f.pcin);
+        if r == 0 {
+            self.cycles += 1;
+        }
+    }
+
+    /// The full register-transfer semantics of [`Dsp48e2::tick`] for
+    /// bank element `r`: every right-hand side reads pre-edge state.
+    #[allow(clippy::too_many_arguments)]
+    fn advance_row(
+        &mut self,
+        r: usize,
+        ctrl: &ColumnCtrl,
+        a: i64,
+        b: i64,
+        c: i64,
+        d: i64,
+        acin: i64,
+        bcin: i64,
+        pcin: i64,
+    ) {
+        let at = self.attrs;
+        let a_src = match at.a_input {
+            InputSource::Direct => truncate(a, 30),
+            InputSource::Cascade => truncate(acin, 30),
+        };
+        let b_src = match at.b_input {
+            InputSource::Direct => truncate(b, 18),
+            InputSource::Cascade => truncate(bcin, 18),
+        };
+
+        // Combinational values from the pre-edge banks.
+        let a_sel = truncate(
+            if ctrl.inmode.use_a1() {
+                self.a1[r]
+            } else {
+                self.a2[r]
+            },
+            27,
+        );
+        let b_sel = if ctrl.inmode.use_b1() {
+            self.b1[r]
+        } else {
+            self.b2[r]
+        };
+        let pre = {
+            let a_op = if ctrl.inmode.gate_a() { 0 } else { a_sel };
+            let d_op = if ctrl.inmode.d_enable() { self.d[r] } else { 0 };
+            let sum = if ctrl.inmode.preadd_sub() {
+                d_op - a_op
+            } else {
+                d_op + a_op
+            };
+            truncate(sum, 27)
+        };
+        let mult = {
+            let a_op = match at.amultsel {
+                MultSel::A => a_sel,
+                MultSel::Ad => {
+                    if at.adreg {
+                        self.ad[r]
+                    } else {
+                        pre
+                    }
+                }
+            };
+            truncate(a_op * b_sel, 45)
+        };
+        let m_val = if at.mreg { self.m[r] } else { mult };
+        let c_val = if at.creg { self.c[r] } else { truncate(c, 48) };
+
+        let use_m = ctrl.opmode.x == XMux::M || ctrl.opmode.y == YMux::M;
+        if use_m {
+            debug_assert!(
+                ctrl.opmode.x == XMux::M && ctrl.opmode.y == YMux::M,
+                "X and Y must both select M"
+            );
+        }
+        let x = match ctrl.opmode.x {
+            XMux::Zero => 0,
+            XMux::M => m_val,
+            XMux::P => self.p[r],
+            XMux::Ab => self.ab_concat(r),
+        };
+        let y = match ctrl.opmode.y {
+            YMux::Zero => 0,
+            YMux::M => 0, // folded into X
+            YMux::AllOnes => truncate(-1, 48),
+            YMux::C => c_val,
+        };
+        let z = match ctrl.opmode.z {
+            ZMux::Zero => 0,
+            ZMux::Pcin => truncate(pcin, 48),
+            ZMux::P => self.p[r],
+            ZMux::C => c_val,
+            ZMux::PShift17 => truncate(self.p[r] >> 17, 48),
+            ZMux::PcinShift17 => truncate(truncate(pcin, 48) >> 17, 48),
+        };
+        let w = match ctrl.opmode.w {
+            WMux::Zero => 0,
+            WMux::P => self.p[r],
+            WMux::Rnd => truncate(at.rnd, 48),
+            WMux::C => c_val,
+        };
+        let simd = at.simd;
+        let wxy = simd_add(simd, simd_add(simd, w, x, false), y, false);
+        let alu = match ctrl.alumode {
+            AluMode::Add => simd_add(simd, z, wxy, false),
+            AluMode::ZMinus => simd_add(simd, z, wxy, true),
+        };
+
+        // Register captures.
+        let next_a1 = if ctrl.cea1 { a_src } else { self.a1[r] };
+        let next_a2 = if ctrl.cea2 {
+            if at.areg >= 2 {
+                self.a1[r]
+            } else {
+                a_src
+            }
+        } else {
+            self.a2[r]
+        };
+        let next_b1 = if ctrl.ceb1 { b_src } else { self.b1[r] };
+        let next_b2 = if ctrl.ceb2 {
+            if at.breg >= 2 && !at.b2_direct {
+                self.b1[r]
+            } else {
+                b_src
+            }
+        } else {
+            self.b2[r]
+        };
+        let next_d = if at.dreg {
+            if ctrl.ced {
+                truncate(d, 27)
+            } else {
+                self.d[r]
+            }
+        } else {
+            truncate(d, 27) // transparent
+        };
+        let next_ad = if at.adreg && ctrl.cead {
+            pre
+        } else {
+            self.ad[r]
+        };
+        let next_c = if at.creg && ctrl.cec {
+            truncate(c, 48)
+        } else {
+            self.c[r]
+        };
+        let next_m = if at.mreg && ctrl.cem { mult } else { self.m[r] };
+        let next_p = if ctrl.cep { alu } else { self.p[r] };
+
+        if ctrl.cem && at.mreg && next_m != self.m[r] {
+            self.mult_toggles += 1;
+        }
+
+        self.a1[r] = next_a1;
+        self.a2[r] = next_a2;
+        self.b1[r] = next_b1;
+        self.b2[r] = next_b2;
+        self.d[r] = next_d;
+        self.ad[r] = next_ad;
+        self.c[r] = next_c;
+        self.m[r] = next_m;
+        self.p[r] = next_p;
+    }
+
+    // ---- mode-specialized fast paths -----------------------------------
+
+    /// The WS payload cycle: activations enter A/D, products cascade
+    /// over PCIN, the weight pipeline (B1/B2) is held (`CEB1 = CEB2 =
+    /// 0` — the prefetch gating), every other clock enable asserted.
+    ///
+    /// Models `INMODE = A2_B2.with_d()` with `OPMODE = MULT` at row 0
+    /// and `MULT_CASCADE` above (identical to `Z = PCIN` everywhere
+    /// with `PCIN = 0` entering row 0). Valid for every Table-I PE
+    /// configuration: `MREG = 1`, `CREG = 0`, direct A input, ONE48
+    /// ALU.
+    pub fn tick_ws_stream(&mut self, a: &[i64], d: &[i64]) {
+        let at = self.attrs;
+        debug_assert!(a.len() >= self.rows && d.len() >= self.rows);
+        debug_assert!(
+            at.mreg
+                && !at.creg
+                && at.a_input == InputSource::Direct
+                && at.simd == SimdMode::One48,
+            "tick_ws_stream assumes a Table-I PE configuration"
+        );
+        for r in (0..self.rows).rev() {
+            let pcin = if r == 0 { 0 } else { self.p[r - 1] };
+            let a_sel = truncate(self.a2[r], 27);
+            let pre = truncate(self.d[r] + a_sel, 27);
+            let mult_a = match at.amultsel {
+                MultSel::A => a_sel,
+                MultSel::Ad => {
+                    if at.adreg {
+                        self.ad[r]
+                    } else {
+                        pre
+                    }
+                }
+            };
+            let mult = truncate(mult_a * self.b2[r], 45);
+            let next_p = truncate(pcin + self.m[r], 48);
+            if mult != self.m[r] {
+                self.mult_toggles += 1;
+            }
+            let a_src = truncate(a[r], 30);
+            self.a2[r] = if at.areg >= 2 { self.a1[r] } else { a_src };
+            self.a1[r] = a_src;
+            self.d[r] = truncate(d[r], 27);
+            if at.adreg {
+                self.ad[r] = pre;
+            }
+            self.m[r] = mult;
+            self.p[r] = next_p;
+        }
+        self.cycles += 1;
+    }
+
+    /// One fast edge of a DPU multiplier chain. The chain runs the
+    /// shared schedule delayed one edge per cascade position, so the
+    /// three controls that skew — `INMODE[4]` weight select, `CEB1`,
+    /// `CEB2` — arrive as bitmasks (bit `r` = row `r`); everything
+    /// else is uniform: `INMODE = A2_B2.with_d()`, `OPMODE =
+    /// MULT_CASCADE` (PCIN 0 at row 0), all other enables asserted.
+    ///
+    /// Valid for both Table-II variants: `AMULTSEL = AD` with D/AD
+    /// registers, `AREG = 2`, `MREG = 1`, `CREG = 0`, direct inputs,
+    /// and a B2 register that loads from the port (`B2` direct mux for
+    /// the enhanced design, `BREG = 1` for the official one).
+    pub fn tick_os_chain(
+        &mut self,
+        a: &[i64],
+        d: &[i64],
+        b: &[i64],
+        use_b1: u64,
+        ceb1: u64,
+        ceb2: u64,
+    ) {
+        let at = self.attrs;
+        debug_assert!(self.rows <= 64, "control masks carry one bit per row");
+        debug_assert!(a.len() >= self.rows && d.len() >= self.rows && b.len() >= self.rows);
+        debug_assert!(
+            at.amultsel == MultSel::Ad
+                && at.adreg
+                && at.dreg
+                && at.mreg
+                && !at.creg
+                && at.areg >= 2
+                && (at.b2_direct || at.breg < 2)
+                && at.a_input == InputSource::Direct
+                && at.b_input == InputSource::Direct
+                && at.simd == SimdMode::One48,
+            "tick_os_chain assumes a Table-II chain configuration"
+        );
+        for r in (0..self.rows).rev() {
+            let pcin = if r == 0 { 0 } else { self.p[r - 1] };
+            let a_sel = truncate(self.a2[r], 27);
+            let pre = truncate(self.d[r] + a_sel, 27);
+            let b_sel = if (use_b1 >> r) & 1 != 0 {
+                self.b1[r]
+            } else {
+                self.b2[r]
+            };
+            let mult = truncate(self.ad[r] * b_sel, 45);
+            let next_p = truncate(pcin + self.m[r], 48);
+            if mult != self.m[r] {
+                self.mult_toggles += 1;
+            }
+            let b_src = truncate(b[r], 18);
+            self.a2[r] = self.a1[r];
+            self.a1[r] = truncate(a[r], 30);
+            if (ceb1 >> r) & 1 != 0 {
+                self.b1[r] = b_src;
+            }
+            if (ceb2 >> r) & 1 != 0 {
+                self.b2[r] = b_src;
+            }
+            self.d[r] = truncate(d[r], 27);
+            self.ad[r] = pre;
+            self.m[r] = mult;
+            self.p[r] = next_p;
+        }
+        self.cycles += 1;
+    }
+
+    /// One crossbar cycle of a FireFly chain: spike bits drive the
+    /// wide-bus muxes (`x_ab` bit `r` → `X = A:B`, `y_c` bit `r` →
+    /// `Y = C`), partial sums cascade over PCIN in the SIMD-partitioned
+    /// ALU, and every input register holds (`CEA*/CEB*/CEC = 0`) — the
+    /// weight sets stay resident. `MREG = 0` keeps the multiplier out
+    /// of the path; the D pipeline is transparent and idles at 0.
+    pub fn tick_snn_crossbar(&mut self, x_ab: u64, y_c: u64) {
+        let at = self.attrs;
+        debug_assert!(self.rows <= 64, "spike masks carry one bit per row");
+        debug_assert!(
+            !at.mreg && at.creg && !at.adreg && !at.dreg,
+            "tick_snn_crossbar assumes a Table-III crossbar configuration"
+        );
+        let simd = at.simd;
+        for r in (0..self.rows).rev() {
+            let pcin = if r == 0 { 0 } else { self.p[r - 1] };
+            let x = if (x_ab >> r) & 1 != 0 {
+                self.ab_concat(r)
+            } else {
+                0
+            };
+            let y = if (y_c >> r) & 1 != 0 { self.c[r] } else { 0 };
+            let wxy = simd_add(simd, simd_add(simd, 0, x, false), y, false);
+            self.p[r] = simd_add(simd, pcin, wxy, false);
+            self.d[r] = 0; // transparent DREG capturing an idle port
+        }
+        self.cycles += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{Dsp48e2, DspInputs};
+    use crate::util::rng::XorShift;
+
+    /// Tick a scalar reference column with the per-row inputs the
+    /// shared ctrl + feeds describe (snapshot the cascade, then tick in
+    /// row order — the pre-column engine loop).
+    fn scalar_tick(cells: &mut [Dsp48e2], ctrl: &ColumnCtrl, feeds: &ColumnFeeds) {
+        let acouts: Vec<i64> = cells.iter().map(|d| d.acout()).collect();
+        let bcouts: Vec<i64> = cells.iter().map(|d| d.bcout()).collect();
+        let pcouts: Vec<i64> = cells.iter().map(|d| d.pcout()).collect();
+        for (r, cell) in cells.iter_mut().enumerate() {
+            cell.tick(&DspInputs {
+                a: feed(feeds.a, r),
+                b: feed(feeds.b, r),
+                c: feed(feeds.c, r),
+                d: feed(feeds.d, r),
+                acin: if r == 0 { feeds.acin0 } else { acouts[r - 1] },
+                bcin: if r == 0 { feeds.bcin0 } else { bcouts[r - 1] },
+                pcin: if r == 0 { feeds.pcin0 } else { pcouts[r - 1] },
+                inmode: ctrl.inmode,
+                opmode: ctrl.opmode,
+                alumode: ctrl.alumode,
+                cea1: ctrl.cea1,
+                cea2: ctrl.cea2,
+                ceb1: ctrl.ceb1,
+                ceb2: ctrl.ceb2,
+                ced: ctrl.ced,
+                cead: ctrl.cead,
+                cec: ctrl.cec,
+                cem: ctrl.cem,
+                cep: ctrl.cep,
+            });
+        }
+    }
+
+    fn assert_columns_equal(col: &DspColumn, cells: &[Dsp48e2], edge: usize) {
+        for (r, cell) in cells.iter().enumerate() {
+            assert_eq!(col.regs(r), cell.regs(), "row {r} after edge {edge}");
+        }
+    }
+
+    #[test]
+    fn generic_tick_matches_scalar_macc_chain() {
+        let attrs = Attributes {
+            areg: 1,
+            breg: 1,
+            ..Attributes::default()
+        };
+        let rows = 4;
+        let mut col = DspColumn::new(attrs, rows);
+        let mut cells: Vec<Dsp48e2> =
+            (0..rows).map(|_| Dsp48e2::new(attrs)).collect();
+        let mut rng = XorShift::new(3);
+        let ctrl = ColumnCtrl {
+            opmode: OpMode::MULT_CASCADE,
+            ..ColumnCtrl::default()
+        };
+        for edge in 0..32 {
+            let a: Vec<i64> = (0..rows).map(|_| rng.next_i8() as i64).collect();
+            let b: Vec<i64> = (0..rows).map(|_| rng.next_i8() as i64).collect();
+            let feeds = ColumnFeeds {
+                a: &a,
+                b: &b,
+                ..ColumnFeeds::default()
+            };
+            col.tick(&ctrl, &feeds);
+            scalar_tick(&mut cells, &ctrl, &feeds);
+            assert_columns_equal(&col, &cells, edge);
+        }
+        let toggles: u64 = cells.iter().map(|c| c.mult_toggles).sum();
+        assert_eq!(col.mult_toggles(), toggles);
+        assert_eq!(col.cycles(), cells[0].cycles);
+    }
+
+    #[test]
+    fn ws_stream_fast_path_matches_scalar() {
+        let attrs = Attributes {
+            areg: 1,
+            ..Attributes::ws_prefetch_pe()
+        };
+        let rows = 5;
+        let mut col = DspColumn::new(attrs, rows);
+        let mut cells: Vec<Dsp48e2> =
+            (0..rows).map(|_| Dsp48e2::new(attrs)).collect();
+        let mut rng = XorShift::new(7);
+        // Prefetch-fill distinct weights through the generic path on
+        // both sides: shift the B1/BCIN chain, then one CEB2 swap.
+        let shift = ColumnCtrl {
+            ceb2: false,
+            cem: false,
+            cep: false,
+            cea1: false,
+            cea2: false,
+            ..ColumnCtrl::default()
+        };
+        let swap = ColumnCtrl {
+            ceb1: false,
+            ceb2: true,
+            cem: false,
+            cep: false,
+            cea1: false,
+            cea2: false,
+            ..ColumnCtrl::default()
+        };
+        let w: Vec<i64> = (0..rows).map(|_| rng.next_i8() as i64).collect();
+        for &wv in w.iter().rev() {
+            let feeds = ColumnFeeds {
+                bcin0: wv,
+                ..ColumnFeeds::default()
+            };
+            col.tick(&shift, &feeds);
+            scalar_tick(&mut cells, &shift, &feeds);
+        }
+        col.tick(&swap, &ColumnFeeds::default());
+        scalar_tick(&mut cells, &swap, &ColumnFeeds::default());
+        assert_columns_equal(&col, &cells, 0);
+        // The swap landed the streamed weights bottom-up.
+        for (r, &wv) in w.iter().enumerate() {
+            assert_eq!(col.regs(r).b2, wv, "weight at row {r}");
+        }
+
+        // Stream random packed activations down both columns.
+        for edge in 0..40 {
+            let a: Vec<i64> = (0..rows)
+                .map(|_| (rng.next_i8() as i64) << crate::packing::LANE_BITS)
+                .collect();
+            let d: Vec<i64> = (0..rows).map(|_| rng.next_i8() as i64).collect();
+            col.tick_ws_stream(&a, &d);
+            let pcouts: Vec<i64> = cells.iter().map(|c| c.pcout()).collect();
+            for (r, cell) in cells.iter_mut().enumerate() {
+                cell.tick(&DspInputs {
+                    a: a[r],
+                    d: d[r],
+                    inmode: InMode::A2_B2.with_d(),
+                    opmode: if r == 0 {
+                        OpMode::MULT
+                    } else {
+                        OpMode::MULT_CASCADE
+                    },
+                    pcin: if r == 0 { 0 } else { pcouts[r - 1] },
+                    ceb1: false,
+                    ceb2: false,
+                    ..DspInputs::default()
+                });
+            }
+            assert_columns_equal(&col, &cells, edge);
+        }
+        let toggles: u64 = cells.iter().map(|c| c.mult_toggles).sum();
+        assert_eq!(col.mult_toggles(), toggles);
+    }
+
+    #[test]
+    fn hold_ctrl_freezes_the_column() {
+        let mut col = DspColumn::new(Attributes::default(), 3);
+        let mut rng = XorShift::new(11);
+        let a: Vec<i64> = (0..3).map(|_| rng.next_i8() as i64).collect();
+        let b: Vec<i64> = (0..3).map(|_| rng.next_i8() as i64).collect();
+        for _ in 0..6 {
+            col.tick(
+                &ColumnCtrl::default(),
+                &ColumnFeeds {
+                    a: &a,
+                    b: &b,
+                    ..ColumnFeeds::default()
+                },
+            );
+        }
+        let before: Vec<DspRegs> = (0..3).map(|r| col.regs(r)).collect();
+        col.tick(&ColumnCtrl::hold(), &ColumnFeeds::default());
+        for (r, regs) in before.iter().enumerate() {
+            assert_eq!(col.regs(r), *regs);
+        }
+    }
+
+    #[test]
+    fn reset_keep_weights_preserves_only_b_banks() {
+        let mut col = DspColumn::new(Attributes::default(), 2);
+        let a = [3i64, 4];
+        let b = [5i64, 6];
+        for _ in 0..4 {
+            col.tick(
+                &ColumnCtrl::default(),
+                &ColumnFeeds {
+                    a: &a,
+                    b: &b,
+                    ..ColumnFeeds::default()
+                },
+            );
+        }
+        let loaded = col.regs(0);
+        assert_ne!(loaded.p, 0);
+        col.reset_keep_weights();
+        let after = col.regs(0);
+        assert_eq!(after.b1, loaded.b1);
+        assert_eq!(after.b2, loaded.b2);
+        assert_eq!(after.a1, 0);
+        assert_eq!(after.m, 0);
+        assert_eq!(after.p, 0);
+        assert_eq!(col.cycles(), 0);
+    }
+
+    #[test]
+    fn release_returns_banks_to_the_arena() {
+        let mut scratch = Scratch::new();
+        let col = DspColumn::new_in(Attributes::default(), 4, &mut scratch);
+        assert_eq!(scratch.pooled(), 0);
+        col.release(&mut scratch);
+        assert_eq!(scratch.pooled(), 9);
+    }
+}

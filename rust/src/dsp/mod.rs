@@ -20,16 +20,24 @@
 //! The model is synchronous: [`Dsp48e2::tick`] captures every register
 //! from the pre-tick state, exactly like one clock edge. Combinational
 //! output taps (`pcout`, `acout`, `bcout`) read the post-tick registers.
+//!
+//! Two representations share these semantics: the scalar [`Dsp48e2`]
+//! cell (the golden reference model) and the struct-of-arrays
+//! [`DspColumn`] (the engines' hot path — a whole cascade column
+//! advanced in one pass; see the module docs in `column.rs`). The
+//! property suite in `tests/column_props.rs` holds them bit-identical.
 
 mod attributes;
 mod cell;
+mod column;
 mod modes;
 mod simd;
 
 pub use attributes::{Attributes, CascadeTap, InputSource, MultSel, SimdMode};
-pub use cell::{Dsp48e2, DspInputs};
+pub use cell::{Dsp48e2, DspInputs, DspRegs};
+pub use column::{ColumnCtrl, ColumnFeeds, DspColumn, RowFeeds};
 pub use modes::{AluMode, InMode, OpMode, WMux, XMux, YMux, ZMux};
-pub use simd::{simd_add, simd_lane, simd_pack};
+pub use simd::{simd_add, simd_add_reference, simd_lane, simd_pack};
 
 /// Width helpers: two's-complement truncation to `bits`.
 #[inline(always)]

@@ -5,9 +5,27 @@
 //! engines rely on this for the ring accumulator (TWO24: two packed
 //! partial-sum lanes accumulate without interfering) and the FireFly
 //! crossbar (FOUR12).
+//!
+//! The partitioned paths are branch-free SWAR (SIMD-within-a-register):
+//! the lane MSBs are masked off, one 64-bit add produces every lane's
+//! low bits with no carry able to cross a lane boundary, and the true
+//! MSBs are patched back in with an XOR. This runs on every accumulate
+//! edge of the OS ring and the SNN crossbar, so it must cost one add —
+//! not a per-lane loop. The original loop survives as
+//! [`simd_add_reference`], the property-test oracle the unrolled paths
+//! are proven against (`tests/column_props.rs` and the tests below).
 
 use super::attributes::SimdMode;
 use super::truncate;
+
+/// The 48-bit ALU field.
+const M48: u64 = (1 << 48) - 1;
+/// TWO24 lane MSBs (bits 23 and 47) and lane LSBs (bits 0 and 24).
+const TWO24_MSB: u64 = (1 << 23) | (1 << 47);
+const TWO24_LSB: u64 = 1 | (1 << 24);
+/// FOUR12 lane MSBs (bits 11/23/35/47) and lane LSBs (bits 0/12/24/36).
+const FOUR12_MSB: u64 = (1 << 11) | (1 << 23) | (1 << 35) | (1 << 47);
+const FOUR12_LSB: u64 = 1 | (1 << 12) | (1 << 24) | (1 << 36);
 
 /// Lane-partitioned `a + b` (or `a - b`) over the 48-bit ALU.
 ///
@@ -20,12 +38,49 @@ pub fn simd_add(mode: SimdMode, a: i64, b: i64, subtract: bool) -> i64 {
             let r = if subtract { a.wrapping_sub(b) } else { a.wrapping_add(b) };
             truncate(r, 48)
         }
-        SimdMode::Two24 => lanes(a, b, subtract, 24),
-        SimdMode::Four12 => lanes(a, b, subtract, 12),
+        SimdMode::Two24 => lanes_swar(a, b, subtract, TWO24_MSB, TWO24_LSB),
+        SimdMode::Four12 => lanes_swar(a, b, subtract, FOUR12_MSB, FOUR12_LSB),
     }
 }
 
-fn lanes(a: i64, b: i64, subtract: bool, width: u32) -> i64 {
+/// One 64-bit add with every carry chain cut at the lane MSBs (`msb` =
+/// one bit per lane, at each lane's top position): the masked add can
+/// never carry across a lane boundary (two (W−1)-bit values sum below
+/// 2^W), and the XOR patches each true MSB — low-half carry ⊕ the two
+/// operand MSBs — back in.
+#[inline(always)]
+fn cut_add(a: u64, b: u64, msb: u64) -> u64 {
+    ((a & !msb).wrapping_add(b & !msb)) ^ ((a ^ b) & msb)
+}
+
+/// Branch-free lane-partitioned add/subtract: subtraction is a
+/// lane-wise two's complement of `b` (`~b + 1` per lane, itself a
+/// `cut_add`) followed by the lane-partitioned add.
+#[inline(always)]
+fn lanes_swar(a: i64, b: i64, subtract: bool, msb: u64, lsb: u64) -> i64 {
+    let a = (a as u64) & M48;
+    let mut b = (b as u64) & M48;
+    if subtract {
+        b = cut_add(!b & M48, lsb, msb);
+    }
+    truncate(cut_add(a, b, msb) as i64, 48)
+}
+
+/// The pre-vectorization per-lane loop, kept as the property-test
+/// oracle for the branch-free paths above. Semantically identical to
+/// [`simd_add`]; never used on a hot path.
+pub fn simd_add_reference(mode: SimdMode, a: i64, b: i64, subtract: bool) -> i64 {
+    match mode {
+        SimdMode::One48 => {
+            let r = if subtract { a.wrapping_sub(b) } else { a.wrapping_add(b) };
+            truncate(r, 48)
+        }
+        SimdMode::Two24 => lanes_loop(a, b, subtract, 24),
+        SimdMode::Four12 => lanes_loop(a, b, subtract, 12),
+    }
+}
+
+fn lanes_loop(a: i64, b: i64, subtract: bool, width: u32) -> i64 {
     let n = 48 / width;
     let mask = (1i64 << width) - 1;
     let mut out = 0i64;
@@ -116,6 +171,48 @@ mod tests {
         let r = simd_add(SimdMode::Two24, a, b, true);
         assert_eq!(simd_lane(SimdMode::Two24, r, 0), 70);
         assert_eq!(simd_lane(SimdMode::Two24, r, 1), -30);
+    }
+
+    /// The branch-free SWAR paths agree with the loop oracle over the
+    /// full 48-bit range, all modes, add and subtract.
+    #[test]
+    fn unrolled_matches_reference_loop() {
+        let mut rng = XorShift::new(29);
+        let modes = [SimdMode::One48, SimdMode::Two24, SimdMode::Four12];
+        for _ in 0..50_000 {
+            let a = truncate(rng.next_u64() as i64, 48);
+            let b = truncate(rng.next_u64() as i64, 48);
+            for mode in modes {
+                for subtract in [false, true] {
+                    assert_eq!(
+                        simd_add(mode, a, b, subtract),
+                        simd_add_reference(mode, a, b, subtract),
+                        "{mode:?} a={a:#x} b={b:#x} sub={subtract}"
+                    );
+                }
+            }
+        }
+        // Edge values: all-ones, lane MSB patterns, zero.
+        let edges = [
+            0i64,
+            truncate(-1, 48),
+            truncate(0x8000_0080_0000u64 as i64, 48),
+            truncate((1i64 << 23) | (1i64 << 47), 48),
+            (1 << 47) - 1,
+            -(1 << 47),
+        ];
+        for &a in &edges {
+            for &b in &edges {
+                for mode in modes {
+                    for subtract in [false, true] {
+                        assert_eq!(
+                            simd_add(mode, a, b, subtract),
+                            simd_add_reference(mode, a, b, subtract)
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -162,6 +162,15 @@ pub trait Engine {
         self.run_gemm(a, w)
     }
 
+    /// Scratch-arena telemetry snapshot (lease counts, reuse-hit
+    /// ratio, high-water bytes) for engines that pool their hot-loop
+    /// buffers. Counters are monotonic, so callers can diff snapshots
+    /// for exact deltas; the default is an empty snapshot for engines
+    /// without an arena.
+    fn scratch_stats(&self) -> crate::exec::ScratchStats {
+        crate::exec::ScratchStats::default()
+    }
+
     /// The paper-style evaluation row for this engine.
     fn table_row(&self) -> TableRow {
         let inv = self.inventory();

@@ -12,22 +12,31 @@
 //!   every fast cycle with the alternating weight (two weights per slow
 //!   cycle — the doubled-bandwidth drawback).
 //!
-//! The chain is pure datapath; the engine owns the edge schedule and
-//! output tagging (see `engine.rs`).
+//! The chain state lives in a [`DspColumn`] (struct-of-arrays register
+//! banks): the engine's per-slice drive is staged into SoA operand
+//! banks and the three controls the schedule skews per slice —
+//! INMODE[4], CEB1, CEB2 — become bitmasks, so one
+//! [`DspColumn::tick_os_chain`] pass advances the whole cascade with
+//! no per-cell `DspInputs`. The chain is pure datapath; the engine
+//! owns the edge schedule and output tagging (see `engine.rs`).
 
 use super::OsVariant;
-use crate::dsp::{Attributes, Dsp48e2, DspInputs, InMode, OpMode};
+use crate::dsp::{Attributes, DspColumn, DspRegs};
+use crate::exec::Scratch;
 use crate::fabric::{ClockDomain, LutMux};
 
 /// One multiplier chain.
 pub struct MultChain {
-    dsps: Vec<Dsp48e2>,
+    /// SoA register banks for the `chain_len` cascade slices.
+    col: DspColumn,
     /// Official-variant DDR weight mux (one 8-bit 2:1 LUT mux per chain
     /// pair in the inventory; modeled per chain here for activity).
     mux: Option<LutMux>,
-    /// Pre-edge cascade snapshot, reused every tick (§Perf: no per-tick
-    /// allocation in the hot loop).
-    pcout_buf: Vec<i64>,
+    /// SoA operand staging, refilled from the per-slice drive each
+    /// edge (§Perf: one column pass instead of `len` cell ticks).
+    a_ops: Vec<i64>,
+    d_ops: Vec<i64>,
+    b_ops: Vec<i64>,
 }
 
 /// Per-edge drive for one chain (engine-provided).
@@ -44,36 +53,49 @@ pub struct ChainDrive {
     pub ceb2: bool,
 }
 
+fn chain_attrs(variant: OsVariant) -> Attributes {
+    match variant {
+        OsVariant::Enhanced => Attributes::os_inmux_pe(),
+        // Official: B arrives from the CLB mux every fast cycle;
+        // single B register (B2 direct), same A/D packing pipeline.
+        OsVariant::Official => Attributes {
+            breg: 1,
+            amultsel: crate::dsp::MultSel::Ad,
+            dreg: true,
+            adreg: true,
+            ..Attributes::default()
+        },
+    }
+}
+
 impl MultChain {
-    pub fn new(variant: OsVariant, chain_len: usize) -> Self {
-        let attrs = match variant {
-            OsVariant::Enhanced => Attributes::os_inmux_pe(),
-            // Official: B arrives from the CLB mux every fast cycle;
-            // single B register (B2 direct), same A/D packing pipeline.
-            OsVariant::Official => Attributes {
-                breg: 1,
-                amultsel: crate::dsp::MultSel::Ad,
-                dreg: true,
-                adreg: true,
-                ..Attributes::default()
-            },
-        };
+    /// A chain whose register banks lease from `scratch` (the engine's
+    /// arena).
+    pub fn new_in(variant: OsVariant, chain_len: usize, scratch: &mut Scratch) -> Self {
+        assert!(chain_len <= 64, "chain controls carry one bit per slice");
         MultChain {
-            dsps: (0..chain_len).map(|_| Dsp48e2::new(attrs)).collect(),
+            col: DspColumn::new_in(chain_attrs(variant), chain_len, scratch),
             mux: match variant {
                 OsVariant::Official => Some(LutMux::new(8, ClockDomain::Fast)),
                 OsVariant::Enhanced => None,
             },
-            pcout_buf: Vec::with_capacity(chain_len),
+            a_ops: scratch.lease_i64(chain_len),
+            d_ops: scratch.lease_i64(chain_len),
+            b_ops: scratch.lease_i64(chain_len),
         }
     }
 
+    /// A free-standing chain (fresh allocations, no arena).
+    pub fn new(variant: OsVariant, chain_len: usize) -> Self {
+        Self::new_in(variant, chain_len, &mut Scratch::new())
+    }
+
     pub fn len(&self) -> usize {
-        self.dsps.len()
+        self.col.rows()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.dsps.is_empty()
+        self.col.rows() == 0
     }
 
     /// One fast edge. `per_slice(j)` returns the slice's controls and
@@ -91,63 +113,65 @@ impl MultChain {
         &mut self,
         mut per_slice: impl FnMut(usize) -> (ChainDrive, i64, i64, i64),
     ) {
-        let MultChain {
-            dsps,
-            mux,
-            pcout_buf,
-        } = self;
-        pcout_buf.clear();
-        pcout_buf.extend(dsps.iter().map(|d| d.pcout()));
-        let official = mux.is_some();
-        for (j, dsp) in dsps.iter_mut().enumerate() {
+        let len = self.col.rows();
+        let official = self.mux.is_some();
+        let (mut use_b1, mut ceb1, mut ceb2) = (0u64, 0u64, 0u64);
+        for j in 0..len {
             let (drive, a, d, b_bus) = per_slice(j);
-            let b = if let Some(mux) = mux.as_mut() {
+            let b = if let Some(mux) = self.mux.as_mut() {
                 mux.select(drive.use_b1, b_bus, b_bus)
             } else {
                 b_bus
             };
-            let use_b1 = if official { false } else { drive.use_b1 };
-            let inmode = InMode::A2_B2.with_d().with_b1(use_b1);
-            let opmode = if j == 0 {
-                OpMode::MULT
-            } else {
-                OpMode::MULT_CASCADE
-            };
-            dsp.tick(&DspInputs {
-                a,
-                d,
-                b,
-                pcin: if j == 0 { 0 } else { pcout_buf[j - 1] },
-                inmode,
-                opmode,
-                ceb1: drive.ceb1,
-                ceb2: drive.ceb2,
-                ..DspInputs::default()
-            });
+            if !official && drive.use_b1 {
+                use_b1 |= 1 << j;
+            }
+            if drive.ceb1 {
+                ceb1 |= 1 << j;
+            }
+            if drive.ceb2 {
+                ceb2 |= 1 << j;
+            }
+            self.a_ops[j] = a;
+            self.d_ops[j] = d;
+            self.b_ops[j] = b;
         }
+        self.col.tick_os_chain(
+            &self.a_ops,
+            &self.d_ops,
+            &self.b_ops,
+            use_b1,
+            ceb1,
+            ceb2,
+        );
     }
 
     /// The cascade tail's P register (post-edge).
     pub fn tail_p(&self) -> i64 {
-        self.dsps.last().expect("chain is non-empty").p()
+        let len = self.col.rows();
+        assert!(len > 0, "chain is non-empty");
+        self.col.p(len - 1)
     }
 
     /// Pipeline latency from an A-port sample to the tail P:
     /// A1, A2, AD, M, P = 4 edges, plus one per extra cascade stage.
     pub fn latency(&self) -> usize {
-        4 + (self.dsps.len() - 1)
+        4 + (self.col.rows() - 1)
     }
 
     pub fn reset(&mut self) {
-        for d in &mut self.dsps {
-            d.reset();
-        }
+        self.col.reset();
     }
 
     /// Observed B-register state (debug/waveform).
     pub fn b_regs(&self, j: usize) -> (i64, i64) {
-        let r = self.dsps[j].regs();
+        let r = self.regs(j);
         (r.b1, r.b2)
+    }
+
+    /// Slice `j`'s full register snapshot (debug/waveform).
+    pub fn regs(&self, j: usize) -> DspRegs {
+        self.col.regs(j)
     }
 }
 

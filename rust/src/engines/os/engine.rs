@@ -86,21 +86,26 @@ impl OsEngine {
         );
         let n_chains = cfg.chains();
         let n_pairs = cfg.px_groups * cfg.oc_pairs;
+        // The chains' and rings' SoA register banks lease from the
+        // engine's arena.
+        let mut scratch = Scratch::new();
+        let chains = (0..n_chains)
+            .map(|_| MultChain::new_in(cfg.variant, cfg.chain_len, &mut scratch))
+            .collect();
+        let rings = match cfg.variant {
+            OsVariant::Enhanced => (0..n_pairs)
+                .map(|_| RingAccumulator::new_in(0, &mut scratch))
+                .collect(),
+            OsVariant::Official => Vec::new(),
+        };
         OsEngine {
             name: format!("DPU-{} {}", cfg.variant.label(), b_tag(&cfg)),
-            chains: (0..n_chains)
-                .map(|_| MultChain::new(cfg.variant, cfg.chain_len))
-                .collect(),
-            rings: match cfg.variant {
-                OsVariant::Enhanced => {
-                    (0..n_pairs).map(|_| RingAccumulator::new(0)).collect()
-                }
-                OsVariant::Official => Vec::new(),
-            },
+            chains,
+            rings,
             d_delay: (0..n_chains).map(|_| vec![0; cfg.chain_len]).collect(),
             tailb_buf: vec![[0; 2]; n_pairs],
             slots: vec![[[[0; 2]; 2]; 2]; n_pairs],
-            scratch: Scratch::new(),
+            scratch,
             cfg,
         }
     }
@@ -426,6 +431,10 @@ impl Engine for OsEngine {
 
     fn peak_macs_per_cycle(&self) -> u64 {
         self.cfg.peak_macs()
+    }
+
+    fn scratch_stats(&self) -> crate::exec::ScratchStats {
+        self.scratch.stats()
     }
 
     fn run_gemm(&mut self, a: &MatI8, w: &MatI8) -> Result<GemmRun, EngineError> {

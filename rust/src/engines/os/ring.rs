@@ -35,8 +35,8 @@
 //!   after edge `4r + s + 2` (and recirculates for round `r+1`).
 
 use crate::dsp::{
-    simd_lane, simd_pack, Attributes, Dsp48e2, DspInputs, OpMode, SimdMode,
-    WMux, XMux, YMux, ZMux,
+    simd_lane, simd_pack, Attributes, ColumnCtrl, ColumnFeeds, DspColumn,
+    OpMode, SimdMode, WMux, XMux, YMux, ZMux,
 };
 use crate::packing;
 
@@ -65,22 +65,26 @@ pub fn two24_lanes(word: i64) -> (i64, i64) {
     )
 }
 
-/// The two-DSP ring accumulator.
+/// The two-DSP ring accumulator. Each stage is a depth-1 [`DspColumn`]
+/// (the generic column tick with a per-edge [`ColumnCtrl`]) — the same
+/// SoA machinery as the multiplier chains, with the TWO24 accumulate
+/// riding the branch-free SIMD fast path.
 pub struct RingAccumulator {
-    dsp_a: Dsp48e2,
-    dsp_b: Dsp48e2,
+    col_a: DspColumn,
+    col_b: DspColumn,
     /// The fabric delay pair closing the loop (S2P drain taps).
     delay: [i64; 2],
     /// Fast edges since reset.
     edge: u64,
-    bias_word: i64,
 }
 
 impl RingAccumulator {
-    /// `bias_lane` is added once per stream via the RND constant (same
-    /// value on both pixel lanes; per-output biases are applied by the
-    /// engine downstream when they differ).
-    pub fn new(bias_lane: i64) -> Self {
+    /// A ring whose column banks lease from `scratch` (the engine's
+    /// arena — so ring state shows up in the scratch telemetry like
+    /// every other bank). `bias_lane` is added once per stream via the
+    /// RND constant (same value on both pixel lanes; per-output biases
+    /// are applied by the engine downstream when they differ).
+    pub fn new_in(bias_lane: i64, scratch: &mut crate::exec::Scratch) -> Self {
         let rnd = simd_pack(
             SimdMode::Two24,
             &[trunc24(bias_lane), trunc24(bias_lane)],
@@ -93,12 +97,20 @@ impl RingAccumulator {
             ..Attributes::ring_accumulator(rnd)
         };
         RingAccumulator {
-            dsp_a: Dsp48e2::new(a_attrs),
-            dsp_b: Dsp48e2::new(Attributes::ring_accumulator(rnd)),
+            col_a: DspColumn::new_in(a_attrs, 1, scratch),
+            col_b: DspColumn::new_in(
+                Attributes::ring_accumulator(rnd),
+                1,
+                scratch,
+            ),
             delay: [0; 2],
             edge: 0,
-            bias_word: rnd,
         }
+    }
+
+    /// A free-standing ring (fresh allocations, no arena).
+    pub fn new(bias_lane: i64) -> Self {
+        Self::new_in(bias_lane, &mut crate::exec::Scratch::new())
     }
 
     /// One Clk×2 edge. `chain_a` / `chain_b` are TWO24-respaced psum
@@ -112,46 +124,56 @@ impl RingAccumulator {
         let feedback = self.delay[1];
 
         // Pre-edge cascade value (PCOUT is the registered P).
-        let a_pcout = self.dsp_a.pcout();
+        let a_pcout = self.col_a.p(0);
 
         // DSP a: P = X(A:B = chainA word, registered last edge)
         //           + Y(C = feedback, transparent)  [0 on first pass]
         //           + W(RND)                        [first pass only]
-        self.dsp_a.tick(&DspInputs {
-            a: (chain_a >> 18) & ((1 << 30) - 1),
-            b: chain_a & ((1 << 18) - 1),
-            c: feedback,
-            opmode: OpMode {
-                x: XMux::Ab,
-                y: if first_pass { YMux::Zero } else { YMux::C },
-                z: ZMux::Zero,
-                w: if first_pass { WMux::Rnd } else { WMux::Zero },
+        self.col_a.tick(
+            &ColumnCtrl {
+                opmode: OpMode {
+                    x: XMux::Ab,
+                    y: if first_pass { YMux::Zero } else { YMux::C },
+                    z: ZMux::Zero,
+                    w: if first_pass { WMux::Rnd } else { WMux::Zero },
+                },
+                ..ColumnCtrl::default()
             },
-            ..DspInputs::default()
-        });
+            &ColumnFeeds {
+                a: &[(chain_a >> 18) & ((1 << 30) - 1)],
+                b: &[chain_a & ((1 << 18) - 1)],
+                c: &[feedback],
+                ..ColumnFeeds::default()
+            },
+        );
 
         // DSP b: P = Z(PCIN = DSP a's pre-edge P) + Y(C = chainB word).
-        self.dsp_b.tick(&DspInputs {
-            c: chain_b,
-            pcin: a_pcout,
-            opmode: OpMode {
-                x: XMux::Zero,
-                y: YMux::C,
-                z: ZMux::Pcin,
-                w: WMux::Zero,
+        self.col_b.tick(
+            &ColumnCtrl {
+                opmode: OpMode {
+                    x: XMux::Zero,
+                    y: YMux::C,
+                    z: ZMux::Pcin,
+                    w: WMux::Zero,
+                },
+                ..ColumnCtrl::default()
             },
-            ..DspInputs::default()
-        });
+            &ColumnFeeds {
+                c: &[chain_b],
+                pcin0: a_pcout,
+                ..ColumnFeeds::default()
+            },
+        );
 
         // Close the ring through the delay pair.
         self.delay[1] = self.delay[0];
-        self.delay[0] = self.dsp_b.p();
+        self.delay[0] = self.col_b.p(0);
         self.edge += 1;
     }
 
     /// DSP b's post-edge P — the stream total that just completed.
     pub fn output(&self) -> i64 {
-        self.dsp_b.p()
+        self.col_b.p(0)
     }
 
     /// Fast edges ticked since reset.
@@ -159,9 +181,14 @@ impl RingAccumulator {
         self.edge
     }
 
+    /// Synchronous reset, in place: the bias stays folded into the two
+    /// columns' RND attribute, so nothing reallocates — `reset_pass`
+    /// calls this per ring at the start of every OS pass.
     pub fn reset(&mut self) {
-        let bias = simd_lane(SimdMode::Two24, self.bias_word, 0);
-        *self = RingAccumulator::new(bias);
+        self.col_a.reset();
+        self.col_b.reset();
+        self.delay = [0; 2];
+        self.edge = 0;
     }
 }
 

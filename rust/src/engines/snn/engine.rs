@@ -3,8 +3,8 @@
 use super::{snn_inventory, snn_timing, SnnConfig, SnnVariant};
 use crate::cost::{ResourceInventory, TimingModel};
 use crate::dsp::{
-    simd_lane, simd_pack, Attributes, CascadeTap, Dsp48e2, DspInputs,
-    InputSource, OpMode, SimdMode, WMux, XMux, YMux, ZMux,
+    simd_lane, simd_pack, Attributes, CascadeTap, ColumnCtrl, DspColumn,
+    InputSource, RowFeeds, SimdMode,
 };
 use crate::engines::{Engine, EngineError, GemmRun, RunStats};
 use crate::exec::{self, Clocking, FillPlan, Scratch, TileKernel, TilePlan};
@@ -16,15 +16,14 @@ use crate::workload::{MatI32, MatI8};
 pub struct SnnEngine {
     cfg: SnnConfig,
     name: String,
-    /// `chains × chain_len` slices, `dsps[c][j]`.
-    dsps: Vec<Vec<Dsp48e2>>,
+    /// One SoA register column per chain (`chain_len` slices deep):
+    /// `chains[c]`. Spike bits become per-edge mux masks, so a whole
+    /// chain advances in one [`DspColumn::tick_snn_crossbar`] pass.
+    chains: Vec<DspColumn>,
     /// CLB ping-pong shadow for the C weight set (both variants), and
     /// for the A:B set too in the FireFly variant.
     c_bank: FfBank,
     ab_bank: FfBank,
-    /// Pre-edge cascade snapshot, reused every cycle (§Perf: no
-    /// per-cycle allocation in the hot loop).
-    pcout_buf: Vec<i64>,
     /// Reusable scratch arena for per-pass output staging.
     scratch: Scratch,
 }
@@ -59,8 +58,11 @@ impl SnnEngine {
             creg: true,
             ..Attributes::firefly_crossbar()
         };
-        let dsps = (0..cfg.chains)
-            .map(|_| (0..cfg.chain_len).map(|_| Dsp48e2::new(attrs)).collect())
+        assert!(cfg.chain_len <= 64, "spike masks carry one bit per slice");
+        // The chains' SoA register banks lease from the engine's arena.
+        let mut scratch = Scratch::new();
+        let chains = (0..cfg.chains)
+            .map(|_| DspColumn::new_in(attrs, cfg.chain_len, &mut scratch))
             .collect();
         let slices = cfg.chains * cfg.chain_len;
         SnnEngine {
@@ -70,15 +72,14 @@ impl SnnEngine {
                 cfg.pre(),
                 cfg.pre()
             ),
-            dsps,
+            chains,
             c_bank: FfBank::new(slices, 32, ClockDomain::Slow),
             ab_bank: FfBank::new(
                 if cfg.variant == SnnVariant::FireFly { slices } else { 0 },
                 32,
                 ClockDomain::Slow,
             ),
-            pcout_buf: Vec::with_capacity(cfg.chain_len),
-            scratch: Scratch::new(),
+            scratch,
             cfg,
         }
     }
@@ -132,27 +133,39 @@ impl SnnEngine {
                 }
                 // Commit into the DSP: A:B via the input pipelines
                 // (enhanced: modeled as the cascade-shifted value being
-                // latched by the A2/B2 hold pulse), C via the C register.
-                let dsp = &mut self.dsps[c][j];
-                dsp.tick(&DspInputs {
-                    a: (ab_word >> 18) & ((1 << 30) - 1),
-                    b: ab_word & ((1 << 18) - 1),
-                    acin: (ab_word >> 18) & ((1 << 30) - 1),
-                    bcin: ab_word & ((1 << 18) - 1),
-                    c: c_word,
-                    cep: false,
-                    ..DspInputs::default()
-                });
+                // latched by the A2/B2 hold pulse), C via the C
+                // register — one slice at a time, so the column's
+                // row-tick path drives bank element `j` alone.
+                let chain = &mut self.chains[c];
+                chain.tick_row(
+                    j,
+                    &ColumnCtrl {
+                        cep: false,
+                        ..ColumnCtrl::default()
+                    },
+                    &RowFeeds {
+                        a: (ab_word >> 18) & ((1 << 30) - 1),
+                        b: ab_word & ((1 << 18) - 1),
+                        acin: (ab_word >> 18) & ((1 << 30) - 1),
+                        bcin: ab_word & ((1 << 18) - 1),
+                        c: c_word,
+                        ..RowFeeds::default()
+                    },
+                );
                 // Second edge moves A1/B1 -> A2/B2 (hold registers).
-                dsp.tick(&DspInputs {
-                    acin: 0,
-                    bcin: 0,
-                    c: c_word,
-                    cep: false,
-                    cea1: false,
-                    ceb1: false,
-                    ..DspInputs::default()
-                });
+                chain.tick_row(
+                    j,
+                    &ColumnCtrl {
+                        cep: false,
+                        cea1: false,
+                        ceb1: false,
+                        ..ColumnCtrl::default()
+                    },
+                    &RowFeeds {
+                        c: c_word,
+                        ..RowFeeds::default()
+                    },
+                );
             }
         }
     }
@@ -171,12 +184,10 @@ impl SnnEngine {
         let cfg = self.cfg;
         let len = cfg.chain_len;
         let t_steps = train.steps;
-        let SnnEngine {
-            dsps, pcout_buf, ..
-        } = self;
-        for (c, chain) in dsps.iter_mut().enumerate() {
-            pcout_buf.clear();
-            pcout_buf.extend(chain.iter().map(|d| d.pcout()));
+        for (c, chain) in self.chains.iter_mut().enumerate() {
+            // The spike bits become per-row wide-bus mux selects
+            // (bit j: X = A:B for spike 2j, Y = C for spike 2j+1).
+            let (mut x_ab, mut y_c) = (0u64, 0u64);
             for j in 0..len {
                 // Systolic skew: slice j sees timestep `cycle - j`.
                 let t = cycle as isize - j as isize;
@@ -191,30 +202,20 @@ impl SnnEngine {
                 if s0 || s1 {
                     stats.macs += 4 * (s0 as u64 + s1 as u64);
                 }
-                // The spike bits drive the wide-bus muxes.
-                let opmode = OpMode {
-                    x: if s0 { XMux::Ab } else { XMux::Zero },
-                    y: if s1 { YMux::C } else { YMux::Zero },
-                    z: ZMux::Pcin,
-                    w: WMux::Zero,
-                };
-                chain[j].tick(&DspInputs {
-                    pcin: if j == 0 { 0 } else { pcout_buf[j - 1] },
-                    opmode,
-                    cea1: false,
-                    cea2: false,
-                    ceb1: false,
-                    ceb2: false,
-                    cec: false,
-                    ..DspInputs::default()
-                });
+                if s0 {
+                    x_ab |= 1 << j;
+                }
+                if s1 {
+                    y_c |= 1 << j;
+                }
             }
+            chain.tick_snn_crossbar(x_ab, y_c);
             // Tail latency: slice j's ALU registers at cycle t+j (no M
             // reg in the crossbar path), so the tail P carries timestep
             // `cycle - (len-1)`.
             let t_out = cycle as isize - (len as isize - 1);
             if t_out >= 0 && (t_out as usize) < t_steps {
-                let p = chain[len - 1].p();
+                let p = chain.p(len - 1);
                 for lane in 0..4 {
                     let v = simd_lane(SimdMode::Four12, p, lane) as i32;
                     out[t_out as usize * cfg.post_per_pass() + c * 4 + lane] = v;
@@ -286,10 +287,8 @@ impl SnnEngine {
     }
 
     pub fn reset(&mut self) {
-        for chain in &mut self.dsps {
-            for d in chain {
-                d.reset();
-            }
+        for chain in &mut self.chains {
+            chain.reset();
         }
     }
 }
@@ -349,6 +348,10 @@ impl Engine for SnnEngine {
     fn peak_macs_per_cycle(&self) -> u64 {
         // 2 pre × 4 lanes per slice (synaptic ops).
         (self.cfg.chains * self.cfg.chain_len * 8) as u64
+    }
+
+    fn scratch_stats(&self) -> crate::exec::ScratchStats {
+        self.scratch.stats()
     }
 
     /// GEMM view: `a` must be a {0,1} spike matrix (T × pre).

@@ -3,7 +3,7 @@
 use super::inventory::{ws_inventory, ws_timing};
 use super::{WsConfig, WsVariant};
 use crate::cost::{ResourceInventory, TimingModel};
-use crate::dsp::{Attributes, Dsp48e2, DspInputs, InMode, OpMode};
+use crate::dsp::{Attributes, ColumnCtrl, ColumnFeeds, DspColumn, RowFeeds};
 use crate::engines::{Engine, EngineError, GemmRun, RunStats};
 use crate::exec::{self, Clocking, FillPlan, Scratch, TileKernel, TilePlan};
 use crate::fabric::{ClockDomain, ClockPlan, FfBank, StagingChain};
@@ -26,8 +26,10 @@ fn pipe_latency(variant: WsVariant) -> usize {
 pub struct WsEngine {
     cfg: WsConfig,
     name: String,
-    /// `rows × cols` multiplier DSPs, column-major: `dsps[c][r]`.
-    dsps: Vec<Vec<Dsp48e2>>,
+    /// One SoA register column per array column (`rows` slices deep):
+    /// `columns[c]`. The scalar `Dsp48e2` cell stays the golden
+    /// reference; `tests/column_props.rs` holds the two bit-identical.
+    columns: Vec<DspColumn>,
     /// Per-row activation staging chains (packed pair or single act).
     staging: Vec<StagingChain>,
     /// CLB weight ping-pong bank (ClbFetch / Libano); empty otherwise.
@@ -68,8 +70,11 @@ impl WsEngine {
             WsVariant::DspFetch => Attributes { areg: 1, ..pe_attrs },
             _ => pe_attrs,
         };
-        let dsps = (0..cfg.cols)
-            .map(|_| (0..cfg.rows).map(|_| Dsp48e2::new(pe_attrs)).collect())
+        // The register banks lease from the engine's own arena, like
+        // every other hot-loop buffer.
+        let mut scratch = Scratch::new();
+        let columns = (0..cfg.cols)
+            .map(|_| DspColumn::new_in(pe_attrs, cfg.rows, &mut scratch))
             .collect();
         let act_width = if cfg.variant.packed() { 16 } else { 8 };
         let staging = (0..cfg.rows)
@@ -89,11 +94,11 @@ impl WsEngine {
                 cfg.cols
             ),
             cfg,
-            dsps,
+            columns,
             staging,
             wgt_bank,
             stats_template: RunStats::default(),
-            scratch: Scratch::new(),
+            scratch,
             resident: None,
         }
     }
@@ -125,22 +130,42 @@ impl WsEngine {
     }
 
     /// Load a stationary weight tile (K=rows × N<=cols), modeling the
-    /// variant's delivery path. Cycle accounting comes from
+    /// variant's delivery path through the generic column tick — fills
+    /// are a handful of edges per tile, so only the payload stream gets
+    /// a specialized path. Cycle accounting comes from
     /// [`WsEngine::fill_plan`].
-    fn fill_weights(&mut self, w: &MatI8) {
+    fn fill_weights(&mut self, w: &MatI8, scratch: &mut Scratch) {
         let (rows, cols) = (self.cfg.rows, self.cfg.cols);
         assert_eq!(w.rows, rows);
         assert!(w.cols <= cols);
+        // The B2 load pulse every delivery path ends with: only CEB2
+        // asserted on the weight pipeline, the datapath held.
+        let swap = ColumnCtrl {
+            ceb1: false,
+            ceb2: true,
+            cep: false,
+            cem: false,
+            cea1: false,
+            cea2: false,
+            ..ColumnCtrl::default()
+        };
         match self.cfg.variant {
             WsVariant::DspFetch => {
                 // Stream down the B1/BCIN chain (rows cycles, normally
                 // overlapped with compute), then one CEB2 swap pulse.
                 // Columns are independent during fill, so each column
                 // consumes its weight column in one pass (`col_iter`:
-                // no per-column copy), and ticking rows bottom-up lets
-                // every row read its neighbor's pre-edge BCOUT without
-                // a cascade snapshot buffer.
-                for (c, col) in self.dsps.iter_mut().enumerate() {
+                // no per-column copy); the cascade reads are the
+                // column tick's neighboring-bank taps.
+                let shift = ColumnCtrl {
+                    ceb2: false,
+                    cep: false,
+                    cem: false,
+                    cea1: false,
+                    cea2: false,
+                    ..ColumnCtrl::default()
+                };
+                for (c, col) in self.columns.iter_mut().enumerate() {
                     let mut feed =
                         (c < w.cols).then(|| w.col_iter(c).rev());
                     for _t in 0..rows {
@@ -148,36 +173,18 @@ impl WsEngine {
                             .as_mut()
                             .and_then(|f| f.next())
                             .unwrap_or(0) as i64;
-                        for r in (0..rows).rev() {
-                            let bcin =
-                                if r == 0 { wv } else { col[r - 1].bcout() };
-                            col[r].tick(&DspInputs {
-                                bcin,
-                                ceb2: false,
-                                cep: false,
-                                cem: false,
-                                cea1: false,
-                                cea2: false,
-                                ..DspInputs::default()
-                            });
-                        }
+                        col.tick(
+                            &shift,
+                            &ColumnFeeds {
+                                bcin0: wv,
+                                ..ColumnFeeds::default()
+                            },
+                        );
                     }
                 }
                 // Swap pulse: every B2 captures its B1 neighbor value.
-                for col in self.dsps.iter_mut() {
-                    for r in (0..rows).rev() {
-                        let bcin = if r == 0 { 0 } else { col[r - 1].bcout() };
-                        col[r].tick(&DspInputs {
-                            bcin,
-                            ceb1: false,
-                            ceb2: true,
-                            cep: false,
-                            cem: false,
-                            cea1: false,
-                            cea2: false,
-                            ..DspInputs::default()
-                        });
-                    }
+                for col in self.columns.iter_mut() {
+                    col.tick(&swap, &ColumnFeeds::default());
                 }
             }
             WsVariant::ClbFetch | WsVariant::Libano => {
@@ -189,37 +196,35 @@ impl WsEngine {
                         self.wgt_bank.clock(r * cols + c, wv as i64, true);
                     }
                 }
-                for (c, col) in self.dsps.iter_mut().enumerate() {
-                    for (r, dsp) in col.iter_mut().enumerate() {
-                        let wv = self.wgt_bank.get(r * cols + c);
-                        dsp.tick(&DspInputs {
-                            b: wv,
-                            ceb1: false,
-                            ceb2: true,
-                            cep: false,
-                            cem: false,
-                            cea1: false,
-                            cea2: false,
-                            ..DspInputs::default()
-                        });
+                let mut bvals = scratch.lease_i64(rows);
+                for (c, col) in self.columns.iter_mut().enumerate() {
+                    for (r, slot) in bvals.iter_mut().enumerate() {
+                        *slot = self.wgt_bank.get(r * cols + c);
                     }
+                    col.tick(
+                        &swap,
+                        &ColumnFeeds {
+                            b: &bvals,
+                            ..ColumnFeeds::default()
+                        },
+                    );
                 }
+                scratch.release_i64(bvals);
             }
             WsVariant::TinyTpu => {
-                // Row-by-row load through the B port, array idle.
+                // Row-by-row load through the B port, array idle —
+                // one slice ticks per load edge, like the hardware.
                 for r in 0..rows {
-                    for (c, col) in self.dsps.iter_mut().enumerate() {
+                    for (c, col) in self.columns.iter_mut().enumerate() {
                         let wv = if c < w.cols { w.at(r, c) as i64 } else { 0 };
-                        col[r].tick(&DspInputs {
-                            b: wv,
-                            ceb1: false,
-                            ceb2: true,
-                            cep: false,
-                            cem: false,
-                            cea1: false,
-                            cea2: false,
-                            ..DspInputs::default()
-                        });
+                        col.tick_row(
+                            r,
+                            &swap,
+                            &RowFeeds {
+                                b: wv,
+                                ..RowFeeds::default()
+                            },
+                        );
                     }
                 }
             }
@@ -228,7 +233,10 @@ impl WsEngine {
 
     /// One streaming cycle: shift staging, drive every column, collect
     /// finished waves. The fill → stream → drain loop itself lives in
-    /// [`exec::run_tile`]; this is the WS datapath's cycle body.
+    /// [`exec::run_tile`]; this is the WS datapath's cycle body —
+    /// per-row operands staged into the SoA feed banks, then the whole
+    /// cascade advanced by one [`DspColumn::tick_ws_stream`] pass (no
+    /// per-cell input structs, no cascade snapshot).
     #[allow(clippy::too_many_arguments)]
     fn stream_cycle(
         &mut self,
@@ -237,12 +245,12 @@ impl WsEngine {
         n_cols: usize,
         waves: usize,
         latency: usize,
-        pcouts: &mut [i64],
-        inp: &mut DspInputs,
+        a_feed: &mut [i64],
+        d_feed: &mut [i64],
         out: &mut MatI32,
         stats: &mut RunStats,
     ) {
-        let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        let rows = self.cfg.rows;
         let packed = self.cfg.variant.packed();
         let broadcast = self.cfg.variant.broadcast();
         let m = a.rows;
@@ -275,12 +283,9 @@ impl WsEngine {
             self.staging[r].shift(v);
         }
 
-        // Drive every column (pre-edge pcout reads, then tick).
-        for c in 0..cols {
-            let col = &mut self.dsps[c];
-            for (slot, d) in pcouts.iter_mut().zip(col.iter()) {
-                *slot = d.pcout();
-            }
+        // Drive every column: stage the per-row operands into the SoA
+        // feed banks, then advance the cascade in one pass.
+        for (c, col) in self.columns.iter_mut().enumerate() {
             for r in 0..rows {
                 let staged = if broadcast {
                     // Broadcast: all columns see the chain input
@@ -292,20 +297,14 @@ impl WsEngine {
                 if packed {
                     let hi = ((staged >> 8) & 0xFF) as i8 as i64;
                     let lo = (staged & 0xFF) as i8 as i64;
-                    inp.a = hi << packing::LANE_BITS;
-                    inp.d = lo;
+                    a_feed[r] = hi << packing::LANE_BITS;
+                    d_feed[r] = lo;
                 } else {
-                    inp.a = (staged & 0xFF) as i8 as i64;
-                    inp.d = 0;
+                    a_feed[r] = (staged & 0xFF) as i8 as i64;
+                    d_feed[r] = 0;
                 }
-                inp.opmode = if r == 0 {
-                    OpMode::MULT
-                } else {
-                    OpMode::MULT_CASCADE
-                };
-                inp.pcin = if r == 0 { 0 } else { pcouts[r - 1] };
-                col[r].tick(inp);
             }
+            col.tick_ws_stream(a_feed, d_feed);
         }
 
         // Collect: column c's cascade bottom holds the result for
@@ -318,7 +317,7 @@ impl WsEngine {
             if wave < 0 || wave as usize >= waves {
                 continue;
             }
-            let p = self.dsps[c][rows - 1].p();
+            let p = self.columns[c].p(rows - 1);
             if packed {
                 let (hi, lo) = packing::unpack_prod(p);
                 let row_hi = 2 * wave as usize;
@@ -374,15 +373,13 @@ impl WsEngine {
 
     /// The live weight currently held by PE (r, c) — from B2.
     fn wgt_value(&self, r: usize, c: usize) -> i64 {
-        self.dsps[c][r].regs().b2
+        self.columns[c].regs(r).b2
     }
 
     /// Reset all sequential state.
     pub fn reset(&mut self) {
-        for col in &mut self.dsps {
-            for dsp in col {
-                dsp.reset();
-            }
+        for col in &mut self.columns {
+            col.reset();
         }
         for chain in &mut self.staging {
             chain.reset();
@@ -398,10 +395,8 @@ impl WsEngine {
     /// post-fill state a fresh `reset` + `fill_weights` would leave —
     /// which is what makes skipping the fill bit-exact.
     fn reset_stream_state(&mut self) {
-        for col in &mut self.dsps {
-            for dsp in col {
-                dsp.reset_keep_weights();
-            }
+        for col in &mut self.columns {
+            col.reset_keep_weights();
         }
         for chain in &mut self.staging {
             chain.reset();
@@ -412,7 +407,7 @@ impl WsEngine {
     fn staging_activity(&self) -> f64 {
         let total_ff: usize = self.staging.iter().map(|s| s.ff_count()).sum();
         let toggles: u64 = self.staging.iter().map(|s| s.toggles()).sum();
-        let cycles = self.dsps[0][0].cycles.max(1);
+        let cycles = self.columns[0].cycles().max(1);
         if total_ff == 0 {
             return 0.0;
         }
@@ -430,14 +425,13 @@ struct WsTileKernel<'a> {
     latency: usize,
     /// Weights already resident: skip the fill, account it as saved.
     reuse: bool,
-    /// Cascade snapshot (leased from the scratch arena during fill —
-    /// see EXPERIMENTS.md §Perf, iteration 1: one reusable buffer
-    /// instead of a fresh Vec per column per cycle).
-    pcouts: Vec<i64>,
-    /// §Perf iteration 2: one DspInputs template mutated per slice
-    /// instead of re-constructed (keeps the 9 clock-enable fields
-    /// and mode decode out of the inner loop).
-    inp: DspInputs,
+    /// Per-row operand staging for the SoA column tick, leased from
+    /// the scratch arena during fill (§Perf iteration 3: the cascade
+    /// snapshot and the per-slice `DspInputs` template both fell away
+    /// with the column rewrite — these two banks are all the cycle
+    /// body stages).
+    a_feed: Vec<i64>,
+    d_feed: Vec<i64>,
 }
 
 impl<'a> WsTileKernel<'a> {
@@ -452,16 +446,6 @@ impl<'a> WsTileKernel<'a> {
         // Packed: process row pairs (pad odd M with a zero row).
         let waves = if packed { a.rows.div_ceil(2) } else { a.rows };
         let latency = pipe_latency(eng.cfg.variant);
-        let inp = DspInputs {
-            inmode: if packed {
-                InMode::A2_B2.with_d()
-            } else {
-                InMode::A2_B2
-            },
-            ceb1: false,
-            ceb2: false,
-            ..DspInputs::default()
-        };
         WsTileKernel {
             eng,
             a,
@@ -470,8 +454,8 @@ impl<'a> WsTileKernel<'a> {
             waves,
             latency,
             reuse,
-            pcouts: Vec::new(),
-            inp,
+            a_feed: Vec::new(),
+            d_feed: Vec::new(),
         }
     }
 }
@@ -495,9 +479,10 @@ impl TileKernel for WsTileKernel<'_> {
     }
 
     fn fill(&mut self, scratch: &mut Scratch, _stats: &mut RunStats) {
-        self.pcouts = scratch.lease_i64(self.eng.cfg.rows);
+        self.a_feed = scratch.lease_i64(self.eng.cfg.rows);
+        self.d_feed = scratch.lease_i64(self.eng.cfg.rows);
         if !self.reuse {
-            self.eng.fill_weights(self.w);
+            self.eng.fill_weights(self.w, scratch);
         }
     }
 
@@ -508,15 +493,16 @@ impl TileKernel for WsTileKernel<'_> {
             self.w.cols,
             self.waves,
             self.latency,
-            &mut self.pcouts,
-            &mut self.inp,
+            &mut self.a_feed,
+            &mut self.d_feed,
             self.out,
             stats,
         );
     }
 
     fn drain(&mut self, scratch: &mut Scratch, _stats: &mut RunStats) {
-        scratch.release_i64(std::mem::take(&mut self.pcouts));
+        scratch.release_i64(std::mem::take(&mut self.a_feed));
+        scratch.release_i64(std::mem::take(&mut self.d_feed));
     }
 }
 
@@ -562,6 +548,10 @@ impl Engine for WsEngine {
         w: &MatI8,
     ) -> Result<GemmRun, EngineError> {
         self.run_gemm_at(a, w, true)
+    }
+
+    fn scratch_stats(&self) -> crate::exec::ScratchStats {
+        self.scratch.stats()
     }
 }
 

@@ -1,19 +1,108 @@
 //! Reusable scratch arenas for the streaming hot loops.
 //!
-//! Every engine's cycle loop needs small transient buffers (cascade
-//! snapshots, delay lines, per-pass output staging). Allocating them
-//! with a fresh `Vec` per cycle — or even per call — dominates the
-//! simulator profile at scale, so the [`Scratch`] arena leases buffers
-//! from per-type free lists instead: a lease is a pool pop (or a single
+//! Every engine's cycle loop needs small transient buffers (operand
+//! staging, delay lines, per-pass output staging) and, since the SoA
+//! rewrite, the DSP columns' register banks. Allocating them with a
+//! fresh `Vec` per cycle — or even per call — dominates the simulator
+//! profile at scale, so the [`Scratch`] arena leases buffers from
+//! per-type free lists instead: a lease is a pool pop (or a single
 //! allocation the first time), a release is a pool push, and the
 //! backing capacity survives across `run_gemm` calls because each
 //! engine owns its arena.
+//!
+//! The arena keeps per-pool telemetry ([`ScratchStats`]): lease counts,
+//! how many leases a pooled buffer served (the reuse-hit ratio is the
+//! number that proves the arena is earning its keep), and the
+//! high-water mark of bytes simultaneously out on lease. Engines
+//! surface the snapshot through `Engine::scratch_stats`; the service
+//! folds worker deltas into [`crate::coordinator::Metrics`] so
+//! `serve`'s report and `client stats` show arena behavior.
+
+/// Telemetry for one typed pool.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Lease calls served by this pool.
+    pub leases: u64,
+    /// Leases a pooled buffer satisfied *without* a fresh allocation —
+    /// the popped buffer's capacity covered the requested length (a
+    /// pop that must grow inside `resize` is not a hit).
+    pub reuse_hits: u64,
+    /// Bytes currently out on lease from this pool.
+    pub leased_bytes: u64,
+    /// Peak bytes simultaneously out on lease from this pool.
+    pub high_water_bytes: u64,
+}
+
+impl PoolStats {
+    fn on_lease(&mut self, bytes: u64, hit: bool) {
+        self.leases += 1;
+        if hit {
+            self.reuse_hits += 1;
+        }
+        self.leased_bytes += bytes;
+        if self.leased_bytes > self.high_water_bytes {
+            self.high_water_bytes = self.leased_bytes;
+        }
+    }
+
+    fn on_release(&mut self, bytes: u64) {
+        self.leased_bytes = self.leased_bytes.saturating_sub(bytes);
+    }
+
+    /// Fraction of leases a pooled buffer served (0 when none yet).
+    pub fn reuse_ratio(&self) -> f64 {
+        if self.leases == 0 {
+            0.0
+        } else {
+            self.reuse_hits as f64 / self.leases as f64
+        }
+    }
+}
+
+/// Arena-wide telemetry snapshot: one [`PoolStats`] per typed pool,
+/// plus a combined gauge/peak tracked across the pools *together* (the
+/// per-pool peaks need not be simultaneous, so their sum would
+/// overstate the footprint). Counters are monotonic, so a consumer can
+/// diff two snapshots to get an exact delta.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ScratchStats {
+    pub i64_pool: PoolStats,
+    pub i32_pool: PoolStats,
+    /// Bytes currently out on lease across both pools.
+    pub leased_bytes: u64,
+    /// Peak bytes simultaneously out on lease across both pools — the
+    /// arena's true footprint bound.
+    pub high_water_bytes: u64,
+}
+
+impl ScratchStats {
+    /// Total lease calls across the pools.
+    pub fn leases(&self) -> u64 {
+        self.i64_pool.leases + self.i32_pool.leases
+    }
+
+    /// Total pool-served leases across the pools.
+    pub fn reuse_hits(&self) -> u64 {
+        self.i64_pool.reuse_hits + self.i32_pool.reuse_hits
+    }
+
+    /// Combined reuse-hit ratio (0 when nothing leased yet).
+    pub fn reuse_ratio(&self) -> f64 {
+        let leases = self.leases();
+        if leases == 0 {
+            0.0
+        } else {
+            self.reuse_hits() as f64 / leases as f64
+        }
+    }
+}
 
 /// Pooled scratch buffers, keyed by element type.
 #[derive(Debug, Default)]
 pub struct Scratch {
     i64_pool: Vec<Vec<i64>>,
     i32_pool: Vec<Vec<i32>>,
+    stats: ScratchStats,
 }
 
 impl Scratch {
@@ -21,43 +110,83 @@ impl Scratch {
         Scratch::default()
     }
 
+    fn combined_lease(&mut self, bytes: u64) {
+        self.stats.leased_bytes += bytes;
+        if self.stats.leased_bytes > self.stats.high_water_bytes {
+            self.stats.high_water_bytes = self.stats.leased_bytes;
+        }
+    }
+
+    fn combined_release(&mut self, bytes: u64) {
+        self.stats.leased_bytes = self.stats.leased_bytes.saturating_sub(bytes);
+    }
+
     /// Lease a zero-filled `i64` buffer of exactly `len` elements.
     pub fn lease_i64(&mut self, len: usize) -> Vec<i64> {
+        let bytes = (len * std::mem::size_of::<i64>()) as u64;
+        self.combined_lease(bytes);
         match self.i64_pool.pop() {
             Some(mut buf) => {
+                // A hit only when the pooled capacity actually avoids
+                // a fresh allocation for this length.
+                self.stats.i64_pool.on_lease(bytes, buf.capacity() >= len);
                 buf.clear();
                 buf.resize(len, 0);
                 buf
             }
-            None => vec![0; len],
+            None => {
+                self.stats.i64_pool.on_lease(bytes, false);
+                vec![0; len]
+            }
         }
     }
 
-    /// Return a leased `i64` buffer to the pool.
+    /// Return a leased `i64` buffer to the pool. Contract: buffers come
+    /// back at their leased length — resizing a leased buffer before
+    /// release skews the byte accounting (lease charges the requested
+    /// length, release credits `buf.len()`).
     pub fn release_i64(&mut self, buf: Vec<i64>) {
+        let bytes = (buf.len() * std::mem::size_of::<i64>()) as u64;
+        self.combined_release(bytes);
+        self.stats.i64_pool.on_release(bytes);
         self.i64_pool.push(buf);
     }
 
     /// Lease a zero-filled `i32` buffer of exactly `len` elements.
     pub fn lease_i32(&mut self, len: usize) -> Vec<i32> {
+        let bytes = (len * std::mem::size_of::<i32>()) as u64;
+        self.combined_lease(bytes);
         match self.i32_pool.pop() {
             Some(mut buf) => {
+                self.stats.i32_pool.on_lease(bytes, buf.capacity() >= len);
                 buf.clear();
                 buf.resize(len, 0);
                 buf
             }
-            None => vec![0; len],
+            None => {
+                self.stats.i32_pool.on_lease(bytes, false);
+                vec![0; len]
+            }
         }
     }
 
-    /// Return a leased `i32` buffer to the pool.
+    /// Return a leased `i32` buffer to the pool (same length contract
+    /// as [`Scratch::release_i64`]).
     pub fn release_i32(&mut self, buf: Vec<i32>) {
+        let bytes = (buf.len() * std::mem::size_of::<i32>()) as u64;
+        self.combined_release(bytes);
+        self.stats.i32_pool.on_release(bytes);
         self.i32_pool.push(buf);
     }
 
     /// Buffers currently parked in the pools (diagnostics).
     pub fn pooled(&self) -> usize {
         self.i64_pool.len() + self.i32_pool.len()
+    }
+
+    /// Telemetry snapshot (monotonic counters plus live gauges).
+    pub fn stats(&self) -> ScratchStats {
+        self.stats
     }
 }
 
@@ -90,5 +219,56 @@ mod tests {
         let b = s.lease_i32(32);
         assert_eq!(b.len(), 32);
         assert!(b.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn telemetry_counts_leases_hits_and_high_water() {
+        let mut s = Scratch::new();
+        let a = s.lease_i64(16); // miss, 128 bytes out
+        let b = s.lease_i64(4); // miss, 160 bytes out (the high water)
+        s.release_i64(a);
+        let c = s.lease_i64(2); // hit (pooled capacity 16 >= 2)
+        s.release_i64(b);
+        s.release_i64(c);
+        let st = s.stats();
+        assert_eq!(st.i64_pool.leases, 3);
+        assert_eq!(st.i64_pool.reuse_hits, 1);
+        assert_eq!(st.i64_pool.leased_bytes, 0);
+        assert_eq!(st.i64_pool.high_water_bytes, 160);
+        assert!((st.reuse_ratio() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(st.leases(), 3);
+        assert_eq!(st.leased_bytes, 0);
+        assert_eq!(st.high_water_bytes, 160);
+        // The i32 pool counts separately; the arena-wide peak is the
+        // *simultaneous* maximum, not the sum of per-pool peaks.
+        let d = s.lease_i32(8); // 32 bytes out while no i64 is leased
+        s.release_i32(d);
+        let st = s.stats();
+        assert_eq!(st.i32_pool.leases, 1);
+        assert_eq!(st.i32_pool.reuse_hits, 0);
+        assert_eq!(st.i32_pool.high_water_bytes, 32);
+        assert_eq!(st.leases(), 4);
+        assert_eq!(st.high_water_bytes, 160);
+    }
+
+    #[test]
+    fn growing_pop_is_not_a_reuse_hit() {
+        let mut s = Scratch::new();
+        let x = s.lease_i64(4);
+        s.release_i64(x);
+        // The pooled buffer's capacity (4) cannot serve 32 elements
+        // without reallocating inside `resize` — not a hit.
+        let y = s.lease_i64(32);
+        assert_eq!(y.len(), 32);
+        let st = s.stats();
+        assert_eq!(st.i64_pool.leases, 2);
+        assert_eq!(st.i64_pool.reuse_hits, 0);
+    }
+
+    #[test]
+    fn empty_stats_ratio_is_zero() {
+        let s = Scratch::new();
+        assert_eq!(s.stats().reuse_ratio(), 0.0);
+        assert_eq!(s.stats(), ScratchStats::default());
     }
 }

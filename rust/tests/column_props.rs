@@ -1,0 +1,684 @@
+//! Property suite for the SoA DSP column: the scalar [`Dsp48e2`] cell
+//! is the golden reference model, and every `DspColumn` path must be
+//! **bit-identical** to ticking a scalar column with the per-row
+//! `DspInputs` the same controls and feeds describe:
+//!
+//! * the generic [`DspColumn::tick`] under randomized control words
+//!   (all SIMD modes, every engine attribute profile, cascade depths
+//!   down to 1, hold-state and partial clock-enable patterns);
+//! * the three mode-specialized fast paths (`tick_ws_stream`,
+//!   `tick_os_chain`, `tick_snn_crossbar`) against the exact scalar
+//!   drive their engines used before the rewrite;
+//! * the branch-free SIMD lane adds against the per-lane loop oracle
+//!   ([`simd_add_reference`]);
+//! * end to end: all 8 [`EngineKind`]s still match the golden
+//!   interpreter through the service, and WS weight-tile reuse
+//!   (`reuse_fill` residency) resumes bit-exactly after the rewrite.
+
+use dsp48_systolic::coordinator::service::EngineKind;
+use dsp48_systolic::coordinator::{Job, Service, ServiceConfig};
+use dsp48_systolic::dsp::{
+    simd_add, simd_add_reference, Attributes, ColumnCtrl, ColumnFeeds,
+    Dsp48e2, DspColumn, DspInputs, InMode, MultSel, OpMode, RowFeeds,
+    SimdMode, WMux, XMux, YMux, ZMux,
+};
+use dsp48_systolic::engines::ws::{WsConfig, WsEngine, WsVariant};
+use dsp48_systolic::engines::Engine;
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::gemm::golden_gemm;
+use dsp48_systolic::workload::MatI8;
+use std::time::Duration;
+
+fn feed(bank: &[i64], r: usize) -> i64 {
+    bank.get(r).copied().unwrap_or(0)
+}
+
+/// Tick a scalar reference column with the per-row inputs one shared
+/// ctrl + feeds describe: snapshot the cascade taps, then tick every
+/// cell — the discipline all engine loops used before the SoA rewrite.
+fn scalar_tick(cells: &mut [Dsp48e2], ctrl: &ColumnCtrl, feeds: &ColumnFeeds) {
+    let acouts: Vec<i64> = cells.iter().map(|d| d.acout()).collect();
+    let bcouts: Vec<i64> = cells.iter().map(|d| d.bcout()).collect();
+    let pcouts: Vec<i64> = cells.iter().map(|d| d.pcout()).collect();
+    for (r, cell) in cells.iter_mut().enumerate() {
+        cell.tick(&inputs_for_row(ctrl, feeds, r, &acouts, &bcouts, &pcouts));
+    }
+}
+
+fn inputs_for_row(
+    ctrl: &ColumnCtrl,
+    feeds: &ColumnFeeds,
+    r: usize,
+    acouts: &[i64],
+    bcouts: &[i64],
+    pcouts: &[i64],
+) -> DspInputs {
+    DspInputs {
+        a: feed(feeds.a, r),
+        b: feed(feeds.b, r),
+        c: feed(feeds.c, r),
+        d: feed(feeds.d, r),
+        acin: if r == 0 { feeds.acin0 } else { acouts[r - 1] },
+        bcin: if r == 0 { feeds.bcin0 } else { bcouts[r - 1] },
+        pcin: if r == 0 { feeds.pcin0 } else { pcouts[r - 1] },
+        inmode: ctrl.inmode,
+        opmode: ctrl.opmode,
+        alumode: ctrl.alumode,
+        cea1: ctrl.cea1,
+        cea2: ctrl.cea2,
+        ceb1: ctrl.ceb1,
+        ceb2: ctrl.ceb2,
+        ced: ctrl.ced,
+        cead: ctrl.cead,
+        cec: ctrl.cec,
+        cem: ctrl.cem,
+        cep: ctrl.cep,
+    }
+}
+
+fn assert_equal(col: &DspColumn, cells: &[Dsp48e2], ctx: &str) {
+    for (r, cell) in cells.iter().enumerate() {
+        assert_eq!(col.regs(r), cell.regs(), "row {r}: {ctx}");
+    }
+}
+
+/// Every attribute profile the engines instantiate, plus the plain
+/// default — all three SIMD modes, both input sources, both cascade
+/// taps, 1- and 2-deep pipelines.
+fn attr_profiles() -> Vec<(&'static str, Attributes)> {
+    let snn = |variant_cascade: bool| Attributes {
+        a_input: if variant_cascade {
+            dsp48_systolic::dsp::InputSource::Cascade
+        } else {
+            dsp48_systolic::dsp::InputSource::Direct
+        },
+        b_input: if variant_cascade {
+            dsp48_systolic::dsp::InputSource::Cascade
+        } else {
+            dsp48_systolic::dsp::InputSource::Direct
+        },
+        a_cascade_tap: dsp48_systolic::dsp::CascadeTap::Reg1,
+        b_cascade_tap: dsp48_systolic::dsp::CascadeTap::Reg1,
+        creg: true,
+        ..Attributes::firefly_crossbar()
+    };
+    vec![
+        ("default MACC PE", Attributes::default()),
+        (
+            "ws dsp-fetch PE",
+            Attributes {
+                areg: 1,
+                ..Attributes::ws_prefetch_pe()
+            },
+        ),
+        (
+            "ws clb-fetch PE",
+            Attributes {
+                breg: 1,
+                amultsel: MultSel::Ad,
+                dreg: true,
+                adreg: true,
+                areg: 1,
+                ..Attributes::default()
+            },
+        ),
+        (
+            "ws tinytpu PE",
+            Attributes {
+                breg: 1,
+                areg: 1,
+                ..Attributes::default()
+            },
+        ),
+        ("os enhanced chain", Attributes::os_inmux_pe()),
+        (
+            "os official chain",
+            Attributes {
+                breg: 1,
+                amultsel: MultSel::Ad,
+                dreg: true,
+                adreg: true,
+                ..Attributes::default()
+            },
+        ),
+        ("snn enhanced crossbar", snn(true)),
+        ("snn firefly crossbar", snn(false)),
+        (
+            "ring stage a (TWO24)",
+            Attributes {
+                creg: true,
+                ..Attributes::ring_accumulator(12_345)
+            },
+        ),
+        ("ring stage b (TWO24)", Attributes::ring_accumulator(-777)),
+    ]
+}
+
+/// OPMODE combinations a real netlist can emit (X=M ⇔ Y=M enforced by
+/// the model).
+fn opmode_pool() -> Vec<OpMode> {
+    vec![
+        OpMode::MULT,
+        OpMode::MACC,
+        OpMode::MULT_CASCADE,
+        OpMode::C_CASCADE,
+        OpMode::C_ACC,
+        OpMode {
+            x: XMux::Ab,
+            y: YMux::Zero,
+            z: ZMux::Pcin,
+            w: WMux::Zero,
+        },
+        OpMode {
+            x: XMux::Zero,
+            y: YMux::C,
+            z: ZMux::Zero,
+            w: WMux::Rnd,
+        },
+        OpMode {
+            x: XMux::P,
+            y: YMux::AllOnes,
+            z: ZMux::PShift17,
+            w: WMux::P,
+        },
+        OpMode {
+            x: XMux::Ab,
+            y: YMux::C,
+            z: ZMux::PcinShift17,
+            w: WMux::C,
+        },
+    ]
+}
+
+fn random_ctrl(rng: &mut XorShift, opmodes: &[OpMode]) -> ColumnCtrl {
+    let bit = |rng: &mut XorShift| rng.chance(1, 2);
+    // Bias toward mostly-on enables with occasional full holds, so
+    // both steady streaming and hold-state patterns get exercised.
+    let hold_all = rng.chance(1, 8);
+    let ce = |rng: &mut XorShift| !hold_all && bit(rng);
+    ColumnCtrl {
+        inmode: InMode((rng.next_u64() & 0x1F) as u8),
+        opmode: opmodes[rng.below(opmodes.len() as u64) as usize],
+        alumode: if bit(rng) {
+            dsp48_systolic::dsp::AluMode::Add
+        } else {
+            dsp48_systolic::dsp::AluMode::ZMinus
+        },
+        cea1: ce(rng),
+        cea2: ce(rng),
+        ceb1: ce(rng),
+        ceb2: ce(rng),
+        ced: ce(rng),
+        cead: ce(rng),
+        cec: ce(rng),
+        cem: ce(rng),
+        cep: ce(rng),
+    }
+}
+
+fn random_words(rng: &mut XorShift, n: usize) -> Vec<i64> {
+    (0..n).map(|_| rng.next_u64() as i64).collect()
+}
+
+/// The generic column tick is bit-identical to the scalar reference
+/// column for every attribute profile, cascade depth (including the
+/// depth-1 edge case), SIMD mode and randomized control word — hold
+/// states, partial enables, every mux combination in the pool.
+#[test]
+fn generic_column_matches_scalar_under_random_control() {
+    let opmodes = opmode_pool();
+    for (name, attrs) in attr_profiles() {
+        for depth in [1usize, 2, 3, 7, 16] {
+            let mut rng = XorShift::new(0xC0_1000 + depth as u64);
+            let mut col = DspColumn::new(attrs, depth);
+            let mut cells: Vec<Dsp48e2> =
+                (0..depth).map(|_| Dsp48e2::new(attrs)).collect();
+            for edge in 0..60 {
+                let ctrl = random_ctrl(&mut rng, &opmodes);
+                let a = random_words(&mut rng, depth);
+                let b = random_words(&mut rng, depth);
+                let c = random_words(&mut rng, depth);
+                let d = random_words(&mut rng, depth);
+                let feeds = ColumnFeeds {
+                    a: &a,
+                    b: &b,
+                    c: &c,
+                    d: &d,
+                    acin0: rng.next_u64() as i64,
+                    bcin0: rng.next_u64() as i64,
+                    pcin0: rng.next_u64() as i64,
+                };
+                col.tick(&ctrl, &feeds);
+                scalar_tick(&mut cells, &ctrl, &feeds);
+                assert_equal(&col, &cells, &format!("{name} depth {depth} edge {edge}"));
+            }
+            let toggles: u64 = cells.iter().map(|c| c.mult_toggles).sum();
+            assert_eq!(col.mult_toggles(), toggles, "{name} depth {depth}");
+            assert_eq!(col.cycles(), cells[0].cycles, "{name} depth {depth}");
+        }
+    }
+}
+
+/// Load a stationary weight column into both models through whichever
+/// delivery path the attribute profile supports (BCIN prefetch chain
+/// for cascade-input PEs, direct CEB2 load otherwise).
+fn load_weights(col: &mut DspColumn, cells: &mut [Dsp48e2], w: &[i64]) {
+    let cascade_b =
+        col.attrs().b_input == dsp48_systolic::dsp::InputSource::Cascade;
+    if cascade_b {
+        let shift = ColumnCtrl {
+            ceb2: false,
+            cem: false,
+            cep: false,
+            cea1: false,
+            cea2: false,
+            ..ColumnCtrl::default()
+        };
+        let swap = ColumnCtrl {
+            ceb1: false,
+            ceb2: true,
+            cem: false,
+            cep: false,
+            cea1: false,
+            cea2: false,
+            ..ColumnCtrl::default()
+        };
+        for &wv in w.iter().rev() {
+            let feeds = ColumnFeeds {
+                bcin0: wv,
+                ..ColumnFeeds::default()
+            };
+            col.tick(&shift, &feeds);
+            scalar_tick(cells, &shift, &feeds);
+        }
+        col.tick(&swap, &ColumnFeeds::default());
+        scalar_tick(cells, &swap, &ColumnFeeds::default());
+    } else {
+        let swap = ColumnCtrl {
+            ceb1: false,
+            ceb2: true,
+            cem: false,
+            cep: false,
+            cea1: false,
+            cea2: false,
+            ..ColumnCtrl::default()
+        };
+        let feeds = ColumnFeeds {
+            b: w,
+            ..ColumnFeeds::default()
+        };
+        col.tick(&swap, &feeds);
+        scalar_tick(cells, &swap, &feeds);
+    }
+}
+
+/// `tick_ws_stream` is bit-identical to the exact scalar drive the WS
+/// engines used before the rewrite, for every Table-I PE profile —
+/// including the depth-1 cascade.
+#[test]
+fn ws_stream_fast_path_matches_scalar() {
+    let profiles = [
+        (
+            "dsp-fetch",
+            Attributes {
+                areg: 1,
+                ..Attributes::ws_prefetch_pe()
+            },
+            true, // packed (pre-adder) drive
+        ),
+        (
+            "clb-fetch/libano",
+            Attributes {
+                breg: 1,
+                amultsel: MultSel::Ad,
+                dreg: true,
+                adreg: true,
+                areg: 1,
+                ..Attributes::default()
+            },
+            true,
+        ),
+        (
+            "tinytpu",
+            Attributes {
+                breg: 1,
+                areg: 1,
+                ..Attributes::default()
+            },
+            false,
+        ),
+    ];
+    for (name, attrs, packed) in profiles {
+        for depth in [1usize, 6, 14] {
+            let mut rng = XorShift::new(0x25 + depth as u64);
+            let mut col = DspColumn::new(attrs, depth);
+            let mut cells: Vec<Dsp48e2> =
+                (0..depth).map(|_| Dsp48e2::new(attrs)).collect();
+            let w: Vec<i64> =
+                (0..depth).map(|_| rng.next_i8() as i64).collect();
+            load_weights(&mut col, &mut cells, &w);
+            assert_equal(&col, &cells, &format!("{name} post-fill"));
+
+            for edge in 0..3 * depth + 8 {
+                let a: Vec<i64> = (0..depth)
+                    .map(|_| {
+                        let v = rng.next_i8() as i64;
+                        if packed {
+                            v << 18
+                        } else {
+                            v
+                        }
+                    })
+                    .collect();
+                let d: Vec<i64> = (0..depth)
+                    .map(|_| if packed { rng.next_i8() as i64 } else { 0 })
+                    .collect();
+                col.tick_ws_stream(&a, &d);
+                let pcouts: Vec<i64> =
+                    cells.iter().map(|c| c.pcout()).collect();
+                for (r, cell) in cells.iter_mut().enumerate() {
+                    cell.tick(&DspInputs {
+                        a: a[r],
+                        d: d[r],
+                        inmode: if packed {
+                            InMode::A2_B2.with_d()
+                        } else {
+                            InMode::A2_B2
+                        },
+                        opmode: if r == 0 {
+                            OpMode::MULT
+                        } else {
+                            OpMode::MULT_CASCADE
+                        },
+                        pcin: if r == 0 { 0 } else { pcouts[r - 1] },
+                        ceb1: false,
+                        ceb2: false,
+                        ..DspInputs::default()
+                    });
+                }
+                assert_equal(&col, &cells, &format!("{name} depth {depth} edge {edge}"));
+            }
+            let toggles: u64 = cells.iter().map(|c| c.mult_toggles).sum();
+            assert_eq!(col.mult_toggles(), toggles, "{name} depth {depth}");
+        }
+    }
+}
+
+/// `tick_os_chain` is bit-identical to the scalar chain drive (skewed
+/// INMODE[4]/CEB1/CEB2 per slice) for both Table-II variants.
+#[test]
+fn os_chain_fast_path_matches_scalar() {
+    let profiles = [
+        ("enhanced", Attributes::os_inmux_pe(), true),
+        (
+            "official",
+            Attributes {
+                breg: 1,
+                amultsel: MultSel::Ad,
+                dreg: true,
+                adreg: true,
+                ..Attributes::default()
+            },
+            false,
+        ),
+    ];
+    for (name, attrs, toggles_b1) in profiles {
+        for depth in [1usize, 4, 7] {
+            let mut rng = XorShift::new(0x05_0000 + depth as u64);
+            let mut col = DspColumn::new(attrs, depth);
+            let mut cells: Vec<Dsp48e2> =
+                (0..depth).map(|_| Dsp48e2::new(attrs)).collect();
+            for edge in 0..48 {
+                let a: Vec<i64> = (0..depth)
+                    .map(|_| (rng.next_i8() as i64) << 18)
+                    .collect();
+                let d: Vec<i64> =
+                    (0..depth).map(|_| rng.next_i8() as i64).collect();
+                let b: Vec<i64> =
+                    (0..depth).map(|_| rng.next_i8() as i64).collect();
+                let (mut use_b1, mut ceb1, mut ceb2) = (0u64, 0u64, 0u64);
+                for j in 0..depth {
+                    if toggles_b1 && rng.chance(1, 2) {
+                        use_b1 |= 1 << j;
+                    }
+                    if rng.chance(1, 3) {
+                        ceb1 |= 1 << j;
+                    }
+                    if rng.chance(1, 3) {
+                        ceb2 |= 1 << j;
+                    }
+                }
+                col.tick_os_chain(&a, &d, &b, use_b1, ceb1, ceb2);
+                let pcouts: Vec<i64> =
+                    cells.iter().map(|c| c.pcout()).collect();
+                for (j, cell) in cells.iter_mut().enumerate() {
+                    let u = (use_b1 >> j) & 1 != 0;
+                    cell.tick(&DspInputs {
+                        a: a[j],
+                        d: d[j],
+                        b: b[j],
+                        inmode: InMode::A2_B2.with_d().with_b1(u),
+                        opmode: if j == 0 {
+                            OpMode::MULT
+                        } else {
+                            OpMode::MULT_CASCADE
+                        },
+                        pcin: if j == 0 { 0 } else { pcouts[j - 1] },
+                        ceb1: (ceb1 >> j) & 1 != 0,
+                        ceb2: (ceb2 >> j) & 1 != 0,
+                        ..DspInputs::default()
+                    });
+                }
+                assert_equal(&col, &cells, &format!("{name} depth {depth} edge {edge}"));
+            }
+        }
+    }
+}
+
+/// `tick_snn_crossbar` is bit-identical to the scalar spike-gated
+/// drive for both Table-III variants, including the per-slice weight
+/// commit through `tick_row`.
+#[test]
+fn snn_crossbar_fast_path_matches_scalar() {
+    for (name, attrs) in attr_profiles()
+        .into_iter()
+        .filter(|(n, _)| n.starts_with("snn"))
+    {
+        for depth in [1usize, 5, 16] {
+            let mut rng = XorShift::new(0x55_0000 + depth as u64);
+            let mut col = DspColumn::new(attrs, depth);
+            let mut cells: Vec<Dsp48e2> =
+                (0..depth).map(|_| Dsp48e2::new(attrs)).collect();
+            // Per-slice weight commit (two edges per slice), mirrored.
+            for j in 0..depth {
+                let ab = rng.next_u64() as i64 & ((1i64 << 48) - 1);
+                let cw = rng.next_u64() as i64 & ((1i64 << 48) - 1);
+                let (a, b) = ((ab >> 18) & ((1 << 30) - 1), ab & ((1 << 18) - 1));
+                col.tick_row(
+                    j,
+                    &ColumnCtrl {
+                        cep: false,
+                        ..ColumnCtrl::default()
+                    },
+                    &RowFeeds {
+                        a,
+                        b,
+                        acin: a,
+                        bcin: b,
+                        c: cw,
+                        ..RowFeeds::default()
+                    },
+                );
+                cells[j].tick(&DspInputs {
+                    a,
+                    b,
+                    acin: a,
+                    bcin: b,
+                    c: cw,
+                    cep: false,
+                    ..DspInputs::default()
+                });
+                col.tick_row(
+                    j,
+                    &ColumnCtrl {
+                        cep: false,
+                        cea1: false,
+                        ceb1: false,
+                        ..ColumnCtrl::default()
+                    },
+                    &RowFeeds {
+                        c: cw,
+                        ..RowFeeds::default()
+                    },
+                );
+                cells[j].tick(&DspInputs {
+                    c: cw,
+                    cep: false,
+                    cea1: false,
+                    ceb1: false,
+                    ..DspInputs::default()
+                });
+            }
+            assert_equal(&col, &cells, &format!("{name} post-commit"));
+
+            for edge in 0..40 {
+                let (mut x_ab, mut y_c) = (0u64, 0u64);
+                for j in 0..depth {
+                    if rng.chance(1, 3) {
+                        x_ab |= 1 << j;
+                    }
+                    if rng.chance(1, 3) {
+                        y_c |= 1 << j;
+                    }
+                }
+                col.tick_snn_crossbar(x_ab, y_c);
+                let pcouts: Vec<i64> =
+                    cells.iter().map(|c| c.pcout()).collect();
+                for (j, cell) in cells.iter_mut().enumerate() {
+                    let s0 = (x_ab >> j) & 1 != 0;
+                    let s1 = (y_c >> j) & 1 != 0;
+                    cell.tick(&DspInputs {
+                        pcin: if j == 0 { 0 } else { pcouts[j - 1] },
+                        opmode: OpMode {
+                            x: if s0 { XMux::Ab } else { XMux::Zero },
+                            y: if s1 { YMux::C } else { YMux::Zero },
+                            z: ZMux::Pcin,
+                            w: WMux::Zero,
+                        },
+                        cea1: false,
+                        cea2: false,
+                        ceb1: false,
+                        ceb2: false,
+                        cec: false,
+                        ..DspInputs::default()
+                    });
+                }
+                assert_equal(&col, &cells, &format!("{name} depth {depth} edge {edge}"));
+            }
+        }
+    }
+}
+
+/// The branch-free SIMD lane adds agree with the per-lane loop oracle
+/// over random 48-bit words, all modes, add and subtract.
+#[test]
+fn simd_unrolled_matches_loop_oracle() {
+    let mut rng = XorShift::new(97);
+    for _ in 0..100_000 {
+        // Arbitrary i64 words: both paths mask to the 48-bit field.
+        let a = rng.next_u64() as i64;
+        let b = rng.next_u64() as i64;
+        for mode in [SimdMode::One48, SimdMode::Two24, SimdMode::Four12] {
+            for subtract in [false, true] {
+                assert_eq!(
+                    simd_add(mode, a, b, subtract),
+                    simd_add_reference(mode, a, b, subtract),
+                    "{mode:?} a={a:#x} b={b:#x} sub={subtract}"
+                );
+            }
+        }
+    }
+}
+
+/// After the column rewrite every engine kind still matches the golden
+/// interpreter end to end (the service verifies each result), and the
+/// outputs equal the host-side golden GEMM exactly.
+#[test]
+fn all_engine_kinds_bit_identical_to_golden() {
+    for kind in EngineKind::all() {
+        let mut svc = Service::start(ServiceConfig {
+            kind,
+            workers: 2,
+            ws_rows: 6,
+            ws_cols: 5,
+            verify: true,
+            shard_width: 1,
+        });
+        let mut rng = XorShift::new(0xE0 + kind.label().len() as u64);
+        let (job, expect) = match kind {
+            EngineKind::SnnFireFly | EngineKind::SnnEnhanced => {
+                let spikes =
+                    MatI8::from_fn(6, 32, |_, _| rng.chance(1, 3) as i8);
+                let weights = MatI8::random_bounded(&mut rng, 32, 9, 50);
+                let expect = golden_gemm(&spikes, &weights);
+                (Job::Snn { spikes, weights }, expect)
+            }
+            _ => {
+                let a = MatI8::random_bounded(&mut rng, 5, 13, 63);
+                let w = MatI8::random(&mut rng, 13, 9);
+                let expect = golden_gemm(&a, &w);
+                (Job::Gemm { a, w }, expect)
+            }
+        };
+        let h = svc.submit(job);
+        let r = svc
+            .wait(h, Duration::from_secs(120))
+            .into_result()
+            .unwrap_or_else(|| panic!("{} job completes", kind.label()));
+        assert_eq!(r.verified, Some(true), "{}", kind.label());
+        assert_eq!(r.output, expect, "{}", kind.label());
+        svc.shutdown();
+    }
+}
+
+/// WS weight-tile residency (`reuse_fill`) resumes bit-exactly on the
+/// SoA columns for every Table-I variant: the reused run equals a
+/// fresh fill+run on the same operands, and the cycle accounting
+/// differs by exactly the saved fill.
+#[test]
+fn reuse_fill_resumption_bit_identical_across_ws_variants() {
+    for variant in [
+        WsVariant::TinyTpu,
+        WsVariant::Libano,
+        WsVariant::ClbFetch,
+        WsVariant::DspFetch,
+    ] {
+        let cfg = WsConfig {
+            variant,
+            rows: 6,
+            cols: 5,
+            target_mhz: 666.0,
+            strict_guard: false,
+        };
+        let mut rng = XorShift::new(0x2E05E + variant as u64);
+        let w = MatI8::random(&mut rng, 6, 5);
+        let a1 = MatI8::random_bounded(&mut rng, 8, 6, 63);
+        let a2 = MatI8::random_bounded(&mut rng, 7, 6, 63);
+
+        let mut eng = WsEngine::new(cfg);
+        eng.run_gemm(&a1, &w).expect("first fill+run");
+        let reused = eng.run_gemm_reuse(&a2, &w).expect("reused run");
+        assert_eq!(reused.stats.fills_avoided, 1, "{variant:?}");
+        assert_eq!(reused.stats.weight_loads, 0, "{variant:?}");
+
+        let mut fresh = WsEngine::new(cfg);
+        let full = fresh.run_gemm(&a2, &w).expect("fresh run");
+        assert_eq!(reused.output, full.output, "{variant:?}");
+        assert_eq!(reused.output, golden_gemm(&a2, &w), "{variant:?}");
+        assert_eq!(
+            reused.stats.cycles + reused.stats.fill_cycles_saved,
+            full.stats.cycles,
+            "{variant:?}"
+        );
+    }
+}

@@ -25,15 +25,27 @@ Baseline schema:
         "batched_macs_per_cycle": 79.267,
         ...
       },
+      "frozen": {                # must be *unchanged* (simulated floats)
+        "batched_macs_per_cycle": 79.267,
+        ...
+      },
       "exact": {                 # must match exactly (counters)
         "fills_avoided": 28,
         ...
       }
     }
 
+"gates" tolerates --max-regress (default 10%, one-sided: drops fail,
+gains pass). "frozen" is for semantics-preserving work — wall-clock
+rewrites like the SoA column datapath that must leave every simulated
+metric untouched: the value must match the baseline within
+--frozen-tol relative error **in both directions** (default 1e-3,
+loose enough only for the baseline's decimal rounding). A key may
+appear in both sections; both checks run.
+
 Usage:
     python3 tools/check_bench_regression.py CURRENT.json BASELINE.json \
-        [--max-regress 0.10]
+        [--max-regress 0.10] [--frozen-tol 1e-3]
 """
 
 import argparse
@@ -51,6 +63,16 @@ def main() -> int:
         default=0.10,
         help="allowed fractional drop for gated metrics (default 0.10)",
     )
+    ap.add_argument(
+        "--frozen-tol",
+        type=float,
+        default=1e-3,
+        help=(
+            "allowed two-sided relative deviation for frozen metrics "
+            "(default 1e-3 — covers the baseline's decimal rounding "
+            "only; the underlying simulated values are deterministic)"
+        ),
+    )
     args = ap.parse_args()
 
     with open(args.current, encoding="utf-8") as f:
@@ -59,6 +81,17 @@ def main() -> int:
         baseline = json.load(f)
 
     failures = []
+
+    # A key listed in both sections must carry one value: the two
+    # copies drift otherwise when a cycle-model change updates one and
+    # forgets the other.
+    for key in set(baseline.get("gates", {})) & set(baseline.get("frozen", {})):
+        if baseline["gates"][key] != baseline["frozen"][key]:
+            failures.append(
+                f"{key}: baseline gates ({baseline['gates'][key]}) and "
+                f"frozen ({baseline['frozen'][key]}) sections disagree — "
+                "update both together"
+            )
 
     for key, base in baseline.get("gates", {}).items():
         if key not in current:
@@ -75,6 +108,27 @@ def main() -> int:
             failures.append(
                 f"{key}: {got:.4f} < {floor:.4f} "
                 f"(baseline {float(base):.4f} - {args.max_regress:.0%})"
+            )
+
+    for key, base in baseline.get("frozen", {}).items():
+        if key not in current:
+            # A key gated above already reported its absence once.
+            if key not in baseline.get("gates", {}):
+                failures.append(f"{key}: missing from bench artifact")
+            continue
+        got = float(current[key])
+        base_f = float(base)
+        rel = abs(got - base_f) / max(abs(base_f), 1e-12)
+        status = "ok" if rel <= args.frozen_tol else "CHANGED"
+        print(
+            f"{key}: {got:.6f} vs baseline {base_f:.6f} "
+            f"(frozen, rel dev {rel:.2e}) {status}"
+        )
+        if rel > args.frozen_tol:
+            failures.append(
+                f"{key}: {got:.6f} deviates from frozen baseline "
+                f"{base_f:.6f} by {rel:.2e} (> {args.frozen_tol:.0e}) — "
+                "this metric is simulated and must not move"
             )
 
     for key, base in baseline.get("exact", {}).items():
