@@ -3,6 +3,7 @@
 //! plus the sharded-coordinator throughput on one large GEMM.
 //!
 //! * single DSP48E2 tick (the innermost loop),
+//! * the whole-array bank pass vs a per-column loop (14×14),
 //! * one full-array WS cycle (196 + 14 DSPs + staging),
 //! * ring-accumulator tick,
 //! * packed_dot (the functional fast path the coordinator may use),
@@ -14,7 +15,7 @@
 
 use dsp48_systolic::coordinator::service::EngineKind;
 use dsp48_systolic::coordinator::{Batch, Job, JobState, Service, ServiceConfig};
-use dsp48_systolic::dsp::{Attributes, Dsp48e2, DspColumn, DspInputs, InMode, OpMode};
+use dsp48_systolic::dsp::{Attributes, Dsp48e2, DspArray, DspColumn, DspInputs, InMode, OpMode};
 use dsp48_systolic::engines::os::RingAccumulator;
 use dsp48_systolic::engines::ws::{WsConfig, WsEngine};
 use dsp48_systolic::engines::Engine;
@@ -329,6 +330,45 @@ fn main() {
         cells_ticked_per_s / 1e6
     );
 
+    section("whole-array SoA vs per-column loop (the array rewrite)");
+    // The paper's full 14x14 WS array on the same streaming drive: the
+    // per-column side ticks 14 independent DspColumns (what every
+    // engine steady-state loop did before the array rewrite); the
+    // array side is one tick_ws_stream bank pass over all 196 slices.
+    // Simulated semantics are bit-identical (tests/array_props.rs);
+    // only wall-clock differs.
+    let (arr_rows, arr_cols) = (14usize, 14usize);
+    let mut col_bank: Vec<DspColumn> = (0..arr_cols)
+        .map(|_| DspColumn::new(col_attrs, arr_rows))
+        .collect();
+    let mut array = DspArray::new(col_attrs, arr_rows, arr_cols);
+    let a_flat: Vec<i64> = (0..arr_rows * arr_cols)
+        .map(|i| ((i as i64 * 31 % 100) - 50) << 18)
+        .collect();
+    let d_flat: Vec<i64> = (0..arr_rows * arr_cols)
+        .map(|i| (i as i64 * 17 % 100) - 50)
+        .collect();
+    let m_cols = bench("per-column loop x14 (tick_ws_stream per column)", || {
+        for (c, col) in col_bank.iter_mut().enumerate() {
+            col.tick_ws_stream(
+                &a_flat[c * arr_rows..(c + 1) * arr_rows],
+                &d_flat[c * arr_rows..(c + 1) * arr_rows],
+            );
+        }
+        std::hint::black_box(col_bank[arr_cols - 1].p(arr_rows - 1));
+    });
+    let m_arr = bench("DspArray 14x14 (one array-wide bank pass)", || {
+        array.tick_ws_stream(&a_flat, &d_flat);
+        std::hint::black_box(array.p(arr_cols - 1, arr_rows - 1));
+    });
+    let array_cells_per_s = (arr_rows * arr_cols) as f64 * m_arr.per_sec();
+    let array_speedup = m_arr.per_sec() / m_cols.per_sec();
+    println!(
+        "    -> {:.1} M cells/s array-wide, {array_speedup:.2}x over \
+         the per-column loop",
+        array_cells_per_s / 1e6
+    );
+
     section("WS array cycle (14x14 paper config)");
     let mut eng = WsEngine::new(WsConfig::paper_14x14());
     let mut rng = XorShift::new(1);
@@ -434,6 +474,8 @@ fn main() {
         // only, never gated — host-speed dependent).
         ("cells_ticked_per_s", Json::float(cells_ticked_per_s)),
         ("column_vs_scalar_speedup", Json::float(column_speedup)),
+        ("array_cells_ticked_per_s", Json::float(array_cells_per_s)),
+        ("array_vs_column_speedup", Json::float(array_speedup)),
         ("sharded_gemm_size", Json::from(size)),
         ("sharded_gemm_macs_per_s_1w", Json::float(rate_1w)),
         ("sharded_gemm_macs_per_s_4w", Json::float(rate_4w)),

@@ -1,0 +1,793 @@
+//! Whole-array struct-of-arrays datapath: every cascade column of a
+//! systolic engine ticked in one pass over contiguous banks.
+//!
+//! PR "SoA column" made one cascade fast ([`DspColumn`]); the engines
+//! still drove the array as a `Vec<DspColumn>` loop — one bank pass per
+//! column per cycle, with per-row feed staging between the calls. At
+//! array scale that loop *is* the simulator's wall-clock ceiling: the
+//! arithmetic per slice is a handful of integer ops, so the per-column
+//! call/stage overhead and the short (`rows`-long) trip counts starve
+//! the autovectorizer.
+//!
+//! [`DspArray`] owns all columns' register state as one set of
+//! array-wide banks in row-major `[col][row]` layout: element
+//! `col * rows + row` of each bank is that slice's register. Banks are
+//! 64-byte-aligned leases from the [`Scratch`] arena
+//! ([`Scratch::lease_i64_aligned`], [`BANK_ALIGN`]), so every
+//! column-chunk of [`CHUNK_ROWS`] rows starts on a cache-line/vector
+//! boundary and the elementwise passes below are plain
+//! `for i in 0..n` loops over `n = cols * rows` contiguous elements —
+//! the shape rustc's autovectorizer turns into real vector ops over
+//! 4–8 rows per operation.
+//!
+//! The only cross-element dependence in a DSP tick is the P cascade:
+//! row `r` needs row `r-1`'s *pre-edge* P. [`DspColumn`] resolves it by
+//! updating rows top-down in place; an array-wide elementwise pass
+//! cannot (the in-place update is an anti-dependence that blocks
+//! vectorization). The fast paths here instead *stage* next-edge P into
+//! a tenth bank (`P ← PCIN + M`, a per-column scan that is cheap and
+//! separate), run the flat elementwise pass for every other register,
+//! then swap the staged bank in — same values, no ordering constraint.
+//! Inter-column cascade taps (`pcin`/`acin`/`bcin`) read neighboring
+//! bank elements pre-edge exactly as [`DspColumn::tick`] does between
+//! rows.
+//!
+//! Three array-wide fast paths mirror the column's:
+//! [`DspArray::tick_ws_stream`], [`DspArray::tick_os_chain`] (per-column
+//! skew masks), [`DspArray::tick_snn_crossbar`] (per-column spike
+//! masks). Fills, swap pulses and the ring accumulator ride the generic
+//! [`DspArray::tick`] / [`DspArray::tick_row`], which replicate the
+//! column's register-transfer semantics per column — a handful of edges
+//! per tile, not worth a vector path.
+//!
+//! **Oracle tower:** the scalar [`Dsp48e2`] stays the golden reference;
+//! [`DspColumn`] is the mid-level oracle (proven against the scalar by
+//! `tests/column_props.rs`); every `DspArray` path must be
+//! bit-identical to ticking one `DspColumn` per column with the same
+//! controls and per-column feed slices — `tests/array_props.rs` proves
+//! that (and closes the loop back to the scalar cell). A new dataflow
+//! starts on the generic tick and only earns an array fast path once
+//! the property suite covers it.
+
+use super::attributes::{Attributes, CascadeTap, InputSource, MultSel, SimdMode};
+use super::cell::DspRegs;
+use super::column::{ColumnCtrl, RowFeeds};
+use super::modes::{AluMode, WMux, XMux, YMux, ZMux};
+use super::simd::simd_add;
+use super::truncate;
+use crate::exec::{AlignedLease, Scratch};
+
+// Doc-link imports (see module docs).
+#[allow(unused_imports)]
+use super::cell::Dsp48e2;
+#[allow(unused_imports)]
+use super::column::DspColumn;
+
+/// Rows the elementwise bank passes are laid out to vectorize over:
+/// one 64-byte cache line of `i64` elements, i.e. one AVX-512 lane
+/// group or two AVX2 / four NEON lane groups. This is a layout target,
+/// not a blocking factor — the passes run over the full `cols * rows`
+/// range and remainder rows (column depths that are not a multiple of
+/// this) take the same code path, just as scalar tail iterations.
+pub const CHUNK_ROWS: usize = 8;
+
+/// Byte alignment of the register banks: one cache line, so a
+/// [`CHUNK_ROWS`] chunk never straddles lines and aligned vector loads
+/// apply.
+pub const BANK_ALIGN: usize = 64;
+
+/// Per-edge data feeds for the whole array. Port slices are indexed
+/// `[col][row]` flat (`col * rows + row`), matching the banks; an empty
+/// slice means that port idles at 0 on every slice. The `*0` slices are
+/// indexed by column and enter each column's cascade at row 0 (rows
+/// above read their in-column neighbor's bank element instead).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArrayFeeds<'a> {
+    /// Per-slice A port (30-bit, `A_INPUT = DIRECT` configs).
+    pub a: &'a [i64],
+    /// Per-slice B port (18-bit, `B_INPUT = DIRECT` configs).
+    pub b: &'a [i64],
+    /// Per-slice C port (48-bit).
+    pub c: &'a [i64],
+    /// Per-slice D port (27-bit, pre-adder).
+    pub d: &'a [i64],
+    /// Per-column A-cascade input entering row 0.
+    pub acin0: &'a [i64],
+    /// Per-column B-cascade input entering row 0 (the weight streams of
+    /// the in-DSP prefetch fill).
+    pub bcin0: &'a [i64],
+    /// Per-column P-cascade input entering row 0.
+    pub pcin0: &'a [i64],
+}
+
+#[inline(always)]
+fn feed(bank: &[i64], i: usize) -> i64 {
+    bank.get(i).copied().unwrap_or(0)
+}
+
+/// All cascade columns of a systolic array in struct-of-arrays layout:
+/// one contiguous `[col][row]` bank per pipeline register, one shared
+/// [`Attributes`], plus a staging bank for the P swap trick (see the
+/// module docs).
+#[derive(Debug)]
+pub struct DspArray {
+    attrs: Attributes,
+    rows: usize,
+    cols: usize,
+    a1: AlignedLease,
+    a2: AlignedLease,
+    b1: AlignedLease,
+    b2: AlignedLease,
+    d: AlignedLease,
+    ad: AlignedLease,
+    c: AlignedLease,
+    m: AlignedLease,
+    p: AlignedLease,
+    /// Next-edge P staging for the fast paths; always fully rewritten
+    /// before it is swapped in, so its contents between ticks are dead.
+    p_stage: AlignedLease,
+    /// Edges observed by slice (0, 0) — the same denominator the
+    /// engines' activity models divided by when they read
+    /// `columns[0].cycles()`. Full-array ticks advance this once per
+    /// edge; [`DspArray::tick_row`] only when slice (0, 0) ticks.
+    cycles: u64,
+    /// Multiplier activations summed over every slice of the array
+    /// (power-model toggle proxy) — the sum of what the per-column
+    /// counters held before the array rewrite.
+    mult_toggles: u64,
+}
+
+impl DspArray {
+    /// An array whose banks are 64-byte-aligned leases from `scratch`.
+    pub fn new_in(attrs: Attributes, rows: usize, cols: usize, scratch: &mut Scratch) -> Self {
+        let n = rows * cols;
+        let mut bank = || scratch.lease_i64_aligned(n, BANK_ALIGN);
+        DspArray {
+            attrs,
+            rows,
+            cols,
+            a1: bank(),
+            a2: bank(),
+            b1: bank(),
+            b2: bank(),
+            d: bank(),
+            ad: bank(),
+            c: bank(),
+            m: bank(),
+            p: bank(),
+            p_stage: bank(),
+            cycles: 0,
+            mult_toggles: 0,
+        }
+    }
+
+    /// A free-standing array (fresh allocations, no arena).
+    pub fn new(attrs: Attributes, rows: usize, cols: usize) -> Self {
+        Self::new_in(attrs, rows, cols, &mut Scratch::new())
+    }
+
+    /// Return the ten banks to the arena.
+    pub fn release(self, scratch: &mut Scratch) {
+        let DspArray {
+            a1,
+            a2,
+            b1,
+            b2,
+            d,
+            ad,
+            c,
+            m,
+            p,
+            p_stage,
+            ..
+        } = self;
+        for bank in [a1, a2, b1, b2, d, ad, c, m, p, p_stage] {
+            scratch.release_i64_aligned(bank);
+        }
+    }
+
+    pub fn attrs(&self) -> &Attributes {
+        &self.attrs
+    }
+
+    /// Cascade depth (slices per column).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns in the array.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Edges observed by slice (0, 0) (see the field docs).
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Multiplier activations summed across the array.
+    pub fn mult_toggles(&self) -> u64 {
+        self.mult_toggles
+    }
+
+    #[inline(always)]
+    fn idx(&self, col: usize, row: usize) -> usize {
+        debug_assert!(col < self.cols && row < self.rows);
+        col * self.rows + row
+    }
+
+    /// Slice (col, row)'s P output register.
+    #[inline]
+    pub fn p(&self, col: usize, row: usize) -> i64 {
+        self.p[self.idx(col, row)]
+    }
+
+    /// Slice (col, row)'s register snapshot (waveform/debug view — the
+    /// same shape the scalar cell and the column report).
+    pub fn regs(&self, col: usize, row: usize) -> DspRegs {
+        let i = self.idx(col, row);
+        DspRegs {
+            a1: self.a1[i],
+            a2: self.a2[i],
+            b1: self.b1[i],
+            b2: self.b2[i],
+            d: self.d[i],
+            ad: self.ad[i],
+            c: self.c[i],
+            m: self.m[i],
+            p: self.p[i],
+        }
+    }
+
+    /// Bank element `i`'s A-cascade output (pre- or post-edge depending
+    /// on when it is read — the banks hold register values).
+    #[inline]
+    fn acout_at(&self, i: usize) -> i64 {
+        match self.attrs.a_cascade_tap {
+            CascadeTap::Reg1 => self.a1[i],
+            CascadeTap::Reg2 => self.a2[i],
+        }
+    }
+
+    /// Bank element `i`'s B-cascade output.
+    #[inline]
+    fn bcout_at(&self, i: usize) -> i64 {
+        match self.attrs.b_cascade_tap {
+            CascadeTap::Reg1 => self.b1[i],
+            CascadeTap::Reg2 => self.b2[i],
+        }
+    }
+
+    /// The A:B concatenation of bank element `i` (X-mux input).
+    #[inline]
+    fn ab_concat_at(&self, i: usize) -> i64 {
+        let a = self.a2[i] & ((1 << 30) - 1);
+        let b = self.b2[i] & ((1 << 18) - 1);
+        truncate((a << 18) | b, 48)
+    }
+
+    /// Clear all state (synchronous reset), keeping the banks.
+    pub fn reset(&mut self) {
+        for bank in [
+            &mut self.a1,
+            &mut self.a2,
+            &mut self.b1,
+            &mut self.b2,
+            &mut self.d,
+            &mut self.ad,
+            &mut self.c,
+            &mut self.m,
+            &mut self.p,
+            &mut self.p_stage,
+        ] {
+            bank.iter_mut().for_each(|v| *v = 0);
+        }
+        self.cycles = 0;
+        self.mult_toggles = 0;
+    }
+
+    /// Reset for a new run while keeping the loaded weights resident:
+    /// the B1/B2 banks survive, every other bank and the counters clear
+    /// — the array analogue of [`DspColumn::reset_keep_weights`], which
+    /// is what makes stationary-tile reuse bit-exact.
+    pub fn reset_keep_weights(&mut self) {
+        for bank in [
+            &mut self.a1,
+            &mut self.a2,
+            &mut self.d,
+            &mut self.ad,
+            &mut self.c,
+            &mut self.m,
+            &mut self.p,
+            &mut self.p_stage,
+        ] {
+            bank.iter_mut().for_each(|v| *v = 0);
+        }
+        self.cycles = 0;
+        self.mult_toggles = 0;
+    }
+
+    // ---- the generic clock edge ----------------------------------------
+
+    /// One clock edge for the whole array under a shared control word —
+    /// per column, the exact register-transfer loop of
+    /// [`DspColumn::tick`]: rows advance top-down so each row reads its
+    /// lower neighbor's cascade taps pre-edge, and row 0 taps the
+    /// per-column `*0` feeds. Columns are independent within an edge
+    /// (no inter-column cascade), so their order is immaterial.
+    pub fn tick(&mut self, ctrl: &ColumnCtrl, feeds: &ArrayFeeds) {
+        for col in 0..self.cols {
+            let base = col * self.rows;
+            for r in (0..self.rows).rev() {
+                let i = base + r;
+                let (acin, bcin, pcin) = if r == 0 {
+                    (
+                        feed(feeds.acin0, col),
+                        feed(feeds.bcin0, col),
+                        feed(feeds.pcin0, col),
+                    )
+                } else {
+                    (self.acout_at(i - 1), self.bcout_at(i - 1), self.p[i - 1])
+                };
+                self.advance_at(
+                    i,
+                    ctrl,
+                    feed(feeds.a, i),
+                    feed(feeds.b, i),
+                    feed(feeds.c, i),
+                    feed(feeds.d, i),
+                    acin,
+                    bcin,
+                    pcin,
+                );
+            }
+        }
+        self.cycles += 1;
+    }
+
+    /// One clock edge for a single slice, the others untouched — for
+    /// schedules that load one slice at a time (the tinyTPU stalling
+    /// weight fill, the SNN per-slice weight commit). The cycle counter
+    /// advances only when slice (0, 0) ticks, preserving the
+    /// `columns[0].cycles()` denominator of the per-column era.
+    pub fn tick_row(&mut self, col: usize, r: usize, ctrl: &ColumnCtrl, f: &RowFeeds) {
+        let i = self.idx(col, r);
+        self.advance_at(i, ctrl, f.a, f.b, f.c, f.d, f.acin, f.bcin, f.pcin);
+        if col == 0 && r == 0 {
+            self.cycles += 1;
+        }
+    }
+
+    /// The full register-transfer semantics of [`Dsp48e2::tick`] for
+    /// bank element `i`: every right-hand side reads pre-edge state.
+    /// Must stay line-for-line equivalent to `DspColumn::advance_row` —
+    /// the column is this path's oracle.
+    #[allow(clippy::too_many_arguments)]
+    fn advance_at(
+        &mut self,
+        i: usize,
+        ctrl: &ColumnCtrl,
+        a: i64,
+        b: i64,
+        c: i64,
+        d: i64,
+        acin: i64,
+        bcin: i64,
+        pcin: i64,
+    ) {
+        let at = self.attrs;
+        let a_src = match at.a_input {
+            InputSource::Direct => truncate(a, 30),
+            InputSource::Cascade => truncate(acin, 30),
+        };
+        let b_src = match at.b_input {
+            InputSource::Direct => truncate(b, 18),
+            InputSource::Cascade => truncate(bcin, 18),
+        };
+
+        // Combinational values from the pre-edge banks.
+        let a_sel = truncate(
+            if ctrl.inmode.use_a1() {
+                self.a1[i]
+            } else {
+                self.a2[i]
+            },
+            27,
+        );
+        let b_sel = if ctrl.inmode.use_b1() {
+            self.b1[i]
+        } else {
+            self.b2[i]
+        };
+        let pre = {
+            let a_op = if ctrl.inmode.gate_a() { 0 } else { a_sel };
+            let d_op = if ctrl.inmode.d_enable() { self.d[i] } else { 0 };
+            let sum = if ctrl.inmode.preadd_sub() {
+                d_op - a_op
+            } else {
+                d_op + a_op
+            };
+            truncate(sum, 27)
+        };
+        let mult = {
+            let a_op = match at.amultsel {
+                MultSel::A => a_sel,
+                MultSel::Ad => {
+                    if at.adreg {
+                        self.ad[i]
+                    } else {
+                        pre
+                    }
+                }
+            };
+            truncate(a_op * b_sel, 45)
+        };
+        let m_val = if at.mreg { self.m[i] } else { mult };
+        let c_val = if at.creg { self.c[i] } else { truncate(c, 48) };
+
+        let use_m = ctrl.opmode.x == XMux::M || ctrl.opmode.y == YMux::M;
+        if use_m {
+            debug_assert!(
+                ctrl.opmode.x == XMux::M && ctrl.opmode.y == YMux::M,
+                "X and Y must both select M"
+            );
+        }
+        let x = match ctrl.opmode.x {
+            XMux::Zero => 0,
+            XMux::M => m_val,
+            XMux::P => self.p[i],
+            XMux::Ab => self.ab_concat_at(i),
+        };
+        let y = match ctrl.opmode.y {
+            YMux::Zero => 0,
+            YMux::M => 0, // folded into X
+            YMux::AllOnes => truncate(-1, 48),
+            YMux::C => c_val,
+        };
+        let z = match ctrl.opmode.z {
+            ZMux::Zero => 0,
+            ZMux::Pcin => truncate(pcin, 48),
+            ZMux::P => self.p[i],
+            ZMux::C => c_val,
+            ZMux::PShift17 => truncate(self.p[i] >> 17, 48),
+            ZMux::PcinShift17 => truncate(truncate(pcin, 48) >> 17, 48),
+        };
+        let w = match ctrl.opmode.w {
+            WMux::Zero => 0,
+            WMux::P => self.p[i],
+            WMux::Rnd => truncate(at.rnd, 48),
+            WMux::C => c_val,
+        };
+        let simd = at.simd;
+        let wxy = simd_add(simd, simd_add(simd, w, x, false), y, false);
+        let alu = match ctrl.alumode {
+            AluMode::Add => simd_add(simd, z, wxy, false),
+            AluMode::ZMinus => simd_add(simd, z, wxy, true),
+        };
+
+        // Register captures.
+        let next_a1 = if ctrl.cea1 { a_src } else { self.a1[i] };
+        let next_a2 = if ctrl.cea2 {
+            if at.areg >= 2 {
+                self.a1[i]
+            } else {
+                a_src
+            }
+        } else {
+            self.a2[i]
+        };
+        let next_b1 = if ctrl.ceb1 { b_src } else { self.b1[i] };
+        let next_b2 = if ctrl.ceb2 {
+            if at.breg >= 2 && !at.b2_direct {
+                self.b1[i]
+            } else {
+                b_src
+            }
+        } else {
+            self.b2[i]
+        };
+        let next_d = if at.dreg {
+            if ctrl.ced {
+                truncate(d, 27)
+            } else {
+                self.d[i]
+            }
+        } else {
+            truncate(d, 27) // transparent
+        };
+        let next_ad = if at.adreg && ctrl.cead {
+            pre
+        } else {
+            self.ad[i]
+        };
+        let next_c = if at.creg && ctrl.cec {
+            truncate(c, 48)
+        } else {
+            self.c[i]
+        };
+        let next_m = if at.mreg && ctrl.cem { mult } else { self.m[i] };
+        let next_p = if ctrl.cep { alu } else { self.p[i] };
+
+        if ctrl.cem && at.mreg && next_m != self.m[i] {
+            self.mult_toggles += 1;
+        }
+
+        self.a1[i] = next_a1;
+        self.a2[i] = next_a2;
+        self.b1[i] = next_b1;
+        self.b2[i] = next_b2;
+        self.d[i] = next_d;
+        self.ad[i] = next_ad;
+        self.c[i] = next_c;
+        self.m[i] = next_m;
+        self.p[i] = next_p;
+    }
+
+    // ---- mode-specialized fast paths -----------------------------------
+
+    /// Stage next-edge P for every slice into `p_stage`:
+    /// `P ← PCIN + M` with `PCIN = 0` at each column base (the chain
+    /// entry) and the in-column neighbor's pre-edge P above it. A
+    /// per-column forward scan over pre-edge banks — the one carried
+    /// dependence of the cascade, isolated here so the main register
+    /// pass can run flat and vectorized.
+    #[inline]
+    fn stage_next_p(&mut self) {
+        let n = self.rows * self.cols;
+        let rows = self.rows;
+        let p = &self.p[..n];
+        let m = &self.m[..n];
+        let stage = &mut self.p_stage[..n];
+        let mut base = 0;
+        while base < n {
+            stage[base] = truncate(m[base], 48);
+            for r in 1..rows {
+                stage[base + r] = truncate(p[base + r - 1] + m[base + r], 48);
+            }
+            base += rows;
+        }
+    }
+
+    /// The WS payload cycle for the whole array in one bank pass —
+    /// array analogue of [`DspColumn::tick_ws_stream`], same per-slice
+    /// semantics, same Table-I configuration contract. `a`/`d` are
+    /// `[col][row]` flat operand slices of at least `cols * rows`
+    /// elements.
+    pub fn tick_ws_stream(&mut self, a: &[i64], d: &[i64]) {
+        let at = self.attrs;
+        let n = self.rows * self.cols;
+        debug_assert!(a.len() >= n && d.len() >= n);
+        debug_assert!(
+            at.mreg && !at.creg && at.a_input == InputSource::Direct && at.simd == SimdMode::One48,
+            "tick_ws_stream assumes a Table-I PE configuration"
+        );
+        self.stage_next_p();
+        // Attribute selects are loop-invariant: hoisted so the pass
+        // unswitches into straight-line elementwise bodies.
+        let use_pre = at.amultsel == MultSel::Ad;
+        let adreg = at.adreg;
+        let two_deep_a = at.areg >= 2;
+        let mut toggles = 0u64;
+        {
+            let a1 = &mut self.a1[..n];
+            let a2 = &mut self.a2[..n];
+            let b2 = &self.b2[..n];
+            let dd = &mut self.d[..n];
+            let ad = &mut self.ad[..n];
+            let m = &mut self.m[..n];
+            let a = &a[..n];
+            let d = &d[..n];
+            for i in 0..n {
+                let a_sel = truncate(a2[i], 27);
+                let pre = truncate(dd[i] + a_sel, 27);
+                let mult_a = if use_pre {
+                    if adreg {
+                        ad[i]
+                    } else {
+                        pre
+                    }
+                } else {
+                    a_sel
+                };
+                let mult = truncate(mult_a * b2[i], 45);
+                toggles += (mult != m[i]) as u64;
+                let a_src = truncate(a[i], 30);
+                a2[i] = if two_deep_a { a1[i] } else { a_src };
+                a1[i] = a_src;
+                dd[i] = truncate(d[i], 27);
+                ad[i] = if adreg { pre } else { ad[i] };
+                m[i] = mult;
+            }
+        }
+        self.mult_toggles += toggles;
+        std::mem::swap(&mut self.p, &mut self.p_stage);
+        self.cycles += 1;
+    }
+
+    /// One fast edge of every DPU multiplier chain in one bank pass —
+    /// array analogue of [`DspColumn::tick_os_chain`], same Table-II
+    /// configuration contract. `a`/`d`/`b` are `[col][row]` flat
+    /// operand slices; the three skewed controls arrive as *per-column*
+    /// bitmasks (`use_b1[col]` bit `r` = that chain's row `r`), since
+    /// the OS schedule skews within a chain but chains stay uniform.
+    pub fn tick_os_chain(
+        &mut self,
+        a: &[i64],
+        d: &[i64],
+        b: &[i64],
+        use_b1: &[u64],
+        ceb1: &[u64],
+        ceb2: &[u64],
+    ) {
+        let at = self.attrs;
+        let (rows, cols) = (self.rows, self.cols);
+        let n = rows * cols;
+        debug_assert!(rows <= 64, "control masks carry one bit per row");
+        debug_assert!(a.len() >= n && d.len() >= n && b.len() >= n);
+        debug_assert!(use_b1.len() >= cols && ceb1.len() >= cols && ceb2.len() >= cols);
+        debug_assert!(
+            at.amultsel == MultSel::Ad
+                && at.adreg
+                && at.dreg
+                && at.mreg
+                && !at.creg
+                && at.areg >= 2
+                && (at.b2_direct || at.breg < 2)
+                && at.a_input == InputSource::Direct
+                && at.b_input == InputSource::Direct
+                && at.simd == SimdMode::One48,
+            "tick_os_chain assumes a Table-II chain configuration"
+        );
+        self.stage_next_p();
+        let mut toggles = 0u64;
+        {
+            let a1 = &mut self.a1[..n];
+            let a2 = &mut self.a2[..n];
+            let b1 = &mut self.b1[..n];
+            let b2 = &mut self.b2[..n];
+            let dd = &mut self.d[..n];
+            let ad = &mut self.ad[..n];
+            let m = &mut self.m[..n];
+            for col in 0..cols {
+                let base = col * rows;
+                let (ub, c1, c2) = (use_b1[col], ceb1[col], ceb2[col]);
+                for r in 0..rows {
+                    let i = base + r;
+                    let a_sel = truncate(a2[i], 27);
+                    let pre = truncate(dd[i] + a_sel, 27);
+                    let b_sel = if (ub >> r) & 1 != 0 { b1[i] } else { b2[i] };
+                    let mult = truncate(ad[i] * b_sel, 45);
+                    toggles += (mult != m[i]) as u64;
+                    let b_src = truncate(b[i], 18);
+                    a2[i] = a1[i];
+                    a1[i] = truncate(a[i], 30);
+                    b1[i] = if (c1 >> r) & 1 != 0 { b_src } else { b1[i] };
+                    b2[i] = if (c2 >> r) & 1 != 0 { b_src } else { b2[i] };
+                    dd[i] = truncate(d[i], 27);
+                    ad[i] = pre;
+                    m[i] = mult;
+                }
+            }
+        }
+        self.mult_toggles += toggles;
+        std::mem::swap(&mut self.p, &mut self.p_stage);
+        self.cycles += 1;
+    }
+
+    /// One crossbar cycle of every FireFly chain in one bank pass —
+    /// array analogue of [`DspColumn::tick_snn_crossbar`], same
+    /// Table-III configuration contract. Spike bits arrive as
+    /// *per-column* masks (`x_ab[col]` bit `r` → that chain's row `r`
+    /// selects `X = A:B`, `y_c[col]` likewise for `Y = C`).
+    pub fn tick_snn_crossbar(&mut self, x_ab: &[u64], y_c: &[u64]) {
+        let at = self.attrs;
+        let (rows, cols) = (self.rows, self.cols);
+        let n = rows * cols;
+        debug_assert!(rows <= 64, "spike masks carry one bit per row");
+        debug_assert!(x_ab.len() >= cols && y_c.len() >= cols);
+        debug_assert!(
+            !at.mreg && at.creg && !at.adreg && !at.dreg,
+            "tick_snn_crossbar assumes a Table-III crossbar configuration"
+        );
+        let simd = at.simd;
+        {
+            let a2 = &self.a2[..n];
+            let b2 = &self.b2[..n];
+            let cb = &self.c[..n];
+            let p = &self.p[..n];
+            let stage = &mut self.p_stage[..n];
+            for col in 0..cols {
+                let base = col * rows;
+                let (xm, ym) = (x_ab[col], y_c[col]);
+                for r in 0..rows {
+                    let i = base + r;
+                    let pcin = if r == 0 { 0 } else { p[i - 1] };
+                    let x = if (xm >> r) & 1 != 0 {
+                        let hi = a2[i] & ((1 << 30) - 1);
+                        let lo = b2[i] & ((1 << 18) - 1);
+                        truncate((hi << 18) | lo, 48)
+                    } else {
+                        0
+                    };
+                    let y = if (ym >> r) & 1 != 0 { cb[i] } else { 0 };
+                    let wxy = simd_add(simd, simd_add(simd, 0, x, false), y, false);
+                    stage[i] = simd_add(simd, pcin, wxy, false);
+                }
+            }
+        }
+        self.d.fill(0); // transparent DREG capturing an idle port
+        std::mem::swap(&mut self.p, &mut self.p_stage);
+        self.cycles += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{ColumnFeeds, DspColumn};
+    use crate::util::rng::XorShift;
+
+    fn assert_matches_columns(arr: &DspArray, cols: &[DspColumn], edge: usize) {
+        for (c, col) in cols.iter().enumerate() {
+            for r in 0..col.rows() {
+                assert_eq!(
+                    arr.regs(c, r),
+                    col.regs(r),
+                    "slice ({c}, {r}) after edge {edge}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generic_tick_matches_per_column_loop() {
+        let attrs = Attributes {
+            areg: 1,
+            breg: 1,
+            ..Attributes::default()
+        };
+        let (rows, cols) = (3, 4);
+        let mut arr = DspArray::new(attrs, rows, cols);
+        let mut refcols: Vec<DspColumn> = (0..cols).map(|_| DspColumn::new(attrs, rows)).collect();
+        let mut rng = XorShift::new(5);
+        let ctrl = ColumnCtrl {
+            opmode: crate::dsp::OpMode::MULT_CASCADE,
+            ..ColumnCtrl::default()
+        };
+        for edge in 0..24 {
+            let a: Vec<i64> = (0..rows * cols).map(|_| rng.next_i8() as i64).collect();
+            let b: Vec<i64> = (0..rows * cols).map(|_| rng.next_i8() as i64).collect();
+            arr.tick(
+                &ctrl,
+                &ArrayFeeds {
+                    a: &a,
+                    b: &b,
+                    ..ArrayFeeds::default()
+                },
+            );
+            for (c, col) in refcols.iter_mut().enumerate() {
+                col.tick(
+                    &ctrl,
+                    &ColumnFeeds {
+                        a: &a[c * rows..(c + 1) * rows],
+                        b: &b[c * rows..(c + 1) * rows],
+                        ..ColumnFeeds::default()
+                    },
+                );
+            }
+            assert_matches_columns(&arr, &refcols, edge);
+        }
+        assert_eq!(arr.cycles(), refcols[0].cycles());
+        let toggles: u64 = refcols.iter().map(|c| c.mult_toggles()).sum();
+        assert_eq!(arr.mult_toggles(), toggles);
+    }
+
+    #[test]
+    fn release_returns_banks_to_the_arena() {
+        let mut scratch = Scratch::new();
+        let arr = DspArray::new_in(Attributes::default(), 4, 3, &mut scratch);
+        assert_eq!(scratch.pooled(), 0);
+        arr.release(&mut scratch);
+        assert_eq!(scratch.pooled(), 10);
+    }
+}

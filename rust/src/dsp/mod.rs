@@ -21,18 +21,23 @@
 //! from the pre-tick state, exactly like one clock edge. Combinational
 //! output taps (`pcout`, `acout`, `bcout`) read the post-tick registers.
 //!
-//! Two representations share these semantics: the scalar [`Dsp48e2`]
-//! cell (the golden reference model) and the struct-of-arrays
-//! [`DspColumn`] (the engines' hot path — a whole cascade column
-//! advanced in one pass; see the module docs in `column.rs`). The
-//! property suite in `tests/column_props.rs` holds them bit-identical.
+//! Three representations share these semantics: the scalar [`Dsp48e2`]
+//! cell (the golden reference model), the struct-of-arrays
+//! [`DspColumn`] (one cascade column advanced in one pass — the
+//! mid-level oracle; see `column.rs`), and the whole-array [`DspArray`]
+//! (every column's banks fused into `[col][row]` passes — the engines'
+//! hot path; see `array.rs`). `tests/column_props.rs` holds the column
+//! bit-identical to the cell; `tests/array_props.rs` holds the array
+//! bit-identical to both.
 
+mod array;
 mod attributes;
 mod cell;
 mod column;
 mod modes;
 mod simd;
 
+pub use array::{ArrayFeeds, BANK_ALIGN, CHUNK_ROWS, DspArray};
 pub use attributes::{Attributes, CascadeTap, InputSource, MultSel, SimdMode};
 pub use cell::{Dsp48e2, DspInputs, DspRegs};
 pub use column::{ColumnCtrl, ColumnFeeds, DspColumn, RowFeeds};

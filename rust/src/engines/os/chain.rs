@@ -1,4 +1,4 @@
-//! A fast-clock DSP48E2 multiplier chain (one DPU inner-product lane).
+//! Fast-clock DSP48E2 multiplier chains (DPU inner-product lanes).
 //!
 //! `chain_len` slices cascade over PCIN; every slice packs two pixels
 //! through the pre-adder (A = hi·2¹⁸, D = lo) and multiplies by its
@@ -12,34 +12,26 @@
 //!   every fast cycle with the alternating weight (two weights per slow
 //!   cycle — the doubled-bandwidth drawback).
 //!
-//! The chain state lives in a [`DspColumn`] (struct-of-arrays register
-//! banks): the engine's per-slice drive is staged into SoA operand
-//! banks and the three controls the schedule skews per slice —
-//! INMODE[4], CEB1, CEB2 — become bitmasks, so one
-//! [`DspColumn::tick_os_chain`] pass advances the whole cascade with
-//! no per-cell `DspInputs`. The chain is pure datapath; the engine
-//! owns the edge schedule and output tagging (see `engine.rs`).
+//! All of an engine's chains live in one [`ChainArray`]: a [`DspArray`]
+//! whose columns are the chains (`[chain][slice]` banks), plus
+//! array-wide SoA operand staging and per-chain control masks. The
+//! engine's per-slice drive is staged once for the whole array, then a
+//! single [`DspArray::tick_os_chain`] bank pass advances every cascade
+//! — no per-chain column loop, no per-cell `DspInputs`. The three
+//! controls the schedule skews per slice — INMODE[4], CEB1, CEB2 —
+//! stay bitmasks, one word per chain. The chains are pure datapath;
+//! the engine owns the edge schedule and output tagging (see
+//! `engine.rs`).
+//!
+//! [`MultChain`] remains as the single-chain view (a `ChainArray` of
+//! one) for unit tests and waveform probes.
 
 use super::OsVariant;
-use crate::dsp::{Attributes, DspColumn, DspRegs};
+use crate::dsp::{Attributes, DspArray, DspRegs};
 use crate::exec::Scratch;
 use crate::fabric::{ClockDomain, LutMux};
 
-/// One multiplier chain.
-pub struct MultChain {
-    /// SoA register banks for the `chain_len` cascade slices.
-    col: DspColumn,
-    /// Official-variant DDR weight mux (one 8-bit 2:1 LUT mux per chain
-    /// pair in the inventory; modeled per chain here for activity).
-    mux: Option<LutMux>,
-    /// SoA operand staging, refilled from the per-slice drive each
-    /// edge (§Perf: one column pass instead of `len` cell ticks).
-    a_ops: Vec<i64>,
-    d_ops: Vec<i64>,
-    b_ops: Vec<i64>,
-}
-
-/// Per-edge drive for one chain (engine-provided).
+/// Per-edge drive for one chain slice (engine-provided).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ChainDrive {
     /// A-port value per slice is identical in *form*: hi pixel << 18.
@@ -68,20 +60,158 @@ fn chain_attrs(variant: OsVariant) -> Attributes {
     }
 }
 
-impl MultChain {
-    /// A chain whose register banks lease from `scratch` (the engine's
-    /// arena).
-    pub fn new_in(variant: OsVariant, chain_len: usize, scratch: &mut Scratch) -> Self {
+/// Every multiplier chain of an OS engine as one SoA array: chain `c`
+/// is column `c` of the [`DspArray`], slice `j` its row `j`.
+pub struct ChainArray {
+    /// Array-wide register banks: `[chain][slice]` layout.
+    arr: DspArray,
+    /// Official-variant DDR weight muxes (one 8-bit 2:1 LUT mux per
+    /// chain pair in the inventory; modeled per chain here for
+    /// activity). Empty for the enhanced variant.
+    muxes: Vec<LutMux>,
+    /// Array-wide SoA operand staging, refilled from the per-slice
+    /// drive each edge.
+    a_ops: Vec<i64>,
+    d_ops: Vec<i64>,
+    b_ops: Vec<i64>,
+    /// Per-chain control masks (bit `j` = slice `j`).
+    use_b1: Vec<u64>,
+    ceb1: Vec<u64>,
+    ceb2: Vec<u64>,
+}
+
+impl ChainArray {
+    /// `chains` multiplier chains of `chain_len` slices whose register
+    /// banks lease from `scratch` (the engine's arena).
+    pub fn new_in(
+        variant: OsVariant,
+        chains: usize,
+        chain_len: usize,
+        scratch: &mut Scratch,
+    ) -> Self {
         assert!(chain_len <= 64, "chain controls carry one bit per slice");
-        MultChain {
-            col: DspColumn::new_in(chain_attrs(variant), chain_len, scratch),
-            mux: match variant {
-                OsVariant::Official => Some(LutMux::new(8, ClockDomain::Fast)),
-                OsVariant::Enhanced => None,
+        let n = chains * chain_len;
+        ChainArray {
+            arr: DspArray::new_in(chain_attrs(variant), chain_len, chains, scratch),
+            muxes: match variant {
+                OsVariant::Official => (0..chains)
+                    .map(|_| LutMux::new(8, ClockDomain::Fast))
+                    .collect(),
+                OsVariant::Enhanced => Vec::new(),
             },
-            a_ops: scratch.lease_i64(chain_len),
-            d_ops: scratch.lease_i64(chain_len),
-            b_ops: scratch.lease_i64(chain_len),
+            a_ops: scratch.lease_i64(n),
+            d_ops: scratch.lease_i64(n),
+            b_ops: scratch.lease_i64(n),
+            use_b1: vec![0; chains],
+            ceb1: vec![0; chains],
+            ceb2: vec![0; chains],
+        }
+    }
+
+    /// A free-standing chain array (fresh allocations, no arena).
+    pub fn new(variant: OsVariant, chains: usize, chain_len: usize) -> Self {
+        Self::new_in(variant, chains, chain_len, &mut Scratch::new())
+    }
+
+    /// Number of chains.
+    pub fn chains(&self) -> usize {
+        self.arr.cols()
+    }
+
+    /// Slices per chain.
+    pub fn len(&self) -> usize {
+        self.arr.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arr.rows() == 0
+    }
+
+    /// One fast edge of every chain. `per_slice(chain, j)` returns that
+    /// slice's controls and `(a_port, d_port, b_bus)` operands.
+    /// Controls are per-slice because the PCIN cascade adds one
+    /// register stage per position: slice `j` runs the shared schedule
+    /// delayed by `j` edges (the DPU's per-position staging registers).
+    ///
+    /// For the official variant the `b_bus` value is what the CLB mux
+    /// outputs this edge (the engine sequences the DDR alternation;
+    /// activity is counted here). The official multiplier always reads
+    /// B2 (single B register); only the enhanced design toggles
+    /// INMODE[4].
+    pub fn tick(&mut self, mut per_slice: impl FnMut(usize, usize) -> (ChainDrive, i64, i64, i64)) {
+        let (chains, len) = (self.arr.cols(), self.arr.rows());
+        let official = !self.muxes.is_empty();
+        for ci in 0..chains {
+            let base = ci * len;
+            let (mut ub, mut c1, mut c2) = (0u64, 0u64, 0u64);
+            for j in 0..len {
+                let (drive, a, d, b_bus) = per_slice(ci, j);
+                let b = if official {
+                    self.muxes[ci].select(drive.use_b1, b_bus, b_bus)
+                } else {
+                    b_bus
+                };
+                if !official && drive.use_b1 {
+                    ub |= 1 << j;
+                }
+                if drive.ceb1 {
+                    c1 |= 1 << j;
+                }
+                if drive.ceb2 {
+                    c2 |= 1 << j;
+                }
+                self.a_ops[base + j] = a;
+                self.d_ops[base + j] = d;
+                self.b_ops[base + j] = b;
+            }
+            self.use_b1[ci] = ub;
+            self.ceb1[ci] = c1;
+            self.ceb2[ci] = c2;
+        }
+        self.arr.tick_os_chain(
+            &self.a_ops,
+            &self.d_ops,
+            &self.b_ops,
+            &self.use_b1,
+            &self.ceb1,
+            &self.ceb2,
+        );
+    }
+
+    /// Chain `chain`'s cascade-tail P register (post-edge).
+    pub fn tail_p(&self, chain: usize) -> i64 {
+        let len = self.arr.rows();
+        assert!(len > 0, "chains are non-empty");
+        self.arr.p(chain, len - 1)
+    }
+
+    /// Pipeline latency from an A-port sample to the tail P:
+    /// A1, A2, AD, M, P = 4 edges, plus one per extra cascade stage.
+    pub fn latency(&self) -> usize {
+        4 + (self.arr.rows() - 1)
+    }
+
+    pub fn reset(&mut self) {
+        self.arr.reset();
+    }
+
+    /// Slice `(chain, j)`'s full register snapshot (debug/waveform).
+    pub fn regs(&self, chain: usize, j: usize) -> DspRegs {
+        self.arr.regs(chain, j)
+    }
+}
+
+/// One multiplier chain — the single-chain view of [`ChainArray`], kept
+/// for unit tests and waveform probes.
+pub struct MultChain {
+    chains: ChainArray,
+}
+
+impl MultChain {
+    /// A chain whose register banks lease from `scratch`.
+    pub fn new_in(variant: OsVariant, chain_len: usize, scratch: &mut Scratch) -> Self {
+        MultChain {
+            chains: ChainArray::new_in(variant, 1, chain_len, scratch),
         }
     }
 
@@ -91,76 +221,30 @@ impl MultChain {
     }
 
     pub fn len(&self) -> usize {
-        self.col.rows()
+        self.chains.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.col.rows() == 0
+        self.chains.is_empty()
     }
 
-    /// One fast edge. `per_slice(j)` returns the slice's controls and
-    /// `(a_port, d_port, b_bus)` operands. Controls are per-slice
-    /// because the PCIN cascade adds one register stage per position:
-    /// slice `j` runs the shared schedule delayed by `j` edges (the
-    /// DPU's per-position staging registers).
-    ///
-    /// For the official variant the `b_bus` value is what the CLB mux
-    /// outputs this edge (the engine sequences the DDR alternation;
-    /// activity is counted here). The official multiplier always reads
-    /// B2 (single B register); only the enhanced design toggles
-    /// INMODE[4].
-    pub fn tick(
-        &mut self,
-        mut per_slice: impl FnMut(usize) -> (ChainDrive, i64, i64, i64),
-    ) {
-        let len = self.col.rows();
-        let official = self.mux.is_some();
-        let (mut use_b1, mut ceb1, mut ceb2) = (0u64, 0u64, 0u64);
-        for j in 0..len {
-            let (drive, a, d, b_bus) = per_slice(j);
-            let b = if let Some(mux) = self.mux.as_mut() {
-                mux.select(drive.use_b1, b_bus, b_bus)
-            } else {
-                b_bus
-            };
-            if !official && drive.use_b1 {
-                use_b1 |= 1 << j;
-            }
-            if drive.ceb1 {
-                ceb1 |= 1 << j;
-            }
-            if drive.ceb2 {
-                ceb2 |= 1 << j;
-            }
-            self.a_ops[j] = a;
-            self.d_ops[j] = d;
-            self.b_ops[j] = b;
-        }
-        self.col.tick_os_chain(
-            &self.a_ops,
-            &self.d_ops,
-            &self.b_ops,
-            use_b1,
-            ceb1,
-            ceb2,
-        );
+    /// One fast edge; see [`ChainArray::tick`].
+    pub fn tick(&mut self, mut per_slice: impl FnMut(usize) -> (ChainDrive, i64, i64, i64)) {
+        self.chains.tick(|_, j| per_slice(j));
     }
 
     /// The cascade tail's P register (post-edge).
     pub fn tail_p(&self) -> i64 {
-        let len = self.col.rows();
-        assert!(len > 0, "chain is non-empty");
-        self.col.p(len - 1)
+        self.chains.tail_p(0)
     }
 
-    /// Pipeline latency from an A-port sample to the tail P:
-    /// A1, A2, AD, M, P = 4 edges, plus one per extra cascade stage.
+    /// Pipeline latency from an A-port sample to the tail P.
     pub fn latency(&self) -> usize {
-        4 + (self.col.rows() - 1)
+        self.chains.latency()
     }
 
     pub fn reset(&mut self) {
-        self.col.reset();
+        self.chains.reset();
     }
 
     /// Observed B-register state (debug/waveform).
@@ -171,7 +255,7 @@ impl MultChain {
 
     /// Slice `j`'s full register snapshot (debug/waveform).
     pub fn regs(&self, j: usize) -> DspRegs {
-        self.col.regs(j)
+        self.chains.regs(0, j)
     }
 }
 
@@ -231,10 +315,28 @@ mod tests {
         // CEB2 edge loads B2 directly; CEB1 edge loads B1 — different
         // values, neither disturbing the other (the in-DSP mux setup).
         chain.tick(|_| {
-            (ChainDrive { use_b1: false, ceb1: false, ceb2: true }, 0, 0, 11)
+            (
+                ChainDrive {
+                    use_b1: false,
+                    ceb1: false,
+                    ceb2: true,
+                },
+                0,
+                0,
+                11,
+            )
         });
         chain.tick(|_| {
-            (ChainDrive { use_b1: false, ceb1: true, ceb2: false }, 0, 0, 22)
+            (
+                ChainDrive {
+                    use_b1: false,
+                    ceb1: true,
+                    ceb2: false,
+                },
+                0,
+                0,
+                22,
+            )
         });
         assert_eq!(chain.b_regs(0), (22, 11));
     }
@@ -243,5 +345,47 @@ mod tests {
     fn latency_formula() {
         let chain = MultChain::new(OsVariant::Enhanced, 4);
         assert_eq!(chain.latency(), 7);
+    }
+
+    /// A multi-chain array must be bit-identical to independent
+    /// single-chain arrays under the same per-slice drive.
+    #[test]
+    fn chain_array_matches_independent_chains() {
+        let (chains, len) = (3usize, 4usize);
+        let mut arr = ChainArray::new(OsVariant::Enhanced, chains, len);
+        let mut singles: Vec<MultChain> = (0..chains)
+            .map(|_| MultChain::new(OsVariant::Enhanced, len))
+            .collect();
+        let drive = |ci: usize, j: usize, e: usize| {
+            let ej = e.wrapping_sub(j);
+            if ej > e {
+                return (ChainDrive::default(), 0, 0, 0);
+            }
+            (
+                ChainDrive {
+                    use_b1: ej % 2 == 1,
+                    ceb1: ej % 4 == 2,
+                    ceb2: ej % 4 == 3,
+                },
+                (((ci + 2 * j + ej) % 5) as i64) << 18,
+                (ci as i64) - (j as i64) + (ej % 7) as i64,
+                ((3 * ci + j + ej) % 11) as i64 - 5,
+            )
+        };
+        for e in 0..20 {
+            arr.tick(|ci, j| drive(ci, j, e));
+            for (ci, single) in singles.iter_mut().enumerate() {
+                single.tick(|j| drive(ci, j, e));
+            }
+            for (ci, single) in singles.iter().enumerate() {
+                for j in 0..len {
+                    assert_eq!(
+                        arr.regs(ci, j),
+                        single.regs(j),
+                        "chain {ci} slice {j} edge {e}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -20,17 +20,18 @@
 //!   `(wave, oc, round) = tag(m)` (see [`tag_of_m`]); the chain tail P
 //!   word for `m` appears `len` edges later.
 //! * **accumulation**: enhanced routes tail words into the per-chain-
-//!   pair [`RingAccumulator`] (chain B delayed two edges per the ring
-//!   contract); official behaviorally models AddTree + S2P + two slow
-//!   ONE48 accumulator DSPs per chain.
+//!   pair ring of the [`RingBank`] (chain B delayed two edges per the
+//!   ring contract); official behaviorally models AddTree + S2P + two
+//!   slow ONE48 accumulator DSPs per chain.
 //!
 //! Chain depth ≤ 7 keeps every packed cascade inside the guard band, so
 //! the OS engines are exact for all INT8 inputs (the 24-bit ring lanes
 //! bound K per pass instead — see `max_k_per_pass`).
 
+use super::chain::{ChainArray, ChainDrive};
 use super::inventory::{os_inventory, os_timing};
-use super::ring::{respace_to_two24, two24_lanes, RingAccumulator};
-use super::{chain::ChainDrive, MultChain, OsConfig, OsVariant};
+use super::ring::{respace_to_two24, two24_lanes, RingBank};
+use super::{OsConfig, OsVariant};
 use crate::cost::{ResourceInventory, TimingModel};
 use crate::engines::{Engine, EngineError, GemmRun, RunStats};
 use crate::exec::{self, Clocking, FillPlan, Scratch, TileKernel, TilePlan};
@@ -62,14 +63,19 @@ fn tag_of_m(m: usize) -> Option<(usize, usize, usize)> {
 pub struct OsEngine {
     cfg: OsConfig,
     name: String,
-    /// Chains indexed `[g * oc_pairs * ic_groups + o * ic_groups + i]`.
-    chains: Vec<MultChain>,
-    /// Enhanced: one ring per (g, o) chain pair.
-    rings: Vec<RingAccumulator>,
-    /// Per-chain 1-edge D-port delay (per slice).
-    d_delay: Vec<Vec<i64>>,
+    /// Every chain as one SoA array; chain
+    /// `ci = (g * oc_pairs + o) * ic_groups + i` is column `ci`.
+    chains: ChainArray,
+    /// Enhanced: one ring per (g, o) chain pair, banked (empty bank for
+    /// the official variant).
+    rings: RingBank,
+    /// Per-chain 1-edge D-port delay, flattened `[chain][slice]`.
+    d_delay: Vec<i64>,
     /// Per-ring 2-edge chain-B word buffer.
     tailb_buf: Vec<[i64; 2]>,
+    /// Per-ring staged feed words for the bank-wide ring tick.
+    ring_wa: Vec<i64>,
+    ring_wb: Vec<i64>,
     /// Behavioral slots for the accumulators, reused across passes:
     /// `[pair][wave][lane][oc]` (lane 0 = hi pixel, 1 = lo pixel).
     slots: Vec<[[[i64; 2]; 2]; 2]>,
@@ -89,21 +95,23 @@ impl OsEngine {
         // The chains' and rings' SoA register banks lease from the
         // engine's arena.
         let mut scratch = Scratch::new();
-        let chains = (0..n_chains)
-            .map(|_| MultChain::new_in(cfg.variant, cfg.chain_len, &mut scratch))
-            .collect();
-        let rings = match cfg.variant {
-            OsVariant::Enhanced => (0..n_pairs)
-                .map(|_| RingAccumulator::new_in(0, &mut scratch))
-                .collect(),
-            OsVariant::Official => Vec::new(),
-        };
+        let chains = ChainArray::new_in(cfg.variant, n_chains, cfg.chain_len, &mut scratch);
+        let rings = RingBank::new_in(
+            0,
+            match cfg.variant {
+                OsVariant::Enhanced => n_pairs,
+                OsVariant::Official => 0,
+            },
+            &mut scratch,
+        );
         OsEngine {
             name: format!("DPU-{} {}", cfg.variant.label(), b_tag(&cfg)),
             chains,
             rings,
-            d_delay: (0..n_chains).map(|_| vec![0; cfg.chain_len]).collect(),
+            d_delay: vec![0; n_chains * cfg.chain_len],
             tailb_buf: vec![[0; 2]; n_pairs],
+            ring_wa: vec![0; n_pairs],
+            ring_wb: vec![0; n_pairs],
             slots: vec![[[[0; 2]; 2]; 2]; n_pairs],
             scratch,
             cfg,
@@ -140,15 +148,11 @@ impl OsEngine {
 
     /// Reset sequential state for a new pass (new stationary outputs).
     fn reset_pass(&mut self) {
-        for ch in &mut self.chains {
-            ch.reset();
-        }
-        for ring in &mut self.rings {
-            ring.reset();
-        }
-        for d in &mut self.d_delay {
-            d.iter_mut().for_each(|v| *v = 0);
-        }
+        self.chains.reset();
+        self.rings.reset();
+        self.d_delay.iter_mut().for_each(|v| *v = 0);
+        self.ring_wa.iter_mut().for_each(|v| *v = 0);
+        self.ring_wb.iter_mut().for_each(|v| *v = 0);
         for b in &mut self.tailb_buf {
             *b = [0; 2];
         }
@@ -190,133 +194,141 @@ impl OsEngine {
             }
         };
 
-        {
-            // --- tick every chain -----------------------------------
-            // Slice j runs the shared schedule delayed by j edges (the
-            // cascade adds one register stage per position), so every
-            // per-slice quantity below derives from ej = e - j.
-            for g in 0..cfg.px_groups {
-                for o in 0..cfg.oc_pairs {
-                    for i in 0..cfg.ic_groups {
-                        let ci = self.chain_idx(g, o, i);
-                        // §Perf: swap the per-chain D-delay line out
-                        // through the scratch arena instead of cloning
-                        // (or allocating) it every edge.
-                        let d_prev = std::mem::take(&mut self.d_delay[ci]);
-                        let mut d_next = scratch.lease_i64(len);
-                        let chain = &mut self.chains[ci];
-                        chain.tick(|j| {
-                            let Some(ej) = e.checked_sub(j) else {
-                                return (ChainDrive::default(), 0, 0, 0);
-                            };
-                            let phi = ej % 4;
-                            let r = ej / 4;
-                            let wave = phi / 2;
-                            let use_b1 = ej % 2 == 1;
-                            let feeding = ej < 4 * rounds;
-                            let px_hi = pb * cfg.px_groups * 4 + g * 4 + wave * 2;
-                            let ic = r * ics_round + i * len + j;
-                            let (a_port, d_now) = if feeding {
-                                (at(px_hi, ic) << 18, at(px_hi + 1, ic))
+        // --- tick every chain: one array-wide bank pass --------------
+        // Slice j runs the shared schedule delayed by j edges (the
+        // cascade adds one register stage per position), so every
+        // per-slice quantity below derives from ej = e - j. The drive
+        // for all chains is staged through the ChainArray and the whole
+        // grid advances in a single SoA pass.
+        //
+        // §Perf: swap the flattened D-delay line out through the
+        // scratch arena instead of cloning (or allocating) every edge.
+        let ic_groups = cfg.ic_groups;
+        let oc_pairs = cfg.oc_pairs;
+        let d_prev = std::mem::take(&mut self.d_delay);
+        let mut d_next = scratch.lease_i64(d_prev.len());
+        self.chains.tick(|ci, j| {
+            let i = ci % ic_groups;
+            let o = (ci / ic_groups) % oc_pairs;
+            let g = ci / (ic_groups * oc_pairs);
+            let Some(ej) = e.checked_sub(j) else {
+                return (ChainDrive::default(), 0, 0, 0);
+            };
+            let phi = ej % 4;
+            let r = ej / 4;
+            let wave = phi / 2;
+            let use_b1 = ej % 2 == 1;
+            let feeding = ej < 4 * rounds;
+            let px_hi = pb * cfg.px_groups * 4 + g * 4 + wave * 2;
+            let ic = r * ics_round + i * len + j;
+            let (a_port, d_now) = if feeding {
+                (at(px_hi, ic) << 18, at(px_hi + 1, ic))
+            } else {
+                (0, 0)
+            };
+            d_next[ci * len + j] = d_now;
+            let (ceb1, ceb2, b_bus) = match cfg.variant {
+                OsVariant::Enhanced => {
+                    // ej%4 == 2 -> load oc1 into B1;
+                    // ej%4 == 3 -> load oc0 into B2.
+                    if feeding && phi == 2 {
+                        (true, false, wt(ic, ob * cfg.ocs() + 2 * o + 1))
+                    } else if feeding && phi == 3 {
+                        (false, true, wt(ic, ob * cfg.ocs() + 2 * o))
+                    } else {
+                        (false, false, 0)
+                    }
+                }
+                OsVariant::Official => {
+                    // Reload B2 every edge with the
+                    // weight the next M-capture needs.
+                    let m = ej + 1;
+                    let b = match tag_of_m(m) {
+                        Some((_, oc, mr)) if mr < rounds => {
+                            let ic_m = mr * ics_round + i * len + j;
+                            wt(ic_m, ob * cfg.ocs() + 2 * o + oc)
+                        }
+                        _ => 0,
+                    };
+                    (false, true, b)
+                }
+            };
+            (
+                ChainDrive { use_b1, ceb1, ceb2 },
+                a_port,
+                d_prev[ci * len + j],
+                b_bus,
+            )
+        });
+        self.d_delay = d_next;
+        scratch.release_i64(d_prev);
+
+        // --- route tail words into accumulators ----------------------
+        // The tag depends only on the edge number, so it is shared by
+        // every chain pair.
+        let valid_tag = e.checked_sub(len).and_then(tag_of_m).filter(|t| t.2 < rounds);
+        match cfg.variant {
+            OsVariant::Enhanced => {
+                for g in 0..cfg.px_groups {
+                    for o in 0..oc_pairs {
+                        let pi = self.pair_idx(g, o);
+                        let tail_a = self.chains.tail_p(self.chain_idx(g, o, 0));
+                        let tail_b = if ic_groups > 1 {
+                            self.chains.tail_p(self.chain_idx(g, o, 1))
+                        } else {
+                            0
+                        };
+                        // Ring: chain A now, chain B two edges later.
+                        self.ring_wa[pi] = if valid_tag.is_some() {
+                            respace_to_two24(tail_a)
+                        } else {
+                            0
+                        };
+                        let buf = self.tailb_buf[pi];
+                        self.ring_wb[pi] = buf[1];
+                        self.tailb_buf[pi] = [
+                            if valid_tag.is_some() {
+                                respace_to_two24(tail_b)
                             } else {
-                                (0, 0)
-                            };
-                            d_next[j] = d_now;
-                            let (ceb1, ceb2, b_bus) = match cfg.variant {
-                                OsVariant::Enhanced => {
-                                    // ej%4 == 2 -> load oc1 into B1;
-                                    // ej%4 == 3 -> load oc0 into B2.
-                                    if feeding && phi == 2 {
-                                        (true, false, wt(ic, ob * cfg.ocs() + 2 * o + 1))
-                                    } else if feeding && phi == 3 {
-                                        (false, true, wt(ic, ob * cfg.ocs() + 2 * o))
-                                    } else {
-                                        (false, false, 0)
-                                    }
-                                }
-                                OsVariant::Official => {
-                                    // Reload B2 every edge with the
-                                    // weight the next M-capture needs.
-                                    let m = ej + 1;
-                                    let b = match tag_of_m(m) {
-                                        Some((_, oc, mr)) if mr < rounds => {
-                                            let ic_m = mr * ics_round + i * len + j;
-                                            wt(ic_m, ob * cfg.ocs() + 2 * o + oc)
-                                        }
-                                        _ => 0,
-                                    };
-                                    (false, true, b)
-                                }
-                            };
-                            (
-                                ChainDrive { use_b1, ceb1, ceb2 },
-                                a_port,
-                                d_prev[j],
-                                b_bus,
-                            )
-                        });
-                        self.d_delay[ci] = d_next;
-                        scratch.release_i64(d_prev);
+                                0
+                            },
+                            buf[0],
+                        ];
+                    }
+                }
+                // All rings advance in one bank-wide tick.
+                self.rings.tick(&self.ring_wa, &self.ring_wb);
+                // Capture final-round streams as they complete: the
+                // stream whose last chain-B word entered THIS edge.
+                if let Some(mb) = e.checked_sub(len + 2) {
+                    if let Some((wv, oc, rr)) = tag_of_m(mb) {
+                        if rr == rounds - 1 {
+                            for pi in 0..self.rings.rings() {
+                                let (lo, hi) = two24_lanes(self.rings.output(pi));
+                                self.slots[pi][wv][0][oc] = hi;
+                                self.slots[pi][wv][1][oc] = lo;
+                            }
+                        }
                     }
                 }
             }
-
-            // --- route tail words into accumulators ------------------
-            for g in 0..cfg.px_groups {
-                for o in 0..cfg.oc_pairs {
-                    let pi = self.pair_idx(g, o);
-                    let tail_a =
-                        self.chains[self.chain_idx(g, o, 0)].tail_p();
-                    let tail_b = if cfg.ic_groups > 1 {
-                        self.chains[self.chain_idx(g, o, 1)].tail_p()
-                    } else {
-                        0
-                    };
-                    let m = e.checked_sub(len);
-                    let valid_tag = m.and_then(tag_of_m).filter(|t| t.2 < rounds);
-
-                    match cfg.variant {
-                        OsVariant::Enhanced => {
-                            // Ring: chain A now, chain B two edges later.
-                            let wa = if valid_tag.is_some() {
-                                respace_to_two24(tail_a)
+            OsVariant::Official => {
+                // AddTree combines the pair, lanes unpacked with
+                // correction, slow accumulators add.
+                if let Some((wv, oc, _)) = valid_tag {
+                    for g in 0..cfg.px_groups {
+                        for o in 0..oc_pairs {
+                            let pi = self.pair_idx(g, o);
+                            let tail_a = self.chains.tail_p(self.chain_idx(g, o, 0));
+                            let tail_b = if ic_groups > 1 {
+                                self.chains.tail_p(self.chain_idx(g, o, 1))
                             } else {
                                 0
                             };
-                            let buf = self.tailb_buf[pi];
-                            let wb = buf[1];
-                            self.tailb_buf[pi] = [
-                                if valid_tag.is_some() {
-                                    respace_to_two24(tail_b)
-                                } else {
-                                    0
-                                },
-                                buf[0],
-                            ];
-                            self.rings[pi].tick(wa, wb);
-                            // Capture final-round streams as they
-                            // complete: the stream whose last chain-B
-                            // word entered THIS edge.
-                            if let Some(mb) = e.checked_sub(len + 2) {
-                                if let Some((wv, oc, rr)) = tag_of_m(mb) {
-                                    if rr == rounds - 1 {
-                                        let (lo, hi) =
-                                            two24_lanes(self.rings[pi].output());
-                                        self.slots[pi][wv][0][oc] = hi;
-                                        self.slots[pi][wv][1][oc] = lo;
-                                    }
-                                }
-                            }
-                        }
-                        OsVariant::Official => {
-                            // AddTree combines the pair, lanes unpacked
-                            // with correction, slow accumulators add.
-                            if let Some((wv, oc, _)) = valid_tag {
-                                let word = tail_a + tail_b;
-                                let (hi, lo) = packing::unpack_prod(word);
-                                self.slots[pi][wv][0][oc] += hi;
-                                self.slots[pi][wv][1][oc] += lo;
-                            }
+                            let word = tail_a + tail_b;
+                            let (hi, lo) = packing::unpack_prod(word);
+                            self.slots[pi][wv][0][oc] += hi;
+                            self.slots[pi][wv][1][oc] += lo;
                         }
                     }
                 }

@@ -40,10 +40,10 @@ mod inventory;
 mod ring;
 pub mod waveforms;
 
-pub use chain::MultChain;
+pub use chain::{ChainArray, ChainDrive, MultChain};
 pub use engine::OsEngine;
 pub use inventory::{os_inventory, os_timing};
-pub use ring::RingAccumulator;
+pub use ring::{RingAccumulator, RingBank};
 
 use crate::fabric::ClockPlan;
 

@@ -25,6 +25,13 @@
 //! independently. The bias rides the RND constant through the W mux on
 //! each stream's first pass — no CLB adder, the paper's point.
 //!
+//! All of an engine's rings share one control word per edge, so they
+//! live in a [`RingBank`]: two 1-row × `rings`-column [`DspArray`]s (one
+//! per ring stage — the stages have different attributes, DSP a
+//! registers its C feedback) advanced by two whole-array generic ticks.
+//! [`RingAccumulator`] is the bank-of-one view for unit tests and
+//! waveform probes.
+//!
 //! ## Exact schedule (engine contract)
 //!
 //! Edge numbering starts at 0 after reset. For stream `s ∈ 0..4` and
@@ -35,8 +42,8 @@
 //!   after edge `4r + s + 2` (and recirculates for round `r+1`).
 
 use crate::dsp::{
-    simd_lane, simd_pack, Attributes, ColumnCtrl, ColumnFeeds, DspColumn,
-    OpMode, SimdMode, WMux, XMux, YMux, ZMux,
+    simd_lane, simd_pack, ArrayFeeds, Attributes, ColumnCtrl, DspArray, OpMode,
+    SimdMode, WMux, XMux, YMux, ZMux,
 };
 use crate::packing;
 
@@ -65,26 +72,35 @@ pub fn two24_lanes(word: i64) -> (i64, i64) {
     )
 }
 
-/// The two-DSP ring accumulator. Each stage is a depth-1 [`DspColumn`]
-/// (the generic column tick with a per-edge [`ColumnCtrl`]) — the same
-/// SoA machinery as the multiplier chains, with the TWO24 accumulate
-/// riding the branch-free SIMD fast path.
-pub struct RingAccumulator {
-    col_a: DspColumn,
-    col_b: DspColumn,
-    /// The fabric delay pair closing the loop (S2P drain taps).
-    delay: [i64; 2],
-    /// Fast edges since reset.
+/// Every two-DSP ring accumulator of an engine as two SoA arrays: ring
+/// `r` is column `r` (depth 1) of both stage arrays. All rings share the
+/// per-edge OPMODE (the first-pass squelch depends only on the common
+/// edge counter), so one pair of whole-array ticks advances the lot.
+pub struct RingBank {
+    /// Stage a: A:B word in, C = ring feedback (registered — CREG is
+    /// the fourth loop stage), W = RND bias on first pass.
+    arr_a: DspArray,
+    /// Stage b: Z = stage a's PCOUT, Y = C = chain-B word (transparent).
+    arr_b: DspArray,
+    /// Per-ring fabric delay pair closing the loop (S2P drain taps).
+    delay: Vec<[i64; 2]>,
+    /// Fast edges since reset (common to all rings).
     edge: u64,
+    /// Staged per-ring feeds, refilled each edge.
+    a_hi: Vec<i64>,
+    b_lo: Vec<i64>,
+    c_fb: Vec<i64>,
+    c_b: Vec<i64>,
+    pcin: Vec<i64>,
 }
 
-impl RingAccumulator {
-    /// A ring whose column banks lease from `scratch` (the engine's
+impl RingBank {
+    /// `rings` rings whose banks lease from `scratch` (the engine's
     /// arena — so ring state shows up in the scratch telemetry like
     /// every other bank). `bias_lane` is added once per stream via the
     /// RND constant (same value on both pixel lanes; per-output biases
     /// are applied by the engine downstream when they differ).
-    pub fn new_in(bias_lane: i64, scratch: &mut crate::exec::Scratch) -> Self {
+    pub fn new_in(bias_lane: i64, rings: usize, scratch: &mut crate::exec::Scratch) -> Self {
         let rnd = simd_pack(
             SimdMode::Two24,
             &[trunc24(bias_lane), trunc24(bias_lane)],
@@ -96,40 +112,55 @@ impl RingAccumulator {
             creg: true,
             ..Attributes::ring_accumulator(rnd)
         };
-        RingAccumulator {
-            col_a: DspColumn::new_in(a_attrs, 1, scratch),
-            col_b: DspColumn::new_in(
-                Attributes::ring_accumulator(rnd),
-                1,
-                scratch,
-            ),
-            delay: [0; 2],
+        RingBank {
+            arr_a: DspArray::new_in(a_attrs, 1, rings, scratch),
+            arr_b: DspArray::new_in(Attributes::ring_accumulator(rnd), 1, rings, scratch),
+            delay: vec![[0; 2]; rings],
             edge: 0,
+            a_hi: vec![0; rings],
+            b_lo: vec![0; rings],
+            c_fb: vec![0; rings],
+            c_b: vec![0; rings],
+            pcin: vec![0; rings],
         }
     }
 
-    /// A free-standing ring (fresh allocations, no arena).
-    pub fn new(bias_lane: i64) -> Self {
-        Self::new_in(bias_lane, &mut crate::exec::Scratch::new())
+    /// A free-standing bank (fresh allocations, no arena).
+    pub fn new(bias_lane: i64, rings: usize) -> Self {
+        Self::new_in(bias_lane, rings, &mut crate::exec::Scratch::new())
     }
 
-    /// One Clk×2 edge. `chain_a` / `chain_b` are TWO24-respaced psum
-    /// words per the module-docs schedule (zero when idle/draining).
-    pub fn tick(&mut self, chain_a: i64, chain_b: i64) {
+    /// Number of rings in the bank.
+    pub fn rings(&self) -> usize {
+        self.arr_a.cols()
+    }
+
+    /// One Clk×2 edge for every ring. `chain_a[r]` / `chain_b[r]` are
+    /// ring `r`'s TWO24-respaced psum words per the module-docs schedule
+    /// (zero when idle/draining).
+    pub fn tick(&mut self, chain_a: &[i64], chain_b: &[i64]) {
+        let n = self.arr_a.cols();
+        debug_assert_eq!(chain_a.len(), n);
+        debug_assert_eq!(chain_b.len(), n);
         // The word captured into DSP a's A:B on the previous edge
         // combines *this* edge; it belongs to stream (edge-1) mod 4 of
         // round (edge-1)/4. On its first round the feedback path is
         // squelched and the bias enters through W=RND.
         let first_pass = self.edge >= 1 && self.edge <= RING_STREAMS as u64;
-        let feedback = self.delay[1];
-
-        // Pre-edge cascade value (PCOUT is the registered P).
-        let a_pcout = self.col_a.p(0);
+        for r in 0..n {
+            let wa = chain_a[r];
+            self.a_hi[r] = (wa >> 18) & ((1 << 30) - 1);
+            self.b_lo[r] = wa & ((1 << 18) - 1);
+            self.c_fb[r] = self.delay[r][1];
+            // Pre-edge cascade value (PCOUT is the registered P).
+            self.pcin[r] = self.arr_a.p(r, 0);
+            self.c_b[r] = chain_b[r];
+        }
 
         // DSP a: P = X(A:B = chainA word, registered last edge)
-        //           + Y(C = feedback, transparent)  [0 on first pass]
+        //           + Y(C = feedback, registered)   [0 on first pass]
         //           + W(RND)                        [first pass only]
-        self.col_a.tick(
+        self.arr_a.tick(
             &ColumnCtrl {
                 opmode: OpMode {
                     x: XMux::Ab,
@@ -139,16 +170,16 @@ impl RingAccumulator {
                 },
                 ..ColumnCtrl::default()
             },
-            &ColumnFeeds {
-                a: &[(chain_a >> 18) & ((1 << 30) - 1)],
-                b: &[chain_a & ((1 << 18) - 1)],
-                c: &[feedback],
-                ..ColumnFeeds::default()
+            &ArrayFeeds {
+                a: &self.a_hi,
+                b: &self.b_lo,
+                c: &self.c_fb,
+                ..ArrayFeeds::default()
             },
         );
 
         // DSP b: P = Z(PCIN = DSP a's pre-edge P) + Y(C = chainB word).
-        self.col_b.tick(
+        self.arr_b.tick(
             &ColumnCtrl {
                 opmode: OpMode {
                     x: XMux::Zero,
@@ -158,22 +189,25 @@ impl RingAccumulator {
                 },
                 ..ColumnCtrl::default()
             },
-            &ColumnFeeds {
-                c: &[chain_b],
-                pcin0: a_pcout,
-                ..ColumnFeeds::default()
+            &ArrayFeeds {
+                c: &self.c_b,
+                pcin0: &self.pcin,
+                ..ArrayFeeds::default()
             },
         );
 
-        // Close the ring through the delay pair.
-        self.delay[1] = self.delay[0];
-        self.delay[0] = self.col_b.p(0);
+        // Close every ring through its delay pair.
+        for r in 0..n {
+            self.delay[r][1] = self.delay[r][0];
+            self.delay[r][0] = self.arr_b.p(r, 0);
+        }
         self.edge += 1;
     }
 
-    /// DSP b's post-edge P — the stream total that just completed.
-    pub fn output(&self) -> i64 {
-        self.col_b.p(0)
+    /// Ring `r`'s DSP b post-edge P — the stream total that just
+    /// completed.
+    pub fn output(&self, ring: usize) -> i64 {
+        self.arr_b.p(ring, 0)
     }
 
     /// Fast edges ticked since reset.
@@ -182,13 +216,55 @@ impl RingAccumulator {
     }
 
     /// Synchronous reset, in place: the bias stays folded into the two
-    /// columns' RND attribute, so nothing reallocates — `reset_pass`
-    /// calls this per ring at the start of every OS pass.
+    /// stage arrays' RND attribute, so nothing reallocates —
+    /// `reset_pass` calls this at the start of every OS pass.
     pub fn reset(&mut self) {
-        self.col_a.reset();
-        self.col_b.reset();
-        self.delay = [0; 2];
+        self.arr_a.reset();
+        self.arr_b.reset();
+        for d in &mut self.delay {
+            *d = [0; 2];
+        }
         self.edge = 0;
+    }
+}
+
+/// One two-DSP ring accumulator — the bank-of-one view of [`RingBank`],
+/// kept for unit tests and waveform probes.
+pub struct RingAccumulator {
+    bank: RingBank,
+}
+
+impl RingAccumulator {
+    /// A ring whose banks lease from `scratch`; see [`RingBank::new_in`].
+    pub fn new_in(bias_lane: i64, scratch: &mut crate::exec::Scratch) -> Self {
+        RingAccumulator {
+            bank: RingBank::new_in(bias_lane, 1, scratch),
+        }
+    }
+
+    /// A free-standing ring (fresh allocations, no arena).
+    pub fn new(bias_lane: i64) -> Self {
+        Self::new_in(bias_lane, &mut crate::exec::Scratch::new())
+    }
+
+    /// One Clk×2 edge; see [`RingBank::tick`].
+    pub fn tick(&mut self, chain_a: i64, chain_b: i64) {
+        self.bank.tick(&[chain_a], &[chain_b]);
+    }
+
+    /// DSP b's post-edge P — the stream total that just completed.
+    pub fn output(&self) -> i64 {
+        self.bank.output(0)
+    }
+
+    /// Fast edges ticked since reset.
+    pub fn edges(&self) -> u64 {
+        self.bank.edges()
+    }
+
+    /// Synchronous reset, in place; see [`RingBank::reset`].
+    pub fn reset(&mut self) {
+        self.bank.reset();
     }
 }
 
@@ -298,6 +374,37 @@ mod tests {
         for s in 0..RING_STREAMS {
             assert_eq!(got[s].1, 0, "hi lane clean, stream {s}");
             assert_eq!(got[s].0, 400_000, "lo lane sums, stream {s}");
+        }
+    }
+
+    /// A bank of rings with per-ring inputs must match independent
+    /// single accumulators bit-for-bit.
+    #[test]
+    fn ring_bank_matches_independent_rings() {
+        let rings = 3usize;
+        let mut bank = RingBank::new(13, rings);
+        let mut singles: Vec<RingAccumulator> =
+            (0..rings).map(|_| RingAccumulator::new(13)).collect();
+        let mut rng = XorShift::new(21);
+        for e in 0..40u64 {
+            let mut wa = vec![0i64; rings];
+            let mut wb = vec![0i64; rings];
+            for r in 0..rings {
+                wa[r] = respace_to_two24(
+                    (rng.i8_in(-50, 50) as i64) * (1 << 18) + rng.i8_in(-50, 50) as i64,
+                );
+                wb[r] = respace_to_two24(
+                    (rng.i8_in(-50, 50) as i64) * (1 << 18) + rng.i8_in(-50, 50) as i64,
+                );
+            }
+            bank.tick(&wa, &wb);
+            for (r, single) in singles.iter_mut().enumerate() {
+                single.tick(wa[r], wb[r]);
+            }
+            for (r, single) in singles.iter().enumerate() {
+                assert_eq!(bank.output(r), single.output(), "ring {r} edge {e}");
+            }
+            assert_eq!(bank.edges(), e + 1);
         }
     }
 }

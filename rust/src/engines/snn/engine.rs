@@ -3,7 +3,7 @@
 use super::{snn_inventory, snn_timing, SnnConfig, SnnVariant};
 use crate::cost::{ResourceInventory, TimingModel};
 use crate::dsp::{
-    simd_lane, simd_pack, Attributes, CascadeTap, ColumnCtrl, DspColumn,
+    simd_lane, simd_pack, Attributes, CascadeTap, ColumnCtrl, DspArray,
     InputSource, RowFeeds, SimdMode,
 };
 use crate::engines::{Engine, EngineError, GemmRun, RunStats};
@@ -16,10 +16,14 @@ use crate::workload::{MatI32, MatI8};
 pub struct SnnEngine {
     cfg: SnnConfig,
     name: String,
-    /// One SoA register column per chain (`chain_len` slices deep):
-    /// `chains[c]`. Spike bits become per-edge mux masks, so a whole
-    /// chain advances in one [`DspColumn::tick_snn_crossbar`] pass.
-    chains: Vec<DspColumn>,
+    /// Every chain as one SoA array: chain `c` is column `c`
+    /// (`chain_len` slices deep). Spike bits become per-chain mux
+    /// masks, so the whole crossbar advances in one
+    /// [`DspArray::tick_snn_crossbar`] pass.
+    array: DspArray,
+    /// Per-chain spike-select masks, restaged each crossbar cycle.
+    x_masks: Vec<u64>,
+    y_masks: Vec<u64>,
     /// CLB ping-pong shadow for the C weight set (both variants), and
     /// for the A:B set too in the FireFly variant.
     c_bank: FfBank,
@@ -59,11 +63,10 @@ impl SnnEngine {
             ..Attributes::firefly_crossbar()
         };
         assert!(cfg.chain_len <= 64, "spike masks carry one bit per slice");
-        // The chains' SoA register banks lease from the engine's arena.
+        // The whole crossbar's SoA register banks lease from the
+        // engine's arena.
         let mut scratch = Scratch::new();
-        let chains = (0..cfg.chains)
-            .map(|_| DspColumn::new_in(attrs, cfg.chain_len, &mut scratch))
-            .collect();
+        let array = DspArray::new_in(attrs, cfg.chain_len, cfg.chains, &mut scratch);
         let slices = cfg.chains * cfg.chain_len;
         SnnEngine {
             name: format!(
@@ -72,7 +75,9 @@ impl SnnEngine {
                 cfg.pre(),
                 cfg.pre()
             ),
-            chains,
+            array,
+            x_masks: vec![0; cfg.chains],
+            y_masks: vec![0; cfg.chains],
             c_bank: FfBank::new(slices, 32, ClockDomain::Slow),
             ab_bank: FfBank::new(
                 if cfg.variant == SnnVariant::FireFly { slices } else { 0 },
@@ -134,10 +139,10 @@ impl SnnEngine {
                 // Commit into the DSP: A:B via the input pipelines
                 // (enhanced: modeled as the cascade-shifted value being
                 // latched by the A2/B2 hold pulse), C via the C
-                // register — one slice at a time, so the column's
-                // row-tick path drives bank element `j` alone.
-                let chain = &mut self.chains[c];
-                chain.tick_row(
+                // register — one slice at a time, so the array's
+                // row-tick path drives bank element `(c, j)` alone.
+                self.array.tick_row(
+                    c,
                     j,
                     &ColumnCtrl {
                         cep: false,
@@ -153,7 +158,8 @@ impl SnnEngine {
                     },
                 );
                 // Second edge moves A1/B1 -> A2/B2 (hold registers).
-                chain.tick_row(
+                self.array.tick_row(
+                    c,
                     j,
                     &ColumnCtrl {
                         cep: false,
@@ -184,7 +190,7 @@ impl SnnEngine {
         let cfg = self.cfg;
         let len = cfg.chain_len;
         let t_steps = train.steps;
-        for (c, chain) in self.chains.iter_mut().enumerate() {
+        for c in 0..cfg.chains {
             // The spike bits become per-row wide-bus mux selects
             // (bit j: X = A:B for spike 2j, Y = C for spike 2j+1).
             let (mut x_ab, mut y_c) = (0u64, 0u64);
@@ -209,13 +215,18 @@ impl SnnEngine {
                     y_c |= 1 << j;
                 }
             }
-            chain.tick_snn_crossbar(x_ab, y_c);
-            // Tail latency: slice j's ALU registers at cycle t+j (no M
-            // reg in the crossbar path), so the tail P carries timestep
-            // `cycle - (len-1)`.
-            let t_out = cycle as isize - (len as isize - 1);
-            if t_out >= 0 && (t_out as usize) < t_steps {
-                let p = chain.p(len - 1);
+            self.x_masks[c] = x_ab;
+            self.y_masks[c] = y_c;
+        }
+        // Every chain advances in a single array-wide bank pass.
+        self.array.tick_snn_crossbar(&self.x_masks, &self.y_masks);
+        // Tail latency: slice j's ALU registers at cycle t+j (no M
+        // reg in the crossbar path), so the tail P carries timestep
+        // `cycle - (len-1)`.
+        let t_out = cycle as isize - (len as isize - 1);
+        if t_out >= 0 && (t_out as usize) < t_steps {
+            for c in 0..cfg.chains {
+                let p = self.array.p(c, len - 1);
                 for lane in 0..4 {
                     let v = simd_lane(SimdMode::Four12, p, lane) as i32;
                     out[t_out as usize * cfg.post_per_pass() + c * 4 + lane] = v;
@@ -287,9 +298,7 @@ impl SnnEngine {
     }
 
     pub fn reset(&mut self) {
-        for chain in &mut self.chains {
-            chain.reset();
-        }
+        self.array.reset();
     }
 }
 

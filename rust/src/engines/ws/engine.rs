@@ -3,7 +3,7 @@
 use super::inventory::{ws_inventory, ws_timing};
 use super::{WsConfig, WsVariant};
 use crate::cost::{ResourceInventory, TimingModel};
-use crate::dsp::{Attributes, ColumnCtrl, ColumnFeeds, DspColumn, RowFeeds};
+use crate::dsp::{ArrayFeeds, Attributes, ColumnCtrl, DspArray, RowFeeds};
 use crate::engines::{Engine, EngineError, GemmRun, RunStats};
 use crate::exec::{self, Clocking, FillPlan, Scratch, TileKernel, TilePlan};
 use crate::fabric::{ClockDomain, ClockPlan, FfBank, StagingChain};
@@ -26,10 +26,12 @@ fn pipe_latency(variant: WsVariant) -> usize {
 pub struct WsEngine {
     cfg: WsConfig,
     name: String,
-    /// One SoA register column per array column (`rows` slices deep):
-    /// `columns[c]`. The scalar `Dsp48e2` cell stays the golden
-    /// reference; `tests/column_props.rs` holds the two bit-identical.
-    columns: Vec<DspColumn>,
+    /// All columns' register state as one set of array-wide SoA banks
+    /// (`[col][row]` layout): a full-array cycle is one bank pass, not
+    /// a per-column loop. The scalar `Dsp48e2` cell stays the golden
+    /// reference and `DspColumn` the mid-level oracle;
+    /// `tests/array_props.rs` holds all three bit-identical.
+    array: DspArray,
     /// Per-row activation staging chains (packed pair or single act).
     staging: Vec<StagingChain>,
     /// CLB weight ping-pong bank (ClbFetch / Libano); empty otherwise.
@@ -73,9 +75,7 @@ impl WsEngine {
         // The register banks lease from the engine's own arena, like
         // every other hot-loop buffer.
         let mut scratch = Scratch::new();
-        let columns = (0..cfg.cols)
-            .map(|_| DspColumn::new_in(pe_attrs, cfg.rows, &mut scratch))
-            .collect();
+        let array = DspArray::new_in(pe_attrs, cfg.rows, cfg.cols, &mut scratch);
         let act_width = if cfg.variant.packed() { 16 } else { 8 };
         let staging = (0..cfg.rows)
             .map(|_| StagingChain::new(cfg.cols.max(1), act_width, ClockDomain::Slow))
@@ -94,7 +94,7 @@ impl WsEngine {
                 cfg.cols
             ),
             cfg,
-            columns,
+            array,
             staging,
             wgt_bank,
             stats_template: RunStats::default(),
@@ -130,7 +130,7 @@ impl WsEngine {
     }
 
     /// Load a stationary weight tile (K=rows × N<=cols), modeling the
-    /// variant's delivery path through the generic column tick — fills
+    /// variant's delivery path through the generic array tick — fills
     /// are a handful of edges per tile, so only the payload stream gets
     /// a specialized path. Cycle accounting comes from
     /// [`WsEngine::fill_plan`].
@@ -151,12 +151,12 @@ impl WsEngine {
         };
         match self.cfg.variant {
             WsVariant::DspFetch => {
-                // Stream down the B1/BCIN chain (rows cycles, normally
-                // overlapped with compute), then one CEB2 swap pulse.
-                // Columns are independent during fill, so each column
-                // consumes its weight column in one pass (`col_iter`:
-                // no per-column copy); the cascade reads are the
-                // column tick's neighboring-bank taps.
+                // Stream down every column's B1/BCIN chain at once
+                // (rows edges, normally overlapped with compute), then
+                // one CEB2 swap pulse. Each edge feeds every column its
+                // next weight over the per-column `bcin0` slice; the
+                // cascade reads are the array tick's neighboring-bank
+                // taps.
                 let shift = ColumnCtrl {
                     ceb2: false,
                     cep: false,
@@ -165,27 +165,28 @@ impl WsEngine {
                     cea2: false,
                     ..ColumnCtrl::default()
                 };
-                for (c, col) in self.columns.iter_mut().enumerate() {
-                    let mut feed =
-                        (c < w.cols).then(|| w.col_iter(c).rev());
-                    for _t in 0..rows {
-                        let wv = feed
-                            .as_mut()
-                            .and_then(|f| f.next())
-                            .unwrap_or(0) as i64;
-                        col.tick(
-                            &shift,
-                            &ColumnFeeds {
-                                bcin0: wv,
-                                ..ColumnFeeds::default()
-                            },
-                        );
+                let mut bcin0 = scratch.lease_i64(cols);
+                for t in 0..rows {
+                    for (c, slot) in bcin0.iter_mut().enumerate() {
+                        // Bottom row first: the chain lands the weight
+                        // column bottom-up.
+                        *slot = if c < w.cols {
+                            w.at(rows - 1 - t, c) as i64
+                        } else {
+                            0
+                        };
                     }
+                    self.array.tick(
+                        &shift,
+                        &ArrayFeeds {
+                            bcin0: &bcin0,
+                            ..ArrayFeeds::default()
+                        },
+                    );
                 }
+                scratch.release_i64(bcin0);
                 // Swap pulse: every B2 captures its B1 neighbor value.
-                for col in self.columns.iter_mut() {
-                    col.tick(&swap, &ColumnFeeds::default());
-                }
+                self.array.tick(&swap, &ArrayFeeds::default());
             }
             WsVariant::ClbFetch | WsVariant::Libano => {
                 // Fill the CLB ping-pong bank (overlappable), then one
@@ -196,28 +197,29 @@ impl WsEngine {
                         self.wgt_bank.clock(r * cols + c, wv as i64, true);
                     }
                 }
-                let mut bvals = scratch.lease_i64(rows);
-                for (c, col) in self.columns.iter_mut().enumerate() {
-                    for (r, slot) in bvals.iter_mut().enumerate() {
-                        *slot = self.wgt_bank.get(r * cols + c);
+                let mut bvals = scratch.lease_i64(rows * cols);
+                for c in 0..cols {
+                    for r in 0..rows {
+                        bvals[c * rows + r] = self.wgt_bank.get(r * cols + c);
                     }
-                    col.tick(
-                        &swap,
-                        &ColumnFeeds {
-                            b: &bvals,
-                            ..ColumnFeeds::default()
-                        },
-                    );
                 }
+                self.array.tick(
+                    &swap,
+                    &ArrayFeeds {
+                        b: &bvals,
+                        ..ArrayFeeds::default()
+                    },
+                );
                 scratch.release_i64(bvals);
             }
             WsVariant::TinyTpu => {
                 // Row-by-row load through the B port, array idle —
                 // one slice ticks per load edge, like the hardware.
                 for r in 0..rows {
-                    for (c, col) in self.columns.iter_mut().enumerate() {
+                    for c in 0..cols {
                         let wv = if c < w.cols { w.at(r, c) as i64 } else { 0 };
-                        col.tick_row(
+                        self.array.tick_row(
+                            c,
                             r,
                             &swap,
                             &RowFeeds {
@@ -231,12 +233,13 @@ impl WsEngine {
         }
     }
 
-    /// One streaming cycle: shift staging, drive every column, collect
-    /// finished waves. The fill → stream → drain loop itself lives in
-    /// [`exec::run_tile`]; this is the WS datapath's cycle body —
-    /// per-row operands staged into the SoA feed banks, then the whole
-    /// cascade advanced by one [`DspColumn::tick_ws_stream`] pass (no
-    /// per-cell input structs, no cascade snapshot).
+    /// One streaming cycle: shift staging, drive the whole array,
+    /// collect finished waves. The fill → stream → drain loop itself
+    /// lives in [`exec::run_tile`]; this is the WS datapath's cycle
+    /// body — all columns' operands staged into two array-wide
+    /// `[col][row]` feed slices (each element written exactly once),
+    /// then every cascade advanced by one [`DspArray::tick_ws_stream`]
+    /// bank pass: zero per-column work in steady state.
     #[allow(clippy::too_many_arguments)]
     fn stream_cycle(
         &mut self,
@@ -283,9 +286,11 @@ impl WsEngine {
             self.staging[r].shift(v);
         }
 
-        // Drive every column: stage the per-row operands into the SoA
-        // feed banks, then advance the cascade in one pass.
-        for (c, col) in self.columns.iter_mut().enumerate() {
+        // Stage the whole array's operands into the `[col][row]` feed
+        // slices, then advance every cascade in one bank pass.
+        let cols = self.cfg.cols;
+        for c in 0..cols {
+            let base = c * rows;
             for r in 0..rows {
                 let staged = if broadcast {
                     // Broadcast: all columns see the chain input
@@ -297,15 +302,15 @@ impl WsEngine {
                 if packed {
                     let hi = ((staged >> 8) & 0xFF) as i8 as i64;
                     let lo = (staged & 0xFF) as i8 as i64;
-                    a_feed[r] = hi << packing::LANE_BITS;
-                    d_feed[r] = lo;
+                    a_feed[base + r] = hi << packing::LANE_BITS;
+                    d_feed[base + r] = lo;
                 } else {
-                    a_feed[r] = (staged & 0xFF) as i8 as i64;
-                    d_feed[r] = 0;
+                    a_feed[base + r] = (staged & 0xFF) as i8 as i64;
+                    d_feed[base + r] = 0;
                 }
             }
-            col.tick_ws_stream(a_feed, d_feed);
         }
+        self.array.tick_ws_stream(a_feed, d_feed);
 
         // Collect: column c's cascade bottom holds the result for
         // wave `t - (rows-1) - skew(c) - PIPE_LATENCY` *after* this
@@ -317,7 +322,7 @@ impl WsEngine {
             if wave < 0 || wave as usize >= waves {
                 continue;
             }
-            let p = self.columns[c].p(rows - 1);
+            let p = self.array.p(c, rows - 1);
             if packed {
                 let (hi, lo) = packing::unpack_prod(p);
                 let row_hi = 2 * wave as usize;
@@ -373,14 +378,12 @@ impl WsEngine {
 
     /// The live weight currently held by PE (r, c) — from B2.
     fn wgt_value(&self, r: usize, c: usize) -> i64 {
-        self.columns[c].regs(r).b2
+        self.array.regs(c, r).b2
     }
 
     /// Reset all sequential state.
     pub fn reset(&mut self) {
-        for col in &mut self.columns {
-            col.reset();
-        }
+        self.array.reset();
         for chain in &mut self.staging {
             chain.reset();
         }
@@ -395,9 +398,7 @@ impl WsEngine {
     /// post-fill state a fresh `reset` + `fill_weights` would leave —
     /// which is what makes skipping the fill bit-exact.
     fn reset_stream_state(&mut self) {
-        for col in &mut self.columns {
-            col.reset_keep_weights();
-        }
+        self.array.reset_keep_weights();
         for chain in &mut self.staging {
             chain.reset();
         }
@@ -407,7 +408,7 @@ impl WsEngine {
     fn staging_activity(&self) -> f64 {
         let total_ff: usize = self.staging.iter().map(|s| s.ff_count()).sum();
         let toggles: u64 = self.staging.iter().map(|s| s.toggles()).sum();
-        let cycles = self.columns[0].cycles().max(1);
+        let cycles = self.array.cycles().max(1);
         if total_ff == 0 {
             return 0.0;
         }
@@ -425,11 +426,12 @@ struct WsTileKernel<'a> {
     latency: usize,
     /// Weights already resident: skip the fill, account it as saved.
     reuse: bool,
-    /// Per-row operand staging for the SoA column tick, leased from
-    /// the scratch arena during fill (§Perf iteration 3: the cascade
-    /// snapshot and the per-slice `DspInputs` template both fell away
-    /// with the column rewrite — these two banks are all the cycle
-    /// body stages).
+    /// Array-wide `[col][row]` operand staging for the SoA array tick,
+    /// leased from the scratch arena once per tile and reused across
+    /// every stream cycle (the arena's reuse-hit telemetry counts the
+    /// across-tile reuse). The per-column rebuild of the old
+    /// `rows`-long buffers fell away with the array rewrite: each
+    /// element is written exactly once per cycle.
     a_feed: Vec<i64>,
     d_feed: Vec<i64>,
 }
@@ -479,8 +481,9 @@ impl TileKernel for WsTileKernel<'_> {
     }
 
     fn fill(&mut self, scratch: &mut Scratch, _stats: &mut RunStats) {
-        self.a_feed = scratch.lease_i64(self.eng.cfg.rows);
-        self.d_feed = scratch.lease_i64(self.eng.cfg.rows);
+        let n = self.eng.cfg.rows * self.eng.cfg.cols;
+        self.a_feed = scratch.lease_i64(n);
+        self.d_feed = scratch.lease_i64(n);
         if !self.reuse {
             self.eng.fill_weights(self.w, scratch);
         }

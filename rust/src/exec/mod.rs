@@ -23,4 +23,4 @@ pub mod scratch;
 
 pub use self::core::{run_tile, TileKernel};
 pub use self::plan::{Clocking, FillPlan, TilePlan};
-pub use self::scratch::{PoolStats, Scratch, ScratchStats};
+pub use self::scratch::{AlignedLease, PoolStats, Scratch, ScratchStats};

@@ -97,6 +97,36 @@ impl ScratchStats {
     }
 }
 
+/// An `i64` lease whose payload starts on a caller-chosen power-of-two
+/// byte boundary. The lease is backed by an ordinary pool buffer,
+/// over-allocated by at most `align/8 - 1` elements so an aligned
+/// window of the requested length always fits; `Deref` exposes exactly
+/// that window. Obtained from [`Scratch::lease_i64_aligned`], returned
+/// with [`Scratch::release_i64_aligned`] — the backing buffer goes back
+/// to the plain `i64` pool, so alignment costs no separate free list
+/// and the existing telemetry counts these leases like any other.
+#[derive(Debug, Default)]
+pub struct AlignedLease {
+    buf: Vec<i64>,
+    offset: usize,
+    len: usize,
+}
+
+impl std::ops::Deref for AlignedLease {
+    type Target = [i64];
+    #[inline(always)]
+    fn deref(&self) -> &[i64] {
+        &self.buf[self.offset..self.offset + self.len]
+    }
+}
+
+impl std::ops::DerefMut for AlignedLease {
+    #[inline(always)]
+    fn deref_mut(&mut self) -> &mut [i64] {
+        &mut self.buf[self.offset..self.offset + self.len]
+    }
+}
+
 /// Pooled scratch buffers, keyed by element type.
 #[derive(Debug, Default)]
 pub struct Scratch {
@@ -150,6 +180,37 @@ impl Scratch {
         self.combined_release(bytes);
         self.stats.i64_pool.on_release(bytes);
         self.i64_pool.push(buf);
+    }
+
+    /// Lease a zero-filled `i64` buffer of `len` elements whose first
+    /// element sits on an `align`-byte boundary (`align` a power of two
+    /// ≥ 8). Served from the plain `i64` pool — the buffer is
+    /// over-allocated by up to `align/8 - 1` elements and the aligned
+    /// window selected at lease time, so pooled capacity is reused
+    /// across aligned and unaligned leases alike and the existing
+    /// lease/reuse/high-water telemetry counts the whole backing
+    /// buffer. The array-wide DSP register banks lease through this so
+    /// their chunks start on cache-line/vector-width boundaries.
+    pub fn lease_i64_aligned(&mut self, len: usize, align: usize) -> AlignedLease {
+        const ELEM: usize = std::mem::size_of::<i64>();
+        assert!(
+            align.is_power_of_two() && align >= ELEM,
+            "align must be a power of two >= {ELEM}"
+        );
+        let pad = align / ELEM - 1;
+        let buf = self.lease_i64(len + pad);
+        // A `Vec<i64>` allocation is 8-byte aligned, so the byte gap to
+        // the next `align` boundary is a whole number of elements.
+        let addr = buf.as_ptr() as usize;
+        let offset = (align - addr % align) % align / ELEM;
+        debug_assert!(offset <= pad);
+        AlignedLease { buf, offset, len }
+    }
+
+    /// Return an aligned lease's backing buffer to the `i64` pool (same
+    /// length contract as [`Scratch::release_i64`]).
+    pub fn release_i64_aligned(&mut self, lease: AlignedLease) {
+        self.release_i64(lease.buf);
     }
 
     /// Lease a zero-filled `i32` buffer of exactly `len` elements.
@@ -263,6 +324,52 @@ mod tests {
         let st = s.stats();
         assert_eq!(st.i64_pool.leases, 2);
         assert_eq!(st.i64_pool.reuse_hits, 0);
+    }
+
+    #[test]
+    fn aligned_lease_payload_starts_on_the_boundary() {
+        let mut s = Scratch::new();
+        for align in [8usize, 16, 64, 128] {
+            let mut l = s.lease_i64_aligned(37, align);
+            assert_eq!(l.as_ptr() as usize % align, 0, "align {align}");
+            assert_eq!(l.len(), 37);
+            assert!(l.iter().all(|&v| v == 0));
+            l[36] = -5; // the whole window is writable
+            s.release_i64_aligned(l);
+        }
+    }
+
+    #[test]
+    fn pooled_aligned_buffers_are_reused() {
+        let mut s = Scratch::new();
+        let a = s.lease_i64_aligned(100, 64);
+        let backing = a.buf.as_ptr();
+        s.release_i64_aligned(a);
+        assert_eq!(s.pooled(), 1);
+        let b = s.lease_i64_aligned(100, 64);
+        // Same backing allocation served the second lease — counted as
+        // a reuse hit by the ordinary i64-pool telemetry.
+        assert_eq!(b.buf.as_ptr(), backing);
+        assert_eq!(b.as_ptr() as usize % 64, 0);
+        let st = s.stats();
+        assert_eq!(st.i64_pool.leases, 2);
+        assert_eq!(st.i64_pool.reuse_hits, 1);
+        s.release_i64_aligned(b);
+        // Aligned and plain leases share one pool: the released backing
+        // buffer (100 + 7 elements) can serve a plain lease too.
+        let c = s.lease_i64(64);
+        assert_eq!(s.stats().i64_pool.reuse_hits, 2);
+        s.release_i64(c);
+    }
+
+    #[test]
+    fn aligned_lease_charges_the_padded_length() {
+        let mut s = Scratch::new();
+        let l = s.lease_i64_aligned(8, 64);
+        // 8 requested + 7 padding elements = 120 bytes on lease.
+        assert_eq!(s.stats().i64_pool.leased_bytes, 120);
+        s.release_i64_aligned(l);
+        assert_eq!(s.stats().i64_pool.leased_bytes, 0);
     }
 
     #[test]

@@ -1,0 +1,711 @@
+//! Property suite for the whole-array SoA datapath: [`DspColumn`] is
+//! the mid-level oracle (itself held bit-identical to the scalar
+//! [`Dsp48e2`] by `tests/column_props.rs`), and every [`DspArray`] path
+//! must be **bit-identical** to ticking one column per array column
+//! with the same controls and per-column feed slices:
+//!
+//! * the generic [`DspArray::tick`] under randomized control words
+//!   (every engine attribute profile, chunked and remainder row counts,
+//!   depth-1 and single-column edge cases, hold patterns);
+//! * [`DspArray::tick_row`] (single-slice fills), including the cycle
+//!   counter advancing only for slice (0, 0);
+//! * the three array-wide fast paths (`tick_ws_stream`,
+//!   `tick_os_chain`, `tick_snn_crossbar`) against per-column fast-path
+//!   calls, with `cycles()` / `mult_toggles()` parity as a regression
+//!   gate on the counter semantics;
+//! * [`DspArray::reset_keep_weights`] resumption (the WS residency
+//!   contract) across every Table-I profile;
+//! * the banked ring accumulator ([`RingBank`], depth-1 columns)
+//!   against independent single rings;
+//! * end to end: all 8 [`EngineKind`]s still match the golden
+//!   interpreter through the service on the array datapath.
+
+use dsp48_systolic::coordinator::service::EngineKind;
+use dsp48_systolic::coordinator::{Job, Service, ServiceConfig};
+use dsp48_systolic::dsp::{
+    ArrayFeeds, Attributes, ColumnCtrl, ColumnFeeds, CHUNK_ROWS, DspArray,
+    DspColumn, InMode, MultSel, OpMode, RowFeeds, WMux, XMux, YMux, ZMux,
+};
+use dsp48_systolic::engines::os::{RingAccumulator, RingBank};
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::gemm::golden_gemm;
+use dsp48_systolic::workload::MatI8;
+use std::time::Duration;
+
+/// Array geometries every suite below sweeps: depth-1 and single-width
+/// edge cases, a sub-chunk depth, one exact [`CHUNK_ROWS`] chunk, and
+/// the paper's 14x14 (chunk + remainder rows).
+fn geometries() -> [(usize, usize); 5] {
+    [
+        (1, 4),
+        (5, 3),
+        (CHUNK_ROWS, 2),
+        (CHUNK_ROWS + 6, 2),
+        (CHUNK_ROWS + 6, 14),
+    ]
+}
+
+fn assert_matches(arr: &DspArray, cols: &[DspColumn], ctx: &str) {
+    for (c, col) in cols.iter().enumerate() {
+        for r in 0..col.rows() {
+            assert_eq!(arr.regs(c, r), col.regs(r), "slice ({c}, {r}): {ctx}");
+        }
+    }
+}
+
+/// `cycles()` and `mult_toggles()` must keep the per-column era's
+/// meaning: cycles = edges seen by slice (0, 0) (what the engines'
+/// activity models divide by), toggles = the sum over every slice.
+fn assert_counter_parity(arr: &DspArray, cols: &[DspColumn], ctx: &str) {
+    assert_eq!(arr.cycles(), cols[0].cycles(), "cycles: {ctx}");
+    let toggles: u64 = cols.iter().map(|c| c.mult_toggles()).sum();
+    assert_eq!(arr.mult_toggles(), toggles, "mult_toggles: {ctx}");
+}
+
+/// Every attribute profile the engines instantiate (same list the
+/// column suite proves against the scalar cell).
+fn attr_profiles() -> Vec<(&'static str, Attributes)> {
+    let snn = |variant_cascade: bool| Attributes {
+        a_input: if variant_cascade {
+            dsp48_systolic::dsp::InputSource::Cascade
+        } else {
+            dsp48_systolic::dsp::InputSource::Direct
+        },
+        b_input: if variant_cascade {
+            dsp48_systolic::dsp::InputSource::Cascade
+        } else {
+            dsp48_systolic::dsp::InputSource::Direct
+        },
+        a_cascade_tap: dsp48_systolic::dsp::CascadeTap::Reg1,
+        b_cascade_tap: dsp48_systolic::dsp::CascadeTap::Reg1,
+        creg: true,
+        ..Attributes::firefly_crossbar()
+    };
+    vec![
+        ("default MACC PE", Attributes::default()),
+        (
+            "ws dsp-fetch PE",
+            Attributes {
+                areg: 1,
+                ..Attributes::ws_prefetch_pe()
+            },
+        ),
+        (
+            "ws clb-fetch PE",
+            Attributes {
+                breg: 1,
+                amultsel: MultSel::Ad,
+                dreg: true,
+                adreg: true,
+                areg: 1,
+                ..Attributes::default()
+            },
+        ),
+        (
+            "ws tinytpu PE",
+            Attributes {
+                breg: 1,
+                areg: 1,
+                ..Attributes::default()
+            },
+        ),
+        ("os enhanced chain", Attributes::os_inmux_pe()),
+        (
+            "os official chain",
+            Attributes {
+                breg: 1,
+                amultsel: MultSel::Ad,
+                dreg: true,
+                adreg: true,
+                ..Attributes::default()
+            },
+        ),
+        ("snn enhanced crossbar", snn(true)),
+        ("snn firefly crossbar", snn(false)),
+        (
+            "ring stage a (TWO24)",
+            Attributes {
+                creg: true,
+                ..Attributes::ring_accumulator(12_345)
+            },
+        ),
+        ("ring stage b (TWO24)", Attributes::ring_accumulator(-777)),
+    ]
+}
+
+/// OPMODE combinations a real netlist can emit (X=M ⇔ Y=M enforced by
+/// the model).
+fn opmode_pool() -> Vec<OpMode> {
+    vec![
+        OpMode::MULT,
+        OpMode::MACC,
+        OpMode::MULT_CASCADE,
+        OpMode::C_CASCADE,
+        OpMode::C_ACC,
+        OpMode {
+            x: XMux::Ab,
+            y: YMux::Zero,
+            z: ZMux::Pcin,
+            w: WMux::Zero,
+        },
+        OpMode {
+            x: XMux::Zero,
+            y: YMux::C,
+            z: ZMux::Zero,
+            w: WMux::Rnd,
+        },
+        OpMode {
+            x: XMux::P,
+            y: YMux::AllOnes,
+            z: ZMux::PShift17,
+            w: WMux::P,
+        },
+        OpMode {
+            x: XMux::Ab,
+            y: YMux::C,
+            z: ZMux::PcinShift17,
+            w: WMux::C,
+        },
+    ]
+}
+
+fn random_ctrl(rng: &mut XorShift, opmodes: &[OpMode]) -> ColumnCtrl {
+    let bit = |rng: &mut XorShift| rng.chance(1, 2);
+    let hold_all = rng.chance(1, 8);
+    let ce = |rng: &mut XorShift| !hold_all && bit(rng);
+    ColumnCtrl {
+        inmode: InMode((rng.next_u64() & 0x1F) as u8),
+        opmode: opmodes[rng.below(opmodes.len() as u64) as usize],
+        alumode: if bit(rng) {
+            dsp48_systolic::dsp::AluMode::Add
+        } else {
+            dsp48_systolic::dsp::AluMode::ZMinus
+        },
+        cea1: ce(rng),
+        cea2: ce(rng),
+        ceb1: ce(rng),
+        ceb2: ce(rng),
+        ced: ce(rng),
+        cead: ce(rng),
+        cec: ce(rng),
+        cem: ce(rng),
+        cep: ce(rng),
+    }
+}
+
+fn random_words(rng: &mut XorShift, n: usize) -> Vec<i64> {
+    (0..n).map(|_| rng.next_u64() as i64).collect()
+}
+
+/// Slice a flat `[col][row]` operand buffer down to one column.
+fn col_slice(flat: &[i64], c: usize, rows: usize) -> &[i64] {
+    &flat[c * rows..(c + 1) * rows]
+}
+
+/// The generic array tick is bit-identical to one column tick per
+/// array column for every attribute profile, geometry (chunked and
+/// remainder row counts, depth-1, wide and narrow) and randomized
+/// control word — hold states, partial enables, per-column cascade
+/// entry feeds.
+#[test]
+fn generic_array_matches_columns_under_random_control() {
+    let opmodes = opmode_pool();
+    for (name, attrs) in attr_profiles() {
+        for (rows, cols) in geometries() {
+            let n = rows * cols;
+            let mut rng = XorShift::new(0xA881 + (rows * 31 + cols) as u64);
+            let mut arr = DspArray::new(attrs, rows, cols);
+            let mut refs: Vec<DspColumn> =
+                (0..cols).map(|_| DspColumn::new(attrs, rows)).collect();
+            for edge in 0..48 {
+                let ctrl = random_ctrl(&mut rng, &opmodes);
+                let a = random_words(&mut rng, n);
+                let b = random_words(&mut rng, n);
+                let c = random_words(&mut rng, n);
+                let d = random_words(&mut rng, n);
+                let acin0 = random_words(&mut rng, cols);
+                let bcin0 = random_words(&mut rng, cols);
+                let pcin0 = random_words(&mut rng, cols);
+                arr.tick(
+                    &ctrl,
+                    &ArrayFeeds {
+                        a: &a,
+                        b: &b,
+                        c: &c,
+                        d: &d,
+                        acin0: &acin0,
+                        bcin0: &bcin0,
+                        pcin0: &pcin0,
+                    },
+                );
+                for (ci, col) in refs.iter_mut().enumerate() {
+                    col.tick(
+                        &ctrl,
+                        &ColumnFeeds {
+                            a: col_slice(&a, ci, rows),
+                            b: col_slice(&b, ci, rows),
+                            c: col_slice(&c, ci, rows),
+                            d: col_slice(&d, ci, rows),
+                            acin0: acin0[ci],
+                            bcin0: bcin0[ci],
+                            pcin0: pcin0[ci],
+                        },
+                    );
+                }
+                assert_matches(&arr, &refs, &format!("{name} {rows}x{cols} edge {edge}"));
+            }
+            assert_counter_parity(&arr, &refs, &format!("{name} {rows}x{cols}"));
+        }
+    }
+}
+
+/// Single-slice ticks match the column's, and the array's cycle
+/// counter advances only when slice (0, 0) ticks — the denominator
+/// contract the engines' activity models rely on.
+#[test]
+fn tick_row_matches_columns_and_counts_only_slice_zero() {
+    let opmodes = opmode_pool();
+    let attrs = Attributes {
+        breg: 1,
+        areg: 1,
+        ..Attributes::default()
+    };
+    let (rows, cols) = (5usize, 3usize);
+    let mut rng = XorShift::new(0x11C4);
+    let mut arr = DspArray::new(attrs, rows, cols);
+    let mut refs: Vec<DspColumn> =
+        (0..cols).map(|_| DspColumn::new(attrs, rows)).collect();
+    for edge in 0..120 {
+        let (c, r) = (
+            rng.below(cols as u64) as usize,
+            rng.below(rows as u64) as usize,
+        );
+        let ctrl = random_ctrl(&mut rng, &opmodes);
+        let f = RowFeeds {
+            a: rng.next_u64() as i64,
+            b: rng.next_u64() as i64,
+            c: rng.next_u64() as i64,
+            d: rng.next_u64() as i64,
+            acin: rng.next_u64() as i64,
+            bcin: rng.next_u64() as i64,
+            pcin: rng.next_u64() as i64,
+        };
+        arr.tick_row(c, r, &ctrl, &f);
+        refs[c].tick_row(r, &ctrl, &f);
+        assert_matches(&arr, &refs, &format!("edge {edge} slice ({c}, {r})"));
+    }
+    // refs[0] advanced its counter only on its own row-0 ticks — the
+    // exact set of edges the array must have counted.
+    assert_eq!(arr.cycles(), refs[0].cycles());
+    let toggles: u64 = refs.iter().map(|c| c.mult_toggles()).sum();
+    assert_eq!(arr.mult_toggles(), toggles);
+}
+
+/// The Table-I WS profiles the stream fast path serves, with their
+/// operand shape (packed pre-adder drive or plain A×B).
+fn ws_profiles() -> [(&'static str, Attributes, bool); 3] {
+    [
+        (
+            "dsp-fetch",
+            Attributes {
+                areg: 1,
+                ..Attributes::ws_prefetch_pe()
+            },
+            true,
+        ),
+        (
+            "clb-fetch/libano",
+            Attributes {
+                breg: 1,
+                amultsel: MultSel::Ad,
+                dreg: true,
+                adreg: true,
+                areg: 1,
+                ..Attributes::default()
+            },
+            true,
+        ),
+        (
+            "tinytpu",
+            Attributes {
+                breg: 1,
+                areg: 1,
+                ..Attributes::default()
+            },
+            false,
+        ),
+    ]
+}
+
+/// Load one random stationary weight per slice into the array and the
+/// reference columns through the profile's delivery path (BCIN chain
+/// for cascade-B profiles, direct CEB2 swap otherwise) — all via the
+/// generic ticks, as the engines fill.
+fn load_ws_weights(
+    rng: &mut XorShift,
+    arr: &mut DspArray,
+    refs: &mut [DspColumn],
+    rows: usize,
+    cols: usize,
+) {
+    let swap = ColumnCtrl {
+        ceb1: false,
+        ceb2: true,
+        cep: false,
+        cem: false,
+        cea1: false,
+        cea2: false,
+        ..ColumnCtrl::default()
+    };
+    let w: Vec<i64> = (0..rows * cols).map(|_| rng.next_i8() as i64).collect();
+    if arr.attrs().b_input == dsp48_systolic::dsp::InputSource::Cascade {
+        let shift = ColumnCtrl {
+            ceb2: false,
+            cep: false,
+            cem: false,
+            cea1: false,
+            cea2: false,
+            ..ColumnCtrl::default()
+        };
+        for t in 0..rows {
+            // Bottom row first, like the engine's prefetch fill.
+            let bcin0: Vec<i64> =
+                (0..cols).map(|c| w[c * rows + (rows - 1 - t)]).collect();
+            arr.tick(
+                &shift,
+                &ArrayFeeds {
+                    bcin0: &bcin0,
+                    ..ArrayFeeds::default()
+                },
+            );
+            for (ci, col) in refs.iter_mut().enumerate() {
+                col.tick(
+                    &shift,
+                    &ColumnFeeds {
+                        bcin0: bcin0[ci],
+                        ..ColumnFeeds::default()
+                    },
+                );
+            }
+        }
+        arr.tick(&swap, &ArrayFeeds::default());
+        for col in refs.iter_mut() {
+            col.tick(&swap, &ColumnFeeds::default());
+        }
+    } else {
+        arr.tick(
+            &swap,
+            &ArrayFeeds {
+                b: &w,
+                ..ArrayFeeds::default()
+            },
+        );
+        for (ci, col) in refs.iter_mut().enumerate() {
+            col.tick(
+                &swap,
+                &ColumnFeeds {
+                    b: col_slice(&w, ci, rows),
+                    ..ColumnFeeds::default()
+                },
+            );
+        }
+    }
+}
+
+fn ws_operands(
+    rng: &mut XorShift,
+    n: usize,
+    packed: bool,
+) -> (Vec<i64>, Vec<i64>) {
+    let a: Vec<i64> = (0..n)
+        .map(|_| {
+            let v = rng.next_i8() as i64;
+            if packed {
+                v << 18
+            } else {
+                v
+            }
+        })
+        .collect();
+    let d: Vec<i64> = (0..n)
+        .map(|_| if packed { rng.next_i8() as i64 } else { 0 })
+        .collect();
+    (a, d)
+}
+
+/// `tick_ws_stream` over the whole array is bit-identical to the
+/// column fast path per column, for every Table-I profile and
+/// geometry — counters included.
+#[test]
+fn ws_stream_fast_path_matches_columns() {
+    for (name, attrs, packed) in ws_profiles() {
+        for (rows, cols) in geometries() {
+            let n = rows * cols;
+            let mut rng = XorShift::new(0x25A8 + (rows * 31 + cols) as u64);
+            let mut arr = DspArray::new(attrs, rows, cols);
+            let mut refs: Vec<DspColumn> =
+                (0..cols).map(|_| DspColumn::new(attrs, rows)).collect();
+            load_ws_weights(&mut rng, &mut arr, &mut refs, rows, cols);
+            assert_matches(&arr, &refs, &format!("{name} {rows}x{cols} post-fill"));
+
+            for edge in 0..3 * rows + 8 {
+                let (a, d) = ws_operands(&mut rng, n, packed);
+                arr.tick_ws_stream(&a, &d);
+                for (ci, col) in refs.iter_mut().enumerate() {
+                    col.tick_ws_stream(col_slice(&a, ci, rows), col_slice(&d, ci, rows));
+                }
+                assert_matches(&arr, &refs, &format!("{name} {rows}x{cols} edge {edge}"));
+            }
+            assert_counter_parity(&arr, &refs, &format!("{name} {rows}x{cols}"));
+        }
+    }
+}
+
+/// `tick_os_chain` with per-column skew masks is bit-identical to the
+/// column fast path per column, for both Table-II variants.
+#[test]
+fn os_chain_fast_path_matches_columns() {
+    let profiles = [
+        ("enhanced", Attributes::os_inmux_pe(), true),
+        (
+            "official",
+            Attributes {
+                breg: 1,
+                amultsel: MultSel::Ad,
+                dreg: true,
+                adreg: true,
+                ..Attributes::default()
+            },
+            false,
+        ),
+    ];
+    for (name, attrs, toggles_b1) in profiles {
+        for (rows, cols) in [(1usize, 3usize), (4, 3), (7, 8)] {
+            let n = rows * cols;
+            let mut rng = XorShift::new(0x05A8 + (rows * 31 + cols) as u64);
+            let mut arr = DspArray::new(attrs, rows, cols);
+            let mut refs: Vec<DspColumn> =
+                (0..cols).map(|_| DspColumn::new(attrs, rows)).collect();
+            for edge in 0..40 {
+                let a: Vec<i64> =
+                    (0..n).map(|_| (rng.next_i8() as i64) << 18).collect();
+                let d: Vec<i64> = (0..n).map(|_| rng.next_i8() as i64).collect();
+                let b: Vec<i64> = (0..n).map(|_| rng.next_i8() as i64).collect();
+                let mut use_b1 = vec![0u64; cols];
+                let mut ceb1 = vec![0u64; cols];
+                let mut ceb2 = vec![0u64; cols];
+                for c in 0..cols {
+                    for j in 0..rows {
+                        if toggles_b1 && rng.chance(1, 2) {
+                            use_b1[c] |= 1 << j;
+                        }
+                        if rng.chance(1, 3) {
+                            ceb1[c] |= 1 << j;
+                        }
+                        if rng.chance(1, 3) {
+                            ceb2[c] |= 1 << j;
+                        }
+                    }
+                }
+                arr.tick_os_chain(&a, &d, &b, &use_b1, &ceb1, &ceb2);
+                for (ci, col) in refs.iter_mut().enumerate() {
+                    col.tick_os_chain(
+                        col_slice(&a, ci, rows),
+                        col_slice(&d, ci, rows),
+                        col_slice(&b, ci, rows),
+                        use_b1[ci],
+                        ceb1[ci],
+                        ceb2[ci],
+                    );
+                }
+                assert_matches(&arr, &refs, &format!("{name} {rows}x{cols} edge {edge}"));
+            }
+            assert_counter_parity(&arr, &refs, &format!("{name} {rows}x{cols}"));
+        }
+    }
+}
+
+/// `tick_snn_crossbar` with per-column spike masks is bit-identical to
+/// the column fast path per column, for both Table-III variants —
+/// including the per-slice weight commit through `tick_row`.
+#[test]
+fn snn_crossbar_fast_path_matches_columns() {
+    for (name, attrs) in attr_profiles()
+        .into_iter()
+        .filter(|(n, _)| n.starts_with("snn"))
+    {
+        for (rows, cols) in [(1usize, 3usize), (5, 2), (16, 4)] {
+            let mut rng = XorShift::new(0x55A8 + (rows * 31 + cols) as u64);
+            let mut arr = DspArray::new(attrs, rows, cols);
+            let mut refs: Vec<DspColumn> =
+                (0..cols).map(|_| DspColumn::new(attrs, rows)).collect();
+            // Per-slice two-edge weight commit, mirrored on both sides.
+            for c in 0..cols {
+                for j in 0..rows {
+                    let ab = rng.next_u64() as i64 & ((1i64 << 48) - 1);
+                    let cw = rng.next_u64() as i64 & ((1i64 << 48) - 1);
+                    let (a, b) =
+                        ((ab >> 18) & ((1 << 30) - 1), ab & ((1 << 18) - 1));
+                    let commit = ColumnCtrl {
+                        cep: false,
+                        ..ColumnCtrl::default()
+                    };
+                    let commit_feeds = RowFeeds {
+                        a,
+                        b,
+                        acin: a,
+                        bcin: b,
+                        c: cw,
+                        ..RowFeeds::default()
+                    };
+                    arr.tick_row(c, j, &commit, &commit_feeds);
+                    refs[c].tick_row(j, &commit, &commit_feeds);
+                    let hold = ColumnCtrl {
+                        cep: false,
+                        cea1: false,
+                        ceb1: false,
+                        ..ColumnCtrl::default()
+                    };
+                    let hold_feeds = RowFeeds {
+                        c: cw,
+                        ..RowFeeds::default()
+                    };
+                    arr.tick_row(c, j, &hold, &hold_feeds);
+                    refs[c].tick_row(j, &hold, &hold_feeds);
+                }
+            }
+            assert_matches(&arr, &refs, &format!("{name} {rows}x{cols} post-commit"));
+
+            for edge in 0..30 {
+                let mut x_ab = vec![0u64; cols];
+                let mut y_c = vec![0u64; cols];
+                for c in 0..cols {
+                    for j in 0..rows {
+                        if rng.chance(1, 3) {
+                            x_ab[c] |= 1 << j;
+                        }
+                        if rng.chance(1, 3) {
+                            y_c[c] |= 1 << j;
+                        }
+                    }
+                }
+                arr.tick_snn_crossbar(&x_ab, &y_c);
+                for (ci, col) in refs.iter_mut().enumerate() {
+                    col.tick_snn_crossbar(x_ab[ci], y_c[ci]);
+                }
+                assert_matches(&arr, &refs, &format!("{name} {rows}x{cols} edge {edge}"));
+            }
+        }
+    }
+}
+
+/// `reset_keep_weights` resumes bit-exactly for every Table-I profile:
+/// after streaming, the reset array equals reset reference columns
+/// (weights kept, everything else cleared, counters zeroed), and a
+/// second streaming run stays bit-identical throughout.
+#[test]
+fn reset_keep_weights_resumes_bit_identically() {
+    for (name, attrs, packed) in ws_profiles() {
+        for (rows, cols) in [(6usize, 3usize), (CHUNK_ROWS + 6, 2)] {
+            let n = rows * cols;
+            let mut rng = XorShift::new(0x2E5A + (rows * 31 + cols) as u64);
+            let mut arr = DspArray::new(attrs, rows, cols);
+            let mut refs: Vec<DspColumn> =
+                (0..cols).map(|_| DspColumn::new(attrs, rows)).collect();
+            load_ws_weights(&mut rng, &mut arr, &mut refs, rows, cols);
+            for _ in 0..rows + 4 {
+                let (a, d) = ws_operands(&mut rng, n, packed);
+                arr.tick_ws_stream(&a, &d);
+                for (ci, col) in refs.iter_mut().enumerate() {
+                    col.tick_ws_stream(col_slice(&a, ci, rows), col_slice(&d, ci, rows));
+                }
+            }
+
+            arr.reset_keep_weights();
+            for col in refs.iter_mut() {
+                col.reset_keep_weights();
+            }
+            assert_matches(&arr, &refs, &format!("{name} {rows}x{cols} post-reset"));
+            assert_eq!(arr.cycles(), 0, "{name}");
+            assert_eq!(arr.mult_toggles(), 0, "{name}");
+
+            for edge in 0..3 * rows + 8 {
+                let (a, d) = ws_operands(&mut rng, n, packed);
+                arr.tick_ws_stream(&a, &d);
+                for (ci, col) in refs.iter_mut().enumerate() {
+                    col.tick_ws_stream(col_slice(&a, ci, rows), col_slice(&d, ci, rows));
+                }
+                assert_matches(
+                    &arr,
+                    &refs,
+                    &format!("{name} {rows}x{cols} resumed edge {edge}"),
+                );
+            }
+            assert_counter_parity(&arr, &refs, &format!("{name} {rows}x{cols} resumed"));
+        }
+    }
+}
+
+/// The banked ring accumulator (two depth-1 arrays) is bit-identical
+/// to independent single rings under per-ring feed words.
+#[test]
+fn ring_bank_matches_independent_single_rings() {
+    let rings = 5usize;
+    let mut bank = RingBank::new(42, rings);
+    let mut singles: Vec<RingAccumulator> =
+        (0..rings).map(|_| RingAccumulator::new(42)).collect();
+    let mut rng = XorShift::new(0x4111);
+    for edge in 0..60u64 {
+        let wa = random_words(&mut rng, rings);
+        let wb = random_words(&mut rng, rings);
+        bank.tick(&wa, &wb);
+        for (r, single) in singles.iter_mut().enumerate() {
+            single.tick(wa[r], wb[r]);
+        }
+        for (r, single) in singles.iter().enumerate() {
+            assert_eq!(bank.output(r), single.output(), "ring {r} edge {edge}");
+        }
+        assert_eq!(bank.edges(), edge + 1);
+    }
+}
+
+/// After the array rewrite every engine kind still matches the golden
+/// interpreter end to end (the service verifies each result), and the
+/// outputs equal the host-side golden GEMM exactly.
+#[test]
+fn all_engine_kinds_bit_identical_to_golden() {
+    for kind in EngineKind::all() {
+        let mut svc = Service::start(ServiceConfig {
+            kind,
+            workers: 2,
+            ws_rows: 6,
+            ws_cols: 5,
+            verify: true,
+            shard_width: 1,
+        });
+        let mut rng = XorShift::new(0xA44A1 + kind.label().len() as u64);
+        let (job, expect) = match kind {
+            EngineKind::SnnFireFly | EngineKind::SnnEnhanced => {
+                let spikes =
+                    MatI8::from_fn(7, 32, |_, _| rng.chance(1, 3) as i8);
+                let weights = MatI8::random_bounded(&mut rng, 32, 11, 50);
+                let expect = golden_gemm(&spikes, &weights);
+                (Job::Snn { spikes, weights }, expect)
+            }
+            _ => {
+                let a = MatI8::random_bounded(&mut rng, 6, 13, 63);
+                let w = MatI8::random(&mut rng, 13, 8);
+                let expect = golden_gemm(&a, &w);
+                (Job::Gemm { a, w }, expect)
+            }
+        };
+        let h = svc.submit(job);
+        let r = svc
+            .wait(h, Duration::from_secs(120))
+            .into_result()
+            .unwrap_or_else(|| panic!("{} job completes", kind.label()));
+        assert_eq!(r.verified, Some(true), "{}", kind.label());
+        assert_eq!(r.output, expect, "{}", kind.label());
+        svc.shutdown();
+    }
+}
