@@ -25,7 +25,7 @@ use dsp48_systolic::util::bench::{bench, section};
 use dsp48_systolic::util::json::Json;
 use dsp48_systolic::util::rng::XorShift;
 use dsp48_systolic::workload::conv::ConvShape;
-use dsp48_systolic::workload::MatI8;
+use dsp48_systolic::workload::{CsrMatI8, MatI8, NmPattern, SparseMatI8};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -167,6 +167,39 @@ fn conv_serve(count: usize) -> (u64, u64, u64, u64, u64) {
         .load(std::sync::atomic::Ordering::Relaxed);
     svc.shutdown();
     (cycles, macs, issued, avoided, saved)
+}
+
+/// One sparse GEMM (CSR activations × N:M striped weights) on the
+/// 14×14 tiler. `live_every` controls which weight blocks survive:
+/// blocks are aligned to the tile grid, so dead blocks become whole
+/// dead tiles that the tiler skips before enqueue. Returns
+/// `(sim_cycles, macs, tiles_skipped)` — simulated, deterministic
+/// quantities; `macs` stays dense-equivalent, so MACs/cycle rises
+/// with sparsity instead of staying flat.
+fn sparse_serve(
+    nm: NmPattern,
+    live_every: usize,
+    (m, k, n): (usize, usize, usize),
+) -> (u64, u64, u64) {
+    let mut svc = Service::start(ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers: 2,
+        ws_rows: 14,
+        ws_cols: 14,
+        verify: false,
+        shard_width: 1,
+    });
+    let mut rng = XorShift::new(31);
+    let w = SparseMatI8::striped(&mut rng, k, n, nm, live_every, (14, 14));
+    let a = CsrMatI8::random_density(&mut rng, m, k, 0.5);
+    svc.submit(Job::SparseGemm { a, w });
+    let results = svc.drain(Duration::from_secs(600)).completed;
+    assert_eq!(results.len(), 1, "sparse job completes");
+    let cycles = results[0].stats.cycles;
+    let macs = results[0].stats.macs;
+    let skipped = svc.metrics.tiles_skipped.load(Ordering::Relaxed);
+    svc.shutdown();
+    (cycles, macs, skipped)
 }
 
 /// The wire protocol end-to-end over a loopback socket: a batch of 4
@@ -452,6 +485,46 @@ fn main() {
         100.0 * conv_amort
     );
 
+    section("sparse dataflow (N:M weight tiles, zero-work skipping)");
+    // Density sweep on one 16x140x140 sparse GEMM over the 14x14
+    // tiler (10x10 = 100 weight tiles; striped blocks align to the
+    // tile grid). All simulated quantities — MACs stay dense-
+    // equivalent, so MACs/cycle measures delivered work per cycle and
+    // rises as dead tiles are skipped. `nm24` is fully structured 2:4
+    // sparsity with every tile live: it shows that within-tile
+    // sparsity alone skips nothing (the skip unit is the tile).
+    let sparse_shape = (16, 140, 140);
+    let dense_nm = NmPattern::DENSE;
+    let nm_24 = NmPattern::new(2, 4).expect("2:4 is valid");
+    // (label, pattern, live_every) -> weight density 1.0 / 0.5 /
+    // 0.5-structured / 0.1.
+    let (d100_c, d100_m, d100_skip) = sparse_serve(dense_nm, 1, sparse_shape);
+    let (d50_c, d50_m, d50_skip) = sparse_serve(dense_nm, 2, sparse_shape);
+    let (nm24_c, nm24_m, nm24_skip) = sparse_serve(nm_24, 1, sparse_shape);
+    let (d10_c, d10_m, d10_skip) = sparse_serve(nm_24, 5, sparse_shape);
+    let sparse_mpc = |macs: u64, cycles: u64| macs as f64 / cycles as f64;
+    let (mpc_d100, mpc_d50, mpc_nm24, mpc_d10) = (
+        sparse_mpc(d100_m, d100_c),
+        sparse_mpc(d50_m, d50_c),
+        sparse_mpc(nm24_m, nm24_c),
+        sparse_mpc(d10_m, d10_c),
+    );
+    let sparse_skipped = d100_skip + d50_skip + nm24_skip + d10_skip;
+    println!(
+        "bench sparse 16x140x140 density sweep (dense-equivalent \
+         MACs/cycle):"
+    );
+    println!(
+        "    -> d=1.0: {mpc_d100:.3} ({d100_skip} tiles skipped), \
+         d=0.5: {mpc_d50:.3} ({d50_skip} skipped)"
+    );
+    println!(
+        "    -> 2:4 all-live: {mpc_nm24:.3} ({nm24_skip} skipped), \
+         d=0.1 2:4: {mpc_d10:.3} ({d10_skip} skipped, \
+         {:.2}x over dense)",
+        mpc_d10 / mpc_d100
+    );
+
     section("serve loopback (wire protocol end-to-end over TCP)");
     let (lb_rate, lb_ok, lb_issued, lb_avoided, lb_saved) = serve_loopback();
     println!(
@@ -490,6 +563,13 @@ fn main() {
         ("conv_fills_issued", Json::uint(c_issued)),
         ("conv_fills_avoided", Json::uint(c_avoided)),
         ("conv_fill_cycles_saved", Json::uint(c_saved)),
+        // Sparse density sweep: MACs/cycle trend keys (rising with
+        // sparsity) plus the exact skip count CI gates bit-for-bit.
+        ("sparse_macs_per_cycle_d100", Json::float(mpc_d100)),
+        ("sparse_macs_per_cycle_d50", Json::float(mpc_d50)),
+        ("sparse_macs_per_cycle_nm24", Json::float(mpc_nm24)),
+        ("sparse_macs_per_cycle_d10", Json::float(mpc_d10)),
+        ("sparse_tiles_skipped", Json::uint(sparse_skipped)),
         ("loopback_jobs_per_s", Json::float(lb_rate)),
         ("loopback_jobs_ok", Json::uint(lb_ok)),
         ("loopback_fills_issued", Json::uint(lb_issued)),

@@ -2,13 +2,13 @@
 //! for tile-sharded execution.
 
 use super::scheduler::aggregate_tile_stats;
-use super::tiler::{ActOperand, Tile};
+use super::tiler::{ActOperand, Tile, WeightOperand};
 use crate::engines::RunStats;
 use crate::workload::conv::{conv2d_direct, ConvShape};
 use crate::workload::gemm::golden_gemm;
-use crate::workload::{MatI32, MatI8};
+use crate::workload::{CsrMatI8, MatI32, MatI8, SparseMatI8};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Opaque job identifier assigned at submission.
@@ -28,6 +28,10 @@ pub enum Job {
     },
     /// Spiking inference: binary spike train (T×P) against weights.
     Snn { spikes: MatI8, weights: MatI8 },
+    /// Sparse GEMM: CSR activations against N:M structured weights.
+    /// Executes on the dense fabric, but all-zero weight tiles and
+    /// empty activation row windows are skipped before enqueue.
+    SparseGemm { a: CsrMatI8, w: SparseMatI8 },
 }
 
 /// An ordered batch of jobs submitted in one `Service::submit_batch`
@@ -84,6 +88,12 @@ impl Job {
             Job::Snn { spikes, weights } => {
                 (spikes.rows * spikes.cols * weights.cols) as u64
             }
+            // Dense-equivalent MACs, deliberately: skipped zero work
+            // still counts as delivered work, so macs/cycle rises with
+            // sparsity instead of staying flat.
+            Job::SparseGemm { a, w } => {
+                (a.rows() * a.cols() * w.cols()) as u64
+            }
         }
     }
 
@@ -92,6 +102,7 @@ impl Job {
             Job::Gemm { .. } => "gemm",
             Job::Conv { .. } => "conv",
             Job::Snn { .. } => "snn",
+            Job::SparseGemm { .. } => "sparse",
         }
     }
 }
@@ -132,6 +143,11 @@ pub enum Reference {
     /// [`ActOperand::Patches`]) and these raw (out_c, in_c, k, k)
     /// weights.
     ConvDirect { weights: Vec<i8> },
+    /// Sparse jobs verify against `golden_gemm` over **densified**
+    /// operands — the densification happens only here, in the checker,
+    /// so a skip-path bug cannot hide: the execution path never sees
+    /// the dense matrices it must match bit-for-bit.
+    SparseDense,
 }
 
 /// Shared per-job state for tile-sharded execution.
@@ -145,11 +161,16 @@ pub enum Reference {
 #[derive(Debug)]
 pub struct JobTracker {
     id: JobId,
-    /// The activation operand: dense, or a lazy conv patch view that
-    /// workers materialize per tile.
+    /// The activation operand: dense, a lazy conv patch view, or CSR
+    /// sparse activations that workers materialize per tile.
     a: ActOperand,
-    /// The lowered GEMM weight operand.
-    w: MatI8,
+    /// The lowered GEMM weight operand (dense or N:M sparse).
+    w: WeightOperand,
+    /// Lazily densified sparse weights — built at most once, and only
+    /// on paths that genuinely need the dense matrix (whole-job units,
+    /// row-block streaming, verification). The WS tile path extracts
+    /// sparse tiles directly and never populates this.
+    w_dense: OnceLock<MatI8>,
     /// True problem MACs (padded tiles overcount).
     macs: u64,
     /// `Some` = cross-check the assembled output against this golden
@@ -173,17 +194,18 @@ impl JobTracker {
     pub fn new(
         id: JobId,
         a: ActOperand,
-        w: MatI8,
+        w: WeightOperand,
         reference: Option<Reference>,
         macs: u64,
         tiles: usize,
         sched_rows: Option<usize>,
     ) -> Self {
-        let out = MatI32::zeros(a.rows(), w.cols);
+        let out = MatI32::zeros(a.rows(), w.cols());
         JobTracker {
             id,
             a,
             w,
+            w_dense: OnceLock::new(),
             macs,
             reference,
             sched_rows,
@@ -204,9 +226,20 @@ impl JobTracker {
         &self.a
     }
 
-    /// The lowered weight operand.
-    pub fn w(&self) -> &MatI8 {
+    /// The lowered weight operand (dense or N:M sparse).
+    pub fn w_operand(&self) -> &WeightOperand {
         &self.w
+    }
+
+    /// The dense weight matrix: a borrow for dense operands, a
+    /// once-per-job lazy densification for sparse ones.
+    pub fn w_dense(&self) -> &MatI8 {
+        match &self.w {
+            WeightOperand::Dense(m) => m,
+            WeightOperand::Sparse(s) => {
+                self.w_dense.get_or_init(|| s.to_dense())
+            }
+        }
     }
 
     /// True problem MACs (throughput accounting).
@@ -297,7 +330,7 @@ impl JobTracker {
                     .a
                     .dense()
                     .expect("GEMM-verified jobs carry dense operands");
-                output == golden_gemm(a, &self.w)
+                output == golden_gemm(a, self.w_dense())
             }
             Reference::ConvDirect { weights } => {
                 let p = self
@@ -305,6 +338,14 @@ impl JobTracker {
                     .patches()
                     .expect("conv-verified jobs carry patch operands");
                 output == conv2d_direct(p.input(), weights, p.shape())
+            }
+            Reference::SparseDense => {
+                let a = self
+                    .a
+                    .csr()
+                    .expect("sparse-verified jobs carry CSR operands")
+                    .to_dense();
+                output == golden_gemm(&a, self.w_dense())
             }
         });
         let simulated =
@@ -348,5 +389,22 @@ mod tests {
             shape,
         };
         assert_eq!(c.macs(), shape.macs());
+
+        // Sparse MACs are dense-equivalent: skipping work must raise
+        // macs/cycle, not shrink the numerator.
+        use crate::util::rng::XorShift;
+        use crate::workload::sparse::NmPattern;
+        let mut rng = XorShift::new(2);
+        let s = Job::SparseGemm {
+            a: CsrMatI8::random_density(&mut rng, 4, 8, 0.25),
+            w: SparseMatI8::random_nm(
+                &mut rng,
+                8,
+                2,
+                NmPattern::parse("2:4").unwrap(),
+            ),
+        };
+        assert_eq!(s.macs(), 64);
+        assert_eq!(s.kind(), "sparse");
     }
 }

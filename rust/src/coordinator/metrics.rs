@@ -28,6 +28,11 @@ pub struct Metrics {
     pub fills_avoided: AtomicU64,
     /// Slow cycles the avoided fills would have cost.
     pub fill_cycles_saved: AtomicU64,
+    /// Work tiles dropped before enqueue because they held no work:
+    /// all-zero sparse weight tiles and empty CSR row windows.
+    pub tiles_skipped: AtomicU64,
+    /// Dense-equivalent MACs those skipped tiles would have streamed.
+    pub macs_skipped: AtomicU64,
     /// Scratch-arena lease calls across all workers' engines.
     pub scratch_leases: AtomicU64,
     /// Scratch leases served by a pooled buffer (no allocation).
@@ -117,6 +122,19 @@ impl Metrics {
         }
     }
 
+    /// Fraction of submitted MAC work that actually streamed through
+    /// an array: `1 - macs_skipped / macs`. 1.0 for all-dense traffic
+    /// (nothing skipped) and for an idle service; lower means the
+    /// sparse skip paths are eating real work.
+    pub fn effective_density(&self) -> f64 {
+        let macs = self.macs.load(Ordering::Relaxed);
+        if macs == 0 {
+            return 1.0;
+        }
+        let skipped = self.macs_skipped.load(Ordering::Relaxed);
+        (1.0 - skipped as f64 / macs as f64).clamp(0.0, 1.0)
+    }
+
     /// Achieved MACs per simulated cycle across every completed job.
     pub fn effective_macs_per_cycle(&self) -> f64 {
         let cycles = self.sim_cycles.load(Ordering::Relaxed);
@@ -149,6 +167,9 @@ impl Metrics {
             ("fills_avoided", load(&self.fills_avoided)),
             ("fill_cycles_saved", load(&self.fill_cycles_saved)),
             ("fill_amortization", Json::float(self.fill_amortization())),
+            ("tiles_skipped", load(&self.tiles_skipped)),
+            ("macs_skipped", load(&self.macs_skipped)),
+            ("effective_density", Json::float(self.effective_density())),
             ("scratch_leases", load(&self.scratch_leases)),
             ("scratch_reuse_hits", load(&self.scratch_reuse_hits)),
             (
@@ -173,7 +194,7 @@ impl Metrics {
         let (p50, p95, max) = self.latency_percentiles();
         format!(
             "jobs {}/{} ok ({} failed), {} MMACs, {} sim-cycles, \
-             {} tiles ({} stolen), fills {} issued / {} avoided \
+             {} tiles ({} stolen, {} skipped), fills {} issued / {} avoided \
              ({} cycles saved), latency p50 {}us p95 {}us max {}us",
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_submitted.load(Ordering::Relaxed),
@@ -182,6 +203,7 @@ impl Metrics {
             self.sim_cycles.load(Ordering::Relaxed),
             self.tiles_executed.load(Ordering::Relaxed),
             self.steals.load(Ordering::Relaxed),
+            self.tiles_skipped.load(Ordering::Relaxed),
             self.fills_issued.load(Ordering::Relaxed),
             self.fills_avoided.load(Ordering::Relaxed),
             self.fill_cycles_saved.load(Ordering::Relaxed),
@@ -278,6 +300,30 @@ mod tests {
             snap.get("scratch_high_water_bytes").unwrap().as_i64(),
             Some(256)
         );
+    }
+
+    /// The sparsity counters: effective density defaults to 1.0 when
+    /// idle or all-dense, tracks `1 - macs_skipped / macs` otherwise,
+    /// and the snapshot carries all three keys.
+    #[test]
+    fn sparsity_counters_and_effective_density() {
+        let m = Metrics::new();
+        assert_eq!(m.effective_density(), 1.0);
+        m.record_completion(1000, 100, Duration::from_micros(1));
+        assert_eq!(m.effective_density(), 1.0); // dense traffic
+        m.tiles_skipped.fetch_add(20, Ordering::Relaxed);
+        m.macs_skipped.fetch_add(750, Ordering::Relaxed);
+        assert!((m.effective_density() - 0.25).abs() < 1e-12);
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("tiles_skipped").unwrap().as_i64(), Some(20));
+        assert_eq!(snap.get("macs_skipped").unwrap().as_i64(), Some(750));
+        match snap.get("effective_density").unwrap() {
+            crate::util::json::Json::Float(f) => {
+                assert!((f - 0.25).abs() < 1e-12)
+            }
+            other => panic!("expected float, got {other:?}"),
+        }
+        assert!(m.summary().contains("20 skipped"));
     }
 
     #[test]

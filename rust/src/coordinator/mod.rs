@@ -43,4 +43,4 @@ pub use metrics::Metrics;
 pub use pool::WorkPool;
 pub use scheduler::{PrefetchPolicy, ScheduleReport};
 pub use service::{Service, ServiceConfig};
-pub use tiler::{ActOperand, GemmTiler, Tile, TileCoord};
+pub use tiler::{ActOperand, GemmTiler, Tile, TileCoord, WeightOperand};

@@ -45,6 +45,11 @@ pub struct ScheduleReport {
     pub fills_avoided: u64,
     /// Slow cycles the avoided fills would have cost.
     pub fill_cycles_saved: u64,
+    /// Operand density this schedule was planned at (1.0 = dense).
+    /// Sparse submissions carry the weight operand's measured density
+    /// so the report can predict density-scaled cost — see
+    /// [`ScheduleReport::predicted_sparse_cycles`].
+    pub density: f64,
 }
 
 impl ScheduleReport {
@@ -92,6 +97,28 @@ impl ScheduleReport {
     pub fn simulated_secs(&self, mhz: f64) -> f64 {
         self.cycles as f64 / (mhz * 1e6)
     }
+
+    /// The cycle cost this schedule predicts at its operand density:
+    /// compute scales with the fraction of weight tiles that hold any
+    /// work (zero tiles are skipped outright, charging nothing), while
+    /// weight-delivery cost is already per-*issued*-fill and does not
+    /// rescale. Dense reports (`density == 1.0`) predict exactly
+    /// [`ScheduleReport::cycles`].
+    pub fn predicted_sparse_cycles(&self) -> u64 {
+        self.weight_cycles
+            + (self.compute_cycles as f64 * self.density).ceil() as u64
+    }
+
+    /// Predicted end-to-end speedup from skipping zero work at this
+    /// density (≥ 1.0; exactly 1.0 when dense).
+    pub fn predicted_speedup(&self) -> f64 {
+        let predicted = self.predicted_sparse_cycles();
+        if predicted == 0 {
+            1.0
+        } else {
+            self.cycles as f64 / predicted as f64
+        }
+    }
 }
 
 /// Aggregate per-tile run stats under a policy.
@@ -103,6 +130,20 @@ pub fn schedule(
     policy: PrefetchPolicy,
     per_tile: &[RunStats],
     rows: usize,
+) -> ScheduleReport {
+    schedule_sparse(policy, per_tile, rows, 1.0)
+}
+
+/// [`schedule`] with an operand density attached: the aggregation is
+/// identical (the per-tile stats already reflect any skipped tiles —
+/// they simply never appear in `per_tile`), but the report carries the
+/// density so [`ScheduleReport::predicted_sparse_cycles`] can model
+/// density-scaled cost for planning.
+pub fn schedule_sparse(
+    policy: PrefetchPolicy,
+    per_tile: &[RunStats],
+    rows: usize,
+    density: f64,
 ) -> ScheduleReport {
     let tiles = per_tile.len();
     // A tile that reused a resident weight tile (`weight_loads == 0`)
@@ -143,6 +184,7 @@ pub fn schedule(
         fills_issued,
         fills_avoided,
         fill_cycles_saved,
+        density: density.clamp(0.0, 1.0),
     }
 }
 
@@ -268,6 +310,52 @@ mod tests {
         let base = schedule(PrefetchPolicy::PingPong, &all_full, rows as usize);
         assert!(base.cycles > rep.cycles);
         assert_eq!(base.fills_avoided, 0);
+    }
+
+    /// The density model: dense reports predict their own cycles
+    /// exactly, density 0 predicts pure weight cost, and predictions
+    /// are monotonic in density.
+    #[test]
+    fn sparse_prediction_scales_with_density() {
+        let rows = 14;
+        let tiles: Vec<RunStats> =
+            (0..10).map(|_| stats(100, 1000, rows)).collect();
+        let dense = schedule(PrefetchPolicy::PingPong, &tiles, rows as usize);
+        assert_eq!(dense.density, 1.0);
+        assert_eq!(dense.predicted_sparse_cycles(), dense.cycles);
+        assert!((dense.predicted_speedup() - 1.0).abs() < 1e-12);
+
+        let empty = schedule_sparse(
+            PrefetchPolicy::PingPong,
+            &tiles,
+            rows as usize,
+            0.0,
+        );
+        assert_eq!(empty.predicted_sparse_cycles(), empty.weight_cycles);
+
+        let mut prev = 0;
+        for d in [0.1, 0.25, 0.5, 0.9, 1.0] {
+            let rep = schedule_sparse(
+                PrefetchPolicy::PingPong,
+                &tiles,
+                rows as usize,
+                d,
+            );
+            // Aggregation itself is density-independent.
+            assert_eq!(rep.cycles, dense.cycles);
+            let predicted = rep.predicted_sparse_cycles();
+            assert!(predicted >= prev, "non-monotonic at d={d}");
+            assert!(rep.predicted_speedup() >= 1.0 - 1e-12);
+            prev = predicted;
+        }
+        // Out-of-range densities clamp instead of extrapolating.
+        let wild = schedule_sparse(
+            PrefetchPolicy::PingPong,
+            &tiles,
+            rows as usize,
+            7.0,
+        );
+        assert_eq!(wild.density, 1.0);
     }
 
     #[test]

@@ -20,13 +20,14 @@ use super::job::{Batch, Completion, Job, JobId, JobResult, JobTracker, Reference
 use super::metrics::Metrics;
 use super::pool::{Provenance, WorkPool};
 use super::scheduler::aggregate_tile_stats;
-use super::tiler::{ActOperand, GemmTiler, TileCoord};
+use super::tiler::{ActOperand, GemmTiler, TileCoord, WeightOperand};
 use crate::engines::os::{OsConfig, OsEngine, OsVariant};
 use crate::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
 use crate::engines::ws::{WsConfig, WsEngine, WsVariant};
 use crate::engines::{Engine, EngineError, RunStats};
 use crate::exec::ScratchStats;
 use crate::workload::conv::{weights_to_gemm, ConvShapeError, PatchSource};
+use crate::workload::sparse::SparseFormatError;
 use crate::workload::{MatI32, MatI8};
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -258,20 +259,43 @@ enum WorkUnit {
     Empty(Arc<JobTracker>),
 }
 
+/// Why a job failed to lower to service operands — every variant
+/// resolves as a `Failed` handle at submit, never a worker panic.
+#[derive(Debug)]
+enum LowerError {
+    Conv(ConvShapeError),
+    Sparse(SparseFormatError),
+}
+
+impl From<ConvShapeError> for LowerError {
+    fn from(e: ConvShapeError) -> Self {
+        LowerError::Conv(e)
+    }
+}
+
+impl From<SparseFormatError> for LowerError {
+    fn from(e: SparseFormatError) -> Self {
+        LowerError::Sparse(e)
+    }
+}
+
 /// Lower a [`Job`] to service operands: `(activation, weights,
 /// golden reference when verifying, true MACs)`. Conv stays **lazy** —
 /// the operand is a [`PatchSource`] view over the raw NCHW input; the
-/// full im2col matrix is never built, here or anywhere downstream. A
+/// full im2col matrix is never built, here or anywhere downstream.
+/// Sparse jobs stay sparse the same way: the CSR activations and N:M
+/// weights densify per tile (or not at all) on the worker. A
 /// degenerate conv shape (zero stride, kernel larger than the padded
-/// input, mis-sized buffers) is a typed error the submit path resolves
-/// as a `Failed` handle instead of letting it panic a worker. With
-/// `verify` off the reference is `None`, so a conv job does not drag a
-/// dead copy of its raw weights through its lifetime.
+/// input, mis-sized buffers) or a structurally broken sparse operand
+/// (e.g. decoded off the wire) is a typed error the submit path
+/// resolves as a `Failed` handle instead of letting it panic a worker.
+/// With `verify` off the reference is `None`, so a conv job does not
+/// drag a dead copy of its raw weights through its lifetime.
 #[allow(clippy::type_complexity)]
 fn lower(
     job: Job,
     verify: bool,
-) -> Result<(ActOperand, MatI8, Option<Reference>, u64), ConvShapeError> {
+) -> Result<(ActOperand, WeightOperand, Option<Reference>, u64), LowerError> {
     if let Job::Conv { shape, .. } = &job {
         // Validated up front so `Job::macs` (which derives the conv
         // output extent) is safe below.
@@ -281,13 +305,13 @@ fn lower(
     Ok(match job {
         Job::Gemm { a, w } => (
             ActOperand::Dense(a),
-            w,
+            WeightOperand::Dense(w),
             verify.then_some(Reference::Gemm),
             macs,
         ),
         Job::Snn { spikes, weights } => (
             ActOperand::Dense(spikes),
-            weights,
+            WeightOperand::Dense(weights),
             verify.then_some(Reference::Gemm),
             macs,
         ),
@@ -300,12 +324,29 @@ fn lower(
                 return Err(ConvShapeError::WeightLen {
                     expected: shape.weight_len(),
                     got: weights.len(),
-                });
+                }
+                .into());
             }
             let w = weights_to_gemm(&weights, shape);
-            let src = PatchSource::new(input, shape)?;
+            let src = PatchSource::new(input, shape)
+                .map_err(LowerError::Conv)?;
             let reference = verify.then(|| Reference::ConvDirect { weights });
-            (ActOperand::Patches(src), w, reference, macs)
+            (
+                ActOperand::Patches(src),
+                WeightOperand::Dense(w),
+                reference,
+                macs,
+            )
+        }
+        Job::SparseGemm { a, w } => {
+            a.validate()?;
+            w.validate()?;
+            (
+                ActOperand::Csr(a),
+                WeightOperand::Sparse(w),
+                verify.then_some(Reference::SparseDense),
+                macs,
+            )
         }
     })
 }
@@ -432,7 +473,7 @@ impl Service {
                     continue;
                 }
             };
-            if a.cols() != w.rows {
+            if a.cols() != w.rows() {
                 // Inner-dimension mismatch: grouping uses the
                 // operand's K, so letting this through would truncate
                 // or index out of bounds later. Reject it like any
@@ -442,16 +483,66 @@ impl Service {
                 continue;
             }
             let (total, sched_rows) = match &tiler {
-                Some(t) => (t.tile_count(a.cols(), w.cols).max(1), Some(t.rows)),
+                Some(t) => {
+                    // Sparse weights: all-zero tiles are dropped here,
+                    // before anything is enqueued — the tracker only
+                    // ever expects the live tiles. Dense weights skip
+                    // the scan (`tile_live` is unconditionally true).
+                    let live = if w.sparse().is_some() {
+                        let m = a.rows() as u64;
+                        let mut live = 0usize;
+                        let mut skipped = 0u64;
+                        let mut macs_skipped = 0u64;
+                        for c in t.coords(a.cols(), w.cols()) {
+                            if w.tile_live(c) {
+                                live += 1;
+                            } else {
+                                skipped += 1;
+                                macs_skipped += m
+                                    * (c.k1 - c.k0) as u64
+                                    * (c.n1 - c.n0) as u64;
+                            }
+                        }
+                        self.metrics
+                            .tiles_skipped
+                            .fetch_add(skipped, Ordering::Relaxed);
+                        self.metrics
+                            .macs_skipped
+                            .fetch_add(macs_skipped, Ordering::Relaxed);
+                        live
+                    } else {
+                        t.tile_count(a.cols(), w.cols())
+                    };
+                    (live.max(1), Some(t.rows))
+                }
                 None => {
                     // Internally-tiling engines take conv jobs as row
-                    // blocks (lazy patch extraction per block) and
-                    // everything else whole.
+                    // blocks (lazy patch extraction per block), CSR
+                    // activations as row blocks with empty windows
+                    // dropped, and everything else whole.
                     let units = match &a {
                         ActOperand::Patches(p) => {
                             conv_row_blocks(p.rows()).len()
                         }
                         ActOperand::Dense(_) => 1,
+                        ActOperand::Csr(c) => {
+                            let (k, n) = (c.cols() as u64, w.cols() as u64);
+                            let mut live = 0usize;
+                            for (m0, m1) in conv_row_blocks(c.rows()) {
+                                if c.rows_nonempty(m0, m1) {
+                                    live += 1;
+                                } else {
+                                    self.metrics
+                                        .tiles_skipped
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    self.metrics.macs_skipped.fetch_add(
+                                        (m1 - m0) as u64 * k * n,
+                                        Ordering::Relaxed,
+                                    );
+                                }
+                            }
+                            live.max(1)
+                        }
                     };
                     (units, None)
                 }
@@ -477,19 +568,45 @@ impl Service {
 
         let Some(tiler) = tiler else {
             for tracker in trackers {
-                if let ActOperand::Patches(p) = tracker.a_operand() {
-                    // Validation guarantees at least one output pixel,
-                    // so this pushes at least one block — exactly as
-                    // many as the tracker was created expecting.
-                    for (m0, m1) in conv_row_blocks(p.rows()) {
-                        self.pool.push(WorkUnit::RowBlock {
-                            job: Arc::clone(&tracker),
-                            m0,
-                            m1,
-                        });
+                match tracker.a_operand() {
+                    ActOperand::Patches(p) => {
+                        // Validation guarantees at least one output
+                        // pixel, so this pushes at least one block —
+                        // exactly as many as the tracker was created
+                        // expecting.
+                        for (m0, m1) in conv_row_blocks(p.rows()) {
+                            self.pool.push(WorkUnit::RowBlock {
+                                job: Arc::clone(&tracker),
+                                m0,
+                                m1,
+                            });
+                        }
                     }
-                } else {
-                    self.pool.push(WorkUnit::Whole(tracker));
+                    ActOperand::Csr(c) => {
+                        // Empty row windows were already counted as
+                        // skips during planning; push only the live
+                        // ones (an all-empty operand degenerates to
+                        // one Empty slot, matching the tracker).
+                        let mut pushed = 0usize;
+                        for (m0, m1) in conv_row_blocks(c.rows()) {
+                            if c.rows_nonempty(m0, m1) {
+                                pushed += 1;
+                                self.pool.push(WorkUnit::RowBlock {
+                                    job: Arc::clone(&tracker),
+                                    m0,
+                                    m1,
+                                });
+                            }
+                        }
+                        if pushed == 0 {
+                            self.pool.push(WorkUnit::Empty(Arc::clone(
+                                &tracker,
+                            )));
+                        }
+                    }
+                    ActOperand::Dense(_) => {
+                        self.pool.push(WorkUnit::Whole(Arc::clone(&tracker)));
+                    }
                 }
             }
             return handles;
@@ -504,15 +621,23 @@ impl Service {
         let mut index: HashMap<(u64, TileCoord), Vec<usize>> = HashMap::new();
         let solo = trackers.len() == 1;
         for tracker in &trackers {
-            let (k_dim, w) = (tracker.a_operand().cols(), tracker.w());
-            if tiler.tile_count(k_dim, w.cols) == 0 {
-                // Degenerate zero-area job: one empty slot assembles it.
+            let (k_dim, w) = (tracker.a_operand().cols(), tracker.w_operand());
+            if tiler.tile_count(k_dim, w.cols()) == 0
+                || !tiler.coords(k_dim, w.cols()).any(|c| w.tile_live(c))
+            {
+                // Degenerate zero-area job — or a sparse job whose
+                // weight tiles are all zero: one empty slot assembles
+                // it (a correct all-zero output, no cycles charged).
                 self.pool.push(WorkUnit::Empty(Arc::clone(tracker)));
                 continue;
             }
-            let wfp = if solo { 0 } else { fingerprint(w) };
-            for coord in tiler.coords(k_dim, w.cols) {
-                let w_tile = tiler.w_tile(w, coord);
+            let wfp = if solo { 0 } else { fingerprint_operand(w) };
+            // Dead weight tiles were counted as skips during planning;
+            // only the live coords become passes.
+            for coord in
+                tiler.coords(k_dim, w.cols()).filter(|c| w.tile_live(*c))
+            {
+                let w_tile = tiler.w_tile_of(w, coord);
                 let gi = if solo {
                     // Every coord of a single job is a fresh group.
                     groups.push(FillGroup {
@@ -640,6 +765,37 @@ fn fingerprint(w: &MatI8) -> u64 {
     h
 }
 
+/// [`fingerprint`] over either weight form. Sparse operands hash their
+/// compressed slot buffers directly (no densification); like the dense
+/// fingerprint, this only routes — group membership is confirmed by
+/// bit-exact weight-*tile* equality downstream.
+fn fingerprint_operand(w: &WeightOperand) -> u64 {
+    match w {
+        WeightOperand::Dense(m) => fingerprint(m),
+        WeightOperand::Sparse(s) => {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            let mut eat_byte = |b: u8| {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            };
+            let nm = s.nm();
+            for dim in [s.rows(), s.cols(), nm.n, nm.m] {
+                for byte in (dim as u64).to_le_bytes() {
+                    eat_byte(byte);
+                }
+            }
+            let (idx, val) = s.slots();
+            for &b in idx {
+                eat_byte(b);
+            }
+            for &v in val {
+                eat_byte(v as u8);
+            }
+            h
+        }
+    }
+}
+
 /// Per-job outcome of one work unit: how many tile slots it accounted
 /// for and their stats (short on failure).
 struct UnitOutcome {
@@ -726,7 +882,7 @@ fn run_unit(
                 .a_operand()
                 .dense()
                 .expect("whole-job units carry dense operands");
-            match engine.run_gemm(a, job.w()) {
+            match engine.run_gemm(a, job.w_dense()) {
                 Ok(run) => {
                     job.set_output(run.output);
                     metrics.tiles_executed.fetch_add(1, Ordering::Relaxed);
@@ -759,14 +915,17 @@ fn run_unit(
                 // the job still assembles (as Failed).
                 return outcome(Vec::new());
             }
-            let src = job
-                .a_operand()
-                .patches()
-                .expect("row-block units carry patch operands");
-            // Lazy extraction: only this block's patch rows exist, and
-            // only while the unit runs.
-            let a = src.extract_rows(*m0, *m1);
-            match engine.run_gemm(&a, job.w()) {
+            // Lazy extraction: only this block's rows exist (im2col
+            // patches, or densified CSR rows), and only while the unit
+            // runs.
+            let a = match job.a_operand() {
+                ActOperand::Patches(src) => src.extract_rows(*m0, *m1),
+                ActOperand::Csr(c) => c.extract_rows(*m0, *m1),
+                ActOperand::Dense(_) => {
+                    unreachable!("row-block units carry lazy operands")
+                }
+            };
+            match engine.run_gemm(&a, job.w_dense()) {
                 Ok(run) => {
                     job.write_rows(*m0, &run.output);
                     metrics.tiles_executed.fetch_add(1, Ordering::Relaxed);

@@ -12,18 +12,21 @@
 //!   perturb packed lanes).
 
 use crate::workload::conv::PatchSource;
-use crate::workload::{MatI32, MatI8};
+use crate::workload::{CsrMatI8, MatI32, MatI8, SparseMatI8};
 
-/// The activation operand a job executes against: either a dense
-/// matrix (GEMM / SNN spike trains) or a lazy im2col view over a raw
-/// conv input ([`PatchSource`]) that materializes per tile. Workers
-/// extract the activation tile for one coordinate on demand
-/// ([`GemmTiler::a_tile_of`]), so neither form is ever copied whole
-/// into the work queue — and the conv patch matrix is never built.
+/// The activation operand a job executes against: a dense matrix
+/// (GEMM / SNN spike trains), a lazy im2col view over a raw conv input
+/// ([`PatchSource`]) that materializes per tile, or CSR sparse
+/// activations ([`CsrMatI8`]) that densify per span. Workers extract
+/// the activation tile for one coordinate on demand
+/// ([`GemmTiler::a_tile_of`]), so no form is ever copied whole into
+/// the work queue — and neither the conv patch matrix nor the dense
+/// activation image behind a CSR operand is ever built.
 #[derive(Debug, Clone)]
 pub enum ActOperand {
     Dense(MatI8),
     Patches(PatchSource),
+    Csr(CsrMatI8),
 }
 
 impl ActOperand {
@@ -32,6 +35,7 @@ impl ActOperand {
         match self {
             ActOperand::Dense(m) => m.rows,
             ActOperand::Patches(p) => p.rows(),
+            ActOperand::Csr(c) => c.rows(),
         }
     }
 
@@ -40,6 +44,7 @@ impl ActOperand {
         match self {
             ActOperand::Dense(m) => m.cols,
             ActOperand::Patches(p) => p.cols(),
+            ActOperand::Csr(c) => c.cols(),
         }
     }
 
@@ -47,15 +52,101 @@ impl ActOperand {
     pub fn dense(&self) -> Option<&MatI8> {
         match self {
             ActOperand::Dense(m) => Some(m),
-            ActOperand::Patches(_) => None,
+            _ => None,
         }
     }
 
     /// The lazy conv view, when this operand is one.
     pub fn patches(&self) -> Option<&PatchSource> {
         match self {
-            ActOperand::Dense(_) => None,
             ActOperand::Patches(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// The CSR sparse activations, when this operand is them.
+    pub fn csr(&self) -> Option<&CsrMatI8> {
+        match self {
+            ActOperand::Csr(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+/// The weight operand a job executes against: a dense matrix or an
+/// N:M structured-sparse one ([`SparseMatI8`]). The sparse form
+/// answers the coordinator's liveness query
+/// ([`WeightOperand::tile_live`]) without densifying, so all-zero
+/// weight tiles are dropped before a fill is ever enqueued — the
+/// `FillGroup` reuse machinery generalized to "fill nothing".
+#[derive(Debug, Clone)]
+pub enum WeightOperand {
+    Dense(MatI8),
+    Sparse(SparseMatI8),
+}
+
+impl WeightOperand {
+    /// Problem inner dimension (K).
+    pub fn rows(&self) -> usize {
+        match self {
+            WeightOperand::Dense(m) => m.rows,
+            WeightOperand::Sparse(s) => s.rows(),
+        }
+    }
+
+    /// Problem output columns (N).
+    pub fn cols(&self) -> usize {
+        match self {
+            WeightOperand::Dense(m) => m.cols,
+            WeightOperand::Sparse(s) => s.cols(),
+        }
+    }
+
+    /// The dense matrix, when this operand is one (borrow; sparse
+    /// operands densify via [`WeightOperand::to_dense`]).
+    pub fn dense(&self) -> Option<&MatI8> {
+        match self {
+            WeightOperand::Dense(m) => Some(m),
+            WeightOperand::Sparse(_) => None,
+        }
+    }
+
+    /// The N:M sparse matrix, when this operand is one.
+    pub fn sparse(&self) -> Option<&SparseMatI8> {
+        match self {
+            WeightOperand::Dense(_) => None,
+            WeightOperand::Sparse(s) => Some(s),
+        }
+    }
+
+    /// Materialize the full dense weight matrix (the verify path and
+    /// internally-tiling engines; the WS tile path never calls this).
+    pub fn to_dense(&self) -> MatI8 {
+        match self {
+            WeightOperand::Dense(m) => m.clone(),
+            WeightOperand::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    /// Stored nonzero fraction (dense operands report 1.0).
+    pub fn density(&self) -> f64 {
+        match self {
+            WeightOperand::Dense(_) => 1.0,
+            WeightOperand::Sparse(s) => s.density(),
+        }
+    }
+
+    /// Does the weight tile at `c` hold any nonzero? `false` means the
+    /// tile's partial product is identically zero — its fill and every
+    /// activation stream against it can be skipped without touching
+    /// the result. Dense operands answer `true` unconditionally (the
+    /// scan would cost more than the fill it might save).
+    pub fn tile_live(&self, c: TileCoord) -> bool {
+        match self {
+            WeightOperand::Dense(_) => true,
+            WeightOperand::Sparse(s) => {
+                s.block_has_nonzero(c.k0, c.k1, c.n0, c.n1)
+            }
         }
     }
 }
@@ -160,6 +251,7 @@ impl GemmTiler {
         match a {
             ActOperand::Dense(m) => self.a_tile(m, c),
             ActOperand::Patches(p) => p.extract_cols(c.k0, c.k1, self.rows),
+            ActOperand::Csr(m) => m.extract_cols(c.k0, c.k1, self.rows),
         }
     }
 
@@ -173,6 +265,20 @@ impl GemmTiler {
                 .copy_from_slice(&w.row(c.k0 + r)[c.n0..c.n1]);
         }
         t
+    }
+
+    /// Extract the padded weight tile for one coord from either
+    /// operand form. Dense operands slice-copy
+    /// ([`GemmTiler::w_tile`]); sparse operands scatter straight from
+    /// their group slots ([`SparseMatI8::extract_block`]) — the dense
+    /// weight matrix is never materialized on this path.
+    pub fn w_tile_of(&self, w: &WeightOperand, c: TileCoord) -> MatI8 {
+        match w {
+            WeightOperand::Dense(m) => self.w_tile(m, c),
+            WeightOperand::Sparse(s) => {
+                s.extract_block(c.k0, c.k1, c.n0, c.n1, self.rows)
+            }
+        }
     }
 
     /// Lazy tile sequence: each [`Tile`]'s operand copies materialize
@@ -324,6 +430,43 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Sparse weight extraction and CSR activation extraction through
+    /// the operand-aware entry points are bit-identical to densifying
+    /// first and slicing the dense matrix — and `tile_live` answers
+    /// exactly "does the densified tile hold a nonzero".
+    #[test]
+    fn sparse_operand_tiles_match_densified() {
+        use crate::workload::sparse::NmPattern;
+        let mut rng = XorShift::new(33);
+        let nm = NmPattern::parse("2:4").unwrap();
+        let (m, k, n) = (5, 30, 25);
+        // Blocks aligned to the 6×5 tile grid so whole tiles go dead.
+        let sw = SparseMatI8::striped(&mut rng, k, n, nm, 3, (6, 5));
+        let dw = sw.to_dense();
+        let wop = WeightOperand::Sparse(sw.clone());
+        let ca = CsrMatI8::random_density(&mut rng, m, k, 0.3);
+        let da = ca.to_dense();
+        let aop = ActOperand::Csr(ca);
+        assert_eq!((wop.rows(), wop.cols()), (k, n));
+        assert_eq!((aop.rows(), aop.cols()), (m, k));
+        let tiler = GemmTiler::new(6, 5);
+        let mut live = 0;
+        for c in tiler.coords(k, n) {
+            assert_eq!(tiler.w_tile_of(&wop, c), tiler.w_tile(&dw, c), "{c:?}");
+            assert_eq!(tiler.a_tile_of(&aop, c), tiler.a_tile(&da, c), "{c:?}");
+            let tile_nonzero =
+                tiler.w_tile(&dw, c).data.iter().any(|v| *v != 0);
+            assert_eq!(wop.tile_live(c), tile_nonzero, "{c:?}");
+            live += wop.tile_live(c) as usize;
+        }
+        // live_every = 3 over a 5×5 block grid: ids 0,3,6,...,24.
+        assert_eq!(live, 9);
+        // Dense weights are always live — no scan, no skip.
+        let dense_op = WeightOperand::Dense(dw);
+        assert!(tiler.coords(k, n).all(|c| dense_op.tile_live(c)));
+        assert_eq!(dense_op.density(), 1.0);
     }
 
     #[test]

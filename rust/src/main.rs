@@ -6,12 +6,16 @@
 //! dsp48-systolic simulate --m 512 --k 512 --n 512 --workers 4
 //! dsp48-systolic simulate --workload conv --in-c 8 --in-h 12 --in-w 12 \
 //!     --out-c 16 --kernel 3 --stride 1 --pad 1
+//! dsp48-systolic simulate --workload sparse --density 0.1 --nm 2:4 \
+//!     --m 64 --k 140 --n 140      # N:M weights + CSR activations
 //! dsp48-systolic serve --jobs 16 --workers 2 --engine ws-dsp-fetch
 //! dsp48-systolic serve --jobs 32 --batch 8   # shared-weight batches
 //! dsp48-systolic serve --workload conv --jobs 8 --batch 4  # conv traffic
 //! dsp48-systolic serve --listen 127.0.0.1:7878 --workers 4  # wire server
 //! dsp48-systolic client submit --addr 127.0.0.1:7878 --jobs 4 --batch 4
 //! dsp48-systolic client submit --addr HOST:PORT --workload conv
+//! dsp48-systolic client submit --addr HOST:PORT --workload sparse \
+//!     --density 0.1 --nm 2:4
 //! dsp48-systolic client stats --addr HOST:PORT
 //! dsp48-systolic client shutdown --addr HOST:PORT   # drain + stop
 //! dsp48-systolic sweep --min 6 --max 14       # tinyTPU-style size sweep
@@ -31,11 +35,17 @@
 //! generator emits binary spike inputs and the conv shape must keep
 //! `kernel² × in-c` equal to the 32-wide crossbar (the defaults do).
 //!
+//! Sparse jobs (`--workload sparse`) pair N:M structured weight
+//! matrices with CSR activations; the service skips all-zero weight
+//! tiles (and empty CSR row windows on internally-tiling engines), so
+//! simulated throughput climbs as `--density` falls while results
+//! stay bit-identical to the densified golden product.
+//!
 //! Unknown `--flags` are usage errors (exit 2), never silently
 //! ignored — and so are workload-exclusive flags under the wrong
-//! workload (`--kernel` without `--workload conv`, `--m` with it) and
-//! generator flags under `serve --listen` (the clients own the
-//! workload there).
+//! workload (`--kernel` without `--workload conv`, `--m` with it,
+//! `--density` without `--workload sparse`) and generator flags under
+//! `serve --listen` (the clients own the workload there).
 
 use dsp48_systolic::coordinator::service::{run_gemm_tiled, EngineKind};
 use dsp48_systolic::coordinator::{Job, JobState, Service, ServiceConfig};
@@ -49,7 +59,7 @@ use dsp48_systolic::runtime::ArtifactRegistry;
 use dsp48_systolic::util::rng::XorShift;
 use dsp48_systolic::workload::conv::ConvShape;
 use dsp48_systolic::workload::gemm::golden_gemm;
-use dsp48_systolic::workload::MatI8;
+use dsp48_systolic::workload::{CsrMatI8, MatI8, NmPattern, SparseMatI8};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
@@ -99,6 +109,8 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "kernel",
             "stride",
             "pad",
+            "density",
+            "nm",
             "seed",
             "rows",
             "cols",
@@ -124,6 +136,8 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "kernel",
             "stride",
             "pad",
+            "density",
+            "nm",
             "shard-width",
             "verify",
             "listen",
@@ -147,6 +161,8 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "kernel",
             "stride",
             "pad",
+            "density",
+            "nm",
         ],
         "sweep" => &["min", "max"],
         "waveform" => &["fig"],
@@ -229,12 +245,16 @@ fn is_snn(kind: EngineKind) -> bool {
 const CONV_ONLY: [&str; 8] = [
     "in-c", "in-h", "in-w", "out-c", "kernel", "stride", "pad", "spikes",
 ];
-/// GEMM-workload-exclusive flags.
+/// GEMM-shape flags — shared by the `gemm` and `sparse` workloads
+/// (a sparse job is a GEMM with structured operands), excluded under
+/// `conv`.
 const GEMM_ONLY: [&str; 3] = ["m", "k", "n"];
-/// Generator-loop flags that are neither workload's shape flags; with
-/// [`CONV_ONLY`] and [`GEMM_ONLY`] these form the full set rejected
-/// under `serve --listen` (clients own the workload there) — one
-/// source, so the exclusive lists cannot drift.
+/// Sparse-workload-exclusive flags.
+const SPARSE_ONLY: [&str; 2] = ["density", "nm"];
+/// Generator-loop flags that are no workload's shape flags; with
+/// [`CONV_ONLY`], [`GEMM_ONLY`] and [`SPARSE_ONLY`] these form the
+/// full set rejected under `serve --listen` (clients own the workload
+/// there) — one source, so the exclusive lists cannot drift.
 const GENERATOR_EXTRA: [&str; 3] = ["jobs", "batch", "workload"];
 /// Client flags that only `client submit` consumes; with the workload
 /// shape lists these are usage errors under `client stats|shutdown`.
@@ -242,52 +262,104 @@ const SUBMIT_ONLY: [&str; 5] =
     ["jobs", "batch", "seed", "timeout-s", "workload"];
 
 /// Flags that only apply to one workload are usage errors under the
-/// other — same contract as unknown flags: never silently ignored.
+/// others — same contract as unknown flags: never silently ignored
+/// (a forgotten `--workload sparse` must not run a dense GEMM with
+/// `--density` dropped on the floor). The `m/k/n` shape flags are
+/// shared by `gemm` and `sparse`; everything else is exclusive.
 fn check_workload_flags(
     flags: &HashMap<String, String>,
     workload: &str,
 ) -> Result<(), String> {
-    let (exclusive, needed): (&[&str], &str) = if workload == "conv" {
-        (&GEMM_ONLY, "gemm")
-    } else {
-        (&CONV_ONLY, "conv")
+    let checks: &[(&[&str], &str)] = match workload {
+        "conv" => &[(&GEMM_ONLY, "gemm|sparse"), (&SPARSE_ONLY, "sparse")],
+        "sparse" => &[(&CONV_ONLY, "conv")],
+        // `gemm` and (not-yet-rejected) unknown workloads.
+        _ => &[(&CONV_ONLY, "conv"), (&SPARSE_ONLY, "sparse")],
     };
-    let offending: Vec<String> = exclusive
-        .iter()
-        .filter(|f| flags.contains_key(**f))
-        .map(|f| format!("--{f}"))
-        .collect();
-    if offending.is_empty() {
-        Ok(())
-    } else {
-        Err(format!(
-            "flag(s) {} only apply to `--workload {needed}` \
-             (current workload: {workload})",
-            offending.join(", ")
-        ))
+    for (exclusive, needed) in checks {
+        let offending: Vec<String> = exclusive
+            .iter()
+            .filter(|f| flags.contains_key(**f))
+            .map(|f| format!("--{f}"))
+            .collect();
+        if !offending.is_empty() {
+            return Err(format!(
+                "flag(s) {} only apply to `--workload {needed}` \
+                 (current workload: {workload})",
+                offending.join(", ")
+            ));
+        }
     }
+    Ok(())
 }
 
-/// Resolve `--workload` for a serving command: `Ok(None)` = gemm,
-/// `Ok(Some(shape))` = validated conv shape, `Err(msg)` = usage error
-/// (unknown workload, cross-workload flags, invalid shape) — one
-/// dispatch shared by `simulate` and `serve` so the two cannot drift.
+/// What the generator loop should synthesize — resolved once from
+/// `--workload` and its shape flags.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Workload {
+    /// Dense GEMM traffic (`--m/--k/--n`).
+    Gemm,
+    /// Conv2d traffic with a validated shape.
+    Conv(ConvShape),
+    /// Sparse GEMM traffic: N:M structured weights at the target
+    /// `density`, CSR activations — the zero-work-skipping path.
+    Sparse { density: f64, nm: NmPattern },
+}
+
+/// Resolve `--workload` for a serving command: `Err(msg)` = usage
+/// error (unknown workload, cross-workload flags, invalid shape or
+/// sparsity spec) — one dispatch shared by `simulate`, `serve` and
+/// `client submit` so the three cannot drift.
 fn resolve_workload(
     flags: &HashMap<String, String>,
     kind: EngineKind,
-) -> Result<Option<ConvShape>, String> {
+) -> Result<Workload, String> {
     let workload = flags.get("workload").map(String::as_str).unwrap_or("gemm");
     check_workload_flags(flags, workload)?;
     match workload {
-        "gemm" => Ok(None),
+        "gemm" => Ok(Workload::Gemm),
         "conv" => {
             let shape = conv_shape_from_flags(flags, kind);
             shape
                 .validate()
                 .map_err(|e| format!("invalid conv shape: {e}"))?;
-            Ok(Some(shape))
+            Ok(Workload::Conv(shape))
         }
-        other => Err(format!("unknown workload `{other}` (have gemm, conv)")),
+        "sparse" => {
+            let nm = match flags.get("nm") {
+                None => NmPattern::new(2, 4).expect("2:4 is a valid pattern"),
+                Some(s) => NmPattern::parse(s)
+                    .map_err(|e| format!("invalid --nm: {e}"))?,
+            };
+            let density = match flags.get("density") {
+                None => 0.25_f64.min(nm.density_cap()),
+                Some(s) => {
+                    let d: f64 = s.parse().map_err(|_| {
+                        format!(
+                            "invalid --density `{s}` (want a fraction \
+                             in [0, 1])"
+                        )
+                    })?;
+                    if !(0.0..=1.0).contains(&d) {
+                        return Err(format!(
+                            "--density {d} out of range [0, 1]"
+                        ));
+                    }
+                    if d > nm.density_cap() + 1e-9 {
+                        return Err(format!(
+                            "--density {d} exceeds the {nm} pattern's \
+                             cap {:.3}",
+                            nm.density_cap()
+                        ));
+                    }
+                    d
+                }
+            };
+            Ok(Workload::Sparse { density, nm })
+        }
+        other => Err(format!(
+            "unknown workload `{other}` (have gemm, conv, sparse)"
+        )),
     }
 }
 
@@ -339,30 +411,57 @@ fn conv_weights(rng: &mut XorShift, shape: ConvShape) -> Vec<i8> {
     (0..shape.weight_len()).map(|_| rng.i8_in(-63, 63)).collect()
 }
 
+/// Block granularity for generated N:M weights: tall-ish blocks whose
+/// width is a multiple of the group size, so groups never straddle a
+/// live/dead block boundary and the realized density tracks the
+/// target exactly.
+fn sparse_weight_block(nm: NmPattern) -> (usize, usize) {
+    (14, 2 * nm.m)
+}
+
 /// One shared-weight batch of `size` jobs (the one-model-many-users
 /// pattern): weights are generated once per batch, activations vary
 /// per job. The single generator behind both the `serve` loop and
-/// `client submit`, so their seeded workloads cannot drift.
+/// `client submit`, so their seeded workloads cannot drift. Sparse
+/// batches share one N:M weight matrix and vary CSR activations, so
+/// the service's weight-tile reuse (and tile skipping) groups across
+/// the whole batch.
 fn generate_batch(
     rng: &mut XorShift,
-    conv_shape: Option<ConvShape>,
+    workload: Workload,
     (m, k, n): (usize, usize, usize),
     size: usize,
     spikes: bool,
 ) -> Vec<Job> {
     let mut batch = Vec::with_capacity(size);
-    match conv_shape {
-        Some(shape) => {
+    match workload {
+        Workload::Conv(shape) => {
             let weights = conv_weights(rng, shape);
             for _ in 0..size {
                 batch.push(conv_job(rng, shape, &weights, spikes));
             }
         }
-        None => {
+        Workload::Gemm => {
             let w = MatI8::random(rng, k, n);
             for _ in 0..size {
                 batch.push(Job::Gemm {
                     a: MatI8::random_bounded(rng, m, k, 63),
+                    w: w.clone(),
+                });
+            }
+        }
+        Workload::Sparse { density, nm } => {
+            let w = SparseMatI8::random_density(
+                rng,
+                k,
+                n,
+                nm,
+                density,
+                sparse_weight_block(nm),
+            );
+            for _ in 0..size {
+                batch.push(Job::SparseGemm {
+                    a: CsrMatI8::random_density(rng, m, k, density),
                     w: w.clone(),
                 });
             }
@@ -489,8 +588,13 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
         shard_width: flag_usize(flags, "shard-width", 1),
     };
     match resolve_workload(flags, kind) {
-        Ok(None) => {}
-        Ok(Some(shape)) => return cmd_simulate_conv(cfg, shape, seed),
+        Ok(Workload::Gemm) => {}
+        Ok(Workload::Conv(shape)) => {
+            return cmd_simulate_conv(cfg, shape, seed)
+        }
+        Ok(Workload::Sparse { density, nm }) => {
+            return cmd_simulate_sparse(cfg, (m, k, n), density, nm, seed)
+        }
         Err(msg) => {
             eprintln!("{msg}");
             return 2;
@@ -653,6 +757,94 @@ fn cmd_simulate_conv(cfg: ServiceConfig, shape: ConvShape, seed: u64) -> i32 {
     code
 }
 
+/// `simulate --workload sparse`: one N:M-weight/CSR-activation GEMM
+/// through the service's zero-skipping path, verified bit-exactly
+/// against the densified golden product. Reports how much work the
+/// sparsity removed (skipped tiles/MACs, effective density).
+fn cmd_simulate_sparse(
+    cfg: ServiceConfig,
+    (m, k, n): (usize, usize, usize),
+    density: f64,
+    nm: NmPattern,
+    seed: u64,
+) -> i32 {
+    use std::sync::atomic::Ordering;
+    let mut rng = XorShift::new(seed);
+    let w = SparseMatI8::random_density(
+        &mut rng,
+        k,
+        n,
+        nm,
+        density,
+        sparse_weight_block(nm),
+    );
+    let a = CsrMatI8::random_density(&mut rng, m, k, density);
+    let mut session = LocalSession::start(cfg.clone());
+    let id = session
+        .submit(Job::SparseGemm {
+            a: a.clone(),
+            w: w.clone(),
+        })
+        .expect("local submission cannot fail");
+    let state = session
+        .wait(id, Some(Duration::from_secs(600)))
+        .expect("local wait cannot fail");
+    let code = match state {
+        JobState::Done(r) => {
+            let ok = r.verified == Some(true);
+            println!(
+                "engine    : {} x{} workers ({})",
+                cfg.kind.label(),
+                cfg.workers,
+                if cfg.tiler().is_some() {
+                    "sparse weight tiles, all-zero tiles never enqueued"
+                } else {
+                    "CSR row blocks, empty row windows skipped"
+                }
+            );
+            println!(
+                "sparse    : {m}x{k} @ {k}x{n}, {nm} weights \
+                 ({:.1}% dense), CSR activations ({:.1}% dense)",
+                100.0 * w.density(),
+                100.0 * a.density()
+            );
+            println!("cycles    : {} slow (aggregated)", r.stats.cycles);
+            println!(
+                "macs/cyc  : {:.1} (engine-executed MACs)",
+                r.stats.macs_per_cycle()
+            );
+            let metrics = session.metrics();
+            println!(
+                "skipped   : {} weight tiles, {} MACs \
+                 ({:.1}% effective density)",
+                metrics.tiles_skipped.load(Ordering::Relaxed),
+                metrics.macs_skipped.load(Ordering::Relaxed),
+                100.0 * metrics.effective_density()
+            );
+            println!("wall      : {:?} ({:?} simulated)", r.wall, r.simulated);
+            println!(
+                "verified  : {}",
+                if ok {
+                    "bit-exact vs densified golden"
+                } else {
+                    "MISMATCH"
+                }
+            );
+            i32::from(!ok)
+        }
+        JobState::Failed => {
+            eprintln!("sparse job failed (engine error or bad operands)");
+            1
+        }
+        JobState::Pending => {
+            eprintln!("simulate failed: sparse job timed out");
+            1
+        }
+    };
+    let _ = session.shutdown();
+    code
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let cfg = if let Some(path) = flags.get("config") {
         let text = match std::fs::read_to_string(path) {
@@ -692,6 +884,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             .iter()
             .chain(GEMM_ONLY.iter())
             .chain(CONV_ONLY.iter())
+            .chain(SPARSE_ONLY.iter())
             .filter(|f| flags.contains_key(**f))
             .map(|f| format!("--{f}"))
             .collect();
@@ -713,15 +906,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         flag_usize(flags, "k", 28),
         flag_usize(flags, "n", 28),
     );
-    let conv_shape = match resolve_workload(flags, cfg.kind) {
-        Ok(cs) => cs,
+    let workload = match resolve_workload(flags, cfg.kind) {
+        Ok(w) => w,
         Err(msg) => {
             eprintln!("{msg}");
             return 2;
         }
     };
-    match conv_shape {
-        Some(s) => println!(
+    match workload {
+        Workload::Conv(s) => println!(
             "serving {} conv {}x{}x{} k{} s{} p{} -> {} ch jobs on {} x {} \
              workers (shard width {}, batches of {} sharing weights, \
              lazy im2col tiling)",
@@ -738,7 +931,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             cfg.shard_width,
             batch
         ),
-        None => println!(
+        Workload::Sparse { density, nm } => println!(
+            "serving {} sparse {}x{}x{} jobs ({} weights, target density \
+             {:.2}, CSR activations) on {} x {} workers (shard width {}, \
+             batches of {} sharing weights, zero tiles skipped)",
+            jobs,
+            m,
+            k,
+            n,
+            nm,
+            density,
+            cfg.kind.label(),
+            cfg.workers,
+            cfg.shard_width,
+            batch
+        ),
+        Workload::Gemm => println!(
             "serving {} {}x{}x{} jobs on {} x {} workers \
              (shard width {}, batches of {} sharing weights)",
             jobs,
@@ -772,7 +980,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     while retired + failed < jobs {
         while submitted < jobs && pending.len() < max_inflight {
             let size = batch.min(jobs - submitted);
-            let b = generate_batch(&mut rng, conv_shape, (m, k, n), size, snn);
+            let b = generate_batch(&mut rng, workload, (m, k, n), size, snn);
             let ids = session
                 .submit_batch(b)
                 .expect("local submission cannot fail");
@@ -998,8 +1206,8 @@ fn client_submit(
     // The client cannot see the server's engine kind; conv defaults
     // assume a dense engine (pass explicit shape flags — and --spikes
     // — when the server runs an SNN crossbar).
-    let conv_shape = match resolve_workload(flags, EngineKind::WsDspFetch) {
-        Ok(cs) => cs,
+    let workload = match resolve_workload(flags, EngineKind::WsDspFetch) {
+        Ok(w) => w,
         Err(msg) => {
             eprintln!("{msg}");
             return 2;
@@ -1011,7 +1219,7 @@ fn client_submit(
     while submitted < jobs {
         let size = batch.min(jobs - submitted);
         let batch_jobs =
-            generate_batch(&mut rng, conv_shape, (m, k, n), size, spikes);
+            generate_batch(&mut rng, workload, (m, k, n), size, spikes);
         let ids = match session.submit_batch(batch_jobs) {
             Ok(ids) => ids,
             Err(e) => {
@@ -1196,6 +1404,15 @@ mod tests {
             vec!["serve", "--m", "512", "--k", "512", "--n", "512"],
             vec!["serve", "--jobs", "32", "--batch", "8"],
             vec!["serve", "--workload", "conv", "--kernel", "3", "--pad", "1"],
+            vec![
+                "simulate", "--workload", "sparse", "--density", "0.1",
+                "--nm", "2:4", "--m", "64", "--k", "140", "--n", "140",
+            ],
+            vec!["serve", "--workload", "sparse", "--density", "0.5"],
+            vec![
+                "client", "submit", "--addr", "127.0.0.1:1", "--workload",
+                "sparse", "--nm", "1:4",
+            ],
             vec!["serve", "--listen", "127.0.0.1:0", "--port-file", "/tmp/a"],
             vec!["client", "submit", "--addr", "127.0.0.1:1", "--jobs", "2"],
             vec!["client", "stats", "--addr", "127.0.0.1:1"],
@@ -1243,6 +1460,28 @@ mod tests {
         let err = check_workload_flags(&flags, "gemm").unwrap_err();
         assert!(err.contains("--spikes"), "{err}");
 
+        // Sparse flags without `--workload sparse` must not silently
+        // run a dense GEMM.
+        let (_, flags) =
+            parse_args(&args(&["simulate", "--density", "0.1"]));
+        let err = check_workload_flags(&flags, "gemm").unwrap_err();
+        assert!(err.contains("--density"), "{err}");
+        assert!(err.contains("--workload sparse"), "{err}");
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "conv", "--nm", "2:4",
+        ]));
+        assert!(check_workload_flags(&flags, "conv").is_err());
+        // Conv flags are likewise errors under sparse...
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "sparse", "--kernel", "3",
+        ]));
+        assert!(check_workload_flags(&flags, "sparse").is_err());
+        // ...but the GEMM shape flags are shared with sparse.
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "sparse", "--m", "64", "--density", "0.2",
+        ]));
+        assert!(check_workload_flags(&flags, "sparse").is_ok());
+
         let (_, flags) = parse_args(&args(&[
             "serve", "--workload", "conv", "--kernel", "3", "--jobs", "4",
         ]));
@@ -1256,18 +1495,62 @@ mod tests {
         let (_, flags) = parse_args(&args(&["serve"]));
         assert!(matches!(
             resolve_workload(&flags, EngineKind::WsDspFetch),
-            Ok(None)
+            Ok(Workload::Gemm)
         ));
         let (_, flags) = parse_args(&args(&["serve", "--workload", "conv"]));
         assert!(matches!(
             resolve_workload(&flags, EngineKind::WsDspFetch),
-            Ok(Some(_))
+            Ok(Workload::Conv(_))
         ));
         let (_, flags) =
             parse_args(&args(&["serve", "--workload", "conv", "--stride", "0"]));
         let err = resolve_workload(&flags, EngineKind::WsDspFetch).unwrap_err();
         assert!(err.contains("invalid conv shape"), "{err}");
         let (_, flags) = parse_args(&args(&["serve", "--workload", "quantum"]));
+        assert!(resolve_workload(&flags, EngineKind::WsDspFetch).is_err());
+    }
+
+    /// `--workload sparse` resolves its density/pattern flags, rejects
+    /// impossible combinations, and shares the `m/k/n` shape flags.
+    #[test]
+    fn resolve_workload_sparse_flags() {
+        let (_, flags) = parse_args(&args(&[
+            "simulate", "--workload", "sparse", "--density", "0.1", "--nm",
+            "2:4", "--m", "64", "--k", "140", "--n", "140",
+        ]));
+        let w = resolve_workload(&flags, EngineKind::WsDspFetch).unwrap();
+        assert_eq!(
+            w,
+            Workload::Sparse {
+                density: 0.1,
+                nm: NmPattern::new(2, 4).unwrap()
+            }
+        );
+        // Defaults: 2:4 pattern, density 0.25.
+        let (_, flags) = parse_args(&args(&["serve", "--workload", "sparse"]));
+        assert_eq!(
+            resolve_workload(&flags, EngineKind::WsDspFetch).unwrap(),
+            Workload::Sparse {
+                density: 0.25,
+                nm: NmPattern::new(2, 4).unwrap()
+            }
+        );
+        // Density above the pattern cap is a usage error, not a clamp.
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "sparse", "--density", "0.9", "--nm",
+            "2:4",
+        ]));
+        let err =
+            resolve_workload(&flags, EngineKind::WsDspFetch).unwrap_err();
+        assert!(err.contains("cap"), "{err}");
+        // Malformed pattern and density strings are usage errors.
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "sparse", "--nm", "5:4",
+        ]));
+        assert!(resolve_workload(&flags, EngineKind::WsDspFetch).is_err());
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "sparse", "--density", "lots",
+        ]));
         assert!(resolve_workload(&flags, EngineKind::WsDspFetch).is_err());
     }
 

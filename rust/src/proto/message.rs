@@ -11,10 +11,15 @@
 //!
 //! ```text
 //! matrix  {"rows": R, "cols": C, "data": [ints, row-major]}
+//! sparse  {"rows": R, "cols": C, "n": N, "m": M,
+//!          "idx": [slot column indices, 255 = empty], "val": [i8 slots]}
+//! csr     {"rows": R, "cols": C, "row_ptr": [ints], "col_idx": [ints],
+//!          "val": [i8]}
 //! shape   {"in_c", "in_h", "in_w", "out_c", "k", "stride", "pad"}
 //! job     {"kind": "gemm",  "a": matrix, "w": matrix}
 //!       | {"kind": "conv",  "input": [i8], "weights": [i8], "shape": shape}
 //!       | {"kind": "snn",   "spikes": matrix, "weights": matrix}
+//!       | {"kind": "sparse", "a": csr, "w": sparse}
 //! result  {"id", "output": matrix, "stats": {run-stat counters},
 //!          "simulated_us", "wall_us", "verified": bool|null}
 //! ```
@@ -26,7 +31,7 @@ use crate::coordinator::{Job, JobResult};
 use crate::engines::RunStats;
 use crate::util::json::{Json, JsonError};
 use crate::workload::conv::ConvShape;
-use crate::workload::{MatI32, MatI8};
+use crate::workload::{CsrMatI8, MatI32, MatI8, NmPattern, SparseMatI8};
 use std::time::Duration;
 
 /// Wire protocol version; bumped on any incompatible schema change.
@@ -45,6 +50,17 @@ pub enum Request {
         input: Vec<i8>,
         weights: Vec<i8>,
         shape: ConvShape,
+    },
+    /// Submit one sparse GEMM (CSR activations against an N:M
+    /// structured weight matrix; the server skips all-zero weight
+    /// tiles); answered with [`Response::Handle`]. `density` is
+    /// client-side metadata (the generator's target) carried for
+    /// observability — the server recomputes real density from the
+    /// operands and never trusts this value for scheduling.
+    SubmitSparse {
+        a: CsrMatI8,
+        w: SparseMatI8,
+        density: Option<f64>,
     },
     /// Submit a batch in one call (weight-tile reuse groups across the
     /// whole batch, exactly like the in-process API); answered with
@@ -265,6 +281,35 @@ fn i8_slice_to_json(s: &[i8]) -> Json {
     Json::array(s.iter().map(|&v| Json::Int(v as i64)))
 }
 
+fn sparse_to_json(w: &SparseMatI8) -> Json {
+    let (idx, val) = w.slots();
+    Json::object([
+        ("rows", Json::from(w.rows())),
+        ("cols", Json::from(w.cols())),
+        ("n", Json::from(w.nm().n)),
+        ("m", Json::from(w.nm().m)),
+        ("idx", Json::array(idx.iter().map(|&v| Json::Int(v as i64)))),
+        ("val", i8_slice_to_json(val)),
+    ])
+}
+
+fn csr_to_json(a: &CsrMatI8) -> Json {
+    let (row_ptr, col_idx, val) = a.parts();
+    Json::object([
+        ("rows", Json::from(a.rows())),
+        ("cols", Json::from(a.cols())),
+        (
+            "row_ptr",
+            Json::array(row_ptr.iter().map(|&v| Json::Int(v as i64))),
+        ),
+        (
+            "col_idx",
+            Json::array(col_idx.iter().map(|&v| Json::Int(v as i64))),
+        ),
+        ("val", i8_slice_to_json(val)),
+    ])
+}
+
 fn shape_to_json(s: ConvShape) -> Json {
     Json::object([
         ("in_c", Json::from(s.in_c)),
@@ -298,6 +343,11 @@ fn job_to_json(job: &Job) -> Json {
             ("kind", Json::from("snn")),
             ("spikes", mat_i8_to_json(spikes)),
             ("weights", mat_i8_to_json(weights)),
+        ]),
+        Job::SparseGemm { a, w } => Json::object([
+            ("kind", Json::from("sparse")),
+            ("a", csr_to_json(a)),
+            ("w", sparse_to_json(w)),
         ]),
     }
 }
@@ -372,6 +422,21 @@ impl Request {
                     ("shape", shape_to_json(*shape)),
                 ],
             ),
+            Request::SubmitSparse { a, w, density } => envelope(
+                "req",
+                "submit-sparse",
+                vec![
+                    ("a", csr_to_json(a)),
+                    ("w", sparse_to_json(w)),
+                    (
+                        "density",
+                        match density {
+                            None => Json::Null,
+                            Some(d) => Json::float(*d),
+                        },
+                    ),
+                ],
+            ),
             Request::SubmitBatch { jobs } => envelope(
                 "req",
                 "submit-batch",
@@ -419,6 +484,11 @@ impl Request {
                 input: i8_vec_field(v, "input")?,
                 weights: i8_vec_field(v, "weights")?,
                 shape: shape_field(v, "shape")?,
+            },
+            "submit-sparse" => Request::SubmitSparse {
+                a: csr_field(v, "a")?,
+                w: sparse_field(v, "w")?,
+                density: opt_f64_field(v, "density")?,
             },
             "submit-batch" => {
                 let jobs = v
@@ -676,6 +746,87 @@ fn i8_vec_field(v: &Json, what: &'static str) -> Result<Vec<i8>, ProtoError> {
     i8_vec_from(v.get(what).ok_or(ProtoError::Schema { what })?, what)
 }
 
+fn opt_f64_field(
+    v: &Json,
+    what: &'static str,
+) -> Result<Option<f64>, ProtoError> {
+    match v.get(what) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Float(f)) => Ok(Some(*f)),
+        Some(Json::Int(i)) => Ok(Some(*i as f64)),
+        Some(_) => Err(ProtoError::Schema { what }),
+    }
+}
+
+fn u8_vec_field(v: &Json, what: &'static str) -> Result<Vec<u8>, ProtoError> {
+    v.get(what)
+        .and_then(Json::as_array)
+        .ok_or(ProtoError::Schema { what })?
+        .iter()
+        .map(|j| {
+            j.as_i64()
+                .and_then(|i| u8::try_from(i).ok())
+                .ok_or(ProtoError::Schema { what })
+        })
+        .collect()
+}
+
+fn usize_vec_field(
+    v: &Json,
+    what: &'static str,
+) -> Result<Vec<usize>, ProtoError> {
+    v.get(what)
+        .and_then(Json::as_array)
+        .ok_or(ProtoError::Schema { what })?
+        .iter()
+        .map(|j| {
+            j.as_i64()
+                .and_then(|i| usize::try_from(i).ok())
+                .ok_or(ProtoError::Schema { what })
+        })
+        .collect()
+}
+
+/// Decode + revalidate a sparse weight operand. Structural invariants
+/// (slot ordering, group caps, sentinel hygiene) are enforced by
+/// [`SparseMatI8::from_slots`], so a malformed frame surfaces as a
+/// schema error rather than corrupting the skip logic downstream.
+fn sparse_from(
+    v: &Json,
+    what: &'static str,
+) -> Result<SparseMatI8, ProtoError> {
+    let rows = usize_field(v, "rows")?;
+    let cols = usize_field(v, "cols")?;
+    let nm = NmPattern::new(usize_field(v, "n")?, usize_field(v, "m")?)
+        .map_err(|_| ProtoError::Schema { what })?;
+    let idx = u8_vec_field(v, "idx")?;
+    let val = i8_vec_field(v, "val")?;
+    SparseMatI8::from_slots(rows, cols, nm, idx, val)
+        .map_err(|_| ProtoError::Schema { what })
+}
+
+fn sparse_field(
+    v: &Json,
+    what: &'static str,
+) -> Result<SparseMatI8, ProtoError> {
+    sparse_from(v.get(what).ok_or(ProtoError::Schema { what })?, what)
+}
+
+/// Decode + revalidate a CSR activation operand (see [`sparse_from`]).
+fn csr_from(v: &Json, what: &'static str) -> Result<CsrMatI8, ProtoError> {
+    let rows = usize_field(v, "rows")?;
+    let cols = usize_field(v, "cols")?;
+    let row_ptr = usize_vec_field(v, "row_ptr")?;
+    let col_idx = usize_vec_field(v, "col_idx")?;
+    let val = i8_vec_field(v, "val")?;
+    CsrMatI8::from_parts(rows, cols, row_ptr, col_idx, val)
+        .map_err(|_| ProtoError::Schema { what })
+}
+
+fn csr_field(v: &Json, what: &'static str) -> Result<CsrMatI8, ProtoError> {
+    csr_from(v.get(what).ok_or(ProtoError::Schema { what })?, what)
+}
+
 fn mat_i8_from(v: &Json, what: &'static str) -> Result<MatI8, ProtoError> {
     let rows = usize_field(v, "rows")?;
     let cols = usize_field(v, "cols")?;
@@ -744,6 +895,10 @@ fn job_from_json(v: &Json) -> Result<Job, ProtoError> {
         "snn" => Job::Snn {
             spikes: mat_i8_field(v, "spikes")?,
             weights: mat_i8_field(v, "weights")?,
+        },
+        "sparse" => Job::SparseGemm {
+            a: csr_field(v, "a")?,
+            w: sparse_field(v, "w")?,
         },
         other => {
             return Err(ProtoError::UnknownTag {
@@ -894,6 +1049,69 @@ mod tests {
             let resp = Response::Result(Box::new(r));
             assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
         }
+    }
+
+    #[test]
+    fn sparse_submit_round_trips() {
+        let dense = MatI8 {
+            rows: 2,
+            cols: 8,
+            data: vec![
+                0, 3, 0, -5, 0, 0, 0, 0, //
+                7, 0, 0, 0, 0, 0, 2, -1,
+            ],
+        };
+        let nm = NmPattern::new(2, 4).unwrap();
+        let w = SparseMatI8::from_dense(&dense, nm).unwrap();
+        let a = CsrMatI8::from_dense(&MatI8 {
+            rows: 3,
+            cols: 2,
+            data: vec![1, 0, 0, -2, 0, 0],
+        });
+        for density in [None, Some(0.25)] {
+            let req = Request::SubmitSparse {
+                a: a.clone(),
+                w: w.clone(),
+                density,
+            };
+            assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        }
+        // The same operands also travel inside a batch under the
+        // "sparse" job tag.
+        let req = Request::SubmitBatch {
+            jobs: vec![Job::SparseGemm { a, w }],
+        };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+    }
+
+    #[test]
+    fn malformed_sparse_operands_are_schema_errors() {
+        // idx slot count disagrees with rows * groups * n.
+        let doc = Json::parse(
+            r#"{"v":1,"req":"submit-sparse",
+                "a":{"rows":1,"cols":1,"row_ptr":[0,0],"col_idx":[],"val":[]},
+                "w":{"rows":1,"cols":4,"n":2,"m":4,"idx":[0],"val":[1]},
+                "density":null}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            Request::from_json(&doc),
+            Err(ProtoError::Schema { what: "w" })
+        );
+        // CSR row_ptr not monotone.
+        let doc = Json::parse(
+            r#"{"v":1,"req":"submit-sparse",
+                "a":{"rows":2,"cols":2,"row_ptr":[0,2,1],
+                     "col_idx":[0,1],"val":[1,2]},
+                "w":{"rows":1,"cols":4,"n":2,"m":4,
+                     "idx":[0,255],"val":[1,0]},
+                "density":null}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            Request::from_json(&doc),
+            Err(ProtoError::Schema { what: "a" })
+        );
     }
 
     #[test]

@@ -104,6 +104,11 @@ pub trait Session {
                 weights,
                 shape,
             },
+            Job::SparseGemm { a, w } => Request::SubmitSparse {
+                a,
+                w,
+                density: None,
+            },
             other => Request::SubmitBatch { jobs: vec![other] },
         };
         match self.request(req)? {
@@ -270,6 +275,11 @@ impl Frontend {
                 }],
                 false,
             ),
+            // The declared density is advisory metadata; the service
+            // derives real skip decisions from the operands themselves.
+            Request::SubmitSparse { a, w, density: _ } => {
+                self.submit_jobs(vec![Job::SparseGemm { a, w }], false)
+            }
             Request::SubmitBatch { jobs } => self.submit_jobs(jobs, true),
             Request::Poll { id } => (
                 response_of(self.completion.poll(JobHandle { id: JobId(id) })),
@@ -449,6 +459,34 @@ mod tests {
             s.drain(Some(Duration::from_secs(60))).unwrap();
         assert_eq!(completed.len(), 3);
         assert!(failed.is_empty());
+        s.shutdown().unwrap();
+    }
+
+    /// A sparse job submitted through the protocol lowers onto the
+    /// skip-aware path and still verifies bit-identically against the
+    /// densified golden product.
+    #[test]
+    fn local_session_serves_sparse_via_the_protocol() {
+        use crate::workload::{CsrMatI8, NmPattern, SparseMatI8};
+        let mut s = LocalSession::start(small_cfg());
+        let mut rng = XorShift::new(23);
+        let nm = NmPattern::new(2, 4).unwrap();
+        let w =
+            SparseMatI8::random_density(&mut rng, 13, 9, nm, 0.2, (6, 4));
+        let a = CsrMatI8::random_density(&mut rng, 5, 13, 0.4);
+        let id = s
+            .submit(Job::SparseGemm {
+                a: a.clone(),
+                w: w.clone(),
+            })
+            .unwrap();
+        let r = s
+            .wait(id, Some(Duration::from_secs(60)))
+            .unwrap()
+            .into_result()
+            .expect("sparse job completes");
+        assert_eq!(r.verified, Some(true));
+        assert_eq!(r.output, golden_gemm(&a.to_dense(), &w.to_dense()));
         s.shutdown().unwrap();
     }
 

@@ -77,9 +77,23 @@ impl MatI8 {
         (0..self.rows).map(move |r| self.data[r * self.cols + c])
     }
 
-    /// Column copy (convenience; hot paths use [`MatI8::col_iter`]).
+    /// Copy column `c` into caller-owned storage — the slice-copy
+    /// variant for hot paths that need a materialized column without
+    /// allocating per call. `out` must hold exactly `rows` elements.
+    pub fn col_into(&self, c: usize, out: &mut [i8]) {
+        debug_assert!(c < self.cols);
+        assert_eq!(out.len(), self.rows, "destination length must equal rows");
+        for (r, slot) in out.iter_mut().enumerate() {
+            *slot = self.data[r * self.cols + c];
+        }
+    }
+
+    /// Column copy (convenience; hot paths use [`MatI8::col_iter`] or
+    /// [`MatI8::col_into`] into a reused buffer).
     pub fn col(&self, c: usize) -> Vec<i8> {
-        self.col_iter(c).collect()
+        let mut out = vec![0; self.rows];
+        self.col_into(c, &mut out);
+        out
     }
 
     pub fn transpose(&self) -> MatI8 {
@@ -242,13 +256,24 @@ mod tests {
     fn col_iter_matches_col_and_reverses() {
         let mut rng = XorShift::new(8);
         let m = MatI8::random(&mut rng, 6, 4);
+        let mut scratch = vec![0i8; m.rows];
         for c in 0..m.cols {
             assert_eq!(m.col_iter(c).collect::<Vec<_>>(), m.col(c));
             let mut rev: Vec<i8> = m.col_iter(c).rev().collect();
             rev.reverse();
             assert_eq!(rev, m.col(c));
             assert_eq!(m.col_iter(c).len(), m.rows);
+            m.col_into(c, &mut scratch);
+            assert_eq!(scratch, m.col(c));
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "destination length")]
+    fn col_into_rejects_wrong_length() {
+        let m = MatI8::zeros(3, 2);
+        let mut out = vec![0i8; 2];
+        m.col_into(0, &mut out);
     }
 
     #[test]

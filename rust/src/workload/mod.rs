@@ -6,11 +6,15 @@
 //! * [`quant`] — symmetric INT8 quantization + the fixed-point
 //!   requantizer shared bit-for-bit with `python/compile/kernels/ref.py`;
 //! * [`snn`] — spike-train generation and the integer LIF neuron used by
-//!   the FireFly engines.
+//!   the FireFly engines;
+//! * [`sparse`] — N:M structured weight tiles and CSR activations with
+//!   dense-roundtrip oracles (zero work the coordinator can skip).
 
 pub mod conv;
 pub mod gemm;
 pub mod quant;
 pub mod snn;
+pub mod sparse;
 
 pub use gemm::{GemmProblem, MatI32, MatI8};
+pub use sparse::{CsrMatI8, NmPattern, SparseFormatError, SparseMatI8};

@@ -1,0 +1,922 @@
+//! Sparse operands: N:M structured weight tiles and CSR activations.
+//!
+//! Two representations, one contract — **densify and you must get the
+//! bit-identical dense operand back**:
+//!
+//! * [`SparseMatI8`] — N:M structured sparsity for weights (per
+//!   "Systolic Sparse Tensor Slices", arXiv 2502.03763): every group
+//!   of `m` consecutive columns in a row holds at most `n` nonzeros,
+//!   stored as per-group `(index, value)` slots. The fixed slot count
+//!   keeps the storage rectangular (hardware-friendly) and makes
+//!   [`SparseMatI8::from_dense`] / [`SparseMatI8::to_dense`] an exact
+//!   roundtrip oracle.
+//! * [`CsrMatI8`] — compressed-sparse-row activations (the spada-sim
+//!   idiom): `row_ptr` / `col_idx` / `val`, with lazy per-span
+//!   densification ([`CsrMatI8::extract_rows`] for row-block engines,
+//!   [`CsrMatI8::extract_cols`] for the WS tiler's K-span) so the
+//!   coordinator never materializes the whole operand to tile it.
+//!
+//! Neither form executes sparsely on the array — the DSP fabric
+//! computes dense tiles. The win is **what never reaches the array**:
+//! the coordinator queries [`SparseMatI8::block_has_nonzero`] to drop
+//! all-zero weight tiles before they are enqueued, and
+//! [`CsrMatI8::rows_nonempty`] to skip empty activation row windows.
+
+use super::gemm::MatI8;
+use crate::util::rng::XorShift;
+
+/// Slot marker for an unused `(index, value)` pair in a group.
+const SLOT_EMPTY: u8 = u8::MAX;
+
+/// Why a sparse operand is malformed. Returned by the constructors and
+/// by [`SparseMatI8::validate`] / [`CsrMatI8::validate`] so the service
+/// resolves a bad submission (e.g. decoded off the wire) as `Failed`
+/// instead of panicking in a worker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SparseFormatError {
+    /// An `n:m` pattern that cannot describe a group: `n == 0`,
+    /// `n > m`, or `m` too large for the u8 slot indices.
+    BadPattern(String),
+    /// A dense row group carries more nonzeros than the pattern allows.
+    GroupOverflow {
+        row: usize,
+        group: usize,
+        count: usize,
+        cap: usize,
+    },
+    /// A structural invariant does not hold (slot index out of range,
+    /// unsorted slots, buffer length mismatch, zero stored as a live
+    /// value, non-monotonic `row_ptr`, ...).
+    Layout(&'static str),
+}
+
+impl std::fmt::Display for SparseFormatError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SparseFormatError::BadPattern(s) => {
+                write!(f, "bad N:M pattern `{s}`")
+            }
+            SparseFormatError::GroupOverflow {
+                row,
+                group,
+                count,
+                cap,
+            } => write!(
+                f,
+                "row {row} group {group} has {count} nonzeros (cap {cap})"
+            ),
+            SparseFormatError::Layout(why) => {
+                write!(f, "malformed sparse operand: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SparseFormatError {}
+
+/// An `n:m` structured-sparsity pattern: at most `n` nonzeros in every
+/// group of `m` consecutive columns. `4:4` is dense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NmPattern {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl NmPattern {
+    /// The degenerate dense pattern (every slot may be live).
+    pub const DENSE: NmPattern = NmPattern { n: 4, m: 4 };
+
+    pub fn new(n: usize, m: usize) -> Result<NmPattern, SparseFormatError> {
+        if n == 0 || m == 0 || n > m || m >= SLOT_EMPTY as usize {
+            return Err(SparseFormatError::BadPattern(format!("{n}:{m}")));
+        }
+        Ok(NmPattern { n, m })
+    }
+
+    /// Parse `"2:4"`-style pattern strings (the CLI `--nm` format).
+    pub fn parse(s: &str) -> Result<NmPattern, SparseFormatError> {
+        let bad = || SparseFormatError::BadPattern(s.to_string());
+        let (n, m) = s.split_once(':').ok_or_else(bad)?;
+        let n: usize = n.trim().parse().map_err(|_| bad())?;
+        let m: usize = m.trim().parse().map_err(|_| bad())?;
+        NmPattern::new(n, m)
+    }
+
+    /// The highest density the pattern admits (`n / m`).
+    pub fn density_cap(&self) -> f64 {
+        self.n as f64 / self.m as f64
+    }
+}
+
+impl std::fmt::Display for NmPattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.n, self.m)
+    }
+}
+
+/// An N:M structured-sparse INT8 matrix (row-major groups along the
+/// column axis). Every group owns exactly `nm.n` `(index, value)`
+/// slots; unused slots hold `(SLOT_EMPTY, 0)`. Canonical form — live
+/// slots first, strictly increasing indices, values nonzero — makes
+/// `==` meaningful and the dense roundtrip exact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SparseMatI8 {
+    rows: usize,
+    cols: usize,
+    nm: NmPattern,
+    /// Per-slot column offset within the group (`SLOT_EMPTY` = unused).
+    idx: Vec<u8>,
+    /// Per-slot value (0 for unused slots).
+    val: Vec<i8>,
+}
+
+impl SparseMatI8 {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nm(&self) -> NmPattern {
+        self.nm
+    }
+
+    fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.nm.m)
+    }
+
+    /// Raw slot buffers (index bytes, value bytes) — the wire encoding.
+    pub fn slots(&self) -> (&[u8], &[i8]) {
+        (&self.idx, &self.val)
+    }
+
+    /// Rebuild from wire-decoded slot buffers; [`SparseMatI8::validate`]
+    /// runs so a malformed frame cannot smuggle in a broken invariant.
+    pub fn from_slots(
+        rows: usize,
+        cols: usize,
+        nm: NmPattern,
+        idx: Vec<u8>,
+        val: Vec<i8>,
+    ) -> Result<SparseMatI8, SparseFormatError> {
+        let s = SparseMatI8 {
+            rows,
+            cols,
+            nm,
+            idx,
+            val,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Pack a dense matrix, rejecting any group denser than `n:m`.
+    pub fn from_dense(
+        dense: &MatI8,
+        nm: NmPattern,
+    ) -> Result<SparseMatI8, SparseFormatError> {
+        let gpr = dense.cols.div_ceil(nm.m);
+        let mut idx = vec![SLOT_EMPTY; dense.rows * gpr * nm.n];
+        let mut val = vec![0i8; dense.rows * gpr * nm.n];
+        for r in 0..dense.rows {
+            let row = dense.row(r);
+            for g in 0..gpr {
+                let c0 = g * nm.m;
+                let c1 = (c0 + nm.m).min(dense.cols);
+                let base = (r * gpr + g) * nm.n;
+                let mut slot = 0;
+                for c in c0..c1 {
+                    if row[c] == 0 {
+                        continue;
+                    }
+                    if slot == nm.n {
+                        return Err(SparseFormatError::GroupOverflow {
+                            row: r,
+                            group: g,
+                            count: row[c0..c1]
+                                .iter()
+                                .filter(|v| **v != 0)
+                                .count(),
+                            cap: nm.n,
+                        });
+                    }
+                    idx[base + slot] = (c - c0) as u8;
+                    val[base + slot] = row[c];
+                    slot += 1;
+                }
+            }
+        }
+        Ok(SparseMatI8 {
+            rows: dense.rows,
+            cols: dense.cols,
+            nm,
+            idx,
+            val,
+        })
+    }
+
+    /// The exact dense matrix this packs — the roundtrip oracle and
+    /// the densify-to-verify path.
+    pub fn to_dense(&self) -> MatI8 {
+        let mut out = MatI8::zeros(self.rows, self.cols);
+        let (gpr, n) = (self.groups_per_row(), self.nm.n);
+        for r in 0..self.rows {
+            let row = out.row_mut(r);
+            for g in 0..gpr {
+                let base = (r * gpr + g) * n;
+                for s in 0..n {
+                    if self.idx[base + s] == SLOT_EMPTY {
+                        break;
+                    }
+                    row[g * self.nm.m + self.idx[base + s] as usize] =
+                        self.val[base + s];
+                }
+            }
+        }
+        out
+    }
+
+    /// Stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.idx.iter().filter(|i| **i != SLOT_EMPTY).count()
+    }
+
+    /// Fraction of elements that are nonzero (0.0 for empty shapes).
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Does `[r0, r1) × [c0, c1)` hold any nonzero? The coordinator's
+    /// tile-liveness query: `false` means the whole weight tile is
+    /// zero and its fill (and every stream against it) can be skipped.
+    pub fn block_has_nonzero(
+        &self,
+        r0: usize,
+        r1: usize,
+        c0: usize,
+        c1: usize,
+    ) -> bool {
+        if c0 >= c1 {
+            return false;
+        }
+        let (gpr, n, m) = (self.groups_per_row(), self.nm.n, self.nm.m);
+        let (g0, g1) = (c0 / m, (c1 - 1) / m);
+        for r in r0..r1.min(self.rows) {
+            for g in g0..=g1.min(gpr.saturating_sub(1)) {
+                let base = (r * gpr + g) * n;
+                for s in 0..n {
+                    if self.idx[base + s] == SLOT_EMPTY {
+                        break;
+                    }
+                    let c = g * m + self.idx[base + s] as usize;
+                    if c >= c0 && c < c1 {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Densify the block `[k0, k1) × [c0, c1)` into an
+    /// `out_rows × (c1-c0)` tile (tail rows zero-padded) — exactly the
+    /// stationary weight tile `GemmTiler::w_tile` would slice out of
+    /// the densified matrix, scattered straight from the group slots.
+    pub fn extract_block(
+        &self,
+        k0: usize,
+        k1: usize,
+        c0: usize,
+        c1: usize,
+        out_rows: usize,
+    ) -> MatI8 {
+        assert!(k0 <= k1 && k1 <= self.rows, "row span out of range");
+        assert!(c0 <= c1 && c1 <= self.cols, "col span out of range");
+        assert!(k1 - k0 <= out_rows, "tile rows smaller than row span");
+        let mut out = MatI8::zeros(out_rows, c1 - c0);
+        if c0 == c1 {
+            return out;
+        }
+        let (gpr, n, m) = (self.groups_per_row(), self.nm.n, self.nm.m);
+        let (g0, g1) = (c0 / m, (c1 - 1) / m);
+        for r in k0..k1 {
+            let row = out.row_mut(r - k0);
+            for g in g0..=g1 {
+                let base = (r * gpr + g) * n;
+                for s in 0..n {
+                    if self.idx[base + s] == SLOT_EMPTY {
+                        break;
+                    }
+                    let c = g * m + self.idx[base + s] as usize;
+                    if c >= c0 && c < c1 {
+                        row[c - c0] = self.val[base + s];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Check every structural invariant (wire-decoded operands pass
+    /// through here before a worker touches them).
+    pub fn validate(&self) -> Result<(), SparseFormatError> {
+        NmPattern::new(self.nm.n, self.nm.m)?;
+        let (gpr, n, m) = (self.groups_per_row(), self.nm.n, self.nm.m);
+        let slots = self
+            .rows
+            .checked_mul(gpr)
+            .and_then(|g| g.checked_mul(n))
+            .ok_or(SparseFormatError::Layout("slot count overflows"))?;
+        if self.idx.len() != slots || self.val.len() != slots {
+            return Err(SparseFormatError::Layout(
+                "slot buffers disagree with rows * groups * n",
+            ));
+        }
+        for r in 0..self.rows {
+            for g in 0..gpr {
+                let base = (r * gpr + g) * n;
+                let extent = self.cols - g * m; // columns this group spans
+                let mut done = false;
+                let mut prev: Option<u8> = None;
+                for s in 0..n {
+                    let i = self.idx[base + s];
+                    if i == SLOT_EMPTY {
+                        done = true;
+                        if self.val[base + s] != 0 {
+                            return Err(SparseFormatError::Layout(
+                                "empty slot carries a value",
+                            ));
+                        }
+                        continue;
+                    }
+                    if done {
+                        return Err(SparseFormatError::Layout(
+                            "live slot after an empty slot",
+                        ));
+                    }
+                    if (i as usize) >= m.min(extent) {
+                        return Err(SparseFormatError::Layout(
+                            "slot index outside its group",
+                        ));
+                    }
+                    if prev.is_some_and(|p| i <= p) {
+                        return Err(SparseFormatError::Layout(
+                            "slot indices not strictly increasing",
+                        ));
+                    }
+                    if self.val[base + s] == 0 {
+                        return Err(SparseFormatError::Layout(
+                            "live slot carries a zero value",
+                        ));
+                    }
+                    prev = Some(i);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Random N:M matrix: every group carries exactly
+    /// `min(n, group extent)` nonzeros at random positions — the
+    /// densest matrix the pattern admits (`2:4` ⇒ density 0.5).
+    pub fn random_nm(
+        rng: &mut XorShift,
+        rows: usize,
+        cols: usize,
+        nm: NmPattern,
+    ) -> SparseMatI8 {
+        Self::generate(rng, rows, cols, nm, |_, _| true)
+    }
+
+    /// Random N:M matrix thinned to an overall `density` by killing
+    /// whole `(bh × bw)` element blocks: a block survives with
+    /// probability `density / (n/m)`, surviving blocks carry full N:M
+    /// groups. Coarse-grained zeroing is what makes *entire weight
+    /// tiles* go dead at low density — the skip path's food; elementwise
+    /// thinning would almost never zero a whole tile.
+    pub fn random_density(
+        rng: &mut XorShift,
+        rows: usize,
+        cols: usize,
+        nm: NmPattern,
+        density: f64,
+        (bh, bw): (usize, usize),
+    ) -> SparseMatI8 {
+        assert!(bh > 0 && bw > 0, "block dims must be positive");
+        let live_fraction = (density / nm.density_cap()).clamp(0.0, 1.0);
+        let per_mille = (live_fraction * 1000.0).round() as u64;
+        let nb_c = cols.div_ceil(bw).max(1);
+        let nb = rows.div_ceil(bh).max(1) * nb_c;
+        let live: Vec<bool> =
+            (0..nb).map(|_| rng.chance(per_mille, 1000)).collect();
+        Self::generate(rng, rows, cols, nm, |r, c| {
+            live[(r / bh) * nb_c + c / bw]
+        })
+    }
+
+    /// Deterministic block-strided N:M matrix: element blocks of
+    /// `(bh × bw)` are live iff `block_id % live_every == 0` (row-major
+    /// block ids). Values are random but the zero *structure* — and so
+    /// the exact number of skippable tiles — is a pure function of the
+    /// shape, which is what lets the bench gate `sparse_tiles_skipped`
+    /// as an exact counter.
+    pub fn striped(
+        rng: &mut XorShift,
+        rows: usize,
+        cols: usize,
+        nm: NmPattern,
+        live_every: usize,
+        (bh, bw): (usize, usize),
+    ) -> SparseMatI8 {
+        assert!(live_every > 0 && bh > 0 && bw > 0);
+        let nb_c = cols.div_ceil(bw).max(1);
+        Self::generate(rng, rows, cols, nm, move |r, c| {
+            ((r / bh) * nb_c + c / bw) % live_every == 0
+        })
+    }
+
+    /// Shared generator core: per group, pick up to `n` distinct
+    /// positions among those `live` admits, with random nonzero values.
+    fn generate(
+        rng: &mut XorShift,
+        rows: usize,
+        cols: usize,
+        nm: NmPattern,
+        live: impl Fn(usize, usize) -> bool,
+    ) -> SparseMatI8 {
+        let gpr = cols.div_ceil(nm.m);
+        let mut idx = vec![SLOT_EMPTY; rows * gpr * nm.n];
+        let mut val = vec![0i8; rows * gpr * nm.n];
+        let mut candidates: Vec<usize> = Vec::with_capacity(nm.m);
+        for r in 0..rows {
+            for g in 0..gpr {
+                let c0 = g * nm.m;
+                let c1 = (c0 + nm.m).min(cols);
+                candidates.clear();
+                candidates.extend((c0..c1).filter(|c| live(r, *c)));
+                // Partial Fisher-Yates: the first `take` entries become
+                // a uniform random subset.
+                let take = nm.n.min(candidates.len());
+                for i in 0..take {
+                    let j = i + rng.below((candidates.len() - i) as u64)
+                        as usize;
+                    candidates.swap(i, j);
+                }
+                candidates[..take].sort_unstable();
+                let base = (r * gpr + g) * nm.n;
+                for (s, c) in candidates[..take].iter().enumerate() {
+                    let mut v = rng.i8_in(-63, 63);
+                    if v == 0 {
+                        v = 1;
+                    }
+                    idx[base + s] = (c - c0) as u8;
+                    val[base + s] = v;
+                }
+            }
+        }
+        SparseMatI8 {
+            rows,
+            cols,
+            nm,
+            idx,
+            val,
+        }
+    }
+}
+
+/// Compressed-sparse-row INT8 activations: `row_ptr[r]..row_ptr[r+1]`
+/// indexes this row's `(col_idx, val)` pairs, columns strictly
+/// increasing within a row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrMatI8 {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    val: Vec<i8>,
+}
+
+impl CsrMatI8 {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Raw CSR arrays — the wire encoding.
+    pub fn parts(&self) -> (&[usize], &[usize], &[i8]) {
+        (&self.row_ptr, &self.col_idx, &self.val)
+    }
+
+    /// Rebuild from wire-decoded arrays; validated like
+    /// [`SparseMatI8::from_slots`].
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        val: Vec<i8>,
+    ) -> Result<CsrMatI8, SparseFormatError> {
+        let c = CsrMatI8 {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            val,
+        };
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Compress a dense matrix (zeros dropped).
+    pub fn from_dense(dense: &MatI8) -> CsrMatI8 {
+        let mut row_ptr = Vec::with_capacity(dense.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut val = Vec::new();
+        row_ptr.push(0);
+        for r in 0..dense.rows {
+            for (c, v) in dense.row(r).iter().enumerate() {
+                if *v != 0 {
+                    col_idx.push(c);
+                    val.push(*v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        CsrMatI8 {
+            rows: dense.rows,
+            cols: dense.cols,
+            row_ptr,
+            col_idx,
+            val,
+        }
+    }
+
+    /// The exact dense matrix this compresses.
+    pub fn to_dense(&self) -> MatI8 {
+        self.extract_rows(0, self.rows)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Fraction of elements that are nonzero (0.0 for empty shapes).
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Does any row in `[m0, m1)` hold a nonzero? `false` means the
+    /// whole output row window is zero and an internally-tiling engine
+    /// can skip streaming it entirely.
+    pub fn rows_nonempty(&self, m0: usize, m1: usize) -> bool {
+        assert!(m0 <= m1 && m1 <= self.rows, "row span out of range");
+        self.row_ptr[m0] != self.row_ptr[m1]
+    }
+
+    /// Densify rows `[m0, m1)` with all columns — the row block an
+    /// internally-tiling engine streams (mirrors
+    /// `PatchSource::extract_rows`).
+    pub fn extract_rows(&self, m0: usize, m1: usize) -> MatI8 {
+        assert!(m0 <= m1 && m1 <= self.rows, "row span out of range");
+        let mut out = MatI8::zeros(m1 - m0, self.cols);
+        for r in m0..m1 {
+            let row = out.row_mut(r - m0);
+            for e in self.row_ptr[r]..self.row_ptr[r + 1] {
+                row[self.col_idx[e]] = self.val[e];
+            }
+        }
+        out
+    }
+
+    /// Densify columns `[k0, k1)` for every row into an `(M × width)`
+    /// tile, tail columns zero — the padded activation tile a WS array
+    /// consumes for one tile coordinate (mirrors
+    /// `PatchSource::extract_cols`). Columns are sorted per row, so
+    /// each row scans one contiguous entry span.
+    pub fn extract_cols(&self, k0: usize, k1: usize, width: usize) -> MatI8 {
+        assert!(k0 <= k1 && k1 <= self.cols, "K span out of range");
+        assert!(k1 - k0 <= width, "tile width smaller than K span");
+        let mut out = MatI8::zeros(self.rows, width);
+        for r in 0..self.rows {
+            let row = out.row_mut(r);
+            let (lo, hi) = (self.row_ptr[r], self.row_ptr[r + 1]);
+            let start = lo + self.col_idx[lo..hi].partition_point(|c| *c < k0);
+            for e in start..hi {
+                let c = self.col_idx[e];
+                if c >= k1 {
+                    break;
+                }
+                row[c - k0] = self.val[e];
+            }
+        }
+        out
+    }
+
+    /// Check every structural invariant.
+    pub fn validate(&self) -> Result<(), SparseFormatError> {
+        if self.row_ptr.len() != self.rows + 1 {
+            return Err(SparseFormatError::Layout(
+                "row_ptr length must be rows + 1",
+            ));
+        }
+        if self.row_ptr[0] != 0
+            || *self.row_ptr.last().unwrap() != self.col_idx.len()
+        {
+            return Err(SparseFormatError::Layout(
+                "row_ptr must start at 0 and end at nnz",
+            ));
+        }
+        if self.col_idx.len() != self.val.len() {
+            return Err(SparseFormatError::Layout(
+                "col_idx and val lengths disagree",
+            ));
+        }
+        for r in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[r], self.row_ptr[r + 1]);
+            if lo > hi {
+                return Err(SparseFormatError::Layout(
+                    "row_ptr not monotonic",
+                ));
+            }
+            let mut prev: Option<usize> = None;
+            for e in lo..hi {
+                let c = self.col_idx[e];
+                if c >= self.cols {
+                    return Err(SparseFormatError::Layout(
+                        "column index out of range",
+                    ));
+                }
+                if prev.is_some_and(|p| c <= p) {
+                    return Err(SparseFormatError::Layout(
+                        "columns not strictly increasing in a row",
+                    ));
+                }
+                if self.val[e] == 0 {
+                    return Err(SparseFormatError::Layout(
+                        "stored zero value",
+                    ));
+                }
+                prev = Some(c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Random activations: each element nonzero with probability
+    /// `density`, magnitudes bounded like quantized layers.
+    pub fn random_density(
+        rng: &mut XorShift,
+        rows: usize,
+        cols: usize,
+        density: f64,
+    ) -> CsrMatI8 {
+        let per_mille = (density.clamp(0.0, 1.0) * 1000.0).round() as u64;
+        let dense = MatI8::from_fn(rows, cols, |_, _| {
+            if rng.chance(per_mille, 1000) {
+                let v = rng.i8_in(-63, 63);
+                if v == 0 {
+                    1
+                } else {
+                    v
+                }
+            } else {
+                0
+            }
+        });
+        CsrMatI8::from_dense(&dense)
+    }
+
+    /// Random binary spike trains at `density` (SNN crossbars consume
+    /// 0/1 activations).
+    pub fn random_spikes(
+        rng: &mut XorShift,
+        rows: usize,
+        cols: usize,
+        density: f64,
+    ) -> CsrMatI8 {
+        let per_mille = (density.clamp(0.0, 1.0) * 1000.0).round() as u64;
+        let dense = MatI8::from_fn(rows, cols, |_, _| {
+            rng.chance(per_mille, 1000) as i8
+        });
+        CsrMatI8::from_dense(&dense)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nm_parse_and_display() {
+        let nm = NmPattern::parse("2:4").unwrap();
+        assert_eq!((nm.n, nm.m), (2, 4));
+        assert_eq!(nm.to_string(), "2:4");
+        assert_eq!(nm.density_cap(), 0.5);
+        for bad in ["", "4", "0:4", "5:4", "a:b", "2:0", "2:300"] {
+            assert!(NmPattern::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn nm_pack_unpack_roundtrip() {
+        let mut rng = XorShift::new(7);
+        let nm = NmPattern::new(2, 4).unwrap();
+        for (rows, cols) in [(6, 8), (5, 10), (1, 3), (14, 14), (3, 1)] {
+            let s = SparseMatI8::random_nm(&mut rng, rows, cols, nm);
+            s.validate().unwrap();
+            let dense = s.to_dense();
+            let back = SparseMatI8::from_dense(&dense, nm).unwrap();
+            assert_eq!(back, s, "{rows}x{cols}");
+            assert_eq!(back.to_dense(), dense);
+            assert_eq!(s.nnz(), dense.data.iter().filter(|v| **v != 0).count());
+        }
+    }
+
+    #[test]
+    fn from_dense_rejects_overdense_groups() {
+        let nm = NmPattern::new(1, 4).unwrap();
+        let mut dense = MatI8::zeros(2, 8);
+        dense.set(1, 4, 3);
+        dense.set(1, 6, -2); // two nonzeros in group 1 of row 1
+        let err = SparseMatI8::from_dense(&dense, nm).unwrap_err();
+        assert_eq!(
+            err,
+            SparseFormatError::GroupOverflow {
+                row: 1,
+                group: 1,
+                count: 2,
+                cap: 1
+            }
+        );
+    }
+
+    #[test]
+    fn block_queries_match_dense_slices() {
+        let mut rng = XorShift::new(21);
+        let nm = NmPattern::new(2, 4).unwrap();
+        let s = SparseMatI8::striped(&mut rng, 12, 10, nm, 2, (6, 5));
+        let dense = s.to_dense();
+        for (r0, r1, c0, c1) in
+            [(0, 6, 0, 5), (6, 12, 0, 5), (0, 6, 5, 10), (3, 9, 2, 8), (0, 12, 0, 10)]
+        {
+            let any = (r0..r1)
+                .any(|r| (c0..c1).any(|c| dense.at(r, c) != 0));
+            assert_eq!(
+                s.block_has_nonzero(r0, r1, c0, c1),
+                any,
+                "[{r0},{r1})x[{c0},{c1})"
+            );
+            let tile = s.extract_block(r0, r1, c0, c1, (r1 - r0) + 2);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    assert_eq!(tile.at(r - r0, c - c0), dense.at(r, c));
+                }
+            }
+            // Tail padding rows stay zero.
+            assert!(tile.row((r1 - r0) + 1).iter().all(|v| *v == 0));
+        }
+        // The stripe mask is deterministic: block (0,0) live, (0,1) dead.
+        assert!(s.block_has_nonzero(0, 6, 0, 5));
+        assert!(!s.block_has_nonzero(0, 6, 5, 10));
+    }
+
+    #[test]
+    fn density_edges() {
+        let mut rng = XorShift::new(3);
+        let nm = NmPattern::DENSE;
+        let zero =
+            SparseMatI8::random_density(&mut rng, 8, 8, nm, 0.0, (4, 4));
+        assert_eq!(zero.nnz(), 0);
+        assert_eq!(zero.to_dense(), MatI8::zeros(8, 8));
+        assert!(!zero.block_has_nonzero(0, 8, 0, 8));
+        let full =
+            SparseMatI8::random_density(&mut rng, 8, 8, nm, 1.0, (4, 4));
+        assert_eq!(full.nnz(), 64);
+        assert!((full.density() - 1.0).abs() < 1e-12);
+        let empty_csr = CsrMatI8::random_density(&mut rng, 6, 9, 0.0);
+        assert_eq!(empty_csr.nnz(), 0);
+        assert!(!empty_csr.rows_nonempty(0, 6));
+        let full_csr = CsrMatI8::random_density(&mut rng, 6, 9, 1.0);
+        assert_eq!(full_csr.nnz(), 54);
+    }
+
+    #[test]
+    fn csr_roundtrip_and_extraction() {
+        let mut rng = XorShift::new(9);
+        for density in [0.0, 0.15, 0.6, 1.0] {
+            let c = CsrMatI8::random_density(&mut rng, 7, 11, density);
+            c.validate().unwrap();
+            let dense = c.to_dense();
+            assert_eq!(CsrMatI8::from_dense(&dense), c);
+            // Row-span extraction == dense row slices.
+            for (m0, m1) in [(0, 7), (2, 5), (3, 3)] {
+                let rows = c.extract_rows(m0, m1);
+                for r in m0..m1 {
+                    assert_eq!(rows.row(r - m0), dense.row(r));
+                }
+                assert_eq!(
+                    c.rows_nonempty(m0, m1),
+                    (m0..m1).any(|r| dense.row(r).iter().any(|v| *v != 0))
+                );
+            }
+            // K-span extraction == padded dense column slices.
+            for (k0, k1, width) in [(0, 11, 11), (3, 9, 8), (10, 11, 4)] {
+                let t = c.extract_cols(k0, k1, width);
+                assert_eq!((t.rows, t.cols), (7, width));
+                for r in 0..7 {
+                    for i in 0..width {
+                        let want = if k0 + i < k1 {
+                            dense.at(r, k0 + i)
+                        } else {
+                            0
+                        };
+                        assert_eq!(t.at(r, i), want, "d{density} r{r} i{i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_malformed_operands() {
+        let mut rng = XorShift::new(5);
+        let nm = NmPattern::new(2, 4).unwrap();
+        let good = SparseMatI8::random_nm(&mut rng, 3, 8, nm);
+        let (idx, val) = good.slots();
+        // Truncated slot buffer.
+        assert!(SparseMatI8::from_slots(
+            3,
+            8,
+            nm,
+            idx[..idx.len() - 1].to_vec(),
+            val.to_vec()
+        )
+        .is_err());
+        // Slot index outside the group.
+        let mut bad_idx = idx.to_vec();
+        bad_idx[0] = 9;
+        let mut bad_val = val.to_vec();
+        bad_val[0] = 1;
+        assert!(
+            SparseMatI8::from_slots(3, 8, nm, bad_idx, bad_val).is_err()
+        );
+
+        let csr = CsrMatI8::random_density(&mut rng, 4, 6, 0.5);
+        let (rp, ci, v) = csr.parts();
+        // row_ptr ending short of nnz.
+        let mut bad_rp = rp.to_vec();
+        *bad_rp.last_mut().unwrap() = 0;
+        assert!(CsrMatI8::from_parts(
+            4,
+            6,
+            bad_rp,
+            ci.to_vec(),
+            v.to_vec()
+        )
+        .is_err());
+        // Column index out of range.
+        if !ci.is_empty() {
+            let mut bad_ci = ci.to_vec();
+            bad_ci[0] = 6;
+            assert!(CsrMatI8::from_parts(
+                4,
+                6,
+                rp.to_vec(),
+                bad_ci,
+                v.to_vec()
+            )
+            .is_err());
+        }
+    }
+
+    #[test]
+    fn striped_density_lands_near_target() {
+        let mut rng = XorShift::new(13);
+        let nm = NmPattern::new(2, 4).unwrap();
+        // 1-in-5 live blocks of full 2:4 groups ⇒ density 0.1 exactly
+        // when block width is a multiple of m (groups never straddle a
+        // live/dead boundary).
+        let s = SparseMatI8::striped(&mut rng, 140, 140, nm, 5, (14, 20));
+        assert!((s.density() - 0.1).abs() < 1e-9, "{}", s.density());
+        let d = SparseMatI8::random_density(
+            &mut rng,
+            140,
+            140,
+            nm,
+            0.1,
+            (14, 14),
+        );
+        assert!(d.density() <= 0.5 + 1e-9);
+    }
+}

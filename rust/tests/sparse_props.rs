@@ -1,0 +1,352 @@
+//! Sparse-pipeline properties — the end-to-end contract of the
+//! zero-work-skipping path:
+//!
+//! * a sparse job (CSR activations × N:M weights) is **bit-identical**
+//!   to densifying both operands and running the dense path, for all 8
+//!   [`EngineKind`]s;
+//! * N:M pack/unpack and CSR compress/expand are exact roundtrips for
+//!   random operands (the dense-oracle property);
+//! * on a tiler-backed (WS) engine the all-zero weight tiles are
+//!   skipped with **exact** counts — skipped tiles, skipped MACs,
+//!   issued fills — and the sparse run beats the densified dense run
+//!   by at least 2x in simulated MACs/cycle;
+//! * density edges (0.0 and a fully dense pattern) run end to end;
+//! * `SubmitSparse` survives the real frame codec, and a sparse job
+//!   over a live TCP socket matches the in-process result bit for bit.
+
+use dsp48_systolic::coordinator::service::EngineKind;
+use dsp48_systolic::coordinator::{Job, Service, ServiceConfig};
+use dsp48_systolic::proto::{
+    read_frame, write_frame, LocalSession, Request, Session, TcpServer,
+    TcpSession,
+};
+use dsp48_systolic::util::quickcheck::check;
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::gemm::golden_gemm;
+use dsp48_systolic::workload::{CsrMatI8, NmPattern, SparseMatI8};
+use dsp48_systolic::{prop_assert, prop_assert_eq};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn service(kind: EngineKind, workers: usize) -> Service {
+    Service::start(ServiceConfig {
+        kind,
+        workers,
+        ws_rows: 6,
+        ws_cols: 5,
+        verify: true,
+        shard_width: 2,
+    })
+}
+
+fn nm24() -> NmPattern {
+    NmPattern::new(2, 4).expect("2:4 is valid")
+}
+
+/// Sparse operands appropriate for an engine kind (SNN crossbars
+/// consume binary spikes against their fixed 32-pre geometry).
+fn sparse_operands(
+    kind: EngineKind,
+    rng: &mut XorShift,
+) -> (CsrMatI8, SparseMatI8) {
+    match kind {
+        EngineKind::SnnFireFly | EngineKind::SnnEnhanced => (
+            CsrMatI8::random_spikes(rng, 5, 32, 0.3),
+            SparseMatI8::random_density(rng, 32, 7, nm24(), 0.3, (8, 8)),
+        ),
+        _ => (
+            CsrMatI8::random_density(rng, 6, 13, 0.4),
+            SparseMatI8::random_density(rng, 13, 9, nm24(), 0.3, (6, 4)),
+        ),
+    }
+}
+
+/// The headline contract: skipping zero work must be invisible in the
+/// numbers. For every engine kind, the sparse path's output equals
+/// both the golden interpreter over densified operands and an actual
+/// densify-and-run-dense service round trip.
+#[test]
+fn sparse_bit_identical_to_densified_dense_across_all_engine_kinds() {
+    for kind in EngineKind::all() {
+        let mut rng = XorShift::new(0x5AA5 + kind.label().len() as u64);
+        let snn = matches!(
+            kind,
+            EngineKind::SnnFireFly | EngineKind::SnnEnhanced
+        );
+        let (a, w) = sparse_operands(kind, &mut rng);
+
+        let mut svc = service(kind, 2);
+        let h = svc.submit(Job::SparseGemm {
+            a: a.clone(),
+            w: w.clone(),
+        });
+        let r = svc
+            .wait(h, Duration::from_secs(120))
+            .into_result()
+            .unwrap_or_else(|| panic!("{}: sparse job", kind.label()));
+        svc.shutdown();
+        assert_eq!(r.verified, Some(true), "{}", kind.label());
+        assert_eq!(
+            r.output,
+            golden_gemm(&a.to_dense(), &w.to_dense()),
+            "{}: sparse output vs golden",
+            kind.label()
+        );
+
+        let dense_job = if snn {
+            Job::Snn {
+                spikes: a.to_dense(),
+                weights: w.to_dense(),
+            }
+        } else {
+            Job::Gemm {
+                a: a.to_dense(),
+                w: w.to_dense(),
+            }
+        };
+        let mut svc = service(kind, 2);
+        let h = svc.submit(dense_job);
+        let d = svc
+            .wait(h, Duration::from_secs(120))
+            .into_result()
+            .unwrap_or_else(|| panic!("{}: dense job", kind.label()));
+        svc.shutdown();
+        assert_eq!(d.verified, Some(true), "{}", kind.label());
+        assert_eq!(
+            r.output,
+            d.output,
+            "{}: sparse != densify-and-run-dense",
+            kind.label()
+        );
+    }
+}
+
+/// Pack/unpack is the identity for any operand a pattern admits, and
+/// the canonical slot form makes repacking the dense image reproduce
+/// the original sparse matrix exactly (not just an equivalent one).
+#[test]
+fn nm_and_csr_roundtrips_hold_for_random_operands() {
+    check("sparse roundtrip", 24, |rng, size| {
+        let rows = 1 + rng.below(size as u64) as usize;
+        let cols = 1 + rng.below(size as u64) as usize;
+        let m = 2 + rng.below(6) as usize;
+        let n = 1 + rng.below(m as u64) as usize;
+        let nm = NmPattern::new(n, m).map_err(|e| e.to_string())?;
+        let w = SparseMatI8::random_density(
+            rng,
+            rows,
+            cols,
+            nm,
+            rng.next_f64() * nm.density_cap(),
+            (3, m),
+        );
+        let dense = w.to_dense();
+        let repacked =
+            SparseMatI8::from_dense(&dense, nm).map_err(|e| e.to_string())?;
+        prop_assert_eq!(&repacked, &w);
+        prop_assert_eq!(repacked.to_dense(), dense);
+
+        let c = CsrMatI8::random_density(rng, rows, cols, rng.next_f64());
+        let cd = c.to_dense();
+        prop_assert_eq!(CsrMatI8::from_dense(&cd), c.clone());
+        prop_assert_eq!(
+            c.nnz(),
+            cd.data.iter().filter(|v| **v != 0).count()
+        );
+        Ok(())
+    });
+}
+
+/// Exact skip accounting on the WS tiler path. The striped weights
+/// align dead blocks to the 6x5 tile grid: a 5x5 tile grid with only
+/// the first column strip live — 5 live tiles, 20 skipped, and every
+/// count (tiles, MACs, fills) must be exact, not approximate.
+#[test]
+fn ws_tiler_skips_dead_weight_tiles_exactly_and_speeds_up() {
+    let (mrows, k, n) = (6usize, 30usize, 25usize);
+    let mut rng = XorShift::new(0x51AB);
+    let w = SparseMatI8::striped(&mut rng, k, n, nm24(), 5, (6, 5));
+    let a = CsrMatI8::random_density(&mut rng, mrows, k, 0.5);
+
+    let mut sparse_svc = service(EngineKind::WsDspFetch, 2);
+    let h = sparse_svc.submit(Job::SparseGemm {
+        a: a.clone(),
+        w: w.clone(),
+    });
+    let r = sparse_svc
+        .wait(h, Duration::from_secs(120))
+        .into_result()
+        .expect("sparse job completes");
+    assert_eq!(r.verified, Some(true));
+    let skipped = sparse_svc.metrics.tiles_skipped.load(Ordering::Relaxed);
+    let macs_skipped =
+        sparse_svc.metrics.macs_skipped.load(Ordering::Relaxed);
+    let executed = sparse_svc.metrics.tiles_executed.load(Ordering::Relaxed);
+    let fills = sparse_svc.metrics.fills_issued.load(Ordering::Relaxed);
+    let eff = sparse_svc.metrics.effective_density();
+    sparse_svc.shutdown();
+
+    assert_eq!(skipped, 20);
+    assert_eq!(executed, 5);
+    assert_eq!(fills, 5);
+    assert_eq!(macs_skipped, (mrows * 6 * 5 * 20) as u64);
+    assert!((eff - 0.2).abs() < 1e-9, "effective density {eff}");
+
+    // Densify-and-run-dense on the same shape: identical output and
+    // dense-equivalent MACs, but all 25 tiles execute — the sparse run
+    // must deliver at least 2x the simulated MACs/cycle.
+    let mut dense_svc = service(EngineKind::WsDspFetch, 2);
+    let h = dense_svc.submit(Job::Gemm {
+        a: a.to_dense(),
+        w: w.to_dense(),
+    });
+    let d = dense_svc
+        .wait(h, Duration::from_secs(120))
+        .into_result()
+        .expect("dense job completes");
+    dense_svc.shutdown();
+    assert_eq!(d.verified, Some(true));
+    assert_eq!(r.output, d.output);
+    assert_eq!(r.stats.macs, d.stats.macs);
+    assert!(
+        r.stats.cycles < d.stats.cycles,
+        "sparse {} cycles vs dense {}",
+        r.stats.cycles,
+        d.stats.cycles
+    );
+    let ratio = r.stats.macs_per_cycle() / d.stats.macs_per_cycle();
+    assert!(ratio >= 2.0, "sparse speedup {ratio:.2}x < 2x");
+}
+
+/// Density edges: an all-zero weight matrix completes (verified, zero
+/// output, zero cycles, nothing executed), and a fully dense operand
+/// pair under the degenerate dense pattern skips nothing.
+#[test]
+fn density_edges_run_end_to_end() {
+    let mut rng = XorShift::new(9);
+    let w = SparseMatI8::random_density(&mut rng, 13, 9, nm24(), 0.0, (4, 4));
+    assert_eq!(w.nnz(), 0);
+    let a = CsrMatI8::random_density(&mut rng, 4, 13, 0.5);
+    let mut svc = service(EngineKind::WsDspFetch, 1);
+    let h = svc.submit(Job::SparseGemm {
+        a: a.clone(),
+        w: w.clone(),
+    });
+    let r = svc
+        .wait(h, Duration::from_secs(120))
+        .into_result()
+        .expect("all-zero job completes");
+    assert_eq!(r.verified, Some(true));
+    assert!(r.output.data.iter().all(|v| *v == 0));
+    assert_eq!(r.stats.cycles, 0);
+    assert_eq!(svc.metrics.tiles_executed.load(Ordering::Relaxed), 0);
+    // 3 K-splits x 2 column strips on the 6x5 tiler: all 6 skipped.
+    assert_eq!(svc.metrics.tiles_skipped.load(Ordering::Relaxed), 6);
+    svc.shutdown();
+
+    let w = SparseMatI8::random_density(
+        &mut rng,
+        13,
+        9,
+        NmPattern::DENSE,
+        1.0,
+        (4, 4),
+    );
+    assert_eq!(w.nnz(), 13 * 9);
+    let a = CsrMatI8::random_density(&mut rng, 4, 13, 1.0);
+    let mut svc = service(EngineKind::WsDspFetch, 1);
+    let h = svc.submit(Job::SparseGemm {
+        a: a.clone(),
+        w: w.clone(),
+    });
+    let r = svc
+        .wait(h, Duration::from_secs(120))
+        .into_result()
+        .expect("fully dense sparse job completes");
+    assert_eq!(r.verified, Some(true));
+    assert_eq!(r.output, golden_gemm(&a.to_dense(), &w.to_dense()));
+    assert_eq!(svc.metrics.tiles_skipped.load(Ordering::Relaxed), 0);
+    svc.shutdown();
+}
+
+/// `SubmitSparse` must survive encode → frame → unframe → decode
+/// through the real frame codec, operands and density metadata intact.
+#[test]
+fn submit_sparse_round_trips_through_the_frame_codec() {
+    let mut rng = XorShift::new(0xF00D);
+    let nm = NmPattern::new(1, 4).expect("1:4 is valid");
+    let w = SparseMatI8::random_density(&mut rng, 12, 10, nm, 0.2, (3, 4));
+    let a = CsrMatI8::random_density(&mut rng, 5, 12, 0.3);
+    for density in [None, Some(0.2)] {
+        let req = Request::SubmitSparse {
+            a: a.clone(),
+            w: w.clone(),
+            density,
+        };
+        let mut framed = Vec::new();
+        write_frame(&mut framed, &req.encode()).expect("frame");
+        let mut cursor = std::io::Cursor::new(framed);
+        let payload = read_frame(&mut cursor)
+            .expect("unframe")
+            .expect("frame is not EOF");
+        assert_eq!(Request::decode(&payload).expect("decode"), req);
+    }
+}
+
+/// A sparse job over a live TCP socket returns the same verified
+/// result as the identical job through `LocalSession` — output, stats
+/// and id all bit-identical.
+#[test]
+fn sparse_over_the_wire_matches_local_session() {
+    let cfg = ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers: 2,
+        ws_rows: 6,
+        ws_cols: 5,
+        verify: true,
+        shard_width: 2,
+    };
+    let job = {
+        let mut rng = XorShift::new(0xCAFE);
+        Job::SparseGemm {
+            a: CsrMatI8::random_density(&mut rng, 5, 17, 0.4),
+            w: SparseMatI8::random_density(
+                &mut rng,
+                17,
+                9,
+                nm24(),
+                0.25,
+                (6, 4),
+            ),
+        }
+    };
+
+    let mut local = LocalSession::start(cfg.clone());
+    let id = local.submit(job.clone()).expect("local submit");
+    let local_r = local
+        .wait(id, Some(Duration::from_secs(120)))
+        .expect("local wait")
+        .into_result()
+        .expect("local sparse job completes");
+    local.shutdown().expect("local shutdown");
+    assert_eq!(local_r.verified, Some(true));
+
+    let svc = Service::start(cfg);
+    let server = TcpServer::bind("127.0.0.1:0", svc).expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+    let mut tcp = TcpSession::connect(&addr).expect("connect");
+    let id = tcp.submit(job).expect("wire submit");
+    let tcp_r = tcp
+        .wait(id, Some(Duration::from_secs(120)))
+        .expect("wire wait")
+        .into_result()
+        .expect("wire sparse job completes");
+    tcp.shutdown().expect("wire shutdown");
+    server_thread.join().expect("server joins");
+
+    assert_eq!(tcp_r.verified, Some(true));
+    assert_eq!(tcp_r.id, local_r.id);
+    assert_eq!(tcp_r.output, local_r.output);
+    assert_eq!(tcp_r.stats, local_r.stats);
+}

@@ -14,9 +14,11 @@ MACs/cycle + fill counters), the conv-native lazy tiling path
 (conv_fill_amortization gate plus exact conv_fills_* counters), and
 the serve-loopback wire-protocol run (exact loopback_jobs_ok +
 loopback_fills_* counters: batched weight-tile reuse must survive the
-socket round trip); conv_macs_per_cycle and loopback_jobs_per_s (the
-wall-clock serve-loopback rate) ride along in the artifact for
-trend-watching only.
+socket round trip), and the sparse density sweep (exact
+sparse_tiles_skipped: the tiler must keep skipping dead weight tiles
+whole, bit-for-bit); conv_macs_per_cycle, loopback_jobs_per_s (the
+wall-clock serve-loopback rate), and the sparse_macs_per_cycle_d*
+sweep keys ride along in the artifact for trend-watching only.
 
 Baseline schema:
 
