@@ -52,10 +52,12 @@
 use super::attributes::{Attributes, CascadeTap, InputSource, MultSel, SimdMode};
 use super::cell::DspRegs;
 use super::column::{ColumnCtrl, RowFeeds};
+use super::contract;
 use super::modes::{AluMode, WMux, XMux, YMux, ZMux};
 use super::simd::simd_add;
 use super::truncate;
 use crate::exec::{AlignedLease, Scratch};
+use crate::lint::trace::{self, StepKind, TraceStep};
 
 // Doc-link imports (see module docs).
 #[allow(unused_imports)]
@@ -316,6 +318,20 @@ impl DspArray {
     /// per-column `*0` feeds. Columns are independent within an edge
     /// (no inter-column cascade), so their order is immaterial.
     pub fn tick(&mut self, ctrl: &ColumnCtrl, feeds: &ArrayFeeds) {
+        if trace::enabled() {
+            trace::record(TraceStep {
+                attrs: self.attrs,
+                rows: self.rows,
+                cols: self.cols,
+                cycle: self.cycles,
+                kind: StepKind::Tick {
+                    ctrl: *ctrl,
+                    acin0: feeds.acin0.iter().any(|&v| v != 0),
+                    bcin0: feeds.bcin0.iter().any(|&v| v != 0),
+                    pcin0: feeds.pcin0.iter().any(|&v| v != 0),
+                },
+            });
+        }
         for col in 0..self.cols {
             let base = col * self.rows;
             for r in (0..self.rows).rev() {
@@ -351,6 +367,22 @@ impl DspArray {
     /// advances only when slice (0, 0) ticks, preserving the
     /// `columns[0].cycles()` denominator of the per-column era.
     pub fn tick_row(&mut self, col: usize, r: usize, ctrl: &ColumnCtrl, f: &RowFeeds) {
+        if trace::enabled() {
+            trace::record(TraceStep {
+                attrs: self.attrs,
+                rows: self.rows,
+                cols: self.cols,
+                cycle: self.cycles,
+                kind: StepKind::TickRow {
+                    col,
+                    row: r,
+                    ctrl: *ctrl,
+                    acin: f.acin != 0,
+                    bcin: f.bcin != 0,
+                    pcin: f.pcin != 0,
+                },
+            });
+        }
         let i = self.idx(col, r);
         self.advance_at(i, ctrl, f.a, f.b, f.c, f.d, f.acin, f.bcin, f.pcin);
         if col == 0 && r == 0 {
@@ -556,7 +588,23 @@ impl DspArray {
     pub fn tick_ws_stream(&mut self, a: &[i64], d: &[i64]) {
         let at = self.attrs;
         let n = self.rows * self.cols;
-        debug_assert!(a.len() >= n && d.len() >= n);
+        if cfg!(debug_assertions) {
+            if let Err(e) = contract::ws_stream_feeds(n, a.len(), d.len()) {
+                panic!("tick_ws_stream: {e}");
+            }
+        }
+        if trace::enabled() {
+            trace::record(TraceStep {
+                attrs: at,
+                rows: self.rows,
+                cols: self.cols,
+                cycle: self.cycles,
+                kind: StepKind::WsStream {
+                    a_len: a.len(),
+                    d_len: d.len(),
+                },
+            });
+        }
         debug_assert!(
             at.mreg && !at.creg && at.a_input == InputSource::Direct && at.simd == SimdMode::One48,
             "tick_ws_stream assumes a Table-I PE configuration"
@@ -622,9 +670,37 @@ impl DspArray {
         let at = self.attrs;
         let (rows, cols) = (self.rows, self.cols);
         let n = rows * cols;
-        debug_assert!(rows <= 64, "control masks carry one bit per row");
-        debug_assert!(a.len() >= n && d.len() >= n && b.len() >= n);
-        debug_assert!(use_b1.len() >= cols && ceb1.len() >= cols && ceb2.len() >= cols);
+        if cfg!(debug_assertions) {
+            if let Err(e) = contract::os_chain_feeds(
+                rows,
+                n,
+                a.len(),
+                d.len(),
+                b.len(),
+                cols,
+                use_b1.len(),
+                ceb1.len(),
+                ceb2.len(),
+            ) {
+                panic!("tick_os_chain: {e}");
+            }
+        }
+        if trace::enabled() {
+            trace::record(TraceStep {
+                attrs: at,
+                rows,
+                cols,
+                cycle: self.cycles,
+                kind: StepKind::OsChain {
+                    a_len: a.len(),
+                    d_len: d.len(),
+                    b_len: b.len(),
+                    use_b1: use_b1[..cols.min(use_b1.len())].to_vec(),
+                    ceb1: ceb1[..cols.min(ceb1.len())].to_vec(),
+                    ceb2: ceb2[..cols.min(ceb2.len())].to_vec(),
+                },
+            });
+        }
         debug_assert!(
             at.amultsel == MultSel::Ad
                 && at.adreg
@@ -683,8 +759,22 @@ impl DspArray {
         let at = self.attrs;
         let (rows, cols) = (self.rows, self.cols);
         let n = rows * cols;
-        debug_assert!(rows <= 64, "spike masks carry one bit per row");
-        debug_assert!(x_ab.len() >= cols && y_c.len() >= cols);
+        if cfg!(debug_assertions) {
+            if let Err(e) = contract::snn_crossbar_masks(rows, cols, x_ab.len(), y_c.len()) {
+                panic!("tick_snn_crossbar: {e}");
+            }
+        }
+        if trace::enabled() {
+            trace::record(TraceStep {
+                attrs: at,
+                rows,
+                cols,
+                cycle: self.cycles,
+                kind: StepKind::SnnCrossbar {
+                    mask_cols: x_ab.len().min(y_c.len()),
+                },
+            });
+        }
         debug_assert!(
             !at.mreg && at.creg && !at.adreg && !at.dreg,
             "tick_snn_crossbar assumes a Table-III crossbar configuration"

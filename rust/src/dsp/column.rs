@@ -45,10 +45,12 @@
 
 use super::attributes::{Attributes, CascadeTap, InputSource, MultSel, SimdMode};
 use super::cell::DspRegs;
+use super::contract;
 use super::modes::{AluMode, InMode, OpMode, WMux, XMux, YMux, ZMux};
 use super::simd::simd_add;
 use super::truncate;
 use crate::exec::Scratch;
+use crate::lint::trace::{self, StepKind, TraceStep};
 
 // Doc-link imports (see module docs).
 #[allow(unused_imports)]
@@ -345,6 +347,20 @@ impl DspColumn {
     /// cascade taps pre-edge, exactly like the scalar
     /// snapshot-then-tick loops.
     pub fn tick(&mut self, ctrl: &ColumnCtrl, feeds: &ColumnFeeds) {
+        if trace::enabled() {
+            trace::record(TraceStep {
+                attrs: self.attrs,
+                rows: self.rows,
+                cols: 1,
+                cycle: self.cycles,
+                kind: StepKind::Tick {
+                    ctrl: *ctrl,
+                    acin0: feeds.acin0 != 0,
+                    bcin0: feeds.bcin0 != 0,
+                    pcin0: feeds.pcin0 != 0,
+                },
+            });
+        }
         for r in (0..self.rows).rev() {
             let (acin, bcin, pcin) = if r == 0 {
                 (feeds.acin0, feeds.bcin0, feeds.pcin0)
@@ -371,6 +387,22 @@ impl DspColumn {
     /// weight fill, the SNN per-slice weight commit). The cycle counter
     /// advances only when row 0 ticks (see the `cycles` field docs).
     pub fn tick_row(&mut self, r: usize, ctrl: &ColumnCtrl, f: &RowFeeds) {
+        if trace::enabled() {
+            trace::record(TraceStep {
+                attrs: self.attrs,
+                rows: self.rows,
+                cols: 1,
+                cycle: self.cycles,
+                kind: StepKind::TickRow {
+                    col: 0,
+                    row: r,
+                    ctrl: *ctrl,
+                    acin: f.acin != 0,
+                    bcin: f.bcin != 0,
+                    pcin: f.pcin != 0,
+                },
+            });
+        }
         self.advance_row(r, ctrl, f.a, f.b, f.c, f.d, f.acin, f.bcin, f.pcin);
         if r == 0 {
             self.cycles += 1;
@@ -553,7 +585,23 @@ impl DspColumn {
     /// ALU.
     pub fn tick_ws_stream(&mut self, a: &[i64], d: &[i64]) {
         let at = self.attrs;
-        debug_assert!(a.len() >= self.rows && d.len() >= self.rows);
+        if cfg!(debug_assertions) {
+            if let Err(e) = contract::ws_stream_feeds(self.rows, a.len(), d.len()) {
+                panic!("tick_ws_stream: {e}");
+            }
+        }
+        if trace::enabled() {
+            trace::record(TraceStep {
+                attrs: at,
+                rows: self.rows,
+                cols: 1,
+                cycle: self.cycles,
+                kind: StepKind::WsStream {
+                    a_len: a.len(),
+                    d_len: d.len(),
+                },
+            });
+        }
         debug_assert!(
             at.mreg
                 && !at.creg
@@ -614,8 +662,37 @@ impl DspColumn {
         ceb2: u64,
     ) {
         let at = self.attrs;
-        debug_assert!(self.rows <= 64, "control masks carry one bit per row");
-        debug_assert!(a.len() >= self.rows && d.len() >= self.rows && b.len() >= self.rows);
+        if cfg!(debug_assertions) {
+            if let Err(e) = contract::os_chain_feeds(
+                self.rows,
+                self.rows,
+                a.len(),
+                d.len(),
+                b.len(),
+                1,
+                1,
+                1,
+                1,
+            ) {
+                panic!("tick_os_chain: {e}");
+            }
+        }
+        if trace::enabled() {
+            trace::record(TraceStep {
+                attrs: at,
+                rows: self.rows,
+                cols: 1,
+                cycle: self.cycles,
+                kind: StepKind::OsChain {
+                    a_len: a.len(),
+                    d_len: d.len(),
+                    b_len: b.len(),
+                    use_b1: vec![use_b1],
+                    ceb1: vec![ceb1],
+                    ceb2: vec![ceb2],
+                },
+            });
+        }
         debug_assert!(
             at.amultsel == MultSel::Ad
                 && at.adreg
@@ -668,7 +745,20 @@ impl DspColumn {
     /// of the path; the D pipeline is transparent and idles at 0.
     pub fn tick_snn_crossbar(&mut self, x_ab: u64, y_c: u64) {
         let at = self.attrs;
-        debug_assert!(self.rows <= 64, "spike masks carry one bit per row");
+        if cfg!(debug_assertions) {
+            if let Err(e) = contract::snn_crossbar_masks(self.rows, 1, 1, 1) {
+                panic!("tick_snn_crossbar: {e}");
+            }
+        }
+        if trace::enabled() {
+            trace::record(TraceStep {
+                attrs: at,
+                rows: self.rows,
+                cols: 1,
+                cycle: self.cycles,
+                kind: StepKind::SnnCrossbar { mask_cols: 1 },
+            });
+        }
         debug_assert!(
             !at.mreg && at.creg && !at.adreg && !at.dreg,
             "tick_snn_crossbar assumes a Table-III crossbar configuration"

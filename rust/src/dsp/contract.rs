@@ -1,0 +1,192 @@
+//! Shared feed-shape contract for the column/array tick fast paths.
+//!
+//! The three banked fast paths (`tick_ws_stream`, `tick_os_chain`,
+//! `tick_snn_crossbar`) each impose shape preconditions on their operand
+//! slices and per-column bitmasks. Before the lint layer existed those
+//! preconditions lived as scattered `debug_assert!`s inside
+//! `dsp/{column,array}.rs`; now both the tick paths (in debug builds)
+//! and the lint rule engine (always, over recorded traces — rule
+//! FEED-001) validate through the same typed checks, so the simulator
+//! and the static checker can never disagree about what a well-formed
+//! feed looks like.
+
+use std::fmt;
+
+/// Masked fast paths pack one lane per bit of a `u64` per column.
+pub const MASKED_ROWS_MAX: usize = 64;
+
+/// A feed-shape violation: some operand slice or control mask is too
+/// small for the array geometry it is driving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeedError {
+    /// An operand port slice holds fewer words than the path consumes.
+    PortTooShort {
+        /// Port name (`"a"`, `"d"`, `"b"`, ...).
+        port: &'static str,
+        /// Words the tick path reads.
+        needed: usize,
+        /// Words supplied.
+        got: usize,
+    },
+    /// A per-column control-mask slice covers fewer columns than exist.
+    MaskTooNarrow {
+        /// Mask name (`"use_b1"`, `"ceb1"`, ...).
+        mask: &'static str,
+        /// Columns the path drives.
+        needed: usize,
+        /// Mask words supplied.
+        got: usize,
+    },
+    /// A bitmasked path was asked to drive more rows than fit in `u64`.
+    TooManyRows {
+        /// Rows requested.
+        rows: usize,
+        /// Hard ceiling ([`MASKED_ROWS_MAX`]).
+        max: usize,
+    },
+}
+
+impl fmt::Display for FeedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            FeedError::PortTooShort { port, needed, got } => write!(
+                f,
+                "port `{port}` holds {got} words but the tick path reads {needed}"
+            ),
+            FeedError::MaskTooNarrow { mask, needed, got } => write!(
+                f,
+                "mask `{mask}` covers {got} columns but the array has {needed}"
+            ),
+            FeedError::TooManyRows { rows, max } => write!(
+                f,
+                "bitmasked path drives {rows} rows but masks hold at most {max}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FeedError {}
+
+fn port(name: &'static str, needed: usize, got: usize) -> Result<(), FeedError> {
+    if got < needed {
+        return Err(FeedError::PortTooShort {
+            port: name,
+            needed,
+            got,
+        });
+    }
+    Ok(())
+}
+
+fn mask(name: &'static str, needed: usize, got: usize) -> Result<(), FeedError> {
+    if got < needed {
+        return Err(FeedError::MaskTooNarrow {
+            mask: name,
+            needed,
+            got,
+        });
+    }
+    Ok(())
+}
+
+/// Shape contract for `tick_ws_stream`: the A and D streams must cover
+/// every slice (`slices` = rows for a column, rows×cols for an array).
+pub fn ws_stream_feeds(slices: usize, a_len: usize, d_len: usize) -> Result<(), FeedError> {
+    port("a", slices, a_len)?;
+    port("d", slices, d_len)
+}
+
+/// Shape contract for `tick_os_chain`: bitmasked (≤ 64 rows), full
+/// operand coverage on A/D/B, and one mask word per column for each of
+/// the three per-column controls.
+#[allow(clippy::too_many_arguments)]
+pub fn os_chain_feeds(
+    rows: usize,
+    slices: usize,
+    a_len: usize,
+    d_len: usize,
+    b_len: usize,
+    mask_cols: usize,
+    use_b1_len: usize,
+    ceb1_len: usize,
+    ceb2_len: usize,
+) -> Result<(), FeedError> {
+    if rows > MASKED_ROWS_MAX {
+        return Err(FeedError::TooManyRows {
+            rows,
+            max: MASKED_ROWS_MAX,
+        });
+    }
+    port("a", slices, a_len)?;
+    port("d", slices, d_len)?;
+    port("b", slices, b_len)?;
+    mask("use_b1", mask_cols, use_b1_len)?;
+    mask("ceb1", mask_cols, ceb1_len)?;
+    mask("ceb2", mask_cols, ceb2_len)
+}
+
+/// Shape contract for `tick_snn_crossbar`: bitmasked (≤ 64 rows) with
+/// one spike/enable mask word per column.
+pub fn snn_crossbar_masks(
+    rows: usize,
+    mask_cols: usize,
+    x_len: usize,
+    y_len: usize,
+) -> Result<(), FeedError> {
+    if rows > MASKED_ROWS_MAX {
+        return Err(FeedError::TooManyRows {
+            rows,
+            max: MASKED_ROWS_MAX,
+        });
+    }
+    mask("x_ab", mask_cols, x_len)?;
+    mask("y_c", mask_cols, y_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ws_stream_accepts_exact_and_rejects_short() {
+        assert!(ws_stream_feeds(14, 14, 14).is_ok());
+        assert_eq!(
+            ws_stream_feeds(14, 13, 14),
+            Err(FeedError::PortTooShort {
+                port: "a",
+                needed: 14,
+                got: 13
+            })
+        );
+    }
+
+    #[test]
+    fn os_chain_checks_rows_ports_and_masks() {
+        assert!(os_chain_feeds(8, 40, 40, 40, 40, 5, 5, 5, 5).is_ok());
+        assert_eq!(
+            os_chain_feeds(65, 65, 65, 65, 65, 1, 1, 1, 1),
+            Err(FeedError::TooManyRows { rows: 65, max: 64 })
+        );
+        assert_eq!(
+            os_chain_feeds(8, 40, 40, 40, 40, 5, 5, 4, 5),
+            Err(FeedError::MaskTooNarrow {
+                mask: "ceb1",
+                needed: 5,
+                got: 4
+            })
+        );
+    }
+
+    #[test]
+    fn snn_crossbar_checks_rows_and_masks() {
+        assert!(snn_crossbar_masks(32, 2, 2, 2).is_ok());
+        assert_eq!(
+            snn_crossbar_masks(32, 2, 2, 1),
+            Err(FeedError::MaskTooNarrow {
+                mask: "y_c",
+                needed: 2,
+                got: 1
+            })
+        );
+    }
+}

@@ -34,10 +34,12 @@ mod array;
 mod attributes;
 mod cell;
 mod column;
+pub mod contract;
 mod modes;
 mod simd;
 
 pub use array::{ArrayFeeds, BANK_ALIGN, CHUNK_ROWS, DspArray};
+pub use contract::{FeedError, MASKED_ROWS_MAX};
 pub use attributes::{Attributes, CascadeTap, InputSource, MultSel, SimdMode};
 pub use cell::{Dsp48e2, DspInputs, DspRegs};
 pub use column::{ColumnCtrl, ColumnFeeds, DspColumn, RowFeeds};

@@ -10,16 +10,19 @@ use crate::dsp::{Attributes, Dsp48e2, DspInputs, InMode, OpMode};
 /// `w_oc0/w_oc1` sit in B2/B1; the trace shows the four cross products
 /// appearing on P over two slow cycles.
 pub fn fig5_trace() -> String {
+    use std::fmt::Write as _;
+
     let mut dsp = Dsp48e2::new(Attributes {
         mreg: false,
         ..Attributes::os_inmux_pe()
     });
     let mut out = String::new();
     out.push_str("Fig. 5 — in-DSP multiplexing (DDR cross products)\n");
-    out.push_str(&format!(
-        "{:>4} {:>5} {:>8} {:>6} {:>6} {:>6} {:>6} {:>10}\n",
+    let _ = writeln!(
+        out,
+        "{:>4} {:>5} {:>8} {:>6} {:>6} {:>6} {:>6} {:>10}",
         "edge", "clk1", "a_in", "B1", "B2", "A2", "IN[4]", "P"
-    ));
+    );
 
     // Load weights: B2 <- 3 (direct), B1 <- 5.
     dsp.tick(&DspInputs {
@@ -52,8 +55,9 @@ pub fn fig5_trace() -> String {
             ..DspInputs::default()
         });
         let r = dsp.regs();
-        out.push_str(&format!(
-            "{:>4} {:>5} {:>8} {:>6} {:>6} {:>6} {:>6} {:>10}\n",
+        let _ = writeln!(
+            out,
+            "{:>4} {:>5} {:>8} {:>6} {:>6} {:>6} {:>6} {:>10}",
             e,
             slow,
             a_in,
@@ -62,7 +66,7 @@ pub fn fig5_trace() -> String {
             r.a2,
             u8::from(use_b1),
             dsp.p()
-        ));
+        );
     }
     out.push_str(
         "P shows a_t*w_oc0 / a_t*w_oc1 alternating: 4 products per 2 slow cycles.\n",
@@ -72,13 +76,16 @@ pub fn fig5_trace() -> String {
 
 /// Fig. 6: the ring accumulator's 4-stream interleave over 3 rounds.
 pub fn fig6_trace() -> String {
+    use std::fmt::Write as _;
+
     let mut ring = RingAccumulator::new(0);
     let mut out = String::new();
     out.push_str("Fig. 6 — ring accumulator (two DSP48E2s, latency-4 loop)\n");
-    out.push_str(&format!(
-        "{:>4} {:>7} {:>7} | {:>12} {:>12}\n",
+    let _ = writeln!(
+        out,
+        "{:>4} {:>7} {:>7} | {:>12} {:>12}",
         "edge", "inA", "inB", "out(lo px)", "out(hi px)"
-    ));
+    );
     let rounds = 3;
     // Stream s carries constant psums (s+1, 10*(s+1)) per round.
     let word = |s: usize| -> i64 {
@@ -96,16 +103,18 @@ pub fn fig6_trace() -> String {
         };
         ring.tick(wa, wb);
         let (lo, hi) = two24_lanes(ring.output());
-        out.push_str(&format!(
-            "{:>4} {:>7} {:>7} | {:>12} {:>12}\n",
+        let _ = writeln!(
+            out,
+            "{:>4} {:>7} {:>7} | {:>12} {:>12}",
             e, wa, wb, lo, hi
-        ));
+        );
     }
-    out.push_str(&format!(
+    let _ = writeln!(
+        out,
         "each stream accumulates 2 chains x {rounds} rounds: stream s totals \
-         (s+1)*{}, pixel-hi 10x that.\n",
+         (s+1)*{}, pixel-hi 10x that.",
         2 * rounds
-    ));
+    );
     out
 }
 

@@ -4,7 +4,7 @@ use super::{snn_inventory, snn_timing, SnnConfig, SnnVariant};
 use crate::cost::{ResourceInventory, TimingModel};
 use crate::dsp::{
     simd_lane, simd_pack, Attributes, CascadeTap, ColumnCtrl, DspArray,
-    InputSource, RowFeeds, SimdMode,
+    InputSource, OpMode, RowFeeds, SimdMode, WMux, XMux, YMux, ZMux,
 };
 use crate::engines::{Engine, EngineError, GemmRun, RunStats};
 use crate::exec::{self, Clocking, FillPlan, Scratch, TileKernel, TilePlan};
@@ -141,18 +141,37 @@ impl SnnEngine {
                 // latched by the A2/B2 hold pulse), C via the C
                 // register — one slice at a time, so the array's
                 // row-tick path drives bank element `(c, j)` alone.
+                // The ALU muxes park at zero during the fill: with CEP
+                // low the result is discarded either way, and FOUR12
+                // forbids routing the multiplier (the crossbar never
+                // uses it — MREG is absent from this profile).
+                let park = OpMode {
+                    x: XMux::Zero,
+                    y: YMux::Zero,
+                    z: ZMux::Zero,
+                    w: WMux::Zero,
+                };
+                // Only the enhanced variant sources A/B from the
+                // cascade; FireFly's direct inputs leave ACIN/BCIN
+                // undriven.
+                let cascade = self.cfg.variant == SnnVariant::Enhanced;
                 self.array.tick_row(
                     c,
                     j,
                     &ColumnCtrl {
+                        opmode: park,
                         cep: false,
                         ..ColumnCtrl::default()
                     },
                     &RowFeeds {
                         a: (ab_word >> 18) & ((1 << 30) - 1),
                         b: ab_word & ((1 << 18) - 1),
-                        acin: (ab_word >> 18) & ((1 << 30) - 1),
-                        bcin: ab_word & ((1 << 18) - 1),
+                        acin: if cascade {
+                            (ab_word >> 18) & ((1 << 30) - 1)
+                        } else {
+                            0
+                        },
+                        bcin: if cascade { ab_word & ((1 << 18) - 1) } else { 0 },
                         c: c_word,
                         ..RowFeeds::default()
                     },
@@ -162,6 +181,7 @@ impl SnnEngine {
                     c,
                     j,
                     &ColumnCtrl {
+                        opmode: park,
                         cep: false,
                         cea1: false,
                         ceb1: false,

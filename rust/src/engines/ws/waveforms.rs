@@ -8,24 +8,22 @@ use crate::dsp::{Attributes, Dsp48e2, DspInputs};
 /// Render the Fig.-3 trace for a `depth`-deep column and two weight
 /// sets; returns the text (also used by `examples/fig_waveforms.rs`).
 pub fn fig3_trace(depth: usize) -> String {
+    use std::fmt::Write as _;
+
     let mut col: Vec<Dsp48e2> = (0..depth)
         .map(|_| Dsp48e2::new(Attributes::ws_prefetch_pe()))
         .collect();
     let mut out = String::new();
-    out.push_str(&format!(
-        "Fig. 3 — in-DSP operand prefetching ({}-deep column)\n",
-        depth
-    ));
-    out.push_str(&format!(
-        "{:>5} {:>4} {:>4} | {}\n",
-        "cycle",
-        "CEB1",
-        "CEB2",
-        (0..depth)
-            .map(|i| format!("B1[{i}] B2[{i}]"))
-            .collect::<Vec<_>>()
-            .join("  ")
-    ));
+    let _ = writeln!(
+        out,
+        "Fig. 3 — in-DSP operand prefetching ({depth}-deep column)"
+    );
+    let _ = write!(out, "{:>5} {:>4} {:>4} |", "cycle", "CEB1", "CEB2");
+    for i in 0..depth {
+        let sep = if i == 0 { " " } else { "  " };
+        let _ = write!(out, "{sep}B1[{i}] B2[{i}]");
+    }
+    out.push('\n');
 
     let sets: [Vec<i64>; 2] = [
         (0..depth).map(|i| 10 + i as i64).collect(),
@@ -33,27 +31,32 @@ pub fn fig3_trace(depth: usize) -> String {
     ];
 
     let mut cycle = 0;
-    let line = |col: &[Dsp48e2], ceb1: bool, ceb2: bool, cycle: usize| {
-        format!(
-            "{:>5} {:>4} {:>4} | {}\n",
+    // One snapshot buffer for the whole trace: bcouts must be sampled
+    // before the edge (cascade neighbours see pre-edge values), but the
+    // snapshot itself is refilled in place, never reallocated.
+    let mut bcouts: Vec<i64> = Vec::with_capacity(depth);
+    let line = |out: &mut String, col: &[Dsp48e2], ceb1: bool, ceb2: bool, cycle: usize| {
+        let _ = write!(
+            out,
+            "{:>5} {:>4} {:>4} |",
             cycle,
             u8::from(ceb1),
-            u8::from(ceb2),
-            col.iter()
-                .map(|d| {
-                    let r = d.regs();
-                    format!("{:>5} {:>5}", r.b1, r.b2)
-                })
-                .collect::<Vec<_>>()
-                .join("  ")
-        )
+            u8::from(ceb2)
+        );
+        for (i, d) in col.iter().enumerate() {
+            let r = d.regs();
+            let sep = if i == 0 { " " } else { "  " };
+            let _ = write!(out, "{sep}{:>5} {:>5}", r.b1, r.b2);
+        }
+        out.push('\n');
     };
 
     for set in &sets {
         // Prefetch phase: CEB1 streams the set down the B1/BCIN chain
         // while B2 (the live weights) holds — compute keeps running.
         for t in 0..depth {
-            let bcouts: Vec<i64> = col.iter().map(|d| d.bcout()).collect();
+            bcouts.clear();
+            bcouts.extend(col.iter().map(|d| d.bcout()));
             for (r, dsp) in col.iter_mut().enumerate() {
                 let bcin = if r == 0 {
                     set[depth - 1 - t]
@@ -67,11 +70,12 @@ pub fn fig3_trace(depth: usize) -> String {
                     ..DspInputs::default()
                 });
             }
-            out.push_str(&line(&col, true, false, cycle));
+            line(&mut out, &col, true, false, cycle);
             cycle += 1;
         }
         // Swap pulse: one CEB2 edge moves the whole column B1 -> B2.
-        let bcouts: Vec<i64> = col.iter().map(|d| d.bcout()).collect();
+        bcouts.clear();
+        bcouts.extend(col.iter().map(|d| d.bcout()));
         for (r, dsp) in col.iter_mut().enumerate() {
             let bcin = if r == 0 { 0 } else { bcouts[r - 1] };
             dsp.tick(&DspInputs {
@@ -82,7 +86,7 @@ pub fn fig3_trace(depth: usize) -> String {
                 ..DspInputs::default()
             });
         }
-        out.push_str(&line(&col, false, true, cycle));
+        line(&mut out, &col, false, true, cycle);
         cycle += 1;
     }
     out

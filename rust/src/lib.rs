@@ -30,6 +30,12 @@
 //! [`coordinator`] ties the two together: it schedules tiled GEMM jobs
 //! onto cycle-accurate engines (for cost) and onto the PJRT executables
 //! (for values), asserting they agree bit-for-bit.
+//!
+//! A third correctness axis rides on top of bit-identity: the [`lint`]
+//! module statically verifies every engine's *control schedule* against
+//! a UG579-style legality rule set before it ever ticks on silicon.
+
+#![forbid(unsafe_code)]
 
 pub mod config;
 pub mod coordinator;
@@ -38,6 +44,7 @@ pub mod dsp;
 pub mod engines;
 pub mod exec;
 pub mod fabric;
+pub mod lint;
 pub mod packing;
 pub mod proto;
 pub mod runtime;

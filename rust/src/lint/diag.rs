@@ -1,0 +1,191 @@
+//! Diagnostics: findings located in `(engine, tile, cycle, col, row)`
+//! space, rendered as human text and canonical JSON (`util/json`).
+
+use crate::lint::rules::{Finding, Severity, RULES};
+use crate::util::json::Json;
+
+/// One located violation.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Rule ID.
+    pub rule: &'static str,
+    /// Severity copied from the catalog.
+    pub severity: Severity,
+    /// Human-readable detail.
+    pub message: String,
+    /// Engine label (`ws-dspfetch`, ...).
+    pub engine: String,
+    /// Which representative workload drove the schedule.
+    pub workload: &'static str,
+    /// Tile index within the run.
+    pub tile: usize,
+    /// Pre-edge cycle counter of the ticked structure.
+    pub cycle: u64,
+    /// Column, when slice-specific.
+    pub col: Option<usize>,
+    /// Row, when slice-specific.
+    pub row: Option<usize>,
+}
+
+/// Per-run bookkeeping for the report.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    /// Engine label.
+    pub engine: String,
+    /// Workload name.
+    pub workload: &'static str,
+    /// Recorded tick edges linted.
+    pub edges: usize,
+    /// Findings in this run.
+    pub findings: usize,
+}
+
+/// The whole lint report: every run plus every diagnostic.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// One entry per `(engine, workload)` run.
+    pub runs: Vec<RunSummary>,
+    /// All located violations, in run order.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Diagnostic {
+    /// Attach run coordinates to a raw rule finding.
+    pub fn locate(f: Finding, engine: &str, workload: &'static str, tile: usize) -> Self {
+        Diagnostic {
+            rule: f.rule,
+            severity: f.severity,
+            message: f.message,
+            engine: engine.to_string(),
+            workload,
+            tile,
+            cycle: f.cycle,
+            col: f.col,
+            row: f.row,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        fn opt(v: Option<usize>) -> Json {
+            v.map_or(Json::Null, Json::from)
+        }
+        Json::object(vec![
+            ("rule", Json::from(self.rule)),
+            ("severity", Json::from(self.severity.label())),
+            ("message", Json::from(self.message.as_str())),
+            ("engine", Json::from(self.engine.as_str())),
+            ("workload", Json::from(self.workload)),
+            ("tile", Json::from(self.tile)),
+            ("cycle", Json::uint(self.cycle)),
+            ("col", opt(self.col)),
+            ("row", opt(self.row)),
+        ])
+    }
+}
+
+impl LintReport {
+    /// Total violations (warnings included — both levels gate CI).
+    pub fn violations(&self) -> usize {
+        self.diagnostics.len()
+    }
+
+    /// Canonical JSON for the CI artifact.
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("version", Json::from(1i64)),
+            ("violations", Json::from(self.violations())),
+            (
+                "rules",
+                Json::array(
+                    RULES
+                        .iter()
+                        .map(|r| {
+                            Json::object(vec![
+                                ("id", Json::from(r.id)),
+                                ("severity", Json::from(r.severity.label())),
+                                ("summary", Json::from(r.summary)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "runs",
+                Json::array(
+                    self.runs
+                        .iter()
+                        .map(|r| {
+                            Json::object(vec![
+                                ("engine", Json::from(r.engine.as_str())),
+                                ("workload", Json::from(r.workload)),
+                                ("edges", Json::from(r.edges)),
+                                ("findings", Json::from(r.findings)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "diagnostics",
+                Json::array(self.diagnostics.iter().map(|d| d.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Human-readable report.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "control-legality lint: {} run(s)", self.runs.len());
+        for r in &self.runs {
+            let _ = writeln!(
+                out,
+                "  {:<14} {:<6} {:>7} edge(s)  {}",
+                r.engine,
+                r.workload,
+                r.edges,
+                if r.findings == 0 {
+                    "clean".to_string()
+                } else {
+                    format!("{} finding(s)", r.findings)
+                }
+            );
+        }
+        for d in &self.diagnostics {
+            let loc = match (d.col, d.row) {
+                (Some(c), Some(r)) => format!(" col {c} row {r}"),
+                (Some(c), None) => format!(" col {c}"),
+                _ => String::new(),
+            };
+            let _ = writeln!(
+                out,
+                "{}: {} [{}/{} tile {} cycle {}{}] {}",
+                d.severity.label(),
+                d.rule,
+                d.engine,
+                d.workload,
+                d.tile,
+                d.cycle,
+                loc,
+                d.message
+            );
+        }
+        let _ = writeln!(out, "violations: {}", self.violations());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_report_serializes_clean() {
+        let rep = LintReport::default();
+        assert_eq!(rep.violations(), 0);
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"violations\": 0"), "{j}");
+        assert!(j.contains("SIMD-001"), "{j}");
+        assert!(rep.render_text().contains("violations: 0"));
+    }
+}

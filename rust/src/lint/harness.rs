@@ -1,0 +1,118 @@
+//! The lint harness: construct every `EngineKind` with its shipped
+//! `Attributes` profile, drive one representative tile per workload,
+//! and lint the recorded control schedule.
+//!
+//! The harness runs engines on the *calling* thread (the trace sink is
+//! thread-local), with deterministic operands — linting is about the
+//! control schedule, which for these engines depends on shapes and
+//! sparsity structure, not operand values.
+
+use crate::coordinator::service::EngineKind;
+use crate::coordinator::ServiceConfig;
+use crate::engines::Engine;
+use crate::lint::diag::{Diagnostic, LintReport, RunSummary};
+use crate::lint::rules::ScheduleChecker;
+use crate::lint::trace;
+use crate::workload::MatI8;
+
+/// The representative workloads every engine is linted under.
+pub const WORKLOADS: &[&str] = &["gemm", "conv", "snn", "sparse"];
+
+/// Deterministic small dense value in roughly [-3, 3].
+fn dense(r: usize, c: usize) -> i8 {
+    ((r * 7 + c * 5 + 3) % 7) as i8 - 3
+}
+
+/// Deterministic spike bit.
+fn spike(r: usize, c: usize) -> i8 {
+    i8::from((r * 13 + c * 11) % 3 == 0)
+}
+
+/// Representative operands for one `(kind, workload)` run.
+///
+/// Shapes are family-specific: WS tiles are fixed at the service
+/// geometry (k = rows = 14), the SNN crossbar consumes 32 binary
+/// inputs, the OS engine self-tiles any shape. "conv" differs from
+/// "gemm" by an im2col-shaped activation count, "sparse" zeroes
+/// weights in a 2:4 structure, "snn" drives binary activations — the
+/// schedule variations (tile counts, fill patterns, spike masks) are
+/// what gets linted.
+fn operands(kind: EngineKind, workload: &str) -> (MatI8, MatI8) {
+    let snn = matches!(kind, EngineKind::SnnFireFly | EngineKind::SnnEnhanced);
+    let ws = matches!(
+        kind,
+        EngineKind::WsTinyTpu
+            | EngineKind::WsLibano
+            | EngineKind::WsClbFetch
+            | EngineKind::WsDspFetch
+    );
+    let (k, n) = if snn {
+        (32, 16)
+    } else if ws {
+        (14, 14)
+    } else {
+        (8, 7)
+    };
+    let m = match workload {
+        // 3x3 window over a 3x3 output patch, im2col'd.
+        "conv" => 9,
+        _ => 6,
+    };
+    let a = if snn || workload == "snn" {
+        MatI8::from_fn(m, k, spike)
+    } else {
+        MatI8::from_fn(m, k, dense)
+    };
+    let w = if workload == "sparse" {
+        // 2:4 structured sparsity along k.
+        MatI8::from_fn(k, n, |r, c| if r % 4 < 2 { dense(r, c) } else { 0 })
+    } else {
+        MatI8::from_fn(k, n, dense)
+    };
+    (a, w)
+}
+
+/// Lint one engine kind under every representative workload,
+/// appending to the report. Returns an error string when a run itself
+/// fails (a harness bug, not a lint finding).
+pub fn lint_kind(kind: EngineKind, report: &mut LintReport) -> Result<(), String> {
+    let label = kind.label();
+    for (tile, workload) in WORKLOADS.iter().copied().enumerate() {
+        let mut engine: Box<dyn Engine + Send> = ServiceConfig {
+            kind,
+            ..ServiceConfig::default()
+        }
+        .build_engine();
+        let (a, w) = operands(kind, workload);
+        trace::begin();
+        let run = engine.run_gemm(&a, &w);
+        let recorded = trace::end();
+        run.map_err(|e| format!("{label}/{workload}: engine run failed: {e:?}"))?;
+        let findings = ScheduleChecker::check_trace(&recorded);
+        report.runs.push(RunSummary {
+            engine: label.to_string(),
+            workload,
+            edges: recorded.steps.len(),
+            findings: findings.len(),
+        });
+        report
+            .diagnostics
+            .extend(findings.into_iter().map(|f| Diagnostic::locate(f, label, workload, tile)));
+    }
+    Ok(())
+}
+
+/// Lint every shipped engine kind. The `lint` CLI subcommand and the
+/// all-kinds-clean test both sit on this.
+pub fn lint_kinds(kinds: &[EngineKind]) -> Result<LintReport, String> {
+    let mut report = LintReport::default();
+    for &kind in kinds {
+        lint_kind(kind, &mut report)?;
+    }
+    Ok(report)
+}
+
+/// Lint all 8 engine kinds.
+pub fn lint_all() -> Result<LintReport, String> {
+    lint_kinds(&EngineKind::all())
+}

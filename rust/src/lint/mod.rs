@@ -1,0 +1,30 @@
+//! Static control-legality model of the DSP48E2 control space.
+//!
+//! Bit-identity testing (the column/array oracle tower) proves the
+//! simulator computes the right numbers; it cannot prove a schedule is
+//! *legal on silicon*. The paper's techniques are all control-schedule
+//! tricks — INMODE[4] prefetch swaps, CEB1/CEB2 gating, TWO24/FOUR12
+//! SIMD modes, PCIN cascades — and an engine can drive the behavioral
+//! model with a control word UG579 forbids (multiplier under a SIMD
+//! mode, a B1 tap on a one-deep pipeline) while every output bit still
+//! checks out. This module is the second correctness axis:
+//!
+//! * [`trace`] — a zero-cost-when-off recorder that captures each tick
+//!   edge's symbolic control word from `DspColumn`/`DspArray`;
+//! * [`rules`] — the UG579-style rule catalog with stable IDs and a
+//!   [`rules::ScheduleChecker`] that replays a trace against it;
+//! * [`diag`] — findings located in `(engine, tile, cycle, col, row)`
+//!   space, rendered as text or canonical JSON;
+//! * [`harness`] — builds all 8 `EngineKind`s, drives one
+//!   representative tile per workload, and lints the recorded
+//!   schedules (the `lint` CLI subcommand and CI gate).
+
+pub mod diag;
+pub mod harness;
+pub mod rules;
+pub mod trace;
+
+pub use diag::{Diagnostic, LintReport, RunSummary};
+pub use harness::{lint_all, lint_kind, lint_kinds};
+pub use rules::{check_pair, Finding, Rule, ScheduleChecker, Severity, RULES};
+pub use trace::{CtrlTrace, StepKind, TraceStep};

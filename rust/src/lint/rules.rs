@@ -1,0 +1,559 @@
+//! The UG579-style control-legality rule catalog and schedule checker.
+//!
+//! Rules operate on `(Attributes, ColumnCtrl)` pairs — the *static*
+//! slice configuration against the *per-edge* control word — plus a
+//! little protocol state for the paper's scheduling disciplines. The
+//! point is the class of bug bit-identity testing cannot see: a
+//! schedule that simulates fine (the behavioral model happily
+//! multiplies under `FOUR12`) but is illegal on real silicon and would
+//! sink an RTL port.
+//!
+//! Every rule has a stable ID; `tests/lint_props.rs` pins the IDs with
+//! deliberately illegal schedules and `rust/README.md` carries the
+//! catalog prose. Severity `Warning` still counts as a violation for
+//! the CI gate — a warning rule is one where UG579 leaves the
+//! configuration functional but pointless (e.g. a driven cascade no
+//! mux ever reads), which in this codebase always means a schedule bug.
+
+use crate::dsp::contract;
+use crate::dsp::{
+    Attributes, CascadeTap, ColumnCtrl, InMode, InputSource, MultSel, OpMode, SimdMode, WMux,
+    XMux, YMux, ZMux,
+};
+use crate::lint::trace::{CtrlTrace, StepKind, TraceStep};
+
+/// How bad a finding is. Both levels fail the `lint` subcommand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Functional on silicon but certainly not what the schedule meant.
+    Warning,
+    /// Illegal or undefined per UG579 / the paper's protocol.
+    Error,
+}
+
+impl Severity {
+    /// Lower-case label used in text and JSON output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One catalog entry.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    /// Stable identifier (`SIMD-001`, ...). Never renumber.
+    pub id: &'static str,
+    /// Finding severity.
+    pub severity: Severity,
+    /// One-line statement of the constraint.
+    pub summary: &'static str,
+}
+
+/// The full rule catalog, in ID order.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "CTRL-001",
+        severity: Severity::Error,
+        summary: "OPMODE X and Y must select the multiplier together (UG579 Table 2-7)",
+    },
+    Rule {
+        id: "SIMD-001",
+        severity: Severity::Error,
+        summary: "SIMD modes (TWO24/FOUR12) forbid the multiplier path: no X=M / Y=M",
+    },
+    Rule {
+        id: "SIMD-002",
+        severity: Severity::Error,
+        summary: "SIMD modes require MREG unused: CEM must stay low when an M register exists",
+    },
+    Rule {
+        id: "PIPE-001",
+        severity: Severity::Error,
+        summary: "INMODE[0] (use A1) requires a two-deep A pipeline (AREG = 2)",
+    },
+    Rule {
+        id: "PIPE-002",
+        severity: Severity::Error,
+        summary: "INMODE[4] (use B1) requires a two-deep B pipeline (BREG = 2)",
+    },
+    Rule {
+        id: "PIPE-003",
+        severity: Severity::Error,
+        summary: "INMODE[2] (enable D) requires the D register (DREG = 1)",
+    },
+    Rule {
+        id: "PRE-001",
+        severity: Severity::Error,
+        summary: "pre-adder operand registers must clock with the multiplier: CEAD/CED \
+                  may not gate while CEM captures an AMULTSEL=AD product",
+    },
+    Rule {
+        id: "PRE-002",
+        severity: Severity::Warning,
+        summary: "INMODE drives the pre-adder (D enable / subtract) but AMULTSEL=A ignores it",
+    },
+    Rule {
+        id: "CASC-001",
+        severity: Severity::Error,
+        summary: "BCIN driven but B input source is DIRECT — the cascade feed is never read",
+    },
+    Rule {
+        id: "CASC-002",
+        severity: Severity::Error,
+        summary: "ACIN driven but A input source is DIRECT — the cascade feed is never read",
+    },
+    Rule {
+        id: "CASC-003",
+        severity: Severity::Warning,
+        summary: "PCIN driven but OPMODE Z never selects the P cascade",
+    },
+    Rule {
+        id: "WS-001",
+        severity: Severity::Error,
+        summary: "CEB2 may only pulse once B1 holds a complete prefetched weight set \
+                  (paper Fig. 3 discipline)",
+    },
+    Rule {
+        id: "FEED-001",
+        severity: Severity::Error,
+        summary: "operand/mask feeds must cover the array geometry (shared shape contract)",
+    },
+];
+
+/// Catalog lookup by ID. Panics on an unknown ID — rule IDs are
+/// compile-time constants inside this module.
+pub fn rule(id: &str) -> &'static Rule {
+    RULES
+        .iter()
+        .find(|r| r.id == id)
+        .unwrap_or_else(|| panic!("unknown rule id {id}"))
+}
+
+/// One rule violation at a trace location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule ID (`SIMD-001`, ...).
+    pub rule: &'static str,
+    /// Severity copied from the catalog.
+    pub severity: Severity,
+    /// Human-readable detail with the offending values.
+    pub message: String,
+    /// Pre-edge cycle counter of the ticked structure.
+    pub cycle: u64,
+    /// Column, when the violation is slice-specific.
+    pub col: Option<usize>,
+    /// Row, when the violation is slice-specific.
+    pub row: Option<usize>,
+}
+
+/// Replays a [`CtrlTrace`] against the catalog.
+///
+/// The checker is stateful only for the protocol rules: `WS-001`
+/// tracks how many B1 shift edges have landed since the last CEB2
+/// swap. Use one checker per recorded trace.
+#[derive(Debug, Default)]
+pub struct ScheduleChecker {
+    /// B1 shift edges accumulated since the last swap (WS-001).
+    shifts: u64,
+}
+
+impl ScheduleChecker {
+    /// Fresh checker (no protocol state).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check a whole trace in order.
+    pub fn check_trace(trace: &CtrlTrace) -> Vec<Finding> {
+        let mut checker = Self::new();
+        let mut out = Vec::new();
+        for step in &trace.steps {
+            checker.check_step(step, &mut out);
+        }
+        out
+    }
+
+    /// Check one step, appending findings.
+    pub fn check_step(&mut self, step: &TraceStep, out: &mut Vec<Finding>) {
+        match &step.kind {
+            StepKind::Tick {
+                ctrl,
+                acin0,
+                bcin0,
+                pcin0,
+            } => {
+                check_ctrl(step, ctrl, *acin0, *bcin0, *pcin0, None, None, out);
+                self.ws_discipline(step, ctrl, out);
+            }
+            StepKind::TickRow {
+                col,
+                row,
+                ctrl,
+                acin,
+                bcin,
+                pcin,
+            } => {
+                // Per-slice commits are direct loads outside the
+                // column-wide shift protocol: WS-001 does not apply.
+                check_ctrl(step, ctrl, *acin, *bcin, *pcin, Some(*col), Some(*row), out);
+            }
+            StepKind::WsStream { a_len, d_len } => {
+                // Implied control word of the streaming fast path: the
+                // B pipeline frozen, activations through A (and D when
+                // the pre-adder packs two lanes), MULT_CASCADE compute.
+                let inmode = if step.attrs.amultsel == MultSel::Ad {
+                    InMode::A2_B2.with_d()
+                } else {
+                    InMode::A2_B2
+                };
+                let ctrl = ColumnCtrl {
+                    inmode,
+                    opmode: OpMode::MULT_CASCADE,
+                    ceb1: false,
+                    ceb2: false,
+                    ..ColumnCtrl::default()
+                };
+                check_ctrl(step, &ctrl, false, false, false, None, None, out);
+                if let Err(e) =
+                    contract::ws_stream_feeds(step.rows * step.cols, *a_len, *d_len)
+                {
+                    push(out, "FEED-001", step, None, None, format!("tick_ws_stream: {e}"));
+                }
+            }
+            StepKind::OsChain {
+                a_len,
+                d_len,
+                b_len,
+                use_b1,
+                ceb1,
+                ceb2,
+            } => {
+                // Uniform part of the chain schedule; the three skewed
+                // controls arrive as per-column row masks below.
+                let ctrl = ColumnCtrl {
+                    inmode: InMode::A2_B2.with_d(),
+                    opmode: OpMode::MULT_CASCADE,
+                    ..ColumnCtrl::default()
+                };
+                check_ctrl(step, &ctrl, false, false, false, None, None, out);
+                if step.attrs.breg < 2 {
+                    // BREG=1 has no B1 stage at all: any INMODE[4]
+                    // select reads a register that does not exist.
+                    for (col, mask) in use_b1.iter().enumerate() {
+                        if *mask != 0 {
+                            let row = mask.trailing_zeros() as usize;
+                            push(
+                                out,
+                                "PIPE-002",
+                                step,
+                                Some(col),
+                                Some(row),
+                                format!(
+                                    "INMODE[4] selects B1 on a BREG={} chain \
+                                     (use_b1 mask {:#x})",
+                                    step.attrs.breg, mask
+                                ),
+                            );
+                        }
+                    }
+                }
+                if let Err(e) = contract::os_chain_feeds(
+                    step.rows,
+                    step.rows * step.cols,
+                    *a_len,
+                    *d_len,
+                    *b_len,
+                    step.cols,
+                    use_b1.len(),
+                    ceb1.len(),
+                    ceb2.len(),
+                ) {
+                    push(out, "FEED-001", step, None, None, format!("tick_os_chain: {e}"));
+                }
+            }
+            StepKind::SnnCrossbar { mask_cols } => {
+                // Implied control word of the crossbar: spike muxes on
+                // the wide buses, every input register held, only CEP.
+                let ctrl = ColumnCtrl {
+                    opmode: OpMode {
+                        x: XMux::Ab,
+                        y: YMux::C,
+                        z: ZMux::Pcin,
+                        w: WMux::Zero,
+                    },
+                    cea1: false,
+                    cea2: false,
+                    ceb1: false,
+                    ceb2: false,
+                    ced: false,
+                    cead: false,
+                    cec: false,
+                    cem: false,
+                    ..ColumnCtrl::default()
+                };
+                check_ctrl(step, &ctrl, false, false, false, None, None, out);
+                if let Err(e) = contract::snn_crossbar_masks(
+                    step.rows, step.cols, *mask_cols, *mask_cols,
+                ) {
+                    push(
+                        out,
+                        "FEED-001",
+                        step,
+                        None,
+                        None,
+                        format!("tick_snn_crossbar: {e}"),
+                    );
+                }
+            }
+        }
+    }
+
+    /// WS-001: the Fig. 3 prefetch discipline. On a prefetch-configured
+    /// column (B cascade input tapped at Reg1 into a two-deep pipeline),
+    /// a CEB2 swap pulse is only legal after at least `rows` CEB1 shift
+    /// edges — otherwise B2 captures a half-loaded weight set.
+    fn ws_discipline(&mut self, step: &TraceStep, ctrl: &ColumnCtrl, out: &mut Vec<Finding>) {
+        let at = &step.attrs;
+        let prefetch = at.b_input == InputSource::Cascade
+            && at.b_cascade_tap == CascadeTap::Reg1
+            && at.breg >= 2
+            && !at.b2_direct;
+        if !prefetch {
+            return;
+        }
+        if ctrl.ceb2 {
+            if self.shifts < step.rows as u64 {
+                push(
+                    out,
+                    "WS-001",
+                    step,
+                    None,
+                    None,
+                    format!(
+                        "CEB2 swap after only {} B1 shift edges; a complete \
+                         prefetched set needs {}",
+                        self.shifts, step.rows
+                    ),
+                );
+            }
+            self.shifts = u64::from(ctrl.ceb1);
+        } else if ctrl.ceb1 {
+            self.shifts += 1;
+        }
+    }
+}
+
+/// The stateless per-edge rules over one `(Attributes, ColumnCtrl)`
+/// pair plus the cascade-head drive flags.
+#[allow(clippy::too_many_arguments)]
+fn check_ctrl(
+    step: &TraceStep,
+    ctrl: &ColumnCtrl,
+    acin: bool,
+    bcin: bool,
+    pcin: bool,
+    col: Option<usize>,
+    row: Option<usize>,
+    out: &mut Vec<Finding>,
+) {
+    let at = &step.attrs;
+    let x_m = ctrl.opmode.x == XMux::M;
+    let y_m = ctrl.opmode.y == YMux::M;
+
+    if x_m != y_m {
+        push(
+            out,
+            "CTRL-001",
+            step,
+            col,
+            row,
+            format!(
+                "OPMODE selects M on {} only (x={:?}, y={:?})",
+                if x_m { "X" } else { "Y" },
+                ctrl.opmode.x,
+                ctrl.opmode.y
+            ),
+        );
+    }
+    if at.simd != SimdMode::One48 {
+        if x_m || y_m {
+            push(
+                out,
+                "SIMD-001",
+                step,
+                col,
+                row,
+                format!(
+                    "OPMODE routes the multiplier (x={:?}, y={:?}) under {:?}",
+                    ctrl.opmode.x, ctrl.opmode.y, at.simd
+                ),
+            );
+        }
+        if ctrl.cem && at.mreg {
+            push(
+                out,
+                "SIMD-002",
+                step,
+                col,
+                row,
+                format!("CEM clocks the M register under {:?}", at.simd),
+            );
+        }
+    }
+    if ctrl.inmode.use_a1() && at.areg < 2 {
+        push(
+            out,
+            "PIPE-001",
+            step,
+            col,
+            row,
+            format!("INMODE[0] selects A1 but AREG={}", at.areg),
+        );
+    }
+    if ctrl.inmode.use_b1() && at.breg < 2 {
+        push(
+            out,
+            "PIPE-002",
+            step,
+            col,
+            row,
+            format!("INMODE[4] selects B1 but BREG={}", at.breg),
+        );
+    }
+    if ctrl.inmode.d_enable() && !at.dreg {
+        push(
+            out,
+            "PIPE-003",
+            step,
+            col,
+            row,
+            "INMODE[2] enables the D port but DREG=0".to_string(),
+        );
+    }
+    if at.amultsel == MultSel::Ad
+        && at.mreg
+        && ctrl.cem
+        && ((at.adreg && !ctrl.cead) || (at.dreg && !ctrl.ced))
+    {
+        push(
+            out,
+            "PRE-001",
+            step,
+            col,
+            row,
+            format!(
+                "CEM captures an AD product while the pre-adder pipeline gates \
+                 (cead={}, ced={})",
+                ctrl.cead, ctrl.ced
+            ),
+        );
+    }
+    if (ctrl.inmode.d_enable() || ctrl.inmode.preadd_sub()) && at.amultsel == MultSel::A {
+        push(
+            out,
+            "PRE-002",
+            step,
+            col,
+            row,
+            "INMODE drives the pre-adder but AMULTSEL=A bypasses it".to_string(),
+        );
+    }
+    if bcin && at.b_input == InputSource::Direct {
+        push(
+            out,
+            "CASC-001",
+            step,
+            col,
+            row,
+            "BCIN driven on a DIRECT-B slice".to_string(),
+        );
+    }
+    if acin && at.a_input == InputSource::Direct {
+        push(
+            out,
+            "CASC-002",
+            step,
+            col,
+            row,
+            "ACIN driven on a DIRECT-A slice".to_string(),
+        );
+    }
+    if pcin && !matches!(ctrl.opmode.z, ZMux::Pcin | ZMux::PcinShift17) {
+        push(
+            out,
+            "CASC-003",
+            step,
+            col,
+            row,
+            format!("PCIN driven but OPMODE z={:?}", ctrl.opmode.z),
+        );
+    }
+}
+
+fn push(
+    out: &mut Vec<Finding>,
+    id: &'static str,
+    step: &TraceStep,
+    col: Option<usize>,
+    row: Option<usize>,
+    message: String,
+) {
+    out.push(Finding {
+        rule: rule(id).id,
+        severity: rule(id).severity,
+        message,
+        cycle: step.cycle,
+        col,
+        row,
+    });
+}
+
+/// Lint a column/array configuration against one explicit control word
+/// — the entry point for checking a schedule *before* it ever ticks,
+/// without recording a trace.
+pub fn check_pair(attrs: &Attributes, rows: usize, ctrl: &ColumnCtrl) -> Vec<Finding> {
+    let step = TraceStep {
+        attrs: *attrs,
+        rows,
+        cols: 1,
+        cycle: 0,
+        kind: StepKind::Tick {
+            ctrl: *ctrl,
+            acin0: false,
+            bcin0: false,
+            pcin0: false,
+        },
+    };
+    let mut out = Vec::new();
+    check_ctrl(&step, ctrl, false, false, false, None, None, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_ids_are_unique() {
+        let mut ids: Vec<_> = RULES.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), RULES.len());
+    }
+
+    #[test]
+    fn default_pair_is_clean() {
+        let f = check_pair(&Attributes::default(), 4, &ColumnCtrl::default());
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn simd_with_mult_mux_trips_simd_001() {
+        let at = Attributes::firefly_crossbar();
+        let f = check_pair(&at, 4, &ColumnCtrl::default());
+        assert!(f.iter().any(|f| f.rule == "SIMD-001"), "{f:?}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Control-schedule trace recorder.
+//!
+//! When enabled, every tick edge of a [`DspColumn`](crate::dsp::DspColumn)
+//! or [`DspArray`](crate::dsp::DspArray) records one [`TraceStep`] — the
+//! *symbolic* control word that drove the edge, never operand data. The
+//! lint rule engine then replays the step stream against the UG579-style
+//! rule catalog (`lint::rules`).
+//!
+//! The recorder is a thread-local sink behind a `Cell<bool>` gate, so
+//! the cost in the simulation hot loops when tracing is off is one
+//! thread-local boolean load per tick call (not per slice), and the
+//! frozen bench metrics cannot move: recording observes control words,
+//! it never alters them.
+
+use std::cell::{Cell, RefCell};
+
+use crate::dsp::{Attributes, ColumnCtrl};
+
+/// What kind of tick edge a step describes.
+#[derive(Debug, Clone)]
+pub enum StepKind {
+    /// A generic full-column/full-array `tick`: one shared control word
+    /// for every slice, plus whether each cascade head port was driven.
+    Tick {
+        /// The shared control word.
+        ctrl: ColumnCtrl,
+        /// ACIN was driven non-zero at some column head.
+        acin0: bool,
+        /// BCIN was driven non-zero at some column head.
+        bcin0: bool,
+        /// PCIN was driven non-zero at some column head.
+        pcin0: bool,
+    },
+    /// A single-slice `tick_row` edge.
+    TickRow {
+        /// Column of the slice.
+        col: usize,
+        /// Row of the slice.
+        row: usize,
+        /// The control word for this slice.
+        ctrl: ColumnCtrl,
+        /// ACIN driven non-zero.
+        acin: bool,
+        /// BCIN driven non-zero.
+        bcin: bool,
+        /// PCIN driven non-zero.
+        pcin: bool,
+    },
+    /// The weight-stationary streaming fast path (implied control word:
+    /// `MULT_CASCADE`, B pipeline frozen).
+    WsStream {
+        /// Words supplied on the A stream.
+        a_len: usize,
+        /// Words supplied on the D stream.
+        d_len: usize,
+    },
+    /// The output-stationary chain fast path with its per-column
+    /// `use_b1` / `ceb1` / `ceb2` row bitmasks.
+    OsChain {
+        /// Words supplied on A.
+        a_len: usize,
+        /// Words supplied on D.
+        d_len: usize,
+        /// Words supplied on B.
+        b_len: usize,
+        /// Per-column INMODE[4] row masks.
+        use_b1: Vec<u64>,
+        /// Per-column CEB1 row masks.
+        ceb1: Vec<u64>,
+        /// Per-column CEB2 row masks.
+        ceb2: Vec<u64>,
+    },
+    /// The SNN crossbar fast path (accumulate-only OPMODE, spike masks).
+    SnnCrossbar {
+        /// Mask words supplied (per column).
+        mask_cols: usize,
+    },
+}
+
+/// One recorded tick edge.
+#[derive(Debug, Clone)]
+pub struct TraceStep {
+    /// The static attribute profile of the ticked column/array.
+    pub attrs: Attributes,
+    /// Rows per column.
+    pub rows: usize,
+    /// Columns (1 for a `DspColumn`).
+    pub cols: usize,
+    /// Pre-edge cycle counter of the ticked structure.
+    pub cycle: u64,
+    /// The edge's control payload.
+    pub kind: StepKind,
+}
+
+/// An ordered stream of recorded tick edges.
+#[derive(Debug, Clone, Default)]
+pub struct CtrlTrace {
+    /// The steps, in tick order.
+    pub steps: Vec<TraceStep>,
+}
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static SINK: RefCell<CtrlTrace> = const { RefCell::new(CtrlTrace { steps: Vec::new() }) };
+}
+
+/// Is the recorder currently capturing on this thread?
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Start capturing: clears any previous trace and arms the sink.
+pub fn begin() {
+    SINK.with(|s| s.borrow_mut().steps.clear());
+    ENABLED.with(|e| e.set(true));
+}
+
+/// Stop capturing and take the recorded trace.
+pub fn end() -> CtrlTrace {
+    ENABLED.with(|e| e.set(false));
+    SINK.with(|s| std::mem::take(&mut *s.borrow_mut()))
+}
+
+/// Append a step (callers must gate on [`enabled`] first — tick paths
+/// do, so the off-path cost stays one boolean load).
+pub(crate) fn record(step: TraceStep) {
+    SINK.with(|s| s.borrow_mut().steps.push(step));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::Attributes;
+
+    #[test]
+    fn begin_end_round_trip_is_isolated() {
+        assert!(!enabled());
+        begin();
+        assert!(enabled());
+        record(TraceStep {
+            attrs: Attributes::default(),
+            rows: 1,
+            cols: 1,
+            cycle: 0,
+            kind: StepKind::WsStream { a_len: 1, d_len: 1 },
+        });
+        let t = end();
+        assert!(!enabled());
+        assert_eq!(t.steps.len(), 1);
+        // A second end() after taking yields an empty trace.
+        assert!(end().steps.is_empty());
+    }
+}

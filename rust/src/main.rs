@@ -20,6 +20,9 @@
 //! dsp48-systolic client shutdown --addr HOST:PORT   # drain + stop
 //! dsp48-systolic sweep --min 6 --max 14       # tinyTPU-style size sweep
 //! dsp48-systolic waveform --fig 3|5|6         # paper waveform traces
+//! dsp48-systolic lint                         # control-legality audit
+//! dsp48-systolic lint --format json --out LINT_report.json
+//! dsp48-systolic lint --engine ws-dsp-fetch   # one engine only
 //! dsp48-systolic artifacts                    # list AOT registry
 //! ```
 //!
@@ -65,7 +68,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 const USAGE: &str = "usage: dsp48-systolic \
-     <report|simulate|serve|client|sweep|waveform|artifacts> [--flag value ...]";
+     <report|simulate|serve|client|sweep|waveform|lint|artifacts> [--flag value ...]";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -86,6 +89,7 @@ fn main() {
         "client" => cmd_client(&args, &flags),
         "sweep" => cmd_sweep(&flags),
         "waveform" => cmd_waveform(&flags),
+        "lint" => cmd_lint(&flags),
         "artifacts" => cmd_artifacts(&flags),
         _ => unreachable!("validate_flags rejects unknown commands"),
     };
@@ -166,6 +170,7 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
         ],
         "sweep" => &["min", "max"],
         "waveform" => &["fig"],
+        "lint" => &["format", "engine", "out"],
         "artifacts" => &[],
         _ => return None,
     })
@@ -1315,6 +1320,50 @@ fn cmd_waveform(flags: &HashMap<String, String>) -> i32 {
     0
 }
 
+/// `lint`: run every engine (or one, with `--engine`) over one
+/// representative tile per workload with the control-schedule recorder
+/// armed, then check the captured trace against the UG579-style rule
+/// catalog. Exit 0 when every schedule is legal, 1 on violations (or
+/// harness failure), 2 on usage errors — so CI can gate on it.
+fn cmd_lint(flags: &HashMap<String, String>) -> i32 {
+    use dsp48_systolic::lint::{lint_all, lint_kinds};
+
+    let format = flags.get("format").map(String::as_str).unwrap_or("text");
+    if !matches!(format, "text" | "json") {
+        eprintln!("lint: unknown --format `{format}` (have text, json)");
+        return 2;
+    }
+    let report = match flags.get("engine") {
+        Some(label) => {
+            let Some(kind) = EngineKind::parse(label) else {
+                eprintln!("lint: unknown engine `{label}`");
+                return 2;
+            };
+            lint_kinds(&[kind])
+        }
+        None => lint_all(),
+    };
+    let report = match report {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: harness failed: {e}");
+            return 1;
+        }
+    };
+    let rendered = match format {
+        "json" => format!("{}\n", report.to_json().to_pretty()),
+        _ => report.render_text(),
+    };
+    if let Some(path) = flags.get("out") {
+        if let Err(e) = std::fs::write(path, &rendered) {
+            eprintln!("lint: cannot write {path}: {e}");
+            return 1;
+        }
+    }
+    print!("{rendered}");
+    i32::from(report.violations() > 0)
+}
+
 fn cmd_artifacts(_flags: &HashMap<String, String>) -> i32 {
     match ArtifactRegistry::open_default() {
         Ok(reg) => {
@@ -1422,6 +1471,9 @@ mod tests {
             ],
             vec!["sweep", "--min", "6"],
             vec!["waveform", "--fig", "5"],
+            vec!["lint"],
+            vec!["lint", "--format", "json", "--out", "/tmp/lint.json"],
+            vec!["lint", "--engine", "ws-dsp-fetch"],
             vec!["artifacts"],
         ] {
             let (cmd, flags) = parse_args(&args(&argv));

@@ -1,0 +1,172 @@
+//! Lint-layer properties: every shipped engine's control schedule is
+//! legal, and deliberately illegal schedules are rejected with their
+//! specific stable rule IDs — the negative half the all-clean run
+//! cannot witness.
+
+use dsp48_systolic::dsp::{Attributes, ColumnCtrl, ColumnFeeds, DspColumn, InMode};
+use dsp48_systolic::lint::trace;
+use dsp48_systolic::lint::{
+    CtrlTrace, Diagnostic, LintReport, ScheduleChecker, Severity, StepKind, TraceStep,
+};
+
+/// A multiplier-path OPMODE under a FOUR12 SIMD partition must trip
+/// SIMD-001 — recorded from a *real* column tick, so the test covers
+/// the recorder hook as well as the rule.
+#[test]
+fn four12_with_mult_mux_trips_simd_001() {
+    let mut col = DspColumn::new(Attributes::firefly_crossbar(), 4);
+    trace::begin();
+    // Default control word routes X/Y to the multiplier (OPMODE MULT).
+    col.tick(&ColumnCtrl::default(), &ColumnFeeds::default());
+    let recorded = trace::end();
+    assert_eq!(recorded.steps.len(), 1);
+    let findings = ScheduleChecker::check_trace(&recorded);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "SIMD-001");
+    assert_eq!(findings[0].severity, Severity::Error);
+}
+
+/// INMODE[4] (use B1) against a one-deep B pipeline must trip
+/// PIPE-002. Constructed as a raw trace step: the behavioral model has
+/// no B1 bank to misread, so only the linter can see this class of bug.
+#[test]
+fn use_b1_with_breg1_trips_pipe_002() {
+    let step = TraceStep {
+        attrs: Attributes {
+            breg: 1,
+            ..Attributes::default()
+        },
+        rows: 4,
+        cols: 1,
+        cycle: 0,
+        kind: StepKind::Tick {
+            ctrl: ColumnCtrl {
+                inmode: InMode::A2_B2.with_b1(true),
+                ..ColumnCtrl::default()
+            },
+            acin0: false,
+            bcin0: false,
+            pcin0: false,
+        },
+    };
+    let findings = ScheduleChecker::check_trace(&CtrlTrace { steps: vec![step] });
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "PIPE-002");
+}
+
+/// The shift-phase control word of the Fig. 3 prefetch fill.
+fn prefetch_shift() -> ColumnCtrl {
+    ColumnCtrl {
+        cea1: false,
+        cea2: false,
+        ceb1: true,
+        ceb2: false,
+        cem: false,
+        cep: false,
+        ..ColumnCtrl::default()
+    }
+}
+
+/// The swap-pulse control word (one CEB2 edge moves B1 -> B2).
+fn prefetch_swap() -> ColumnCtrl {
+    ColumnCtrl {
+        cea1: false,
+        cea2: false,
+        ceb1: false,
+        ceb2: true,
+        cem: false,
+        cep: false,
+        ..ColumnCtrl::default()
+    }
+}
+
+/// A CEB2 swap pulse before the B1 chain holds a complete weight set
+/// must trip WS-001 (paper Fig. 3 discipline); a full prefetch then
+/// swaps clean. Both schedules run on a real prefetch-configured
+/// column.
+#[test]
+fn early_swap_trips_ws_001_and_full_prefetch_is_clean() {
+    let rows = 4;
+
+    // Illegal: only 2 of the 4 shift edges before the swap.
+    let mut col = DspColumn::new(Attributes::ws_prefetch_pe(), rows);
+    trace::begin();
+    for w in 0..2 {
+        col.tick(
+            &prefetch_shift(),
+            &ColumnFeeds {
+                bcin0: 10 + w,
+                ..ColumnFeeds::default()
+            },
+        );
+    }
+    col.tick(&prefetch_swap(), &ColumnFeeds::default());
+    let findings = ScheduleChecker::check_trace(&trace::end());
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "WS-001");
+
+    // Legal: a complete `rows`-deep prefetch, then the swap.
+    let mut col = DspColumn::new(Attributes::ws_prefetch_pe(), rows);
+    trace::begin();
+    for w in 0..rows as i64 {
+        col.tick(
+            &prefetch_shift(),
+            &ColumnFeeds {
+                bcin0: 10 + w,
+                ..ColumnFeeds::default()
+            },
+        );
+    }
+    col.tick(&prefetch_swap(), &ColumnFeeds::default());
+    let findings = ScheduleChecker::check_trace(&trace::end());
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+/// Warnings are violations too: a driven PCIN that no Z mux ever reads
+/// (CASC-003) must fail the report, not just annotate it.
+#[test]
+fn warning_findings_count_as_violations() {
+    let step = TraceStep {
+        attrs: Attributes::default(),
+        rows: 2,
+        cols: 1,
+        cycle: 0,
+        kind: StepKind::Tick {
+            ctrl: ColumnCtrl::default(),
+            acin0: false,
+            bcin0: false,
+            pcin0: true,
+        },
+    };
+    let findings = ScheduleChecker::check_trace(&CtrlTrace { steps: vec![step] });
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "CASC-003");
+    assert_eq!(findings[0].severity, Severity::Warning);
+
+    let mut report = LintReport::default();
+    report.diagnostics.extend(
+        findings
+            .into_iter()
+            .map(|f| Diagnostic::locate(f, "test", "gemm", 0)),
+    );
+    assert_eq!(report.violations(), 1);
+    assert!(report.render_text().contains("CASC-003"));
+}
+
+/// The tentpole acceptance property: every shipped engine kind runs
+/// lint-clean over every representative workload.
+#[test]
+fn all_engine_kinds_lint_clean() {
+    let report = dsp48_systolic::lint::lint_all().expect("lint harness must run");
+    assert_eq!(
+        report.runs.len(),
+        8 * dsp48_systolic::lint::harness::WORKLOADS.len(),
+        "one run per (kind, workload)"
+    );
+    assert!(
+        report.runs.iter().all(|r| r.edges > 0),
+        "every run must record tick edges: {:?}",
+        report.runs
+    );
+    assert_eq!(report.violations(), 0, "\n{}", report.render_text());
+}

@@ -45,9 +45,15 @@ metric untouched: the value must match the baseline within
 loose enough only for the baseline's decimal rounding). A key may
 appear in both sections; both checks run.
 
+With --lint-artifact, the control-legality report (`lint --format
+json --out ...`) is checked alongside the bench metrics: its
+`violations` counter must be exactly 0, so an illegal control schedule
+fails the same gate a performance regression would.
+
 Usage:
     python3 tools/check_bench_regression.py CURRENT.json BASELINE.json \
-        [--max-regress 0.10] [--frozen-tol 1e-3]
+        [--max-regress 0.10] [--frozen-tol 1e-3] \
+        [--lint-artifact LINT_report.json]
 """
 
 import argparse
@@ -73,6 +79,13 @@ def main() -> int:
             "allowed two-sided relative deviation for frozen metrics "
             "(default 1e-3 — covers the baseline's decimal rounding "
             "only; the underlying simulated values are deterministic)"
+        ),
+    )
+    ap.add_argument(
+        "--lint-artifact",
+        help=(
+            "control-legality lint report JSON (from `lint --format "
+            "json --out ...`); its `violations` counter must be 0"
         ),
     )
     args = ap.parse_args()
@@ -142,6 +155,19 @@ def main() -> int:
         print(f"{key}: {got} vs baseline {base} (exact) {status}")
         if got != base:
             failures.append(f"{key}: {got} != {base} (exact counter)")
+
+    if args.lint_artifact:
+        with open(args.lint_artifact, encoding="utf-8") as f:
+            lint = json.load(f)
+        violations = lint.get("violations")
+        status = "ok" if violations == 0 else "VIOLATIONS"
+        print(f"lint violations: {violations} (must be 0) {status}")
+        if violations != 0:
+            failures.append(
+                f"lint artifact {args.lint_artifact} reports "
+                f"violations={violations} (control schedules must lint "
+                "clean)"
+            )
 
     if failures:
         print("\nthroughput regression gate FAILED:", file=sys.stderr)
