@@ -8,7 +8,9 @@
 //! * ring-accumulator tick,
 //! * packed_dot (the functional fast path the coordinator may use),
 //! * a single large GEMM sharded across 1 vs 4 workers,
-//! * the wire protocol end-to-end over a TCP loopback socket.
+//! * the wire protocol end-to-end over a TCP loopback socket,
+//! * a whole transformer-block model graph served as dependency-gated
+//!   passes with arena-resident intermediates.
 //!
 //! Emits `BENCH_sim_throughput.json` so CI accumulates the perf
 //! trajectory. Set `SIM_BENCH_SMOKE=1` for a fast CI-sized run.
@@ -19,6 +21,7 @@ use dsp48_systolic::dsp::{Attributes, Dsp48e2, DspArray, DspColumn, DspInputs, I
 use dsp48_systolic::engines::os::RingAccumulator;
 use dsp48_systolic::engines::ws::{WsConfig, WsEngine};
 use dsp48_systolic::engines::Engine;
+use dsp48_systolic::model::ModelPreset;
 use dsp48_systolic::packing;
 use dsp48_systolic::proto::{Session, TcpServer, TcpSession};
 use dsp48_systolic::util::bench::{bench, section};
@@ -136,6 +139,8 @@ fn conv_serve(count: usize) -> (u64, u64, u64, u64, u64) {
         k: 3,
         stride: 1,
         pad: 1,
+        dilation: 1,
+        groups: 1,
     };
     let mut rng = XorShift::new(23);
     let weights: Vec<i8> = (0..shape.weight_len())
@@ -257,6 +262,8 @@ fn serve_loopback() -> (f64, u64, u64, u64, u64) {
         k: 3,
         stride: 1,
         pad: 1,
+        dilation: 1,
+        groups: 1,
     };
     let input: Vec<i8> =
         (0..shape.input_len()).map(|_| rng.i8_in(-63, 63)).collect();
@@ -285,6 +292,44 @@ fn serve_loopback() -> (f64, u64, u64, u64, u64) {
     let avoided = metrics.fills_avoided.load(Ordering::Relaxed);
     let saved = metrics.fill_cycles_saved.load(Ordering::Relaxed);
     (5.0 / wall.as_secs_f64(), ok, issued, avoided, saved)
+}
+
+/// One `transformer-block` preset model served whole (verify on): 38
+/// layers — 12 GEMMs plus elementwise glue — executed as dependency-
+/// gated passes on the 14×14 weight-stationary tiler, intermediates
+/// arena-resident. Returns `(wall layers/s, layers_completed,
+/// inter_layer_fill_reuse, fills_issued, fill_cycles_saved)` —
+/// everything but the wall rate is a simulated/deterministic quantity,
+/// safe to gate. The fill counters depend only on the preset's layer
+/// shapes, never on the weight values: per block, Q/V/O projections
+/// are 28×28 (2×2 = 4 tiles each), the FFN pair is 28×56 and 56×28
+/// (8 tiles each) — 28 fills per block, 56 per model; the shared-QK
+/// pair merges K's 4 tiles into Q's fill groups at the same wavefront
+/// level, so 4 fills per block (8 per model) are streamed instead of
+/// issued, at rows+1 = 15 fill cycles each = 120 saved.
+fn model_serve() -> (f64, u64, u64, u64, u64) {
+    let mut svc = Service::start(ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers: 2,
+        ws_rows: 14,
+        ws_cols: 14,
+        verify: true,
+        shard_width: 1,
+    });
+    let (model, input) = ModelPreset::TransformerBlock.build(false, 5);
+    let t0 = Instant::now();
+    svc.submit(Job::Model { model, input });
+    let r = svc
+        .wait_any(Duration::from_secs(1800))
+        .expect("model completes");
+    let wall = t0.elapsed();
+    assert_eq!(r.verified, Some(true), "model verifies vs golden replay");
+    let layers = svc.metrics.layers_completed.load(Ordering::Relaxed);
+    let reuse = svc.metrics.inter_layer_fill_reuse.load(Ordering::Relaxed);
+    let issued = svc.metrics.fills_issued.load(Ordering::Relaxed);
+    let saved = svc.metrics.fill_cycles_saved.load(Ordering::Relaxed);
+    svc.shutdown();
+    (layers as f64 / wall.as_secs_f64(), layers, reuse, issued, saved)
 }
 
 fn main() {
@@ -525,6 +570,18 @@ fn main() {
         mpc_d10 / mpc_d100
     );
 
+    section("model graph (whole transformer block, arena-resident)");
+    let (mdl_rate, mdl_layers, mdl_reuse, mdl_issued, mdl_saved) =
+        model_serve();
+    println!(
+        "bench model transformer-block (2 blocks, {mdl_layers} layers, \
+         verify on): {mdl_rate:.1} layers/s wall"
+    );
+    println!(
+        "    -> fills: {mdl_issued} issued, {mdl_reuse} inter-layer \
+         reuses ({mdl_saved} fill cycles saved via shared-QK)"
+    );
+
     section("serve loopback (wire protocol end-to-end over TCP)");
     let (lb_rate, lb_ok, lb_issued, lb_avoided, lb_saved) = serve_loopback();
     println!(
@@ -570,6 +627,13 @@ fn main() {
         ("sparse_macs_per_cycle_nm24", Json::float(mpc_nm24)),
         ("sparse_macs_per_cycle_d10", Json::float(mpc_d10)),
         ("sparse_tiles_skipped", Json::uint(sparse_skipped)),
+        // Model graph: layers/s is wall-clock (trend only); the layer
+        // and fill counters are simulated and gated exactly.
+        ("model_layers_per_s", Json::float(mdl_rate)),
+        ("model_layers_completed", Json::uint(mdl_layers)),
+        ("model_inter_layer_fill_reuse", Json::uint(mdl_reuse)),
+        ("model_fills_issued", Json::uint(mdl_issued)),
+        ("model_fill_cycles_saved", Json::uint(mdl_saved)),
         ("loopback_jobs_per_s", Json::float(lb_rate)),
         ("loopback_jobs_ok", Json::uint(lb_ok)),
         ("loopback_fills_issued", Json::uint(lb_issued)),

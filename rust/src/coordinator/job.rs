@@ -4,11 +4,12 @@
 use super::scheduler::aggregate_tile_stats;
 use super::tiler::{ActOperand, Tile, WeightOperand};
 use crate::engines::RunStats;
+use crate::model::{golden_eval, Model};
 use crate::workload::conv::{conv2d_direct, ConvShape};
 use crate::workload::gemm::golden_gemm;
 use crate::workload::{CsrMatI8, MatI32, MatI8, SparseMatI8};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Opaque job identifier assigned at submission.
@@ -32,6 +33,11 @@ pub enum Job {
     /// Executes on the dense fabric, but all-zero weight tiles and
     /// empty activation row windows are skipped before enqueue.
     SparseGemm { a: CsrMatI8, w: SparseMatI8 },
+    /// A whole network: a validated DAG of layers executed as
+    /// dependency-gated passes, intermediate activations resident in
+    /// the coordinator's arena. One handle, one result (the final
+    /// tensor) — intermediates never round-trip through the client.
+    Model { model: Model, input: MatI8 },
 }
 
 /// An ordered batch of jobs submitted in one `Service::submit_batch`
@@ -94,6 +100,9 @@ impl Job {
             Job::SparseGemm { a, w } => {
                 (a.rows() * a.cols() * w.cols()) as u64
             }
+            // Sum over the matmul layers (0 when the graph is invalid;
+            // submission then fails before accounting anyway).
+            Job::Model { model, .. } => model.macs(),
         }
     }
 
@@ -103,6 +112,7 @@ impl Job {
             Job::Conv { .. } => "conv",
             Job::Snn { .. } => "snn",
             Job::SparseGemm { .. } => "sparse",
+            Job::Model { .. } => "model",
         }
     }
 }
@@ -148,6 +158,11 @@ pub enum Reference {
     /// so a skip-path bug cannot hide: the execution path never sees
     /// the dense matrices it must match bit-for-bit.
     SparseDense,
+    /// Model jobs verify by replaying the whole DAG through the golden
+    /// interpreter layer by layer ([`golden_eval`]) against the dense
+    /// model input the tracker holds. `Arc` because the executing side
+    /// (the model table) owns the same graph.
+    ModelDirect { model: Arc<Model> },
 }
 
 /// Shared per-job state for tile-sharded execution.
@@ -162,8 +177,12 @@ pub enum Reference {
 pub struct JobTracker {
     id: JobId,
     /// The activation operand: dense, a lazy conv patch view, or CSR
-    /// sparse activations that workers materialize per tile.
-    a: ActOperand,
+    /// sparse activations that workers materialize per tile. A
+    /// `OnceLock` because a model layer's activation is another
+    /// layer's output: such trackers are created *deferred* and the
+    /// operand bound when the producing layer lands — always before
+    /// any work unit of this tracker is released to a worker.
+    a: OnceLock<ActOperand>,
     /// The lowered GEMM weight operand (dense or N:M sparse).
     w: WeightOperand,
     /// Lazily densified sparse weights — built at most once, and only
@@ -200,10 +219,36 @@ impl JobTracker {
         tiles: usize,
         sched_rows: Option<usize>,
     ) -> Self {
-        let out = MatI32::zeros(a.rows(), w.cols());
+        let t = JobTracker::new_deferred(
+            id,
+            a.rows(),
+            w,
+            reference,
+            macs,
+            tiles,
+            sched_rows,
+        );
+        t.bind_activation(a);
+        t
+    }
+
+    /// Track a job whose activation operand does not exist yet (a
+    /// model layer waiting on an upstream tensor). The output rows
+    /// must be supplied explicitly; [`JobTracker::bind_activation`]
+    /// must run before any worker touches the tracker.
+    pub fn new_deferred(
+        id: JobId,
+        rows: usize,
+        w: WeightOperand,
+        reference: Option<Reference>,
+        macs: u64,
+        tiles: usize,
+        sched_rows: Option<usize>,
+    ) -> Self {
+        let out = MatI32::zeros(rows, w.cols());
         JobTracker {
             id,
-            a,
+            a: OnceLock::new(),
             w,
             w_dense: OnceLock::new(),
             macs,
@@ -221,9 +266,20 @@ impl JobTracker {
         self.id
     }
 
+    /// Bind the activation operand of a deferred tracker (at most
+    /// once; [`JobTracker::new`] binds immediately).
+    pub fn bind_activation(&self, a: ActOperand) {
+        assert!(
+            self.a.set(a).is_ok(),
+            "activation operand bound more than once"
+        );
+    }
+
     /// The activation operand workers extract tiles from.
     pub fn a_operand(&self) -> &ActOperand {
-        &self.a
+        self.a
+            .get()
+            .expect("activation operand is bound before execution")
     }
 
     /// The lowered weight operand (dense or N:M sparse).
@@ -327,25 +383,37 @@ impl JobTracker {
         let verified = self.reference.as_ref().map(|reference| match reference {
             Reference::Gemm => {
                 let a = self
-                    .a
+                    .a_operand()
                     .dense()
                     .expect("GEMM-verified jobs carry dense operands");
                 output == golden_gemm(a, self.w_dense())
             }
             Reference::ConvDirect { weights } => {
                 let p = self
-                    .a
+                    .a_operand()
                     .patches()
                     .expect("conv-verified jobs carry patch operands");
                 output == conv2d_direct(p.input(), weights, p.shape())
             }
             Reference::SparseDense => {
                 let a = self
-                    .a
+                    .a_operand()
                     .csr()
                     .expect("sparse-verified jobs carry CSR operands")
                     .to_dense();
                 output == golden_gemm(&a, self.w_dense())
+            }
+            Reference::ModelDirect { model } => {
+                let input = self
+                    .a_operand()
+                    .dense()
+                    .expect("model-verified jobs carry the dense input");
+                // A graph that fails to compile never reaches a
+                // tracker, so the replay can only fail verification,
+                // not error.
+                golden_eval(model, input)
+                    .map(|golden| output == golden)
+                    .unwrap_or(false)
             }
         });
         let simulated =
@@ -382,6 +450,8 @@ mod tests {
             k: 3,
             stride: 1,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         };
         let c = Job::Conv {
             input: vec![0; 32],

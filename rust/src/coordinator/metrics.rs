@@ -41,6 +41,18 @@ pub struct Metrics {
     /// arena (max across workers, not a sum — it bounds per-engine
     /// footprint).
     pub scratch_high_water_bytes: AtomicU64,
+    /// Model-graph layers fully executed (matmul and elementwise glue
+    /// alike; a model job of L layers adds L on completion).
+    pub layers_completed: AtomicU64,
+    /// Peak bytes of intermediate activations simultaneously resident
+    /// in model arenas (max across models — the model input and final
+    /// output are not counted, only the tensors that would otherwise
+    /// round-trip through the client).
+    pub intermediate_bytes_resident: AtomicU64,
+    /// Stationary fills avoided *across layers of one model* — tiles
+    /// from different layers at the same wavefront level sharing one
+    /// fill group (a subset of `fills_avoided`).
+    pub inter_layer_fill_reuse: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -180,6 +192,15 @@ impl Metrics {
                 "scratch_reuse_ratio",
                 Json::float(self.scratch_reuse_ratio()),
             ),
+            ("layers_completed", load(&self.layers_completed)),
+            (
+                "intermediate_bytes_resident",
+                load(&self.intermediate_bytes_resident),
+            ),
+            (
+                "inter_layer_fill_reuse",
+                load(&self.inter_layer_fill_reuse),
+            ),
             (
                 "effective_macs_per_cycle",
                 Json::float(self.effective_macs_per_cycle()),
@@ -195,7 +216,8 @@ impl Metrics {
         format!(
             "jobs {}/{} ok ({} failed), {} MMACs, {} sim-cycles, \
              {} tiles ({} stolen, {} skipped), fills {} issued / {} avoided \
-             ({} cycles saved), latency p50 {}us p95 {}us max {}us",
+             ({} cycles saved, {} inter-layer), {} layers, \
+             latency p50 {}us p95 {}us max {}us",
             self.jobs_completed.load(Ordering::Relaxed),
             self.jobs_submitted.load(Ordering::Relaxed),
             self.jobs_failed.load(Ordering::Relaxed),
@@ -207,6 +229,8 @@ impl Metrics {
             self.fills_issued.load(Ordering::Relaxed),
             self.fills_avoided.load(Ordering::Relaxed),
             self.fill_cycles_saved.load(Ordering::Relaxed),
+            self.inter_layer_fill_reuse.load(Ordering::Relaxed),
+            self.layers_completed.load(Ordering::Relaxed),
             p50,
             p95,
             max
@@ -324,6 +348,29 @@ mod tests {
             other => panic!("expected float, got {other:?}"),
         }
         assert!(m.summary().contains("20 skipped"));
+    }
+
+    #[test]
+    fn model_counters_reach_the_snapshot_and_summary() {
+        let m = Metrics::new();
+        m.layers_completed.fetch_add(38, Ordering::Relaxed);
+        m.inter_layer_fill_reuse.fetch_add(8, Ordering::Relaxed);
+        // Residency is a high-water mark: a later, smaller model must
+        // not lower it.
+        m.intermediate_bytes_resident.fetch_max(4096, Ordering::Relaxed);
+        m.intermediate_bytes_resident.fetch_max(512, Ordering::Relaxed);
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("layers_completed").unwrap().as_i64(), Some(38));
+        assert_eq!(
+            snap.get("intermediate_bytes_resident").unwrap().as_i64(),
+            Some(4096)
+        );
+        assert_eq!(
+            snap.get("inter_layer_fill_reuse").unwrap().as_i64(),
+            Some(8)
+        );
+        assert!(m.summary().contains("8 inter-layer"));
+        assert!(m.summary().contains("38 layers"));
     }
 
     #[test]

@@ -20,6 +20,11 @@
 //! * [`pool`] — the sharded, work-stealing deque pool workers drain;
 //! * [`completion`] — the shared completion table behind the
 //!   non-blocking submit/poll front-end ([`completion::JobHandle`]);
+//! * [`models`] — whole-network serving: a [`job::Job::Model`]
+//!   compiles its layer DAG once and executes as dependency-gated
+//!   passes, intermediate activations resident in a per-model arena
+//!   (never round-tripping through the client), with weight-fill
+//!   groups merged *across layers* at equal wavefront level;
 //! * [`service`] — a multi-worker job service over grouped, tile-level
 //!   work units: [`service::Service::submit_batch`] groups a batch's
 //!   tiles by stationary weight tile (one fill, many streams — the
@@ -32,6 +37,7 @@
 pub mod completion;
 pub mod job;
 pub mod metrics;
+pub(crate) mod models;
 pub mod pool;
 pub mod scheduler;
 pub mod service;

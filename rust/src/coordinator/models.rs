@@ -1,0 +1,603 @@
+//! Model-graph execution: dependency-gated layer scheduling with
+//! arena-resident intermediate activations.
+//!
+//! A [`Job::Model`](super::job::Job) submission compiles its DAG once
+//! ([`GraphCompiler`]) and then rides the service's existing tile
+//! machinery: every matmul-class layer becomes a deferred
+//! [`JobTracker`] whose work units are *gated* on the tensors they
+//! read, and every elementwise glue layer (requant / quant / add /
+//! chw) is evaluated right here, on the resident tensors, the moment
+//! its inputs land — through the **same** [`eval_elementwise`] the
+//! golden interpreter uses, so the glue cannot diverge from the
+//! reference by construction.
+//!
+//! Intermediate tensors live in a per-model [`Scratch`] arena between
+//! layers and are freed the moment their last consumer has taken them
+//! — they never serialize back through the client, which sees one
+//! handle and one result (the final tensor). Tiles of *different*
+//! layers at the same wavefront level that share a stationary weight
+//! tile are merged into one [`FillGroup`], so weight-stationary
+//! engines pay one fill and stream the rest across layers
+//! ([`Metrics::inter_layer_fill_reuse`] counts exactly those streamed
+//! passes). Grouping strictly within one level is what keeps the
+//! gating deadlock-free: a level-`L` unit waits only on tensors
+//! produced strictly below `L`, which by induction all resolve
+//! without it.
+
+use super::job::{Completion, JobId, JobResult, JobTracker, Reference};
+use super::metrics::Metrics;
+use super::service::{
+    conv_row_blocks, fingerprint_operand, FillGroup, Pass, WorkUnit,
+};
+use super::tiler::{ActOperand, GemmTiler, TileCoord, WeightOperand};
+use crate::engines::RunStats;
+use crate::exec::{Scratch, ScratchStats};
+use crate::model::golden::eval_elementwise;
+use crate::model::{
+    GraphCompiler, LayerOp, Model, ModelError, TensorValue,
+};
+use crate::workload::conv::{weights_to_gemm, PatchSource};
+use crate::workload::MatI8;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+/// A work unit parked until every tensor it reads is resident.
+struct GatedUnit {
+    unit: WorkUnit,
+    /// Tensor ids not yet resident. Units merging passes of several
+    /// layers wait on the union of their input tensors.
+    waiting: HashSet<usize>,
+}
+
+/// One in-flight model: the client-facing tracker plus everything the
+/// cascade needs to route layer completions.
+struct ModelRun {
+    /// The client's tracker (1 virtual tile, completed by the table).
+    tracker: Arc<JobTracker>,
+    model: Arc<Model>,
+    /// Consuming layer indices per tensor id (one entry per read).
+    consumers: Vec<Vec<usize>>,
+    /// Per-layer engine trackers (`None` for elementwise glue).
+    trackers: Vec<Option<Arc<JobTracker>>>,
+    /// Resident tensor values (`len == layers + 1`; id 0 = input).
+    tensors: Vec<Option<TensorValue>>,
+    /// Remaining reads per tensor (the output carries the client's).
+    uses: Vec<usize>,
+    gated: Vec<GatedUnit>,
+    /// Per-model arena: elementwise outputs lease i8 buffers here and
+    /// release them when the tensor's last consumer has taken it.
+    arena: Scratch,
+    /// Engine stats folded across layer completions (commutative
+    /// sums, so worker completion order cannot perturb the result).
+    stats: RunStats,
+    /// Matmul-layer completion reports still outstanding; the run is
+    /// retired only when this hits zero, so a poisoned model never
+    /// strands an in-flight unit's report.
+    reports_left: usize,
+    /// Bytes of intermediate tensors currently resident (ids >= 1,
+    /// final output excluded — mirrors the metric's definition).
+    resident_bytes: usize,
+    total_macs: u64,
+    failed: bool,
+}
+
+impl ModelRun {
+    /// Record a produced tensor and update the residency high-water.
+    fn store_tensor(&mut self, t: usize, v: TensorValue, metrics: &Metrics) {
+        debug_assert!(self.tensors[t].is_none(), "tensor produced twice");
+        if t != self.model.output_tensor() {
+            self.resident_bytes += v.bytes();
+            metrics
+                .intermediate_bytes_resident
+                .fetch_max(self.resident_bytes as u64, Ordering::Relaxed);
+        }
+        self.tensors[t] = Some(v);
+    }
+
+    /// One read of tensor `t` happened; free it after the last one.
+    /// Tensor 0 is the caller's input and is never freed (the model
+    /// tracker verifies against it), and the output tensor keeps the
+    /// client's extra use until [`ModelTable`] takes it at finish.
+    fn consume(&mut self, t: usize) {
+        self.uses[t] -= 1;
+        if self.uses[t] == 0 && t >= 1 {
+            if let Some(v) = self.tensors[t].take() {
+                self.resident_bytes -= v.bytes();
+                if let TensorValue::I8(m) = v {
+                    self.arena.release_i8(m.data);
+                }
+            }
+        }
+    }
+
+    /// Evaluate one elementwise glue layer on the resident tensors,
+    /// leasing the output buffer from the model's arena.
+    fn eval_glue(&mut self, li: usize) -> TensorValue {
+        let ModelRun {
+            tensors,
+            arena,
+            model,
+            ..
+        } = self;
+        let layer = &model.layers[li];
+        let ins: Vec<&TensorValue> = layer
+            .inputs
+            .iter()
+            .map(|&t| {
+                tensors[t].as_ref().expect("glue inputs resident before eval")
+            })
+            .collect();
+        eval_elementwise(&layer.op, &ins, |len| arena.lease_i8(len))
+    }
+
+    /// Tensor `t` just became resident: bind it into the matmul
+    /// consumers' trackers, evaluate every glue consumer whose inputs
+    /// are now complete (cascading through the graph), and release
+    /// gated units that were waiting only on it. Binds always precede
+    /// releases — a unit releases only once *every* tensor it waits on
+    /// has run this routine, so its activations are all bound.
+    fn tensor_ready(
+        &mut self,
+        t0: usize,
+        metrics: &Metrics,
+        release: &mut Vec<WorkUnit>,
+    ) {
+        let mut ready = vec![t0];
+        while let Some(t) = ready.pop() {
+            for li in self.consumers[t].clone() {
+                if self.model.layers[li].op.is_matmul() {
+                    let tracker = Arc::clone(
+                        self.trackers[li]
+                            .as_ref()
+                            .expect("matmul layers carry trackers"),
+                    );
+                    let TensorValue::I8(m) =
+                        self.tensors[t].as_ref().expect("tensor just landed")
+                    else {
+                        unreachable!("compiler admits only i8 matmul inputs")
+                    };
+                    let act = match &self.model.layers[li].op {
+                        LayerOp::Conv { shape, .. } => ActOperand::Patches(
+                            PatchSource::new(m.data.clone(), *shape)
+                                .expect("compiler-validated conv shape"),
+                        ),
+                        _ => ActOperand::Dense(m.clone()),
+                    };
+                    tracker.bind_activation(act);
+                    self.consume(t);
+                } else {
+                    let out_t = li + 1;
+                    if self.tensors[out_t].is_some() {
+                        continue; // duplicate edge already evaluated it
+                    }
+                    let inputs = self.model.layers[li].inputs.clone();
+                    if inputs.iter().any(|&ti| self.tensors[ti].is_none()) {
+                        continue; // another input still in flight
+                    }
+                    let out = self.eval_glue(li);
+                    for &ti in &inputs {
+                        self.consume(ti);
+                    }
+                    self.store_tensor(out_t, out, metrics);
+                    metrics.layers_completed.fetch_add(1, Ordering::Relaxed);
+                    ready.push(out_t);
+                }
+            }
+            let mut gi = 0;
+            while gi < self.gated.len() {
+                self.gated[gi].waiting.remove(&t);
+                if self.gated[gi].waiting.is_empty() {
+                    release.push(self.gated.swap_remove(gi).unit);
+                } else {
+                    gi += 1;
+                }
+            }
+        }
+    }
+}
+
+/// What became of a layer completion routed through the table.
+pub(crate) enum LayerDone {
+    /// Not a model layer — retire it through the completion table.
+    NotModel(Box<JobResult>),
+    /// Absorbed; push these newly unblocked units (possibly none).
+    Progress(Vec<WorkUnit>),
+    /// The last layer landed: the assembled model result.
+    Finished { result: Box<JobResult>, macs: u64 },
+    /// The model's failure report is complete: fail the client handle.
+    ModelFailed { model: JobId },
+}
+
+/// What became of a layer failure routed through the table.
+pub(crate) enum LayerFailed {
+    /// Not a model layer — fail it through the completion table.
+    NotModel,
+    /// Absorbed; drain these poisoned units (they skip their work).
+    Swallowed(Vec<WorkUnit>),
+    /// First failure of this model: fail the client handle now and
+    /// drain the released units.
+    ModelFailed {
+        model: JobId,
+        release: Vec<WorkUnit>,
+    },
+}
+
+/// Outcome of a model submission.
+pub(crate) enum ModelSubmit {
+    /// Units ready to enqueue (layer reads satisfied by the input).
+    Scheduled(Vec<WorkUnit>),
+    /// The model had no matmul layers at all and finished during the
+    /// submit-time cascade.
+    Finished { result: Box<JobResult>, macs: u64 },
+}
+
+/// Shared registry of in-flight models, keyed by the client-facing
+/// job id, plus the layer-id → model routing map workers consult on
+/// every completion.
+pub(crate) struct ModelTable {
+    inner: Mutex<Tables>,
+}
+
+struct Tables {
+    models: HashMap<u64, ModelRun>,
+    /// Layer job id → (model job id, layer index). Entries retire as
+    /// each layer reports, so a layer of an already-failed model still
+    /// routes here (and is swallowed) instead of leaking a result the
+    /// client never had a handle for.
+    layer_of: HashMap<u64, (u64, usize)>,
+}
+
+impl ModelTable {
+    pub(crate) fn new() -> Self {
+        ModelTable {
+            inner: Mutex::new(Tables {
+                models: HashMap::new(),
+                layer_of: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Compile and schedule one model. On success the run is installed
+    /// (nothing is visible to workers until the caller pushes the
+    /// returned units); on error nothing is — the caller resolves the
+    /// handle as `Failed`.
+    pub(crate) fn submit(
+        &self,
+        id: JobId,
+        model: Model,
+        input: MatI8,
+        verify: bool,
+        tiler: Option<&GemmTiler>,
+        next_id: &mut u64,
+        metrics: &Metrics,
+    ) -> Result<ModelSubmit, ModelError> {
+        let plan = GraphCompiler::compile(&model)?;
+        if (input.rows, input.cols) != (model.input_rows, model.input_cols) {
+            return Err(ModelError::BadInput {
+                rows: input.rows,
+                cols: input.cols,
+            });
+        }
+        let model = Arc::new(model);
+        let n_layers = model.layers.len();
+        let tracker = Arc::new(JobTracker::new(
+            id,
+            ActOperand::Dense(input.clone()),
+            WeightOperand::Dense(MatI8::zeros(0, 0)),
+            verify.then(|| Reference::ModelDirect {
+                model: Arc::clone(&model),
+            }),
+            plan.total_macs,
+            1,
+            None,
+        ));
+
+        let mut trackers: Vec<Option<Arc<JobTracker>>> = vec![None; n_layers];
+        let mut layer_ids: Vec<(u64, usize)> = Vec::new();
+        let mut gated: Vec<GatedUnit> = Vec::new();
+        // Cross-layer fill groups under construction, with the union
+        // of input tensors their member layers read. Keyed by
+        // (wavefront level, weight fingerprint, coord); membership is
+        // confirmed by bit-exact weight-tile equality, exactly like
+        // batch grouping.
+        let mut groups: Vec<(FillGroup, HashSet<usize>)> = Vec::new();
+        let mut index: HashMap<(usize, u64, TileCoord), Vec<usize>> =
+            HashMap::new();
+        for (li, layer) in model.layers.iter().enumerate() {
+            if !layer.op.is_matmul() {
+                continue;
+            }
+            let input_t = layer.inputs[0];
+            let w_op = match &layer.op {
+                LayerOp::Gemm { w } | LayerOp::Snn { w } => {
+                    WeightOperand::Dense(w.clone())
+                }
+                LayerOp::SparseGemm { w } => WeightOperand::Sparse(w.clone()),
+                LayerOp::Conv { weights, shape } => {
+                    WeightOperand::Dense(weights_to_gemm(weights, *shape))
+                }
+                _ => unreachable!("elementwise ops never reach an engine"),
+            };
+            let rows = plan.tensors[li + 1].rows;
+            let lid = JobId(*next_id);
+            *next_id += 1;
+            layer_ids.push((lid.0, li));
+            match tiler {
+                Some(t) => {
+                    let k_dim = w_op.rows();
+                    // Dead sparse weight tiles are skipped before
+                    // anything is gated, same as batch submission.
+                    let mut live: Vec<TileCoord> = Vec::new();
+                    let (mut skipped, mut macs_skipped) = (0u64, 0u64);
+                    for c in t.coords(k_dim, w_op.cols()) {
+                        if w_op.tile_live(c) {
+                            live.push(c);
+                        } else {
+                            skipped += 1;
+                            macs_skipped += rows as u64
+                                * (c.k1 - c.k0) as u64
+                                * (c.n1 - c.n0) as u64;
+                        }
+                    }
+                    metrics
+                        .tiles_skipped
+                        .fetch_add(skipped, Ordering::Relaxed);
+                    metrics
+                        .macs_skipped
+                        .fetch_add(macs_skipped, Ordering::Relaxed);
+                    let lt = Arc::new(JobTracker::new_deferred(
+                        lid,
+                        rows,
+                        w_op,
+                        None,
+                        plan.layer_macs[li],
+                        live.len().max(1),
+                        Some(t.rows),
+                    ));
+                    if live.is_empty() {
+                        gated.push(GatedUnit {
+                            unit: WorkUnit::Empty(Arc::clone(&lt)),
+                            waiting: HashSet::from([input_t]),
+                        });
+                    }
+                    let wfp = fingerprint_operand(lt.w_operand());
+                    let level = plan.level[li];
+                    for coord in live {
+                        let w_tile = t.w_tile_of(lt.w_operand(), coord);
+                        let candidates =
+                            index.entry((level, wfp, coord)).or_default();
+                        match candidates
+                            .iter()
+                            .copied()
+                            .find(|&g| groups[g].0.w == w_tile)
+                        {
+                            Some(g) => {
+                                groups[g].0.passes.push(Pass {
+                                    job: Arc::clone(&lt),
+                                    coord,
+                                    cross_layer: true,
+                                });
+                                groups[g].1.insert(input_t);
+                            }
+                            None => {
+                                groups.push((
+                                    FillGroup {
+                                        w: w_tile,
+                                        passes: vec![Pass {
+                                            job: Arc::clone(&lt),
+                                            coord,
+                                            cross_layer: false,
+                                        }],
+                                    },
+                                    HashSet::from([input_t]),
+                                ));
+                                candidates.push(groups.len() - 1);
+                            }
+                        }
+                    }
+                    trackers[li] = Some(lt);
+                }
+                None => {
+                    // Internally-tiling engines: conv layers stream as
+                    // lazy patch row blocks, everything else runs
+                    // whole — mirroring batch submission.
+                    let blocks = match &layer.op {
+                        LayerOp::Conv { .. } => Some(conv_row_blocks(rows)),
+                        _ => None,
+                    };
+                    let tiles = blocks.as_ref().map_or(1, Vec::len);
+                    let lt = Arc::new(JobTracker::new_deferred(
+                        lid,
+                        rows,
+                        w_op,
+                        None,
+                        plan.layer_macs[li],
+                        tiles,
+                        None,
+                    ));
+                    match blocks {
+                        Some(blocks) => {
+                            for (m0, m1) in blocks {
+                                gated.push(GatedUnit {
+                                    unit: WorkUnit::RowBlock {
+                                        job: Arc::clone(&lt),
+                                        m0,
+                                        m1,
+                                    },
+                                    waiting: HashSet::from([input_t]),
+                                });
+                            }
+                        }
+                        None => gated.push(GatedUnit {
+                            unit: WorkUnit::Whole(Arc::clone(&lt)),
+                            waiting: HashSet::from([input_t]),
+                        }),
+                    }
+                    trackers[li] = Some(lt);
+                }
+            }
+        }
+        for (group, waiting) in groups {
+            gated.push(GatedUnit {
+                unit: WorkUnit::Groups(vec![group]),
+                waiting,
+            });
+        }
+
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n_layers + 1];
+        for (li, layer) in model.layers.iter().enumerate() {
+            for &t in &layer.inputs {
+                consumers[t].push(li);
+            }
+        }
+        let mut tensors: Vec<Option<TensorValue>> =
+            (0..=n_layers).map(|_| None).collect();
+        tensors[0] = Some(TensorValue::I8(input));
+
+        let mut run = ModelRun {
+            tracker,
+            model: Arc::clone(&model),
+            consumers,
+            trackers,
+            tensors,
+            uses: plan.uses.clone(),
+            gated,
+            arena: Scratch::new(),
+            stats: RunStats::default(),
+            reports_left: plan.matmul_layers(),
+            resident_bytes: 0,
+            total_macs: plan.total_macs,
+            failed: false,
+        };
+
+        // Seed the cascade with the input tensor: binds level-1
+        // activations, evaluates input-only glue, and unblocks every
+        // unit that waited only on the input.
+        let mut release = Vec::new();
+        run.tensor_ready(0, metrics, &mut release);
+        if run.tensors[model.output_tensor()].is_some() {
+            // No matmul layers anywhere: the glue cascade already
+            // produced the output. `slow_mhz` only scales cycles, and
+            // an all-glue model charged none.
+            debug_assert!(release.is_empty() && run.reports_left == 0);
+            let (result, macs) = Self::finish(run, 1.0, metrics);
+            return Ok(ModelSubmit::Finished { result, macs });
+        }
+        let mut t = self.inner.lock().unwrap();
+        for (lid, li) in layer_ids {
+            t.layer_of.insert(lid, (id.0, li));
+        }
+        t.models.insert(id.0, run);
+        Ok(ModelSubmit::Scheduled(release))
+    }
+
+    /// Route one successful tracker completion. Model layers are
+    /// absorbed here — their tensors go resident, the cascade advances
+    /// — and only the *model's* result ever reaches the caller.
+    pub(crate) fn on_layer_done(
+        &self,
+        id: JobId,
+        result: Box<JobResult>,
+        metrics: &Metrics,
+        slow_mhz: f64,
+    ) -> LayerDone {
+        let mut t = self.inner.lock().unwrap();
+        let Some((mid, li)) = t.layer_of.remove(&id.0) else {
+            return LayerDone::NotModel(result);
+        };
+        let Some(run) = t.models.get_mut(&mid) else {
+            return LayerDone::Progress(Vec::new());
+        };
+        run.reports_left -= 1;
+        if run.failed {
+            // A sibling layer already failed the model; this report
+            // only settles the books.
+            if run.reports_left == 0 {
+                t.models.remove(&mid);
+            }
+            return LayerDone::Progress(Vec::new());
+        }
+        let JobResult { output, stats, .. } = *result;
+        run.stats = std::mem::take(&mut run.stats).merged_with(&stats);
+        metrics.layers_completed.fetch_add(1, Ordering::Relaxed);
+        let mut release = Vec::new();
+        run.store_tensor(li + 1, TensorValue::I32(output), metrics);
+        run.tensor_ready(li + 1, metrics, &mut release);
+        if run.tensors[run.model.output_tensor()].is_some() {
+            // Every layer is an ancestor of the output (dead layers
+            // are rejected at compile), so reaching it means nothing
+            // is left in flight.
+            debug_assert!(release.is_empty() && run.reports_left == 0);
+            let run = t.models.remove(&mid).expect("run present");
+            // Assemble (and golden-verify) outside the table lock so a
+            // long replay never serializes other models' completions.
+            drop(t);
+            let (result, macs) = Self::finish(run, slow_mhz, metrics);
+            return LayerDone::Finished { result, macs };
+        }
+        LayerDone::Progress(release)
+    }
+
+    /// Route one failed tracker completion. The first failing layer
+    /// fails the whole model: its handle resolves `Failed` now, every
+    /// sibling tracker is poisoned (released units skip their work),
+    /// and still-gated units are flushed so their reports can settle.
+    pub(crate) fn on_layer_failed(&self, id: JobId) -> LayerFailed {
+        let mut t = self.inner.lock().unwrap();
+        let Some((mid, _li)) = t.layer_of.remove(&id.0) else {
+            return LayerFailed::NotModel;
+        };
+        let Some(run) = t.models.get_mut(&mid) else {
+            return LayerFailed::Swallowed(Vec::new());
+        };
+        run.reports_left -= 1;
+        let first = !run.failed;
+        let mut release = Vec::new();
+        if first {
+            run.failed = true;
+            for lt in run.trackers.iter().flatten() {
+                lt.mark_failed();
+            }
+            release.extend(run.gated.drain(..).map(|g| g.unit));
+        }
+        if run.reports_left == 0 {
+            t.models.remove(&mid);
+        }
+        if first {
+            LayerFailed::ModelFailed {
+                model: JobId(mid),
+                release,
+            }
+        } else {
+            LayerFailed::Swallowed(release)
+        }
+    }
+
+    /// Assemble the model-level result: the widened output tensor, the
+    /// folded layer stats, and the arena telemetry.
+    fn finish(
+        mut run: ModelRun,
+        slow_mhz: f64,
+        metrics: &Metrics,
+    ) -> (Box<JobResult>, u64) {
+        let out_t = run.model.output_tensor();
+        let output = run.tensors[out_t]
+            .take()
+            .expect("model output resident at finish");
+        run.tracker.set_output(output.widen());
+        if let TensorValue::I8(m) = output {
+            run.arena.release_i8(m.data);
+        }
+        metrics.record_scratch(&ScratchStats::default(), &run.arena.stats());
+        let stats = std::mem::take(&mut run.stats);
+        match run.tracker.complete_tiles(1, vec![stats], slow_mhz) {
+            Completion::Done(result) => (result, run.total_macs),
+            Completion::Pending | Completion::Failed => {
+                unreachable!(
+                    "the model tracker holds exactly one unfailed slot"
+                )
+            }
+        }
+    }
+}

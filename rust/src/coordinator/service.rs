@@ -18,6 +18,9 @@
 use super::completion::{CompletionTable, Drained, JobHandle, JobState};
 use super::job::{Batch, Completion, Job, JobId, JobResult, JobTracker, Reference};
 use super::metrics::Metrics;
+use super::models::{
+    LayerDone, LayerFailed, ModelSubmit, ModelTable,
+};
 use super::pool::{Provenance, WorkPool};
 use super::scheduler::aggregate_tile_stats;
 use super::tiler::{ActOperand, GemmTiler, TileCoord, WeightOperand};
@@ -209,17 +212,22 @@ pub fn run_gemm_tiled(
 /// job's [`ActOperand`] when the pass runs, so neither a large GEMM's
 /// tiles nor a conv's im2col patches ever sit materialized in the
 /// queue. The weight tile lives once on the group, not per pass.
-struct Pass {
-    job: Arc<JobTracker>,
-    coord: TileCoord,
+pub(crate) struct Pass {
+    pub(crate) job: Arc<JobTracker>,
+    pub(crate) coord: TileCoord,
+    /// This pass belongs to a *different layer* of the same model
+    /// than the pass that filled the group — the cross-layer reuse
+    /// the model scheduler engineered ([`Metrics::inter_layer_fill_reuse`]).
+    /// Always `false` for batch grouping.
+    pub(crate) cross_layer: bool,
 }
 
 /// Tiles — possibly of different jobs — that share one stationary
 /// weight tile: the worker fills once and streams every pass
 /// ([`Engine::run_gemm_reuse`] for passes after the first).
-struct FillGroup {
-    w: MatI8,
-    passes: Vec<Pass>,
+pub(crate) struct FillGroup {
+    pub(crate) w: MatI8,
+    pub(crate) passes: Vec<Pass>,
 }
 
 /// Output-pixel rows per conv row block on internally-tiling engines:
@@ -233,7 +241,7 @@ const CONV_ROW_BLOCK: usize = 64;
 /// `RowBlock` units derive from, so the two can never fall out of
 /// sync. `m >= 1` for every validated shape, so the list is never
 /// empty.
-fn conv_row_blocks(m: usize) -> Vec<(usize, usize)> {
+pub(crate) fn conv_row_blocks(m: usize) -> Vec<(usize, usize)> {
     (0..m)
         .step_by(CONV_ROW_BLOCK)
         .map(|m0| (m0, (m0 + CONV_ROW_BLOCK).min(m)))
@@ -241,7 +249,7 @@ fn conv_row_blocks(m: usize) -> Vec<(usize, usize)> {
 }
 
 /// One unit of work.
-enum WorkUnit {
+pub(crate) enum WorkUnit {
     /// Fill-groups executed back to back on one engine (tiler path).
     Groups(Vec<FillGroup>),
     /// The whole job, for engines that tile internally.
@@ -348,6 +356,11 @@ fn lower(
                 macs,
             )
         }
+        // Model jobs are diverted to the model table before lowering —
+        // their layers become individually lowered trackers there.
+        Job::Model { .. } => {
+            unreachable!("model jobs route through the model table")
+        }
     })
 }
 
@@ -357,6 +370,7 @@ pub struct Service {
     completion: Arc<CompletionTable>,
     workers: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    models: Arc<ModelTable>,
     next_id: u64,
     cfg: ServiceConfig,
     tiler: Option<GemmTiler>,
@@ -369,11 +383,13 @@ impl Service {
         let pool = Arc::new(WorkPool::<WorkUnit>::new(workers_n));
         let completion = Arc::new(CompletionTable::new());
         let metrics = Arc::new(Metrics::new());
+        let models = Arc::new(ModelTable::new());
         let mut workers = Vec::new();
         for wid in 0..workers_n {
             let pool = Arc::clone(&pool);
             let completion = Arc::clone(&completion);
             let metrics = Arc::clone(&metrics);
+            let models = Arc::clone(&models);
             let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
                 let mut engine = cfg.build_engine();
@@ -397,19 +413,71 @@ impl Service {
                             slow_mhz,
                         ) {
                             Completion::Pending => {}
-                            Completion::Done(result) => {
-                                metrics.record_completion(
-                                    outcome.job.macs(),
-                                    result.stats.cycles,
-                                    result.wall,
-                                );
-                                completion.complete(*result);
-                            }
+                            // Completions consult the model table
+                            // first: a model *layer* goes resident as
+                            // a tensor (possibly unblocking gated
+                            // units) instead of retiring — only the
+                            // model-level result reaches the client.
+                            Completion::Done(result) => match models
+                                .on_layer_done(id, result, &metrics, slow_mhz)
+                            {
+                                LayerDone::NotModel(result) => {
+                                    metrics.record_completion(
+                                        outcome.job.macs(),
+                                        result.stats.cycles,
+                                        result.wall,
+                                    );
+                                    completion.complete(*result);
+                                }
+                                LayerDone::Progress(units) => {
+                                    for u in units {
+                                        pool.push(u);
+                                    }
+                                }
+                                LayerDone::Finished { result, macs } => {
+                                    metrics.record_completion(
+                                        macs,
+                                        result.stats.cycles,
+                                        result.wall,
+                                    );
+                                    completion.complete(*result);
+                                }
+                                LayerDone::ModelFailed { model } => {
+                                    metrics
+                                        .jobs_failed
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    completion.complete_failed(model);
+                                }
+                            },
                             Completion::Failed => {
-                                metrics
-                                    .jobs_failed
-                                    .fetch_add(1, Ordering::Relaxed);
-                                completion.complete_failed(id);
+                                match models.on_layer_failed(id) {
+                                    LayerFailed::NotModel => {
+                                        metrics
+                                            .jobs_failed
+                                            .fetch_add(1, Ordering::Relaxed);
+                                        completion.complete_failed(id);
+                                    }
+                                    LayerFailed::Swallowed(units) => {
+                                        for u in units {
+                                            pool.push(u);
+                                        }
+                                    }
+                                    LayerFailed::ModelFailed {
+                                        model,
+                                        release,
+                                    } => {
+                                        metrics
+                                            .jobs_failed
+                                            .fetch_add(1, Ordering::Relaxed);
+                                        completion.complete_failed(model);
+                                        // Poisoned units drain (their
+                                        // trackers skip the work) so
+                                        // every layer report settles.
+                                        for u in release {
+                                            pool.push(u);
+                                        }
+                                    }
+                                }
                             }
                         }
                     }
@@ -425,6 +493,7 @@ impl Service {
             completion,
             workers,
             metrics,
+            models,
             next_id: 0,
             cfg,
             tiler,
@@ -461,11 +530,34 @@ impl Service {
         // `Failed` handle.
         let mut trackers: Vec<Arc<JobTracker>> = Vec::with_capacity(total_jobs);
         let mut rejected: Vec<JobId> = Vec::new();
+        // Model submissions accepted this batch: their unblocked units
+        // (or, for all-glue models, their finished results) are held
+        // back until the handles are registered below.
+        let mut model_work: Vec<ModelSubmit> = Vec::new();
         let tiler = self.tiler;
         for job in jobs {
             let id = JobId(self.next_id);
             self.next_id += 1;
             handles.push(JobHandle { id });
+            if let Job::Model { model, input } = job {
+                // Graph compilation happens at submit: a cyclic,
+                // dangling, ill-typed or ill-shaped graph resolves as
+                // a typed `Failed` handle, exactly like a malformed
+                // conv shape — never a worker panic.
+                match self.models.submit(
+                    id,
+                    model,
+                    input,
+                    self.cfg.verify,
+                    tiler.as_ref(),
+                    &mut self.next_id,
+                    &self.metrics,
+                ) {
+                    Ok(submit) => model_work.push(submit),
+                    Err(_) => rejected.push(id),
+                }
+                continue;
+            }
             let (a, w, reference, macs) = match lower(job, self.cfg.verify) {
                 Ok(lowered) => lowered,
                 Err(_) => {
@@ -565,6 +657,26 @@ impl Service {
             self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
             self.completion.complete_failed(*id);
         }
+        for submit in model_work {
+            match submit {
+                ModelSubmit::Scheduled(units) => {
+                    for u in units {
+                        self.pool.push(u);
+                    }
+                }
+                ModelSubmit::Finished { result, macs } => {
+                    // All-glue model: it finished during the submit
+                    // cascade, so retire it here (registration above
+                    // makes the handle redeemable).
+                    self.metrics.record_completion(
+                        macs,
+                        result.stats.cycles,
+                        result.wall,
+                    );
+                    self.completion.complete(*result);
+                }
+            }
+        }
 
         let Some(tiler) = tiler else {
             for tracker in trackers {
@@ -663,6 +775,7 @@ impl Service {
                 groups[gi].passes.push(Pass {
                     job: Arc::clone(tracker),
                     coord,
+                    cross_layer: false,
                 });
             }
         }
@@ -769,7 +882,7 @@ fn fingerprint(w: &MatI8) -> u64 {
 /// compressed slot buffers directly (no densification); like the dense
 /// fingerprint, this only routes — group membership is confirmed by
 /// bit-exact weight-*tile* equality downstream.
-fn fingerprint_operand(w: &WeightOperand) -> u64 {
+pub(crate) fn fingerprint_operand(w: &WeightOperand) -> u64 {
     match w {
         WeightOperand::Dense(m) => fingerprint(m),
         WeightOperand::Sparse(s) => {
@@ -837,20 +950,34 @@ fn run_unit(
                 }
             };
             for group in groups {
-                for (i, pass) in group.passes.iter().enumerate() {
+                // Reuse only once a pass actually loaded the group's
+                // weights: if the first pass was skipped (its job
+                // poisoned) or errored, the next one fills instead of
+                // streaming against stale array contents.
+                let mut filled = false;
+                for pass in &group.passes {
                     let si = slot(&mut outcomes, &pass.job);
                     outcomes[si].done += 1;
                     if pass.job.is_failed() {
                         continue; // job already poisoned; skip the work
                     }
                     let a = tiler.a_tile_of(pass.job.a_operand(), pass.coord);
-                    let run = if i == 0 {
+                    let run = if !filled {
                         engine.run_gemm(&a, &group.w)
                     } else {
+                        if pass.cross_layer {
+                            // A streamed pass from a *different layer*
+                            // of the same model — the fill this pass
+                            // avoided is inter-layer reuse.
+                            metrics
+                                .inter_layer_fill_reuse
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
                         engine.run_gemm_reuse(&a, &group.w)
                     };
                     match run {
                         Ok(run) => {
+                            filled = true;
                             pass.job.accumulate_cols(pass.coord.n0, &run.output);
                             metrics
                                 .tiles_executed
@@ -878,6 +1005,16 @@ fn run_unit(
             outcomes
         }
         WorkUnit::Whole(job) => {
+            if job.is_failed() {
+                // A poisoned model layer: its activation may never
+                // have been bound, so skip the work and just account
+                // the slot (the job assembles as Failed).
+                return vec![UnitOutcome {
+                    job: Arc::clone(job),
+                    done: 1,
+                    stats: Vec::new(),
+                }];
+            }
             let a = job
                 .a_operand()
                 .dense()
@@ -1013,6 +1150,8 @@ mod tests {
             k: 3,
             stride: 1,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         };
         let mut rng = XorShift::new(9);
         svc.submit(Job::Conv {
@@ -1049,6 +1188,8 @@ mod tests {
             k: 3,
             stride: 2,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         };
         let mut rng = XorShift::new(17);
         let input: Vec<i8> =
@@ -1131,6 +1272,8 @@ mod tests {
             k: 3,
             stride: 1,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         };
         let mut rng = XorShift::new(29);
         let mk_job = |rng: &mut XorShift, shape: ConvShape| Job::Conv {

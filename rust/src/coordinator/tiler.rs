@@ -412,6 +412,8 @@ mod tests {
             k: 3,
             stride: 2,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         };
         let mut rng = XorShift::new(12);
         let input = rng.i8_vec(shape.input_len());

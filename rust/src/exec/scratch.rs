@@ -68,9 +68,12 @@ impl PoolStats {
 pub struct ScratchStats {
     pub i64_pool: PoolStats,
     pub i32_pool: PoolStats,
-    /// Bytes currently out on lease across both pools.
+    /// The `i8` pool backs the model scheduler's arena-resident
+    /// intermediate activations (quantized tensors between layers).
+    pub i8_pool: PoolStats,
+    /// Bytes currently out on lease across all pools.
     pub leased_bytes: u64,
-    /// Peak bytes simultaneously out on lease across both pools — the
+    /// Peak bytes simultaneously out on lease across all pools — the
     /// arena's true footprint bound.
     pub high_water_bytes: u64,
 }
@@ -78,12 +81,14 @@ pub struct ScratchStats {
 impl ScratchStats {
     /// Total lease calls across the pools.
     pub fn leases(&self) -> u64 {
-        self.i64_pool.leases + self.i32_pool.leases
+        self.i64_pool.leases + self.i32_pool.leases + self.i8_pool.leases
     }
 
     /// Total pool-served leases across the pools.
     pub fn reuse_hits(&self) -> u64 {
-        self.i64_pool.reuse_hits + self.i32_pool.reuse_hits
+        self.i64_pool.reuse_hits
+            + self.i32_pool.reuse_hits
+            + self.i8_pool.reuse_hits
     }
 
     /// Combined reuse-hit ratio (0 when nothing leased yet).
@@ -132,6 +137,7 @@ impl std::ops::DerefMut for AlignedLease {
 pub struct Scratch {
     i64_pool: Vec<Vec<i64>>,
     i32_pool: Vec<Vec<i32>>,
+    i8_pool: Vec<Vec<i8>>,
     stats: ScratchStats,
 }
 
@@ -240,9 +246,39 @@ impl Scratch {
         self.i32_pool.push(buf);
     }
 
+    /// Lease a zero-filled `i8` buffer of exactly `len` elements. The
+    /// model scheduler leases its inter-layer activation tensors here,
+    /// so a network's quantized intermediates recycle the same backing
+    /// allocations layer after layer.
+    pub fn lease_i8(&mut self, len: usize) -> Vec<i8> {
+        let bytes = len as u64;
+        self.combined_lease(bytes);
+        match self.i8_pool.pop() {
+            Some(mut buf) => {
+                self.stats.i8_pool.on_lease(bytes, buf.capacity() >= len);
+                buf.clear();
+                buf.resize(len, 0);
+                buf
+            }
+            None => {
+                self.stats.i8_pool.on_lease(bytes, false);
+                vec![0; len]
+            }
+        }
+    }
+
+    /// Return a leased `i8` buffer to the pool (same length contract
+    /// as [`Scratch::release_i64`]).
+    pub fn release_i8(&mut self, buf: Vec<i8>) {
+        let bytes = buf.len() as u64;
+        self.combined_release(bytes);
+        self.stats.i8_pool.on_release(bytes);
+        self.i8_pool.push(buf);
+    }
+
     /// Buffers currently parked in the pools (diagnostics).
     pub fn pooled(&self) -> usize {
-        self.i64_pool.len() + self.i32_pool.len()
+        self.i64_pool.len() + self.i32_pool.len() + self.i8_pool.len()
     }
 
     /// Telemetry snapshot (monotonic counters plus live gauges).
@@ -370,6 +406,28 @@ mod tests {
         assert_eq!(s.stats().i64_pool.leased_bytes, 120);
         s.release_i64_aligned(l);
         assert_eq!(s.stats().i64_pool.leased_bytes, 0);
+    }
+
+    #[test]
+    fn i8_pool_leases_count_and_recycle() {
+        let mut s = Scratch::new();
+        let mut a = s.lease_i8(64); // miss, 64 bytes out
+        a[0] = 7;
+        let ptr = a.as_ptr();
+        s.release_i8(a);
+        let b = s.lease_i8(16); // hit, zeroed
+        assert_eq!(b.as_ptr(), ptr);
+        assert!(b.iter().all(|&v| v == 0));
+        s.release_i8(b);
+        let st = s.stats();
+        assert_eq!(st.i8_pool.leases, 2);
+        assert_eq!(st.i8_pool.reuse_hits, 1);
+        assert_eq!(st.i8_pool.leased_bytes, 0);
+        assert_eq!(st.i8_pool.high_water_bytes, 64);
+        // i8 leases fold into the arena-wide totals like the others.
+        assert_eq!(st.leases(), 2);
+        assert_eq!(st.high_water_bytes, 64);
+        assert_eq!(s.pooled(), 1);
     }
 
     #[test]

@@ -45,6 +45,7 @@ pub mod engines;
 pub mod exec;
 pub mod fabric;
 pub mod lint;
+pub mod model;
 pub mod packing;
 pub mod proto;
 pub mod runtime;

@@ -13,10 +13,15 @@ use crate::engines::Engine;
 use crate::lint::diag::{Diagnostic, LintReport, RunSummary};
 use crate::lint::rules::ScheduleChecker;
 use crate::lint::trace;
+use crate::workload::quant::requantize;
 use crate::workload::MatI8;
 
-/// The representative workloads every engine is linted under.
-pub const WORKLOADS: &[&str] = &["gemm", "conv", "snn", "sparse"];
+/// The representative workloads every engine is linted under. "model"
+/// is the graph-scheduler shape: two chained matmul passes over the
+/// same stationary weights with elementwise glue between them — the
+/// back-to-back schedule (including the stationary-reuse fill skip)
+/// that a multi-layer model drives through the fill-group machinery.
+pub const WORKLOADS: &[&str] = &["gemm", "conv", "snn", "sparse", "model"];
 
 /// Deterministic small dense value in roughly [-3, 3].
 fn dense(r: usize, c: usize) -> i8 {
@@ -46,12 +51,14 @@ fn operands(kind: EngineKind, workload: &str) -> (MatI8, MatI8) {
             | EngineKind::WsClbFetch
             | EngineKind::WsDspFetch
     );
+    // "model" chains the output back through the same weights, so its
+    // weight matrix must be square (layer 1's n is layer 2's k).
     let (k, n) = if snn {
-        (32, 16)
+        (32, if workload == "model" { 32 } else { 16 })
     } else if ws {
         (14, 14)
     } else {
-        (8, 7)
+        (8, if workload == "model" { 8 } else { 7 })
     };
     let m = match workload {
         // 3x3 window over a 3x3 output patch, im2col'd.
@@ -85,7 +92,29 @@ pub fn lint_kind(kind: EngineKind, report: &mut LintReport) -> Result<(), String
         .build_engine();
         let (a, w) = operands(kind, workload);
         trace::begin();
-        let run = engine.run_gemm(&a, &w);
+        let mut run = engine.run_gemm(&a, &w);
+        if workload == "model" {
+            if let Ok(first) = &run {
+                // The glue pass between layers: requantize (binarize
+                // on the spiking crossbars) the accumulators into the
+                // next layer's activations, then stream them against
+                // the still-resident weights — one model trace, two
+                // array passes, one fill.
+                let snn = matches!(
+                    kind,
+                    EngineKind::SnnFireFly | EngineKind::SnnEnhanced
+                );
+                let out = &first.output;
+                let a2 = MatI8::from_fn(out.rows, out.cols, |r, c| {
+                    if snn {
+                        i8::from(requantize(out.at(r, c), 1, 1, 0) > 0)
+                    } else {
+                        requantize(out.at(r, c), 1, 4, 0)
+                    }
+                });
+                run = engine.run_gemm_reuse(&a2, &w);
+            }
+        }
         let recorded = trace::end();
         run.map_err(|e| format!("{label}/{workload}: engine run failed: {e:?}"))?;
         let findings = ScheduleChecker::check_trace(&recorded);

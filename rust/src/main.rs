@@ -8,6 +8,8 @@
 //!     --out-c 16 --kernel 3 --stride 1 --pad 1
 //! dsp48-systolic simulate --workload sparse --density 0.1 --nm 2:4 \
 //!     --m 64 --k 140 --n 140      # N:M weights + CSR activations
+//! dsp48-systolic simulate --workload model --preset transformer-block
+//! dsp48-systolic serve --workload model --jobs 4 --preset conv-stack
 //! dsp48-systolic serve --jobs 16 --workers 2 --engine ws-dsp-fetch
 //! dsp48-systolic serve --jobs 32 --batch 8   # shared-weight batches
 //! dsp48-systolic serve --workload conv --jobs 8 --batch 4  # conv traffic
@@ -16,6 +18,8 @@
 //! dsp48-systolic client submit --addr HOST:PORT --workload conv
 //! dsp48-systolic client submit --addr HOST:PORT --workload sparse \
 //!     --density 0.1 --nm 2:4
+//! dsp48-systolic client submit --addr HOST:PORT --workload model \
+//!     --preset transformer-block  # whole-network DAG, one handle
 //! dsp48-systolic client stats --addr HOST:PORT
 //! dsp48-systolic client shutdown --addr HOST:PORT   # drain + stop
 //! dsp48-systolic sweep --min 6 --max 14       # tinyTPU-style size sweep
@@ -44,6 +48,14 @@
 //! simulated throughput climbs as `--density` falls while results
 //! stay bit-identical to the densified golden product.
 //!
+//! Model jobs (`--workload model`, with `--preset
+//! transformer-block|conv-stack`) submit a whole network as one DAG
+//! job: one handle, one final output, intermediate activations
+//! resident server-side in the scratch arena (never serialized back
+//! to the client), with weight-fill groups merged across layers. On
+//! SNN engines (or with `--spikes true` on the client) the preset
+//! builds its spiking variant.
+//!
 //! Unknown `--flags` are usage errors (exit 2), never silently
 //! ignored — and so are workload-exclusive flags under the wrong
 //! workload (`--kernel` without `--workload conv`, `--m` with it,
@@ -57,6 +69,7 @@ use dsp48_systolic::engines::os::{OsConfig, OsEngine, OsVariant};
 use dsp48_systolic::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
 use dsp48_systolic::engines::ws::{WsConfig, WsEngine, WsVariant};
 use dsp48_systolic::engines::Engine;
+use dsp48_systolic::model::ModelPreset;
 use dsp48_systolic::proto::{LocalSession, Session, TcpServer, TcpSession};
 use dsp48_systolic::runtime::ArtifactRegistry;
 use dsp48_systolic::util::rng::XorShift;
@@ -115,6 +128,7 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "pad",
             "density",
             "nm",
+            "preset",
             "seed",
             "rows",
             "cols",
@@ -142,6 +156,7 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "pad",
             "density",
             "nm",
+            "preset",
             "shard-width",
             "verify",
             "listen",
@@ -167,6 +182,7 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "pad",
             "density",
             "nm",
+            "preset",
         ],
         "sweep" => &["min", "max"],
         "waveform" => &["fig"],
@@ -245,21 +261,29 @@ fn is_snn(kind: EngineKind) -> bool {
     matches!(kind, EngineKind::SnnFireFly | EngineKind::SnnEnhanced)
 }
 
-/// Conv-workload-exclusive flags (`--spikes` is the client's
-/// binary-input switch for SNN servers — conv-only like the rest).
+/// Conv-shape flags, exclusive to `--workload conv`.
+const CONV_SHAPE: [&str; 7] =
+    ["in-c", "in-h", "in-w", "out-c", "kernel", "stride", "pad"];
+/// [`CONV_SHAPE`] plus `--spikes` (the client's binary-input switch
+/// for SNN servers). `--spikes` is shared by the `conv` and `model`
+/// workloads — a model preset builds its spiking variant under it —
+/// so the `model` checks use [`CONV_SHAPE`] instead of this list.
 const CONV_ONLY: [&str; 8] = [
     "in-c", "in-h", "in-w", "out-c", "kernel", "stride", "pad", "spikes",
 ];
 /// GEMM-shape flags — shared by the `gemm` and `sparse` workloads
 /// (a sparse job is a GEMM with structured operands), excluded under
-/// `conv`.
+/// `conv` and `model`.
 const GEMM_ONLY: [&str; 3] = ["m", "k", "n"];
 /// Sparse-workload-exclusive flags.
 const SPARSE_ONLY: [&str; 2] = ["density", "nm"];
+/// Model-workload-exclusive flags.
+const MODEL_ONLY: [&str; 1] = ["preset"];
 /// Generator-loop flags that are no workload's shape flags; with
-/// [`CONV_ONLY`], [`GEMM_ONLY`] and [`SPARSE_ONLY`] these form the
-/// full set rejected under `serve --listen` (clients own the workload
-/// there) — one source, so the exclusive lists cannot drift.
+/// [`CONV_ONLY`], [`GEMM_ONLY`], [`SPARSE_ONLY`] and [`MODEL_ONLY`]
+/// these form the full set rejected under `serve --listen` (clients
+/// own the workload there) — one source, so the exclusive lists
+/// cannot drift.
 const GENERATOR_EXTRA: [&str; 3] = ["jobs", "batch", "workload"];
 /// Client flags that only `client submit` consumes; with the workload
 /// shape lists these are usage errors under `client stats|shutdown`.
@@ -276,10 +300,25 @@ fn check_workload_flags(
     workload: &str,
 ) -> Result<(), String> {
     let checks: &[(&[&str], &str)] = match workload {
-        "conv" => &[(&GEMM_ONLY, "gemm|sparse"), (&SPARSE_ONLY, "sparse")],
-        "sparse" => &[(&CONV_ONLY, "conv")],
+        "conv" => &[
+            (&GEMM_ONLY, "gemm|sparse"),
+            (&SPARSE_ONLY, "sparse"),
+            (&MODEL_ONLY, "model"),
+        ],
+        "sparse" => &[(&CONV_ONLY, "conv"), (&MODEL_ONLY, "model")],
+        // `model` keeps `--spikes` (spiking preset variant) but no
+        // other workload's shape flags.
+        "model" => &[
+            (&GEMM_ONLY, "gemm|sparse"),
+            (&SPARSE_ONLY, "sparse"),
+            (&CONV_SHAPE, "conv"),
+        ],
         // `gemm` and (not-yet-rejected) unknown workloads.
-        _ => &[(&CONV_ONLY, "conv"), (&SPARSE_ONLY, "sparse")],
+        _ => &[
+            (&CONV_ONLY, "conv"),
+            (&SPARSE_ONLY, "sparse"),
+            (&MODEL_ONLY, "model"),
+        ],
     };
     for (exclusive, needed) in checks {
         let offending: Vec<String> = exclusive
@@ -309,6 +348,9 @@ enum Workload {
     /// Sparse GEMM traffic: N:M structured weights at the target
     /// `density`, CSR activations — the zero-work-skipping path.
     Sparse { density: f64, nm: NmPattern },
+    /// Whole-network traffic: each job is one seeded preset model
+    /// graph (intermediates stay server-side in the arena).
+    Model(ModelPreset),
 }
 
 /// Resolve `--workload` for a serving command: `Err(msg)` = usage
@@ -362,8 +404,24 @@ fn resolve_workload(
             };
             Ok(Workload::Sparse { density, nm })
         }
+        "model" => {
+            let preset = match flags.get("preset") {
+                None => ModelPreset::TransformerBlock,
+                Some(s) => ModelPreset::parse(s).ok_or_else(|| {
+                    let have: Vec<&str> = ModelPreset::all()
+                        .into_iter()
+                        .map(ModelPreset::label)
+                        .collect();
+                    format!(
+                        "unknown preset `{s}` (have {})",
+                        have.join(", ")
+                    )
+                })?,
+            };
+            Ok(Workload::Model(preset))
+        }
         other => Err(format!(
-            "unknown workload `{other}` (have gemm, conv, sparse)"
+            "unknown workload `{other}` (have gemm, conv, sparse, model)"
         )),
     }
 }
@@ -385,6 +443,8 @@ fn conv_shape_from_flags(
         k: flag_usize(flags, "kernel", d_k),
         stride: flag_usize(flags, "stride", 1),
         pad: flag_usize(flags, "pad", d_pad),
+        dilation: 1,
+        groups: 1,
     }
 }
 
@@ -469,6 +529,15 @@ fn generate_batch(
                     a: CsrMatI8::random_density(rng, m, k, density),
                     w: w.clone(),
                 });
+            }
+        }
+        Workload::Model(preset) => {
+            // Each job is one whole network; the per-job seed comes
+            // from the generator stream so repeated batches vary
+            // deterministically under the top-level seed.
+            for _ in 0..size {
+                let (model, input) = preset.build(spikes, rng.next_u64());
+                batch.push(Job::Model { model, input });
             }
         }
     }
@@ -599,6 +668,9 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
         }
         Ok(Workload::Sparse { density, nm }) => {
             return cmd_simulate_sparse(cfg, (m, k, n), density, nm, seed)
+        }
+        Ok(Workload::Model(preset)) => {
+            return cmd_simulate_model(cfg, preset, seed)
         }
         Err(msg) => {
             eprintln!("{msg}");
@@ -850,6 +922,89 @@ fn cmd_simulate_sparse(
     code
 }
 
+/// `simulate --workload model`: one whole preset network through the
+/// graph scheduler — every matmul layer runs as dependency-gated
+/// passes on the engines, glue layers evaluate on arena-resident
+/// tensors, and only the final output crosses the session boundary.
+/// Verified against the full-graph golden replay
+/// (`Reference::ModelDirect`).
+fn cmd_simulate_model(
+    cfg: ServiceConfig,
+    preset: ModelPreset,
+    seed: u64,
+) -> i32 {
+    use std::sync::atomic::Ordering;
+    let snn = is_snn(cfg.kind);
+    let (model, input) = preset.build(snn, seed);
+    let layers = model.layers.len();
+    let matmuls = model
+        .layers
+        .iter()
+        .filter(|l| l.op.is_matmul())
+        .count();
+    let mut session = LocalSession::start(cfg.clone());
+    let id = session
+        .submit(Job::Model { model, input })
+        .expect("local submission cannot fail");
+    let state = session
+        .wait(id, Some(Duration::from_secs(600)))
+        .expect("local wait cannot fail");
+    let code = match state {
+        JobState::Done(r) => {
+            let ok = r.verified == Some(true);
+            let metrics = session.metrics();
+            println!(
+                "engine    : {} x{} workers (graph-scheduled passes)",
+                cfg.kind.label(),
+                cfg.workers
+            );
+            println!(
+                "model     : {preset} ({}), {layers} layers \
+                 ({matmuls} matmul), {} MACs",
+                if snn { "spiking" } else { "dense" },
+                r.stats.macs
+            );
+            println!(
+                "output    : {}x{} (intermediates stayed server-side)",
+                r.output.rows, r.output.cols
+            );
+            println!("cycles    : {} slow (aggregated)", r.stats.cycles);
+            println!(
+                "residency : {} peak intermediate bytes in the arena",
+                metrics
+                    .intermediate_bytes_resident
+                    .load(Ordering::Relaxed)
+            );
+            println!(
+                "reuse     : {} cross-layer weight-fill reuses \
+                 ({} fill cycles saved in total)",
+                metrics.inter_layer_fill_reuse.load(Ordering::Relaxed),
+                metrics.fill_cycles_saved.load(Ordering::Relaxed)
+            );
+            println!("wall      : {:?} ({:?} simulated)", r.wall, r.simulated);
+            println!(
+                "verified  : {}",
+                if ok {
+                    "bit-exact vs whole-graph golden replay"
+                } else {
+                    "MISMATCH"
+                }
+            );
+            i32::from(!ok)
+        }
+        JobState::Failed => {
+            eprintln!("model job failed (graph rejected or engine error)");
+            1
+        }
+        JobState::Pending => {
+            eprintln!("simulate failed: model job timed out");
+            1
+        }
+    };
+    let _ = session.shutdown();
+    code
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let cfg = if let Some(path) = flags.get("config") {
         let text = match std::fs::read_to_string(path) {
@@ -890,6 +1045,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             .chain(GEMM_ONLY.iter())
             .chain(CONV_ONLY.iter())
             .chain(SPARSE_ONLY.iter())
+            .chain(MODEL_ONLY.iter())
             .filter(|f| flags.contains_key(**f))
             .map(|f| format!("--{f}"))
             .collect();
@@ -962,6 +1118,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             cfg.workers,
             cfg.shard_width,
             batch
+        ),
+        Workload::Model(preset) => println!(
+            "serving {} {preset} model graphs ({}) on {} x {} workers \
+             (shard width {}, graph-scheduled passes, intermediates \
+             arena-resident)",
+            jobs,
+            if is_snn(cfg.kind) { "spiking" } else { "dense" },
+            cfg.kind.label(),
+            cfg.workers,
+            cfg.shard_width
         ),
     }
     let snn = is_snn(cfg.kind);
@@ -1134,6 +1300,7 @@ fn cmd_client(args: &[String], flags: &HashMap<String, String>) -> i32 {
             .iter()
             .chain(GEMM_ONLY.iter())
             .chain(CONV_ONLY.iter())
+            .chain(MODEL_ONLY.iter())
             .filter(|f| flags.contains_key(**f))
             .map(|f| format!("--{f}"))
             .collect();
@@ -1192,9 +1359,11 @@ fn client_submit(
     let batch = flag_usize(flags, "batch", 1).max(1);
     let seed = flag_usize(flags, "seed", 7) as u64;
     let timeout = Duration::from_secs(flag_usize(flags, "timeout-s", 600) as u64);
-    // `--spikes` is conv-exclusive (resolve_workload rejects it under
-    // gemm via CONV_ONLY); here only its value needs validating —
-    // anything but true/false is a usage error, never a silent false.
+    // `--spikes` is conv/model-exclusive (resolve_workload rejects it
+    // under gemm and sparse via CONV_ONLY); here only its value needs
+    // validating — anything but true/false is a usage error, never a
+    // silent false. Under `--workload model` it selects the preset's
+    // spiking variant (pair it with an SNN server).
     let spikes = match flags.get("spikes").map(String::as_str) {
         None | Some("false") => false,
         Some("true") => true,
@@ -1463,6 +1632,15 @@ mod tests {
                 "sparse", "--nm", "1:4",
             ],
             vec!["serve", "--listen", "127.0.0.1:0", "--port-file", "/tmp/a"],
+            vec![
+                "simulate", "--workload", "model", "--preset",
+                "transformer-block",
+            ],
+            vec!["serve", "--workload", "model", "--preset", "conv-stack"],
+            vec![
+                "client", "submit", "--addr", "127.0.0.1:1", "--workload",
+                "model", "--preset", "transformer-block", "--spikes", "true",
+            ],
             vec!["client", "submit", "--addr", "127.0.0.1:1", "--jobs", "2"],
             vec!["client", "stats", "--addr", "127.0.0.1:1"],
             vec![
@@ -1540,6 +1718,30 @@ mod tests {
         assert!(check_workload_flags(&flags, "conv").is_ok());
         let (_, flags) = parse_args(&args(&["serve", "--m", "64", "--jobs", "4"]));
         assert!(check_workload_flags(&flags, "gemm").is_ok());
+
+        // `--preset` without `--workload model` must not silently run
+        // a dense GEMM...
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--preset", "transformer-block",
+        ]));
+        let err = check_workload_flags(&flags, "gemm").unwrap_err();
+        assert!(err.contains("--preset"), "{err}");
+        assert!(err.contains("--workload model"), "{err}");
+        // ...and the other workloads' shape flags are errors under
+        // model, while `--spikes` (spiking preset variant) is shared.
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "model", "--m", "64",
+        ]));
+        assert!(check_workload_flags(&flags, "model").is_err());
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "model", "--kernel", "3",
+        ]));
+        assert!(check_workload_flags(&flags, "model").is_err());
+        let (_, flags) = parse_args(&args(&[
+            "client", "submit", "--workload", "model", "--preset",
+            "conv-stack", "--spikes", "true",
+        ]));
+        assert!(check_workload_flags(&flags, "model").is_ok());
     }
 
     #[test]
@@ -1560,6 +1762,25 @@ mod tests {
         assert!(err.contains("invalid conv shape"), "{err}");
         let (_, flags) = parse_args(&args(&["serve", "--workload", "quantum"]));
         assert!(resolve_workload(&flags, EngineKind::WsDspFetch).is_err());
+        // Model workload: default preset, explicit preset, bad preset.
+        let (_, flags) = parse_args(&args(&["serve", "--workload", "model"]));
+        assert_eq!(
+            resolve_workload(&flags, EngineKind::WsDspFetch).unwrap(),
+            Workload::Model(ModelPreset::TransformerBlock)
+        );
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "model", "--preset", "conv-stack",
+        ]));
+        assert_eq!(
+            resolve_workload(&flags, EngineKind::WsDspFetch).unwrap(),
+            Workload::Model(ModelPreset::ConvStack)
+        );
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--workload", "model", "--preset", "resnet-1000",
+        ]));
+        let err =
+            resolve_workload(&flags, EngineKind::WsDspFetch).unwrap_err();
+        assert!(err.contains("unknown preset"), "{err}");
     }
 
     /// `--workload sparse` resolves its density/pattern flags, rejects

@@ -1,0 +1,379 @@
+//! The graph compiler: DAG → topological schedule + tensor metadata +
+//! lifetime analysis.
+//!
+//! This is the render-graph pass-scheduler idiom applied to layers:
+//! every layer is a pass over virtual tensors, the compiler recovers
+//! an execution order from the dependency edges (the encoding order
+//! carries no meaning), infers each tensor's `(dtype, rows, cols,
+//! binary)` metadata, and computes when each tensor's **last**
+//! consumer runs — the free point the scheduler uses to return the
+//! buffer to the arena. Double buffering is emergent: with lifetimes
+//! this tight, a layer chain ping-pongs between two pooled buffers
+//! instead of accumulating one per layer.
+
+use super::graph::{Dtype, LayerOp, Model, ModelError};
+use crate::workload::conv::ConvShapeError;
+
+/// Inferred metadata for one virtual tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub dtype: Dtype,
+    pub rows: usize,
+    pub cols: usize,
+    /// Values constrained to {0, 1} — the precondition for feeding an
+    /// [`LayerOp::Snn`] layer.
+    pub binary: bool,
+}
+
+impl TensorMeta {
+    /// Arena-residency cost of keeping this tensor live.
+    pub fn bytes(&self) -> usize {
+        self.rows * self.cols * self.dtype.bytes()
+    }
+}
+
+/// The compiled schedule for one [`Model`].
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    /// Layer indices in execution (topological) order.
+    pub order: Vec<usize>,
+    /// Metadata per tensor id (`len == layers + 1`; id 0 is the model
+    /// input).
+    pub tensors: Vec<TensorMeta>,
+    /// Remaining-consumer count per tensor id at schedule start. The
+    /// output tensor carries one extra use (the client's), so it is
+    /// never freed by the scheduler.
+    pub uses: Vec<usize>,
+    /// Wavefront level per layer: `1 + max(level of producers)`, with
+    /// the model input at level 0. Two layers may share a weight-fill
+    /// group only when their levels are equal — that is the rule that
+    /// keeps cross-layer fill reuse deadlock-free (a group gates on
+    /// tensors strictly below its level, which by induction all
+    /// resolve before any level-`L` unit must run).
+    pub level: Vec<usize>,
+    /// For each schedule step `s`, the tensor ids whose last consumer
+    /// is `order[s]` — freed back to the arena right after that layer.
+    pub free_after: Vec<Vec<usize>>,
+    /// Static high-water of produced-tensor residency (tensor ids
+    /// ≥ 1), in bytes, over the schedule.
+    pub peak_bytes: usize,
+    /// Dense-equivalent MACs per layer (0 for elementwise glue).
+    pub layer_macs: Vec<u64>,
+    /// Sum of `layer_macs`.
+    pub total_macs: u64,
+}
+
+impl ModelPlan {
+    /// Count of matmul-class layers (the ones that reach an engine).
+    pub fn matmul_layers(&self) -> usize {
+        self.layer_macs.iter().filter(|&&m| m > 0).count()
+    }
+}
+
+/// Compiles a [`Model`] into a [`ModelPlan`] or a typed [`ModelError`].
+pub struct GraphCompiler;
+
+impl GraphCompiler {
+    pub fn compile(model: &Model) -> Result<ModelPlan, ModelError> {
+        let n = model.layers.len();
+        if n == 0 {
+            return Err(ModelError::Empty);
+        }
+        if model.input_rows == 0 || model.input_cols == 0 {
+            return Err(ModelError::BadInput {
+                rows: model.input_rows,
+                cols: model.input_cols,
+            });
+        }
+
+        // Structural checks: arity and tensor-id range. Tensor t > 0
+        // is produced by layer t-1; ids past the last layer dangle.
+        for (i, layer) in model.layers.iter().enumerate() {
+            let expected = layer.op.arity();
+            if layer.inputs.len() != expected {
+                return Err(ModelError::Arity {
+                    layer: i,
+                    expected,
+                    got: layer.inputs.len(),
+                });
+            }
+            for &t in &layer.inputs {
+                if t > n {
+                    return Err(ModelError::DanglingInput { layer: i, tensor: t });
+                }
+            }
+        }
+
+        // Kahn's algorithm over layer→layer edges. Forward references
+        // are legal (the encoding order is not the schedule); genuine
+        // cycles leave a nonempty stuck set and are reported through
+        // the smallest stuck layer.
+        let mut indegree = vec![0usize; n];
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, layer) in model.layers.iter().enumerate() {
+            for &t in &layer.inputs {
+                if t > 0 {
+                    indegree[i] += 1;
+                    consumers[t - 1].push(i);
+                }
+            }
+        }
+        let mut order = Vec::with_capacity(n);
+        let mut done = vec![false; n];
+        loop {
+            // Smallest ready index first: deterministic schedules.
+            let Some(next) = (0..n).find(|&i| !done[i] && indegree[i] == 0)
+            else {
+                break;
+            };
+            done[next] = true;
+            order.push(next);
+            for &c in &consumers[next] {
+                indegree[c] -= 1;
+            }
+        }
+        if order.len() < n {
+            let stuck = (0..n).find(|&i| !done[i]).unwrap();
+            return Err(ModelError::Cycle { layer: stuck });
+        }
+
+        // Tensor metadata + per-layer MACs, inferred in schedule order.
+        let placeholder = TensorMeta {
+            dtype: Dtype::I8,
+            rows: 0,
+            cols: 0,
+            binary: false,
+        };
+        let mut tensors = vec![placeholder; n + 1];
+        tensors[0] = TensorMeta {
+            dtype: Dtype::I8,
+            rows: model.input_rows,
+            cols: model.input_cols,
+            binary: model.spike_input,
+        };
+        let mut level = vec![0usize; n];
+        let mut tensor_level = vec![0usize; n + 1];
+        let mut layer_macs = vec![0u64; n];
+        for &i in &order {
+            let layer = &model.layers[i];
+            let ins: Vec<TensorMeta> =
+                layer.inputs.iter().map(|&t| tensors[t]).collect();
+            let (meta, macs) = infer(i, &layer.op, &ins)?;
+            tensors[i + 1] = meta;
+            layer_macs[i] = macs;
+            level[i] = 1 + layer
+                .inputs
+                .iter()
+                .map(|&t| tensor_level[t])
+                .max()
+                .unwrap_or(0);
+            tensor_level[i + 1] = level[i];
+        }
+
+        // Consumer counts. The output tensor gets the client's extra
+        // use; any other unconsumed layer output is dead work.
+        let mut uses = vec![0usize; n + 1];
+        for layer in &model.layers {
+            for &t in &layer.inputs {
+                uses[t] += 1;
+            }
+        }
+        uses[n] += 1;
+        if let Some(t) = (1..n).find(|&t| uses[t] == 0) {
+            return Err(ModelError::DeadLayer { layer: t - 1 });
+        }
+
+        // Lifetime analysis over the schedule: a produced tensor is
+        // resident from its layer's step until its last consumer's
+        // step; peak_bytes is the high-water of that resident set.
+        let mut remaining = uses.clone();
+        let mut free_after: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut resident = 0usize;
+        let mut peak = 0usize;
+        for (s, &i) in order.iter().enumerate() {
+            resident += tensors[i + 1].bytes();
+            peak = peak.max(resident);
+            for &t in &model.layers[i].inputs {
+                remaining[t] -= 1;
+                if t >= 1 && remaining[t] == 0 {
+                    resident -= tensors[t].bytes();
+                    free_after[s].push(t);
+                }
+            }
+        }
+
+        let total_macs = layer_macs.iter().sum();
+        Ok(ModelPlan {
+            order,
+            tensors,
+            uses,
+            level,
+            free_after,
+            peak_bytes: peak,
+            layer_macs,
+            total_macs,
+        })
+    }
+}
+
+/// Type/shape rules for one layer: input metas → output meta + MACs.
+fn infer(
+    i: usize,
+    op: &LayerOp,
+    ins: &[TensorMeta],
+) -> Result<(TensorMeta, u64), ModelError> {
+    let need_i8 = |t: TensorMeta, tensor_hint: usize| -> Result<(), ModelError> {
+        if t.dtype != Dtype::I8 {
+            return Err(ModelError::BadDtype {
+                layer: i,
+                tensor: tensor_hint,
+                expected: Dtype::I8,
+                got: t.dtype,
+            });
+        }
+        Ok(())
+    };
+    match op {
+        LayerOp::Gemm { w } | LayerOp::Snn { w } => {
+            let a = ins[0];
+            need_i8(a, 0)?;
+            if w.rows == 0 || w.cols == 0 || a.cols != w.rows {
+                return Err(ModelError::BadShape {
+                    layer: i,
+                    expected: (a.rows, w.rows),
+                    got: (a.rows, a.cols),
+                });
+            }
+            if matches!(op, LayerOp::Snn { .. }) && !a.binary {
+                return Err(ModelError::SnnInputNotBinary {
+                    layer: i,
+                    tensor: 0,
+                });
+            }
+            Ok((
+                TensorMeta {
+                    dtype: Dtype::I32,
+                    rows: a.rows,
+                    cols: w.cols,
+                    binary: false,
+                },
+                (a.rows * w.rows * w.cols) as u64,
+            ))
+        }
+        LayerOp::SparseGemm { w } => {
+            let a = ins[0];
+            need_i8(a, 0)?;
+            if w.rows() == 0 || w.cols() == 0 || a.cols != w.rows() {
+                return Err(ModelError::BadShape {
+                    layer: i,
+                    expected: (a.rows, w.rows()),
+                    got: (a.rows, a.cols),
+                });
+            }
+            Ok((
+                TensorMeta {
+                    dtype: Dtype::I32,
+                    rows: a.rows,
+                    cols: w.cols(),
+                    binary: false,
+                },
+                // Dense-equivalent, like the sparse job path: skipped
+                // work is delivered work.
+                (a.rows * w.rows() * w.cols()) as u64,
+            ))
+        }
+        LayerOp::Conv { weights, shape } => {
+            let a = ins[0];
+            need_i8(a, 0)?;
+            shape
+                .validate()
+                .map_err(|err| ModelError::BadConv { layer: i, err })?;
+            if weights.len() != shape.weight_len() {
+                return Err(ModelError::BadConv {
+                    layer: i,
+                    err: ConvShapeError::WeightLen {
+                        expected: shape.weight_len(),
+                        got: weights.len(),
+                    },
+                });
+            }
+            if (a.rows, a.cols) != (1, shape.input_len()) {
+                return Err(ModelError::BadShape {
+                    layer: i,
+                    expected: (1, shape.input_len()),
+                    got: (a.rows, a.cols),
+                });
+            }
+            Ok((
+                TensorMeta {
+                    dtype: Dtype::I32,
+                    rows: shape.out_h() * shape.out_w(),
+                    cols: shape.out_c,
+                    binary: false,
+                },
+                shape.macs(),
+            ))
+        }
+        LayerOp::Requant { shift, .. } | LayerOp::Quant { shift, .. } => {
+            // i32 accumulators or i8 tensors both requantize; the
+            // output is i8, binary only for Quant (the binarizer).
+            if !(1..=31).contains(shift) {
+                return Err(ModelError::BadQuant {
+                    layer: i,
+                    shift: *shift,
+                });
+            }
+            let a = ins[0];
+            Ok((
+                TensorMeta {
+                    dtype: Dtype::I8,
+                    rows: a.rows,
+                    cols: a.cols,
+                    binary: matches!(op, LayerOp::Quant { .. }),
+                },
+                0,
+            ))
+        }
+        LayerOp::Add => {
+            let (a, b) = (ins[0], ins[1]);
+            need_i8(a, 0)?;
+            need_i8(b, 1)?;
+            if (a.rows, a.cols) != (b.rows, b.cols) {
+                return Err(ModelError::BadShape {
+                    layer: i,
+                    expected: (a.rows, a.cols),
+                    got: (b.rows, b.cols),
+                });
+            }
+            Ok((
+                TensorMeta {
+                    dtype: Dtype::I8,
+                    rows: a.rows,
+                    cols: a.cols,
+                    binary: false,
+                },
+                0,
+            ))
+        }
+        LayerOp::Chw { h, w } => {
+            let a = ins[0];
+            need_i8(a, 0)?;
+            if *h == 0 || *w == 0 || a.rows != h * w {
+                return Err(ModelError::BadShape {
+                    layer: i,
+                    expected: (h.saturating_mul(*w), a.cols),
+                    got: (a.rows, a.cols),
+                });
+            }
+            Ok((
+                TensorMeta {
+                    dtype: Dtype::I8,
+                    rows: 1,
+                    cols: a.cols * h * w,
+                    binary: a.binary,
+                },
+                0,
+            ))
+        }
+    }
+}

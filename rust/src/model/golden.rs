@@ -1,0 +1,213 @@
+//! The golden model interpreter — and the *single* implementation of
+//! the elementwise glue ops.
+//!
+//! `Reference::ModelDirect` verification replays the whole DAG through
+//! [`golden_eval`] (golden GEMM / direct conv per matmul layer). The
+//! coordinator's scheduler evaluates the glue layers (`Requant`,
+//! `Quant`, `Add`, `Chw`) on the arena-resident tensors through the
+//! **same** [`eval_elementwise`] below, so scheduler-side glue and
+//! golden-side glue are bit-identical by construction — only the
+//! matmul layers differ (engine vs golden), and those are covered by
+//! the engine≡golden property suites.
+
+use super::compiler::GraphCompiler;
+use super::graph::{LayerOp, Model, ModelError};
+use crate::workload::conv::conv2d_direct;
+use crate::workload::gemm::golden_gemm;
+use crate::workload::quant::requantize;
+use crate::workload::{MatI32, MatI8};
+
+/// A materialized virtual tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TensorValue {
+    I8(MatI8),
+    I32(MatI32),
+}
+
+impl TensorValue {
+    pub fn rows(&self) -> usize {
+        match self {
+            TensorValue::I8(m) => m.rows,
+            TensorValue::I32(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            TensorValue::I8(m) => m.cols,
+            TensorValue::I32(m) => m.cols,
+        }
+    }
+
+    /// Residency cost in bytes.
+    pub fn bytes(&self) -> usize {
+        match self {
+            TensorValue::I8(m) => m.data.len(),
+            TensorValue::I32(m) => m.data.len() * 4,
+        }
+    }
+
+    /// Per-element view as i32 (widening i8) — the form the requant
+    /// ops consume.
+    fn as_i32_iter(&self) -> Box<dyn Iterator<Item = i32> + '_> {
+        match self {
+            TensorValue::I8(m) => Box::new(m.data.iter().map(|&v| v as i32)),
+            TensorValue::I32(m) => Box::new(m.data.iter().copied()),
+        }
+    }
+
+    /// The model output as the wire's `MatI32` (i8 outputs widen).
+    pub fn widen(&self) -> MatI32 {
+        match self {
+            TensorValue::I32(m) => m.clone(),
+            TensorValue::I8(m) => MatI32 {
+                rows: m.rows,
+                cols: m.cols,
+                data: m.data.iter().map(|&v| v as i32).collect(),
+            },
+        }
+    }
+}
+
+/// Evaluate one elementwise glue layer. `alloc_i8` supplies the output
+/// buffer (zero-filled, exactly `rows·cols` long) so the scheduler can
+/// lease it from the model's arena while the golden path just
+/// allocates; the arithmetic is identical either way.
+pub(crate) fn eval_elementwise(
+    op: &LayerOp,
+    ins: &[&TensorValue],
+    mut alloc_i8: impl FnMut(usize) -> Vec<i8>,
+) -> TensorValue {
+    match op {
+        LayerOp::Requant {
+            num,
+            shift,
+            zero_point,
+        } => {
+            let a = ins[0];
+            let mut data = alloc_i8(a.rows() * a.cols());
+            for (slot, v) in data.iter_mut().zip(a.as_i32_iter()) {
+                *slot = requantize(v, *num, *shift, *zero_point);
+            }
+            TensorValue::I8(MatI8 {
+                rows: a.rows(),
+                cols: a.cols(),
+                data,
+            })
+        }
+        LayerOp::Quant { num, shift } => {
+            let a = ins[0];
+            let mut data = alloc_i8(a.rows() * a.cols());
+            for (slot, v) in data.iter_mut().zip(a.as_i32_iter()) {
+                *slot = i8::from(requantize(v, *num, *shift, 0) > 0);
+            }
+            TensorValue::I8(MatI8 {
+                rows: a.rows(),
+                cols: a.cols(),
+                data,
+            })
+        }
+        LayerOp::Add => {
+            let (TensorValue::I8(a), TensorValue::I8(b)) = (ins[0], ins[1])
+            else {
+                unreachable!("compiler admits only i8 Add operands")
+            };
+            let mut data = alloc_i8(a.data.len());
+            for ((slot, &x), &y) in
+                data.iter_mut().zip(a.data.iter()).zip(b.data.iter())
+            {
+                *slot = x.saturating_add(y);
+            }
+            TensorValue::I8(MatI8 {
+                rows: a.rows,
+                cols: a.cols,
+                data,
+            })
+        }
+        LayerOp::Chw { h, w } => {
+            let TensorValue::I8(a) = ins[0] else {
+                unreachable!("compiler admits only i8 Chw operands")
+            };
+            // (h·w, c) pixel-major → NCHW-flattened (1, c·h·w).
+            let (hw, c) = (h * w, a.cols);
+            let mut data = alloc_i8(c * hw);
+            for (slot, i) in data.iter_mut().zip(0..c * hw) {
+                let (ch, pix) = (i / hw, i % hw);
+                *slot = a.at(pix, ch);
+            }
+            TensorValue::I8(MatI8 {
+                rows: 1,
+                cols: c * hw,
+                data,
+            })
+        }
+        _ => unreachable!("matmul-class op routed to eval_elementwise"),
+    }
+}
+
+/// Evaluate one matmul-class layer on the golden references.
+pub(crate) fn eval_matmul(op: &LayerOp, a: &TensorValue) -> TensorValue {
+    let TensorValue::I8(a) = a else {
+        unreachable!("compiler admits only i8 matmul operands")
+    };
+    match op {
+        LayerOp::Gemm { w } | LayerOp::Snn { w } => {
+            TensorValue::I32(golden_gemm(a, w))
+        }
+        LayerOp::SparseGemm { w } => {
+            TensorValue::I32(golden_gemm(a, &w.to_dense()))
+        }
+        LayerOp::Conv { weights, shape } => {
+            TensorValue::I32(conv2d_direct(&a.data, weights, *shape))
+        }
+        _ => unreachable!("elementwise op routed to eval_matmul"),
+    }
+}
+
+/// Replay the whole DAG layer by layer through the golden references.
+/// This is what `Reference::ModelDirect` verifies against; it shares
+/// the compiler (schedule, typed rejection) and the elementwise ops
+/// with the serving path, and the matmul golden kernels with every
+/// other workload's verification.
+pub fn golden_eval(model: &Model, input: &MatI8) -> Result<MatI32, ModelError> {
+    let plan = GraphCompiler::compile(model)?;
+    if (input.rows, input.cols) != (model.input_rows, model.input_cols) {
+        return Err(ModelError::BadInput {
+            rows: input.rows,
+            cols: input.cols,
+        });
+    }
+    let mut tensors: Vec<Option<TensorValue>> =
+        (0..model.layers.len() + 1).map(|_| None).collect();
+    tensors[0] = Some(TensorValue::I8(input.clone()));
+    for (s, &i) in plan.order.iter().enumerate() {
+        let layer = &model.layers[i];
+        let produced = if layer.op.is_matmul() {
+            let a = tensors[layer.inputs[0]]
+                .as_ref()
+                .expect("schedule respects dependencies");
+            eval_matmul(&layer.op, a)
+        } else {
+            let ins: Vec<&TensorValue> = layer
+                .inputs
+                .iter()
+                .map(|&t| {
+                    tensors[t]
+                        .as_ref()
+                        .expect("schedule respects dependencies")
+                })
+                .collect();
+            eval_elementwise(&layer.op, &ins, |len| vec![0i8; len])
+        };
+        tensors[i + 1] = Some(produced);
+        // Free dead tensors exactly where the scheduler would — the
+        // golden path exercises the same lifetime analysis.
+        for &t in &plan.free_after[s] {
+            tensors[t] = None;
+        }
+    }
+    Ok(tensors[model.output_tensor()]
+        .as_ref()
+        .expect("output tensor is produced")
+        .widen())
+}

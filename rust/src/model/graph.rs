@@ -1,0 +1,284 @@
+//! The model graph: a validated DAG of layers over virtual tensors.
+//!
+//! A [`Model`] names its tensors by index: tensor `0` is the model
+//! input, and layer `i` produces tensor `i + 1`. Layer inputs may
+//! reference **any** tensor id — including tensors produced by layers
+//! that appear later in the encoding — so the encoding order carries
+//! no scheduling meaning; [`GraphCompiler`](super::GraphCompiler)
+//! recovers a topological schedule (and rejects genuine cycles and
+//! dangling references with typed errors, never panics).
+//!
+//! Layers split into two classes:
+//!
+//! * **matmul-class** ([`LayerOp::Gemm`], [`LayerOp::SparseGemm`],
+//!   [`LayerOp::Conv`], [`LayerOp::Snn`]) — executed on the systolic
+//!   engines through the coordinator's tiling machinery;
+//! * **elementwise glue** ([`LayerOp::Requant`], [`LayerOp::Quant`],
+//!   [`LayerOp::Add`], [`LayerOp::Chw`]) — the `workload/quant.rs`
+//!   arithmetic between array passes, evaluated scheduler-side on the
+//!   arena-resident tensors (zero array cycles, zero client round
+//!   trips).
+
+use crate::workload::conv::{ConvShape, ConvShapeError};
+use crate::workload::sparse::SparseMatI8;
+use crate::workload::MatI8;
+
+/// Element type of a virtual tensor: matmul-class layers accumulate
+/// into `I32`; everything the engines *stream* is `I8`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    I8,
+    I32,
+}
+
+impl Dtype {
+    /// Bytes per element — the unit of arena-residency accounting.
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::I8 => 1,
+            Dtype::I32 => 4,
+        }
+    }
+}
+
+/// One layer's operator. Weights travel *inside* the op (they are
+/// model parameters, not virtual tensors): that is what lets the
+/// coordinator fingerprint them for cross-layer weight-fill reuse.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerOp {
+    /// Dense GEMM: `(m × k) i8 @ w (k × n) → (m × n) i32`.
+    Gemm { w: MatI8 },
+    /// N:M structured-sparse GEMM (densified only inside the golden
+    /// checker, exactly like `Reference::SparseDense`).
+    SparseGemm { w: SparseMatI8 },
+    /// Conv2d over an NCHW-flattened `(1 × in_c·in_h·in_w)` tensor,
+    /// producing the `(out_h·out_w × out_c)` patch-GEMM output.
+    Conv { weights: Vec<i8>, shape: ConvShape },
+    /// Spiking crossbar matmul: requires a **binary** input tensor.
+    Snn { w: MatI8 },
+    /// Requantize to i8: `clamp(((v·num + round) >> shift) + zp)` —
+    /// [`crate::workload::quant::requantize`] per element. Accepts an
+    /// i32 accumulator tensor or an i8 tensor (widened).
+    Requant { num: i32, shift: u32, zero_point: i32 },
+    /// Binarize to a spike tensor: `requantize(v, num, shift, 0) > 0`.
+    /// The output is marked binary, so it may feed [`LayerOp::Snn`].
+    Quant { num: i32, shift: u32 },
+    /// Two-input saturating i8 add (residual/branch merge).
+    Add,
+    /// Repack a conv output `(h·w × c) i8` into the NCHW-flattened
+    /// `(1 × c·h·w)` row the next [`LayerOp::Conv`] consumes.
+    Chw { h: usize, w: usize },
+}
+
+impl LayerOp {
+    /// Wire/debug tag (shared with the proto schema).
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayerOp::Gemm { .. } => "gemm",
+            LayerOp::SparseGemm { .. } => "sparse-gemm",
+            LayerOp::Conv { .. } => "conv",
+            LayerOp::Snn { .. } => "snn",
+            LayerOp::Requant { .. } => "requant",
+            LayerOp::Quant { .. } => "quant",
+            LayerOp::Add => "add",
+            LayerOp::Chw { .. } => "chw",
+        }
+    }
+
+    /// Matmul-class layers run on an engine; the rest are glue the
+    /// scheduler evaluates on the resident tensors.
+    pub fn is_matmul(&self) -> bool {
+        matches!(
+            self,
+            LayerOp::Gemm { .. }
+                | LayerOp::SparseGemm { .. }
+                | LayerOp::Conv { .. }
+                | LayerOp::Snn { .. }
+        )
+    }
+
+    /// How many input tensors the op consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            LayerOp::Add => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// One node of the DAG: an operator plus the tensor ids it reads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub op: LayerOp,
+    /// Tensor ids (`0` = model input, `i + 1` = layer `i`'s output).
+    pub inputs: Vec<usize>,
+}
+
+/// A whole network: the layer DAG plus the model-input tensor's
+/// declared geometry. The model's **output** is the last layer's
+/// tensor (`layers.len()`); every other layer must be consumed by
+/// some later layer or the graph is rejected ([`ModelError::DeadLayer`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Model {
+    pub layers: Vec<Layer>,
+    /// Rows of tensor 0 (the batch/pixel dimension).
+    pub input_rows: usize,
+    /// Columns of tensor 0 (the feature dimension).
+    pub input_cols: usize,
+    /// Whether tensor 0 is a binary spike tensor (values in {0, 1}) —
+    /// required before it may feed an [`LayerOp::Snn`] layer.
+    pub spike_input: bool,
+}
+
+impl Model {
+    pub fn new(input_rows: usize, input_cols: usize, spike_input: bool) -> Self {
+        Model {
+            layers: Vec::new(),
+            input_rows,
+            input_cols,
+            spike_input,
+        }
+    }
+
+    /// Append a layer and return the tensor id it produces.
+    pub fn layer(&mut self, op: LayerOp, inputs: &[usize]) -> usize {
+        self.layers.push(Layer {
+            op,
+            inputs: inputs.to_vec(),
+        });
+        self.layers.len()
+    }
+
+    /// Tensor id of the model output (the last layer's output).
+    pub fn output_tensor(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Validate the DAG without keeping the schedule around.
+    pub fn validate(&self) -> Result<(), ModelError> {
+        super::GraphCompiler::compile(self).map(|_| ())
+    }
+
+    /// Dense-equivalent MAC work across all matmul-class layers
+    /// (`0` if the graph does not compile — the job will resolve as a
+    /// typed `Failed` handle before any accounting matters).
+    pub fn macs(&self) -> u64 {
+        super::GraphCompiler::compile(self)
+            .map(|plan| plan.total_macs)
+            .unwrap_or(0)
+    }
+}
+
+/// Why a [`Model`] cannot be compiled into a schedule. Returned by
+/// [`Model::validate`] / `GraphCompiler::compile` so a bad submission
+/// resolves as a typed `Failed` handle — never a panic, never a
+/// disconnect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelError {
+    /// A model with no layers has no output tensor.
+    Empty,
+    /// The dependency graph contains a cycle through this layer.
+    Cycle { layer: usize },
+    /// A layer references a tensor id no layer (and not the model
+    /// input) produces.
+    DanglingInput { layer: usize, tensor: usize },
+    /// Wrong number of inputs for the operator.
+    Arity {
+        layer: usize,
+        expected: usize,
+        got: usize,
+    },
+    /// An input tensor has the wrong element type.
+    BadDtype {
+        layer: usize,
+        tensor: usize,
+        expected: Dtype,
+        got: Dtype,
+    },
+    /// An input tensor's geometry does not match what the operator
+    /// needs (GEMM inner dim, conv input length, Add operand shapes,
+    /// Chw spatial extent).
+    BadShape {
+        layer: usize,
+        expected: (usize, usize),
+        got: (usize, usize),
+    },
+    /// An [`LayerOp::Snn`] layer consumes a tensor that is not a
+    /// binary spike tensor.
+    SnnInputNotBinary { layer: usize, tensor: usize },
+    /// A conv layer's shape (or weight buffer) failed
+    /// [`ConvShape::validate`].
+    BadConv {
+        layer: usize,
+        err: ConvShapeError,
+    },
+    /// A requant/quant shift outside `1..=31` — `requantize` needs at
+    /// least one rounding bit, and an i32 value has nothing past 31.
+    BadQuant { layer: usize, shift: u32 },
+    /// A non-final layer's output is consumed by nobody: the work
+    /// would run and be thrown away, which is always a graph bug.
+    DeadLayer { layer: usize },
+    /// The declared model-input geometry is degenerate.
+    BadInput { rows: usize, cols: usize },
+}
+
+impl std::fmt::Display for ModelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelError::Empty => write!(f, "model has no layers"),
+            ModelError::Cycle { layer } => {
+                write!(f, "dependency cycle through layer {layer}")
+            }
+            ModelError::DanglingInput { layer, tensor } => write!(
+                f,
+                "layer {layer} reads tensor {tensor}, which nothing produces"
+            ),
+            ModelError::Arity {
+                layer,
+                expected,
+                got,
+            } => write!(
+                f,
+                "layer {layer} takes {expected} input(s), got {got}"
+            ),
+            ModelError::BadDtype {
+                layer,
+                tensor,
+                expected,
+                got,
+            } => write!(
+                f,
+                "layer {layer}: tensor {tensor} is {got:?}, needs {expected:?}"
+            ),
+            ModelError::BadShape {
+                layer,
+                expected,
+                got,
+            } => write!(
+                f,
+                "layer {layer}: input is {}x{}, needs {}x{}",
+                got.0, got.1, expected.0, expected.1
+            ),
+            ModelError::SnnInputNotBinary { layer, tensor } => write!(
+                f,
+                "layer {layer}: snn input tensor {tensor} is not binary"
+            ),
+            ModelError::BadConv { layer, err } => {
+                write!(f, "layer {layer}: {err}")
+            }
+            ModelError::BadQuant { layer, shift } => write!(
+                f,
+                "layer {layer}: shift {shift} outside 1..=31"
+            ),
+            ModelError::DeadLayer { layer } => write!(
+                f,
+                "layer {layer}'s output is never consumed"
+            ),
+            ModelError::BadInput { rows, cols } => {
+                write!(f, "model input {rows}x{cols} is degenerate")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}

@@ -1,0 +1,36 @@
+//! Model graphs: whole networks served as DAGs of layers.
+//!
+//! Single jobs (`Job::Gemm`/`Conv`/`Snn`/`SparseGemm`) round-trip one
+//! matmul through the service; real traffic is networks. This module
+//! is the graph-scheduling subsystem underneath `Job::Model`:
+//!
+//! * [`graph`] — [`Model`]: a validated DAG of [`Layer`] nodes over
+//!   virtual tensors (tensor 0 = input, layer `i` → tensor `i+1`),
+//!   with typed [`ModelError`] rejection for cycles, dangling edges,
+//!   dtype/shape mismatches and dead layers;
+//! * [`compiler`] — [`GraphCompiler`] lowers the DAG to a
+//!   [`ModelPlan`]: topological order, per-tensor metadata, wavefront
+//!   levels (the cross-layer fill-grouping rule), and lifetime
+//!   analysis (when each intermediate returns to the arena);
+//! * [`golden`] — [`golden_eval`] replays the DAG through the golden
+//!   kernels for `Reference::ModelDirect` verification, and owns the
+//!   **single** implementation of the elementwise glue ops the
+//!   scheduler also executes (glue bit-identity by construction);
+//! * [`presets`] — seeded [`ModelPreset`] networks
+//!   (`transformer-block`, `conv-stack`) in dense and spiking
+//!   variants for the CLI, benches and CI smoke.
+//!
+//! Execution lives in `coordinator/models.rs`: matmul layers ride the
+//! existing `FillGroup`/`WorkUnit` machinery as dependency-gated
+//! passes, glue layers run scheduler-side on arena-resident tensors,
+//! and intermediate activations never round-trip through the client.
+
+pub mod compiler;
+pub mod golden;
+pub mod graph;
+pub mod presets;
+
+pub use compiler::{GraphCompiler, ModelPlan, TensorMeta};
+pub use golden::{golden_eval, TensorValue};
+pub use graph::{Dtype, Layer, LayerOp, Model, ModelError};
+pub use presets::ModelPreset;

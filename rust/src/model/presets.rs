@@ -1,0 +1,286 @@
+//! Built-in model presets: seeded, self-contained `(Model, input)`
+//! pairs for the CLI, the benches, and the serve-loopback smoke.
+//!
+//! Every preset comes in two variants selected by the `snn` flag:
+//!
+//! * **dense** — GEMM/conv layers with `Requant` glue, activations
+//!   bounded to ±63 and weights to ±50 so every WS packed-lane pass
+//!   stays exact (the same bounds the single-job generators use);
+//! * **spiking** — `Snn`/1×1-conv layers over **binary** tensors with
+//!   `Quant` (binarize) glue, every matmul operand 32 columns wide to
+//!   match the FireFly crossbar's fixed fan-in.
+//!
+//! The transformer block ties `Wk = Wq` (Reformer-style shared-QK):
+//! the Q and K projections sit at the same wavefront level with
+//! bit-identical weights, so the coordinator merges their tiles into
+//! one fill group — the deterministic inter-layer weight-fill reuse
+//! the bench gates count.
+
+use super::graph::{LayerOp, Model};
+use crate::util::rng::XorShift;
+use crate::workload::conv::ConvShape;
+use crate::workload::MatI8;
+
+/// A named, seeded model the CLI can build without shipping weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelPreset {
+    /// Two transformer blocks (QKV + output projection + 2-layer FFN
+    /// with residuals), per the DiP-style multi-layer GEMM traffic.
+    TransformerBlock,
+    /// Three chained convolutions — the middle one dilated *and*
+    /// grouped — with `Chw` repacks between them.
+    ConvStack,
+}
+
+impl ModelPreset {
+    pub fn all() -> [ModelPreset; 2] {
+        [ModelPreset::TransformerBlock, ModelPreset::ConvStack]
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ModelPreset::TransformerBlock => "transformer-block",
+            ModelPreset::ConvStack => "conv-stack",
+        }
+    }
+
+    /// Parse a `--preset` value ([`ModelPreset::label`] round-trips).
+    pub fn parse(s: &str) -> Option<ModelPreset> {
+        ModelPreset::all().into_iter().find(|p| p.label() == s)
+    }
+
+    /// Build the preset graph and its seeded input. `snn` selects the
+    /// spiking variant (binary tensors, crossbar-shaped layers) for
+    /// SNN servers — the same role `--spikes` plays for conv jobs.
+    pub fn build(self, snn: bool, seed: u64) -> (Model, MatI8) {
+        let mut rng = XorShift::new(seed);
+        match (self, snn) {
+            (ModelPreset::TransformerBlock, false) => {
+                transformer_dense(&mut rng)
+            }
+            (ModelPreset::TransformerBlock, true) => {
+                transformer_snn(&mut rng)
+            }
+            (ModelPreset::ConvStack, false) => conv_stack_dense(&mut rng),
+            (ModelPreset::ConvStack, true) => conv_stack_snn(&mut rng),
+        }
+    }
+}
+
+impl std::fmt::Display for ModelPreset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Dense two-block transformer: m=16 tokens, d=28, d_ff=56. The
+/// requant shifts are chosen so every tensor that feeds a GEMM stays
+/// within ±63 (weights ±50, input ±63): 12 bits after a d=28
+/// projection, 13 after the d_ff=56 contraction, and one halving bit
+/// after each residual add.
+fn transformer_dense(rng: &mut XorShift) -> (Model, MatI8) {
+    let (m, d, d_ff) = (16, 28, 56);
+    let input = MatI8::random_bounded(rng, m, d, 63);
+    let mut model = Model::new(m, d, false);
+    let rq = |shift: u32| LayerOp::Requant {
+        num: 1,
+        shift,
+        zero_point: 0,
+    };
+    let mut x = 0;
+    for _ in 0..2 {
+        let wq = MatI8::random_bounded(rng, d, d, 50);
+        let wv = MatI8::random_bounded(rng, d, d, 50);
+        let wo = MatI8::random_bounded(rng, d, d, 50);
+        let w1 = MatI8::random_bounded(rng, d, d_ff, 50);
+        let w2 = MatI8::random_bounded(rng, d_ff, d, 50);
+        // Shared-QK: K reuses Q's weights bit-identically, at the same
+        // wavefront level — the cross-layer fill-reuse pair.
+        let tq = model.layer(LayerOp::Gemm { w: wq.clone() }, &[x]);
+        let q = model.layer(rq(12), &[tq]);
+        let tk = model.layer(LayerOp::Gemm { w: wq }, &[x]);
+        let k = model.layer(rq(12), &[tk]);
+        let tv = model.layer(LayerOp::Gemm { w: wv }, &[x]);
+        let v = model.layer(rq(12), &[tv]);
+        let s = model.layer(LayerOp::Add, &[q, k]);
+        let s2 = model.layer(LayerOp::Add, &[s, v]);
+        let sq = model.layer(rq(2), &[s2]);
+        let to = model.layer(LayerOp::Gemm { w: wo }, &[sq]);
+        let p = model.layer(rq(12), &[to]);
+        let r = model.layer(LayerOp::Add, &[p, x]);
+        let rq1 = model.layer(rq(1), &[r]);
+        let t1 = model.layer(LayerOp::Gemm { w: w1 }, &[rq1]);
+        let f1 = model.layer(rq(12), &[t1]);
+        let t2 = model.layer(LayerOp::Gemm { w: w2 }, &[f1]);
+        let f2 = model.layer(rq(13), &[t2]);
+        let y = model.layer(LayerOp::Add, &[f2, rq1]);
+        x = model.layer(rq(1), &[y]);
+    }
+    (model, input)
+}
+
+/// Spiking two-block transformer: every matmul is a 32-wide crossbar
+/// `Snn` layer, every tensor that feeds one is re-binarized by `Quant`.
+fn transformer_snn(rng: &mut XorShift) -> (Model, MatI8) {
+    let (m, d) = (16, 32);
+    let input = MatI8::from_fn(m, d, |_, _| i8::from(rng.chance(1, 3)));
+    let mut model = Model::new(m, d, true);
+    let q6 = LayerOp::Quant { num: 1, shift: 6 };
+    let q1 = LayerOp::Quant { num: 1, shift: 1 };
+    let mut x = 0;
+    for _ in 0..2 {
+        let wq = MatI8::random_bounded(rng, d, d, 50);
+        let wv = MatI8::random_bounded(rng, d, d, 50);
+        let wo = MatI8::random_bounded(rng, d, d, 50);
+        let w1 = MatI8::random_bounded(rng, d, d, 50);
+        let w2 = MatI8::random_bounded(rng, d, d, 50);
+        let tq = model.layer(LayerOp::Snn { w: wq.clone() }, &[x]);
+        let q = model.layer(q6.clone(), &[tq]);
+        let tk = model.layer(LayerOp::Snn { w: wq }, &[x]);
+        let k = model.layer(q6.clone(), &[tk]);
+        let tv = model.layer(LayerOp::Snn { w: wv }, &[x]);
+        let v = model.layer(q6.clone(), &[tv]);
+        let s = model.layer(LayerOp::Add, &[q, k]);
+        let sb = model.layer(q1.clone(), &[s]);
+        let s2 = model.layer(LayerOp::Add, &[sb, v]);
+        let s2b = model.layer(q1.clone(), &[s2]);
+        let to = model.layer(LayerOp::Snn { w: wo }, &[s2b]);
+        let p = model.layer(q6.clone(), &[to]);
+        let r = model.layer(LayerOp::Add, &[p, x]);
+        let rb = model.layer(q1.clone(), &[r]);
+        let t1 = model.layer(LayerOp::Snn { w: w1 }, &[rb]);
+        let f1 = model.layer(q6.clone(), &[t1]);
+        let t2 = model.layer(LayerOp::Snn { w: w2 }, &[f1]);
+        let f2 = model.layer(q6.clone(), &[t2]);
+        let y = model.layer(LayerOp::Add, &[f2, rb]);
+        x = model.layer(q1.clone(), &[y]);
+    }
+    (model, input)
+}
+
+fn conv_weights(rng: &mut XorShift, shape: ConvShape) -> Vec<i8> {
+    (0..shape.weight_len()).map(|_| rng.i8_in(-50, 50)).collect()
+}
+
+/// Dense conv stack over a 4×10×10 input: plain 3×3, then a dilated
+/// (d=2) **grouped** (g=2) 3×3, then a 1×1 projection — the satellite
+/// `ConvShape` fields exercised end to end, with `Chw` repacks
+/// carrying each layer's pixel-major output back to NCHW.
+fn conv_stack_dense(rng: &mut XorShift) -> (Model, MatI8) {
+    let c1 = ConvShape {
+        in_c: 4,
+        in_h: 10,
+        in_w: 10,
+        out_c: 8,
+        k: 3,
+        stride: 1,
+        pad: 1,
+        dilation: 1,
+        groups: 1,
+    };
+    let c2 = ConvShape {
+        in_c: 8,
+        in_h: 10,
+        in_w: 10,
+        out_c: 8,
+        k: 3,
+        stride: 1,
+        pad: 2,
+        dilation: 2,
+        groups: 2,
+    };
+    let c3 = ConvShape {
+        in_c: 8,
+        in_h: 10,
+        in_w: 10,
+        out_c: 12,
+        k: 1,
+        stride: 1,
+        pad: 0,
+        dilation: 1,
+        groups: 1,
+    };
+    let input = MatI8::random_bounded(rng, 1, c1.input_len(), 63);
+    let mut model = Model::new(1, c1.input_len(), false);
+    let rq = |shift: u32| LayerOp::Requant {
+        num: 1,
+        shift,
+        zero_point: 0,
+    };
+    let t1 = model.layer(
+        LayerOp::Conv {
+            weights: conv_weights(rng, c1),
+            shape: c1,
+        },
+        &[0],
+    );
+    let a1 = model.layer(rq(12), &[t1]);
+    let n1 = model.layer(LayerOp::Chw { h: 10, w: 10 }, &[a1]);
+    let t2 = model.layer(
+        LayerOp::Conv {
+            weights: conv_weights(rng, c2),
+            shape: c2,
+        },
+        &[n1],
+    );
+    let a2 = model.layer(rq(11), &[t2]);
+    let n2 = model.layer(LayerOp::Chw { h: 10, w: 10 }, &[a2]);
+    let t3 = model.layer(
+        LayerOp::Conv {
+            weights: conv_weights(rng, c3),
+            shape: c3,
+        },
+        &[n2],
+    );
+    model.layer(rq(9), &[t3]);
+    (model, input)
+}
+
+/// Spiking conv stack: 1×1 convolutions over 32 channels (so the
+/// im2col K dimension equals the 32-wide crossbar fan-in), binary
+/// tensors throughout.
+fn conv_stack_snn(rng: &mut XorShift) -> (Model, MatI8) {
+    let shape = |out_c: usize| ConvShape {
+        in_c: 32,
+        in_h: 6,
+        in_w: 6,
+        out_c,
+        k: 1,
+        stride: 1,
+        pad: 0,
+        dilation: 1,
+        groups: 1,
+    };
+    let (c1, c2, c3) = (shape(32), shape(32), shape(12));
+    let input =
+        MatI8::from_fn(1, c1.input_len(), |_, _| i8::from(rng.chance(1, 3)));
+    let mut model = Model::new(1, c1.input_len(), true);
+    let q4 = LayerOp::Quant { num: 1, shift: 4 };
+    let t1 = model.layer(
+        LayerOp::Conv {
+            weights: conv_weights(rng, c1),
+            shape: c1,
+        },
+        &[0],
+    );
+    let a1 = model.layer(q4.clone(), &[t1]);
+    let n1 = model.layer(LayerOp::Chw { h: 6, w: 6 }, &[a1]);
+    let t2 = model.layer(
+        LayerOp::Conv {
+            weights: conv_weights(rng, c2),
+            shape: c2,
+        },
+        &[n1],
+    );
+    let a2 = model.layer(q4.clone(), &[t2]);
+    let n2 = model.layer(LayerOp::Chw { h: 6, w: 6 }, &[a2]);
+    let t3 = model.layer(
+        LayerOp::Conv {
+            weights: conv_weights(rng, c3),
+            shape: c3,
+        },
+        &[n2],
+    );
+    model.layer(q4, &[t3]);
+    (model, input)
+}

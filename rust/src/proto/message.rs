@@ -15,11 +15,17 @@
 //!          "idx": [slot column indices, 255 = empty], "val": [i8 slots]}
 //! csr     {"rows": R, "cols": C, "row_ptr": [ints], "col_idx": [ints],
 //!          "val": [i8]}
-//! shape   {"in_c", "in_h", "in_w", "out_c", "k", "stride", "pad"}
+//! shape   {"in_c", "in_h", "in_w", "out_c", "k", "stride", "pad",
+//!          "dilation", "groups"}   (last two optional, default 1)
+//! layer   {"op": "gemm"|"sparse-gemm"|"conv"|"snn"|"requant"|"quant"
+//!                |"add"|"chw", <op fields>, "in": [tensor ids]}
+//! model   {"layers": [layer], "input_rows": R, "input_cols": C,
+//!          "spikes": bool}
 //! job     {"kind": "gemm",  "a": matrix, "w": matrix}
 //!       | {"kind": "conv",  "input": [i8], "weights": [i8], "shape": shape}
 //!       | {"kind": "snn",   "spikes": matrix, "weights": matrix}
 //!       | {"kind": "sparse", "a": csr, "w": sparse}
+//!       | {"kind": "model", "model": model, "input": matrix}
 //! result  {"id", "output": matrix, "stats": {run-stat counters},
 //!          "simulated_us", "wall_us", "verified": bool|null}
 //! ```
@@ -29,6 +35,7 @@
 
 use crate::coordinator::{Job, JobResult};
 use crate::engines::RunStats;
+use crate::model::{Layer, LayerOp, Model};
 use crate::util::json::{Json, JsonError};
 use crate::workload::conv::ConvShape;
 use crate::workload::{CsrMatI8, MatI32, MatI8, NmPattern, SparseMatI8};
@@ -62,6 +69,14 @@ pub enum Request {
         w: SparseMatI8,
         density: Option<f64>,
     },
+    /// Submit one whole model graph (a DAG of layers over the given
+    /// input tensor); answered with [`Response::Handle`]. Structural
+    /// schema violations (bad matrices, unknown op tags) are decode
+    /// errors; *graph* violations (cycles, dangling edges, shape
+    /// mismatches) decode fine and resolve as a typed `Failed` handle
+    /// at submit. Intermediate activations stay server-side — only the
+    /// final output tensor ever travels back.
+    SubmitModel { model: Model, input: MatI8 },
     /// Submit a batch in one call (weight-tile reuse groups across the
     /// whole batch, exactly like the in-process API); answered with
     /// [`Response::Handles`] in job order.
@@ -311,6 +326,8 @@ fn csr_to_json(a: &CsrMatI8) -> Json {
 }
 
 fn shape_to_json(s: ConvShape) -> Json {
+    // Encoders always write dilation/groups; decoders default absent
+    // fields to 1 so pre-dilation clients keep round-tripping.
     Json::object([
         ("in_c", Json::from(s.in_c)),
         ("in_h", Json::from(s.in_h)),
@@ -319,6 +336,55 @@ fn shape_to_json(s: ConvShape) -> Json {
         ("k", Json::from(s.k)),
         ("stride", Json::from(s.stride)),
         ("pad", Json::from(s.pad)),
+        ("dilation", Json::from(s.dilation)),
+        ("groups", Json::from(s.groups)),
+    ])
+}
+
+fn layer_to_json(layer: &Layer) -> Json {
+    let mut fields: Vec<(&'static str, Json)> =
+        vec![("op", Json::from(layer.op.label()))];
+    match &layer.op {
+        LayerOp::Gemm { w } | LayerOp::Snn { w } => {
+            fields.push(("w", mat_i8_to_json(w)));
+        }
+        LayerOp::SparseGemm { w } => fields.push(("w", sparse_to_json(w))),
+        LayerOp::Conv { weights, shape } => {
+            fields.push(("weights", i8_slice_to_json(weights)));
+            fields.push(("shape", shape_to_json(*shape)));
+        }
+        LayerOp::Requant {
+            num,
+            shift,
+            zero_point,
+        } => {
+            fields.push(("num", Json::Int(*num as i64)));
+            fields.push(("shift", Json::Int(*shift as i64)));
+            fields.push(("zp", Json::Int(*zero_point as i64)));
+        }
+        LayerOp::Quant { num, shift } => {
+            fields.push(("num", Json::Int(*num as i64)));
+            fields.push(("shift", Json::Int(*shift as i64)));
+        }
+        LayerOp::Add => {}
+        LayerOp::Chw { h, w } => {
+            fields.push(("h", Json::from(*h)));
+            fields.push(("w", Json::from(*w)));
+        }
+    }
+    fields.push((
+        "in",
+        Json::array(layer.inputs.iter().map(|&t| Json::from(t))),
+    ));
+    Json::object(fields)
+}
+
+fn model_to_json(m: &Model) -> Json {
+    Json::object([
+        ("layers", Json::array(m.layers.iter().map(layer_to_json))),
+        ("input_rows", Json::from(m.input_rows)),
+        ("input_cols", Json::from(m.input_cols)),
+        ("spikes", Json::Bool(m.spike_input)),
     ])
 }
 
@@ -348,6 +414,11 @@ fn job_to_json(job: &Job) -> Json {
             ("kind", Json::from("sparse")),
             ("a", csr_to_json(a)),
             ("w", sparse_to_json(w)),
+        ]),
+        Job::Model { model, input } => Json::object([
+            ("kind", Json::from("model")),
+            ("model", model_to_json(model)),
+            ("input", mat_i8_to_json(input)),
         ]),
     }
 }
@@ -437,6 +508,14 @@ impl Request {
                     ),
                 ],
             ),
+            Request::SubmitModel { model, input } => envelope(
+                "req",
+                "submit-model",
+                vec![
+                    ("model", model_to_json(model)),
+                    ("input", mat_i8_to_json(input)),
+                ],
+            ),
             Request::SubmitBatch { jobs } => envelope(
                 "req",
                 "submit-batch",
@@ -489,6 +568,10 @@ impl Request {
                 a: csr_field(v, "a")?,
                 w: sparse_field(v, "w")?,
                 density: opt_f64_field(v, "density")?,
+            },
+            "submit-model" => Request::SubmitModel {
+                model: model_field(v, "model")?,
+                input: mat_i8_field(v, "input")?,
             },
             "submit-batch" => {
                 let jobs = v
@@ -861,6 +944,42 @@ fn mat_i32_from(v: &Json, what: &'static str) -> Result<MatI32, ProtoError> {
     Ok(MatI32 { rows, cols, data })
 }
 
+/// A field that older encoders omit: absent means `1`, present means
+/// it must be a well-typed integer.
+fn usize_field_or_one(
+    v: &Json,
+    what: &'static str,
+) -> Result<usize, ProtoError> {
+    match v.get(what) {
+        None => Ok(1),
+        Some(j) => j
+            .as_i64()
+            .and_then(|i| usize::try_from(i).ok())
+            .ok_or(ProtoError::Schema { what }),
+    }
+}
+
+fn i32_field(v: &Json, what: &'static str) -> Result<i32, ProtoError> {
+    v.get(what)
+        .and_then(Json::as_i64)
+        .and_then(|i| i32::try_from(i).ok())
+        .ok_or(ProtoError::Schema { what })
+}
+
+fn u32_field(v: &Json, what: &'static str) -> Result<u32, ProtoError> {
+    v.get(what)
+        .and_then(Json::as_i64)
+        .and_then(|i| u32::try_from(i).ok())
+        .ok_or(ProtoError::Schema { what })
+}
+
+fn bool_field(v: &Json, what: &'static str) -> Result<bool, ProtoError> {
+    match v.get(what) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => Err(ProtoError::Schema { what }),
+    }
+}
+
 fn shape_from_json(v: &Json) -> Result<ConvShape, ProtoError> {
     Ok(ConvShape {
         in_c: usize_field(v, "in_c")?,
@@ -870,11 +989,83 @@ fn shape_from_json(v: &Json) -> Result<ConvShape, ProtoError> {
         k: usize_field(v, "k")?,
         stride: usize_field(v, "stride")?,
         pad: usize_field(v, "pad")?,
+        dilation: usize_field_or_one(v, "dilation")?,
+        groups: usize_field_or_one(v, "groups")?,
     })
 }
 
 fn shape_field(v: &Json, what: &'static str) -> Result<ConvShape, ProtoError> {
     shape_from_json(v.get(what).ok_or(ProtoError::Schema { what })?)
+}
+
+fn layer_from_json(v: &Json) -> Result<Layer, ProtoError> {
+    let tag = v
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or(ProtoError::Schema { what: "op" })?;
+    let op = match tag {
+        "gemm" => LayerOp::Gemm {
+            w: mat_i8_field(v, "w")?,
+        },
+        "sparse-gemm" => LayerOp::SparseGemm {
+            w: sparse_field(v, "w")?,
+        },
+        "conv" => LayerOp::Conv {
+            weights: i8_vec_field(v, "weights")?,
+            shape: shape_field(v, "shape")?,
+        },
+        "snn" => LayerOp::Snn {
+            w: mat_i8_field(v, "w")?,
+        },
+        "requant" => LayerOp::Requant {
+            num: i32_field(v, "num")?,
+            shift: u32_field(v, "shift")?,
+            zero_point: i32_field(v, "zp")?,
+        },
+        "quant" => LayerOp::Quant {
+            num: i32_field(v, "num")?,
+            shift: u32_field(v, "shift")?,
+        },
+        "add" => LayerOp::Add,
+        "chw" => LayerOp::Chw {
+            h: usize_field(v, "h")?,
+            w: usize_field(v, "w")?,
+        },
+        other => {
+            return Err(ProtoError::UnknownTag {
+                kind: "layer",
+                tag: other.to_string(),
+            })
+        }
+    };
+    Ok(Layer {
+        op,
+        inputs: usize_vec_field(v, "in")?,
+    })
+}
+
+/// Decode a model graph. Only *structural* validity is enforced here
+/// (operand encodings, op tags); graph-level validity is the
+/// compiler's job at submit time, where violations become a typed
+/// `Failed` handle instead of a dropped frame.
+fn model_from_json(v: &Json) -> Result<Model, ProtoError> {
+    let layers = v
+        .get("layers")
+        .and_then(Json::as_array)
+        .ok_or(ProtoError::Schema { what: "layers" })?
+        .iter()
+        .map(layer_from_json)
+        .collect::<Result<_, _>>()?;
+    Ok(Model {
+        layers,
+        input_rows: usize_field(v, "input_rows")?,
+        input_cols: usize_field(v, "input_cols")?,
+        spike_input: bool_field(v, "spikes")?,
+    })
+}
+
+fn model_field(v: &Json, what: &'static str) -> Result<Model, ProtoError> {
+    model_from_json(v.get(what).ok_or(ProtoError::Schema { what })?)
 }
 
 fn job_from_json(v: &Json) -> Result<Job, ProtoError> {
@@ -899,6 +1090,10 @@ fn job_from_json(v: &Json) -> Result<Job, ProtoError> {
         "sparse" => Job::SparseGemm {
             a: csr_field(v, "a")?,
             w: sparse_field(v, "w")?,
+        },
+        "model" => Job::Model {
+            model: model_field(v, "model")?,
+            input: mat_i8_field(v, "input")?,
         },
         other => {
             return Err(ProtoError::UnknownTag {
@@ -1112,6 +1307,115 @@ mod tests {
             Request::from_json(&doc),
             Err(ProtoError::Schema { what: "a" })
         );
+    }
+
+    #[test]
+    fn model_submit_round_trips_every_layer_op() {
+        use crate::workload::conv::ConvShape;
+        // Codec-level coverage: one layer per op tag. Graph validity
+        // is deliberately not the codec's concern, so the edges here
+        // are arbitrary.
+        let w = MatI8 {
+            rows: 4,
+            cols: 3,
+            data: (0..12).map(|i| i as i8 - 6).collect(),
+        };
+        let nm = NmPattern::new(2, 4).unwrap();
+        let sw = SparseMatI8::from_dense(
+            &MatI8 {
+                rows: 2,
+                cols: 4,
+                data: vec![0, 3, 0, -5, 7, 0, 0, 2],
+            },
+            nm,
+        )
+        .unwrap();
+        let shape = ConvShape {
+            in_c: 2,
+            in_h: 5,
+            in_w: 5,
+            out_c: 2,
+            k: 3,
+            stride: 1,
+            pad: 2,
+            dilation: 2,
+            groups: 2,
+        };
+        let mut m = Model::new(2, 4, false);
+        m.layer(LayerOp::Gemm { w: w.clone() }, &[0]);
+        m.layer(LayerOp::SparseGemm { w: sw }, &[1]);
+        m.layer(
+            LayerOp::Conv {
+                weights: vec![1; 18],
+                shape,
+            },
+            &[2],
+        );
+        m.layer(LayerOp::Snn { w }, &[3]);
+        m.layer(
+            LayerOp::Requant {
+                num: 3,
+                shift: 9,
+                zero_point: -2,
+            },
+            &[4],
+        );
+        m.layer(LayerOp::Quant { num: 1, shift: 6 }, &[5]);
+        m.layer(LayerOp::Add, &[5, 6]);
+        m.layer(LayerOp::Chw { h: 2, w: 3 }, &[7]);
+        let input = MatI8 {
+            rows: 2,
+            cols: 4,
+            data: vec![1, -2, 3, -4, 5, -6, 7, -8],
+        };
+        let req = Request::SubmitModel {
+            model: m.clone(),
+            input: input.clone(),
+        };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        // The same model also travels inside a batch under the
+        // "model" job tag.
+        let req = Request::SubmitBatch {
+            jobs: vec![Job::Model { model: m, input }],
+        };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+    }
+
+    #[test]
+    fn unknown_layer_op_tag_is_typed() {
+        let doc = Json::parse(
+            r#"{"v":1,"req":"submit-model",
+                "model":{"layers":[{"op":"fft","in":[0]}],
+                         "input_rows":1,"input_cols":1,"spikes":false},
+                "input":{"rows":1,"cols":1,"data":[0]}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            Request::from_json(&doc),
+            Err(ProtoError::UnknownTag {
+                kind: "layer",
+                tag: "fft".to_string()
+            })
+        );
+    }
+
+    #[test]
+    fn shape_dilation_and_groups_default_to_one() {
+        // A pre-dilation client omits both fields; the decoder fills
+        // in the identity values instead of rejecting the frame.
+        let doc = Json::parse(
+            r#"{"v":1,"req":"submit-conv","input":[1,2,3,4],"weights":[1],
+                "shape":{"in_c":1,"in_h":2,"in_w":2,"out_c":1,
+                         "k":1,"stride":1,"pad":0}}"#,
+        )
+        .unwrap();
+        match Request::from_json(&doc).unwrap() {
+            Request::SubmitConv { shape, .. } => {
+                assert_eq!(shape.dilation, 1);
+                assert_eq!(shape.groups, 1);
+            }
+            other => panic!("expected submit-conv, got {other:?}"),
+        }
     }
 
     #[test]

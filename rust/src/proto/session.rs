@@ -109,6 +109,9 @@ pub trait Session {
                 w,
                 density: None,
             },
+            Job::Model { model, input } => {
+                Request::SubmitModel { model, input }
+            }
             other => Request::SubmitBatch { jobs: vec![other] },
         };
         match self.request(req)? {
@@ -279,6 +282,9 @@ impl Frontend {
             // derives real skip decisions from the operands themselves.
             Request::SubmitSparse { a, w, density: _ } => {
                 self.submit_jobs(vec![Job::SparseGemm { a, w }], false)
+            }
+            Request::SubmitModel { model, input } => {
+                self.submit_jobs(vec![Job::Model { model, input }], false)
             }
             Request::SubmitBatch { jobs } => self.submit_jobs(jobs, true),
             Request::Poll { id } => (
@@ -503,6 +509,8 @@ mod tests {
             k: 3,
             stride: 0, // zero stride: rejected at submit
             pad: 1,
+            dilation: 1,
+            groups: 1,
         };
         let id = s
             .submit(Job::Conv {

@@ -19,7 +19,15 @@
 
 use super::gemm::{MatI32, MatI8};
 
-/// NCHW conv shape descriptor (stride/pad uniform, no dilation).
+/// NCHW conv shape descriptor (stride/pad/dilation uniform). Grouped
+/// convolution splits the channels into `groups` independent slices:
+/// output channel `oc` reads only the `in_c / groups` input channels
+/// of its group, and the weight buffer stores
+/// `(out_c, in_c / groups, k, k)`. The GEMM lowering stays a single
+/// matmul — [`weights_to_gemm`] scatters the grouped storage into a
+/// block-diagonal `(k·k·in_c, out_c)` matrix — so every engine path
+/// (lazy tiles, row blocks, fill grouping) serves grouped convs
+/// unchanged.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvShape {
     pub in_c: usize,
@@ -29,6 +37,12 @@ pub struct ConvShape {
     pub k: usize,
     pub stride: usize,
     pub pad: usize,
+    /// Spacing between kernel taps; 1 = ordinary convolution. The
+    /// effective kernel extent is `(k − 1) · dilation + 1`.
+    pub dilation: usize,
+    /// Channel groups; 1 = full connectivity, `in_c` = depthwise.
+    /// Must divide both `in_c` and `out_c`.
+    pub groups: usize,
 }
 
 /// Why a [`ConvShape`] (or a conv job's operand buffers) cannot be
@@ -39,6 +53,16 @@ pub struct ConvShape {
 pub enum ConvShapeError {
     /// `stride == 0` never advances the kernel window.
     ZeroStride,
+    /// `dilation == 0` collapses every kernel tap onto one pixel.
+    ZeroDilation,
+    /// `groups == 0` leaves no channels anywhere.
+    ZeroGroups,
+    /// `groups` must divide the named channel dimension evenly.
+    GroupsDontDivide {
+        dim: &'static str,
+        size: usize,
+        groups: usize,
+    },
     /// A channel/spatial/kernel dimension is zero.
     ZeroDim(&'static str),
     /// The kernel exceeds the padded input extent, so the output
@@ -50,7 +74,8 @@ pub enum ConvShapeError {
     },
     /// Input buffer length disagrees with `in_c * in_h * in_w`.
     InputLen { expected: usize, got: usize },
-    /// Weight buffer length disagrees with `out_c * in_c * k * k`.
+    /// Weight buffer length disagrees with
+    /// `out_c * (in_c / groups) * k * k`.
     WeightLen { expected: usize, got: usize },
     /// A derived size (buffer length, patch-matrix extent, MAC count)
     /// overflows `usize`.
@@ -61,6 +86,13 @@ impl std::fmt::Display for ConvShapeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ConvShapeError::ZeroStride => write!(f, "stride must be > 0"),
+            ConvShapeError::ZeroDilation => {
+                write!(f, "dilation must be > 0")
+            }
+            ConvShapeError::ZeroGroups => write!(f, "groups must be > 0"),
+            ConvShapeError::GroupsDontDivide { dim, size, groups } => {
+                write!(f, "groups {groups} does not divide {dim} {size}")
+            }
             ConvShapeError::ZeroDim(name) => {
                 write!(f, "dimension `{name}` must be > 0")
             }
@@ -88,14 +120,29 @@ impl std::fmt::Display for ConvShapeError {
 impl std::error::Error for ConvShapeError {}
 
 impl ConvShape {
+    /// Effective kernel extent under dilation: `(k − 1)·dilation + 1`
+    /// (`None` on overflow or `dilation == 0`).
+    fn checked_extent(&self) -> Option<usize> {
+        if self.dilation == 0 {
+            return None;
+        }
+        self.k
+            .checked_sub(1)?
+            .checked_mul(self.dilation)?
+            .checked_add(1)
+    }
+
     /// Output height if the shape is well-formed (`None` when the
-    /// kernel underflows the padded extent or `stride == 0`).
+    /// dilated kernel underflows the padded extent, `stride == 0`, or
+    /// `dilation == 0`).
     pub fn checked_out_h(&self) -> Option<usize> {
         if self.stride == 0 {
             return None;
         }
         let padded = self.in_h.checked_add(self.pad.checked_mul(2)?)?;
-        padded.checked_sub(self.k).map(|d| d / self.stride + 1)
+        padded
+            .checked_sub(self.checked_extent()?)
+            .map(|d| d / self.stride + 1)
     }
 
     /// Output width, checked like [`ConvShape::checked_out_h`].
@@ -104,7 +151,9 @@ impl ConvShape {
             return None;
         }
         let padded = self.in_w.checked_add(self.pad.checked_mul(2)?)?;
-        padded.checked_sub(self.k).map(|d| d / self.stride + 1)
+        padded
+            .checked_sub(self.checked_extent()?)
+            .map(|d| d / self.stride + 1)
     }
 
     pub fn out_h(&self) -> usize {
@@ -126,6 +175,12 @@ impl ConvShape {
         if self.stride == 0 {
             return Err(ConvShapeError::ZeroStride);
         }
+        if self.dilation == 0 {
+            return Err(ConvShapeError::ZeroDilation);
+        }
+        if self.groups == 0 {
+            return Err(ConvShapeError::ZeroGroups);
+        }
         for (name, v) in [
             ("in_c", self.in_c),
             ("in_h", self.in_h),
@@ -137,10 +192,23 @@ impl ConvShape {
                 return Err(ConvShapeError::ZeroDim(name));
             }
         }
+        for (dim, size) in [("in_c", self.in_c), ("out_c", self.out_c)] {
+            if size % self.groups != 0 {
+                return Err(ConvShapeError::GroupsDontDivide {
+                    dim,
+                    size,
+                    groups: self.groups,
+                });
+            }
+        }
         if self.checked_out_h().is_none() || self.checked_out_w().is_none() {
             let pad2 = self.pad.saturating_mul(2);
+            // Report the *effective* (dilated) extent: that is what
+            // exceeded the padded input.
             return Err(ConvShapeError::KernelExceedsInput {
-                k: self.k,
+                k: self
+                    .checked_extent()
+                    .unwrap_or(usize::MAX),
                 padded_h: self.in_h.saturating_add(pad2),
                 padded_w: self.in_w.saturating_add(pad2),
             });
@@ -171,12 +239,23 @@ impl ConvShape {
         self.in_c * self.in_h * self.in_w
     }
 
-    /// Elements a conforming (out_c, in_c, k, k) weight buffer must hold.
-    pub fn weight_len(&self) -> usize {
-        self.out_c * self.in_c * self.k * self.k
+    /// Input channels per group (`in_c` when `groups == 1`).
+    pub fn group_in_c(&self) -> usize {
+        // groups == 0 is rejected by validate; max(1) keeps the
+        // accessor total so error paths can still format lengths.
+        self.in_c / self.groups.max(1)
     }
 
-    /// GEMM dimensions after im2col: (M, K, N).
+    /// Elements a conforming `(out_c, in_c / groups, k, k)` weight
+    /// buffer must hold.
+    pub fn weight_len(&self) -> usize {
+        self.out_c * self.group_in_c() * self.k * self.k
+    }
+
+    /// GEMM dimensions after im2col: (M, K, N). K spans **all** input
+    /// channels even when `groups > 1` — the grouped weight matrix is
+    /// block-diagonal over the same K, so the lowering stays a single
+    /// GEMM on every engine path.
     pub fn gemm_dims(&self) -> (usize, usize, usize) {
         (
             self.out_h() * self.out_w(),
@@ -185,6 +264,9 @@ impl ConvShape {
         )
     }
 
+    /// Dense-equivalent MACs of the lowered GEMM. Like the sparse
+    /// workload's accounting, the zero blocks a grouped conv streams
+    /// count as delivered work (the array executes them).
     pub fn macs(&self) -> u64 {
         let (m, k, n) = self.gemm_dims();
         (m * k * n) as u64
@@ -206,8 +288,10 @@ pub fn im2col(input: &[i8], shape: ConvShape) -> MatI8 {
             for c in 0..shape.in_c {
                 for ky in 0..shape.k {
                     for kx in 0..shape.k {
-                        let iy = (oy * shape.stride + ky) as isize - shape.pad as isize;
-                        let ix = (ox * shape.stride + kx) as isize - shape.pad as isize;
+                        let iy = (oy * shape.stride + ky * shape.dilation) as isize
+                            - shape.pad as isize;
+                        let ix = (ox * shape.stride + kx * shape.dilation) as isize
+                            - shape.pad as isize;
                         let v = if iy >= 0
                             && ix >= 0
                             && (iy as usize) < shape.in_h
@@ -300,8 +384,8 @@ impl PatchSource {
         let s = &self.shape;
         let (oy, ox) = (row / self.out_w, row % self.out_w);
         let (c, ky, kx) = self.col_decompose(col);
-        let iy = (oy * s.stride + ky) as isize - s.pad as isize;
-        let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+        let iy = (oy * s.stride + ky * s.dilation) as isize - s.pad as isize;
+        let ix = (ox * s.stride + kx * s.dilation) as isize - s.pad as isize;
         if iy < 0 || ix < 0 || iy as usize >= s.in_h || ix as usize >= s.in_w {
             0
         } else {
@@ -325,10 +409,12 @@ impl PatchSource {
             let plane = &self.input[c * s.in_h * s.in_w..(c + 1) * s.in_h * s.in_w];
             let mut row = 0;
             for oy in 0..self.out_h {
-                let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                let iy =
+                    (oy * s.stride + ky * s.dilation) as isize - s.pad as isize;
                 let in_y = iy >= 0 && (iy as usize) < s.in_h;
                 for ox in 0..self.out_w {
-                    let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                    let ix = (ox * s.stride + kx * s.dilation) as isize
+                        - s.pad as isize;
                     if in_y && ix >= 0 && (ix as usize) < s.in_w {
                         t.set(row, i, plane[iy as usize * s.in_w + ix as usize]);
                     }
@@ -355,8 +441,10 @@ impl PatchSource {
             let plane = &self.input[c * s.in_h * s.in_w..(c + 1) * s.in_h * s.in_w];
             let (mut oy, mut ox) = (m0 / self.out_w, m0 % self.out_w);
             for r in m0..m1 {
-                let iy = (oy * s.stride + ky) as isize - s.pad as isize;
-                let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                let iy =
+                    (oy * s.stride + ky * s.dilation) as isize - s.pad as isize;
+                let ix =
+                    (ox * s.stride + kx * s.dilation) as isize - s.pad as isize;
                 if iy >= 0
                     && ix >= 0
                     && (iy as usize) < s.in_h
@@ -385,34 +473,57 @@ impl PatchSource {
     }
 }
 
-/// Weights (out_c, in_c, k, k) flattened -> GEMM weight matrix
-/// (k*k*in_c, out_c), matching [`im2col`]'s column order.
+/// Weights (out_c, in_c / groups, k, k) flattened -> GEMM weight
+/// matrix (k*k*in_c, out_c), matching [`im2col`]'s column order. With
+/// `groups > 1` the result is block-diagonal: output column `oc` holds
+/// zeros for every input channel outside its group, so a single GEMM
+/// over the full-K patch matrix computes the grouped conv exactly.
 pub fn weights_to_gemm(weights: &[i8], shape: ConvShape) -> MatI8 {
     assert_eq!(weights.len(), shape.weight_len());
     let kdim = shape.k * shape.k * shape.in_c;
+    let cpg = shape.group_in_c();
+    let opg = shape.out_c / shape.groups;
     MatI8::from_fn(kdim, shape.out_c, |row, oc| {
         // row = c * k * k + ky * k + kx
         let c = row / (shape.k * shape.k);
         let rem = row % (shape.k * shape.k);
-        weights[oc * shape.in_c * shape.k * shape.k + c * shape.k * shape.k + rem]
+        let gi = oc / opg;
+        if (gi * cpg..(gi + 1) * cpg).contains(&c) {
+            weights[oc * cpg * shape.k * shape.k
+                + (c - gi * cpg) * shape.k * shape.k
+                + rem]
+        } else {
+            0
+        }
     })
 }
 
 /// Direct (naive) convolution for cross-checking the im2col path.
+/// Walks only the `in_c / groups` channels of `oc`'s group, with the
+/// dilated tap positions — the semantic reference the block-diagonal
+/// GEMM lowering must match.
 pub fn conv2d_direct(input: &[i8], weights: &[i8], shape: ConvShape) -> MatI32 {
     let (oh, ow) = (shape.out_h(), shape.out_w());
+    let cpg = shape.group_in_c();
+    let opg = shape.out_c / shape.groups;
     let mut out = MatI32::zeros(oh * ow, shape.out_c);
     for oc in 0..shape.out_c {
+        let gi = oc / opg;
         for oy in 0..oh {
             for ox in 0..ow {
                 let mut acc = 0i32;
-                for c in 0..shape.in_c {
+                for c_local in 0..cpg {
+                    let c = gi * cpg + c_local;
                     for ky in 0..shape.k {
                         for kx in 0..shape.k {
-                            let iy =
-                                (oy * shape.stride + ky) as isize - shape.pad as isize;
-                            let ix =
-                                (ox * shape.stride + kx) as isize - shape.pad as isize;
+                            let iy = (oy * shape.stride
+                                + ky * shape.dilation)
+                                as isize
+                                - shape.pad as isize;
+                            let ix = (ox * shape.stride
+                                + kx * shape.dilation)
+                                as isize
+                                - shape.pad as isize;
                             if iy < 0
                                 || ix < 0
                                 || iy as usize >= shape.in_h
@@ -423,8 +534,8 @@ pub fn conv2d_direct(input: &[i8], weights: &[i8], shape: ConvShape) -> MatI32 {
                             let iv = input[c * shape.in_h * shape.in_w
                                 + iy as usize * shape.in_w
                                 + ix as usize] as i32;
-                            let wv = weights[oc * shape.in_c * shape.k * shape.k
-                                + c * shape.k * shape.k
+                            let wv = weights[oc * cpg * shape.k * shape.k
+                                + c_local * shape.k * shape.k
                                 + ky * shape.k
                                 + kx] as i32;
                             acc += iv * wv;
@@ -446,8 +557,8 @@ mod tests {
 
     fn check_shape(shape: ConvShape, seed: u64) {
         let mut rng = XorShift::new(seed);
-        let input = rng.i8_vec(shape.in_c * shape.in_h * shape.in_w);
-        let weights = rng.i8_vec(shape.out_c * shape.in_c * shape.k * shape.k);
+        let input = rng.i8_vec(shape.input_len());
+        let weights = rng.i8_vec(shape.weight_len());
         let patches = im2col(&input, shape);
         let wmat = weights_to_gemm(&weights, shape);
         let via_gemm = golden_gemm(&patches, &wmat);
@@ -471,6 +582,8 @@ mod tests {
                 k: 3,
                 stride: 1,
                 pad: 1,
+                dilation: 1,
+                groups: 1,
             },
             1,
         );
@@ -487,6 +600,8 @@ mod tests {
                 k: 3,
                 stride: 2,
                 pad: 0,
+                dilation: 1,
+                groups: 1,
             },
             2,
         );
@@ -503,6 +618,8 @@ mod tests {
                 k: 1,
                 stride: 1,
                 pad: 0,
+                dilation: 1,
+                groups: 1,
             },
             3,
         );
@@ -520,6 +637,8 @@ mod tests {
                 k: 3,
                 stride: 2,
                 pad: 1,
+                dilation: 1,
+                groups: 1,
             },
             4,
         );
@@ -537,9 +656,159 @@ mod tests {
                 k: 3,
                 stride: 1,
                 pad: 1,
+                dilation: 1,
+                groups: 1,
             },
             5,
         );
+    }
+
+    #[test]
+    fn im2col_equals_direct_dilated() {
+        // dilation 2 on a padded input: taps reach 2 pixels apart, so
+        // the effective extent is 5 over a 9x9 plane.
+        check_shape(
+            ConvShape {
+                in_c: 3,
+                in_h: 9,
+                in_w: 9,
+                out_c: 4,
+                k: 3,
+                stride: 1,
+                pad: 2,
+                dilation: 2,
+                groups: 1,
+            },
+            6,
+        );
+    }
+
+    #[test]
+    fn im2col_equals_direct_grouped() {
+        // 2 groups over 6->4 channels: each output channel reads only
+        // its 3-channel slice; the GEMM lowering goes block-diagonal.
+        check_shape(
+            ConvShape {
+                in_c: 6,
+                in_h: 6,
+                in_w: 6,
+                out_c: 4,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                dilation: 1,
+                groups: 2,
+            },
+            7,
+        );
+    }
+
+    #[test]
+    fn im2col_equals_direct_depthwise_dilated_strided() {
+        // Depthwise (groups == in_c == out_c) combined with dilation
+        // and stride — every new shape field at once.
+        check_shape(
+            ConvShape {
+                in_c: 4,
+                in_h: 11,
+                in_w: 9,
+                out_c: 4,
+                k: 3,
+                stride: 2,
+                pad: 2,
+                dilation: 2,
+                groups: 4,
+            },
+            8,
+        );
+    }
+
+    #[test]
+    fn grouped_weight_len_and_dims() {
+        let s = ConvShape {
+            in_c: 8,
+            in_h: 5,
+            in_w: 5,
+            out_c: 6,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            dilation: 1,
+            groups: 2,
+        };
+        assert_eq!(s.validate(), Ok(()));
+        assert_eq!(s.group_in_c(), 4);
+        // Weights shrink per-group; K of the lowered GEMM does not.
+        assert_eq!(s.weight_len(), 6 * 4 * 3 * 3);
+        assert_eq!(s.gemm_dims(), (25, 72, 6));
+    }
+
+    #[test]
+    fn dilation_shrinks_output_like_a_larger_kernel() {
+        let base = ConvShape {
+            in_c: 1,
+            in_h: 10,
+            in_w: 10,
+            out_c: 1,
+            k: 3,
+            stride: 1,
+            pad: 0,
+            dilation: 3,
+            groups: 1,
+        };
+        // Effective extent (3-1)*3+1 = 7 -> out 4x4.
+        assert_eq!(base.validate(), Ok(()));
+        assert_eq!((base.out_h(), base.out_w()), (4, 4));
+    }
+
+    #[test]
+    fn validate_rejects_bad_dilation_and_groups() {
+        let good = ConvShape {
+            in_c: 4,
+            in_h: 6,
+            in_w: 6,
+            out_c: 4,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            dilation: 1,
+            groups: 1,
+        };
+        assert_eq!(good.validate(), Ok(()));
+
+        let zd = ConvShape { dilation: 0, ..good };
+        assert_eq!(zd.validate(), Err(ConvShapeError::ZeroDilation));
+        assert!(zd.checked_out_h().is_none());
+
+        let zg = ConvShape { groups: 0, ..good };
+        assert_eq!(zg.validate(), Err(ConvShapeError::ZeroGroups));
+
+        let uneven = ConvShape { groups: 3, ..good };
+        assert_eq!(
+            uneven.validate(),
+            Err(ConvShapeError::GroupsDontDivide {
+                dim: "in_c",
+                size: 4,
+                groups: 3,
+            })
+        );
+        let uneven_out = ConvShape { out_c: 6, groups: 4, ..good };
+        assert_eq!(
+            uneven_out.validate(),
+            Err(ConvShapeError::GroupsDontDivide {
+                dim: "out_c",
+                size: 6,
+                groups: 4,
+            })
+        );
+
+        // A dilated kernel whose *effective* extent exceeds the padded
+        // input is rejected with that extent (k stays small).
+        let over = ConvShape { dilation: 4, pad: 0, ..good };
+        assert!(matches!(
+            over.validate(),
+            Err(ConvShapeError::KernelExceedsInput { k: 9, .. })
+        ));
     }
 
     #[test]
@@ -552,6 +821,8 @@ mod tests {
             k: 3,
             stride: 1,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         };
         assert_eq!(s.gemm_dims(), (196, 144, 32));
         assert_eq!(s.macs(), 196 * 144 * 32);
@@ -569,6 +840,8 @@ mod tests {
             k: 3,
             stride: 1,
             pad: 0,
+            dilation: 1,
+            groups: 1,
         };
         assert_eq!(good.validate(), Ok(()));
 
@@ -614,6 +887,8 @@ mod tests {
             k: 5,
             stride: 1,
             pad: 0,
+            dilation: 1,
+            groups: 1,
         };
         let _ = bad.out_h();
     }
@@ -628,6 +903,8 @@ mod tests {
             k: 1,
             stride: 1,
             pad: 0,
+            dilation: 1,
+            groups: 1,
         };
         assert_eq!(
             PatchSource::new(vec![0; 5], shape).unwrap_err(),
@@ -649,6 +926,8 @@ mod tests {
             k: 2,
             stride: 1,
             pad: 0,
+            dilation: 1,
+            groups: 1,
         };
         let src =
             PatchSource::new(vec![1, 2, 3, 4, 5, 6, 7, 8, 9], shape).unwrap();

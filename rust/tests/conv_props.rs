@@ -44,6 +44,8 @@ fn random_valid_shape(rng: &mut XorShift, size: usize) -> ConvShape {
         k: 1 + rng.below(4) as usize,
         stride: 1 + rng.below(3) as usize,
         pad: rng.below(3) as usize,
+        dilation: 1,
+        groups: 1,
     };
     while shape.validate().is_err() {
         shape.pad += 1;
@@ -102,6 +104,8 @@ fn corner_shapes_match_direct_and_recompose() {
             k: 3,
             stride: 2,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         },
         // kernel taller than the input (k > in_h), saved by padding.
         ConvShape {
@@ -112,6 +116,8 @@ fn corner_shapes_match_direct_and_recompose() {
             k: 3,
             stride: 1,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         },
         // kernel exceeding both extents, strided, heavy padding.
         ConvShape {
@@ -122,6 +128,8 @@ fn corner_shapes_match_direct_and_recompose() {
             k: 5,
             stride: 2,
             pad: 2,
+            dilation: 1,
+            groups: 1,
         },
         // stride 3 with pad 2 on a tall-thin input.
         ConvShape {
@@ -132,6 +140,8 @@ fn corner_shapes_match_direct_and_recompose() {
             k: 2,
             stride: 3,
             pad: 2,
+            dilation: 1,
+            groups: 1,
         },
     ];
     for (i, shape) in shapes.into_iter().enumerate() {
@@ -170,6 +180,8 @@ fn shape_for(kind: EngineKind) -> ConvShape {
             k: 1,
             stride: 1,
             pad: 0,
+            dilation: 1,
+            groups: 1,
         }
     } else {
         ConvShape {
@@ -180,6 +192,8 @@ fn shape_for(kind: EngineKind) -> ConvShape {
             k: 3,
             stride: 2,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         }
     }
 }
@@ -264,6 +278,8 @@ fn conv_row_blocks_assemble_on_whole_job_engines() {
                 k: 1,
                 stride: 1,
                 pad: 0,
+                dilation: 1,
+                groups: 1,
             }
         } else {
             ConvShape {
@@ -274,6 +290,8 @@ fn conv_row_blocks_assemble_on_whole_job_engines() {
                 k: 3,
                 stride: 1,
                 pad: 1,
+                dilation: 1,
+                groups: 1,
             }
         };
         assert!(shape.out_h() * shape.out_w() > 64, "{}", kind.label());
@@ -386,6 +404,8 @@ fn invalid_conv_jobs_fail_cleanly_on_whole_job_engines() {
             k: 3,
             stride: 0, // never advances
             pad: 0,
+            dilation: 1,
+            groups: 1,
         },
         ConvShape {
             in_c: 2,
@@ -395,6 +415,8 @@ fn invalid_conv_jobs_fail_cleanly_on_whole_job_engines() {
             k: 7, // exceeds padded input
             stride: 1,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         },
         ConvShape {
             in_c: 0, // zero dim
@@ -404,6 +426,8 @@ fn invalid_conv_jobs_fail_cleanly_on_whole_job_engines() {
             k: 1,
             stride: 1,
             pad: 0,
+            dilation: 1,
+            groups: 1,
         },
     ];
     assert_eq!(bad_shapes[0].validate(), Err(ConvShapeError::ZeroStride));

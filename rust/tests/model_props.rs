@@ -1,0 +1,629 @@
+//! Model-graph properties, end to end (the `model/` subsystem plus
+//! its coordinator, wire, and metrics integration):
+//!
+//! * malformed graphs — cycles, dangling tensor ids, dead layers,
+//!   dtype/shape mismatches — come back as typed [`ModelError`]s from
+//!   the compiler and as `Failed` handles from a live service, never
+//!   panics, and the service keeps serving afterwards;
+//! * every compiled schedule respects the DAG edges: producers run
+//!   before consumers, wavefront levels are `1 + max(producer)`, and
+//!   lifetime analysis frees every non-output tensor exactly once;
+//! * a whole-model submission is bit-identical to the same network
+//!   replayed layer by layer through the single-job client API (glue
+//!   ops re-evaluated client-side with `workload::quant::requantize`)
+//!   on **every** engine kind;
+//! * `SubmitModel` round-trips through the real frame codec against a
+//!   live TCP server, and malformed model payloads resolve as typed
+//!   `bad-request` errors on a connection that stays usable;
+//! * the `transformer-block` preset verifies against the whole-graph
+//!   golden replay on all 8 engine kinds, with the acceptance
+//!   counters observable: one client job per model (intermediates
+//!   never round-trip), every layer accounted, inter-layer weight-fill
+//!   reuse on the weight-stationary engines, and a nonzero arena
+//!   residency high-water.
+
+use dsp48_systolic::coordinator::service::EngineKind;
+use dsp48_systolic::coordinator::{Job, JobResult, JobState, Service, ServiceConfig};
+use dsp48_systolic::model::{GraphCompiler, LayerOp, Model, ModelError, ModelPreset};
+use dsp48_systolic::proto::{
+    read_frame, write_frame, ErrorCode, LocalSession, PollState, Request,
+    Response, Session, TcpServer,
+};
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::quant::requantize;
+use dsp48_systolic::workload::{MatI32, MatI8};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+const WAIT: Duration = Duration::from_secs(600);
+
+fn cfg(kind: EngineKind, workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        kind,
+        workers,
+        ws_rows: 14,
+        ws_cols: 14,
+        verify: true,
+        shard_width: 1,
+    }
+}
+
+fn is_snn(kind: EngineKind) -> bool {
+    matches!(kind, EngineKind::SnnFireFly | EngineKind::SnnEnhanced)
+}
+
+fn wait_done(s: &mut LocalSession, id: u64) -> JobResult {
+    match s.wait(id, Some(WAIT)).expect("wait") {
+        JobState::Done(r) => *r,
+        other => panic!("expected Done, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed failures: compiler errors and service-level Failed handles
+// ---------------------------------------------------------------------
+
+/// Each malformed graph maps to its precise [`ModelError`] — the
+/// contract that lets a bad submission resolve as a diagnosable
+/// `Failed` handle instead of a panic or a silent wrong answer.
+#[test]
+fn malformed_graphs_compile_to_precise_typed_errors() {
+    // No layers: no output tensor to serve.
+    assert_eq!(
+        GraphCompiler::compile(&Model::new(2, 2, false)).unwrap_err(),
+        ModelError::Empty
+    );
+
+    // Degenerate input geometry.
+    let mut m = Model::new(0, 4, false);
+    m.layer(LayerOp::Requant { num: 1, shift: 2, zero_point: 0 }, &[0]);
+    assert_eq!(
+        GraphCompiler::compile(&m).unwrap_err(),
+        ModelError::BadInput { rows: 0, cols: 4 }
+    );
+
+    // Cycle via forward references: layer 0 reads layer 1's output and
+    // vice versa. Reported through the smallest stuck layer.
+    let mut m = Model::new(2, 4, false);
+    m.layer(LayerOp::Add, &[0, 2]);
+    m.layer(LayerOp::Requant { num: 1, shift: 2, zero_point: 0 }, &[1]);
+    assert_eq!(
+        GraphCompiler::compile(&m).unwrap_err(),
+        ModelError::Cycle { layer: 0 }
+    );
+
+    // Tensor id past the last layer: nothing can ever produce it.
+    let mut m = Model::new(2, 4, false);
+    m.layer(LayerOp::Requant { num: 1, shift: 2, zero_point: 0 }, &[7]);
+    assert_eq!(
+        GraphCompiler::compile(&m).unwrap_err(),
+        ModelError::DanglingInput { layer: 0, tensor: 7 }
+    );
+
+    // Wrong input count for the operator.
+    let mut m = Model::new(2, 4, false);
+    m.layer(LayerOp::Add, &[0]);
+    assert_eq!(
+        GraphCompiler::compile(&m).unwrap_err(),
+        ModelError::Arity { layer: 0, expected: 2, got: 1 }
+    );
+
+    // A non-final layer nobody consumes: dead work is a graph bug.
+    let mut rng = XorShift::new(9);
+    let w = MatI8::random_bounded(&mut rng, 4, 3, 50);
+    let mut m = Model::new(2, 4, false);
+    m.layer(LayerOp::Gemm { w: w.clone() }, &[0]);
+    m.layer(LayerOp::Gemm { w }, &[0]);
+    assert_eq!(
+        GraphCompiler::compile(&m).unwrap_err(),
+        ModelError::DeadLayer { layer: 0 }
+    );
+
+    // GEMM fed raw i32 accumulators (no requant between matmuls).
+    let w = MatI8::random_bounded(&mut rng, 4, 4, 50);
+    let mut m = Model::new(2, 4, false);
+    m.layer(LayerOp::Gemm { w: w.clone() }, &[0]);
+    m.layer(LayerOp::Gemm { w }, &[1]);
+    assert!(matches!(
+        GraphCompiler::compile(&m).unwrap_err(),
+        ModelError::BadDtype { layer: 1, .. }
+    ));
+
+    // GEMM inner-dimension mismatch.
+    let w = MatI8::random_bounded(&mut rng, 5, 3, 50);
+    let mut m = Model::new(2, 4, false);
+    m.layer(LayerOp::Gemm { w }, &[0]);
+    assert!(matches!(
+        GraphCompiler::compile(&m).unwrap_err(),
+        ModelError::BadShape { layer: 0, .. }
+    ));
+
+    // Snn over a tensor that was never binarized.
+    let w = MatI8::random_bounded(&mut rng, 32, 32, 50);
+    let mut m = Model::new(2, 32, false);
+    m.layer(LayerOp::Snn { w }, &[0]);
+    assert_eq!(
+        GraphCompiler::compile(&m).unwrap_err(),
+        ModelError::SnnInputNotBinary { layer: 0, tensor: 0 }
+    );
+
+    // Requant shift outside 1..=31: no rounding bit to add.
+    let mut m = Model::new(2, 4, false);
+    m.layer(LayerOp::Requant { num: 1, shift: 0, zero_point: 0 }, &[0]);
+    assert_eq!(
+        GraphCompiler::compile(&m).unwrap_err(),
+        ModelError::BadQuant { layer: 0, shift: 0 }
+    );
+}
+
+/// Submitting malformed models to a live service resolves each as a
+/// typed `Failed` handle — no panic, no hang — and the pool is not
+/// poisoned: a valid job still completes afterwards.
+#[test]
+fn malformed_models_fail_as_handles_and_service_survives() {
+    let mut rng = XorShift::new(21);
+    let mut bad: Vec<(&str, Model, MatI8)> = Vec::new();
+
+    bad.push(("empty", Model::new(2, 2, false), MatI8::zeros(2, 2)));
+
+    let mut m = Model::new(2, 4, false);
+    m.layer(LayerOp::Add, &[0, 2]);
+    m.layer(LayerOp::Requant { num: 1, shift: 2, zero_point: 0 }, &[1]);
+    bad.push(("cycle", m, MatI8::zeros(2, 4)));
+
+    let mut m = Model::new(2, 4, false);
+    m.layer(LayerOp::Requant { num: 1, shift: 2, zero_point: 0 }, &[7]);
+    bad.push(("dangling", m, MatI8::zeros(2, 4)));
+
+    // Graph compiles, but the submitted input does not match the
+    // declared geometry: rejected at bind, same typed path.
+    let w = MatI8::random_bounded(&mut rng, 4, 3, 50);
+    let mut m = Model::new(2, 4, false);
+    m.layer(LayerOp::Gemm { w }, &[0]);
+    bad.push(("input-geometry", m, MatI8::zeros(3, 5)));
+
+    let mut s = LocalSession::start(cfg(EngineKind::WsDspFetch, 2));
+    for (name, model, input) in bad {
+        let id = s.submit(Job::Model { model, input }).expect("submit");
+        match s.wait(id, Some(WAIT)).expect("wait") {
+            JobState::Failed => {}
+            other => panic!("{name}: expected Failed, got {other:?}"),
+        }
+    }
+    assert_eq!(s.metrics().jobs_completed.load(Ordering::Relaxed), 0);
+    assert_eq!(s.metrics().jobs_failed.load(Ordering::Relaxed), 4);
+
+    let a = MatI8::random_bounded(&mut rng, 3, 8, 63);
+    let w = MatI8::random_bounded(&mut rng, 8, 4, 50);
+    let id = s.submit(Job::Gemm { a, w }).expect("submit");
+    let r = wait_done(&mut s, id);
+    assert_eq!(r.verified, Some(true));
+    s.shutdown().expect("shutdown");
+}
+
+// ---------------------------------------------------------------------
+// Schedule properties
+// ---------------------------------------------------------------------
+
+/// Every compiled schedule is a permutation of the layers in which
+/// each producer precedes its consumers, wavefront levels obey
+/// `1 + max(producer level)`, and the lifetime analysis frees every
+/// non-output produced tensor exactly once (the output never).
+#[test]
+fn schedules_respect_edges_levels_and_lifetimes() {
+    let mut graphs: Vec<Model> = Vec::new();
+    for preset in ModelPreset::all() {
+        for snn in [false, true] {
+            graphs.push(preset.build(snn, 77).0);
+        }
+    }
+    // A diamond with a forward reference: layer 0 reads tensor 4,
+    // which layer 3 produces — encoding order is not schedule order.
+    let mut rng = XorShift::new(33);
+    let w = MatI8::random_bounded(&mut rng, 8, 8, 50);
+    let rq = LayerOp::Requant { num: 1, shift: 10, zero_point: 0 };
+    let mut m = Model::new(4, 8, false);
+    m.layer(LayerOp::Add, &[2, 4]); // t1 = t2 + t4 (both defined below)
+    m.layer(rq.clone(), &[3]); //       t2
+    m.layer(LayerOp::Gemm { w }, &[0]); // t3
+    m.layer(rq, &[3]); //               t4
+    m.layer(LayerOp::Add, &[1, 2]); //  t5 (output; t2 consumed twice)
+    graphs.push(m);
+
+    for model in graphs {
+        let n = model.layers.len();
+        let plan = GraphCompiler::compile(&model).expect("compiles");
+        assert_eq!(plan.order.len(), n);
+
+        let mut pos = vec![usize::MAX; n];
+        for (s, &l) in plan.order.iter().enumerate() {
+            assert_eq!(pos[l], usize::MAX, "layer {l} scheduled twice");
+            pos[l] = s;
+        }
+        for (l, layer) in model.layers.iter().enumerate() {
+            for &t in &layer.inputs {
+                if t > 0 {
+                    assert!(
+                        pos[t - 1] < pos[l],
+                        "layer {l} runs before its producer {}",
+                        t - 1
+                    );
+                }
+            }
+            let want = 1 + layer
+                .inputs
+                .iter()
+                .map(|&t| if t == 0 { 0 } else { plan.level[t - 1] })
+                .max()
+                .unwrap();
+            assert_eq!(plan.level[l], want, "layer {l} wavefront level");
+        }
+
+        let mut freed = vec![0usize; n + 1];
+        for frees in &plan.free_after {
+            for &t in frees {
+                freed[t] += 1;
+            }
+        }
+        assert_eq!(freed[n], 0, "output tensor must stay for the client");
+        for t in 1..n {
+            assert_eq!(freed[t], 1, "tensor {t} freed exactly once");
+        }
+        assert!(plan.peak_bytes > 0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Whole-model ≡ layer-by-layer client replay, every engine kind
+// ---------------------------------------------------------------------
+
+/// Apply [`LayerOp::Requant`] client-side to an i32 accumulator
+/// matrix — the same `requantize` the scheduler's glue evaluator and
+/// the golden replay both call.
+fn client_requant(acc: &MatI32, num: i32, shift: u32, zp: i32) -> MatI8 {
+    MatI8::from_fn(acc.rows, acc.cols, |r, c| {
+        requantize(acc.data[r * acc.cols + c], num, shift, zp)
+    })
+}
+
+/// Dense 5-layer chain with a residual: GEMM → requant → add(input)
+/// → requant → GEMM. Activation magnitudes stay within the WS ±63
+/// packed-lane bound at every engine-facing tensor.
+fn dense_chain(rng: &mut XorShift) -> (Model, MatI8, MatI8, MatI8) {
+    let input = MatI8::random_bounded(rng, 4, 8, 63);
+    let w1 = MatI8::random_bounded(rng, 8, 8, 50);
+    let w2 = MatI8::random_bounded(rng, 8, 6, 50);
+    let mut model = Model::new(4, 8, false);
+    let t1 = model.layer(LayerOp::Gemm { w: w1.clone() }, &[0]);
+    let t2 = model.layer(
+        LayerOp::Requant { num: 1, shift: 10, zero_point: 0 },
+        &[t1],
+    );
+    let t3 = model.layer(LayerOp::Add, &[t2, 0]);
+    let t4 = model.layer(
+        LayerOp::Requant { num: 1, shift: 1, zero_point: 0 },
+        &[t3],
+    );
+    model.layer(LayerOp::Gemm { w: w2.clone() }, &[t4]);
+    (model, input, w1, w2)
+}
+
+/// Spiking 3-layer chain: crossbar matmul → binarize → crossbar
+/// matmul, all operands 32 wide for the FireFly fan-in.
+fn snn_chain(rng: &mut XorShift) -> (Model, MatI8, MatI8, MatI8) {
+    let input = MatI8::from_fn(4, 32, |_, _| i8::from(rng.chance(1, 3)));
+    let w1 = MatI8::random_bounded(rng, 32, 32, 50);
+    let w2 = MatI8::random_bounded(rng, 32, 32, 50);
+    let mut model = Model::new(4, 32, true);
+    let t1 = model.layer(LayerOp::Snn { w: w1.clone() }, &[0]);
+    let t2 = model.layer(LayerOp::Quant { num: 1, shift: 6 }, &[t1]);
+    model.layer(LayerOp::Snn { w: w2.clone() }, &[t2]);
+    (model, input, w1, w2)
+}
+
+/// One `Job::Model` submission produces exactly the bits the same
+/// network yields when the client replays it layer by layer through
+/// the single-job API — intermediates pulled back, glue re-evaluated
+/// client-side, next layer resubmitted — on every engine kind. This
+/// is the subsystem's core contract: moving the loop server-side
+/// changes where tensors live, never what they hold.
+#[test]
+fn whole_model_matches_layer_by_layer_replay_on_every_engine() {
+    for (i, kind) in EngineKind::all().into_iter().enumerate() {
+        let mut rng = XorShift::new(0xD5F_0000 + i as u64);
+        let mut s = LocalSession::start(cfg(kind, 2));
+        let whole = if is_snn(kind) {
+            let (model, input, w1, w2) = snn_chain(&mut rng);
+            let id = s
+                .submit(Job::Model { model, input: input.clone() })
+                .expect("submit model");
+            let whole = wait_done(&mut s, id);
+
+            let id = s
+                .submit(Job::Snn { spikes: input, weights: w1 })
+                .expect("submit layer 1");
+            let acc = wait_done(&mut s, id);
+            // Quant binarize, exactly as the scheduler's glue pass.
+            let spikes = MatI8::from_fn(acc.output.rows, acc.output.cols, |r, c| {
+                i8::from(
+                    requantize(acc.output.data[r * acc.output.cols + c], 1, 6, 0) > 0,
+                )
+            });
+            let id = s
+                .submit(Job::Snn { spikes, weights: w2 })
+                .expect("submit layer 3");
+            let last = wait_done(&mut s, id);
+            assert_eq!(
+                whole.output, last.output,
+                "{}: whole-model bits != replay bits",
+                kind.label()
+            );
+            whole
+        } else {
+            let (model, input, w1, w2) = dense_chain(&mut rng);
+            let id = s
+                .submit(Job::Model { model, input: input.clone() })
+                .expect("submit model");
+            let whole = wait_done(&mut s, id);
+
+            let id = s
+                .submit(Job::Gemm { a: input.clone(), w: w1 })
+                .expect("submit layer 1");
+            let acc = wait_done(&mut s, id);
+            let t2 = client_requant(&acc.output, 1, 10, 0);
+            let t3 = MatI8::from_fn(t2.rows, t2.cols, |r, c| {
+                t2.at(r, c).saturating_add(input.at(r, c))
+            });
+            let t4 = MatI8::from_fn(t3.rows, t3.cols, |r, c| {
+                requantize(t3.at(r, c) as i32, 1, 1, 0)
+            });
+            let id = s
+                .submit(Job::Gemm { a: t4, w: w2 })
+                .expect("submit layer 5");
+            let last = wait_done(&mut s, id);
+            assert_eq!(
+                whole.output, last.output,
+                "{}: whole-model bits != replay bits",
+                kind.label()
+            );
+            whole
+        };
+        assert_eq!(
+            whole.verified,
+            Some(true),
+            "{}: golden whole-graph replay mismatch",
+            kind.label()
+        );
+        s.shutdown().expect("shutdown");
+    }
+}
+
+// ---------------------------------------------------------------------
+// SubmitModel through the real frame codec
+// ---------------------------------------------------------------------
+
+fn start_server() -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let svc = Service::start(cfg(EngineKind::WsDspFetch, 2));
+    let server = TcpServer::bind("127.0.0.1:0", svc).expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    (addr, std::thread::spawn(move || {
+        server.run();
+    }))
+}
+
+fn roundtrip(stream: &mut TcpStream, req: &Request) -> Response {
+    write_frame(stream, &req.encode()).expect("send");
+    let payload = read_frame(stream)
+        .expect("read response")
+        .expect("server replied");
+    Response::decode(&payload).expect("typed response")
+}
+
+fn send_raw(stream: &mut TcpStream, payload: &str) -> Response {
+    write_frame(stream, payload.as_bytes()).expect("send");
+    let bytes = read_frame(stream)
+        .expect("read response")
+        .expect("server replied");
+    Response::decode(&bytes).expect("typed response")
+}
+
+/// `submit-model` over a live socket: a valid preset round-trips the
+/// frame codec and verifies; a structurally valid but cyclic graph
+/// comes back as a `failed` handle state (not a wire error); and
+/// malformed model payloads — mistyped `layers`, missing geometry,
+/// unknown op tag, truncated layer — each produce a typed
+/// `bad-request` naming the offending field, on a connection that
+/// keeps serving.
+#[test]
+fn submit_model_over_the_wire_and_malformed_payloads_are_typed() {
+    let (addr, server) = start_server();
+    let mut stream = TcpStream::connect(addr).expect("connect");
+
+    // 1. Whole preset through the codec: submit, wait, verified.
+    let (model, input) = ModelPreset::TransformerBlock.build(false, 11);
+    let id = match roundtrip(&mut stream, &Request::SubmitModel { model, input }) {
+        Response::Handle { id } => id,
+        other => panic!("expected Handle, got {other:?}"),
+    };
+    let req = Request::Wait { id, timeout_ms: Some(600_000) };
+    match roundtrip(&mut stream, &req) {
+        Response::Result(r) => {
+            assert_eq!(r.verified, Some(true));
+            assert!(r.stats.cycles > 0);
+        }
+        other => panic!("expected Result, got {other:?}"),
+    }
+
+    // 2. Structurally well-formed but cyclic: decodes fine, submits
+    // fine, resolves as a Failed handle — a graph error is the
+    // submitter's bug, not a protocol violation.
+    let mut cyclic = Model::new(2, 4, false);
+    cyclic.layer(LayerOp::Add, &[0, 2]);
+    cyclic.layer(LayerOp::Requant { num: 1, shift: 2, zero_point: 0 }, &[1]);
+    let req = Request::SubmitModel { model: cyclic, input: MatI8::zeros(2, 4) };
+    let id = match roundtrip(&mut stream, &req) {
+        Response::Handle { id } => id,
+        other => panic!("expected Handle, got {other:?}"),
+    };
+    let req = Request::Wait { id, timeout_ms: Some(600_000) };
+    match roundtrip(&mut stream, &req) {
+        Response::State(PollState::Failed) => {}
+        other => panic!("expected failed state, got {other:?}"),
+    }
+
+    // 3. Malformed payloads: every structural violation is a typed
+    // bad-request that names the field, and the stream stays usable.
+    let cases: &[(&str, &str)] = &[
+        // `layers` must be an array.
+        (
+            r#"{"v":1,"req":"submit-model",
+                "model":{"layers":3,"input_rows":2,"input_cols":2,
+                         "spikes":false},
+                "input":{"rows":1,"cols":1,"data":[0]}}"#,
+            "layers",
+        ),
+        // Missing input geometry.
+        (
+            r#"{"v":1,"req":"submit-model",
+                "model":{"layers":[],"input_cols":2,"spikes":false},
+                "input":{"rows":1,"cols":1,"data":[0]}}"#,
+            "input_rows",
+        ),
+        // A layer missing its fan-in list.
+        (
+            r#"{"v":1,"req":"submit-model",
+                "model":{"layers":[{"op":"add"}],
+                         "input_rows":2,"input_cols":2,"spikes":false},
+                "input":{"rows":1,"cols":1,"data":[0]}}"#,
+            "in",
+        ),
+        // Unknown operator tag.
+        (
+            r#"{"v":1,"req":"submit-model",
+                "model":{"layers":[{"op":"fft","in":[0]}],
+                         "input_rows":2,"input_cols":2,"spikes":false},
+                "input":{"rows":1,"cols":1,"data":[0]}}"#,
+            "fft",
+        ),
+        // Gemm layer without its weight matrix.
+        (
+            r#"{"v":1,"req":"submit-model",
+                "model":{"layers":[{"op":"gemm","in":[0]}],
+                         "input_rows":2,"input_cols":2,"spikes":false},
+                "input":{"rows":1,"cols":1,"data":[0]}}"#,
+            "w",
+        ),
+    ];
+    for (payload, needle) in cases {
+        match send_raw(&mut stream, payload) {
+            Response::Error(e) => {
+                assert_eq!(e.code, ErrorCode::BadRequest, "{payload}");
+                assert!(
+                    e.message.contains(needle),
+                    "error `{}` does not name `{needle}`",
+                    e.message
+                );
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+    }
+
+    // 4. The same connection still serves typed traffic afterwards.
+    match roundtrip(&mut stream, &Request::Stats) {
+        Response::Metrics(snap) => {
+            assert_eq!(snap.get("jobs_completed").and_then(|v| v.as_i64()), Some(1));
+        }
+        other => panic!("expected Metrics, got {other:?}"),
+    }
+    match roundtrip(&mut stream, &Request::Shutdown) {
+        Response::Metrics(_) => {}
+        other => panic!("expected Metrics, got {other:?}"),
+    }
+    server.join().expect("server thread");
+}
+
+// ---------------------------------------------------------------------
+// Preset acceptance: verification, reuse, residency, zero round-trips
+// ---------------------------------------------------------------------
+
+/// The `transformer-block` preset verifies bit-exactly against the
+/// whole-graph golden replay on all 8 engine kinds (spiking variant on
+/// the SNN crossbars), and the acceptance counters hold: exactly one
+/// client job per model (`jobs_completed == 1` — intermediates never
+/// left the arena), every layer executed and counted, a nonzero
+/// residency high-water, and — on the weight-stationary kinds, whose
+/// tiler feeds the fill-group machinery — at least one inter-layer
+/// weight-fill reuse from the shared-QK pair.
+#[test]
+fn transformer_preset_verifies_on_all_engine_kinds() {
+    for kind in EngineKind::all() {
+        let (model, input) = ModelPreset::TransformerBlock.build(is_snn(kind), 5);
+        let layers = model.layers.len() as u64;
+        let mut s = LocalSession::start(cfg(kind, 2));
+        let id = s.submit(Job::Model { model, input }).expect("submit");
+        let r = wait_done(&mut s, id);
+        assert_eq!(r.verified, Some(true), "{}: golden mismatch", kind.label());
+        assert!(r.stats.cycles > 0, "{}: no simulated work", kind.label());
+
+        let m = s.metrics();
+        assert_eq!(
+            m.jobs_completed.load(Ordering::Relaxed),
+            1,
+            "{}: a model is one client job — intermediates must not \
+             round-trip as separate submissions",
+            kind.label()
+        );
+        assert_eq!(
+            m.layers_completed.load(Ordering::Relaxed),
+            layers,
+            "{}: every layer runs exactly once",
+            kind.label()
+        );
+        assert!(
+            m.intermediate_bytes_resident.load(Ordering::Relaxed) > 0,
+            "{}: intermediates live in the arena",
+            kind.label()
+        );
+        let ws = matches!(
+            kind,
+            EngineKind::WsTinyTpu
+                | EngineKind::WsLibano
+                | EngineKind::WsClbFetch
+                | EngineKind::WsDspFetch
+        );
+        if ws {
+            assert!(
+                m.inter_layer_fill_reuse.load(Ordering::Relaxed) >= 1,
+                "{}: shared-QK projections must merge into one fill group",
+                kind.label()
+            );
+        }
+        // The satellite metrics are observable over the stats surface
+        // the CLI's `client stats` prints, not just the atomics.
+        let snap = s.stats().expect("stats");
+        assert_eq!(
+            snap.get("layers_completed").and_then(|v| v.as_i64()),
+            Some(layers as i64)
+        );
+        assert!(snap.get("intermediate_bytes_resident").is_some());
+        assert!(snap.get("inter_layer_fill_reuse").is_some());
+        s.shutdown().expect("shutdown");
+    }
+}
+
+/// The `conv-stack` preset (dilated + grouped middle conv, `Chw`
+/// repacks) also serves and verifies end to end on a dense engine and
+/// a spiking one — the satellite `ConvShape` fields exercised through
+/// the whole stack, not just the shape validator.
+#[test]
+fn conv_stack_preset_verifies_dense_and_spiking() {
+    for kind in [EngineKind::WsDspFetch, EngineKind::SnnEnhanced] {
+        let (model, input) = ModelPreset::ConvStack.build(is_snn(kind), 6);
+        let mut s = LocalSession::start(cfg(kind, 2));
+        let id = s.submit(Job::Model { model, input }).expect("submit");
+        let r = wait_done(&mut s, id);
+        assert_eq!(r.verified, Some(true), "{}: golden mismatch", kind.label());
+        s.shutdown().expect("shutdown");
+    }
+}

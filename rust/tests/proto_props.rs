@@ -15,6 +15,7 @@
 use dsp48_systolic::coordinator::service::EngineKind;
 use dsp48_systolic::coordinator::{Job, JobId, JobResult, JobState, Service, ServiceConfig};
 use dsp48_systolic::engines::RunStats;
+use dsp48_systolic::model::Model;
 use dsp48_systolic::proto::{
     read_frame, write_frame, ErrorCode, FrameError, LocalSession, PollState,
     Request, Response, Session, TcpServer, TcpSession, WireError,
@@ -57,11 +58,60 @@ fn random_shape(rng: &mut XorShift) -> ConvShape {
         k: 1 + rng.below(5) as usize,
         stride: rng.below(3) as usize, // 0 allowed: encoding is total
         pad: rng.below(3) as usize,
+        dilation: 1 + rng.below(3) as usize,
+        groups: 1 + rng.below(3) as usize,
     }
 }
 
+/// A random layer DAG for codec coverage. The edges (and often the
+/// shapes) are arbitrary — the encoding is total over the `Model`
+/// type, and graph validity is the compiler's concern at submit, not
+/// the wire's.
+fn random_model(rng: &mut XorShift, size: usize) -> Model {
+    use dsp48_systolic::model::LayerOp;
+    let mut m = Model::new(
+        1 + rng.below(4) as usize,
+        1 + rng.below(8) as usize,
+        rng.chance(1, 4),
+    );
+    let n_layers = 1 + rng.below(4);
+    for i in 0..n_layers {
+        let t = rng.below(i + 1) as usize;
+        let op = match rng.below(6) {
+            0 => LayerOp::Gemm {
+                w: random_mat_i8(rng, size),
+            },
+            1 => LayerOp::Conv {
+                weights: rng.i8_vec(1 + rng.below(32) as usize),
+                shape: random_shape(rng),
+            },
+            2 => LayerOp::Requant {
+                num: rng.next_u64() as i32,
+                shift: 1 + rng.below(30) as u32,
+                zero_point: rng.next_i8() as i32,
+            },
+            3 => LayerOp::Quant {
+                num: rng.next_i8() as i32,
+                shift: 1 + rng.below(30) as u32,
+            },
+            4 => LayerOp::Add,
+            _ => LayerOp::Chw {
+                h: 1 + rng.below(6) as usize,
+                w: 1 + rng.below(6) as usize,
+            },
+        };
+        let inputs: Vec<usize> = if matches!(op, LayerOp::Add) {
+            vec![t, rng.below(i + 1) as usize]
+        } else {
+            vec![t]
+        };
+        m.layer(op, &inputs);
+    }
+    m
+}
+
 fn random_job(rng: &mut XorShift, size: usize) -> Job {
-    match rng.below(3) {
+    match rng.below(4) {
         0 => Job::Gemm {
             a: random_mat_i8(rng, size),
             w: random_mat_i8(rng, size),
@@ -76,9 +126,13 @@ fn random_job(rng: &mut XorShift, size: usize) -> Job {
                 shape,
             }
         }
-        _ => Job::Snn {
+        2 => Job::Snn {
             spikes: random_mat_i8(rng, size),
             weights: random_mat_i8(rng, size),
+        },
+        _ => Job::Model {
+            model: random_model(rng, size),
+            input: random_mat_i8(rng, size),
         },
     }
 }
@@ -155,6 +209,10 @@ fn every_request_variant_round_trips() {
                 input: rng.i8_vec(1 + rng.below(64) as usize),
                 weights: rng.i8_vec(1 + rng.below(64) as usize),
                 shape: random_shape(rng),
+            },
+            Request::SubmitModel {
+                model: random_model(rng, size),
+                input: random_mat_i8(rng, size),
             },
             Request::SubmitBatch {
                 jobs: (0..rng.below(4)).map(|_| random_job(rng, size)).collect(),
@@ -389,6 +447,8 @@ fn seeded_jobs() -> (Job, Job) {
         k: 3,
         stride: 2,
         pad: 1,
+        dilation: 1,
+        groups: 1,
     };
     let input: Vec<i8> =
         (0..shape.input_len()).map(|_| rng.i8_in(-63, 63)).collect();
@@ -517,6 +577,8 @@ fn bad_shapes_over_the_wire_resolve_failed_without_disconnect() {
             k: 3,
             stride: 1,
             pad: 1,
+            dilation: 1,
+            groups: 1,
         },
     };
     let id = client.submit(bad_conv).expect("submit is accepted");

@@ -16,9 +16,14 @@ the serve-loopback wire-protocol run (exact loopback_jobs_ok +
 loopback_fills_* counters: batched weight-tile reuse must survive the
 socket round trip), and the sparse density sweep (exact
 sparse_tiles_skipped: the tiler must keep skipping dead weight tiles
-whole, bit-for-bit); conv_macs_per_cycle, loopback_jobs_per_s (the
-wall-clock serve-loopback rate), and the sparse_macs_per_cycle_d*
-sweep keys ride along in the artifact for trend-watching only.
+whole, bit-for-bit), and the model graph scheduler (exact
+model_layers_completed + model_inter_layer_fill_reuse +
+model_fills_* counters: a whole transformer-block model must keep
+executing every layer once and streaming the shared-QK weight tiles
+across layers); conv_macs_per_cycle, loopback_jobs_per_s (the
+wall-clock serve-loopback rate), model_layers_per_s (wall-clock model
+serve rate), and the sparse_macs_per_cycle_d* sweep keys ride along
+in the artifact for trend-watching only.
 
 Baseline schema:
 
