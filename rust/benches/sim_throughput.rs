@@ -23,7 +23,10 @@ use dsp48_systolic::engines::ws::{WsConfig, WsEngine};
 use dsp48_systolic::engines::Engine;
 use dsp48_systolic::model::ModelPreset;
 use dsp48_systolic::packing;
-use dsp48_systolic::proto::{Session, TcpServer, TcpSession};
+use dsp48_systolic::proto::{
+    Frontend, QosConfig, Request, Response, Session, SessionBudget,
+    TcpServer, TcpSession,
+};
 use dsp48_systolic::util::bench::{bench, section};
 use dsp48_systolic::util::json::Json;
 use dsp48_systolic::util::rng::XorShift;
@@ -332,6 +335,111 @@ fn model_serve() -> (f64, u64, u64, u64, u64) {
     (layers as f64 / wall.as_secs_f64(), layers, reuse, issued, saved)
 }
 
+/// QoS-layer wall-clock probes (trend only, never gated):
+///
+/// * `admission_overhead_ns` — the per-submit cost of the admission
+///   path (quota ledger, cost accounting, high-water gate), measured
+///   as budgeted-session submit latency minus the privileged-exempt
+///   baseline through the same `Frontend`;
+/// * `shed_recovery_ms` — wall time from the submit that trips the
+///   high-water gate (shedding the oldest session) to that newcomer's
+///   own result arriving: how fast the server recovers usefulness for
+///   a compliant client after shedding.
+fn qos_probes(smoke: bool) -> (f64, f64) {
+    let count = if smoke { 40 } else { 200 };
+    let small_cfg = || ServiceConfig {
+        kind: EngineKind::WsDspFetch,
+        workers: 2,
+        ws_rows: 14,
+        ws_cols: 14,
+        verify: false,
+        shard_width: 1,
+    };
+    let mut per_submit_ns = Vec::new();
+    for privileged in [true, false] {
+        let qos = QosConfig {
+            budget: SessionBudget {
+                max_inflight: count + 1,
+                ..SessionBudget::default()
+            },
+            ..QosConfig::default()
+        };
+        let frontend = Frontend::with_qos(Service::start(small_cfg()), qos);
+        let sess = frontend.open_session(privileged);
+        let mut rng = XorShift::new(43);
+        let a = MatI8::random_bounded(&mut rng, 4, 14, 63);
+        let w = MatI8::random(&mut rng, 14, 14);
+        let t0 = Instant::now();
+        for _ in 0..count {
+            let (resp, _) = frontend.handle(
+                Request::SubmitGemm {
+                    a: a.clone(),
+                    w: w.clone(),
+                },
+                &sess,
+            );
+            assert!(matches!(resp, Response::Handle { .. }));
+        }
+        per_submit_ns.push(t0.elapsed().as_nanos() as f64 / count as f64);
+        let (resp, _) = frontend.handle(
+            Request::DrainMine {
+                timeout_ms: Some(600_000),
+            },
+            &sess,
+        );
+        assert!(matches!(resp, Response::Drained { .. }));
+        let op = frontend.open_session(true);
+        frontend.handle(Request::Shutdown, &op);
+    }
+    // Noise can make the diff negative on a fast box; the trend key
+    // floors at zero rather than reporting nonsense.
+    let admission_ns = (per_submit_ns[1] - per_submit_ns[0]).max(0.0);
+
+    let qos = QosConfig {
+        max_outstanding: 4,
+        ..QosConfig::default()
+    };
+    let frontend = Frontend::with_qos(Service::start(small_cfg()), qos);
+    let old = frontend.open_session(false);
+    let mut rng = XorShift::new(47);
+    let w = MatI8::random(&mut rng, 14, 14);
+    for _ in 0..4 {
+        let (resp, _) = frontend.handle(
+            Request::SubmitGemm {
+                a: MatI8::random_bounded(&mut rng, 4, 14, 63),
+                w: w.clone(),
+            },
+            &old,
+        );
+        assert!(matches!(resp, Response::Handle { .. }));
+    }
+    let newcomer = frontend.open_session(false);
+    let t0 = Instant::now();
+    let (resp, _) = frontend.handle(
+        Request::SubmitGemm {
+            a: MatI8::random_bounded(&mut rng, 4, 14, 63),
+            w,
+        },
+        &newcomer,
+    );
+    let id = match resp {
+        Response::Handle { id } => id,
+        other => panic!("newcomer admitted by shedding, got {}", other.tag()),
+    };
+    let (resp, _) = frontend.handle(
+        Request::Wait {
+            id,
+            timeout_ms: Some(600_000),
+        },
+        &newcomer,
+    );
+    assert!(matches!(resp, Response::Result(_)));
+    let shed_recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let op = frontend.open_session(true);
+    frontend.handle(Request::Shutdown, &op);
+    (admission_ns, shed_recovery_ms)
+}
+
 fn main() {
     section("DSP48E2 cell");
     let mut dsp = Dsp48e2::new(Attributes::ws_prefetch_pe());
@@ -593,6 +701,14 @@ fn main() {
          ({lb_saved} fill cycles saved) — reuse survives the socket"
     );
 
+    section("QoS admission / shed recovery (overload path)");
+    let (admission_ns, shed_recovery_ms) = qos_probes(smoke);
+    println!(
+        "bench qos admission: {admission_ns:.0} ns/submit over the \
+         exempt baseline; shed->fresh-result recovery: \
+         {shed_recovery_ms:.1} ms"
+    );
+
     // Perf-trajectory artifact for CI (stable keys, one flat object),
     // emitted through the shared util/json serializer — the same
     // emitter behind Metrics::snapshot_json and the Stats response.
@@ -639,6 +755,9 @@ fn main() {
         ("loopback_fills_issued", Json::uint(lb_issued)),
         ("loopback_fills_avoided", Json::uint(lb_avoided)),
         ("loopback_fill_cycles_saved", Json::uint(lb_saved)),
+        // QoS probes: wall-clock, trend only, never gated.
+        ("admission_overhead_ns", Json::float(admission_ns)),
+        ("shed_recovery_ms", Json::float(shed_recovery_ms)),
     ]);
     let json = artifact.to_pretty() + "\n";
     match std::fs::write("BENCH_sim_throughput.json", &json) {

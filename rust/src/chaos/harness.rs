@@ -1,0 +1,679 @@
+//! The chaos harness: boot a real [`TcpServer`] under a strict QoS
+//! policy, drive a seeded [`FaultPlan`] against it through real
+//! sockets, then audit the survivor.
+//!
+//! Faults go through the genuine transport — raw byte streams for the
+//! frame-level corruption, [`TcpSession`] for the protocol-level
+//! abuse — so the campaign exercises exactly the code paths a
+//! misbehaving client would. After the plan runs, the harness checks
+//! the post-campaign invariants:
+//!
+//! * no leaked handles (`pending_handles` drains to zero),
+//! * no leaked arena leases (`intermediate_bytes_now` returns to
+//!   zero even for models abandoned mid-DAG),
+//! * no leaked sessions or queued-byte accounting,
+//! * a fresh compliant client is answered **bit-identically** against
+//!   the golden reference, as if the campaign never happened.
+//!
+//! Sleeps below only *bound* waits on outcomes that are themselves
+//! deterministic; everything injected derives from the plan seed.
+
+use crate::chaos::plan::{FaultKind, FaultPlan};
+use crate::chaos::report::{ChaosDiagnostic, ChaosReport, FaultRun};
+use crate::coordinator::service::EngineKind;
+use crate::coordinator::{Job, JobState, Service, ServiceConfig};
+use crate::model::{LayerOp, Model};
+use crate::proto::frame::{read_frame, write_frame, MAX_FRAME_LEN};
+use crate::proto::message::{ErrorCode, Request, Response};
+use crate::proto::{
+    QosConfig, Session, SessionBudget, SessionError, TcpServer, TcpSession,
+};
+use crate::util::json::Json;
+use crate::util::rng::XorShift;
+use crate::workload::gemm::golden_gemm;
+use crate::workload::MatI8;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// The operator token campaigns authenticate teardown with.
+pub const OPERATOR_TOKEN: &str = "chaos-operator";
+
+/// Per-session inflight quota under campaign QoS (the submit-storm
+/// fault asserts the N+1th submit is refused at exactly this point).
+pub const MAX_INFLIGHT: usize = 4;
+
+const IDLE_MS: u64 = 200;
+
+/// The strict QoS policy every campaign serves under: tight budgets,
+/// token-only operator authority (loopback privilege off, so the
+/// privilege probes actually probe), and a short idle read deadline.
+pub fn campaign_qos() -> QosConfig {
+    QosConfig {
+        budget: SessionBudget {
+            max_inflight: MAX_INFLIGHT,
+            max_queued_bytes: 1 << 20,
+            deadline_ms: Some(5_000),
+        },
+        max_outstanding: 32,
+        operator_token: Some(OPERATOR_TOKEN.to_string()),
+        loopback_operator: false,
+        idle_timeout: Some(Duration::from_millis(IDLE_MS)),
+        retry_after_ms: 25,
+    }
+}
+
+fn is_snn(kind: EngineKind) -> bool {
+    matches!(kind, EngineKind::SnnFireFly | EngineKind::SnnEnhanced)
+}
+
+/// A small valid job for `kind` (spiking crossbars need binary
+/// activations; both families verify against the dense golden GEMM).
+fn small_job(kind: EngineKind, rng: &mut XorShift) -> Job {
+    let (job, _, _) = golden_job(kind, rng);
+    job
+}
+
+/// A small valid job plus the operands its output must bit-match
+/// `golden_gemm` over.
+fn golden_job(kind: EngineKind, rng: &mut XorShift) -> (Job, MatI8, MatI8) {
+    if is_snn(kind) {
+        let spikes =
+            MatI8::from_fn(4, 32, |_, _| i8::from(rng.chance(1, 3)));
+        let weights = MatI8::random_bounded(rng, 32, 16, 50);
+        (
+            Job::Snn {
+                spikes: spikes.clone(),
+                weights: weights.clone(),
+            },
+            spikes,
+            weights,
+        )
+    } else {
+        let a = MatI8::random_bounded(rng, 4, 13, 63);
+        let w = MatI8::random(rng, 13, 9);
+        (
+            Job::Gemm {
+                a: a.clone(),
+                w: w.clone(),
+            },
+            a,
+            w,
+        )
+    }
+}
+
+/// A small multi-layer model DAG for `kind` (matmul → glue → matmul),
+/// so a mid-model disconnect leaves arena-resident intermediates to
+/// reclaim.
+fn small_model(kind: EngineKind, rng: &mut XorShift) -> (Model, MatI8) {
+    if is_snn(kind) {
+        let input =
+            MatI8::from_fn(4, 32, |_, _| i8::from(rng.chance(1, 3)));
+        let w1 = MatI8::random_bounded(rng, 32, 32, 50);
+        let w2 = MatI8::random_bounded(rng, 32, 32, 50);
+        let mut model = Model::new(4, 32, true);
+        let t1 = model.layer(LayerOp::Snn { w: w1 }, &[0]);
+        let t2 = model.layer(LayerOp::Quant { num: 1, shift: 6 }, &[t1]);
+        model.layer(LayerOp::Snn { w: w2 }, &[t2]);
+        (model, input)
+    } else {
+        let input = MatI8::random_bounded(rng, 4, 8, 63);
+        let w1 = MatI8::random_bounded(rng, 8, 8, 50);
+        let w2 = MatI8::random_bounded(rng, 8, 6, 50);
+        let mut model = Model::new(4, 8, false);
+        let t1 = model.layer(LayerOp::Gemm { w: w1 }, &[0]);
+        let t2 = model.layer(
+            LayerOp::Requant {
+                num: 1,
+                shift: 10,
+                zero_point: 0,
+            },
+            &[t1],
+        );
+        let t3 = model.layer(LayerOp::Add, &[t2, 0]);
+        let t4 = model.layer(
+            LayerOp::Requant {
+                num: 1,
+                shift: 1,
+                zero_point: 0,
+            },
+            &[t3],
+        );
+        model.layer(LayerOp::Gemm { w: w2 }, &[t4]);
+        (model, input)
+    }
+}
+
+fn get_u64(snap: &Json, key: &str) -> u64 {
+    snap.get(key)
+        .and_then(Json::as_i64)
+        .unwrap_or_default()
+        .max(0) as u64
+}
+
+/// One stats round trip on a throwaway session.
+fn stat_u64(addr: SocketAddr, key: &str) -> Result<u64, String> {
+    let mut s = TcpSession::connect(&addr.to_string())
+        .map_err(|e| format!("stats connect: {e}"))?;
+    let snap = s.stats().map_err(|e| format!("stats: {e}"))?;
+    Ok(get_u64(&snap, key))
+}
+
+/// Run one seeded campaign against a freshly built `kind` server.
+/// `Err` is a harness failure (bind, join); everything the *server*
+/// does wrong lands in the report as a violation.
+pub fn run_campaign(
+    kind: EngineKind,
+    seed: u64,
+) -> Result<ChaosReport, String> {
+    let svc = Service::start(ServiceConfig {
+        kind,
+        ..ServiceConfig::default()
+    });
+    let server = TcpServer::bind_with("127.0.0.1:0", svc, campaign_qos())
+        .map_err(|e| format!("bind: {e}"))?;
+    let addr = server.local_addr().map_err(|e| format!("addr: {e}"))?;
+    let server = std::thread::spawn(move || server.run());
+
+    let mut report = ChaosReport {
+        engine: kind.label().to_string(),
+        seed,
+        ..ChaosReport::default()
+    };
+    let plan = FaultPlan::generate(seed);
+    let mut rng = XorShift::new(seed ^ 0x0DD_FA11);
+    for fault in plan.steps.iter().copied() {
+        let mut findings: Vec<String> = Vec::new();
+        let detail = inject(fault, kind, addr, &mut rng, &mut findings);
+        report.runs.push(FaultRun {
+            fault: fault.label(),
+            detail,
+            findings: findings.len(),
+        });
+        report
+            .diagnostics
+            .extend(findings.into_iter().map(|message| ChaosDiagnostic {
+                fault: fault.label(),
+                message,
+            }));
+    }
+
+    let mut audit: Vec<String> = Vec::new();
+    settle_and_audit(kind, addr, &mut rng, &mut audit);
+    report.runs.push(FaultRun {
+        fault: "invariant",
+        detail: "post-campaign audit".to_string(),
+        findings: audit.len(),
+    });
+    report
+        .diagnostics
+        .extend(audit.into_iter().map(|message| ChaosDiagnostic {
+            fault: "invariant",
+            message,
+        }));
+
+    // Authenticated teardown.
+    let mut op = TcpSession::connect(&addr.to_string())
+        .map_err(|e| format!("operator connect: {e}"))?;
+    op.auth(OPERATOR_TOKEN)
+        .map_err(|e| format!("operator auth: {e}"))?;
+    op.shutdown().map_err(|e| format!("shutdown: {e}"))?;
+    server.join().map_err(|_| "server thread panicked".to_string())?;
+    Ok(report)
+}
+
+/// Run campaigns for every `(kind, seed)` pair.
+pub fn run_campaigns(
+    kinds: &[EngineKind],
+    seeds: &[u64],
+) -> Result<Vec<ChaosReport>, String> {
+    let mut reports = Vec::new();
+    for &kind in kinds {
+        for &seed in seeds {
+            reports.push(run_campaign(kind, seed)?);
+        }
+    }
+    Ok(reports)
+}
+
+fn inject(
+    fault: FaultKind,
+    kind: EngineKind,
+    addr: SocketAddr,
+    rng: &mut XorShift,
+    findings: &mut Vec<String>,
+) -> String {
+    match fault {
+        FaultKind::TruncatedFrame => truncated_frame(addr, rng, findings),
+        FaultKind::OversizeFrame => oversize_frame(addr, rng, findings),
+        FaultKind::GarbageFrame => garbage_frame(addr, rng, findings),
+        FaultKind::DisconnectMidBatch => {
+            disconnect_mid_batch(addr, kind, rng, findings)
+        }
+        FaultKind::DisconnectMidModel => {
+            disconnect_mid_model(addr, kind, rng, findings)
+        }
+        FaultKind::SlowReader => slow_reader(addr, findings),
+        FaultKind::SubmitStorm => submit_storm(addr, kind, rng, findings),
+        FaultKind::PrivilegeProbe => privilege_probe(addr, findings),
+    }
+}
+
+fn truncated_frame(
+    addr: SocketAddr,
+    rng: &mut XorShift,
+    findings: &mut Vec<String>,
+) -> String {
+    let promised = 64 + rng.below(512) as u32;
+    let sent = (promised / 2) as usize;
+    match TcpStream::connect(addr) {
+        Ok(mut s) => {
+            let mut bytes = promised.to_be_bytes().to_vec();
+            bytes.resize(4 + sent, b'{');
+            let _ = s.write_all(&bytes);
+            format!("promised {promised} bytes, sent {sent}, hung up")
+        }
+        Err(e) => {
+            findings.push(format!("connect refused mid-campaign: {e}"));
+            "connect failed".to_string()
+        }
+    }
+}
+
+fn oversize_frame(
+    addr: SocketAddr,
+    rng: &mut XorShift,
+    findings: &mut Vec<String>,
+) -> String {
+    let declared = MAX_FRAME_LEN as u32 + 1 + rng.below(1024) as u32;
+    let mut s = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => {
+            findings.push(format!("connect refused mid-campaign: {e}"));
+            return "connect failed".to_string();
+        }
+    };
+    if let Err(e) = s.write_all(&declared.to_be_bytes()) {
+        findings.push(format!("oversize prefix write failed: {e}"));
+        return "write failed".to_string();
+    }
+    match read_frame(&mut s) {
+        Ok(Some(payload)) => match Response::decode(&payload) {
+            Ok(Response::Error(e)) if e.code == ErrorCode::BadFrame => {}
+            Ok(other) => findings.push(format!(
+                "expected bad-frame error, got {}",
+                other.tag()
+            )),
+            Err(e) => findings.push(format!("undecodable response: {e}")),
+        },
+        other => findings.push(format!(
+            "expected typed error on open connection, got {other:?}"
+        )),
+    }
+    // The contract: the connection survives an oversize prefix.
+    expect_stats_alive(&mut s, findings);
+    format!("declared {declared}-byte frame, got typed refusal")
+}
+
+fn garbage_frame(
+    addr: SocketAddr,
+    rng: &mut XorShift,
+    findings: &mut Vec<String>,
+) -> String {
+    let len = 8 + rng.below(64) as usize;
+    let garbage: Vec<u8> =
+        (0..len).map(|_| (rng.below(26) as u8) + b'a').collect();
+    let mut s = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => {
+            findings.push(format!("connect refused mid-campaign: {e}"));
+            return "connect failed".to_string();
+        }
+    };
+    if let Err(e) = write_frame(&mut s, &garbage) {
+        findings.push(format!("garbage frame write failed: {e}"));
+        return "write failed".to_string();
+    }
+    match read_frame(&mut s) {
+        Ok(Some(payload)) => match Response::decode(&payload) {
+            Ok(Response::Error(_)) => {}
+            Ok(other) => findings.push(format!(
+                "expected typed decode error, got {}",
+                other.tag()
+            )),
+            Err(e) => findings.push(format!("undecodable response: {e}")),
+        },
+        other => findings.push(format!(
+            "expected typed error on open connection, got {other:?}"
+        )),
+    }
+    expect_stats_alive(&mut s, findings);
+    format!("{len} bytes of garbage, got typed refusal")
+}
+
+/// The still-open faulted connection must keep serving: one Stats
+/// round trip over the raw stream.
+fn expect_stats_alive(s: &mut TcpStream, findings: &mut Vec<String>) {
+    if let Err(e) = write_frame(s, &Request::Stats.encode()) {
+        findings.push(format!("connection died after typed error: {e}"));
+        return;
+    }
+    match read_frame(s) {
+        Ok(Some(payload)) => match Response::decode(&payload) {
+            Ok(Response::Metrics(_)) => {}
+            Ok(other) => findings.push(format!(
+                "stats after fault answered {}",
+                other.tag()
+            )),
+            Err(e) => findings.push(format!("undecodable stats: {e}")),
+        },
+        other => findings.push(format!(
+            "stats after fault got no frame: {other:?}"
+        )),
+    }
+}
+
+fn disconnect_mid_batch(
+    addr: SocketAddr,
+    kind: EngineKind,
+    rng: &mut XorShift,
+    findings: &mut Vec<String>,
+) -> String {
+    let n = 2 + rng.below(MAX_INFLIGHT as u64 - 1) as usize;
+    let mut s = match TcpSession::connect(&addr.to_string()) {
+        Ok(s) => s,
+        Err(e) => {
+            findings.push(format!("connect refused mid-campaign: {e}"));
+            return "connect failed".to_string();
+        }
+    };
+    let jobs: Vec<Job> = (0..n).map(|_| small_job(kind, rng)).collect();
+    match s.submit_batch(jobs) {
+        Ok(ids) => format!("submitted {} jobs, vanished", ids.len()),
+        Err(e) => {
+            findings.push(format!("in-quota batch refused: {e}"));
+            "batch refused".to_string()
+        }
+    }
+    // `s` drops here: disconnect with every handle unredeemed.
+}
+
+fn disconnect_mid_model(
+    addr: SocketAddr,
+    kind: EngineKind,
+    rng: &mut XorShift,
+    findings: &mut Vec<String>,
+) -> String {
+    let (model, input) = small_model(kind, rng);
+    let layers = model.layers.len();
+    let mut s = match TcpSession::connect(&addr.to_string()) {
+        Ok(s) => s,
+        Err(e) => {
+            findings.push(format!("connect refused mid-campaign: {e}"));
+            return "connect failed".to_string();
+        }
+    };
+    match s.submit(Job::Model { model, input }) {
+        Ok(id) => {
+            format!("submitted {layers}-layer model (handle {id}), vanished")
+        }
+        Err(e) => {
+            findings.push(format!("valid model refused: {e}"));
+            "model refused".to_string()
+        }
+    }
+}
+
+fn slow_reader(addr: SocketAddr, findings: &mut Vec<String>) -> String {
+    let reaped_before = match stat_u64(addr, "idle_reaped") {
+        Ok(v) => v,
+        Err(e) => {
+            findings.push(e);
+            return "baseline stats failed".to_string();
+        }
+    };
+    let stalled = match TcpStream::connect(addr) {
+        Ok(mut s) => {
+            // Half a frame prefix, then silence.
+            let _ = s.write_all(&[0, 0]);
+            s
+        }
+        Err(e) => {
+            findings.push(format!("connect refused mid-campaign: {e}"));
+            return "connect failed".to_string();
+        }
+    };
+    let mut reaped = reaped_before;
+    for _ in 0..300 {
+        match stat_u64(addr, "idle_reaped") {
+            Ok(v) => reaped = v,
+            Err(e) => {
+                findings.push(e);
+                break;
+            }
+        }
+        if reaped > reaped_before {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    if reaped <= reaped_before {
+        findings.push(format!(
+            "stalled connection was not reaped within 3s \
+             (idle_reaped stayed {reaped_before})"
+        ));
+    }
+    drop(stalled);
+    format!("stalled after 2 prefix bytes; idle_reaped {reaped_before} -> {reaped}")
+}
+
+fn submit_storm(
+    addr: SocketAddr,
+    kind: EngineKind,
+    rng: &mut XorShift,
+    findings: &mut Vec<String>,
+) -> String {
+    let mut s = match TcpSession::connect(&addr.to_string()) {
+        Ok(s) => s,
+        Err(e) => {
+            findings.push(format!("connect refused mid-campaign: {e}"));
+            return "connect failed".to_string();
+        }
+    };
+    let mut accepted = 0usize;
+    let mut refusal = None;
+    for i in 0..MAX_INFLIGHT + 2 {
+        match s.submit(small_job(kind, rng)) {
+            Ok(_) => accepted += 1,
+            Err(SessionError::Remote(e)) => {
+                refusal = Some((i, e));
+                break;
+            }
+            Err(e) => {
+                findings.push(format!("storm submit transport error: {e}"));
+                break;
+            }
+        }
+    }
+    match refusal {
+        Some((at, e)) => {
+            if at != MAX_INFLIGHT {
+                findings.push(format!(
+                    "quota refusal at submit {at}, expected exactly \
+                     {MAX_INFLIGHT} (quota must be exact)"
+                ));
+            }
+            if e.code != ErrorCode::Overloaded {
+                findings.push(format!(
+                    "storm refused with {:?}, expected overloaded",
+                    e.code
+                ));
+            }
+            if e.retry_after_ms.is_none() {
+                findings
+                    .push("overloaded error carried no retry hint".to_string());
+            }
+        }
+        None => findings.push(format!(
+            "no overload answer within {} submits (quota {})",
+            MAX_INFLIGHT + 2,
+            MAX_INFLIGHT
+        )),
+    }
+    // Retire own work (the well-behaved exit), then vanish anyway.
+    let _ = s.drain_mine(Some(Duration::from_secs(30)));
+    format!("{accepted} accepted before typed overload refusal")
+}
+
+fn privilege_probe(
+    addr: SocketAddr,
+    findings: &mut Vec<String>,
+) -> String {
+    let mut s = match TcpSession::connect(&addr.to_string()) {
+        Ok(s) => s,
+        Err(e) => {
+            findings.push(format!("connect refused mid-campaign: {e}"));
+            return "connect failed".to_string();
+        }
+    };
+    let expect_forbidden =
+        |what: &str, r: Result<(), SessionError>, findings: &mut Vec<String>| {
+            match r {
+                Err(SessionError::Remote(e))
+                    if e.code == ErrorCode::Forbidden => {}
+                Err(e) => findings.push(format!(
+                    "{what} by a plain session: expected forbidden, got {e}"
+                )),
+                Ok(()) => findings.push(format!(
+                    "{what} by a plain session was ALLOWED"
+                )),
+            }
+        };
+    expect_forbidden(
+        "drain",
+        s.drain(Some(Duration::from_millis(10))).map(|_| ()),
+        findings,
+    );
+    expect_forbidden("shutdown", s.shutdown().map(|_| ()), findings);
+    expect_forbidden("bad-token auth", s.auth("letmein"), findings);
+    // And the server is still standing.
+    if let Err(e) = s.stats() {
+        findings.push(format!("server unreachable after probes: {e}"));
+    }
+    "drain/shutdown/bad-auth all answered forbidden".to_string()
+}
+
+/// Wait (bounded) for the table to settle, then check every leak
+/// invariant and the fresh-client bit-identity contract.
+fn settle_and_audit(
+    kind: EngineKind,
+    addr: SocketAddr,
+    rng: &mut XorShift,
+    findings: &mut Vec<String>,
+) {
+    let mut obs = match TcpSession::connect(&addr.to_string()) {
+        Ok(s) => s,
+        Err(e) => {
+            findings.push(format!("audit connect failed: {e}"));
+            return;
+        }
+    };
+    let mut snap = Json::Null;
+    for _ in 0..1500 {
+        snap = match obs.stats() {
+            Ok(s) => s,
+            Err(e) => {
+                findings.push(format!("audit stats failed: {e}"));
+                return;
+            }
+        };
+        if get_u64(&snap, "pending_handles") == 0
+            && get_u64(&snap, "intermediate_bytes_now") == 0
+            && get_u64(&snap, "queued_bytes_now") == 0
+            && get_u64(&snap, "open_sessions") == 1
+        {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for (key, want, what) in [
+        ("pending_handles", 0, "leaked handles"),
+        ("intermediate_bytes_now", 0, "leaked arena intermediates"),
+        ("queued_bytes_now", 0, "leaked queued-byte accounting"),
+        ("open_sessions", 1, "leaked sessions"),
+        ("shed_unobserved", 0, "unclaimed shed markers"),
+    ] {
+        let got = get_u64(&snap, key);
+        if got != want {
+            findings.push(format!(
+                "{what}: {key} = {got} after settling (expected {want})"
+            ));
+        }
+    }
+    // A fresh compliant client gets golden bits, campaign or not.
+    let (job, a, w) = golden_job(kind, rng);
+    let mut fresh = match TcpSession::connect(&addr.to_string()) {
+        Ok(s) => s,
+        Err(e) => {
+            findings.push(format!("fresh client connect failed: {e}"));
+            return;
+        }
+    };
+    let id = match fresh.submit(job) {
+        Ok(id) => id,
+        Err(e) => {
+            findings.push(format!("fresh client submit refused: {e}"));
+            return;
+        }
+    };
+    match fresh.wait(id, Some(Duration::from_secs(30))) {
+        Ok(JobState::Done(r)) => {
+            if r.output != golden_gemm(&a, &w) {
+                findings.push(
+                    "fresh client output is NOT bit-identical to the \
+                     golden reference"
+                        .to_string(),
+                );
+            }
+            if r.verified != Some(true) {
+                findings.push(format!(
+                    "fresh client result not verified: {:?}",
+                    r.verified
+                ));
+            }
+        }
+        Ok(other) => findings.push(format!(
+            "fresh client job did not complete: {other:?}"
+        )),
+        Err(e) => findings.push(format!("fresh client wait failed: {e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One full campaign on the default engine must come back with
+    /// zero violations — the same contract the CI smoke enforces
+    /// across all kinds.
+    #[test]
+    fn campaign_runs_clean_on_the_default_engine() {
+        let report =
+            run_campaign(EngineKind::WsDspFetch, 1).expect("campaign runs");
+        assert_eq!(
+            report.violations(),
+            0,
+            "violations:\n{}",
+            report.render_text()
+        );
+        // Every archetype was exercised at least once.
+        for kind in FaultKind::all() {
+            assert!(
+                report.runs.iter().any(|r| r.fault == kind.label()),
+                "{} never injected",
+                kind.label()
+            );
+        }
+    }
+}

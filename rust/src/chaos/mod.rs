@@ -1,0 +1,30 @@
+//! Deterministic fault-injection campaigns against the serving stack.
+//!
+//! The robustness claims of the [`crate::proto`] layer — typed errors
+//! on malformed frames, quota-exact admission control, operator-scoped
+//! authority, leak-free disconnect reclamation — are only claims until
+//! something hostile exercises them. This module is that something:
+//!
+//! * [`plan`] — seeded [`plan::FaultPlan`]s: every fault archetype at
+//!   least once per campaign, order and repeats derived from one seed
+//!   (no wall-clock randomness — a failing campaign replays exactly);
+//! * [`harness`] — [`harness::run_campaign`] boots a real
+//!   [`crate::proto::TcpServer`] under a strict QoS policy, injects
+//!   the plan through real sockets, audits the leak invariants, and
+//!   proves a fresh compliant client is still answered bit-identically
+//!   against the golden reference;
+//! * [`report`] — [`report::ChaosReport`]: one record per injection
+//!   plus every violated expectation, rendered as text or as the JSON
+//!   artifact the CI gate consumes (any violation fails the build).
+//!
+//! The same campaigns run as `dsp48-systolic chaos` from the CLI
+//! (`--engine all --seed-sweep N` in CI) and as property tests in
+//! `tests/chaos_props.rs`.
+
+pub mod harness;
+pub mod plan;
+pub mod report;
+
+pub use harness::{campaign_qos, run_campaign, run_campaigns, OPERATOR_TOKEN};
+pub use plan::{FaultKind, FaultPlan};
+pub use report::{sweep_json, ChaosDiagnostic, ChaosReport, FaultRun};

@@ -1,0 +1,122 @@
+//! Deterministic fault plans: which faults hit the server, in what
+//! order, with what parameters — all derived from one seed.
+//!
+//! Reproducibility is the whole point of the harness: a failing
+//! campaign is re-run with the same `--seed` and replays the same
+//! byte streams, the same disconnect points, the same storm sizes.
+//! There is no wall-clock randomness anywhere in a plan; sleeps in
+//! the harness only *bound* waits on outcomes that are themselves
+//! deterministic.
+
+use crate::util::rng::XorShift;
+
+/// One fault archetype the harness knows how to inject through a real
+/// TCP connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A frame prefix that promises more payload bytes than ever
+    /// arrive, then a hangup mid-frame.
+    TruncatedFrame,
+    /// A prefix declaring a payload over `MAX_FRAME_LEN`: the server
+    /// must answer a typed `bad-frame` error and keep the connection.
+    OversizeFrame,
+    /// A well-framed payload that is not valid JSON: typed decode
+    /// error, connection stays open and keeps serving.
+    GarbageFrame,
+    /// Submit a batch of jobs, then vanish without redeeming any —
+    /// the session's handles must be forgotten, not leaked.
+    DisconnectMidBatch,
+    /// Submit a whole model DAG, then vanish while its layers are in
+    /// flight — arena-resident intermediates must be reclaimed.
+    DisconnectMidModel,
+    /// Connect, send half a frame prefix, and stall: the idle read
+    /// deadline must reap the connection (the slow-loris probe).
+    SlowReader,
+    /// Flood submits without redeeming until admission control
+    /// answers `overloaded` — and it must do so at exactly the
+    /// budgeted point, with a retry hint.
+    SubmitStorm,
+    /// A plain session tries `Drain`, `Shutdown`, and a bad `Auth`
+    /// token: every probe must answer `forbidden` and the server must
+    /// stay up.
+    PrivilegeProbe,
+}
+
+impl FaultKind {
+    /// Stable label (report JSON and CLI output).
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultKind::TruncatedFrame => "truncated-frame",
+            FaultKind::OversizeFrame => "oversize-frame",
+            FaultKind::GarbageFrame => "garbage-frame",
+            FaultKind::DisconnectMidBatch => "disconnect-mid-batch",
+            FaultKind::DisconnectMidModel => "disconnect-mid-model",
+            FaultKind::SlowReader => "slow-reader",
+            FaultKind::SubmitStorm => "submit-storm",
+            FaultKind::PrivilegeProbe => "privilege-probe",
+        }
+    }
+
+    /// Every archetype, in declaration order.
+    pub fn all() -> [FaultKind; 8] {
+        [
+            FaultKind::TruncatedFrame,
+            FaultKind::OversizeFrame,
+            FaultKind::GarbageFrame,
+            FaultKind::DisconnectMidBatch,
+            FaultKind::DisconnectMidModel,
+            FaultKind::SlowReader,
+            FaultKind::SubmitStorm,
+            FaultKind::PrivilegeProbe,
+        ]
+    }
+}
+
+/// A seeded fault schedule: every archetype at least once, in a
+/// seed-shuffled order, plus a few seed-chosen repeats.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub steps: Vec<FaultKind>,
+}
+
+impl FaultPlan {
+    /// Derive the plan for `seed`. Same seed, same plan — always.
+    pub fn generate(seed: u64) -> FaultPlan {
+        let mut rng = XorShift::new(seed ^ 0xC4A0_5_F00D);
+        let mut steps: Vec<FaultKind> = FaultKind::all().to_vec();
+        // Fisher–Yates under the seeded generator.
+        for i in (1..steps.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            steps.swap(i, j);
+        }
+        // A few repeats so campaigns also exercise fault *sequences*
+        // (e.g. a storm landing on a server that just reaped a
+        // slow reader).
+        let extra = 2 + rng.below(3) as usize;
+        for _ in 0..extra {
+            let all = FaultKind::all();
+            steps.push(all[rng.below(all.len() as u64) as usize]);
+        }
+        FaultPlan { seed, steps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_per_seed() {
+        let a = FaultPlan::generate(7);
+        let b = FaultPlan::generate(7);
+        assert_eq!(a.steps, b.steps);
+        // Every archetype appears at least once.
+        for kind in FaultKind::all() {
+            assert!(a.steps.contains(&kind), "{} missing", kind.label());
+        }
+        // Different seeds genuinely differ (shuffle or repeats).
+        let c = FaultPlan::generate(8);
+        assert_ne!(a.steps, c.steps);
+    }
+}

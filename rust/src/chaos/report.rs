@@ -1,0 +1,153 @@
+//! Chaos campaign reports: one record per injected fault plus the
+//! post-campaign invariant audit, rendered as human text or the
+//! canonical JSON the CI gate consumes.
+
+use crate::util::json::Json;
+
+/// One violated expectation — a fault the server mishandled or a
+/// post-campaign invariant that did not hold.
+#[derive(Debug, Clone)]
+pub struct ChaosDiagnostic {
+    /// Fault label, or `"invariant"` for the post-campaign audit.
+    pub fault: &'static str,
+    /// What was expected and what happened instead.
+    pub message: String,
+}
+
+/// One injected fault's record.
+#[derive(Debug, Clone)]
+pub struct FaultRun {
+    /// Fault label.
+    pub fault: &'static str,
+    /// What the injection actually did (sizes, counts, ids).
+    pub detail: String,
+    /// Violated expectations during this injection.
+    pub findings: usize,
+}
+
+/// One campaign: a seeded fault plan driven against one engine kind's
+/// live server, plus the invariant audit that follows.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosReport {
+    /// Engine label the server was built with.
+    pub engine: String,
+    /// The plan seed.
+    pub seed: u64,
+    /// One entry per injected fault (plan order), then the audit.
+    pub runs: Vec<FaultRun>,
+    /// All violated expectations, in run order.
+    pub diagnostics: Vec<ChaosDiagnostic>,
+}
+
+impl ChaosReport {
+    /// Total violated expectations — any nonzero count gates CI.
+    pub fn violations(&self) -> usize {
+        self.diagnostics.len()
+    }
+
+    /// Canonical JSON for the CI artifact.
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("version", Json::from(1i64)),
+            ("engine", Json::from(self.engine.as_str())),
+            ("seed", Json::uint(self.seed)),
+            ("violations", Json::from(self.violations())),
+            (
+                "runs",
+                Json::array(
+                    self.runs
+                        .iter()
+                        .map(|r| {
+                            Json::object(vec![
+                                ("fault", Json::from(r.fault)),
+                                ("detail", Json::from(r.detail.as_str())),
+                                ("findings", Json::from(r.findings)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "diagnostics",
+                Json::array(
+                    self.diagnostics
+                        .iter()
+                        .map(|d| {
+                            Json::object(vec![
+                                ("fault", Json::from(d.fault)),
+                                ("message", Json::from(d.message.as_str())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable report.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "chaos campaign: engine {} seed {} — {} injection(s)",
+            self.engine,
+            self.seed,
+            self.runs.len()
+        );
+        for r in &self.runs {
+            let _ = writeln!(
+                out,
+                "  {:<22} {}  {}",
+                r.fault,
+                if r.findings == 0 {
+                    "ok".to_string()
+                } else {
+                    format!("{} finding(s)", r.findings)
+                },
+                r.detail
+            );
+        }
+        for d in &self.diagnostics {
+            let _ = writeln!(out, "VIOLATION [{}]: {}", d.fault, d.message);
+        }
+        let _ = writeln!(out, "violations: {}", self.violations());
+        out
+    }
+}
+
+/// Aggregate JSON for a multi-campaign run (`--seed-sweep`, multiple
+/// engines): total violations up front, every campaign inline.
+pub fn sweep_json(reports: &[ChaosReport]) -> Json {
+    let total: usize = reports.iter().map(ChaosReport::violations).sum();
+    Json::object(vec![
+        ("version", Json::from(1i64)),
+        ("violations", Json::from(total)),
+        ("campaigns", Json::from(reports.len())),
+        (
+            "reports",
+            Json::array(reports.iter().map(ChaosReport::to_json).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_report_serializes_clean() {
+        let rep = ChaosReport {
+            engine: "ws-dspfetch".to_string(),
+            seed: 3,
+            ..ChaosReport::default()
+        };
+        assert_eq!(rep.violations(), 0);
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"violations\": 0"), "{j}");
+        assert!(j.contains("\"seed\": 3"), "{j}");
+        assert!(rep.render_text().contains("violations: 0"));
+        let sweep = sweep_json(&[rep]).to_string();
+        assert!(sweep.contains("\"campaigns\": 1"), "{sweep}");
+    }
+}

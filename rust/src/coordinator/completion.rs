@@ -37,6 +37,12 @@ pub enum JobState {
     Done(Box<JobResult>),
     /// A tile of this job errored; no result exists.
     Failed,
+    /// The job was evicted by admission control (its session was shed
+    /// or force-drained); no result exists. Terminal like `Failed`,
+    /// observed exactly once — and unlike `Failed`, a `wait` blocked
+    /// on the handle resolves the moment the shed happens instead of
+    /// sleeping out its timeout.
+    Shed,
 }
 
 impl JobState {
@@ -92,6 +98,11 @@ struct Inner {
     /// never accumulate. Invariant: `orphaned ⊆ in_flight`, so every
     /// entry is removed when its job retires — the set cannot leak.
     orphaned: HashSet<JobId>,
+    /// Handles evicted by [`CompletionTable::shed`] and not yet
+    /// observed: a `poll`/`wait` consumes the marker and reports
+    /// [`JobState::Shed`]. Cleared by `forget` (the owner
+    /// disconnected) and taken by `drain`, so the set cannot leak.
+    shed: HashSet<JobId>,
 }
 
 impl Inner {
@@ -165,7 +176,39 @@ impl CompletionTable {
             if !was_parked && g.in_flight.contains(id) {
                 g.orphaned.insert(*id);
             }
+            // A disconnected owner can never observe its shed
+            // markers; drop them so the set stays leak-free.
+            g.shed.remove(id);
         }
+    }
+
+    /// Evict handles by admission control: parked results and failed
+    /// markers are dropped, genuinely in-flight ones are orphaned
+    /// (their results drop at retirement), and every evicted id is
+    /// marked [`JobState::Shed`] so the owner's next redemption — or a
+    /// `wait` *already blocked* on the handle — resolves to a typed
+    /// terminal answer instead of hanging. Already-retired ids are
+    /// ignored. Returns how many handles were evicted.
+    pub fn shed(&self, ids: &[JobId]) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let mut evicted = 0;
+        for id in ids {
+            let was_parked =
+                g.take_ready(*id).is_some() || g.failed.remove(id);
+            let in_flight = g.in_flight.contains(id);
+            if !was_parked && in_flight {
+                g.orphaned.insert(*id);
+            }
+            if was_parked || in_flight {
+                g.shed.insert(*id);
+                evicted += 1;
+            }
+        }
+        drop(g);
+        if evicted > 0 {
+            self.cv.notify_all();
+        }
+        evicted
     }
 
     /// Completed results parked in the table and not yet redeemed
@@ -177,6 +220,9 @@ impl CompletionTable {
     /// Non-blocking redemption of one handle.
     pub fn poll(&self, handle: JobHandle) -> JobState {
         let mut g = self.inner.lock().unwrap();
+        if g.shed.remove(&handle.id) {
+            return JobState::Shed;
+        }
         if let Some(r) = g.take_ready(handle.id) {
             return JobState::Done(Box::new(r));
         }
@@ -192,6 +238,9 @@ impl CompletionTable {
         let deadline = deadline_after(timeout);
         let mut g = self.inner.lock().unwrap();
         loop {
+            if g.shed.remove(&handle.id) {
+                return JobState::Shed;
+            }
             if let Some(r) = g.take_ready(handle.id) {
                 return JobState::Done(Box::new(r));
             }
@@ -271,6 +320,59 @@ impl CompletionTable {
             }
         }
         let mut failed: Vec<JobId> = g.failed.drain().collect();
+        // Shed markers for jobs that already retired can never block
+        // the drain, but they are unclaimed terminal state — take
+        // them too (as failures: no result exists), so a retirement
+        // loop built on `drain` alone holds no leaked state.
+        failed.extend(g.shed.drain());
+        failed.sort_unstable();
+        failed.dedup();
+        Drained { completed, failed }
+    }
+
+    /// Session-scoped drain: block until every id in `ids` has
+    /// retired (or `timeout`), then take *their* unclaimed state —
+    /// completed results in arrival order, unobserved failed and shed
+    /// ids — leaving every other session's handles untouched. Backs
+    /// the wire `DrainMine` verb.
+    pub fn drain_ids(&self, ids: &[JobId], timeout: Duration) -> Drained {
+        let want: HashSet<JobId> = ids.iter().copied().collect();
+        let deadline = deadline_after(timeout);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let outstanding = g
+                .in_flight
+                .iter()
+                .any(|id| want.contains(id) && !g.shed.contains(id));
+            if !outstanding {
+                break;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+        let mut completed = Vec::new();
+        let mut i = 0;
+        while i < g.order.len() {
+            let id = g.order[i];
+            if want.contains(&id) {
+                g.order.remove(i);
+                if let Some(r) = g.ready.remove(&id) {
+                    completed.push(r);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        let mut failed: Vec<JobId> = Vec::new();
+        for id in &want {
+            if g.failed.remove(id) || g.shed.remove(id) {
+                failed.push(*id);
+            }
+        }
         failed.sort_unstable();
         Drained { completed, failed }
     }
@@ -280,10 +382,25 @@ impl CompletionTable {
         self.inner.lock().unwrap().in_flight.len()
     }
 
+    /// Jobs still in flight whose owners are waiting on them —
+    /// in-flight minus orphaned. This is the admission gate's measure
+    /// of outstanding work: shedding or forgetting a session frees
+    /// its slots immediately, before the workers catch up.
+    pub fn live_pending(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.in_flight.len() - g.orphaned.len()
+    }
+
     /// Jobs that retired as failed and were not yet observed through
     /// a handle (observing one via `poll`/`wait` consumes it).
     pub fn failed_count(&self) -> usize {
         self.inner.lock().unwrap().failed.len()
+    }
+
+    /// Shed markers not yet observed (leak telemetry: trends to zero —
+    /// owners observe them, disconnect cleanup clears them).
+    pub fn shed_count(&self) -> usize {
+        self.inner.lock().unwrap().shed.len()
     }
 }
 
@@ -487,6 +604,99 @@ mod tests {
             JobId(2)
         );
         assert_eq!(t.inner.lock().unwrap().order.len(), 0);
+    }
+
+    /// Shedding drops parked results, orphans in-flight jobs, and
+    /// leaves a consume-once terminal marker.
+    #[test]
+    fn shed_is_terminal_and_consumed_once() {
+        let t = CompletionTable::new();
+        reg(&t, &[0, 1, 2]);
+        t.complete(result(0)); // parked
+        assert_eq!(t.shed(&[JobId(0), JobId(1)]), 2);
+        assert_eq!(t.unclaimed(), 0);
+        assert_eq!(t.shed_count(), 2);
+        assert!(matches!(t.poll(JobHandle { id: JobId(0) }), JobState::Shed));
+        assert!(matches!(
+            t.wait(JobHandle { id: JobId(1) }, Duration::from_millis(5)),
+            JobState::Shed
+        ));
+        // Consumed: a second redemption reports Pending like a taken
+        // Done; the orphaned in-flight job's result drops on arrival.
+        assert!(matches!(t.poll(JobHandle { id: JobId(0) }), JobState::Pending));
+        t.complete(result(1));
+        assert_eq!(t.unclaimed(), 0);
+        assert_eq!(t.shed_count(), 0);
+        // Untouched third handle still works; already-retired ids
+        // shed to nothing.
+        t.complete(result(2));
+        assert!(t.poll(JobHandle { id: JobId(2) }).is_done());
+        assert_eq!(t.shed(&[JobId(2)]), 0);
+        assert_eq!(t.pending(), 0);
+    }
+
+    /// A `wait` already blocked on a handle resolves to `Shed` the
+    /// moment the shed happens — it must not sleep out its timeout.
+    #[test]
+    fn shed_wakes_a_blocked_wait() {
+        let t = Arc::new(CompletionTable::new());
+        reg(&t, &[9]);
+        let t2 = Arc::clone(&t);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            t2.shed(&[JobId(9)]);
+        });
+        let start = Instant::now();
+        let state = t.wait(JobHandle { id: JobId(9) }, Duration::from_secs(60));
+        assert!(matches!(state, JobState::Shed), "got {state:?}");
+        assert!(start.elapsed() < Duration::from_secs(30));
+        h.join().unwrap();
+        // The job is still in flight (orphaned); retirement clears it.
+        t.complete_failed(JobId(9));
+        assert_eq!(t.pending(), 0);
+        assert_eq!(t.failed_count(), 0);
+    }
+
+    /// `drain_ids` retires only the requested handles; everyone
+    /// else's state stays parked.
+    #[test]
+    fn drain_ids_scopes_to_the_given_handles() {
+        let t = CompletionTable::new();
+        reg(&t, &[0, 1, 2, 3]);
+        t.complete(result(0));
+        t.complete(result(2));
+        t.complete_failed(JobId(1));
+        t.complete(result(3));
+        let mine = t.drain_ids(
+            &[JobId(0), JobId(1)],
+            Duration::from_millis(50),
+        );
+        assert_eq!(mine.completed.len(), 1);
+        assert_eq!(mine.completed[0].id, JobId(0));
+        assert_eq!(mine.failed, vec![JobId(1)]);
+        // The other session's results are untouched and still in
+        // arrival order.
+        assert_eq!(t.unclaimed(), 2);
+        assert_eq!(t.wait_any(Duration::from_millis(10)).unwrap().id, JobId(2));
+        assert_eq!(t.wait_any(Duration::from_millis(10)).unwrap().id, JobId(3));
+    }
+
+    /// `live_pending` discounts orphaned work so shed capacity frees
+    /// immediately; global `drain` takes leftover shed markers.
+    #[test]
+    fn live_pending_discounts_orphans_and_drain_takes_shed() {
+        let t = CompletionTable::new();
+        reg(&t, &[0, 1]);
+        assert_eq!(t.live_pending(), 2);
+        t.shed(&[JobId(0)]);
+        assert_eq!(t.pending(), 2);
+        assert_eq!(t.live_pending(), 1);
+        t.complete(result(0));
+        t.complete(result(1));
+        let drained = t.drain(Duration::from_millis(50));
+        assert_eq!(drained.completed.len(), 1);
+        assert_eq!(drained.failed, vec![JobId(0)]);
+        assert_eq!(t.shed_count(), 0);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use super::scheduler::aggregate_tile_stats;
 use super::tiler::{ActOperand, Tile, WeightOperand};
 use crate::engines::RunStats;
-use crate::model::{golden_eval, Model};
+use crate::model::{golden_eval, LayerOp, Model};
 use crate::workload::conv::{conv2d_direct, ConvShape};
 use crate::workload::gemm::golden_gemm;
 use crate::workload::{CsrMatI8, MatI32, MatI8, SparseMatI8};
@@ -113,6 +113,56 @@ impl Job {
             Job::Snn { .. } => "snn",
             Job::SparseGemm { .. } => "sparse",
             Job::Model { .. } => "model",
+        }
+    }
+
+    /// Operand footprint in bytes — the admission controller's
+    /// queued-byte accounting unit. Deliberately the *element* count
+    /// (i8 operands are one byte each; sparse index arrays count at
+    /// their width), not a malloc-exact figure: the quota bounds how
+    /// much client-supplied operand data the coordinator holds per
+    /// session, and it must be a deterministic function of the job so
+    /// the N-vs-N+1 admission boundary is exact.
+    pub fn cost_bytes(&self) -> u64 {
+        fn sparse_bytes(w: &SparseMatI8) -> u64 {
+            let (idx, val) = w.slots();
+            (idx.len() + val.len()) as u64
+        }
+        match self {
+            Job::Gemm { a, w } => (a.data.len() + w.data.len()) as u64,
+            Job::Conv { input, weights, .. } => {
+                (input.len() + weights.len()) as u64
+            }
+            Job::Snn { spikes, weights } => {
+                (spikes.data.len() + weights.data.len()) as u64
+            }
+            Job::SparseGemm { a, w } => {
+                let (row_ptr, col_idx, val) = a.parts();
+                ((row_ptr.len() + col_idx.len())
+                    * std::mem::size_of::<usize>()
+                    + val.len()) as u64
+                    + sparse_bytes(w)
+            }
+            Job::Model { model, input } => {
+                input.data.len() as u64
+                    + model
+                        .layers
+                        .iter()
+                        .map(|l| match &l.op {
+                            LayerOp::Gemm { w } | LayerOp::Snn { w } => {
+                                w.data.len() as u64
+                            }
+                            LayerOp::SparseGemm { w } => sparse_bytes(w),
+                            LayerOp::Conv { weights, .. } => {
+                                weights.len() as u64
+                            }
+                            LayerOp::Requant { .. }
+                            | LayerOp::Quant { .. }
+                            | LayerOp::Add
+                            | LayerOp::Chw { .. } => 0,
+                        })
+                        .sum::<u64>()
+            }
         }
     }
 }
@@ -476,5 +526,52 @@ mod tests {
         };
         assert_eq!(s.macs(), 64);
         assert_eq!(s.kind(), "sparse");
+    }
+
+    /// `cost_bytes` is deterministic in the operand shapes — the
+    /// admission boundary (Nth accepted, N+1th refused) depends on it.
+    #[test]
+    fn cost_bytes_tracks_operand_footprint() {
+        let g = Job::Gemm {
+            a: MatI8::zeros(4, 8),
+            w: MatI8::zeros(8, 2),
+        };
+        assert_eq!(g.cost_bytes(), 4 * 8 + 8 * 2);
+        let c = Job::Conv {
+            input: vec![0; 32],
+            weights: vec![0; 54],
+            shape: ConvShape {
+                in_c: 2,
+                in_h: 4,
+                in_w: 4,
+                out_c: 3,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                dilation: 1,
+                groups: 1,
+            },
+        };
+        assert_eq!(c.cost_bytes(), 32 + 54);
+        let mut m = crate::model::Model::new(2, 8, false);
+        m.layer(
+            LayerOp::Gemm {
+                w: MatI8::zeros(8, 4),
+            },
+            &[0],
+        );
+        m.layer(
+            LayerOp::Requant {
+                num: 1,
+                shift: 4,
+                zero_point: 0,
+            },
+            &[1],
+        );
+        let j = Job::Model {
+            model: m,
+            input: MatI8::zeros(2, 8),
+        };
+        assert_eq!(j.cost_bytes(), 2 * 8 + 8 * 4);
     }
 }

@@ -1,10 +1,38 @@
-//! Service metrics: shared counters + latency aggregation.
+//! Service metrics: shared counters + latency aggregation, global and
+//! per-session.
 
 use crate::exec::ScratchStats;
 use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Per-session aggregation: the QoS layer records every completion,
+/// rejection, shed and deadline miss against the session that caused
+/// it, so one tenant's flood is visible *as that tenant's numbers*
+/// instead of smearing into the global averages.
+#[derive(Debug, Default)]
+pub struct SessionStats {
+    pub latencies_us: Vec<u64>,
+    pub jobs_submitted: u64,
+    pub admission_rejected: u64,
+    pub shed: u64,
+    pub deadline_misses: u64,
+}
+
+impl SessionStats {
+    /// (p50, p95, p99) wall latency in microseconds.
+    pub fn percentiles(&self) -> (u64, u64, u64) {
+        let mut v = self.latencies_us.clone();
+        if v.is_empty() {
+            return (0, 0, 0);
+        }
+        v.sort_unstable();
+        let at = |pct: usize| v[(v.len() * pct / 100).min(v.len() - 1)];
+        (v[v.len() / 2], at(95), at(99))
+    }
+}
 
 /// Thread-shared metrics for the job service.
 #[derive(Debug, Default)]
@@ -53,7 +81,29 @@ pub struct Metrics {
     /// from different layers at the same wavefront level sharing one
     /// fill group (a subset of `fills_avoided`).
     pub inter_layer_fill_reuse: AtomicU64,
+    /// Bytes of intermediate activations resident in model arenas
+    /// *right now* (a live gauge, unlike the
+    /// `intermediate_bytes_resident` high-water mark). Returns to
+    /// zero whenever no model is mid-execution — the chaos harness's
+    /// arena-leak invariant.
+    pub intermediate_bytes_now: AtomicU64,
+    /// Submits refused by admission control (session quota or the
+    /// global high-water gate) — nothing was enqueued.
+    pub admission_rejected: AtomicU64,
+    /// Handles evicted to relieve overload (oldest-session-first).
+    pub jobs_shed: AtomicU64,
+    /// `wait`/`drain` calls whose per-session deadline cap expired
+    /// before the handle resolved.
+    pub deadline_misses: AtomicU64,
+    /// Connections reaped by the idle read deadline (slow-loris /
+    /// half-open clients holding a server thread).
+    pub idle_reaped: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
+    /// Per-session aggregation, keyed by session id. Entries are
+    /// removed when the session closes cleanly with nothing recorded,
+    /// but otherwise persist for the server's lifetime so `stats`
+    /// after a disconnect still shows what a tenant did.
+    sessions: Mutex<BTreeMap<u64, SessionStats>>,
 }
 
 impl Metrics {
@@ -69,6 +119,69 @@ impl Metrics {
             .lock()
             .unwrap()
             .push(wall.as_micros() as u64);
+    }
+
+    /// Record a redeemed result's wall latency against its session.
+    pub fn record_session_latency(&self, session: u64, wall: Duration) {
+        self.sessions
+            .lock()
+            .unwrap()
+            .entry(session)
+            .or_default()
+            .latencies_us
+            .push(wall.as_micros() as u64);
+    }
+
+    /// Record accepted submissions against a session.
+    pub fn record_session_submitted(&self, session: u64, jobs: u64) {
+        self.sessions
+            .lock()
+            .unwrap()
+            .entry(session)
+            .or_default()
+            .jobs_submitted += jobs;
+    }
+
+    /// Record an admission refusal against the offending session.
+    pub fn record_admission_rejected(&self, session: u64) {
+        self.admission_rejected.fetch_add(1, Ordering::Relaxed);
+        self.sessions
+            .lock()
+            .unwrap()
+            .entry(session)
+            .or_default()
+            .admission_rejected += 1;
+    }
+
+    /// Record `count` handles shed from a session.
+    pub fn record_shed(&self, session: u64, count: u64) {
+        self.jobs_shed.fetch_add(count, Ordering::Relaxed);
+        self.sessions
+            .lock()
+            .unwrap()
+            .entry(session)
+            .or_default()
+            .shed += count;
+    }
+
+    /// Record a deadline-capped wait that expired unresolved.
+    pub fn record_deadline_miss(&self, session: u64) {
+        self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        self.sessions
+            .lock()
+            .unwrap()
+            .entry(session)
+            .or_default()
+            .deadline_misses += 1;
+    }
+
+    /// Read one session's p99 latency (tests and the starvation bound).
+    pub fn session_p99_us(&self, session: u64) -> u64 {
+        self.sessions
+            .lock()
+            .unwrap()
+            .get(&session)
+            .map_or(0, |s| s.percentiles().2)
     }
 
     /// (p50, p95, max) wall latency in microseconds.
@@ -208,7 +321,42 @@ impl Metrics {
             ("latency_p50_us", Json::uint(p50)),
             ("latency_p95_us", Json::uint(p95)),
             ("latency_max_us", Json::uint(max)),
+            (
+                "intermediate_bytes_now",
+                load(&self.intermediate_bytes_now),
+            ),
+            ("admission_rejected", load(&self.admission_rejected)),
+            ("jobs_shed", load(&self.jobs_shed)),
+            ("deadline_misses", load(&self.deadline_misses)),
+            ("idle_reaped", load(&self.idle_reaped)),
+            ("sessions", self.sessions_json()),
         ])
+    }
+
+    /// The per-session breakdown: an object keyed by decimal session
+    /// id, each value carrying that tenant's p50/p95/p99 latency and
+    /// its QoS counters.
+    fn sessions_json(&self) -> Json {
+        let sessions = self.sessions.lock().unwrap();
+        Json::object(sessions.iter().map(|(id, s)| {
+            let (p50, p95, p99) = s.percentiles();
+            (
+                id.to_string(),
+                Json::object([
+                    ("jobs_submitted", Json::uint(s.jobs_submitted)),
+                    (
+                        "jobs_completed",
+                        Json::uint(s.latencies_us.len() as u64),
+                    ),
+                    ("admission_rejected", Json::uint(s.admission_rejected)),
+                    ("shed", Json::uint(s.shed)),
+                    ("deadline_misses", Json::uint(s.deadline_misses)),
+                    ("latency_p50_us", Json::uint(p50)),
+                    ("latency_p95_us", Json::uint(p95)),
+                    ("latency_p99_us", Json::uint(p99)),
+                ]),
+            )
+        }))
     }
 
     pub fn summary(&self) -> String {
@@ -371,6 +519,66 @@ mod tests {
         );
         assert!(m.summary().contains("8 inter-layer"));
         assert!(m.summary().contains("38 layers"));
+    }
+
+    /// The QoS counters and the per-session breakdown reach the
+    /// snapshot — keyed by decimal session id, with per-tenant
+    /// percentiles independent of the global ones.
+    #[test]
+    fn session_stats_reach_the_snapshot() {
+        let m = Metrics::new();
+        m.record_session_submitted(3, 5);
+        for us in [100, 200, 300, 400] {
+            m.record_session_latency(3, Duration::from_micros(us));
+        }
+        m.record_session_latency(9, Duration::from_micros(7000));
+        m.record_admission_rejected(9);
+        m.record_shed(9, 4);
+        m.record_deadline_miss(3);
+        m.idle_reaped.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.session_p99_us(3), 400);
+        assert_eq!(m.session_p99_us(42), 0);
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("admission_rejected").unwrap().as_i64(), Some(1));
+        assert_eq!(snap.get("jobs_shed").unwrap().as_i64(), Some(4));
+        assert_eq!(snap.get("deadline_misses").unwrap().as_i64(), Some(1));
+        assert_eq!(snap.get("idle_reaped").unwrap().as_i64(), Some(1));
+        let sessions = snap.get("sessions").unwrap();
+        let s3 = sessions.get("3").unwrap();
+        assert_eq!(s3.get("jobs_submitted").unwrap().as_i64(), Some(5));
+        assert_eq!(s3.get("jobs_completed").unwrap().as_i64(), Some(4));
+        assert_eq!(s3.get("latency_p99_us").unwrap().as_i64(), Some(400));
+        assert_eq!(s3.get("deadline_misses").unwrap().as_i64(), Some(1));
+        let s9 = sessions.get("9").unwrap();
+        assert_eq!(s9.get("shed").unwrap().as_i64(), Some(4));
+        assert_eq!(s9.get("admission_rejected").unwrap().as_i64(), Some(1));
+        // The snapshot still round-trips through the parser.
+        let parsed =
+            crate::util::json::Json::parse(&snap.to_string()).unwrap();
+        assert_eq!(parsed, snap);
+    }
+
+    /// `intermediate_bytes_now` is a gauge: it rises with residency
+    /// and must return to zero when arenas empty.
+    #[test]
+    fn intermediate_bytes_now_is_a_gauge() {
+        let m = Metrics::new();
+        m.intermediate_bytes_now.fetch_add(4096, Ordering::Relaxed);
+        assert_eq!(
+            m.snapshot_json()
+                .get("intermediate_bytes_now")
+                .unwrap()
+                .as_i64(),
+            Some(4096)
+        );
+        m.intermediate_bytes_now.fetch_sub(4096, Ordering::Relaxed);
+        assert_eq!(
+            m.snapshot_json()
+                .get("intermediate_bytes_now")
+                .unwrap()
+                .as_i64(),
+            Some(0)
+        );
     }
 
     #[test]

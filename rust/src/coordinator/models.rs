@@ -83,7 +83,8 @@ struct ModelRun {
 }
 
 impl ModelRun {
-    /// Record a produced tensor and update the residency high-water.
+    /// Record a produced tensor and update the residency high-water
+    /// and the live gauge.
     fn store_tensor(&mut self, t: usize, v: TensorValue, metrics: &Metrics) {
         debug_assert!(self.tensors[t].is_none(), "tensor produced twice");
         if t != self.model.output_tensor() {
@@ -91,6 +92,9 @@ impl ModelRun {
             metrics
                 .intermediate_bytes_resident
                 .fetch_max(self.resident_bytes as u64, Ordering::Relaxed);
+            metrics
+                .intermediate_bytes_now
+                .fetch_add(v.bytes() as u64, Ordering::Relaxed);
         }
         self.tensors[t] = Some(v);
     }
@@ -99,11 +103,35 @@ impl ModelRun {
     /// Tensor 0 is the caller's input and is never freed (the model
     /// tracker verifies against it), and the output tensor keeps the
     /// client's extra use until [`ModelTable`] takes it at finish.
-    fn consume(&mut self, t: usize) {
+    fn consume(&mut self, t: usize, metrics: &Metrics) {
         self.uses[t] -= 1;
         if self.uses[t] == 0 && t >= 1 {
             if let Some(v) = self.tensors[t].take() {
                 self.resident_bytes -= v.bytes();
+                metrics
+                    .intermediate_bytes_now
+                    .fetch_sub(v.bytes() as u64, Ordering::Relaxed);
+                if let TensorValue::I8(m) = v {
+                    self.arena.release_i8(m.data);
+                }
+            }
+        }
+    }
+
+    /// Free every still-resident intermediate (ids >= 1, output
+    /// excluded) ahead of the run's retirement: arena leases return
+    /// immediately instead of at the last layer report.
+    fn free_intermediates(&mut self, metrics: &Metrics) {
+        let out_t = self.model.output_tensor();
+        for ti in 1..self.tensors.len() {
+            if ti == out_t {
+                continue;
+            }
+            if let Some(v) = self.tensors[ti].take() {
+                self.resident_bytes -= v.bytes();
+                metrics
+                    .intermediate_bytes_now
+                    .fetch_sub(v.bytes() as u64, Ordering::Relaxed);
                 if let TensorValue::I8(m) = v {
                     self.arena.release_i8(m.data);
                 }
@@ -165,7 +193,7 @@ impl ModelRun {
                         _ => ActOperand::Dense(m.clone()),
                     };
                     tracker.bind_activation(act);
-                    self.consume(t);
+                    self.consume(t, metrics);
                 } else {
                     let out_t = li + 1;
                     if self.tensors[out_t].is_some() {
@@ -177,7 +205,7 @@ impl ModelRun {
                     }
                     let out = self.eval_glue(li);
                     for &ti in &inputs {
-                        self.consume(ti);
+                        self.consume(ti, metrics);
                     }
                     self.store_tensor(out_t, out, metrics);
                     metrics.layers_completed.fetch_add(1, Ordering::Relaxed);
@@ -514,7 +542,9 @@ impl ModelTable {
             // A sibling layer already failed the model; this report
             // only settles the books.
             if run.reports_left == 0 {
-                t.models.remove(&mid);
+                if let Some(mut run) = t.models.remove(&mid) {
+                    run.free_intermediates(metrics);
+                }
             }
             return LayerDone::Progress(Vec::new());
         }
@@ -543,7 +573,11 @@ impl ModelTable {
     /// fails the whole model: its handle resolves `Failed` now, every
     /// sibling tracker is poisoned (released units skip their work),
     /// and still-gated units are flushed so their reports can settle.
-    pub(crate) fn on_layer_failed(&self, id: JobId) -> LayerFailed {
+    pub(crate) fn on_layer_failed(
+        &self,
+        id: JobId,
+        metrics: &Metrics,
+    ) -> LayerFailed {
         let mut t = self.inner.lock().unwrap();
         let Some((mid, _li)) = t.layer_of.remove(&id.0) else {
             return LayerFailed::NotModel;
@@ -560,9 +594,12 @@ impl ModelTable {
                 lt.mark_failed();
             }
             release.extend(run.gated.drain(..).map(|g| g.unit));
+            run.free_intermediates(metrics);
         }
         if run.reports_left == 0 {
-            t.models.remove(&mid);
+            if let Some(mut run) = t.models.remove(&mid) {
+                run.free_intermediates(metrics);
+            }
         }
         if first {
             LayerFailed::ModelFailed {
@@ -572,6 +609,40 @@ impl ModelTable {
         } else {
             LayerFailed::Swallowed(release)
         }
+    }
+
+    /// Abandon whole model runs mid-flight — the owner disconnected
+    /// or was shed, so nobody will ever redeem these handles. The
+    /// first-failure machinery runs without a failing layer: sibling
+    /// trackers are poisoned (released units skip their work, so
+    /// every in-flight report still settles), gated units flush, and
+    /// resident intermediates free their arena leases *now* rather
+    /// than when the last report lands. Non-model ids are ignored.
+    /// Returns the flushed units for the caller to push.
+    pub(crate) fn abandon(
+        &self,
+        ids: &[JobId],
+        metrics: &Metrics,
+    ) -> Vec<WorkUnit> {
+        let mut t = self.inner.lock().unwrap();
+        let mut release = Vec::new();
+        for id in ids {
+            let Some(run) = t.models.get_mut(&id.0) else {
+                continue;
+            };
+            if !run.failed {
+                run.failed = true;
+                for lt in run.trackers.iter().flatten() {
+                    lt.mark_failed();
+                }
+                release.extend(run.gated.drain(..).map(|g| g.unit));
+            }
+            run.free_intermediates(metrics);
+            if run.reports_left == 0 {
+                t.models.remove(&id.0);
+            }
+        }
+        release
     }
 
     /// Assemble the model-level result: the widened output tensor, the

@@ -450,7 +450,7 @@ impl Service {
                                 }
                             },
                             Completion::Failed => {
-                                match models.on_layer_failed(id) {
+                                match models.on_layer_failed(id, &metrics) {
                                     LayerFailed::NotModel => {
                                         metrics
                                             .jobs_failed
@@ -827,6 +827,18 @@ impl Service {
     /// retirement loop leaks nothing).
     pub fn drain(&self, timeout: Duration) -> Drained {
         self.completion.drain(timeout)
+    }
+
+    /// Abandon jobs whose owner is gone — disconnected mid-model or
+    /// shed by admission control. Model runs poison their layer
+    /// trackers and free resident arena intermediates immediately;
+    /// their flushed units re-enter the pool so every in-flight
+    /// report still settles. Non-model ids are no-ops here (the
+    /// completion table owns their retirement).
+    pub fn abandon_jobs(&self, ids: &[JobId]) {
+        for u in self.models.abandon(ids, &self.metrics) {
+            self.pool.push(u);
+        }
     }
 
     /// Jobs submitted but not yet retired.

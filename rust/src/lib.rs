@@ -33,10 +33,15 @@
 //!
 //! A third correctness axis rides on top of bit-identity: the [`lint`]
 //! module statically verifies every engine's *control schedule* against
-//! a UG579-style legality rule set before it ever ticks on silicon.
+//! a UG579-style legality rule set before it ever ticks on silicon —
+//! and the [`chaos`] module dynamically hardens the serving layer, by
+//! replaying seeded fault campaigns (malformed frames, disconnects,
+//! submit storms, privilege probes) against a live server and auditing
+//! that nothing leaks and compliant clients still get golden bits.
 
 #![forbid(unsafe_code)]
 
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod cost;

@@ -22,11 +22,18 @@
 //!     --preset transformer-block  # whole-network DAG, one handle
 //! dsp48-systolic client stats --addr HOST:PORT
 //! dsp48-systolic client shutdown --addr HOST:PORT   # drain + stop
+//! dsp48-systolic client shutdown --addr HOST:PORT --token SECRET
+//! dsp48-systolic serve --listen 127.0.0.1:7878 --max-inflight 8 \
+//!     --max-outstanding 64 --token SECRET --no-loopback-operator \
+//!     --idle-timeout-ms 30000   # QoS-hardened wire server
 //! dsp48-systolic sweep --min 6 --max 14       # tinyTPU-style size sweep
 //! dsp48-systolic waveform --fig 3|5|6         # paper waveform traces
 //! dsp48-systolic lint                         # control-legality audit
 //! dsp48-systolic lint --format json --out LINT_report.json
 //! dsp48-systolic lint --engine ws-dsp-fetch   # one engine only
+//! dsp48-systolic chaos                        # fault-injection campaigns
+//! dsp48-systolic chaos --engine all --seed-sweep 3 --format json \
+//!     --out CHAOS_report.json                 # the CI smoke artifact
 //! dsp48-systolic artifacts                    # list AOT registry
 //! ```
 //!
@@ -56,11 +63,28 @@
 //! SNN engines (or with `--spikes true` on the client) the preset
 //! builds its spiking variant.
 //!
+//! `serve --listen` takes the QoS/overload policy flags
+//! (`--max-inflight`, `--max-queued-bytes`, `--deadline-ms`,
+//! `--max-outstanding`, `--token`, `--no-loopback-operator`,
+//! `--idle-timeout-ms`): per-session budgets answer over-quota submits
+//! with a typed `overloaded` error (plus a retry hint), the global
+//! high-water gate sheds the oldest session first, and `Drain` /
+//! `Shutdown` become operator verbs (loopback peers and token-bearing
+//! sessions). `client --token` authenticates against such a server.
+//!
+//! `chaos` replays seeded fault campaigns (malformed frames,
+//! disconnects, submit storms, privilege probes) against a live
+//! server of each engine kind and audits the leak invariants — the
+//! dynamic counterpart of the static `lint` gate, with the same exit
+//! contract (0 clean, 1 violations, 2 usage).
+//!
 //! Unknown `--flags` are usage errors (exit 2), never silently
 //! ignored — and so are workload-exclusive flags under the wrong
 //! workload (`--kernel` without `--workload conv`, `--m` with it,
-//! `--density` without `--workload sparse`) and generator flags under
-//! `serve --listen` (the clients own the workload there).
+//! `--density` without `--workload sparse`), generator flags under
+//! `serve --listen` (the clients own the workload there), and QoS
+//! policy flags without `--listen` (the in-process generator loop is
+//! always privileged).
 
 use dsp48_systolic::coordinator::service::{run_gemm_tiled, EngineKind};
 use dsp48_systolic::coordinator::{Job, JobState, Service, ServiceConfig};
@@ -70,7 +94,10 @@ use dsp48_systolic::engines::snn::{SnnConfig, SnnEngine, SnnVariant};
 use dsp48_systolic::engines::ws::{WsConfig, WsEngine, WsVariant};
 use dsp48_systolic::engines::Engine;
 use dsp48_systolic::model::ModelPreset;
-use dsp48_systolic::proto::{LocalSession, Session, TcpServer, TcpSession};
+use dsp48_systolic::proto::{
+    LocalSession, QosConfig, Session, SessionBudget, TcpServer, TcpSession,
+};
+use dsp48_systolic::util::json::Json;
 use dsp48_systolic::runtime::ArtifactRegistry;
 use dsp48_systolic::util::rng::XorShift;
 use dsp48_systolic::workload::conv::ConvShape;
@@ -81,7 +108,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 const USAGE: &str = "usage: dsp48-systolic \
-     <report|simulate|serve|client|sweep|waveform|lint|artifacts> [--flag value ...]";
+     <report|simulate|serve|client|sweep|waveform|lint|chaos|artifacts> [--flag value ...]";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -103,6 +130,7 @@ fn main() {
         "sweep" => cmd_sweep(&flags),
         "waveform" => cmd_waveform(&flags),
         "lint" => cmd_lint(&flags),
+        "chaos" => cmd_chaos(&flags),
         "artifacts" => cmd_artifacts(&flags),
         _ => unreachable!("validate_flags rejects unknown commands"),
     };
@@ -161,6 +189,13 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "verify",
             "listen",
             "port-file",
+            "max-inflight",
+            "max-queued-bytes",
+            "deadline-ms",
+            "max-outstanding",
+            "token",
+            "no-loopback-operator",
+            "idle-timeout-ms",
         ],
         "client" => &[
             "addr",
@@ -170,6 +205,7 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "seed",
             "timeout-s",
             "spikes",
+            "token",
             "m",
             "k",
             "n",
@@ -187,6 +223,7 @@ fn allowed_flags(cmd: &str) -> Option<&'static [&'static str]> {
         "sweep" => &["min", "max"],
         "waveform" => &["fig"],
         "lint" => &["format", "engine", "out"],
+        "chaos" => &["format", "engine", "out", "seed", "seed-sweep"],
         "artifacts" => &[],
         _ => return None,
     })
@@ -285,6 +322,17 @@ const MODEL_ONLY: [&str; 1] = ["preset"];
 /// own the workload there) — one source, so the exclusive lists
 /// cannot drift.
 const GENERATOR_EXTRA: [&str; 3] = ["jobs", "batch", "workload"];
+/// QoS/overload policy flags, exclusive to `serve --listen` (the
+/// in-process generator loop is always privileged and unbudgeted).
+const QOS_ONLY: [&str; 7] = [
+    "max-inflight",
+    "max-queued-bytes",
+    "deadline-ms",
+    "max-outstanding",
+    "token",
+    "no-loopback-operator",
+    "idle-timeout-ms",
+];
 /// Client flags that only `client submit` consumes; with the workload
 /// shape lists these are usage errors under `client stats|shutdown`.
 const SUBMIT_ONLY: [&str; 5] =
@@ -825,6 +873,10 @@ fn cmd_simulate_conv(cfg: ServiceConfig, shape: ConvShape, seed: u64) -> i32 {
             eprintln!("conv job failed (engine error — shape vs geometry?)");
             1
         }
+        JobState::Shed => {
+            eprintln!("conv job shed (local sessions are never shed — bug?)");
+            1
+        }
         JobState::Pending => {
             eprintln!("simulate failed: conv job timed out");
             1
@@ -913,6 +965,10 @@ fn cmd_simulate_sparse(
             eprintln!("sparse job failed (engine error or bad operands)");
             1
         }
+        JobState::Shed => {
+            eprintln!("sparse job shed (local sessions are never shed — bug?)");
+            1
+        }
         JobState::Pending => {
             eprintln!("simulate failed: sparse job timed out");
             1
@@ -996,6 +1052,10 @@ fn cmd_simulate_model(
             eprintln!("model job failed (graph rejected or engine error)");
             1
         }
+        JobState::Shed => {
+            eprintln!("model job shed (local sessions are never shed — bug?)");
+            1
+        }
         JobState::Pending => {
             eprintln!("simulate failed: model job timed out");
             1
@@ -1058,7 +1118,23 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             eprintln!("{USAGE}");
             return 2;
         }
-        return cmd_serve_listen(cfg, addr, flags.get("port-file"));
+        return cmd_serve_listen(cfg, addr, flags.get("port-file"), qos_from_flags(flags));
+    }
+    // QoS policy flags only govern the wire server; under the
+    // in-process generator loop they would be silently meaningless.
+    let offending: Vec<String> = QOS_ONLY
+        .iter()
+        .filter(|f| flags.contains_key(**f))
+        .map(|f| format!("--{f}"))
+        .collect();
+    if !offending.is_empty() {
+        eprintln!(
+            "flag(s) {} only apply to `serve --listen` (the in-process \
+             generator loop is always privileged)",
+            offending.join(", ")
+        );
+        eprintln!("{USAGE}");
+        return 2;
     }
     let jobs = flag_usize(flags, "jobs", 16);
     let batch = flag_usize(flags, "batch", 1).max(1);
@@ -1174,7 +1250,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                     verify_failures += 1;
                 }
             }
-            JobState::Failed => {
+            JobState::Failed | JobState::Shed => {
                 pending.pop_front();
                 failed += 1;
             }
@@ -1220,14 +1296,44 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     i32::from(failures > 0)
 }
 
+/// The wire server's QoS policy from the `serve --listen` flags:
+/// everything defaults to the permissive [`QosConfig::default`]
+/// (unlimited budgets, loopback operators, no idle deadline), so a
+/// bare `serve --listen` behaves exactly as it always has.
+fn qos_from_flags(flags: &HashMap<String, String>) -> QosConfig {
+    QosConfig {
+        budget: SessionBudget {
+            max_inflight: flag_usize(flags, "max-inflight", 0),
+            max_queued_bytes: flag_usize(flags, "max-queued-bytes", 0)
+                as u64,
+            deadline_ms: flags
+                .get("deadline-ms")
+                .and_then(|v| v.parse().ok()),
+        },
+        max_outstanding: flag_usize(flags, "max-outstanding", 0),
+        operator_token: flags.get("token").cloned(),
+        loopback_operator: flags
+            .get("no-loopback-operator")
+            .map(String::as_str)
+            != Some("true"),
+        idle_timeout: flags
+            .get("idle-timeout-ms")
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_millis),
+        ..QosConfig::default()
+    }
+}
+
 /// `serve --listen ADDR`: expose the service over the wire protocol
-/// and block until a client's `Shutdown` request (which drains pending
-/// jobs first — no Ctrl-C needed for a clean exit). `--port-file PATH`
-/// writes the bound address (useful with port 0) for scripts.
+/// and block until an operator's `Shutdown` request (which drains
+/// pending jobs first — no Ctrl-C needed for a clean exit).
+/// `--port-file PATH` writes the bound address (useful with port 0)
+/// for scripts.
 fn cmd_serve_listen(
     cfg: ServiceConfig,
     addr: &str,
     port_file: Option<&String>,
+    qos: QosConfig,
 ) -> i32 {
     if let Some(path) = port_file {
         // Drop any stale file from a previous run before binding, so
@@ -1236,7 +1342,36 @@ fn cmd_serve_listen(
         let _ = std::fs::remove_file(path);
     }
     let svc = Service::start(cfg.clone());
-    let server = match TcpServer::bind(addr, svc) {
+    let qos_line = format!(
+        "inflight {}, queued-bytes {}, deadline {}, outstanding {}, \
+         operators: {}{}, idle timeout {}",
+        if qos.budget.max_inflight == 0 {
+            "unlimited".to_string()
+        } else {
+            qos.budget.max_inflight.to_string()
+        },
+        if qos.budget.max_queued_bytes == 0 {
+            "unlimited".to_string()
+        } else {
+            qos.budget.max_queued_bytes.to_string()
+        },
+        match qos.budget.deadline_ms {
+            Some(ms) => format!("{ms}ms"),
+            None => "none".to_string(),
+        },
+        if qos.max_outstanding == 0 {
+            "unlimited".to_string()
+        } else {
+            qos.max_outstanding.to_string()
+        },
+        if qos.loopback_operator { "loopback" } else { "token-only" },
+        if qos.operator_token.is_some() { "+token" } else { "" },
+        match qos.idle_timeout {
+            Some(t) => format!("{}ms", t.as_millis()),
+            None => "none".to_string(),
+        },
+    );
+    let server = match TcpServer::bind_with(addr, svc, qos) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("serve: cannot bind {addr}: {e}");
@@ -1257,6 +1392,7 @@ fn cmd_serve_listen(
         cfg.shard_width,
         if cfg.verify { "on" } else { "off" }
     );
+    println!("qos       : {qos_line}");
     if let Some(path) = port_file {
         if let Err(e) = std::fs::write(path, local.to_string()) {
             eprintln!("serve: cannot write port file {path}: {e}");
@@ -1324,11 +1460,21 @@ fn cmd_client(args: &[String], flags: &HashMap<String, String>) -> i32 {
             return 1;
         }
     };
+    // `--token` authenticates this session as an operator up front —
+    // required for shutdown against a server whose QoS policy scopes
+    // the operator verbs (`--no-loopback-operator` / remote peers).
+    if let Some(token) = flags.get("token") {
+        if let Err(e) = session.auth(token) {
+            eprintln!("client: operator auth failed: {e}");
+            return 1;
+        }
+    }
     match action {
         "submit" => client_submit(&mut session, flags),
         "stats" => match session.stats() {
             Ok(snapshot) => {
                 println!("{}", snapshot.to_pretty());
+                print!("{}", render_session_stats(&snapshot));
                 0
             }
             Err(e) => {
@@ -1349,6 +1495,45 @@ fn cmd_client(args: &[String], flags: &HashMap<String, String>) -> i32 {
         },
         _ => unreachable!("action validated above"),
     }
+}
+
+/// Render the snapshot's per-session QoS breakdown as a table —
+/// `client stats` appends this below the raw JSON so the latency
+/// percentiles and shed/rejection counters are readable at a glance.
+fn render_session_stats(snapshot: &Json) -> String {
+    use std::fmt::Write as _;
+    let Some(Json::Object(sessions)) = snapshot.get("sessions") else {
+        return String::new();
+    };
+    if sessions.is_empty() {
+        return String::new();
+    }
+    let g = |v: &Json, key: &str| {
+        v.get(key).and_then(Json::as_i64).unwrap_or_default()
+    };
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<8} {:>6} {:>6} {:>8} {:>5} {:>7} {:>8} {:>8} {:>8}",
+        "session", "subm", "done", "rejected", "shed", "dl-miss",
+        "p50(us)", "p95(us)", "p99(us)"
+    );
+    for (id, s) in sessions {
+        let _ = writeln!(
+            out,
+            "{:<8} {:>6} {:>6} {:>8} {:>5} {:>7} {:>8} {:>8} {:>8}",
+            id,
+            g(s, "jobs_submitted"),
+            g(s, "jobs_completed"),
+            g(s, "admission_rejected"),
+            g(s, "shed"),
+            g(s, "deadline_misses"),
+            g(s, "latency_p50_us"),
+            g(s, "latency_p95_us"),
+            g(s, "latency_p99_us"),
+        );
+    }
+    out
 }
 
 fn client_submit(
@@ -1422,6 +1607,13 @@ fn client_submit(
                 Ok(JobState::Failed) => {
                     failures += 1;
                     eprintln!("job {id}: FAILED (engine error or bad shape)");
+                }
+                Ok(JobState::Shed) => {
+                    failures += 1;
+                    eprintln!(
+                        "job {id}: SHED (dropped by overload control — \
+                         resubmit when the server quiesces)"
+                    );
                 }
                 Ok(JobState::Pending) => {
                     failures += 1;
@@ -1531,6 +1723,81 @@ fn cmd_lint(flags: &HashMap<String, String>) -> i32 {
     }
     print!("{rendered}");
     i32::from(report.violations() > 0)
+}
+
+/// `chaos`: boot a live QoS-hardened server per engine kind (or one,
+/// with `--engine`), replay a seeded fault campaign against it through
+/// real sockets, and audit the leak/bit-identity invariants. `--seed N`
+/// runs one campaign per kind; `--seed-sweep N` runs seeds `1..=N`.
+/// Exit 0 when every invariant holds, 1 on violations (or harness
+/// failure), 2 on usage errors — the dynamic twin of the `lint` gate.
+fn cmd_chaos(flags: &HashMap<String, String>) -> i32 {
+    use dsp48_systolic::chaos::{run_campaigns, sweep_json};
+
+    let format = flags.get("format").map(String::as_str).unwrap_or("text");
+    if !matches!(format, "text" | "json") {
+        eprintln!("chaos: unknown --format `{format}` (have text, json)");
+        return 2;
+    }
+    let kinds: Vec<EngineKind> = match flags.get("engine").map(String::as_str)
+    {
+        None | Some("all") => EngineKind::all().to_vec(),
+        Some(label) => {
+            let Some(kind) = EngineKind::parse(label) else {
+                eprintln!("chaos: unknown engine `{label}`");
+                return 2;
+            };
+            vec![kind]
+        }
+    };
+    let seeds: Vec<u64> = match flags.get("seed-sweep") {
+        Some(n) => {
+            let Ok(n) = n.parse::<u64>() else {
+                eprintln!("chaos: invalid --seed-sweep `{n}` (want a count)");
+                return 2;
+            };
+            if n == 0 {
+                eprintln!("chaos: --seed-sweep must be at least 1");
+                return 2;
+            }
+            (1..=n).collect()
+        }
+        None => vec![flag_usize(flags, "seed", 1) as u64],
+    };
+    let reports = match run_campaigns(&kinds, &seeds) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("chaos: harness failed: {e}");
+            return 1;
+        }
+    };
+    let violations: usize = reports
+        .iter()
+        .map(dsp48_systolic::chaos::ChaosReport::violations)
+        .sum();
+    let rendered = match format {
+        "json" => format!("{}\n", sweep_json(&reports).to_pretty()),
+        _ => {
+            let mut out = String::new();
+            for r in &reports {
+                out.push_str(&r.render_text());
+            }
+            out.push_str(&format!(
+                "total: {} campaign(s), {} violation(s)\n",
+                reports.len(),
+                violations
+            ));
+            out
+        }
+    };
+    if let Some(path) = flags.get("out") {
+        if let Err(e) = std::fs::write(path, &rendered) {
+            eprintln!("chaos: cannot write {path}: {e}");
+            return 1;
+        }
+    }
+    print!("{rendered}");
+    i32::from(violations > 0)
 }
 
 fn cmd_artifacts(_flags: &HashMap<String, String>) -> i32 {
@@ -1652,6 +1919,22 @@ mod tests {
             vec!["lint"],
             vec!["lint", "--format", "json", "--out", "/tmp/lint.json"],
             vec!["lint", "--engine", "ws-dsp-fetch"],
+            vec!["chaos"],
+            vec!["chaos", "--engine", "all", "--seed", "7"],
+            vec![
+                "chaos", "--seed-sweep", "3", "--format", "json", "--out",
+                "/tmp/chaos.json",
+            ],
+            vec![
+                "serve", "--listen", "127.0.0.1:0", "--max-inflight", "8",
+                "--max-queued-bytes", "1048576", "--deadline-ms", "5000",
+                "--max-outstanding", "64", "--token", "secret",
+                "--no-loopback-operator", "--idle-timeout-ms", "30000",
+            ],
+            vec![
+                "client", "shutdown", "--addr", "127.0.0.1:1", "--token",
+                "secret",
+            ],
             vec!["artifacts"],
         ] {
             let (cmd, flags) = parse_args(&args(&argv));
@@ -1891,6 +2174,60 @@ mod tests {
         assert!(validate_flags("client", &flags).is_err());
         let (_, flags) = parse_args(&args(&["simulate", "--listen", "x"]));
         assert!(validate_flags("simulate", &flags).is_err());
+    }
+
+    /// The QoS flags resolve into a `QosConfig`; with none given the
+    /// policy is the permissive default (bare `serve --listen`
+    /// behaves exactly as before the QoS layer existed).
+    #[test]
+    fn qos_flags_resolve_into_policy() {
+        let (_, flags) = parse_args(&args(&["serve", "--listen", "x"]));
+        let qos = qos_from_flags(&flags);
+        assert_eq!(qos.budget.max_inflight, 0);
+        assert!(qos.loopback_operator);
+        assert!(qos.operator_token.is_none());
+        assert!(qos.idle_timeout.is_none());
+
+        let (_, flags) = parse_args(&args(&[
+            "serve", "--listen", "x", "--max-inflight", "8",
+            "--max-queued-bytes", "1024", "--deadline-ms", "500",
+            "--max-outstanding", "64", "--token", "secret",
+            "--no-loopback-operator", "--idle-timeout-ms", "30000",
+        ]));
+        let qos = qos_from_flags(&flags);
+        assert_eq!(qos.budget.max_inflight, 8);
+        assert_eq!(qos.budget.max_queued_bytes, 1024);
+        assert_eq!(qos.budget.deadline_ms, Some(500));
+        assert_eq!(qos.max_outstanding, 64);
+        assert_eq!(qos.operator_token.as_deref(), Some("secret"));
+        assert!(!qos.loopback_operator);
+        assert_eq!(qos.idle_timeout, Some(Duration::from_millis(30000)));
+    }
+
+    /// The per-session stats table renders the snapshot's `sessions`
+    /// object (and stays silent when there is none).
+    #[test]
+    fn session_stats_render_as_a_table() {
+        assert_eq!(render_session_stats(&Json::object(vec![])), "");
+        let snap = Json::object(vec![(
+            "sessions",
+            Json::object(vec![(
+                "3",
+                Json::object(vec![
+                    ("jobs_submitted", Json::uint(5)),
+                    ("jobs_completed", Json::uint(4)),
+                    ("admission_rejected", Json::uint(1)),
+                    ("shed", Json::uint(0)),
+                    ("deadline_misses", Json::uint(0)),
+                    ("latency_p50_us", Json::uint(120)),
+                    ("latency_p95_us", Json::uint(300)),
+                    ("latency_p99_us", Json::uint(400)),
+                ]),
+            )]),
+        )]);
+        let table = render_session_stats(&snap);
+        assert!(table.contains("p99(us)"), "{table}");
+        assert!(table.contains("400"), "{table}");
     }
 
     #[test]

@@ -88,24 +88,38 @@ pub enum Request {
     Wait { id: u64, timeout_ms: Option<u64> },
     /// Retire everything outstanding (or until `timeout_ms`); answered
     /// with [`Response::Drained`]. **Global**: takes every session's
-    /// unclaimed completions, not just this one's — an operator verb.
-    /// Multi-client deployments should redeem per handle (`Wait`);
-    /// per-session drain scoping is a roadmap follow-on.
+    /// unclaimed completions, not just this one's — a *privileged*
+    /// operator verb (loopback peers or token-authenticated sessions);
+    /// unprivileged sessions get a `forbidden` error and should use
+    /// [`Request::DrainMine`] instead.
     Drain { timeout_ms: Option<u64> },
+    /// Retire only this session's outstanding handles (or until
+    /// `timeout_ms`); answered with [`Response::Drained`]. The
+    /// unprivileged counterpart of [`Request::Drain`] — other
+    /// sessions' handles are never touched.
+    DrainMine { timeout_ms: Option<u64> },
+    /// Present an operator token. On a match the session becomes
+    /// privileged (may issue `Drain` / `Shutdown`); answered with
+    /// [`Response::Ok`], or a `forbidden` error on a mismatch.
+    Auth { token: String },
     /// Metrics snapshot; answered with [`Response::Metrics`].
     Stats,
     /// Graceful shutdown: the server drains every pending job
     /// (unbounded wait), answers with the final [`Response::Metrics`]
-    /// snapshot, and stops its listener.
+    /// snapshot, and stops its listener. Privileged like `Drain`.
     Shutdown,
 }
 
-/// Pending/failed — the two handle states that carry no result (a
-/// completed redemption answers [`Response::Result`] instead).
+/// Handle states that carry no result (a completed redemption answers
+/// [`Response::Result`] instead). `Shed` is terminal like `Failed`,
+/// but distinguishes admission-control eviction (the job was dropped
+/// by the server to protect other sessions) from a job that ran and
+/// failed on its own merits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PollState {
     Pending,
     Failed,
+    Shed,
 }
 
 /// Machine-readable error class on the wire.
@@ -120,6 +134,13 @@ pub enum ErrorCode {
     BadRequest,
     /// The service has already shut down.
     Unavailable,
+    /// Admission control refused the work: a quota or the global
+    /// high-water gate would be exceeded. The error carries a
+    /// retry-after hint; nothing was enqueued.
+    Overloaded,
+    /// The verb is privileged and this session is not (plain TCP
+    /// session issuing `Drain`/`Shutdown`, or a bad `Auth` token).
+    Forbidden,
     /// An error code this client build does not know (newer server).
     Unknown,
 }
@@ -131,6 +152,8 @@ impl ErrorCode {
             ErrorCode::BadJson => "bad-json",
             ErrorCode::BadRequest => "bad-request",
             ErrorCode::Unavailable => "unavailable",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Forbidden => "forbidden",
             ErrorCode::Unknown => "unknown",
         }
     }
@@ -141,6 +164,8 @@ impl ErrorCode {
             "bad-json" => ErrorCode::BadJson,
             "bad-request" => ErrorCode::BadRequest,
             "unavailable" => ErrorCode::Unavailable,
+            "overloaded" => ErrorCode::Overloaded,
+            "forbidden" => ErrorCode::Forbidden,
             _ => ErrorCode::Unknown,
         }
     }
@@ -152,6 +177,9 @@ impl ErrorCode {
 pub struct WireError {
     pub code: ErrorCode,
     pub message: String,
+    /// Backoff hint, only meaningful on [`ErrorCode::Overloaded`]:
+    /// the server suggests retrying after this many milliseconds.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl WireError {
@@ -159,6 +187,7 @@ impl WireError {
         WireError {
             code,
             message: message.into(),
+            retry_after_ms: None,
         }
     }
 
@@ -167,6 +196,23 @@ impl WireError {
             ErrorCode::Unavailable,
             "service has shut down; no further requests are served",
         )
+    }
+
+    /// Admission refused; retry after the hinted backoff.
+    pub fn overloaded(
+        message: impl Into<String>,
+        retry_after_ms: u64,
+    ) -> WireError {
+        WireError {
+            code: ErrorCode::Overloaded,
+            message: message.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    /// Privileged verb from an unprivileged session.
+    pub fn forbidden(message: impl Into<String>) -> WireError {
+        WireError::new(ErrorCode::Forbidden, message)
     }
 
     /// Classify a decode failure for the wire.
@@ -203,6 +249,8 @@ pub enum Response {
     },
     /// A metrics snapshot (`Stats`, and the `Shutdown` ack).
     Metrics(Json),
+    /// Bare acknowledgement (the `Auth` success ack).
+    Ok,
     /// The request could not be served; the connection stays open.
     Error(WireError),
 }
@@ -217,6 +265,7 @@ impl Response {
             Response::Result(_) => "result",
             Response::Drained { .. } => "drained",
             Response::Metrics(_) => "metrics",
+            Response::Ok => "ok",
             Response::Error(_) => "error",
         }
     }
@@ -537,6 +586,16 @@ impl Request {
                 "drain",
                 vec![("timeout_ms", opt_u64_to_json(*timeout_ms))],
             ),
+            Request::DrainMine { timeout_ms } => envelope(
+                "req",
+                "drain-mine",
+                vec![("timeout_ms", opt_u64_to_json(*timeout_ms))],
+            ),
+            Request::Auth { token } => envelope(
+                "req",
+                "auth",
+                vec![("token", Json::from(token.as_str()))],
+            ),
             Request::Stats => envelope("req", "stats", vec![]),
             Request::Shutdown => envelope("req", "shutdown", vec![]),
         }
@@ -595,6 +654,16 @@ impl Request {
             "drain" => Request::Drain {
                 timeout_ms: opt_u64_field(v, "timeout_ms")?,
             },
+            "drain-mine" => Request::DrainMine {
+                timeout_ms: opt_u64_field(v, "timeout_ms")?,
+            },
+            "auth" => Request::Auth {
+                token: v
+                    .get("token")
+                    .and_then(Json::as_str)
+                    .ok_or(ProtoError::Schema { what: "token" })?
+                    .to_string(),
+            },
             "stats" => Request::Stats,
             "shutdown" => Request::Shutdown,
             other => {
@@ -629,6 +698,7 @@ impl Response {
                     Json::from(match state {
                         PollState::Pending => "pending",
                         PollState::Failed => "failed",
+                        PollState::Shed => "shed",
                     }),
                 )],
             ),
@@ -654,12 +724,14 @@ impl Response {
                 "metrics",
                 vec![("metrics", snapshot.clone())],
             ),
+            Response::Ok => envelope("resp", "ok", vec![]),
             Response::Error(e) => envelope(
                 "resp",
                 "error",
                 vec![
                     ("code", Json::from(e.code.as_str())),
                     ("message", Json::from(e.message.as_str())),
+                    ("retry_after_ms", opt_u64_to_json(e.retry_after_ms)),
                 ],
             ),
         }
@@ -692,6 +764,7 @@ impl Response {
                 Response::State(match state {
                     "pending" => PollState::Pending,
                     "failed" => PollState::Failed,
+                    "shed" => PollState::Shed,
                     other => {
                         return Err(ProtoError::UnknownTag {
                             kind: "state",
@@ -719,6 +792,7 @@ impl Response {
                     .ok_or(ProtoError::Schema { what: "metrics" })?
                     .clone(),
             ),
+            "ok" => Response::Ok,
             "error" => {
                 let code = v
                     .get("code")
@@ -728,10 +802,9 @@ impl Response {
                     .get("message")
                     .and_then(Json::as_str)
                     .ok_or(ProtoError::Schema { what: "message" })?;
-                Response::Error(WireError::new(
-                    ErrorCode::parse(code),
-                    message,
-                ))
+                let mut e = WireError::new(ErrorCode::parse(code), message);
+                e.retry_after_ms = opt_u64_field(v, "retry_after_ms")?;
+                Response::Error(e)
             }
             other => {
                 return Err(ProtoError::UnknownTag {
@@ -1415,6 +1488,54 @@ mod tests {
                 assert_eq!(shape.groups, 1);
             }
             other => panic!("expected submit-conv, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn qos_schema_round_trips() {
+        // The QoS additions: session-scoped drain, token auth, the
+        // shed terminal state, and the overloaded error with its
+        // retry-after hint.
+        for req in [
+            Request::DrainMine {
+                timeout_ms: Some(50),
+            },
+            Request::DrainMine { timeout_ms: None },
+            Request::Auth {
+                token: "hunter2".to_string(),
+            },
+        ] {
+            assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        }
+        for resp in [
+            Response::Ok,
+            Response::State(PollState::Shed),
+            Response::Error(WireError::overloaded("session quota", 25)),
+            Response::Error(WireError::forbidden("not an operator")),
+        ] {
+            assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn retry_after_hint_survives_the_wire() {
+        let resp = Response::Error(WireError::overloaded("busy", 40));
+        match Response::decode(&resp.encode()).unwrap() {
+            Response::Error(e) => {
+                assert_eq!(e.code, ErrorCode::Overloaded);
+                assert_eq!(e.retry_after_ms, Some(40));
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        // Errors without the hint decode to None (and old servers
+        // that omit the field entirely parse fine).
+        let doc = Json::parse(
+            r#"{"v":1,"resp":"error","code":"overloaded","message":"m"}"#,
+        )
+        .unwrap();
+        match Response::from_json(&doc).unwrap() {
+            Response::Error(e) => assert_eq!(e.retry_after_ms, None),
+            other => panic!("expected error, got {other:?}"),
         }
     }
 

@@ -24,12 +24,17 @@
 //! Nothing a client sends can panic the server or tear down another
 //! client's session.
 //!
-//! Scoping caveat: handles are session-tracked only for cleanup — a
-//! disconnecting client's unredeemed results are forgotten (dropped,
-//! not leaked) — but `Drain` and `Shutdown` retire **globally**
-//! across sessions. They are operator verbs; ordinary clients should
-//! redeem their own handles with `Poll`/`Wait`. Per-session drain
-//! scoping and fairness are roadmap follow-ons.
+//! Authority and overload: every connection is a tracked session with
+//! a [`session::SessionBudget`] (inflight and queued-byte quotas,
+//! deadline caps) enforced at admission — over-quota submits answer a
+//! typed `overloaded` error with a retry-after hint, and the global
+//! high-water gate sheds the oldest session's work deterministically
+//! before refusing a newcomer. `Drain` and `Shutdown` are **operator
+//! verbs** (loopback peers by default, or any session presenting the
+//! operator token via `Auth`); plain sessions retire their own
+//! handles with `Poll`/`Wait`/`DrainMine`. A disconnecting client's
+//! unredeemed results are forgotten and its mid-model work abandons
+//! its arena residency — dropped, not leaked.
 
 pub mod frame;
 pub mod message;
@@ -41,5 +46,8 @@ pub use message::{
     ErrorCode, PollState, ProtoError, Request, Response, WireError,
     PROTO_VERSION,
 };
-pub use session::{Frontend, LocalSession, Session, SessionError};
+pub use session::{
+    Frontend, LocalSession, QosConfig, Session, SessionBudget,
+    SessionError, SessionState,
+};
 pub use tcp::{TcpServer, TcpSession};

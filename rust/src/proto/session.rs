@@ -7,6 +7,16 @@
 //! dispatcher, so `simulate`, the `serve` generator loop, and a TCP
 //! client ([`super::tcp::TcpSession`]) are all "just clients": the
 //! only difference is whether [`Request`]s cross a socket first.
+//!
+//! The dispatcher is also the QoS boundary. Every transport opens a
+//! [`SessionState`] per client; [`Frontend::handle`] tracks which
+//! handles each session owns, enforces its [`SessionBudget`] (inflight
+//! and queued-byte quotas, deadline caps), guards the privileged verbs
+//! (`Drain`/`Shutdown`), and — when the global high-water gate trips —
+//! sheds load deterministically oldest-session-first, answering the
+//! offending submit with a typed `overloaded` error carrying a
+//! retry-after hint instead of accepting work the coordinator cannot
+//! retire.
 
 use crate::coordinator::completion::{CompletionTable, JobHandle};
 use crate::coordinator::{
@@ -17,8 +27,149 @@ use crate::proto::message::{
     PollState, ProtoError, Request, Response, WireError,
 };
 use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Per-session admission quotas. Zero / `None` means unlimited — the
+/// default budget changes nothing for existing single-tenant callers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionBudget {
+    /// Max unretired handles one session may hold (0 = unlimited).
+    /// The N+1th submit over the quota is refused `overloaded`, with
+    /// nothing enqueued.
+    pub max_inflight: usize,
+    /// Max operand bytes one session may have queued across its
+    /// unretired jobs (0 = unlimited), measured by
+    /// [`Job::cost_bytes`].
+    pub max_queued_bytes: u64,
+    /// Deadline cap on any blocking `Wait`/`Drain`/`DrainMine` a
+    /// session issues: longer (or forever) timeouts are clamped to
+    /// this many milliseconds, and an expiry under the cap counts as
+    /// a deadline miss in [`Metrics`].
+    pub deadline_ms: Option<u64>,
+}
+
+/// Server-side QoS policy: the per-session budget, the global
+/// admission gate, and who may speak the operator verbs. The default
+/// is fully permissive (no quotas, loopback peers privileged), so
+/// every pre-QoS caller and test behaves exactly as before.
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// Budget applied to every session.
+    pub budget: SessionBudget,
+    /// Global high-water gate: max unretired handles across all
+    /// sessions (0 = unlimited) — submitted but not yet redeemed, so
+    /// it bounds queued work *and* parked results. When a submit
+    /// would cross it, the oldest other session is shed first; if
+    /// none exists, the submitter is refused `overloaded`.
+    pub max_outstanding: usize,
+    /// Operator token: a session that presents it via `Auth` becomes
+    /// privileged. `None` = token auth disabled.
+    pub operator_token: Option<String>,
+    /// Whether loopback peers are privileged implicitly (on by
+    /// default — the operator's own machine, and the pre-QoS
+    /// behavior of every local test and smoke script).
+    pub loopback_operator: bool,
+    /// Idle read deadline on server connections: a client that sends
+    /// nothing for this long is reaped (the slow-loris fix). `None` =
+    /// wait forever.
+    pub idle_timeout: Option<Duration>,
+    /// The retry-after hint attached to `overloaded` errors.
+    pub retry_after_ms: u64,
+}
+
+impl Default for QosConfig {
+    fn default() -> QosConfig {
+        QosConfig {
+            budget: SessionBudget::default(),
+            max_outstanding: 0,
+            operator_token: None,
+            loopback_operator: true,
+            idle_timeout: None,
+            retry_after_ms: 50,
+        }
+    }
+}
+
+/// Per-session ledger: which handles the session owns and what they
+/// cost. Handles leave the ledger when redeemed terminally (`Done` /
+/// `Failed` / `Shed`), drained, shed, or forgotten at disconnect.
+#[derive(Debug, Default)]
+struct Ledger {
+    /// Owned handle id → operand cost in bytes.
+    jobs: HashMap<u64, u64>,
+    /// Sum of `jobs` values (kept incrementally; the quota check is
+    /// on the submit hot path).
+    queued_bytes: u64,
+}
+
+/// One transport client's identity and accounting, shared between the
+/// connection (which redeems and submits through it) and the
+/// [`Frontend`] registry (which sheds and reaps through it).
+#[derive(Debug)]
+pub struct SessionState {
+    id: u64,
+    privileged: AtomicBool,
+    ledger: Mutex<Ledger>,
+}
+
+impl SessionState {
+    /// This session's id (the key under `sessions` in the stats
+    /// snapshot).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Whether this session may speak `Drain`/`Shutdown`.
+    pub fn privileged(&self) -> bool {
+        self.privileged.load(Ordering::Relaxed)
+    }
+
+    fn charge(&self, ids: &[(u64, u64)]) {
+        let mut g = self.ledger.lock().unwrap();
+        for &(id, cost) in ids {
+            if g.jobs.insert(id, cost).is_none() {
+                g.queued_bytes += cost;
+            }
+        }
+    }
+
+    fn release(&self, id: u64) {
+        let mut g = self.ledger.lock().unwrap();
+        if let Some(cost) = g.jobs.remove(&id) {
+            g.queued_bytes -= cost;
+        }
+    }
+
+    fn release_many(&self, ids: &[u64]) {
+        let mut g = self.ledger.lock().unwrap();
+        for id in ids {
+            if let Some(cost) = g.jobs.remove(id) {
+                g.queued_bytes -= cost;
+            }
+        }
+    }
+
+    /// Take every owned handle (shed / disconnect): the ledger empties
+    /// and the ids come back for the completion-table side.
+    fn evict_all(&self) -> Vec<u64> {
+        let mut g = self.ledger.lock().unwrap();
+        g.queued_bytes = 0;
+        g.jobs.drain().map(|(id, _)| id).collect()
+    }
+
+    /// Unretired handles this session owns.
+    pub fn inflight(&self) -> usize {
+        self.ledger.lock().unwrap().jobs.len()
+    }
+
+    /// Operand bytes queued across this session's unretired jobs.
+    pub fn queued_bytes(&self) -> u64 {
+        self.ledger.lock().unwrap().queued_bytes
+    }
+}
 
 /// Why a session interaction failed. [`LocalSession`] never produces
 /// transport errors; remote sessions surface frame/IO/decoding
@@ -167,6 +318,33 @@ pub trait Session {
         }
     }
 
+    /// Retire only this session's outstanding handles (until done or
+    /// `timeout`): the unprivileged counterpart of [`Session::drain`].
+    fn drain_mine(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> Result<(Vec<JobResult>, Vec<u64>), SessionError> {
+        match self.request(Request::DrainMine {
+            timeout_ms: timeout_ms(timeout),
+        })? {
+            Response::Drained { completed, failed } => Ok((completed, failed)),
+            Response::Error(e) => Err(SessionError::Remote(e)),
+            other => Err(SessionError::Unexpected(other.tag())),
+        }
+    }
+
+    /// Present the operator token; on success this session becomes
+    /// privileged (may speak `Drain`/`Shutdown`).
+    fn auth(&mut self, token: &str) -> Result<(), SessionError> {
+        match self.request(Request::Auth {
+            token: token.to_string(),
+        })? {
+            Response::Ok => Ok(()),
+            Response::Error(e) => Err(SessionError::Remote(e)),
+            other => Err(SessionError::Unexpected(other.tag())),
+        }
+    }
+
     /// The service's metrics snapshot.
     fn stats(&mut self) -> Result<Json, SessionError> {
         match self.request(Request::Stats)? {
@@ -192,6 +370,7 @@ fn state_of(resp: Response) -> Result<JobState, SessionError> {
         Response::Result(r) => Ok(JobState::Done(r)),
         Response::State(PollState::Pending) => Ok(JobState::Pending),
         Response::State(PollState::Failed) => Ok(JobState::Failed),
+        Response::State(PollState::Shed) => Ok(JobState::Shed),
         Response::Error(e) => Err(SessionError::Remote(e)),
         other => Err(SessionError::Unexpected(other.tag())),
     }
@@ -202,26 +381,82 @@ fn state_of(resp: Response) -> Result<JobState, SessionError> {
 /// service; redemptions go straight to the shared
 /// [`CompletionTable`], so one client blocked in `Wait` never stalls
 /// another client's `Submit`.
+///
+/// The frontend is also the admission controller: every request
+/// arrives attributed to a [`SessionState`], quotas are enforced
+/// before anything is enqueued, and the global high-water gate sheds
+/// the oldest other session's work before refusing a submitter.
 pub struct Frontend {
     svc: Mutex<Option<Service>>,
     completion: Arc<CompletionTable>,
     metrics: Arc<Metrics>,
+    qos: QosConfig,
+    /// Registry of live sessions keyed by id. Ids are allocated in
+    /// arrival order, so the first entry is always the oldest live
+    /// session — the deterministic shed victim.
+    sessions: Mutex<BTreeMap<u64, Arc<SessionState>>>,
+    next_session: AtomicU64,
 }
 
 impl Frontend {
     pub fn new(svc: Service) -> Frontend {
+        Frontend::with_qos(svc, QosConfig::default())
+    }
+
+    /// Wrap a service under an explicit QoS policy.
+    pub fn with_qos(svc: Service, qos: QosConfig) -> Frontend {
         let completion = svc.completion_table();
         let metrics = Arc::clone(&svc.metrics);
         Frontend {
             svc: Mutex::new(Some(svc)),
             completion,
             metrics,
+            qos,
+            sessions: Mutex::new(BTreeMap::new()),
+            next_session: AtomicU64::new(1),
         }
     }
 
     /// The service's shared metrics (valid before and after shutdown).
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
+    }
+
+    /// The QoS policy this frontend enforces.
+    pub fn qos(&self) -> &QosConfig {
+        &self.qos
+    }
+
+    /// Register a new session. `privileged` grants the operator verbs
+    /// (`Drain`/`Shutdown`) and exempts the session from quotas;
+    /// transports pass it for loopback peers (when
+    /// [`QosConfig::loopback_operator`] allows) and it can be earned
+    /// later via `Auth`.
+    pub fn open_session(&self, privileged: bool) -> Arc<SessionState> {
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        let sess = Arc::new(SessionState {
+            id,
+            privileged: AtomicBool::new(privileged),
+            ledger: Mutex::new(Ledger::default()),
+        });
+        self.sessions.lock().unwrap().insert(id, Arc::clone(&sess));
+        sess
+    }
+
+    /// Retire a disconnected session: mid-model work abandons its
+    /// arena residency, every unredeemed handle is forgotten, and the
+    /// session leaves the registry. Safe to call after shutdown.
+    pub fn close_session(&self, sess: &Arc<SessionState>) {
+        self.sessions.lock().unwrap().remove(&sess.id);
+        let ids: Vec<JobId> =
+            sess.evict_all().into_iter().map(JobId).collect();
+        if ids.is_empty() {
+            return;
+        }
+        if let Some(svc) = self.svc.lock().unwrap().as_ref() {
+            svc.abandon_jobs(&ids);
+        }
+        self.completion.forget(&ids);
     }
 
     /// Abandon handles a disconnected session never redeemed: their
@@ -259,12 +494,50 @@ impl Frontend {
         }
     }
 
-    /// Handle one request. The bool asks the transport to close this
-    /// session after replying (set only by `Shutdown`).
-    pub fn handle(&self, req: Request) -> (Response, bool) {
+    /// Clamp a requested blocking timeout to the session deadline cap
+    /// (plain sessions only). Returns the effective timeout and
+    /// whether the cap was the binding bound — when it was and the
+    /// wait still expires, that is a deadline miss.
+    fn capped_timeout(
+        &self,
+        sess: &SessionState,
+        timeout_ms: Option<u64>,
+    ) -> (Duration, bool) {
+        let requested = Self::to_timeout(timeout_ms);
+        match self.qos.budget.deadline_ms {
+            Some(ms)
+                if !sess.privileged()
+                    && requested > Duration::from_millis(ms) =>
+            {
+                (Duration::from_millis(ms), true)
+            }
+            _ => (requested, false),
+        }
+    }
+
+    /// Retire a redeemed handle from the session ledger and record
+    /// its latency; terminal states free quota, `Pending` does not.
+    fn settle(&self, sess: &SessionState, id: u64, state: &JobState) {
+        match state {
+            JobState::Done(r) => {
+                sess.release(id);
+                self.metrics.record_session_latency(sess.id, r.wall);
+            }
+            JobState::Failed | JobState::Shed => sess.release(id),
+            JobState::Pending => {}
+        }
+    }
+
+    /// Handle one request from `sess`. The bool asks the transport to
+    /// close this session after replying (set only by `Shutdown`).
+    pub fn handle(
+        &self,
+        req: Request,
+        sess: &Arc<SessionState>,
+    ) -> (Response, bool) {
         match req {
             Request::SubmitGemm { a, w } => {
-                self.submit_jobs(vec![Job::Gemm { a, w }], false)
+                self.submit_jobs(vec![Job::Gemm { a, w }], false, sess)
             }
             Request::SubmitConv {
                 input,
@@ -277,30 +550,63 @@ impl Frontend {
                     shape,
                 }],
                 false,
+                sess,
             ),
             // The declared density is advisory metadata; the service
             // derives real skip decisions from the operands themselves.
             Request::SubmitSparse { a, w, density: _ } => {
-                self.submit_jobs(vec![Job::SparseGemm { a, w }], false)
+                self.submit_jobs(vec![Job::SparseGemm { a, w }], false, sess)
             }
-            Request::SubmitModel { model, input } => {
-                self.submit_jobs(vec![Job::Model { model, input }], false)
+            Request::SubmitModel { model, input } => self.submit_jobs(
+                vec![Job::Model { model, input }],
+                false,
+                sess,
+            ),
+            Request::SubmitBatch { jobs } => {
+                self.submit_jobs(jobs, true, sess)
             }
-            Request::SubmitBatch { jobs } => self.submit_jobs(jobs, true),
-            Request::Poll { id } => (
-                response_of(self.completion.poll(JobHandle { id: JobId(id) })),
-                false,
-            ),
-            Request::Wait { id, timeout_ms } => (
-                response_of(self.completion.wait(
-                    JobHandle { id: JobId(id) },
-                    Self::to_timeout(timeout_ms),
-                )),
-                false,
-            ),
+            Request::Poll { id } => {
+                let state = self.completion.poll(JobHandle { id: JobId(id) });
+                self.settle(sess, id, &state);
+                (response_of(state), false)
+            }
+            Request::Wait { id, timeout_ms } => {
+                let (timeout, capped) = self.capped_timeout(sess, timeout_ms);
+                let state = self
+                    .completion
+                    .wait(JobHandle { id: JobId(id) }, timeout);
+                if capped && matches!(state, JobState::Pending) {
+                    self.metrics.record_deadline_miss(sess.id);
+                }
+                self.settle(sess, id, &state);
+                (response_of(state), false)
+            }
             Request::Drain { timeout_ms } => {
+                if !sess.privileged() {
+                    return (
+                        Response::Error(WireError::forbidden(
+                            "drain is an operator verb; plain sessions \
+                             retire their own work with drain-mine",
+                        )),
+                        false,
+                    );
+                }
                 let drained =
                     self.completion.drain(Self::to_timeout(timeout_ms));
+                // A global drain retires handles of every session.
+                let mut ids: Vec<u64> =
+                    drained.completed.iter().map(|r| r.id.0).collect();
+                ids.extend(drained.failed.iter().map(|id| id.0));
+                let live: Vec<Arc<SessionState>> = self
+                    .sessions
+                    .lock()
+                    .unwrap()
+                    .values()
+                    .cloned()
+                    .collect();
+                for s in live {
+                    s.release_many(&ids);
+                }
                 (
                     Response::Drained {
                         completed: drained.completed,
@@ -313,19 +619,229 @@ impl Frontend {
                     false,
                 )
             }
-            Request::Stats => {
-                (Response::Metrics(self.metrics.snapshot_json()), false)
+            Request::DrainMine { timeout_ms } => {
+                let (timeout, capped) = self.capped_timeout(sess, timeout_ms);
+                let mine: Vec<JobId> = {
+                    let g = sess.ledger.lock().unwrap();
+                    g.jobs.keys().map(|&id| JobId(id)).collect()
+                };
+                let drained = self.completion.drain_ids(&mine, timeout);
+                let retired =
+                    drained.completed.len() + drained.failed.len();
+                if capped && retired < mine.len() {
+                    self.metrics.record_deadline_miss(sess.id);
+                }
+                let mut ids: Vec<u64> = Vec::with_capacity(retired);
+                for r in &drained.completed {
+                    ids.push(r.id.0);
+                    self.metrics.record_session_latency(sess.id, r.wall);
+                }
+                ids.extend(drained.failed.iter().map(|id| id.0));
+                sess.release_many(&ids);
+                (
+                    Response::Drained {
+                        completed: drained.completed,
+                        failed: drained
+                            .failed
+                            .iter()
+                            .map(|id| id.0)
+                            .collect(),
+                    },
+                    false,
+                )
             }
-            Request::Shutdown => self.shutdown(),
+            Request::Auth { token } => (self.auth(sess, &token), false),
+            Request::Stats => {
+                (Response::Metrics(self.stats_snapshot()), false)
+            }
+            Request::Shutdown => {
+                if !sess.privileged() {
+                    return (
+                        Response::Error(WireError::forbidden(
+                            "shutdown is an operator verb",
+                        )),
+                        false,
+                    );
+                }
+                self.shutdown()
+            }
         }
     }
 
-    fn submit_jobs(&self, jobs: Vec<Job>, many: bool) -> (Response, bool) {
+    /// Per-session quota check (privileged sessions are exempt):
+    /// refuse with a typed `overloaded` error before anything is
+    /// enqueued, so the N+1th over-quota submit costs the coordinator
+    /// nothing.
+    fn admission_error(
+        &self,
+        sess: &SessionState,
+        incoming: usize,
+        cost: u64,
+    ) -> Option<WireError> {
+        if sess.privileged() {
+            return None;
+        }
+        let b = &self.qos.budget;
+        if b.max_inflight > 0 && sess.inflight() + incoming > b.max_inflight
+        {
+            return Some(WireError::overloaded(
+                format!(
+                    "session inflight quota exceeded ({} held, {} max)",
+                    sess.inflight(),
+                    b.max_inflight
+                ),
+                self.qos.retry_after_ms,
+            ));
+        }
+        if b.max_queued_bytes > 0
+            && sess.queued_bytes() + cost > b.max_queued_bytes
+        {
+            return Some(WireError::overloaded(
+                format!(
+                    "session queued-byte quota exceeded \
+                     ({} queued + {} new, {} max)",
+                    sess.queued_bytes(),
+                    cost,
+                    b.max_queued_bytes
+                ),
+                self.qos.retry_after_ms,
+            ));
+        }
+        None
+    }
+
+    /// Enforce the global high-water gate while holding the service
+    /// lock: sheds oldest other sessions until the incoming jobs fit.
+    /// Returns false when the gate still cannot admit them.
+    fn clear_backlog(
+        &self,
+        svc: &Service,
+        incoming: usize,
+        sess: &SessionState,
+    ) -> bool {
+        let max = self.qos.max_outstanding;
+        if max == 0 {
+            return true;
+        }
+        // Unretired handles across every session's ledger: the
+        // deterministic load measure (worker progress does not race
+        // the admission decision, so fault campaigns replay exactly).
+        let outstanding = || -> usize {
+            let g = self.sessions.lock().unwrap();
+            g.values().map(|s| s.inflight()).sum()
+        };
+        loop {
+            if outstanding() + incoming <= max {
+                return true;
+            }
+            let victim = {
+                let g = self.sessions.lock().unwrap();
+                g.values()
+                    .find(|s| s.id != sess.id && s.inflight() > 0)
+                    .cloned()
+            };
+            let Some(victim) = victim else { return false };
+            self.shed_session(svc, &victim);
+        }
+    }
+
+    /// Force-retire everything a session owns: mid-model jobs abandon
+    /// their arena residency, parked results drop, and the victim's
+    /// next redemption of any of these handles answers `Shed`.
+    fn shed_session(&self, svc: &Service, victim: &SessionState) {
+        let ids: Vec<JobId> =
+            victim.evict_all().into_iter().map(JobId).collect();
+        if ids.is_empty() {
+            return;
+        }
+        svc.abandon_jobs(&ids);
+        let n = self.completion.shed(&ids);
+        self.metrics.record_shed(victim.id, n as u64);
+    }
+
+    fn auth(&self, sess: &SessionState, token: &str) -> Response {
+        match &self.qos.operator_token {
+            Some(expect) if expect == token => {
+                sess.privileged.store(true, Ordering::Relaxed);
+                Response::Ok
+            }
+            Some(_) => Response::Error(WireError::forbidden(
+                "operator token mismatch",
+            )),
+            None => Response::Error(WireError::forbidden(
+                "token auth is not enabled on this server",
+            )),
+        }
+    }
+
+    /// The metrics snapshot plus live completion-table telemetry —
+    /// the leak counters the chaos harness asserts on after a fault
+    /// campaign.
+    fn stats_snapshot(&self) -> Json {
+        let mut snap = self.metrics.snapshot_json();
+        if let Json::Object(map) = &mut snap {
+            map.insert(
+                "pending_handles".to_string(),
+                Json::uint(self.completion.live_pending() as u64),
+            );
+            map.insert(
+                "shed_unobserved".to_string(),
+                Json::uint(self.completion.shed_count() as u64),
+            );
+            let sessions = self.sessions.lock().unwrap();
+            map.insert(
+                "open_sessions".to_string(),
+                Json::uint(sessions.len() as u64),
+            );
+            map.insert(
+                "queued_bytes_now".to_string(),
+                Json::uint(
+                    sessions.values().map(|s| s.queued_bytes()).sum(),
+                ),
+            );
+        }
+        snap
+    }
+
+    fn submit_jobs(
+        &self,
+        jobs: Vec<Job>,
+        many: bool,
+        sess: &Arc<SessionState>,
+    ) -> (Response, bool) {
+        let costs: Vec<u64> = jobs.iter().map(Job::cost_bytes).collect();
+        let total_cost: u64 = costs.iter().sum();
+        if let Some(err) =
+            self.admission_error(sess, jobs.len(), total_cost)
+        {
+            self.metrics.record_admission_rejected(sess.id);
+            return (Response::Error(err), false);
+        }
         let mut guard = self.svc.lock().unwrap();
         let Some(svc) = guard.as_mut() else {
             return (Response::Error(WireError::unavailable()), false);
         };
+        if !self.clear_backlog(svc, jobs.len(), sess) {
+            self.metrics.record_admission_rejected(sess.id);
+            return (
+                Response::Error(WireError::overloaded(
+                    "coordinator at high water and no other session \
+                     to shed; retry later",
+                    self.qos.retry_after_ms,
+                )),
+                false,
+            );
+        }
         let handles = svc.submit_batch(Batch::from(jobs));
+        drop(guard);
+        let charges: Vec<(u64, u64)> = handles
+            .iter()
+            .zip(&costs)
+            .map(|(h, &c)| (h.id.0, c))
+            .collect();
+        sess.charge(&charges);
+        self.metrics
+            .record_session_submitted(sess.id, handles.len() as u64);
         let resp = if many {
             Response::Handles {
                 ids: handles.iter().map(|h| h.id.0).collect(),
@@ -353,7 +869,7 @@ impl Frontend {
             None => (Response::Error(WireError::unavailable()), true),
             Some(svc) => {
                 let _ = svc.drain(Duration::MAX);
-                let snapshot = self.metrics.snapshot_json();
+                let snapshot = self.stats_snapshot();
                 svc.shutdown();
                 (Response::Metrics(snapshot), true)
             }
@@ -366,14 +882,17 @@ fn response_of(state: JobState) -> Response {
         JobState::Done(r) => Response::Result(r),
         JobState::Pending => Response::State(PollState::Pending),
         JobState::Failed => Response::State(PollState::Failed),
+        JobState::Shed => Response::State(PollState::Shed),
     }
 }
 
 /// In-process session: wraps a [`Service`] behind the same protocol a
 /// socket client speaks, with zero serialization. `simulate` and the
-/// `serve` generator loop run on this.
+/// `serve` generator loop run on this. The in-process caller owns the
+/// service, so its session is privileged.
 pub struct LocalSession {
     frontend: Frontend,
+    sess: Arc<SessionState>,
 }
 
 impl LocalSession {
@@ -384,9 +903,9 @@ impl LocalSession {
 
     /// Wrap an already-running service.
     pub fn from_service(svc: Service) -> LocalSession {
-        LocalSession {
-            frontend: Frontend::new(svc),
-        }
+        let frontend = Frontend::new(svc);
+        let sess = frontend.open_session(true);
+        LocalSession { frontend, sess }
     }
 
     /// The service's shared metrics.
@@ -397,7 +916,7 @@ impl LocalSession {
 
 impl Session for LocalSession {
     fn request(&mut self, req: Request) -> Result<Response, SessionError> {
-        let (resp, _close) = self.frontend.handle(req);
+        let (resp, _close) = self.frontend.handle(req, &self.sess);
         Ok(resp)
     }
 }
@@ -594,5 +1113,269 @@ mod tests {
             final_metrics.get("jobs_failed").unwrap().as_i64(),
             Some(0)
         );
+    }
+
+    fn gemm_req(rng: &mut XorShift) -> Request {
+        let a = MatI8::random_bounded(rng, 2, 6, 63);
+        let w = MatI8::random(rng, 6, 4);
+        Request::SubmitGemm { a, w }
+    }
+
+    /// The N+1th submit over the inflight quota is refused with a
+    /// typed `overloaded` error (retry hint attached) and enqueues
+    /// nothing; retiring one handle frees exactly one slot.
+    #[test]
+    fn inflight_quota_is_exact() {
+        let qos = QosConfig {
+            budget: SessionBudget {
+                max_inflight: 3,
+                ..SessionBudget::default()
+            },
+            ..QosConfig::default()
+        };
+        let frontend =
+            Frontend::with_qos(Service::start(small_cfg()), qos);
+        let sess = frontend.open_session(false);
+        let mut rng = XorShift::new(7);
+        let mut ids = Vec::new();
+        for _ in 0..3 {
+            match frontend.handle(gemm_req(&mut rng), &sess).0 {
+                Response::Handle { id } => ids.push(id),
+                other => panic!("expected handle, got {}", other.tag()),
+            }
+        }
+        match frontend.handle(gemm_req(&mut rng), &sess).0 {
+            Response::Error(e) => {
+                assert_eq!(e.code, ErrorCode::Overloaded);
+                assert!(e.retry_after_ms.is_some());
+            }
+            other => panic!("expected overloaded, got {}", other.tag()),
+        }
+        // Retire one; the freed slot admits the retry.
+        assert!(matches!(
+            frontend
+                .handle(
+                    Request::Wait {
+                        id: ids[0],
+                        timeout_ms: Some(60_000),
+                    },
+                    &sess,
+                )
+                .0,
+            Response::Result(_)
+        ));
+        assert!(matches!(
+            frontend.handle(gemm_req(&mut rng), &sess).0,
+            Response::Handle { .. }
+        ));
+        let snap = frontend.metrics().snapshot_json();
+        assert_eq!(
+            snap.get("admission_rejected").unwrap().as_i64(),
+            Some(1)
+        );
+        let op = frontend.open_session(true);
+        frontend.handle(Request::Shutdown, &op);
+    }
+
+    /// `Drain`/`Shutdown` answer `forbidden` to plain sessions; the
+    /// operator token earns the privilege mid-session via `Auth`.
+    #[test]
+    fn operator_verbs_are_scoped_and_earned_by_token() {
+        let qos = QosConfig {
+            operator_token: Some("sesame".to_string()),
+            ..QosConfig::default()
+        };
+        let frontend =
+            Frontend::with_qos(Service::start(small_cfg()), qos);
+        let sess = frontend.open_session(false);
+        for req in [
+            Request::Drain {
+                timeout_ms: Some(0),
+            },
+            Request::Shutdown,
+        ] {
+            match frontend.handle(req, &sess).0 {
+                Response::Error(e) => {
+                    assert_eq!(e.code, ErrorCode::Forbidden)
+                }
+                other => {
+                    panic!("expected forbidden, got {}", other.tag())
+                }
+            }
+        }
+        // Wrong token: still plain.
+        match frontend
+            .handle(
+                Request::Auth {
+                    token: "guess".to_string(),
+                },
+                &sess,
+            )
+            .0
+        {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::Forbidden),
+            other => panic!("expected forbidden, got {}", other.tag()),
+        }
+        // Right token: the same session may now shut the service down.
+        assert!(matches!(
+            frontend
+                .handle(
+                    Request::Auth {
+                        token: "sesame".to_string(),
+                    },
+                    &sess,
+                )
+                .0,
+            Response::Ok
+        ));
+        assert!(matches!(
+            frontend.handle(Request::Shutdown, &sess).0,
+            Response::Metrics(_)
+        ));
+    }
+
+    /// Crossing the global high-water gate sheds the oldest session
+    /// deterministically, admits the newcomer, and the victim's
+    /// redemptions answer typed `Shed` instead of hanging.
+    #[test]
+    fn high_water_gate_sheds_the_oldest_session_first() {
+        let qos = QosConfig {
+            max_outstanding: 4,
+            ..QosConfig::default()
+        };
+        let frontend =
+            Frontend::with_qos(Service::start(small_cfg()), qos);
+        let old = frontend.open_session(false);
+        let newer = frontend.open_session(false);
+        let mut rng = XorShift::new(31);
+        let mut old_ids = Vec::new();
+        for _ in 0..4 {
+            match frontend.handle(gemm_req(&mut rng), &old).0 {
+                Response::Handle { id } => old_ids.push(id),
+                other => panic!("expected handle, got {}", other.tag()),
+            }
+        }
+        // The newcomer's submit trips the gate: old is shed, the
+        // newcomer lands.
+        let id = match frontend.handle(gemm_req(&mut rng), &newer).0 {
+            Response::Handle { id } => id,
+            other => panic!("expected handle, got {}", other.tag()),
+        };
+        // The shed victim's waits resolve terminally — no hang.
+        for oid in old_ids {
+            assert!(matches!(
+                frontend
+                    .handle(
+                        Request::Wait {
+                            id: oid,
+                            timeout_ms: Some(60_000),
+                        },
+                        &old,
+                    )
+                    .0,
+                Response::State(PollState::Shed)
+            ));
+        }
+        // The compliant newcomer's job still completes and verifies.
+        match frontend
+            .handle(
+                Request::Wait {
+                    id,
+                    timeout_ms: Some(60_000),
+                },
+                &newer,
+            )
+            .0
+        {
+            Response::Result(r) => assert_eq!(r.verified, Some(true)),
+            other => panic!("expected result, got {}", other.tag()),
+        }
+        let snap = frontend.metrics().snapshot_json();
+        assert_eq!(snap.get("jobs_shed").unwrap().as_i64(), Some(4));
+        let op = frontend.open_session(true);
+        frontend.handle(Request::Shutdown, &op);
+    }
+
+    /// `DrainMine` retires only the caller's handles; another
+    /// session's results stay parked and redeemable.
+    #[test]
+    fn drain_mine_leaves_other_sessions_work_alone() {
+        let frontend = Frontend::with_qos(
+            Service::start(small_cfg()),
+            QosConfig::default(),
+        );
+        let alpha = frontend.open_session(false);
+        let beta = frontend.open_session(false);
+        let mut rng = XorShift::new(41);
+        for _ in 0..2 {
+            assert!(matches!(
+                frontend.handle(gemm_req(&mut rng), &alpha).0,
+                Response::Handle { .. }
+            ));
+        }
+        let beta_id = match frontend.handle(gemm_req(&mut rng), &beta).0 {
+            Response::Handle { id } => id,
+            other => panic!("expected handle, got {}", other.tag()),
+        };
+        match frontend
+            .handle(
+                Request::DrainMine {
+                    timeout_ms: Some(60_000),
+                },
+                &alpha,
+            )
+            .0
+        {
+            Response::Drained { completed, failed } => {
+                assert_eq!(completed.len(), 2);
+                assert!(failed.is_empty());
+            }
+            other => panic!("expected drained, got {}", other.tag()),
+        }
+        assert!(matches!(
+            frontend
+                .handle(
+                    Request::Wait {
+                        id: beta_id,
+                        timeout_ms: Some(60_000),
+                    },
+                    &beta,
+                )
+                .0,
+            Response::Result(_)
+        ));
+        let op = frontend.open_session(true);
+        frontend.handle(Request::Shutdown, &op);
+    }
+
+    /// Closing a session forgets its unredeemed handles: nothing
+    /// stays parked for an operator drain to find.
+    #[test]
+    fn close_session_reclaims_unredeemed_work() {
+        let frontend = Frontend::with_qos(
+            Service::start(small_cfg()),
+            QosConfig::default(),
+        );
+        let sess = frontend.open_session(false);
+        let mut rng = XorShift::new(53);
+        for _ in 0..3 {
+            assert!(matches!(
+                frontend.handle(gemm_req(&mut rng), &sess).0,
+                Response::Handle { .. }
+            ));
+        }
+        frontend.close_session(&sess);
+        let op = frontend.open_session(true);
+        match frontend
+            .handle(Request::Drain { timeout_ms: None }, &op)
+            .0
+        {
+            Response::Drained { completed, failed } => {
+                assert!(completed.is_empty());
+                assert!(failed.is_empty());
+            }
+            other => panic!("expected drained, got {}", other.tag()),
+        }
+        frontend.handle(Request::Shutdown, &op);
     }
 }

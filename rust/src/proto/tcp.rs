@@ -15,12 +15,11 @@
 
 use crate::coordinator::Service;
 use crate::proto::frame::{read_frame, write_frame, FrameError, MAX_FRAME_LEN};
-use crate::proto::message::{
-    ErrorCode, PollState, Request, Response, WireError,
+use crate::proto::message::{ErrorCode, Request, Response, WireError};
+use crate::proto::session::{
+    Frontend, QosConfig, Session, SessionError, SessionState,
 };
-use crate::proto::session::{Frontend, Session, SessionError};
 use crate::util::json::Json;
-use std::collections::HashSet;
 use std::net::{
     IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream,
 };
@@ -76,13 +75,24 @@ pub struct TcpServer {
 
 impl TcpServer {
     /// Bind `addr` (use port 0 for an OS-assigned port — read it back
-    /// with [`TcpServer::local_addr`]) and wrap the service. Workers
-    /// are already running; traffic flows once [`TcpServer::run`] is
-    /// called.
+    /// with [`TcpServer::local_addr`]) and wrap the service under the
+    /// default (fully permissive) QoS policy. Workers are already
+    /// running; traffic flows once [`TcpServer::run`] is called.
     pub fn bind(addr: &str, svc: Service) -> std::io::Result<TcpServer> {
+        TcpServer::bind_with(addr, svc, QosConfig::default())
+    }
+
+    /// Bind with an explicit QoS policy: per-session budgets, the
+    /// global admission gate, operator authority, and the idle read
+    /// deadline all come from `qos`.
+    pub fn bind_with(
+        addr: &str,
+        svc: Service,
+        qos: QosConfig,
+    ) -> std::io::Result<TcpServer> {
         Ok(TcpServer {
             listener: TcpListener::bind(addr)?,
-            frontend: Frontend::new(svc),
+            frontend: Frontend::with_qos(svc, qos),
         })
     }
 
@@ -144,61 +154,38 @@ impl TcpServer {
     }
 }
 
-/// One connection: run the request loop, then clean up — drop this
-/// connection's fd clone and forget every handle the session submitted
-/// but never redeemed, so a client that disconnects mid-flight cannot
-/// leak results into the completion table.
+/// One connection: open its session (loopback peers get the operator
+/// privilege when the QoS policy allows), run the request loop, then
+/// clean up — drop this connection's fd clone and close the session,
+/// which forgets every handle it never redeemed and abandons its
+/// mid-model work, so a client that disconnects mid-flight cannot
+/// leak results or arena residency.
 fn serve_connection(stream: TcpStream, conn_id: u64, shared: &ServerShared) {
-    let mut owned: HashSet<u64> = HashSet::new();
-    connection_loop(stream, shared, &mut owned);
+    let qos = shared.frontend.qos();
+    let privileged = qos.loopback_operator
+        && stream
+            .peer_addr()
+            .map(|p| p.ip().is_loopback())
+            .unwrap_or(false);
+    // The slow-loris fix: a peer that goes quiet (or trickles a frame
+    // out forever) trips the idle read deadline and is reaped instead
+    // of pinning this thread for the server's lifetime.
+    let _ = stream.set_read_timeout(qos.idle_timeout);
+    let sess = shared.frontend.open_session(privileged);
+    connection_loop(stream, shared, &sess);
     shared
         .conns
         .lock()
         .unwrap()
         .retain(|(id, _)| *id != conn_id);
-    shared.frontend.forget(owned);
-}
-
-/// Track handle ownership across one request/response exchange: ids
-/// this session was handed join `owned`; ids observably retired
-/// (Result / Failed / listed by a Drain) leave it.
-fn track_ownership(
-    owned: &mut HashSet<u64>,
-    asked: Option<u64>,
-    resp: &Response,
-) {
-    match resp {
-        Response::Handle { id } => {
-            owned.insert(*id);
-        }
-        Response::Handles { ids } => owned.extend(ids.iter().copied()),
-        Response::Result(r) => {
-            owned.remove(&r.id.0);
-        }
-        Response::State(PollState::Failed) => {
-            if let Some(id) = asked {
-                owned.remove(&id);
-            }
-        }
-        Response::Drained { completed, failed } => {
-            for r in completed {
-                owned.remove(&r.id.0);
-            }
-            for id in failed {
-                owned.remove(id);
-            }
-        }
-        Response::State(PollState::Pending)
-        | Response::Metrics(_)
-        | Response::Error(_) => {}
-    }
+    shared.frontend.close_session(&sess);
 }
 
 /// One connection's request loop.
 fn connection_loop(
     mut stream: TcpStream,
     shared: &ServerShared,
-    owned: &mut HashSet<u64>,
+    sess: &Arc<SessionState>,
 ) {
     loop {
         if shared.stop.load(Ordering::SeqCst) {
@@ -221,27 +208,31 @@ fn connection_loop(
                 }
                 continue;
             }
+            // The idle read deadline expired: reap this connection.
+            Err(FrameError::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                shared
+                    .frontend
+                    .metrics()
+                    .idle_reaped
+                    .fetch_add(1, Ordering::Relaxed);
+                return;
+            }
             // Mid-frame loss or socket error: this stream is beyond
             // recovery (no way to resynchronize), but only this
             // connection ends — the server keeps serving.
             Err(_) => return,
         };
-        let (resp, close, asked) = match Request::decode(&payload) {
-            Ok(req) => {
-                let asked = match &req {
-                    Request::Poll { id } | Request::Wait { id, .. } => {
-                        Some(*id)
-                    }
-                    _ => None,
-                };
-                let (resp, close) = shared.frontend.handle(req);
-                (resp, close, asked)
-            }
+        let (resp, close) = match Request::decode(&payload) {
+            Ok(req) => shared.frontend.handle(req, sess),
             // Bad JSON / schema / version / unknown tag: typed error,
             // connection stays open (framing is still in sync).
-            Err(e) => {
-                (Response::Error(WireError::from_proto(&e)), false, None)
-            }
+            Err(e) => (Response::Error(WireError::from_proto(&e)), false),
         };
         // A response too large to frame must not drop the connection
         // with the results already taken out of the table. A bulk
@@ -249,7 +240,7 @@ fn connection_loop(
         // single Result that cannot fit will never fit on a retry, so
         // its handle resolves as Failed — terminal, not a retry loop.
         let mut encoded = resp.encode();
-        let resp = if encoded.len() > MAX_FRAME_LEN {
+        if encoded.len() > MAX_FRAME_LEN {
             let message = match resp {
                 Response::Drained { completed, failed } => {
                     shared.frontend.repark(completed, failed);
@@ -275,16 +266,12 @@ fn connection_loop(
                      frame limit"
                 ),
             };
-            let err = Response::Error(WireError::new(
+            encoded = Response::Error(WireError::new(
                 ErrorCode::BadRequest,
                 message,
-            ));
-            encoded = err.encode();
-            err
-        } else {
-            resp
-        };
-        track_ownership(owned, asked, &resp);
+            ))
+            .encode();
+        }
         let write_ok = write_frame(&mut stream, &encoded).is_ok();
         if close {
             // This connection served Shutdown (or a post-shutdown
@@ -474,5 +461,93 @@ mod tests {
         ));
         s.shutdown().unwrap();
         server.join().unwrap();
+    }
+
+    fn small_svc() -> Service {
+        Service::start(ServiceConfig {
+            kind: EngineKind::WsDspFetch,
+            workers: 1,
+            ws_rows: 6,
+            ws_cols: 6,
+            verify: true,
+            shard_width: 1,
+        })
+    }
+
+    /// With `loopback_operator` off, a socket client is a plain
+    /// session: `Shutdown` answers `forbidden` until it presents the
+    /// operator token via `Auth`.
+    #[test]
+    fn operator_token_gates_shutdown_over_tcp() {
+        let qos = QosConfig {
+            loopback_operator: false,
+            operator_token: Some("hunter2".to_string()),
+            ..QosConfig::default()
+        };
+        let server = TcpServer::bind_with("127.0.0.1:0", small_svc(), qos)
+            .expect("bind");
+        let addr = server.local_addr().unwrap();
+        let handle = std::thread::spawn(move || server.run());
+        let mut s = TcpSession::connect(&addr.to_string()).unwrap();
+        match s.shutdown().unwrap_err() {
+            SessionError::Remote(e) => {
+                assert_eq!(e.code, ErrorCode::Forbidden)
+            }
+            other => panic!("expected forbidden, got {other}"),
+        }
+        match s.auth("wrong").unwrap_err() {
+            SessionError::Remote(e) => {
+                assert_eq!(e.code, ErrorCode::Forbidden)
+            }
+            other => panic!("expected forbidden, got {other}"),
+        }
+        s.auth("hunter2").unwrap();
+        s.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    /// A connection that goes quiet past the idle read deadline is
+    /// reaped (counted in `idle_reaped`) and the server keeps
+    /// serving everyone else.
+    #[test]
+    fn idle_connections_are_reaped() {
+        let qos = QosConfig {
+            idle_timeout: Some(Duration::from_millis(100)),
+            ..QosConfig::default()
+        };
+        let server = TcpServer::bind_with("127.0.0.1:0", small_svc(), qos)
+            .expect("bind");
+        let addr = server.local_addr().unwrap();
+        let handle = std::thread::spawn(move || server.run());
+        // Connects, then never sends a byte.
+        let idler = TcpSession::connect(&addr.to_string()).unwrap();
+        let mut s = TcpSession::connect(&addr.to_string()).unwrap();
+        let mut reaped = 0;
+        for _ in 0..600 {
+            reaped = s
+                .stats()
+                .unwrap()
+                .get("idle_reaped")
+                .unwrap()
+                .as_i64()
+                .unwrap();
+            if reaped >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(reaped, 1, "idle connection was not reaped");
+        // The reaped session is gone; the active one still serves.
+        let mut rng = XorShift::new(29);
+        let a = MatI8::random_bounded(&mut rng, 2, 6, 63);
+        let w = MatI8::random(&mut rng, 6, 3);
+        let id = s.submit(Job::Gemm { a, w }).unwrap();
+        assert!(matches!(
+            s.wait(id, Some(Duration::from_secs(60))).unwrap(),
+            JobState::Done(_)
+        ));
+        drop(idler);
+        s.shutdown().unwrap();
+        handle.join().unwrap();
     }
 }

@@ -1,0 +1,417 @@
+//! Overload-hardening properties, end to end (the `chaos/` harness
+//! plus the QoS layer it exercises):
+//!
+//! * full seeded fault campaigns — every archetype injected through
+//!   real sockets — come back with **zero** violations on several
+//!   engine kinds (the default kind's campaign runs in the harness's
+//!   own unit test);
+//! * a client that vanishes mid-model leaves no arena residency and
+//!   no parked handles behind, on **every** engine kind;
+//! * admission control is *exact*: with an inflight quota of N, the
+//!   N+1th submit answers a typed `overloaded` error (with a retry
+//!   hint) and the Nth does not — and retiring one job re-admits;
+//! * a flooding session cannot starve a compliant one: the compliant
+//!   session's jobs all complete (bit-identically) while the storm is
+//!   refused at its budget;
+//! * a force-shed session's handles resolve as typed `Shed`, never a
+//!   hang;
+//! * `Drain`/`Shutdown`/bad `Auth` from a plain session answer
+//!   `forbidden` and the server stays up.
+
+use dsp48_systolic::chaos::{campaign_qos, run_campaign, OPERATOR_TOKEN};
+use dsp48_systolic::coordinator::service::EngineKind;
+use dsp48_systolic::coordinator::{Job, JobState, Service, ServiceConfig};
+use dsp48_systolic::model::{LayerOp, Model};
+use dsp48_systolic::proto::{
+    ErrorCode, QosConfig, Session, SessionBudget, SessionError, TcpServer,
+    TcpSession,
+};
+use dsp48_systolic::util::json::Json;
+use dsp48_systolic::util::rng::XorShift;
+use dsp48_systolic::workload::gemm::golden_gemm;
+use dsp48_systolic::workload::MatI8;
+use std::net::SocketAddr;
+use std::time::Duration;
+
+fn is_snn(kind: EngineKind) -> bool {
+    matches!(kind, EngineKind::SnnFireFly | EngineKind::SnnEnhanced)
+}
+
+/// Boot a server of `kind` under `qos`; returns the address and the
+/// join handle (shut down with an operator session).
+fn boot(
+    kind: EngineKind,
+    qos: QosConfig,
+) -> (SocketAddr, std::thread::JoinHandle<Json>) {
+    let svc = Service::start(ServiceConfig {
+        kind,
+        ..ServiceConfig::default()
+    });
+    let server = TcpServer::bind_with("127.0.0.1:0", svc, qos).expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn connect(addr: SocketAddr) -> TcpSession {
+    TcpSession::connect(&addr.to_string()).expect("connect")
+}
+
+/// A small job valid on `kind`, plus the operands its output must
+/// bit-match `golden_gemm` over (SNN jobs verify against the dense
+/// golden GEMM too — binary spikes are just bounded activations).
+fn golden_job(kind: EngineKind, rng: &mut XorShift) -> (Job, MatI8, MatI8) {
+    if is_snn(kind) {
+        let spikes = MatI8::from_fn(4, 32, |_, _| i8::from(rng.chance(1, 3)));
+        let weights = MatI8::random_bounded(rng, 32, 16, 50);
+        (
+            Job::Snn {
+                spikes: spikes.clone(),
+                weights: weights.clone(),
+            },
+            spikes,
+            weights,
+        )
+    } else {
+        let a = MatI8::random_bounded(rng, 4, 13, 63);
+        let w = MatI8::random(rng, 13, 9);
+        (
+            Job::Gemm {
+                a: a.clone(),
+                w: w.clone(),
+            },
+            a,
+            w,
+        )
+    }
+}
+
+fn small_job(kind: EngineKind, rng: &mut XorShift) -> Job {
+    golden_job(kind, rng).0
+}
+
+/// A multi-layer model for `kind`, so mid-DAG abandonment leaves
+/// arena-resident intermediates to reclaim.
+fn small_model(kind: EngineKind, rng: &mut XorShift) -> (Model, MatI8) {
+    if is_snn(kind) {
+        let input = MatI8::from_fn(4, 32, |_, _| i8::from(rng.chance(1, 3)));
+        let w1 = MatI8::random_bounded(rng, 32, 32, 50);
+        let w2 = MatI8::random_bounded(rng, 32, 32, 50);
+        let mut model = Model::new(4, 32, true);
+        let t1 = model.layer(LayerOp::Snn { w: w1 }, &[0]);
+        let t2 = model.layer(LayerOp::Quant { num: 1, shift: 6 }, &[t1]);
+        model.layer(LayerOp::Snn { w: w2 }, &[t2]);
+        (model, input)
+    } else {
+        let input = MatI8::random_bounded(rng, 4, 8, 63);
+        let w1 = MatI8::random_bounded(rng, 8, 8, 50);
+        let w2 = MatI8::random_bounded(rng, 8, 6, 50);
+        let mut model = Model::new(4, 8, false);
+        let t1 = model.layer(LayerOp::Gemm { w: w1 }, &[0]);
+        let t2 = model.layer(
+            LayerOp::Requant {
+                num: 1,
+                shift: 10,
+                zero_point: 0,
+            },
+            &[t1],
+        );
+        model.layer(LayerOp::Gemm { w: w2 }, &[t2]);
+        (model, input)
+    }
+}
+
+fn stat(snap: &Json, key: &str) -> i64 {
+    snap.get(key).and_then(Json::as_i64).unwrap_or_default()
+}
+
+/// Poll stats through `obs` until `pred` holds (bounded), returning
+/// the last snapshot.
+fn await_stats(
+    obs: &mut TcpSession,
+    mut pred: impl FnMut(&Json) -> bool,
+) -> Json {
+    let mut snap = Json::Null;
+    for _ in 0..1500 {
+        snap = obs.stats().expect("stats");
+        if pred(&snap) {
+            return snap;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    snap
+}
+
+fn operator_shutdown(addr: SocketAddr) {
+    let mut op = connect(addr);
+    op.auth(OPERATOR_TOKEN).expect("operator auth");
+    op.shutdown().expect("shutdown");
+}
+
+/// Full campaigns — every fault archetype, real sockets — run clean
+/// on a WS, an OS, and an SNN engine. (WsDspFetch runs in the
+/// harness's unit test; together the three array families and both
+/// numeric paths are covered here.)
+#[test]
+fn full_campaigns_run_clean_across_array_families() {
+    for (kind, seed) in [
+        (EngineKind::WsTinyTpu, 2),
+        (EngineKind::OsEnhanced, 3),
+        (EngineKind::SnnFireFly, 5),
+    ] {
+        let report = run_campaign(kind, seed).expect("campaign runs");
+        assert_eq!(
+            report.violations(),
+            0,
+            "{} seed {seed}:\n{}",
+            kind.label(),
+            report.render_text()
+        );
+    }
+}
+
+/// The same seed replays the same campaign: run twice, identical
+/// injection sequence (determinism is what makes a red campaign
+/// debuggable).
+#[test]
+fn campaign_replay_is_deterministic() {
+    let a = run_campaign(EngineKind::WsLibano, 11).expect("first run");
+    let b = run_campaign(EngineKind::WsLibano, 11).expect("second run");
+    let faults =
+        |r: &dsp48_systolic::chaos::ChaosReport| -> Vec<&'static str> {
+            r.runs.iter().map(|run| run.fault).collect()
+        };
+    assert_eq!(faults(&a), faults(&b));
+    assert_eq!(a.violations(), 0, "{}", a.render_text());
+    assert_eq!(b.violations(), 0, "{}", b.render_text());
+}
+
+/// A client that submits a whole model DAG and vanishes leaves
+/// nothing behind — no parked handles, no arena-resident
+/// intermediates — on every engine kind.
+#[test]
+fn disconnect_mid_model_reclaims_arena_on_every_engine_kind() {
+    let mut rng = XorShift::new(41);
+    for kind in EngineKind::all() {
+        let (addr, server) = boot(kind, campaign_qos());
+        {
+            let mut ghost = connect(addr);
+            let (model, input) = small_model(kind, &mut rng);
+            ghost
+                .submit(Job::Model { model, input })
+                .expect("model submit");
+        } // ghost drops mid-model
+        let mut obs = connect(addr);
+        let snap = await_stats(&mut obs, |s| {
+            stat(s, "pending_handles") == 0
+                && stat(s, "intermediate_bytes_now") == 0
+                && stat(s, "open_sessions") == 1
+        });
+        assert_eq!(
+            stat(&snap, "pending_handles"),
+            0,
+            "{}: handles leaked: {snap}",
+            kind.label()
+        );
+        assert_eq!(
+            stat(&snap, "intermediate_bytes_now"),
+            0,
+            "{}: arena intermediates leaked: {snap}",
+            kind.label()
+        );
+        drop(obs);
+        operator_shutdown(addr);
+        server.join().expect("server exits");
+    }
+}
+
+/// Quota exactness: with `max_inflight = 3`, submits 1..=3 are
+/// admitted, the 4th answers `overloaded` with a retry hint, and
+/// retiring one handle re-admits the next submit.
+#[test]
+fn inflight_quota_is_exact_over_tcp() {
+    let qos = QosConfig {
+        budget: SessionBudget {
+            max_inflight: 3,
+            ..SessionBudget::default()
+        },
+        operator_token: Some(OPERATOR_TOKEN.to_string()),
+        loopback_operator: false,
+        ..QosConfig::default()
+    };
+    let (addr, server) = boot(EngineKind::WsDspFetch, qos);
+    let mut s = connect(addr);
+    let mut rng = XorShift::new(17);
+    let mut ids = Vec::new();
+    for i in 0..3 {
+        ids.push(
+            s.submit(small_job(EngineKind::WsDspFetch, &mut rng))
+                .unwrap_or_else(|e| panic!("submit {i} within quota: {e}")),
+        );
+    }
+    match s.submit(small_job(EngineKind::WsDspFetch, &mut rng)) {
+        Err(SessionError::Remote(e)) => {
+            assert_eq!(e.code, ErrorCode::Overloaded, "{e}");
+            assert!(
+                e.retry_after_ms.is_some(),
+                "overloaded error must carry a retry hint: {e}"
+            );
+        }
+        other => panic!("4th submit must be refused, got {other:?}"),
+    }
+    // Retire one — the freed slot re-admits.
+    assert!(matches!(
+        s.wait(ids[0], Some(Duration::from_secs(60))).expect("wait"),
+        JobState::Done(_)
+    ));
+    s.submit(small_job(EngineKind::WsDspFetch, &mut rng))
+        .expect("slot freed by retirement re-admits");
+    let _ = s.drain_mine(Some(Duration::from_secs(60)));
+    drop(s);
+    operator_shutdown(addr);
+    server.join().expect("server exits");
+}
+
+/// Starvation resistance: a storm session floods past its quota while
+/// a compliant session submits-and-waits one job at a time. Every
+/// compliant job completes bit-identically and promptly; the storm is
+/// the one refused (its `admission_rejected` counter climbs).
+#[test]
+fn flooding_session_cannot_starve_a_compliant_one() {
+    let qos = QosConfig {
+        budget: SessionBudget {
+            max_inflight: 4,
+            ..SessionBudget::default()
+        },
+        operator_token: Some(OPERATOR_TOKEN.to_string()),
+        loopback_operator: false,
+        ..QosConfig::default()
+    };
+    let kind = EngineKind::WsDspFetch;
+    let (addr, server) = boot(kind, qos);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let storm_stop = std::sync::Arc::clone(&stop);
+    let storm = std::thread::spawn(move || {
+        let mut s = connect(addr);
+        let mut rng = XorShift::new(97);
+        let mut refused = 0u64;
+        while !storm_stop.load(std::sync::atomic::Ordering::Relaxed) {
+            match s.submit(small_job(kind, &mut rng)) {
+                Ok(_) => {}
+                Err(SessionError::Remote(e))
+                    if e.code == ErrorCode::Overloaded =>
+                {
+                    refused += 1;
+                }
+                Err(e) => panic!("storm transport error: {e}"),
+            }
+        }
+        let _ = s.drain_mine(Some(Duration::from_secs(60)));
+        refused
+    });
+    let mut compliant = connect(addr);
+    let mut rng = XorShift::new(53);
+    for i in 0..5 {
+        let (job, a, w) = golden_job(kind, &mut rng);
+        let id = compliant
+            .submit(job)
+            .unwrap_or_else(|e| panic!("compliant submit {i} refused: {e}"));
+        let started = std::time::Instant::now();
+        match compliant.wait(id, Some(Duration::from_secs(60))) {
+            Ok(JobState::Done(r)) => {
+                assert_eq!(
+                    r.output,
+                    golden_gemm(&a, &w),
+                    "compliant job {i} lost bit-identity under load"
+                );
+                assert!(
+                    started.elapsed() < Duration::from_secs(30),
+                    "compliant job {i} starved: {:?}",
+                    started.elapsed()
+                );
+            }
+            other => panic!("compliant job {i} did not complete: {other:?}"),
+        }
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let refused = storm.join().expect("storm thread");
+    assert!(
+        refused > 0,
+        "the storm was never refused — quota did not engage"
+    );
+    drop(compliant);
+    operator_shutdown(addr);
+    server.join().expect("server exits");
+}
+
+/// A session force-shed by the high-water gate sees typed `Shed` on
+/// its handles — never a hang, never a silent `Pending` forever.
+#[test]
+fn shed_handles_resolve_as_typed_shed_not_a_hang() {
+    let qos = QosConfig {
+        max_outstanding: 2,
+        operator_token: Some(OPERATOR_TOKEN.to_string()),
+        loopback_operator: false,
+        ..QosConfig::default()
+    };
+    let kind = EngineKind::WsDspFetch;
+    let (addr, server) = boot(kind, qos);
+    let mut rng = XorShift::new(61);
+    let mut old = connect(addr);
+    let a = old.submit(small_job(kind, &mut rng)).expect("submit a");
+    let b = old.submit(small_job(kind, &mut rng)).expect("submit b");
+    // The newcomer pushes past high water: the gate sheds the oldest
+    // session (old) rather than refusing the newcomer.
+    let mut newer = connect(addr);
+    let (job, aa, ww) = golden_job(kind, &mut rng);
+    let id = newer.submit(job).expect("newcomer admitted by shedding");
+    assert!(matches!(
+        newer.wait(id, Some(Duration::from_secs(60))).expect("wait"),
+        JobState::Done(r) if r.output == golden_gemm(&aa, &ww)
+    ));
+    for handle in [a, b] {
+        let started = std::time::Instant::now();
+        match old.wait(handle, Some(Duration::from_secs(60))) {
+            Ok(JobState::Shed) => {}
+            other => panic!("shed handle {handle} answered {other:?}"),
+        }
+        assert!(
+            started.elapsed() < Duration::from_secs(10),
+            "shed handle {handle} hung for {:?}",
+            started.elapsed()
+        );
+    }
+    drop(old);
+    drop(newer);
+    operator_shutdown(addr);
+    server.join().expect("server exits");
+}
+
+/// Operator verbs are earned, not assumed: a plain session's `Drain`,
+/// `Shutdown`, and wrong-token `Auth` all answer `forbidden`, the
+/// server keeps serving, and the right token unlocks them.
+#[test]
+fn privileged_verbs_are_rejected_for_plain_sessions() {
+    let (addr, server) = boot(EngineKind::WsDspFetch, campaign_qos());
+    let mut s = connect(addr);
+    let forbidden = |r: Result<(), SessionError>, what: &str| match r {
+        Err(SessionError::Remote(e)) if e.code == ErrorCode::Forbidden => {}
+        other => panic!("{what}: expected forbidden, got {other:?}"),
+    };
+    forbidden(
+        s.drain(Some(Duration::from_millis(10))).map(|_| ()),
+        "drain",
+    );
+    forbidden(s.shutdown().map(|_| ()), "shutdown");
+    forbidden(s.auth("not-the-token"), "bad auth");
+    // Still serving: a compliant job completes on the same session.
+    let mut rng = XorShift::new(73);
+    let (job, a, w) = golden_job(EngineKind::WsDspFetch, &mut rng);
+    let id = s.submit(job).expect("submit after probes");
+    assert!(matches!(
+        s.wait(id, Some(Duration::from_secs(60))).expect("wait"),
+        JobState::Done(r) if r.output == golden_gemm(&a, &w)
+    ));
+    drop(s);
+    operator_shutdown(addr);
+    server.join().expect("server exits");
+}

@@ -55,10 +55,16 @@ json --out ...`) is checked alongside the bench metrics: its
 `violations` counter must be exactly 0, so an illegal control schedule
 fails the same gate a performance regression would.
 
+With --chaos-artifact, the fault-injection sweep report (`chaos
+--format json --out ...`) is checked the same way: `violations` must
+be exactly 0 and `campaigns` must be positive — a sweep that silently
+ran nothing would otherwise pass vacuously.
+
 Usage:
     python3 tools/check_bench_regression.py CURRENT.json BASELINE.json \
         [--max-regress 0.10] [--frozen-tol 1e-3] \
-        [--lint-artifact LINT_report.json]
+        [--lint-artifact LINT_report.json] \
+        [--chaos-artifact CHAOS_report.json]
 """
 
 import argparse
@@ -91,6 +97,14 @@ def main() -> int:
         help=(
             "control-legality lint report JSON (from `lint --format "
             "json --out ...`); its `violations` counter must be 0"
+        ),
+    )
+    ap.add_argument(
+        "--chaos-artifact",
+        help=(
+            "fault-injection sweep report JSON (from `chaos --format "
+            "json --out ...`); `violations` must be 0 and `campaigns` "
+            "must be > 0"
         ),
     )
     args = ap.parse_args()
@@ -172,6 +186,32 @@ def main() -> int:
                 f"lint artifact {args.lint_artifact} reports "
                 f"violations={violations} (control schedules must lint "
                 "clean)"
+            )
+
+    if args.chaos_artifact:
+        with open(args.chaos_artifact, encoding="utf-8") as f:
+            chaos = json.load(f)
+        violations = chaos.get("violations")
+        campaigns = chaos.get("campaigns")
+        status = (
+            "ok" if violations == 0 and isinstance(campaigns, int)
+            and campaigns > 0 else "VIOLATIONS"
+        )
+        print(
+            f"chaos violations: {violations} (must be 0) over "
+            f"{campaigns} campaigns (must be > 0) {status}"
+        )
+        if violations != 0:
+            failures.append(
+                f"chaos artifact {args.chaos_artifact} reports "
+                f"violations={violations} (every fault-campaign "
+                "invariant must hold)"
+            )
+        if not isinstance(campaigns, int) or campaigns <= 0:
+            failures.append(
+                f"chaos artifact {args.chaos_artifact} reports "
+                f"campaigns={campaigns} — the sweep ran nothing, so "
+                "its clean verdict is vacuous"
             )
 
     if failures:
