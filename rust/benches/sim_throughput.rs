@@ -342,7 +342,7 @@ fn model_serve() -> (f64, u64, u64, u64, u64) {
 ///   as budgeted-session submit latency minus the privileged-exempt
 ///   baseline through the same `Frontend`;
 /// * `shed_recovery_ms` — wall time from the submit that trips the
-///   high-water gate (shedding the oldest session) to that newcomer's
+///   high-water gate (shedding the largest unprivileged holder) to that newcomer's
 ///   own result arriving: how fast the server recovers usefulness for
 ///   a compliant client after shedding.
 fn qos_probes(smoke: bool) -> (f64, f64) {

@@ -256,7 +256,9 @@ fn inject(
         }
         FaultKind::SlowReader => slow_reader(addr, findings),
         FaultKind::SubmitStorm => submit_storm(addr, kind, rng, findings),
-        FaultKind::PrivilegeProbe => privilege_probe(addr, findings),
+        FaultKind::PrivilegeProbe => {
+            privilege_probe(addr, kind, rng, findings)
+        }
     }
 }
 
@@ -528,6 +530,8 @@ fn submit_storm(
 
 fn privilege_probe(
     addr: SocketAddr,
+    kind: EngineKind,
+    rng: &mut XorShift,
     findings: &mut Vec<String>,
 ) -> String {
     let mut s = match TcpSession::connect(&addr.to_string()) {
@@ -557,11 +561,34 @@ fn privilege_probe(
     );
     expect_forbidden("shutdown", s.shutdown().map(|_| ()), findings);
     expect_forbidden("bad-token auth", s.auth("letmein"), findings);
+    // Handle theft: ids are guessable, so a victim session submits a
+    // job and the probe session tries to redeem the handle. The
+    // redemption must be refused — stealing it would consume the
+    // victim's result and pin its quota forever.
+    match TcpSession::connect(&addr.to_string()) {
+        Ok(mut victim) => match victim.submit(small_job(kind, rng)) {
+            Ok(id) => {
+                expect_forbidden(
+                    "redeeming another session's handle",
+                    s.poll(id).map(|_| ()),
+                    findings,
+                );
+                let _ = victim.drain_mine(Some(Duration::from_secs(30)));
+            }
+            Err(e) => {
+                findings.push(format!("theft victim's submit refused: {e}"))
+            }
+        },
+        Err(e) => {
+            findings.push(format!("connect refused mid-campaign: {e}"))
+        }
+    }
     // And the server is still standing.
     if let Err(e) = s.stats() {
         findings.push(format!("server unreachable after probes: {e}"));
     }
-    "drain/shutdown/bad-auth all answered forbidden".to_string()
+    "drain/shutdown/bad-auth/handle-theft all answered forbidden"
+        .to_string()
 }
 
 /// Wait (bounded) for the table to settle, then check every leak

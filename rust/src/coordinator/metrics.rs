@@ -8,13 +8,25 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Cap on retained per-session latency samples: a sliding window, so
+/// a tenant's job count cannot grow server memory without bound.
+/// Percentiles are computed over the most recent window — exactly
+/// what a load-shedding decision or a starvation bound wants anyway.
+pub const SESSION_LATENCY_WINDOW: usize = 512;
+
 /// Per-session aggregation: the QoS layer records every completion,
 /// rejection, shed and deadline miss against the session that caused
 /// it, so one tenant's flood is visible *as that tenant's numbers*
 /// instead of smearing into the global averages.
 #[derive(Debug, Default)]
 pub struct SessionStats {
+    /// The most recent [`SESSION_LATENCY_WINDOW`] wall latencies (a
+    /// ring buffer once full — `lat_next` is the overwrite cursor).
     pub latencies_us: Vec<u64>,
+    lat_next: usize,
+    /// All-time completions redeemed by this session (not capped by
+    /// the latency window).
+    pub jobs_completed: u64,
     pub jobs_submitted: u64,
     pub admission_rejected: u64,
     pub shed: u64,
@@ -22,7 +34,18 @@ pub struct SessionStats {
 }
 
 impl SessionStats {
-    /// (p50, p95, p99) wall latency in microseconds.
+    fn record_latency(&mut self, us: u64) {
+        self.jobs_completed += 1;
+        if self.latencies_us.len() < SESSION_LATENCY_WINDOW {
+            self.latencies_us.push(us);
+        } else {
+            self.latencies_us[self.lat_next] = us;
+            self.lat_next = (self.lat_next + 1) % SESSION_LATENCY_WINDOW;
+        }
+    }
+
+    /// (p50, p95, p99) wall latency in microseconds over the retained
+    /// window.
     pub fn percentiles(&self) -> (u64, u64, u64) {
         let mut v = self.latencies_us.clone();
         if v.is_empty() {
@@ -90,7 +113,8 @@ pub struct Metrics {
     /// Submits refused by admission control (session quota or the
     /// global high-water gate) — nothing was enqueued.
     pub admission_rejected: AtomicU64,
-    /// Handles evicted to relieve overload (oldest-session-first).
+    /// Handles evicted to relieve overload (largest unprivileged
+    /// holder first).
     pub jobs_shed: AtomicU64,
     /// `wait`/`drain` calls whose per-session deadline cap expired
     /// before the handle resolved.
@@ -99,10 +123,11 @@ pub struct Metrics {
     /// half-open clients holding a server thread).
     pub idle_reaped: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
-    /// Per-session aggregation, keyed by session id. Entries are
-    /// removed when the session closes cleanly with nothing recorded,
-    /// but otherwise persist for the server's lifetime so `stats`
-    /// after a disconnect still shows what a tenant did.
+    /// Per-session aggregation, keyed by session id. The frontend
+    /// reaps an entry when its session closes
+    /// ([`Metrics::remove_session`]), so the map is bounded by *live*
+    /// connections — connection churn cannot grow server memory for
+    /// its lifetime.
     sessions: Mutex<BTreeMap<u64, SessionStats>>,
 }
 
@@ -121,15 +146,23 @@ impl Metrics {
             .push(wall.as_micros() as u64);
     }
 
-    /// Record a redeemed result's wall latency against its session.
+    /// Record a redeemed result's wall latency against its session
+    /// (sliding window: at most [`SESSION_LATENCY_WINDOW`] samples
+    /// retained per session).
     pub fn record_session_latency(&self, session: u64, wall: Duration) {
         self.sessions
             .lock()
             .unwrap()
             .entry(session)
             .or_default()
-            .latencies_us
-            .push(wall.as_micros() as u64);
+            .record_latency(wall.as_micros() as u64);
+    }
+
+    /// Drop a closed session's aggregation entry: called by the
+    /// frontend on session close, so per-session state lives exactly
+    /// as long as the session does.
+    pub fn remove_session(&self, session: u64) {
+        self.sessions.lock().unwrap().remove(&session);
     }
 
     /// Record accepted submissions against a session.
@@ -344,10 +377,7 @@ impl Metrics {
                 id.to_string(),
                 Json::object([
                     ("jobs_submitted", Json::uint(s.jobs_submitted)),
-                    (
-                        "jobs_completed",
-                        Json::uint(s.latencies_us.len() as u64),
-                    ),
+                    ("jobs_completed", Json::uint(s.jobs_completed)),
                     ("admission_rejected", Json::uint(s.admission_rejected)),
                     ("shed", Json::uint(s.shed)),
                     ("deadline_misses", Json::uint(s.deadline_misses)),
@@ -556,6 +586,47 @@ mod tests {
         let parsed =
             crate::util::json::Json::parse(&snap.to_string()).unwrap();
         assert_eq!(parsed, snap);
+    }
+
+    /// Per-session latency retention is a sliding window: sample
+    /// storage is capped at [`SESSION_LATENCY_WINDOW`] while the
+    /// completion counter keeps the all-time total, and reaping a
+    /// session removes its entry entirely.
+    #[test]
+    fn session_latency_window_is_bounded_and_reapable() {
+        let m = Metrics::new();
+        let n = SESSION_LATENCY_WINDOW + 100;
+        for i in 0..n {
+            m.record_session_latency(5, Duration::from_micros(i as u64));
+        }
+        {
+            let sessions = m.sessions.lock().unwrap();
+            let s = sessions.get(&5).unwrap();
+            assert_eq!(s.latencies_us.len(), SESSION_LATENCY_WINDOW);
+            assert_eq!(s.jobs_completed, n as u64);
+            // The window holds the most recent samples: the oldest
+            // 100 were overwritten.
+            assert!(s.latencies_us.iter().all(|&us| us >= 100));
+        }
+        assert_eq!(
+            m.snapshot_json()
+                .get("sessions")
+                .unwrap()
+                .get("5")
+                .unwrap()
+                .get("jobs_completed")
+                .unwrap()
+                .as_i64(),
+            Some(n as i64)
+        );
+        m.remove_session(5);
+        assert_eq!(m.session_p99_us(5), 0);
+        assert!(m
+            .snapshot_json()
+            .get("sessions")
+            .unwrap()
+            .get("5")
+            .is_none());
     }
 
     /// `intermediate_bytes_now` is a gauge: it rises with residency

@@ -68,7 +68,7 @@
 //! `--max-outstanding`, `--token`, `--no-loopback-operator`,
 //! `--idle-timeout-ms`): per-session budgets answer over-quota submits
 //! with a typed `overloaded` error (plus a retry hint), the global
-//! high-water gate sheds the oldest session first, and `Drain` /
+//! high-water gate sheds the largest unprivileged holder, and `Drain` /
 //! `Shutdown` become operator verbs (loopback peers and token-bearing
 //! sessions). `client --token` authenticates against such a server.
 //!

@@ -28,11 +28,13 @@
 //! a [`session::SessionBudget`] (inflight and queued-byte quotas,
 //! deadline caps) enforced at admission — over-quota submits answer a
 //! typed `overloaded` error with a retry-after hint, and the global
-//! high-water gate sheds the oldest session's work deterministically
-//! before refusing a newcomer. `Drain` and `Shutdown` are **operator
-//! verbs** (loopback peers by default, or any session presenting the
-//! operator token via `Auth`); plain sessions retire their own
-//! handles with `Poll`/`Wait`/`DrainMine`. A disconnecting client's
+//! high-water gate sheds the largest unprivileged holder's work
+//! deterministically before refusing a newcomer. `Drain` and
+//! `Shutdown` are **operator verbs** (loopback peers by default, or
+//! any session presenting the operator token via `Auth`); plain
+//! sessions retire their own handles with `Poll`/`Wait`/`DrainMine` —
+//! and *only* their own: redeeming a handle another session owns (or
+//! one already retired) answers a typed `forbidden` error. A disconnecting client's
 //! unredeemed results are forgotten and its mid-model work abandons
 //! its arena residency — dropped, not leaked.
 

@@ -10,13 +10,15 @@
 //!
 //! The dispatcher is also the QoS boundary. Every transport opens a
 //! [`SessionState`] per client; [`Frontend::handle`] tracks which
-//! handles each session owns, enforces its [`SessionBudget`] (inflight
-//! and queued-byte quotas, deadline caps), guards the privileged verbs
-//! (`Drain`/`Shutdown`), and — when the global high-water gate trips —
-//! sheds load deterministically oldest-session-first, answering the
-//! offending submit with a typed `overloaded` error carrying a
-//! retry-after hint instead of accepting work the coordinator cannot
-//! retire.
+//! handles each session owns (handle ids are guessable, so redemption
+//! is ownership-checked — a plain session polling someone else's
+//! handle answers `forbidden`), enforces its [`SessionBudget`]
+//! (inflight and queued-byte quotas, deadline caps), guards the
+//! privileged verbs (`Drain`/`Shutdown`), and — when the global
+//! high-water gate trips — sheds load deterministically
+//! (largest unprivileged holder first), answering the offending
+//! submit with a typed `overloaded` error carrying a retry-after hint
+//! instead of accepting work the coordinator cannot retire.
 
 use crate::coordinator::completion::{CompletionTable, JobHandle};
 use crate::coordinator::{
@@ -27,7 +29,7 @@ use crate::proto::message::{
     PollState, ProtoError, Request, Response, WireError,
 };
 use crate::util::json::Json;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -62,8 +64,9 @@ pub struct QosConfig {
     /// Global high-water gate: max unretired handles across all
     /// sessions (0 = unlimited) — submitted but not yet redeemed, so
     /// it bounds queued work *and* parked results. When a submit
-    /// would cross it, the oldest other session is shed first; if
-    /// none exists, the submitter is refused `overloaded`.
+    /// would cross it, the largest unprivileged other session is shed
+    /// first (privileged sessions are never shed); if no such victim
+    /// exists, the submitter is refused `overloaded`.
     pub max_outstanding: usize,
     /// Operator token: a session that presents it via `Auth` becomes
     /// privileged. `None` = token auth disabled.
@@ -100,6 +103,12 @@ impl Default for QosConfig {
 struct Ledger {
     /// Owned handle id → operand cost in bytes.
     jobs: HashMap<u64, u64>,
+    /// Handles evicted by admission control whose typed `Shed` marker
+    /// the owner has not observed yet: they no longer count against
+    /// quota, but they are still *owned* — redemption stays
+    /// permitted for exactly this session until the marker is
+    /// consumed (or the session disconnects).
+    shed: HashSet<u64>,
     /// Sum of `jobs` values (kept incrementally; the quota check is
     /// on the submit hot path).
     queued_bytes: u64,
@@ -141,6 +150,7 @@ impl SessionState {
         if let Some(cost) = g.jobs.remove(&id) {
             g.queued_bytes -= cost;
         }
+        g.shed.remove(&id);
     }
 
     fn release_many(&self, ids: &[u64]) {
@@ -149,15 +159,37 @@ impl SessionState {
             if let Some(cost) = g.jobs.remove(id) {
                 g.queued_bytes -= cost;
             }
+            g.shed.remove(id);
         }
     }
 
-    /// Take every owned handle (shed / disconnect): the ledger empties
-    /// and the ids come back for the completion-table side.
+    /// Whether this session may redeem handle `id`: unretired in the
+    /// ledger, or a shed marker it has not observed yet.
+    fn owns(&self, id: u64) -> bool {
+        let g = self.ledger.lock().unwrap();
+        g.jobs.contains_key(&id) || g.shed.contains(&id)
+    }
+
+    /// Take every owned handle (disconnect): the ledger — including
+    /// unobserved shed markers — empties and the ids come back for
+    /// the completion-table side.
     fn evict_all(&self) -> Vec<u64> {
         let mut g = self.ledger.lock().unwrap();
         g.queued_bytes = 0;
-        g.jobs.drain().map(|(id, _)| id).collect()
+        let mut ids: Vec<u64> = g.jobs.drain().map(|(id, _)| id).collect();
+        ids.extend(g.shed.drain());
+        ids
+    }
+
+    /// Shed every unretired handle: the quota frees immediately, but
+    /// the ids stay owned (moved to the shed set) so the victim can
+    /// still redeem its typed `Shed` markers. Returns the shed ids.
+    fn shed_all(&self) -> Vec<u64> {
+        let mut g = self.ledger.lock().unwrap();
+        g.queued_bytes = 0;
+        let ids: Vec<u64> = g.jobs.drain().map(|(id, _)| id).collect();
+        g.shed.extend(ids.iter().copied());
+        ids
     }
 
     /// Unretired handles this session owns.
@@ -385,15 +417,17 @@ fn state_of(resp: Response) -> Result<JobState, SessionError> {
 /// The frontend is also the admission controller: every request
 /// arrives attributed to a [`SessionState`], quotas are enforced
 /// before anything is enqueued, and the global high-water gate sheds
-/// the oldest other session's work before refusing a submitter.
+/// the largest unprivileged other session's work before refusing a
+/// submitter.
 pub struct Frontend {
     svc: Mutex<Option<Service>>,
     completion: Arc<CompletionTable>,
     metrics: Arc<Metrics>,
     qos: QosConfig,
     /// Registry of live sessions keyed by id. Ids are allocated in
-    /// arrival order, so the first entry is always the oldest live
-    /// session — the deterministic shed victim.
+    /// arrival order, so iteration order is session age — ties in
+    /// the shed-victim choice break toward the oldest session,
+    /// keeping selection deterministic.
     sessions: Mutex<BTreeMap<u64, Arc<SessionState>>>,
     next_session: AtomicU64,
 }
@@ -448,6 +482,9 @@ impl Frontend {
     /// session leaves the registry. Safe to call after shutdown.
     pub fn close_session(&self, sess: &Arc<SessionState>) {
         self.sessions.lock().unwrap().remove(&sess.id);
+        // Reap the session's metrics aggregation too: connection
+        // churn must not grow the server's memory for its lifetime.
+        self.metrics.remove_session(sess.id);
         let ids: Vec<JobId> =
             sess.evict_all().into_iter().map(JobId).collect();
         if ids.is_empty() {
@@ -476,7 +513,26 @@ impl Frontend {
     /// pieces), while a single undeliverable `Result` is passed in
     /// `failed` so its handle resolves terminally as Failed instead of
     /// looping the client through identical oversize retries.
-    pub fn repark(&self, completed: Vec<JobResult>, failed: Vec<u64>) {
+    ///
+    /// Re-parked state must stay redeemable by the session it was
+    /// taken from: its ledger entries were released when the response
+    /// was assembled, so ownership is restored here (at zero
+    /// queued-byte cost — the operands are long gone) before the
+    /// redemption ownership check would refuse the retry.
+    pub fn repark(
+        &self,
+        sess: &SessionState,
+        completed: Vec<JobResult>,
+        failed: Vec<u64>,
+    ) {
+        if !sess.privileged() {
+            let charges: Vec<(u64, u64)> = completed
+                .iter()
+                .map(|r| (r.id.0, 0))
+                .chain(failed.iter().map(|&id| (id, 0)))
+                .collect();
+            sess.charge(&charges);
+        }
         for r in completed {
             self.completion.complete(r);
         }
@@ -566,11 +622,17 @@ impl Frontend {
                 self.submit_jobs(jobs, true, sess)
             }
             Request::Poll { id } => {
+                if let Some(err) = self.ownership_error(sess, id) {
+                    return (Response::Error(err), false);
+                }
                 let state = self.completion.poll(JobHandle { id: JobId(id) });
                 self.settle(sess, id, &state);
                 (response_of(state), false)
             }
             Request::Wait { id, timeout_ms } => {
+                if let Some(err) = self.ownership_error(sess, id) {
+                    return (Response::Error(err), false);
+                }
                 let (timeout, capped) = self.capped_timeout(sess, timeout_ms);
                 let state = self
                     .completion
@@ -622,8 +684,14 @@ impl Frontend {
             Request::DrainMine { timeout_ms } => {
                 let (timeout, capped) = self.capped_timeout(sess, timeout_ms);
                 let mine: Vec<JobId> = {
+                    // Shed markers are owned terminal state too: a
+                    // drain-mine consumes them along with live work.
                     let g = sess.ledger.lock().unwrap();
-                    g.jobs.keys().map(|&id| JobId(id)).collect()
+                    g.jobs
+                        .keys()
+                        .chain(g.shed.iter())
+                        .map(|&id| JobId(id))
+                        .collect()
                 };
                 let drained = self.completion.drain_ids(&mine, timeout);
                 let retired =
@@ -665,6 +733,28 @@ impl Frontend {
                 }
                 self.shutdown()
             }
+        }
+    }
+
+    /// Redemption ownership check. Handle ids are globally sequential
+    /// and therefore guessable, so `Poll`/`Wait` only redeem handles
+    /// the requesting session owns (live in its ledger, or its own
+    /// unobserved shed markers). Without this, a hostile session
+    /// could steal another's parked result — and because settling
+    /// releases from the *thief's* ledger (a no-op), the victim's
+    /// quota would stay consumed forever. Privileged sessions are
+    /// exempt: the operator may inspect any handle.
+    fn ownership_error(
+        &self,
+        sess: &SessionState,
+        id: u64,
+    ) -> Option<WireError> {
+        if sess.privileged() || sess.owns(id) {
+            None
+        } else {
+            Some(WireError::forbidden(format!(
+                "handle {id} is not owned by this session"
+            )))
         }
     }
 
@@ -711,8 +801,16 @@ impl Frontend {
     }
 
     /// Enforce the global high-water gate while holding the service
-    /// lock: sheds oldest other sessions until the incoming jobs fit.
+    /// lock: sheds other sessions until the incoming jobs fit.
     /// Returns false when the gate still cannot admit them.
+    ///
+    /// Victim policy: the **largest unprivileged** holder of inflight
+    /// work (ties break toward the oldest session id, keeping
+    /// selection deterministic). Privileged sessions are never shed —
+    /// if only they hold work, the submitter is refused instead. And
+    /// preferring the largest holder means a hostile newcomer cannot
+    /// repeatedly evict a small compliant session while staying under
+    /// its own quota: the flooder *is* the largest holder.
     fn clear_backlog(
         &self,
         svc: &Service,
@@ -736,9 +834,19 @@ impl Frontend {
             }
             let victim = {
                 let g = self.sessions.lock().unwrap();
-                g.values()
-                    .find(|s| s.id != sess.id && s.inflight() > 0)
-                    .cloned()
+                let mut best: Option<&Arc<SessionState>> = None;
+                let mut best_inflight = 0usize;
+                for s in g.values() {
+                    if s.id == sess.id || s.privileged() {
+                        continue;
+                    }
+                    let inflight = s.inflight();
+                    if inflight > best_inflight {
+                        best_inflight = inflight;
+                        best = Some(s);
+                    }
+                }
+                best.cloned()
             };
             let Some(victim) = victim else { return false };
             self.shed_session(svc, &victim);
@@ -747,10 +855,12 @@ impl Frontend {
 
     /// Force-retire everything a session owns: mid-model jobs abandon
     /// their arena residency, parked results drop, and the victim's
-    /// next redemption of any of these handles answers `Shed`.
+    /// next redemption of any of these handles answers `Shed` (the
+    /// ids stay in the victim's shed set, so redemption remains
+    /// permitted for it alone until each marker is observed).
     fn shed_session(&self, svc: &Service, victim: &SessionState) {
         let ids: Vec<JobId> =
-            victim.evict_all().into_iter().map(JobId).collect();
+            victim.shed_all().into_iter().map(JobId).collect();
         if ids.is_empty() {
             return;
         }
@@ -761,7 +871,7 @@ impl Frontend {
 
     fn auth(&self, sess: &SessionState, token: &str) -> Response {
         match &self.qos.operator_token {
-            Some(expect) if expect == token => {
+            Some(expect) if token_eq(expect, token) => {
                 sess.privileged.store(true, Ordering::Relaxed);
                 Response::Ok
             }
@@ -811,16 +921,22 @@ impl Frontend {
     ) -> (Response, bool) {
         let costs: Vec<u64> = jobs.iter().map(Job::cost_bytes).collect();
         let total_cost: u64 = costs.iter().sum();
+        // Quota check, high-water gate, and the ledger charge all run
+        // under the service lock: submits serialize here, so two
+        // racing over-quota submits cannot both pass the check, and a
+        // concurrent submitter's `clear_backlog` cannot slip between
+        // `submit_batch` and the charge to undercount outstanding
+        // work and admit past `max_outstanding`.
+        let mut guard = self.svc.lock().unwrap();
+        let Some(svc) = guard.as_mut() else {
+            return (Response::Error(WireError::unavailable()), false);
+        };
         if let Some(err) =
             self.admission_error(sess, jobs.len(), total_cost)
         {
             self.metrics.record_admission_rejected(sess.id);
             return (Response::Error(err), false);
         }
-        let mut guard = self.svc.lock().unwrap();
-        let Some(svc) = guard.as_mut() else {
-            return (Response::Error(WireError::unavailable()), false);
-        };
         if !self.clear_backlog(svc, jobs.len(), sess) {
             self.metrics.record_admission_rejected(sess.id);
             return (
@@ -833,13 +949,13 @@ impl Frontend {
             );
         }
         let handles = svc.submit_batch(Batch::from(jobs));
-        drop(guard);
         let charges: Vec<(u64, u64)> = handles
             .iter()
             .zip(&costs)
             .map(|(h, &c)| (h.id.0, c))
             .collect();
         sess.charge(&charges);
+        drop(guard);
         self.metrics
             .record_session_submitted(sess.id, handles.len() as u64);
         let resp = if many {
@@ -875,6 +991,26 @@ impl Frontend {
             }
         }
     }
+}
+
+/// Constant-time token comparison. Every byte of the presented token
+/// is folded into one accumulator (indexing the expected token
+/// cyclically) together with the length difference, so the check
+/// neither short-circuits on the first mismatching byte nor varies
+/// with how long a prefix matched — response timing depends only on
+/// the length of the *presented* token, leaking nothing about the
+/// operator token's bytes.
+fn token_eq(expect: &str, got: &str) -> bool {
+    let e = expect.as_bytes();
+    let g = got.as_bytes();
+    if e.is_empty() {
+        return g.is_empty();
+    }
+    let mut diff = e.len() ^ g.len();
+    for (i, &b) in g.iter().enumerate() {
+        diff |= usize::from(b ^ e[i % e.len()]);
+    }
+    diff == 0
 }
 
 fn response_of(state: JobState) -> Response {
@@ -1234,11 +1370,12 @@ mod tests {
         ));
     }
 
-    /// Crossing the global high-water gate sheds the oldest session
-    /// deterministically, admits the newcomer, and the victim's
-    /// redemptions answer typed `Shed` instead of hanging.
+    /// Crossing the global high-water gate sheds the largest
+    /// unprivileged holder deterministically, admits the newcomer,
+    /// and the victim's redemptions answer typed `Shed` instead of
+    /// hanging.
     #[test]
-    fn high_water_gate_sheds_the_oldest_session_first() {
+    fn high_water_gate_sheds_the_largest_plain_session() {
         let qos = QosConfig {
             max_outstanding: 4,
             ..QosConfig::default()
@@ -1294,6 +1431,166 @@ mod tests {
         assert_eq!(snap.get("jobs_shed").unwrap().as_i64(), Some(4));
         let op = frontend.open_session(true);
         frontend.handle(Request::Shutdown, &op);
+    }
+
+    /// Privileged sessions are never shed: when only the operator
+    /// holds inflight work, a plain submitter that would cross the
+    /// high-water gate is refused `overloaded` instead — and the
+    /// operator's handles all still redeem.
+    #[test]
+    fn privileged_sessions_are_never_shed() {
+        let qos = QosConfig {
+            max_outstanding: 2,
+            ..QosConfig::default()
+        };
+        let frontend =
+            Frontend::with_qos(Service::start(small_cfg()), qos);
+        let op = frontend.open_session(true);
+        let plain = frontend.open_session(false);
+        let mut rng = XorShift::new(67);
+        let mut op_ids = Vec::new();
+        for _ in 0..2 {
+            match frontend.handle(gemm_req(&mut rng), &op).0 {
+                Response::Handle { id } => op_ids.push(id),
+                other => panic!("expected handle, got {}", other.tag()),
+            }
+        }
+        match frontend.handle(gemm_req(&mut rng), &plain).0 {
+            Response::Error(e) => assert_eq!(e.code, ErrorCode::Overloaded),
+            other => panic!("expected overloaded, got {}", other.tag()),
+        }
+        assert_eq!(
+            frontend.metrics().snapshot_json().get("jobs_shed").unwrap()
+                .as_i64(),
+            Some(0),
+            "operator work must never be shed"
+        );
+        for id in op_ids {
+            assert!(matches!(
+                frontend
+                    .handle(
+                        Request::Wait {
+                            id,
+                            timeout_ms: Some(60_000),
+                        },
+                        &op,
+                    )
+                    .0,
+                Response::Result(_)
+            ));
+        }
+        frontend.handle(Request::Shutdown, &op);
+    }
+
+    /// Handle ids are guessable, but redemption is ownership-checked:
+    /// another plain session's `Poll`/`Wait` on a handle it does not
+    /// own answers `forbidden`, steals nothing, and leaves the
+    /// owner's quota accounting intact.
+    #[test]
+    fn cross_session_redemption_is_forbidden() {
+        let frontend = Frontend::with_qos(
+            Service::start(small_cfg()),
+            QosConfig::default(),
+        );
+        let victim = frontend.open_session(false);
+        let thief = frontend.open_session(false);
+        let mut rng = XorShift::new(71);
+        let id = match frontend.handle(gemm_req(&mut rng), &victim).0 {
+            Response::Handle { id } => id,
+            other => panic!("expected handle, got {}", other.tag()),
+        };
+        for req in [
+            Request::Poll { id },
+            Request::Wait {
+                id,
+                timeout_ms: Some(60_000),
+            },
+        ] {
+            match frontend.handle(req, &thief).0 {
+                Response::Error(e) => {
+                    assert_eq!(e.code, ErrorCode::Forbidden)
+                }
+                other => {
+                    panic!("theft not refused: got {}", other.tag())
+                }
+            }
+        }
+        // Nothing was stolen or released: the owner still redeems its
+        // result and its ledger empties only then.
+        assert_eq!(victim.inflight(), 1);
+        assert!(matches!(
+            frontend
+                .handle(
+                    Request::Wait {
+                        id,
+                        timeout_ms: Some(60_000),
+                    },
+                    &victim,
+                )
+                .0,
+            Response::Result(_)
+        ));
+        assert_eq!(victim.inflight(), 0);
+        let op = frontend.open_session(true);
+        frontend.handle(Request::Shutdown, &op);
+    }
+
+    /// Closing a session reaps its metrics aggregation: connection
+    /// churn cannot grow the per-session map for the server's
+    /// lifetime.
+    #[test]
+    fn close_session_reaps_its_metrics_entry() {
+        let frontend = Frontend::with_qos(
+            Service::start(small_cfg()),
+            QosConfig::default(),
+        );
+        let sess = frontend.open_session(false);
+        let sid = sess.id().to_string();
+        let mut rng = XorShift::new(79);
+        let id = match frontend.handle(gemm_req(&mut rng), &sess).0 {
+            Response::Handle { id } => id,
+            other => panic!("expected handle, got {}", other.tag()),
+        };
+        assert!(matches!(
+            frontend
+                .handle(
+                    Request::Wait {
+                        id,
+                        timeout_ms: Some(60_000),
+                    },
+                    &sess,
+                )
+                .0,
+            Response::Result(_)
+        ));
+        let snap = frontend.metrics().snapshot_json();
+        assert!(snap.get("sessions").unwrap().get(&sid).is_some());
+        frontend.close_session(&sess);
+        let snap = frontend.metrics().snapshot_json();
+        assert!(
+            snap.get("sessions").unwrap().get(&sid).is_none(),
+            "closed session's metrics entry was not reaped"
+        );
+        let op = frontend.open_session(true);
+        frontend.handle(Request::Shutdown, &op);
+    }
+
+    /// The constant-time token comparison still decides equality
+    /// correctly across every length relation.
+    #[test]
+    fn token_eq_matches_plain_equality() {
+        for (a, b) in [
+            ("sesame", "sesame"),
+            ("sesame", "sesamf"),
+            ("sesame", "sesam"),
+            ("sesame", "sesamee"),
+            ("sesame", ""),
+            ("", ""),
+            ("", "x"),
+            ("a", "aaaaaaa"),
+        ] {
+            assert_eq!(token_eq(a, b), a == b, "token_eq({a:?}, {b:?})");
+        }
     }
 
     /// `DrainMine` retires only the caller's handles; another

@@ -243,7 +243,7 @@ fn connection_loop(
         if encoded.len() > MAX_FRAME_LEN {
             let message = match resp {
                 Response::Drained { completed, failed } => {
-                    shared.frontend.repark(completed, failed);
+                    shared.frontend.repark(sess, completed, failed);
                     format!(
                         "drained response would exceed the \
                          {MAX_FRAME_LEN}-byte frame limit; results were \
@@ -253,7 +253,7 @@ fn connection_loop(
                 }
                 Response::Result(r) => {
                     let id = r.id.0;
-                    shared.frontend.repark(vec![], vec![id]);
+                    shared.frontend.repark(sess, vec![], vec![id]);
                     format!(
                         "result for job {id} exceeds the \
                          {MAX_FRAME_LEN}-byte frame limit and cannot be \

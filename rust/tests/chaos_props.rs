@@ -359,8 +359,9 @@ fn shed_handles_resolve_as_typed_shed_not_a_hang() {
     let mut old = connect(addr);
     let a = old.submit(small_job(kind, &mut rng)).expect("submit a");
     let b = old.submit(small_job(kind, &mut rng)).expect("submit b");
-    // The newcomer pushes past high water: the gate sheds the oldest
-    // session (old) rather than refusing the newcomer.
+    // The newcomer pushes past high water: the gate sheds the
+    // largest unprivileged holder (old — the newcomer holds nothing
+    // yet) rather than refusing the newcomer.
     let mut newer = connect(addr);
     let (job, aa, ww) = golden_job(kind, &mut rng);
     let id = newer.submit(job).expect("newcomer admitted by shedding");
@@ -382,6 +383,43 @@ fn shed_handles_resolve_as_typed_shed_not_a_hang() {
     }
     drop(old);
     drop(newer);
+    operator_shutdown(addr);
+    server.join().expect("server exits");
+}
+
+/// Handle ids are sequential and guessable, but a handle is
+/// redeemable only by the session that submitted it: another
+/// session's `poll`/`wait` on it answers `forbidden`, the victim's
+/// result stays parked, and the victim still redeems it
+/// bit-identically afterwards.
+#[test]
+fn another_sessions_handle_cannot_be_stolen() {
+    let kind = EngineKind::WsDspFetch;
+    let (addr, server) = boot(kind, campaign_qos());
+    let mut victim = connect(addr);
+    let mut thief = connect(addr);
+    let mut rng = XorShift::new(83);
+    let (job, a, w) = golden_job(kind, &mut rng);
+    let id = victim.submit(job).expect("victim submit");
+    let forbidden = |r: Result<JobState, SessionError>, what: &str| match r {
+        Err(SessionError::Remote(e)) if e.code == ErrorCode::Forbidden => {}
+        other => panic!("{what}: expected forbidden, got {other:?}"),
+    };
+    forbidden(thief.poll(id), "theft via poll");
+    forbidden(
+        thief.wait(id, Some(Duration::from_secs(5))),
+        "theft via wait",
+    );
+    match victim.wait(id, Some(Duration::from_secs(60))) {
+        Ok(JobState::Done(r)) => assert_eq!(
+            r.output,
+            golden_gemm(&a, &w),
+            "victim's result corrupted by theft attempts"
+        ),
+        other => panic!("victim could not redeem its handle: {other:?}"),
+    }
+    drop(victim);
+    drop(thief);
     operator_shutdown(addr);
     server.join().expect("server exits");
 }
